@@ -1,0 +1,63 @@
+//! Mapping one BERT encoder layer onto crossbar tiles (paper Fig. 10 right).
+//!
+//! Run: `cargo run --release --example bert_mapping`
+//!
+//! Compares optimized pipeline packing against 1:1 mapping across square
+//! tile sizes, with and without the "maximum parallelism" replication
+//! (every FC weight matrix cloned once per token, N_rapa = S).
+
+use xbarmap::area::AreaModel;
+use xbarmap::frag;
+use xbarmap::geom::Tile;
+use xbarmap::nets::zoo;
+use xbarmap::pack::{self, Discipline};
+use xbarmap::perf::{self, rapa, Execution, TimingModel};
+use xbarmap::util::table::{sig3, Table};
+
+fn main() {
+    let seq = 64;
+    let net = zoo::bert_layer(seq);
+    println!(
+        "{} — {} weight matrices, {:.1}M weights, reuse {} per layer\n",
+        net.name,
+        net.n_layers(),
+        net.total_weights() as f64 / 1e6,
+        seq
+    );
+
+    let area = AreaModel::paper_default();
+    let plans: [(&str, Vec<usize>); 2] = [
+        ("plain", vec![1; net.n_layers()]),
+        ("max-parallel xS", rapa::plan_uniform(&net, seq)),
+    ];
+
+    for (name, plan) in &plans {
+        println!("== {name}");
+        let mut t = Table::new(&["tile", "blocks (=1:1 tiles)", "tiles opt", "area opt mm2", "area 1:1 mm2"]);
+        for k in 6..=13u32 {
+            let tile = Tile::new(1 << k, 1 << k);
+            let blocks = frag::fragment_network_replicated(&net, tile, plan);
+            let packing = pack::simple::pack(&blocks, tile, Discipline::Pipeline);
+            t.row(&[
+                tile.to_string(),
+                blocks.len().to_string(),
+                packing.n_bins.to_string(),
+                sig3(area.total_area_mm2(packing.n_bins, tile)),
+                sig3(area.total_area_mm2(blocks.len(), tile)),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+
+    // throughput effect of the replication (Eq. 4)
+    let timing = TimingModel::default();
+    let t_plain = perf::latency(&net, &plans[0].1, &timing, Execution::Pipelined);
+    let t_par = perf::latency(&net, &plans[1].1, &timing, Execution::Pipelined);
+    println!(
+        "pipeline beat: plain {:.1} ns vs max-parallel {:.1} ns ({}x faster at {}x the weights)",
+        t_plain * 1e9,
+        t_par * 1e9,
+        sig3(t_plain / t_par),
+        sig3(rapa::weight_inflation(&net, &plans[1].1)),
+    );
+}

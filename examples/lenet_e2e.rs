@@ -1,0 +1,117 @@
+//! End-to-end driver: the full three-layer stack on a real small workload.
+//!
+//! Run: `make artifacts && cargo run --release --example lenet_e2e`
+//!
+//! Build time (Python, once): a 784-256-128-10 digits classifier is trained
+//! in fp32 and its *crossbar* inference path — every matmul executed as
+//! DAC -> NVM-tile analog MAC -> ADC on a 256x256 tile grid via the Pallas
+//! kernel — is AOT-lowered to HLO text.
+//!
+//! Request time (this binary, Rust only):
+//! 1. the coordinator maps the classifier onto physical tiles with the
+//!    paper's packing machinery and prices the deployment (tiles, mm²,
+//!    modeled latency);
+//! 2. verifies the runtime against the golden test vector produced at
+//!    build time (PJRT round-trip fidelity);
+//! 3. serves a stream of synthetic digit requests through the quantized
+//!    crossbar executable with dynamic batching, reporting throughput,
+//!    batch latency percentiles and classification accuracy.
+
+use anyhow::{anyhow, Result};
+use xbarmap::coordinator::{digits, Coordinator, CoordinatorConfig};
+use xbarmap::runtime::Tensor;
+use xbarmap::util::json::{self, Json};
+use xbarmap::util::prng::Rng;
+
+fn read_testvec(dir: &std::path::Path) -> Result<(Vec<f32>, Vec<usize>, Vec<f32>)> {
+    let tv = json::parse(&std::fs::read_to_string(dir.join("testvec.json"))?)
+        .map_err(|e| anyhow!("parse testvec.json: {e}"))?;
+    let arr = |k: &str| -> Result<Vec<f32>> {
+        Ok(tv
+            .get(k)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("testvec missing {k}"))?
+            .iter()
+            .filter_map(Json::as_f64)
+            .map(|v| v as f32)
+            .collect())
+    };
+    let labels: Vec<usize> = tv
+        .get("labels")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("testvec missing labels"))?
+        .iter()
+        .filter_map(Json::as_usize)
+        .collect();
+    Ok((arr("input")?, labels, arr("logits_crossbar")?))
+}
+
+fn main() -> Result<()> {
+    // ---- 1. deployment ----
+    let coordinator = Coordinator::new(&CoordinatorConfig::default())?;
+    println!("== deployment");
+    println!("  tile array        : {}", coordinator.tile);
+    println!("  physical tiles    : {}", coordinator.mapping.n_tiles());
+    println!("  packing efficiency: {:.3}", coordinator.mapping.packing_efficiency());
+    println!("  total tile area   : {:.2} mm²", coordinator.total_area_mm2);
+    println!("  modeled latency   : {:.0} ns (Eq. 3)", coordinator.modeled_latency_s * 1e9);
+
+    // ---- 2. golden-vector verification (build-time jax == request-time rust) ----
+    let (input, labels, want_logits) = read_testvec(&coordinator.artifacts)?;
+    let n = labels.len();
+    let got = coordinator.infer(&input, n)?;
+    let max_diff = got
+        .data
+        .iter()
+        .zip(&want_logits)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!("\n== golden test vector ({n} samples)");
+    println!("  max |rust - jax| logit diff: {max_diff:.2e}");
+    if max_diff > 1e-3 {
+        return Err(anyhow!("PJRT round trip diverged from build-time jax results"));
+    }
+    let golden = Tensor::new(vec![n, 10], want_logits)?;
+    let acc_golden = golden
+        .argmax_rows()
+        .iter()
+        .zip(&labels)
+        .filter(|(p, l)| p == l)
+        .count() as f64
+        / n as f64;
+    println!("  golden-batch accuracy: {acc_golden:.3}");
+
+    // ---- 3. serve a synthetic request stream ----
+    let n_requests = 4096;
+    println!("\n== serving {n_requests} synthetic digit requests (crossbar model)");
+    let (tx, rx) = std::sync::mpsc::channel();
+    let producer = std::thread::spawn(move || {
+        let mut rng = Rng::new(2024);
+        for s in digits::synth_digits(&mut rng, n_requests, 0.35) {
+            if tx.send(s).is_err() {
+                break;
+            }
+        }
+    });
+    let stats = coordinator.serve(rx)?;
+    producer.join().map_err(|_| anyhow!("producer panicked"))?;
+
+    println!("  requests   : {}", stats.requests);
+    println!("  batches    : {}", stats.batches);
+    println!("  wall time  : {:.3} s", stats.wall_s);
+    println!("  throughput : {:.0} req/s", stats.throughput_per_s);
+    println!("  batch p50  : {:.3} ms", stats.batch_p50_s * 1e3);
+    println!("  batch p95  : {:.3} ms", stats.batch_p95_s * 1e3);
+    println!("  accuracy   : {:.4}", stats.accuracy);
+    if let Some(build_acc) = coordinator.build_time_accuracy() {
+        println!("  build-time crossbar accuracy (meta.json): {build_acc:.4}");
+        if (stats.accuracy - build_acc).abs() > 0.05 {
+            return Err(anyhow!(
+                "served accuracy {:.3} deviates from build-time accuracy {build_acc:.3}",
+                stats.accuracy
+            ));
+        }
+    }
+    println!("\nE2E OK: jax/pallas-compiled crossbar model served from rust at full fidelity");
+    Ok(())
+}

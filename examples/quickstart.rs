@@ -1,0 +1,65 @@
+//! Quickstart: pack the paper's 13-item demo list into T(512,512) tiles
+//! with all three engines and both disciplines, and price the results.
+//!
+//! Run: `cargo run --release --example quickstart`
+//!
+//! Reproduces the paper's §2.2 headline: binary linear optimization packs
+//! the list into 2 tiles densely and 4 tiles pipeline-enabled (Tables 3/5,
+//! Figs. 5/6), while the greedy engines land within a bin or two.
+
+use xbarmap::area::AreaModel;
+use xbarmap::ilp;
+use xbarmap::pack::{self, placement, Discipline};
+use xbarmap::report::paper_demo_items;
+use xbarmap::util::table::{sig3, Table};
+
+fn main() {
+    let tile = xbarmap::geom::Tile::new(512, 512);
+    let items = paper_demo_items();
+    let area = AreaModel::paper_default();
+
+    println!("demo list: {} blocks, {} weights total\n", items.len(), items
+        .iter()
+        .map(|b| b.weights())
+        .sum::<usize>());
+
+    let mut t = Table::new(&["discipline", "engine", "tiles", "packing eff", "total area mm2"]);
+    for discipline in [Discipline::Dense, Discipline::Pipeline] {
+        let engines: Vec<(&str, pack::Packing)> = vec![
+            ("simple (next-fit)", pack::simple::pack(&items, tile, discipline)),
+            ("ffd", pack::ffd::pack(&items, tile, discipline)),
+            (
+                "lps (branch&bound)",
+                ilp::solve_packing(&items, tile, discipline, ilp::Budget::default()).packing,
+            ),
+        ];
+        for (name, packing) in engines {
+            placement::validate(&packing).expect("engine produced a valid packing");
+            t.row(&[
+                discipline.to_string(),
+                name.into(),
+                packing.n_bins.to_string(),
+                sig3(packing.packing_efficiency()),
+                sig3(area.total_area_mm2(packing.n_bins, tile)),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // Show the optimal pipeline placement as a staircase diagram.
+    let r = ilp::solve_packing(&items, tile, Discipline::Pipeline, ilp::Budget::default());
+    println!(
+        "pipeline optimum ({} bins, optimal={}, {} search nodes):",
+        r.packing.n_bins, r.optimal, r.nodes
+    );
+    for (bin, placements) in r.packing.bins().iter().enumerate() {
+        let desc: Vec<String> = placements
+            .iter()
+            .map(|p| {
+                let b = r.packing.blocks[p.block];
+                format!("item{}({}x{})@({},{})", p.block + 1, b.rows, b.cols, p.x, p.y)
+            })
+            .collect();
+        println!("  bin {}: {}", bin + 1, desc.join("  "));
+    }
+}

@@ -1,0 +1,174 @@
+"""AOT exporter: train the model, lower crossbar inference to HLO text.
+
+This is the only entry point that writes ``artifacts/``.  Python never runs
+after this; the Rust coordinator loads the HLO text through the PJRT C API.
+
+Interchange format is **HLO text** — NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts
+---------
+model.hlo.txt       crossbar-quantized MLP forward, weights baked in as
+                    constants (the NVM array is the weight store),
+                    signature f32[B,784] -> (f32[B,10],)
+model_fp32.hlo.txt  ideal float forward, same signature (accuracy oracle)
+tile_mvm.hlo.txt    one physical-tile quantized MVM with *parameter*
+                    weights, f32[B,n_row], f32[n_row,n_col] -> (f32[B,n_col],)
+                    — the per-tile op the L3 scheduler drives directly
+meta.json           shapes, batch size, tile config, train/eval metrics
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import TileConfig, crossbar_matmul
+from .kernels.crossbar import _tile_kernel
+
+# 128 amortizes PJRT dispatch + quantizer overhead 2.2x better than 32
+# (EXPERIMENTS.md §Perf #4) and fills the 128-lane MXU batch dimension.
+BATCH = 128
+SEED = 7
+TRAIN_STEPS = 250
+EVAL_N = 2048
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True).
+
+    Printed with ``print_large_constants=True``: the default printer elides
+    big literals as ``constant({...})``, which the downstream parser happily
+    accepts as zeros — silently serving an untrained model. The weights ARE
+    the artifact (the NVM array is the weight store), so they must survive
+    the text round trip.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # xla_extension 0.5.1's parser predates source_end_line/column metadata
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def lower_model(params, cfg: M.ModelConfig, batch: int) -> str:
+    """Crossbar forward with weights closed over (constants in HLO)."""
+
+    def fwd(x):
+        return (M.forward_crossbar(params, x, cfg),)
+
+    spec = jax.ShapeDtypeStruct((batch, cfg.layer_sizes[0]), jnp.float32)
+    return to_hlo_text(jax.jit(fwd).lower(spec))
+
+
+def lower_model_fp32(params, cfg: M.ModelConfig, batch: int) -> str:
+    def fwd(x):
+        return (M.forward_fp32(params, x),)
+
+    spec = jax.ShapeDtypeStruct((batch, cfg.layer_sizes[0]), jnp.float32)
+    return to_hlo_text(jax.jit(fwd).lower(spec))
+
+
+def lower_tile_mvm(tile: TileConfig, batch: int) -> str:
+    """Single-tile quantized MVM with weights as a runtime parameter."""
+
+    def tile_op(x, w):
+        return (crossbar_matmul(x, w, tile),)
+
+    xs = jax.ShapeDtypeStruct((batch, tile.n_row), jnp.float32)
+    ws = jax.ShapeDtypeStruct((tile.n_row, tile.n_col), jnp.float32)
+    return to_hlo_text(jax.jit(tile_op).lower(xs, ws))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--batch", type=int, default=BATCH)
+    ap.add_argument("--steps", type=int, default=TRAIN_STEPS)
+    ap.add_argument("--tile-rows", type=int, default=256)
+    ap.add_argument("--tile-cols", type=int, default=256)
+    args = ap.parse_args()
+    out = os.path.abspath(args.out_dir)
+    os.makedirs(out, exist_ok=True)
+
+    tile = TileConfig(n_row=args.tile_rows, n_col=args.tile_cols)
+    cfg = M.ModelConfig(tile=tile)
+
+    print(f"[aot] training fp32 MLP {cfg.layer_sizes} for {args.steps} steps ...")
+    params, losses = M.train(jax.random.PRNGKey(SEED), steps=args.steps, cfg=cfg)
+
+    x_eval, y_eval = M.synth_digits(jax.random.PRNGKey(1234), EVAL_N)
+    acc_fp32 = M.accuracy(M.forward_fp32(params, x_eval), y_eval)
+    acc_xbar = M.accuracy(M.forward_crossbar(params, x_eval[:256], cfg), y_eval[:256])
+    print(f"[aot] eval: fp32 acc={acc_fp32:.4f}  crossbar acc={acc_xbar:.4f}")
+
+    artifacts = {
+        "model.hlo.txt": lower_model(params, cfg, args.batch),
+        "model_fp32.hlo.txt": lower_model_fp32(params, cfg, args.batch),
+        "tile_mvm.hlo.txt": lower_tile_mvm(tile, args.batch),
+    }
+    for name, text in artifacts.items():
+        path = os.path.join(out, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] wrote {path} ({len(text)} chars)")
+
+    # Golden test vector: the Rust runtime must reproduce these logits from
+    # this input batch (integration_runtime.rs asserts allclose).
+    x_vec, y_vec = M.synth_digits(jax.random.PRNGKey(4242), args.batch)
+    logits_xbar = M.forward_crossbar(params, x_vec, cfg)
+    logits_fp32 = M.forward_fp32(params, x_vec)
+    testvec = {
+        "input": [float(v) for v in x_vec.reshape(-1)],
+        "labels": [int(v) for v in y_vec],
+        "logits_crossbar": [float(v) for v in logits_xbar.reshape(-1)],
+        "logits_fp32": [float(v) for v in logits_fp32.reshape(-1)],
+        "shape_input": list(x_vec.shape),
+        "shape_logits": list(logits_xbar.shape),
+    }
+    with open(os.path.join(out, "testvec.json"), "w") as f:
+        json.dump(testvec, f)
+    print(f"[aot] wrote {os.path.join(out, 'testvec.json')}")
+
+    meta = {
+        "batch": args.batch,
+        "layer_sizes": list(cfg.layer_sizes),
+        "layer_shapes_rows_cols": [list(s) for s in M.layer_shapes(cfg)],
+        "tile": {
+            "n_row": tile.n_row,
+            "n_col": tile.n_col,
+            "dac_bits": tile.dac_bits,
+            "adc_bits": tile.adc_bits,
+            "g_bits": tile.g_bits,
+            "x_max": tile.x_max,
+            "adc_alpha": tile.adc_alpha,
+        },
+        "train": {
+            "steps": args.steps,
+            "seed": SEED,
+            "loss_first": losses[0],
+            "loss_last": losses[-1],
+            "acc_fp32": acc_fp32,
+            "acc_crossbar": acc_xbar,
+        },
+        "artifacts": sorted(artifacts),
+    }
+    with open(os.path.join(out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"[aot] wrote {os.path.join(out, 'meta.json')}")
+
+
+if __name__ == "__main__":
+    main()

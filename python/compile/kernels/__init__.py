@@ -1,0 +1,3 @@
+"""Pallas crossbar-tile kernels (L1) and their pure-jnp oracles."""
+from .crossbar import TileConfig, crossbar_matmul, quantize_uniform  # noqa: F401
+from .ref import crossbar_matmul_ref  # noqa: F401

@@ -1,0 +1,182 @@
+"""L1 — Pallas kernel: analog NVM cross-bar tile matrix multiply.
+
+The paper maps an ANN weight matrix onto a grid of fixed-capacity physical
+cross-bar tiles T(n_row, n_col) (Haensch 2024, Fig. 1).  This kernel is the
+numerical model of that hardware: the weight matrix W[K, N] is fragmented
+onto a grid of ceil(K/n_row) x ceil(N/n_col) tiles — **the Pallas BlockSpec
+grid is exactly the paper's fragmentation grid** — and each grid step
+executes one tile's analog matrix-vector product:
+
+  1. DAC:  the activation slice entering the tile's word lines is quantized
+           to ``dac_bits`` uniform levels on a static range [-x_max, x_max];
+  2. NVM:  the tile's weight block is quantized to ``g_bits`` conductance
+           levels on the per-tile range [-max|w|, max|w|] (differential
+           conductance-pair encoding);
+  3. analog MAC along the tile's n_row word lines (Ohm + Kirchhoff);
+  4. ADC:  the tile's bit-line partial sums are quantized to ``adc_bits``
+           levels on the range +/- adc_alpha * x_max * w_max * n_row;
+  5. digital accumulation of partial sums across the K-dimension tile row
+     fragments (the inter-tile reduction the chip performs digitally).
+
+Bits <= 0 disable the corresponding converter ("ideal" mode), in which case
+the kernel computes a plain blocked matmul and must agree with jnp.matmul to
+float tolerance.
+
+``interpret=True`` always: the CPU PJRT client cannot execute Mosaic
+custom-calls; correctness is established against ``ref.py`` and the AOT
+artifact embeds the interpreted (plain-HLO) lowering.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@dataclass(frozen=True)
+class TileConfig:
+    """Physical tile configuration for the crossbar kernel.
+
+    Mirrors the paper's tile array T(n_row, n_col) plus converter precision.
+    ``dac_bits``/``adc_bits``/``g_bits`` <= 0 mean ideal (no quantization).
+    ``x_max`` is the static DAC full-scale (activation calibration range).
+    ``adc_alpha`` scales the ADC full-scale relative to the worst-case
+    analog column current x_max * w_max * n_row (1.0 = never clips).
+    """
+
+    n_row: int = 256
+    n_col: int = 256
+    dac_bits: int = 8
+    adc_bits: int = 10
+    g_bits: int = 8
+    x_max: float = 4.0
+    adc_alpha: float = 0.125
+
+    def ideal(self) -> "TileConfig":
+        """Same tile geometry with all converters disabled."""
+        return replace(self, dac_bits=0, adc_bits=0, g_bits=0)
+
+    def grid_for(self, k: int, n: int) -> tuple[int, int]:
+        """Number of (row, col) tile fragments covering a K x N matrix."""
+        return (pl.cdiv(k, self.n_row), pl.cdiv(n, self.n_col))
+
+
+def quantize_uniform(v: jax.Array, bits: int, vmax: jax.Array) -> jax.Array:
+    """Symmetric uniform quantizer with 2^(bits-1)-1 positive levels.
+
+    Static ``bits`` (python int); dynamic range ``vmax`` (traced scalar).
+    bits <= 0 passes through. A zero range maps everything to zero.
+    """
+    if bits <= 0:
+        return v
+    levels = float(2 ** (bits - 1) - 1)
+    safe = jnp.where(vmax > 0.0, vmax, 1.0)
+    step = safe / levels
+    q = jnp.round(jnp.clip(v, -vmax, vmax) / step) * step
+    return jnp.where(vmax > 0.0, q, jnp.zeros_like(v))
+
+
+def _tile_kernel(x_ref, w_ref, o_ref, *, cfg: TileConfig, k_tiles: int):
+    """One grid step == one physical tile's analog MVM (see module doc)."""
+    kt = pl.program_id(1)  # K-fragment index (fastest-varying)
+
+    x_blk = x_ref[...].astype(jnp.float32)
+    w_blk = w_ref[...].astype(jnp.float32)
+
+    # (2) conductance quantization on the per-tile range.
+    w_max = jnp.max(jnp.abs(w_blk))
+    w_q = quantize_uniform(w_blk, cfg.g_bits, w_max)
+
+    # (1) DAC on the static activation range.
+    x_q = quantize_uniform(x_blk, cfg.dac_bits, jnp.float32(cfg.x_max))
+
+    # (3) analog MAC across the tile's word lines.
+    acc = jnp.dot(x_q, w_q, preferred_element_type=jnp.float32)
+
+    # (4) ADC on the bit lines: static full-scale per tile.
+    adc_fs = jnp.float32(cfg.adc_alpha * cfg.x_max) * w_max * jnp.float32(cfg.n_row)
+    acc = quantize_uniform(acc, cfg.adc_bits, adc_fs)
+
+    # (5) digital accumulation across K-fragments.
+    @pl.when(kt == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(kt > 0)
+    def _accum():
+        o_ref[...] = o_ref[...] + acc
+
+
+def _pad_to(a: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = a.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def crossbar_matmul(x: jax.Array, w: jax.Array, cfg: TileConfig = TileConfig()) -> jax.Array:
+    """Analog-crossbar matrix product ``x @ w`` on a grid of physical tiles.
+
+    x: [B, K] activations, w: [K, N] weights. Returns [B, N] float32.
+
+    K and N are padded up to tile multiples before the pallas_call (zero
+    weight rows/columns quantize to zero and contribute nothing); the
+    result is sliced back to [B, N].
+    """
+    if x.ndim != 2 or w.ndim != 2 or x.shape[1] != w.shape[0]:
+        raise ValueError(f"bad shapes x={x.shape} w={w.shape}")
+    b, k = x.shape
+    n = w.shape[1]
+    xp = _pad_to(x.astype(jnp.float32), 1, cfg.n_row)
+    wp = _pad_to(_pad_to(w.astype(jnp.float32), 0, cfg.n_row), 1, cfg.n_col)
+    k_tiles = xp.shape[1] // cfg.n_row
+    n_tiles = wp.shape[1] // cfg.n_col
+
+    out = pl.pallas_call(
+        functools.partial(_tile_kernel, cfg=cfg, k_tiles=k_tiles),
+        grid=(n_tiles, k_tiles),  # kt fastest => sequential digital reduce
+        in_specs=[
+            pl.BlockSpec((b, cfg.n_row), lambda nt, kt: (0, kt)),
+            pl.BlockSpec((cfg.n_row, cfg.n_col), lambda nt, kt: (kt, nt)),
+        ],
+        out_specs=pl.BlockSpec((b, cfg.n_col), lambda nt, kt: (0, nt)),
+        out_shape=jax.ShapeDtypeStruct((b, wp.shape[1]), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp)
+    return out[:, :n]
+
+
+def vmem_footprint_bytes(cfg: TileConfig, batch: int) -> int:
+    """Estimated VMEM residency of one grid step (structure metric for
+    EXPERIMENTS.md §Perf; interpret-mode wallclock is not a TPU proxy).
+
+    x block + w block + out block, float32, double-buffered inputs.
+    """
+    f32 = 4
+    x_blk = batch * cfg.n_row * f32
+    w_blk = cfg.n_row * cfg.n_col * f32
+    o_blk = batch * cfg.n_col * f32
+    return 2 * (x_blk + w_blk) + o_blk
+
+
+def mxu_utilization_estimate(cfg: TileConfig, batch: int, mxu: int = 128) -> float:
+    """Fraction of MXU lanes kept busy by one tile MVM (structure metric).
+
+    A (batch x n_row) @ (n_row x n_col) block maps to ceil ratios of the
+    mxu x mxu systolic array; utilization is the fill of the last partial
+    tiles — 1.0 when batch, n_row, n_col are all multiples of ``mxu``.
+    """
+    def fill(d: int) -> float:
+        import math
+
+        return d / (math.ceil(d / mxu) * mxu)
+
+    return fill(batch) * fill(cfg.n_row) * fill(cfg.n_col)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the crossbar kernel (no pallas).
+
+Implements byte-for-byte the same math as ``crossbar.crossbar_matmul``:
+pad to tile multiples, per-tile conductance quantization, static-range DAC,
+per-tile ADC on the partial sums, digital accumulation across K fragments.
+pytest asserts exact agreement (same ops, same order, same dtypes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .crossbar import TileConfig, quantize_uniform, _pad_to
+
+
+def crossbar_matmul_ref(x: jax.Array, w: jax.Array, cfg: TileConfig = TileConfig()) -> jax.Array:
+    """Reference analog-crossbar matmul: x[B,K] @ w[K,N] -> [B,N] f32."""
+    if x.ndim != 2 or w.ndim != 2 or x.shape[1] != w.shape[0]:
+        raise ValueError(f"bad shapes x={x.shape} w={w.shape}")
+    b, k = x.shape
+    n = w.shape[1]
+    xp = _pad_to(x.astype(jnp.float32), 1, cfg.n_row)
+    wp = _pad_to(_pad_to(w.astype(jnp.float32), 0, cfg.n_row), 1, cfg.n_col)
+    k_tiles = xp.shape[1] // cfg.n_row
+    n_tiles = wp.shape[1] // cfg.n_col
+
+    x_q = quantize_uniform(xp, cfg.dac_bits, jnp.float32(cfg.x_max))
+
+    out = jnp.zeros((b, wp.shape[1]), jnp.float32)
+    for kt in range(k_tiles):
+        xs = x_q[:, kt * cfg.n_row : (kt + 1) * cfg.n_row]
+        for nt in range(n_tiles):
+            blk = wp[kt * cfg.n_row : (kt + 1) * cfg.n_row, nt * cfg.n_col : (nt + 1) * cfg.n_col]
+            w_max = jnp.max(jnp.abs(blk))
+            w_q = quantize_uniform(blk, cfg.g_bits, w_max)
+            acc = jnp.dot(xs, w_q, preferred_element_type=jnp.float32)
+            adc_fs = jnp.float32(cfg.adc_alpha * cfg.x_max) * w_max * jnp.float32(cfg.n_row)
+            acc = quantize_uniform(acc, cfg.adc_bits, adc_fs)
+            out = out.at[:, nt * cfg.n_col : (nt + 1) * cfg.n_col].add(acc)
+    return out[:, :n]

@@ -1,0 +1,179 @@
+"""L2 — JAX model: a multi-layer perceptron served from NVM crossbar tiles.
+
+The build-time half of the end-to-end driver.  A 784-256-128-10 MLP
+("digits classifier") is trained in float32 on a procedural synthetic-digits
+dataset, then its inference path is expressed with every matmul routed
+through the L1 crossbar kernel (``kernels.crossbar``), exactly as the mapped
+chip would execute it: weight-stationary tiles, DAC/ADC quantization, digital
+inter-tile accumulation.  ``aot.py`` lowers the crossbar forward (weights
+baked in as constants — the NVM array *is* the weight store) to HLO text for
+the Rust coordinator.
+
+Everything here is deterministic (fixed PRNG keys) and runs at build time
+only.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import TileConfig, crossbar_matmul
+from .kernels.ref import crossbar_matmul_ref
+
+LAYER_SIZES = (784, 256, 128, 10)
+N_CLASSES = 10
+IMG = 28
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Model + tile configuration for the crossbar MLP."""
+
+    layer_sizes: tuple[int, ...] = LAYER_SIZES
+    tile: TileConfig = TileConfig(n_row=256, n_col=256)
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layer_sizes) - 1
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: ModelConfig = ModelConfig()) -> list[dict]:
+    """He-initialised [ {w: [in,out], b: [out]} ] parameter stack."""
+    params = []
+    sizes = cfg.layer_sizes
+    for i, (fan_in, fan_out) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (fan_in, fan_out)) * jnp.sqrt(2.0 / fan_in)
+        params.append({"w": w, "b": jnp.zeros((fan_out,))})
+    return params
+
+
+def layer_shapes(cfg: ModelConfig = ModelConfig()) -> list[tuple[int, int]]:
+    """(rows=fan_in+1, cols=fan_out) logical weight-matrix shapes — the same
+    shapes the Rust fragmentation engine maps onto tiles (bias row folded in,
+    matching the paper's ``+1`` convention for activation bias)."""
+    s = cfg.layer_sizes
+    return [(i + 1, o) for i, o in zip(s[:-1], s[1:])]
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _forward(params: list[dict], x: jax.Array, matmul: Callable) -> jax.Array:
+    h = x
+    last = len(params) - 1
+    for i, layer in enumerate(params):
+        h = matmul(h, layer["w"]) + layer["b"]
+        if i != last:
+            h = jax.nn.relu(h)
+    return h
+
+
+def forward_fp32(params: list[dict], x: jax.Array) -> jax.Array:
+    """Ideal digital float32 forward (training path / accuracy oracle)."""
+    return _forward(params, x, jnp.matmul)
+
+
+def forward_crossbar(params: list[dict], x: jax.Array, cfg: ModelConfig = ModelConfig()) -> jax.Array:
+    """Inference as the mapped chip executes it: every matmul is the L1
+    pallas crossbar kernel on the cfg.tile grid."""
+    return _forward(params, x, lambda a, w: crossbar_matmul(a, w, cfg.tile))
+
+
+def forward_crossbar_ref(params: list[dict], x: jax.Array, cfg: ModelConfig = ModelConfig()) -> jax.Array:
+    """Same inference semantics through the pure-jnp oracle (pytest cross-check)."""
+    return _forward(params, x, lambda a, w: crossbar_matmul_ref(a, w, cfg.tile))
+
+
+# ---------------------------------------------------------------------------
+# Synthetic digits (procedural stand-in for MNIST; the paper uses datasets
+# only as *shape sources*, see DESIGN.md substitutions)
+# ---------------------------------------------------------------------------
+
+def _digit_stencils() -> jnp.ndarray:
+    """10 crude 7x7 digit stencils, upsampled to 28x28."""
+    rows = {
+        0: ["#####", "#...#", "#...#", "#...#", "#...#", "#...#", "#####"],
+        1: ["..#..", ".##..", "..#..", "..#..", "..#..", "..#..", "#####"],
+        2: ["#####", "....#", "....#", "#####", "#....", "#....", "#####"],
+        3: ["#####", "....#", "....#", "#####", "....#", "....#", "#####"],
+        4: ["#...#", "#...#", "#...#", "#####", "....#", "....#", "....#"],
+        5: ["#####", "#....", "#....", "#####", "....#", "....#", "#####"],
+        6: ["#####", "#....", "#....", "#####", "#...#", "#...#", "#####"],
+        7: ["#####", "....#", "...#.", "..#..", ".#...", ".#...", ".#..."],
+        8: ["#####", "#...#", "#...#", "#####", "#...#", "#...#", "#####"],
+        9: ["#####", "#...#", "#...#", "#####", "....#", "....#", "#####"],
+    }
+    grids = []
+    for d in range(10):
+        g = jnp.array([[1.0 if c == "#" else 0.0 for c in f"{r:<5}"[:5]] for r in rows[d]])
+        g = jnp.pad(g, ((0, 0), (1, 1)))  # 7x7
+        grids.append(g)
+    base = jnp.stack(grids)  # [10, 7, 7]
+    return jnp.repeat(jnp.repeat(base, 4, axis=1), 4, axis=2)  # [10, 28, 28]
+
+
+def synth_digits(key: jax.Array, n: int, noise: float = 0.35) -> tuple[jax.Array, jax.Array]:
+    """n procedural digit images: stencil + sub-pixel shift + gaussian noise.
+
+    Returns (x[n, 784] float32 in [0,1]-ish, labels[n] int32).
+    """
+    stencils = _digit_stencils()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    labels = jax.random.randint(k1, (n,), 0, N_CLASSES)
+    imgs = stencils[labels]  # [n, 28, 28]
+    # random +/-2 px roll per image (shape-preserving augmentation)
+    sx = jax.random.randint(k2, (n,), -2, 3)
+    sy = jax.random.randint(k3, (n,), -2, 3)
+    imgs = jax.vmap(lambda im, a, b: jnp.roll(im, (a, b), axis=(0, 1)))(imgs, sx, sy)
+    imgs = imgs + noise * jax.random.normal(k4, imgs.shape)
+    return imgs.reshape(n, IMG * IMG).astype(jnp.float32), labels.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Training (fp32; the chip is inference-only, like the paper's mapping study)
+# ---------------------------------------------------------------------------
+
+def loss_fn(params: list[dict], x: jax.Array, y: jax.Array) -> jax.Array:
+    logits = forward_fp32(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+@jax.jit
+def _sgd_step(params, x, y, lr):
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    new = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return new, loss
+
+
+def train(
+    key: jax.Array,
+    steps: int = 300,
+    batch: int = 128,
+    lr: float = 0.2,
+    cfg: ModelConfig = ModelConfig(),
+) -> tuple[list[dict], list[float]]:
+    """Train the fp32 MLP on synthetic digits; returns (params, loss curve)."""
+    kp, kd = jax.random.split(key)
+    params = init_params(kp, cfg)
+    losses = []
+    for step in range(steps):
+        kd, kb = jax.random.split(kd)
+        x, y = synth_digits(kb, batch)
+        params, loss = _sgd_step(params, x, y, lr)
+        losses.append(float(loss))
+    return params, losses
+
+
+def accuracy(logits: jax.Array, y: jax.Array) -> float:
+    return float(jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32)))

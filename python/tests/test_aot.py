@@ -1,0 +1,97 @@
+"""AOT lowering: HLO text artifacts are well-formed and loadable by XLA."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+from compile.kernels import TileConfig
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    tile = TileConfig(n_row=128, n_col=128)
+    cfg = M.ModelConfig(tile=tile)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return params, cfg, tile
+
+
+class TestLowering:
+    def test_model_hlo_text_wellformed(self, small_setup):
+        params, cfg, _ = small_setup
+        text = aot.lower_model(params, cfg, batch=4)
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        # batched input parameter is present
+        assert "f32[4,784]" in text
+
+    def test_fp32_hlo_has_no_quantization(self, small_setup):
+        params, cfg, _ = small_setup
+        text = aot.lower_model_fp32(params, cfg, batch=4)
+        assert "round-nearest-even" not in text
+
+    def test_crossbar_hlo_has_quantization(self, small_setup):
+        params, cfg, _ = small_setup
+        text = aot.lower_model(params, cfg, batch=4)
+        assert "round-nearest-even" in text  # DAC/ADC/G quantizers survive
+
+    def test_tile_mvm_has_weight_parameter(self, small_setup):
+        _, _, tile = small_setup
+        text = aot.lower_tile_mvm(tile, batch=4)
+        assert "f32[4,128]" in text
+        assert "f32[128,128]" in text
+
+    def test_hlo_text_reparses(self, small_setup):
+        """HLO text -> parse round trip: the text we hand to the Rust
+        runtime is grammatically valid HLO with the expected entry shape.
+
+        (Numeric execution of the text through PJRT is covered by the Rust
+        integration test `integration_runtime`, which exercises the actual
+        consumer — xla_extension 0.5.1's parser — rather than jaxlib's.)
+        """
+        from jax._src.lib import xla_client as xc
+
+        params, cfg, _ = small_setup
+        text = aot.lower_model(params, cfg, batch=4)
+        mod = xc._xla.hlo_module_from_text(text)
+        # re-emitting the parsed module keeps the entry signature
+        assert "f32[4,784]" in mod.to_string()
+        assert "f32[4,10]" in mod.to_string()
+
+    def test_model_output_tuple_of_logits(self, small_setup):
+        """Lowered entry returns a 1-tuple of [B,10] logits (return_tuple
+        convention expected by Rust's `to_tuple1`)."""
+        params, cfg, _ = small_setup
+        text = aot.lower_model(params, cfg, batch=4)
+        assert "(f32[4,10]{1,0})" in text  # tuple-wrapped logits root
+
+
+class TestArtifactRegressions:
+    """Guards for the two silent-corruption modes found during bring-up."""
+
+    def test_constants_not_elided(self, small_setup):
+        """The default HLO printer elides big literals as `constant({...})`,
+        which the Rust-side parser accepts as ZEROS — silently serving an
+        untrained model. The weights are the artifact; they must be present.
+        """
+        params, cfg, _ = small_setup
+        text = aot.lower_model(params, cfg, batch=4)
+        assert "{...}" not in text
+        # a real first-layer weight row must appear verbatim
+        w0 = float(params[0]["w"][0, 0])
+        assert f"{w0:.9g}"[:6] in text or f"{w0}"[:6] in text
+
+    def test_no_metadata_attributes(self, small_setup):
+        """xla_extension 0.5.1's parser rejects source_end_line metadata
+        emitted by newer printers; metadata must be stripped."""
+        params, cfg, _ = small_setup
+        text = aot.lower_model(params, cfg, batch=4)
+        assert "metadata={" not in text
+
+    def test_fp32_and_crossbar_share_entry_signature(self, small_setup):
+        params, cfg, _ = small_setup
+        a = aot.lower_model(params, cfg, batch=4)
+        b = aot.lower_model_fp32(params, cfg, batch=4)
+        for text in (a, b):
+            assert "f32[4,784]" in text and "f32[4,10]" in text

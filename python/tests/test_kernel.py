@@ -1,0 +1,223 @@
+"""L1 correctness: pallas crossbar kernel vs the pure-jnp oracle.
+
+The CORE correctness signal of the compile path: hypothesis sweeps shapes,
+tile geometries and converter precisions and asserts kernel == oracle, and
+ideal-mode kernel == jnp.matmul.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import TileConfig, crossbar_matmul, quantize_uniform
+from compile.kernels.crossbar import (
+    mxu_utilization_estimate,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import crossbar_matmul_ref
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape).astype(jnp.float32)
+
+
+def assert_kernel_close(got, want, cfg, w):
+    """Kernel vs oracle with a quantizer-tie allowance.
+
+    Identical math can still land a value exactly on a quantizer decision
+    boundary where a 1-ULP difference between the fused (pallas) and eager
+    (oracle) pipelines flips a full quantization step.  The discrepancy is
+    then bounded by one LSB of the coarsest converter involved; we allow
+    exactly that bound (and require near-exactness when it cannot occur).
+    """
+    lsb = 0.0
+    w_max = float(jnp.max(jnp.abs(w)))
+    if cfg.adc_bits > 0:
+        lsb += cfg.adc_alpha * cfg.x_max * w_max * cfg.n_row / (2 ** (cfg.adc_bits - 1) - 1)
+    if cfg.dac_bits > 0:
+        # one DAC tie flips one input element by one DAC step
+        lsb += cfg.x_max / (2 ** (cfg.dac_bits - 1) - 1) * w_max
+    if cfg.g_bits > 0:
+        # one conductance tie flips one weight by one G step
+        lsb += w_max / (2 ** (cfg.g_bits - 1) - 1) * cfg.x_max
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1.01 * lsb + 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# quantizer unit tests
+# ---------------------------------------------------------------------------
+
+class TestQuantizer:
+    def test_passthrough_when_bits_zero(self):
+        v = rand(0, (8, 8))
+        np.testing.assert_array_equal(quantize_uniform(v, 0, jnp.float32(1.0)), v)
+
+    def test_zero_range_maps_to_zero(self):
+        v = rand(1, (4, 4))
+        np.testing.assert_array_equal(
+            quantize_uniform(v, 8, jnp.float32(0.0)), jnp.zeros_like(v)
+        )
+
+    def test_clips_to_range(self):
+        v = jnp.array([-10.0, 10.0])
+        q = quantize_uniform(v, 4, jnp.float32(1.0))
+        np.testing.assert_allclose(q, [-1.0, 1.0], **TOL)
+
+    def test_level_count(self):
+        # 3 bits -> levels in {-3..3}/3 * vmax -> 7 distinct values on a ramp
+        v = jnp.linspace(-1, 1, 1001)
+        q = quantize_uniform(v, 3, jnp.float32(1.0))
+        assert len(np.unique(np.asarray(q))) == 7
+
+    def test_idempotent(self):
+        v = rand(2, (16,))
+        q1 = quantize_uniform(v, 6, jnp.float32(2.0))
+        q2 = quantize_uniform(q1, 6, jnp.float32(2.0))
+        np.testing.assert_allclose(q1, q2, **TOL)
+
+    def test_symmetric(self):
+        v = rand(3, (32,))
+        q_pos = quantize_uniform(v, 5, jnp.float32(1.5))
+        q_neg = quantize_uniform(-v, 5, jnp.float32(1.5))
+        np.testing.assert_allclose(q_pos, -q_neg, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+
+class TestKernelVsOracle:
+    @pytest.mark.parametrize(
+        "b,k,n,tr,tc",
+        [
+            (1, 64, 64, 64, 64),      # exactly one tile
+            (4, 128, 128, 64, 64),    # 2x2 grid
+            (2, 100, 60, 64, 64),     # padding in both dims
+            (3, 300, 130, 128, 64),   # rectangular tiles, ragged edges
+            (8, 64, 256, 256, 256),   # matrix smaller than one tile row dim
+            (2, 513, 257, 256, 256),  # one row/col over a tile boundary
+        ],
+    )
+    def test_quantized_matches_ref(self, b, k, n, tr, tc):
+        cfg = TileConfig(n_row=tr, n_col=tc)
+        x = rand(b * 1000 + k, (b, k))
+        w = rand(n, (k, n), scale=0.1)
+        got = crossbar_matmul(x, w, cfg)
+        want = crossbar_matmul_ref(x, w, cfg)
+        assert_kernel_close(got, want, cfg, w)
+
+    @pytest.mark.parametrize("bits", [(2, 4, 2), (4, 6, 4), (8, 10, 8), (0, 8, 8), (8, 0, 8), (8, 8, 0)])
+    def test_bit_width_sweep(self, bits):
+        dac, adc, g = bits
+        cfg = TileConfig(n_row=64, n_col=64, dac_bits=dac, adc_bits=adc, g_bits=g)
+        x = rand(11, (4, 150))
+        w = rand(12, (150, 70), scale=0.2)
+        assert_kernel_close(crossbar_matmul(x, w, cfg), crossbar_matmul_ref(x, w, cfg), cfg, w)
+
+    def test_ideal_mode_matches_matmul(self):
+        cfg = TileConfig(n_row=128, n_col=128).ideal()
+        x = rand(20, (8, 300))
+        w = rand(21, (300, 200))
+        np.testing.assert_allclose(crossbar_matmul(x, w, cfg), x @ w, rtol=1e-4, atol=1e-4)
+
+    def test_zero_weights_give_zero(self):
+        cfg = TileConfig(n_row=64, n_col=64)
+        x = rand(30, (4, 128))
+        w = jnp.zeros((128, 64))
+        np.testing.assert_array_equal(crossbar_matmul(x, w, cfg), jnp.zeros((4, 64)))
+
+    def test_shape_validation(self):
+        cfg = TileConfig()
+        with pytest.raises(ValueError):
+            crossbar_matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)), cfg)
+        with pytest.raises(ValueError):
+            crossbar_matmul(jnp.zeros((2,)), jnp.zeros((2, 2)), cfg)
+
+    def test_fragment_grid_counts(self):
+        cfg = TileConfig(n_row=256, n_col=256)
+        assert cfg.grid_for(784, 256) == (4, 1)
+        assert cfg.grid_for(256, 256) == (1, 1)
+        assert cfg.grid_for(257, 257) == (2, 2)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 5),
+        k=st.integers(1, 200),
+        n=st.integers(1, 150),
+        tr=st.sampled_from([32, 64, 128]),
+        tc=st.sampled_from([32, 64, 96]),
+        dac=st.sampled_from([0, 4, 8]),
+        adc=st.sampled_from([0, 6, 10]),
+        g=st.sampled_from([0, 4, 8]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_kernel_equals_oracle(self, b, k, n, tr, tc, dac, adc, g, seed):
+        cfg = TileConfig(n_row=tr, n_col=tc, dac_bits=dac, adc_bits=adc, g_bits=g)
+        kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(kx, (b, k), jnp.float32)
+        w = 0.2 * jax.random.normal(kw, (k, n), jnp.float32)
+        assert_kernel_close(crossbar_matmul(x, w, cfg), crossbar_matmul_ref(x, w, cfg), cfg, w)
+
+    @settings(max_examples=10, deadline=None)
+    @given(dt=st.sampled_from([jnp.float32, jnp.bfloat16, jnp.float16]), seed=st.integers(0, 99))
+    def test_hypothesis_dtypes_accepted(self, dt, seed):
+        """Inputs of any float dtype are computed in f32 (analog domain)."""
+        cfg = TileConfig(n_row=32, n_col=32)
+        kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(kx, (2, 40), jnp.float32).astype(dt)
+        w = jax.random.normal(kw, (40, 30), jnp.float32).astype(dt) * 0.2
+        got = crossbar_matmul(x, w, cfg)
+        want = crossbar_matmul_ref(x, w, cfg)
+        assert got.dtype == jnp.float32
+        assert_kernel_close(got, want, cfg, w.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# quantization error behaviour (physics sanity, not exactness)
+# ---------------------------------------------------------------------------
+
+class TestQuantBehaviour:
+    def _err(self, cfg):
+        x = rand(40, (8, 256))
+        w = rand(41, (256, 128), scale=0.1)
+        exact = x @ w
+        got = crossbar_matmul(x, w, cfg)
+        return float(jnp.sqrt(jnp.mean((got - exact) ** 2)) / jnp.sqrt(jnp.mean(exact**2)))
+
+    def test_error_decreases_with_more_bits(self):
+        errs = [
+            self._err(TileConfig(n_row=256, n_col=128, dac_bits=b, adc_bits=b + 2, g_bits=b))
+            for b in (3, 5, 8)
+        ]
+        assert errs[0] > errs[1] > errs[2]
+
+    def test_8bit_error_small(self):
+        err = self._err(TileConfig(n_row=256, n_col=128))
+        assert err < 0.05, f"8-bit relative error too high: {err}"
+
+
+# ---------------------------------------------------------------------------
+# structure metrics used by EXPERIMENTS.md §Perf
+# ---------------------------------------------------------------------------
+
+class TestStructureMetrics:
+    def test_vmem_footprint_monotone_in_tile(self):
+        small = vmem_footprint_bytes(TileConfig(n_row=128, n_col=128), batch=32)
+        large = vmem_footprint_bytes(TileConfig(n_row=512, n_col=512), batch=32)
+        assert small < large
+
+    def test_vmem_footprint_value(self):
+        # 2*(B*R + R*C)*4 + B*C*4
+        cfg = TileConfig(n_row=256, n_col=256)
+        assert vmem_footprint_bytes(cfg, 32) == 2 * (32 * 256 + 256 * 256) * 4 + 32 * 256 * 4
+
+    def test_mxu_utilization_full_when_aligned(self):
+        assert mxu_utilization_estimate(TileConfig(n_row=256, n_col=256), 128) == 1.0
+
+    def test_mxu_utilization_partial(self):
+        u = mxu_utilization_estimate(TileConfig(n_row=100, n_col=256), 128)
+        assert 0 < u < 1

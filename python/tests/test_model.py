@@ -1,0 +1,95 @@
+"""L2 correctness: crossbar MLP model, synthetic data, training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import TileConfig
+
+CFG = M.ModelConfig(tile=TileConfig(n_row=256, n_col=256))
+
+
+@pytest.fixture(scope="module")
+def trained():
+    params, losses = M.train(jax.random.PRNGKey(7), steps=160, cfg=CFG)
+    return params, losses
+
+
+class TestData:
+    def test_synth_digits_shapes_and_labels(self):
+        x, y = M.synth_digits(jax.random.PRNGKey(0), 64)
+        assert x.shape == (64, 784) and y.shape == (64,)
+        assert int(y.min()) >= 0 and int(y.max()) <= 9
+
+    def test_synth_digits_deterministic(self):
+        a = M.synth_digits(jax.random.PRNGKey(3), 16)
+        b = M.synth_digits(jax.random.PRNGKey(3), 16)
+        np.testing.assert_array_equal(a[0], b[0])
+        np.testing.assert_array_equal(a[1], b[1])
+
+    def test_synth_digits_classes_separable(self):
+        """Noise-free stencils of different classes differ."""
+        x, y = M.synth_digits(jax.random.PRNGKey(5), 256, noise=0.0)
+        xs = {int(lbl): x[i] for i, lbl in enumerate(y)}
+        keys = sorted(xs)
+        assert len(keys) == 10
+        for a in keys:
+            for b in keys:
+                if a < b:
+                    assert float(jnp.abs(xs[a] - xs[b]).sum()) > 1.0
+
+
+class TestParams:
+    def test_init_shapes(self):
+        params = M.init_params(jax.random.PRNGKey(0), CFG)
+        sizes = CFG.layer_sizes
+        assert len(params) == CFG.n_layers
+        for p, (i, o) in zip(params, zip(sizes[:-1], sizes[1:])):
+            assert p["w"].shape == (i, o) and p["b"].shape == (o,)
+
+    def test_layer_shapes_bias_row(self):
+        shapes = M.layer_shapes(CFG)
+        assert shapes == [(785, 256), (257, 128), (129, 10)]
+
+
+class TestForward:
+    def test_fp32_shape(self):
+        params = M.init_params(jax.random.PRNGKey(1), CFG)
+        x, _ = M.synth_digits(jax.random.PRNGKey(2), 8)
+        assert M.forward_fp32(params, x).shape == (8, 10)
+
+    def test_crossbar_matches_its_oracle(self, trained):
+        params, _ = trained
+        x, _ = M.synth_digits(jax.random.PRNGKey(11), 16)
+        a = M.forward_crossbar(params, x, CFG)
+        b = M.forward_crossbar_ref(params, x, CFG)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    def test_crossbar_close_to_fp32_predictions(self, trained):
+        """Quantized inference preserves argmax on most samples."""
+        params, _ = trained
+        x, _ = M.synth_digits(jax.random.PRNGKey(12), 128)
+        fp = jnp.argmax(M.forward_fp32(params, x), axis=1)
+        xb = jnp.argmax(M.forward_crossbar(params, x, CFG), axis=1)
+        agreement = float(jnp.mean((fp == xb).astype(jnp.float32)))
+        assert agreement >= 0.95, f"argmax agreement {agreement}"
+
+
+class TestTraining:
+    def test_loss_decreases(self, trained):
+        _, losses = trained
+        assert losses[-1] < 0.5 * losses[0]
+
+    def test_accuracy_above_chance(self, trained):
+        params, _ = trained
+        x, y = M.synth_digits(jax.random.PRNGKey(13), 512)
+        assert M.accuracy(M.forward_fp32(params, x), y) > 0.9
+
+    def test_crossbar_accuracy_close_to_fp32(self, trained):
+        params, _ = trained
+        x, y = M.synth_digits(jax.random.PRNGKey(14), 256)
+        acc_fp = M.accuracy(M.forward_fp32(params, x), y)
+        acc_xb = M.accuracy(M.forward_crossbar(params, x, CFG), y)
+        assert acc_xb >= acc_fp - 0.05

@@ -1,0 +1,69 @@
+//! Bench: binary linear optimization — demonstrates the paper's §2.2
+//! observation that branch & bound "comes at exponentially increased
+//! execution time for larger problems", and prices the demo instances.
+
+use xbarmap::geom::{Block, BlockKind, Tile};
+use xbarmap::ilp::{self, bnb::BnbConfig, model::DenseModel, Budget};
+use xbarmap::pack::Discipline;
+use xbarmap::util::benchkit::Bench;
+use xbarmap::util::prng::Rng;
+
+fn random_blocks(rng: &mut Rng, n: usize, tile: Tile) -> Vec<Block> {
+    (0..n)
+        .map(|i| Block {
+            rows: rng.range(tile.n_row / 8, tile.n_row / 2),
+            cols: rng.range(tile.n_col / 8, tile.n_col / 2),
+            layer: i,
+            replica: 0,
+            grid: (0, 0),
+            kind: BlockKind::Sparse,
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::from_env();
+    let tile = Tile::new(512, 512);
+    let demo = xbarmap::report::paper_demo_items();
+
+    // the paper's exact instances
+    b.run("exact/demo13/dense (Table 3)", || {
+        ilp::solve_packing(&demo, tile, Discipline::Dense, Budget::default()).packing.n_bins
+    });
+    b.run("exact/demo13/pipeline (Table 5)", || {
+        ilp::solve_packing(&demo, tile, Discipline::Pipeline, Budget::default())
+            .packing
+            .n_bins
+    });
+
+    // faithful Eq. 6 BILP via LP-bounded branch&bound (small only)
+    let small: Vec<Block> = demo.iter().take(6).cloned().collect();
+    let model = DenseModel::build(&small, tile);
+    b.run("bilp-eq6/6-items/dense", || {
+        ilp::bnb::solve(&model.lp, &BnbConfig::default(), None).nodes
+    });
+
+    // blow-up curve: nodes explored vs instance size at fixed budget
+    println!("\n# branch&bound node growth (pipeline, budget 500k nodes)");
+    let mut rng = Rng::new(1234);
+    for n in [8usize, 16, 24, 32, 48] {
+        let blocks = random_blocks(&mut rng, n, tile);
+        let t0 = std::time::Instant::now();
+        let r = ilp::solve_packing(
+            &blocks,
+            tile,
+            Discipline::Pipeline,
+            Budget { max_nodes: 500_000, ..Default::default() },
+        );
+        println!(
+            "items {n:>3}: nodes {:>8} optimal {:>5} bins {} lb {} ({:.1} ms)",
+            r.nodes,
+            r.optimal,
+            r.packing.n_bins,
+            r.lower_bound,
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    }
+
+    b.emit_jsonl();
+}

@@ -1,0 +1,37 @@
+//! Bench: fragmentation + greedy packing hot paths (the inner loop of the
+//! §3.1 sweep — Table 6 / Fig. 7 workloads).
+
+use xbarmap::frag;
+use xbarmap::geom::Tile;
+use xbarmap::nets::zoo;
+use xbarmap::pack::{self, Discipline};
+use xbarmap::util::benchkit::Bench;
+
+fn main() {
+    let mut b = Bench::from_env();
+    let net = zoo::resnet18();
+
+    for k in [8u32, 10] {
+        let tile = Tile::new(1 << k, 1 << k);
+        b.run(&format!("fragment/resnet18/{}", tile), || {
+            frag::fragment_network(&net, tile)
+        });
+        let blocks = frag::fragment_network(&net, tile);
+        for d in [Discipline::Dense, Discipline::Pipeline] {
+            b.run(&format!("simple/resnet18/{tile}/{d}"), || {
+                pack::simple::pack(&blocks, tile, d).n_bins
+            });
+            b.run(&format!("ffd/resnet18/{tile}/{d}"), || {
+                pack::ffd::pack(&blocks, tile, d).n_bins
+            });
+        }
+    }
+
+    // the paper's 13-item demo (Table 3/5 instance)
+    let demo = xbarmap::report::paper_demo_items();
+    let tile = Tile::new(512, 512);
+    b.run("simple/demo13/dense", || pack::simple::pack(&demo, tile, Discipline::Dense).n_bins);
+    b.run("ffd/demo13/pipeline", || pack::ffd::pack(&demo, tile, Discipline::Pipeline).n_bins);
+
+    b.emit_jsonl();
+}

@@ -1,0 +1,40 @@
+//! Bench: PJRT request path — batched inference through the AOT crossbar
+//! artifact (the e2e serving hot path). Requires `make artifacts`.
+
+use xbarmap::coordinator::{digits, Coordinator, CoordinatorConfig};
+use xbarmap::runtime::artifacts_dir;
+use xbarmap::util::benchkit::Bench;
+use xbarmap::util::prng::Rng;
+
+fn main() {
+    if !artifacts_dir(None).join("meta.json").exists() {
+        eprintln!("skipping bench_runtime: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    let mut b = Bench::from_env();
+
+    for crossbar in [true, false] {
+        let c = Coordinator::new(&CoordinatorConfig { crossbar, ..Default::default() })
+            .expect("coordinator");
+        let mut rng = Rng::new(11);
+        let samples = digits::synth_digits(&mut rng, c.batch, 0.35);
+        let flat: Vec<f32> = samples.iter().flat_map(|s| s.pixels.iter().copied()).collect();
+        let name = if crossbar { "crossbar" } else { "fp32" };
+        let n = c.batch;
+        b.run(&format!("pjrt/{name}/batch{n}"), || {
+            c.infer(&flat, n).expect("infer").data[0]
+        });
+        // per-request price at full batch
+        let stats = b.results.last().unwrap();
+        println!(
+            "  -> {:.2} µs/request at batch {n}",
+            stats.p50_ns / 1e3 / n as f64
+        );
+    }
+
+    // workload generation cost (must stay tiny vs inference)
+    let mut rng = Rng::new(12);
+    b.run("workload/synth_digits x32", || digits::synth_digits(&mut rng, 32, 0.35).len());
+
+    b.emit_jsonl();
+}

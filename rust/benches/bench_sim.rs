@@ -1,0 +1,35 @@
+//! Bench: cycle-level simulator throughput (Fig. 9 performance rows).
+
+use xbarmap::geom::Tile;
+use xbarmap::nets::zoo;
+use xbarmap::pack::Discipline;
+use xbarmap::perf::{rapa, Execution};
+use xbarmap::sim::{map_and_simulate, simulate, SimConfig};
+use xbarmap::util::benchkit::Bench;
+
+fn main() {
+    let mut b = Bench::from_env();
+    let net = zoo::resnet18();
+    let tile = Tile::new(512, 512);
+
+    b.run("sim/resnet18/map+simulate/seq x100", || {
+        let cfg = SimConfig::new(&net, Execution::Sequential);
+        map_and_simulate(&net, tile, Discipline::Dense, &cfg, 100).1.makespan_cycles
+    });
+
+    // pre-mapped simulate (the steady-state inner loop)
+    let cfg = SimConfig::new(&net, Execution::Pipelined);
+    let blocks = xbarmap::frag::fragment_network(&net, tile);
+    let packing = xbarmap::pack::simple::pack(&blocks, tile, Discipline::Pipeline);
+    b.run("sim/resnet18/pipelined x1000 (pre-mapped)", || {
+        simulate(&net, &packing, &cfg, 1000).makespan_cycles
+    });
+
+    let mut rapa_cfg = SimConfig::new(&net, Execution::Pipelined);
+    rapa_cfg.replication = rapa::plan_balanced(&net, 128);
+    b.run("sim/resnet18/rapa128 map+simulate x100", || {
+        map_and_simulate(&net, tile, Discipline::Pipeline, &rapa_cfg, 100).1.makespan_cycles
+    });
+
+    b.emit_jsonl();
+}

@@ -1,0 +1,43 @@
+//! Bench: the full §3.1 optimization sweep (the repro harness hot path —
+//! Figs. 8, 9, 10 each run one or more of these).
+
+use xbarmap::nets::zoo;
+use xbarmap::opt::{self, Engine, SweepConfig};
+use xbarmap::pack::Discipline;
+use xbarmap::perf::rapa;
+use xbarmap::util::benchkit::Bench;
+
+fn main() {
+    let mut b = Bench::from_env();
+    let net = zoo::resnet18();
+
+    b.run("sweep/resnet18/dense/square(8 sizes)", || {
+        opt::sweep(&net, &SweepConfig::square(Discipline::Dense)).len()
+    });
+    b.run("sweep/resnet18/pipeline/full(64 configs)", || {
+        opt::sweep(&net, &SweepConfig::paper_default(Discipline::Pipeline)).len()
+    });
+
+    let rapa_cfg = SweepConfig {
+        replication: Some(rapa::plan_balanced(&net, 128)),
+        ..SweepConfig::paper_default(Discipline::Pipeline)
+    };
+    b.run("sweep/resnet18/rapa128/full(64 configs)", || {
+        opt::sweep(&net, &rapa_cfg).len()
+    });
+
+    let lps_cfg = SweepConfig {
+        engine: Engine::Ilp { max_nodes: 50_000 },
+        ..SweepConfig::square(Discipline::Dense)
+    };
+    b.run("sweep/resnet18/dense/square/lps-50k", || {
+        opt::sweep(&net, &lps_cfg).len()
+    });
+
+    let big = zoo::resnet50();
+    b.run("sweep/resnet50/pipeline/square", || {
+        opt::sweep(&big, &SweepConfig::square(Discipline::Pipeline)).len()
+    });
+
+    b.emit_jsonl();
+}

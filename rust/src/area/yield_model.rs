@@ -1,0 +1,122 @@
+//! Manufacturing-yield extension (paper §5 future work: "explore the
+//! impact of manufacturing yield on the optimization process, which would
+//! impose additional constraints on the optimal tile array capacity").
+//!
+//! Poisson defect model: a tile of area `A` mm² yields with probability
+//! `exp(-D0 * A)` for defect density `D0` (defects/mm²). Dead tiles must
+//! be provisioned over, so the *effective* area of an `n`-tile mapping is
+//! `n * A / yield(A)` — a convex penalty that grows with tile capacity and
+//! pushes the optimum toward smaller arrays, exactly the constraint the
+//! paper anticipates.
+
+use super::AreaModel;
+use crate::geom::Tile;
+use crate::opt::SweepPoint;
+
+/// Poisson yield model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct YieldModel {
+    /// killer-defect density, defects per mm²
+    pub defect_density: f64,
+}
+
+impl YieldModel {
+    pub fn new(defect_density: f64) -> YieldModel {
+        assert!(defect_density >= 0.0, "defect density must be non-negative");
+        YieldModel { defect_density }
+    }
+
+    /// Probability that one tile is functional.
+    pub fn tile_yield(&self, area: &AreaModel, t: Tile) -> f64 {
+        (-self.defect_density * area.tile_area_um2(t) * 1e-6).exp()
+    }
+
+    /// Expected tiles to provision for `n` good tiles.
+    pub fn provisioned_tiles(&self, area: &AreaModel, t: Tile, n: usize) -> f64 {
+        n as f64 / self.tile_yield(area, t)
+    }
+
+    /// Yield-adjusted total area, mm².
+    pub fn effective_area_mm2(&self, area: &AreaModel, t: Tile, n: usize) -> f64 {
+        self.provisioned_tiles(area, t, n) * area.tile_area_um2(t) * 1e-6
+    }
+}
+
+/// Re-rank sweep points under a yield model; returns (point, effective
+/// area) sorted ascending by effective area.
+pub fn yield_ranked<'a>(
+    points: &'a [SweepPoint],
+    area: &AreaModel,
+    ym: &YieldModel,
+) -> Vec<(&'a SweepPoint, f64)> {
+    let mut v: Vec<(&SweepPoint, f64)> = points
+        .iter()
+        .map(|p| (p, ym.effective_area_mm2(area, p.tile, p.n_tiles)))
+        .collect();
+    v.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::zoo;
+    use crate::opt::{self, SweepConfig};
+    use crate::pack::Discipline;
+
+    #[test]
+    fn perfect_yield_at_zero_defects() {
+        let area = AreaModel::paper_default();
+        let ym = YieldModel::new(0.0);
+        let t = Tile::new(1024, 1024);
+        assert_eq!(ym.tile_yield(&area, t), 1.0);
+        assert_eq!(ym.provisioned_tiles(&area, t, 10), 10.0);
+    }
+
+    #[test]
+    fn yield_decreases_with_tile_area() {
+        let area = AreaModel::paper_default();
+        let ym = YieldModel::new(0.05);
+        let y_small = ym.tile_yield(&area, Tile::new(256, 256));
+        let y_large = ym.tile_yield(&area, Tile::new(4096, 4096));
+        assert!(y_small > y_large);
+        assert!(y_small > 0.9, "small tiles nearly always yield: {y_small}");
+        assert!(y_large < 0.2, "huge tiles rarely yield at D0=0.05: {y_large}");
+    }
+
+    #[test]
+    fn defects_shift_optimum_to_smaller_tiles() {
+        // the §5 prediction, measured: with rising defect density the
+        // yield-adjusted optimum moves to smaller arrays than the
+        // defect-free optimum
+        let net = zoo::resnet18();
+        let area = AreaModel::paper_default();
+        let pts = opt::sweep(&net, &SweepConfig::square(Discipline::Dense));
+        let free = opt::optimum(&pts).unwrap();
+        let harsh = YieldModel::new(0.2);
+        let (best, _) = yield_ranked(&pts, &area, &harsh)[0];
+        assert!(
+            best.tile.capacity() < free.tile.capacity(),
+            "yield-aware optimum {} should be smaller than defect-free {}",
+            best.tile,
+            free.tile
+        );
+    }
+
+    #[test]
+    fn ranking_is_ascending() {
+        let net = zoo::lenet();
+        let area = AreaModel::paper_default();
+        let pts = opt::sweep(&net, &SweepConfig::square(Discipline::Dense));
+        let ranked = yield_ranked(&pts, &area, &YieldModel::new(0.05));
+        for w in ranked.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn negative_density_rejected() {
+        YieldModel::new(-1.0);
+    }
+}

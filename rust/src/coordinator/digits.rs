@@ -1,0 +1,133 @@
+//! Procedural synthetic-digits workload generator (Rust twin of
+//! `python/compile/model.py::synth_digits`): 10 crude 7x7 stencils
+//! upsampled to 28x28, randomly shifted by up to ±2 px and perturbed with
+//! gaussian noise. Distributionally identical to the build-time training
+//! set, so served accuracy matches the metrics recorded in meta.json.
+
+use crate::util::prng::Rng;
+
+pub const IMG: usize = 28;
+pub const N_PIXELS: usize = IMG * IMG;
+pub const N_CLASSES: usize = 10;
+
+const ROWS: [[&str; 7]; 10] = [
+    ["#####", "#...#", "#...#", "#...#", "#...#", "#...#", "#####"],
+    ["..#..", ".##..", "..#..", "..#..", "..#..", "..#..", "#####"],
+    ["#####", "....#", "....#", "#####", "#....", "#....", "#####"],
+    ["#####", "....#", "....#", "#####", "....#", "....#", "#####"],
+    ["#...#", "#...#", "#...#", "#####", "....#", "....#", "....#"],
+    ["#####", "#....", "#....", "#####", "....#", "....#", "#####"],
+    ["#####", "#....", "#....", "#####", "#...#", "#...#", "#####"],
+    ["#####", "....#", "...#.", "..#..", ".#...", ".#...", ".#..."],
+    ["#####", "#...#", "#...#", "#####", "#...#", "#...#", "#####"],
+    ["#####", "#...#", "#...#", "#####", "....#", "....#", "#####"],
+];
+
+/// 28x28 stencil for one digit class (4x upsampled 7x7 with 1-col pad).
+pub fn stencil(digit: usize) -> [f32; N_PIXELS] {
+    assert!(digit < N_CLASSES);
+    let mut small = [[0f32; 7]; 7];
+    for (r, row) in ROWS[digit].iter().enumerate() {
+        for (c, ch) in row.chars().enumerate() {
+            // python pads the 5-wide glyph with one empty column each side
+            small[r][c + 1] = if ch == '#' { 1.0 } else { 0.0 };
+        }
+    }
+    let mut out = [0f32; N_PIXELS];
+    for r in 0..IMG {
+        for c in 0..IMG {
+            out[r * IMG + c] = small[r / 4][c / 4];
+        }
+    }
+    out
+}
+
+/// One generated sample.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub pixels: Vec<f32>,
+    pub label: usize,
+}
+
+/// Generate `n` samples with the given noise level.
+pub fn synth_digits(rng: &mut Rng, n: usize, noise: f32) -> Vec<Sample> {
+    (0..n)
+        .map(|_| {
+            let label = rng.range(0, N_CLASSES - 1);
+            let base = stencil(label);
+            // integer roll by (-2..=2) in each axis, like jnp.roll; source
+            // indices are precomputed per axis so the hot loop is a gather
+            // plus noise (EXPERIMENTS.md §Perf #3)
+            let sy = rng.range(0, 4) as isize - 2;
+            let sx = rng.range(0, 4) as isize - 2;
+            let mut col_src = [0usize; IMG];
+            let mut row_src = [0usize; IMG];
+            for i in 0..IMG {
+                row_src[i] = (i as isize - sy).rem_euclid(IMG as isize) as usize;
+                col_src[i] = (i as isize - sx).rem_euclid(IMG as isize) as usize;
+            }
+            let mut pixels = vec![0f32; N_PIXELS];
+            for r in 0..IMG {
+                let src_row = row_src[r] * IMG;
+                for c in 0..IMG {
+                    pixels[r * IMG + c] = base[src_row + col_src[c]] + noise * rng.normal() as f32;
+                }
+            }
+            Sample { pixels, label }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stencils_distinct() {
+        for a in 0..N_CLASSES {
+            for b in (a + 1)..N_CLASSES {
+                let (sa, sb) = (stencil(a), stencil(b));
+                let diff: f32 = sa.iter().zip(&sb).map(|(x, y)| (x - y).abs()).sum();
+                assert!(diff > 4.0, "stencils {a} and {b} too similar ({diff})");
+            }
+        }
+    }
+
+    #[test]
+    fn samples_shapes_and_labels() {
+        let mut rng = Rng::new(1);
+        let s = synth_digits(&mut rng, 32, 0.35);
+        assert_eq!(s.len(), 32);
+        assert!(s.iter().all(|x| x.pixels.len() == N_PIXELS && x.label < N_CLASSES));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = synth_digits(&mut Rng::new(7), 8, 0.3);
+        let b = synth_digits(&mut Rng::new(7), 8, 0.3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.pixels, y.pixels);
+        }
+    }
+
+    #[test]
+    fn noise_free_sample_is_rolled_stencil() {
+        let mut rng = Rng::new(3);
+        let s = &synth_digits(&mut rng, 1, 0.0)[0];
+        let total: f32 = s.pixels.iter().sum();
+        let expect: f32 = stencil(s.label).iter().sum();
+        assert!((total - expect).abs() < 1e-5, "roll must conserve mass");
+    }
+
+    #[test]
+    fn all_classes_appear() {
+        let mut rng = Rng::new(11);
+        let s = synth_digits(&mut rng, 500, 0.0);
+        let mut seen = [false; N_CLASSES];
+        for x in &s {
+            seen[x.label] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,240 @@
+//! L3 serving coordinator: the request-path driver of the mapped chip.
+//!
+//! On startup it reads `artifacts/meta.json`, compiles the AOT crossbar
+//! model through PJRT, maps the served network onto physical tiles with the
+//! paper's packing machinery (so every inference is accounted against a
+//! concrete tile configuration: count, area, modeled latency), and then
+//! serves batched inference requests. Python is never on this path.
+
+pub mod digits;
+
+use crate::area::AreaModel;
+use crate::frag;
+use crate::geom::Tile;
+use crate::nets::zoo;
+use crate::pack::{self, Discipline, Packing};
+use crate::perf::{self, Execution, TimingModel};
+use crate::runtime::{artifacts_dir, LoadedModel, Runtime, Tensor};
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::Receiver;
+use std::time::Instant;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub artifacts: Option<String>,
+    /// serve through the quantized crossbar model (false = fp32 oracle)
+    pub crossbar: bool,
+    pub discipline: Discipline,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { artifacts: None, crossbar: true, discipline: Discipline::Dense }
+    }
+}
+
+/// Static description of the deployment (mapping + models + metadata).
+pub struct Coordinator {
+    #[allow(dead_code)]
+    runtime: Runtime,
+    model: LoadedModel,
+    pub meta: Json,
+    /// batch size the artifact was lowered with
+    pub batch: usize,
+    pub tile: Tile,
+    pub mapping: Packing,
+    pub total_area_mm2: f64,
+    pub modeled_latency_s: f64,
+    pub artifacts: PathBuf,
+}
+
+/// Serving statistics over a run.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub wall_s: f64,
+    pub throughput_per_s: f64,
+    pub batch_p50_s: f64,
+    pub batch_p95_s: f64,
+    pub accuracy: f64,
+}
+
+impl Coordinator {
+    /// Load artifacts and build the deployment.
+    pub fn new(cfg: &CoordinatorConfig) -> Result<Coordinator> {
+        let dir = artifacts_dir(cfg.artifacts.as_deref());
+        let meta_path = dir.join("meta.json");
+        let meta_text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("read {meta_path:?} — run `make artifacts` first"))?;
+        let meta = json::parse(&meta_text).map_err(|e| anyhow!("parse meta.json: {e}"))?;
+
+        let batch = meta
+            .get("batch")
+            .and_then(Json::as_usize)
+            .context("meta.json missing batch")?;
+        let tile = Tile::new(
+            meta.get("tile.n_row").and_then(Json::as_usize).context("meta tile.n_row")?,
+            meta.get("tile.n_col").and_then(Json::as_usize).context("meta tile.n_col")?,
+        );
+
+        let runtime = Runtime::cpu()?;
+        let artifact = if cfg.crossbar { "model.hlo.txt" } else { "model_fp32.hlo.txt" };
+        let model = runtime.load_hlo_text(&dir.join(artifact))?;
+
+        // map the served network onto the physical tile configuration
+        let net = zoo::digits_mlp();
+        let blocks = frag::fragment_network(&net, tile);
+        let mapping = pack::simple::pack(&blocks, tile, cfg.discipline);
+        let area = AreaModel::paper_default();
+        let total_area_mm2 = area.total_area_mm2(mapping.n_tiles(), tile);
+        let replication = vec![1; net.n_layers()];
+        let modeled_latency_s = perf::latency(
+            &net,
+            &replication,
+            &TimingModel::default(),
+            match cfg.discipline {
+                Discipline::Dense => Execution::Sequential,
+                Discipline::Pipeline => Execution::Pipelined,
+            },
+        );
+
+        Ok(Coordinator {
+            runtime,
+            model,
+            meta,
+            batch,
+            tile,
+            mapping,
+            total_area_mm2,
+            modeled_latency_s,
+            artifacts: dir,
+        })
+    }
+
+    /// Run one padded batch through the PJRT executable.
+    /// `x` is row-major [n, 784] with n <= batch; returns [n, 10] logits.
+    pub fn infer(&self, x: &[f32], n: usize) -> Result<Tensor> {
+        if n == 0 || n > self.batch {
+            return Err(anyhow!("batch size {n} not in 1..={}", self.batch));
+        }
+        let width = digits::N_PIXELS;
+        if x.len() != n * width {
+            return Err(anyhow!("expected {} pixels, got {}", n * width, x.len()));
+        }
+        let mut padded = vec![0f32; self.batch * width];
+        padded[..x.len()].copy_from_slice(x);
+        let input = Tensor::new(vec![self.batch, width], padded)?;
+        let out = self.model.run(&[input])?;
+        // slice the real rows back out
+        let classes = *out.shape.last().unwrap();
+        Tensor::new(vec![n, classes], out.data[..n * classes].to_vec())
+    }
+
+    /// Classify a slice of samples (convenience over [`Self::infer`]).
+    pub fn classify(&self, samples: &[digits::Sample]) -> Result<Vec<usize>> {
+        let mut out = Vec::with_capacity(samples.len());
+        for chunk in samples.chunks(self.batch) {
+            let flat: Vec<f32> = chunk.iter().flat_map(|s| s.pixels.iter().copied()).collect();
+            let logits = self.infer(&flat, chunk.len())?;
+            out.extend(logits.argmax_rows());
+        }
+        Ok(out)
+    }
+
+    /// Serve a request stream with dynamic batching: drain up to `batch`
+    /// queued requests per execution. The producer side runs on its own
+    /// thread(s) feeding the channel; this loop owns the PJRT executable.
+    pub fn serve(&self, rx: Receiver<digits::Sample>) -> Result<ServeStats> {
+        let mut pending: Vec<digits::Sample> = Vec::with_capacity(self.batch);
+        let mut batch_times: Vec<f64> = Vec::new();
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let start = Instant::now();
+
+        let flush = |pending: &mut Vec<digits::Sample>,
+                         batch_times: &mut Vec<f64>,
+                         correct: &mut usize,
+                         total: &mut usize|
+         -> Result<()> {
+            if pending.is_empty() {
+                return Ok(());
+            }
+            let t0 = Instant::now();
+            let preds = self.classify(pending)?;
+            batch_times.push(t0.elapsed().as_secs_f64());
+            for (p, s) in preds.iter().zip(pending.iter()) {
+                *correct += (*p == s.label) as usize;
+            }
+            *total += pending.len();
+            pending.clear();
+            Ok(())
+        };
+
+        // Greedy batching: take what is immediately available, execute,
+        // then block for the next request.
+        loop {
+            match rx.try_recv() {
+                Ok(s) => {
+                    pending.push(s);
+                    if pending.len() == self.batch {
+                        flush(&mut pending, &mut batch_times, &mut correct, &mut total)?;
+                    }
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => {
+                    flush(&mut pending, &mut batch_times, &mut correct, &mut total)?;
+                    match rx.recv() {
+                        Ok(s) => pending.push(s),
+                        Err(_) => break,
+                    }
+                }
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => break,
+            }
+        }
+        flush(&mut pending, &mut batch_times, &mut correct, &mut total)?;
+
+        let wall = start.elapsed().as_secs_f64();
+        let mut sorted = batch_times.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| {
+            if sorted.is_empty() {
+                0.0
+            } else {
+                sorted[((sorted.len() - 1) as f64 * p).round() as usize]
+            }
+        };
+        Ok(ServeStats {
+            requests: total,
+            batches: batch_times.len(),
+            wall_s: wall,
+            throughput_per_s: total as f64 / wall.max(1e-12),
+            batch_p50_s: pct(0.50),
+            batch_p95_s: pct(0.95),
+            accuracy: if total == 0 { 0.0 } else { correct as f64 / total as f64 },
+        })
+    }
+
+    /// Accuracy recorded at build time by aot.py for the crossbar model.
+    pub fn build_time_accuracy(&self) -> Option<f64> {
+        self.meta.get("train.acc_crossbar").and_then(Json::as_f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Coordinator construction needs artifacts + a PJRT client; those paths
+    // are covered by rust/tests/integration_runtime.rs. Pure helpers are
+    // tested here.
+    use super::*;
+
+    #[test]
+    fn config_defaults() {
+        let c = CoordinatorConfig::default();
+        assert!(c.crossbar);
+        assert_eq!(c.discipline, Discipline::Dense);
+        assert!(c.artifacts.is_none());
+    }
+}

@@ -1,0 +1,245 @@
+//! Fragmentation of network layers onto a physical tile grid (§2.1, Eq. 5).
+//!
+//! A layer weight matrix `L(m_inp, m_out)` larger than the tile array
+//! `T(n_row, n_col)` is cut along both axes into a grid of
+//! `ceil(m_inp/n_row) x ceil(m_out/n_col)` blocks; block `(i, j)` has
+//! `rows = min(n_row, m_inp − i·n_row)` and `cols = min(n_col, m_out − j·n_col)`.
+//! Each block is classified into one of the four §2.1 kinds (Fig. 4).
+
+use crate::geom::{Block, BlockKind, Tile};
+use crate::nets::Network;
+
+/// Census of block kinds produced by a fragmentation (paper Fig. 4 series).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Census {
+    pub total: usize,
+    pub full: usize,
+    pub row_full: usize,
+    pub col_full: usize,
+    pub sparse: usize,
+}
+
+impl Census {
+    pub fn of(blocks: &[Block]) -> Census {
+        let mut c = Census { total: blocks.len(), ..Census::default() };
+        for b in blocks {
+            match b.kind {
+                BlockKind::Full => c.full += 1,
+                BlockKind::RowFull => c.row_full += 1,
+                BlockKind::ColFull => c.col_full += 1,
+                BlockKind::Sparse => c.sparse += 1,
+            }
+        }
+        c
+    }
+}
+
+/// Classify a block's dimensions against the tile that produced it.
+pub fn classify(rows: usize, cols: usize, tile: Tile) -> BlockKind {
+    match (rows == tile.n_row, cols == tile.n_col) {
+        (true, true) => BlockKind::Full,
+        (true, false) => BlockKind::RowFull,
+        (false, true) => BlockKind::ColFull,
+        (false, false) => BlockKind::Sparse,
+    }
+}
+
+/// Fragment a single logical matrix `(m_inp, m_out)` for layer `layer`,
+/// replica `replica`, onto tiles of dimension `tile`.
+pub fn fragment_matrix(
+    m_inp: usize,
+    m_out: usize,
+    tile: Tile,
+    layer: usize,
+    replica: usize,
+) -> Vec<Block> {
+    assert!(m_inp > 0 && m_out > 0, "empty matrix {m_inp}x{m_out}");
+    let gr = m_inp.div_ceil(tile.n_row);
+    let gc = m_out.div_ceil(tile.n_col);
+    let mut out = Vec::with_capacity(gr * gc);
+    for i in 0..gr {
+        let rows = (m_inp - i * tile.n_row).min(tile.n_row);
+        for j in 0..gc {
+            let cols = (m_out - j * tile.n_col).min(tile.n_col);
+            out.push(Block {
+                rows,
+                cols,
+                layer,
+                replica,
+                grid: (i, j),
+                kind: classify(rows, cols, tile),
+            });
+        }
+    }
+    out
+}
+
+/// Fragment every layer of a network onto `tile` (replica 0 only).
+pub fn fragment_network(net: &Network, tile: Tile) -> Vec<Block> {
+    fragment_network_replicated(net, tile, &vec![1; net.n_layers()])
+}
+
+/// Fragment with a per-layer replication factor (RAPA, Fig. 3): layer `i`
+/// contributes `replication[i]` identical copies of its fragment set,
+/// tagged with distinct replica indices.
+pub fn fragment_network_replicated(
+    net: &Network,
+    tile: Tile,
+    replication: &[usize],
+) -> Vec<Block> {
+    assert_eq!(replication.len(), net.n_layers(), "replication arity");
+    let mut out = Vec::new();
+    for (li, layer) in net.layers.iter().enumerate() {
+        let (m_inp, m_out) = layer.matrix_shape();
+        for rep in 0..replication[li].max(1) {
+            out.extend(fragment_matrix(m_inp, m_out, tile, li, rep));
+        }
+    }
+    out
+}
+
+/// Total weights across blocks — must equal the replicated network total
+/// (conservation invariant used by property tests).
+pub fn total_block_weights(blocks: &[Block]) -> usize {
+    blocks.iter().map(Block::weights).sum()
+}
+
+/// Sort order used by the simple packing algorithm (§3): descending row
+/// dimension, then descending column dimension, then stable provenance.
+pub fn sort_for_packing(blocks: &mut [Block]) {
+    blocks.sort_by(|a, b| {
+        b.rows
+            .cmp(&a.rows)
+            .then(b.cols.cmp(&a.cols))
+            .then(a.layer.cmp(&b.layer))
+            .then(a.replica.cmp(&b.replica))
+            .then(a.grid.cmp(&b.grid))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::zoo;
+
+    const T: Tile = Tile::new(256, 256);
+
+    #[test]
+    fn exact_fit_single_full_block() {
+        let b = fragment_matrix(256, 256, T, 0, 0);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].kind, BlockKind::Full);
+        assert_eq!((b[0].rows, b[0].cols), (256, 256));
+    }
+
+    #[test]
+    fn small_matrix_single_sparse_block() {
+        let b = fragment_matrix(100, 50, T, 3, 1);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].kind, BlockKind::Sparse);
+        assert_eq!(b[0].layer, 3);
+        assert_eq!(b[0].replica, 1);
+    }
+
+    #[test]
+    fn one_over_boundary_produces_grid() {
+        let b = fragment_matrix(257, 257, T, 0, 0);
+        assert_eq!(b.len(), 4);
+        let kinds: Vec<BlockKind> = b.iter().map(|x| x.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![BlockKind::Full, BlockKind::RowFull, BlockKind::ColFull, BlockKind::Sparse]
+        );
+        assert_eq!((b[3].rows, b[3].cols), (1, 1));
+        assert_eq!(b[3].grid, (1, 1));
+    }
+
+    #[test]
+    fn weights_conserved() {
+        for (mi, mo) in [(785, 256), (1000, 1000), (1, 1), (256, 512), (2049, 1000)] {
+            let blocks = fragment_matrix(mi, mo, T, 0, 0);
+            assert_eq!(total_block_weights(&blocks), mi * mo, "{mi}x{mo}");
+        }
+    }
+
+    #[test]
+    fn network_fragmentation_conserves_weights() {
+        let net = zoo::resnet18();
+        let blocks = fragment_network(&net, T);
+        assert_eq!(total_block_weights(&blocks), net.total_weights());
+    }
+
+    #[test]
+    fn replication_multiplies_blocks_and_weights() {
+        let net = zoo::lenet();
+        let reps = vec![4, 2, 1, 1, 1];
+        let blocks = fragment_network_replicated(&net, T, &reps);
+        let single = fragment_network(&net, T);
+        let expected: usize = net
+            .layers
+            .iter()
+            .zip(&reps)
+            .map(|(l, r)| l.weights() * r)
+            .sum();
+        assert_eq!(total_block_weights(&blocks), expected);
+        assert!(blocks.len() > single.len());
+        // replica tags distinct per layer copy
+        assert!(blocks.iter().any(|b| b.layer == 0 && b.replica == 3));
+    }
+
+    #[test]
+    fn census_counts() {
+        let blocks = fragment_matrix(512, 300, T, 0, 0);
+        // grid 2x2: (256,256)F (256,44)RF (256,256)F (256,44)RF
+        let c = Census::of(&blocks);
+        assert_eq!(c.total, 4);
+        assert_eq!(c.full, 2);
+        assert_eq!(c.row_full, 2);
+        assert_eq!(c.col_full + c.sparse, 0);
+    }
+
+    #[test]
+    fn census_fig4_trend_larger_tiles_fewer_blocks() {
+        let net = zoo::resnet18();
+        let counts: Vec<usize> = (6..=13)
+            .map(|k| fragment_network(&net, Tile::new(1 << k, 1 << k)).len())
+            .collect();
+        for w in counts.windows(2) {
+            assert!(w[0] >= w[1], "block count not monotone: {counts:?}");
+        }
+        // at huge arrays every layer is a single sparse block
+        assert_eq!(*counts.last().unwrap(), net.n_layers());
+    }
+
+    #[test]
+    fn sort_for_packing_descending_rows() {
+        let mut blocks = fragment_network(&zoo::alexnet(), T);
+        sort_for_packing(&mut blocks);
+        for w in blocks.windows(2) {
+            assert!(
+                w[0].rows > w[1].rows
+                    || (w[0].rows == w[1].rows && w[0].cols >= w[1].cols)
+                    || (w[0].rows == w[1].rows && w[0].cols == w[1].cols),
+                "not sorted: {:?} then {:?}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn rectangular_tile_classification() {
+        let t = Tile::new(512, 64);
+        let b = fragment_matrix(512, 32, t, 0, 0);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].kind, BlockKind::RowFull);
+        let b = fragment_matrix(100, 64, t, 0, 0);
+        assert_eq!(b[0].kind, BlockKind::ColFull);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty matrix")]
+    fn zero_dim_rejected() {
+        fragment_matrix(0, 5, T, 0, 0);
+    }
+}

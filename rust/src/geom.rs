@@ -1,0 +1,158 @@
+//! Core geometric types shared across the mapping pipeline.
+//!
+//! Orientation convention (paper Fig. 1/2): the **row** dimension is the
+//! input (word-line) direction — a weight matrix occupies `rows = fan_in`
+//! word lines — and the **column** dimension is the output (bit-line)
+//! direction — `cols = fan_out` bit lines.  A physical tile array
+//! `Tile(n_row, n_col)` hosts blocks whose `rows <= n_row && cols <= n_col`.
+
+use std::fmt;
+
+/// Physical tile array dimensions T(n_row, n_col).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Tile {
+    /// word lines (input / vertical extent of a block)
+    pub n_row: usize,
+    /// bit lines (output / lateral extent of a block)
+    pub n_col: usize,
+}
+
+impl Tile {
+    pub const fn new(n_row: usize, n_col: usize) -> Self {
+        Tile { n_row, n_col }
+    }
+
+    /// Array capacity in cross-points (weights it can store).
+    pub fn capacity(&self) -> usize {
+        self.n_row * self.n_col
+    }
+
+    /// Aspect ratio n_row / n_col as used in the §3.1 sweep.
+    pub fn aspect(&self) -> f64 {
+        self.n_row as f64 / self.n_col as f64
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.n_row == self.n_col
+    }
+
+    pub fn fits(&self, rows: usize, cols: usize) -> bool {
+        rows <= self.n_row && cols <= self.n_col
+    }
+}
+
+impl fmt::Display for Tile {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "T({},{})", self.n_row, self.n_col)
+    }
+}
+
+/// The four fragment kinds of §2.1 (relative to the tile that produced them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BlockKind {
+    /// i) p_in == n_row and p_out == n_col — fills a tile exactly.
+    Full,
+    /// ii) p_in == n_row, p_out < n_col — row (input) dimension full.
+    RowFull,
+    /// iii) p_in < n_row, p_out == n_col — column (output) dimension full.
+    ColFull,
+    /// iv) both dimensions partial — packable with other layers' blocks.
+    Sparse,
+}
+
+/// A fragmented logical block: part of one network layer destined for a
+/// single physical tile. Provenance fields drive pipeline conflict rules
+/// (blocks of different layers must not share word/bit lines, Fig. 2)
+/// and the execution simulator's dataflow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Block {
+    /// word lines occupied (input rows), 1..=n_row
+    pub rows: usize,
+    /// bit lines occupied (output cols), 1..=n_col
+    pub cols: usize,
+    /// index of the source network layer
+    pub layer: usize,
+    /// RAPA replica index (0 for the primary copy)
+    pub replica: usize,
+    /// position of this fragment in the layer's fragmentation grid
+    pub grid: (usize, usize),
+    pub kind: BlockKind,
+}
+
+impl Block {
+    /// Weights stored in this block.
+    pub fn weights(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+/// Placement of one block inside one bin (tile), lower-left corner at
+/// word line `y`, bit line `x` (paper Fig. 5/6 layout coordinates).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    pub block: usize,
+    pub bin: usize,
+    /// bit-line (column) offset
+    pub x: usize,
+    /// word-line (row) offset
+    pub y: usize,
+}
+
+/// Axis-aligned interval arithmetic used by the placement validator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub lo: usize,
+    pub hi: usize, // exclusive
+}
+
+impl Span {
+    pub fn new(lo: usize, len: usize) -> Self {
+        Span { lo, hi: lo + len }
+    }
+
+    pub fn overlaps(&self, other: &Span) -> bool {
+        self.lo < other.hi && other.lo < self.hi
+    }
+
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hi == self.lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_basics() {
+        let t = Tile::new(512, 256);
+        assert_eq!(t.capacity(), 131072);
+        assert_eq!(t.aspect(), 2.0);
+        assert!(!t.is_square());
+        assert!(t.fits(512, 256));
+        assert!(!t.fits(513, 1));
+        assert!(!t.fits(1, 257));
+        assert_eq!(t.to_string(), "T(512,256)");
+    }
+
+    #[test]
+    fn block_weights() {
+        let b = Block { rows: 3, cols: 4, layer: 0, replica: 0, grid: (0, 0), kind: BlockKind::Sparse };
+        assert_eq!(b.weights(), 12);
+    }
+
+    #[test]
+    fn span_overlap() {
+        let a = Span::new(0, 10);
+        assert!(a.overlaps(&Span::new(9, 1)));
+        assert!(!a.overlaps(&Span::new(10, 5)));
+        assert!(Span::new(5, 10).overlaps(&Span::new(0, 6)));
+        assert!(!Span::new(5, 1).overlaps(&Span::new(6, 1)));
+        assert_eq!(Span::new(2, 3).len(), 3);
+        assert!(Span::new(4, 0).is_empty());
+    }
+}

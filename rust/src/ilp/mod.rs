@@ -1,0 +1,122 @@
+//! Binary linear optimization for the packing problems (paper §2.2).
+//!
+//! Three layers:
+//! * [`simplex`] — dense two-phase LP solver (substrate for lp_solve [36]);
+//! * [`model`] + [`bnb`] — the *faithful* Eq. 6/Eq. 7 BILP formulations
+//!   solved by LP-bounded branch & bound (demonstrates the paper's method
+//!   and its blow-up on larger instances);
+//! * [`exact`] — specialized combinatorial branch & bound over the same
+//!   solution spaces, fast enough to prove the demo optima and to tighten
+//!   greedy incumbents at network scale under a node budget.
+//!
+//! [`solve_packing`] is the orchestrating entry point used by the sweep
+//! and the repro harness ("LPS" rows/curves).
+
+pub mod bnb;
+pub mod exact;
+pub mod model;
+pub mod simplex;
+
+use crate::geom::{Block, Tile};
+use crate::pack::Discipline;
+
+pub use exact::{Budget, ExactResult};
+
+/// Solve a packing instance exactly (or best-effort under budget),
+/// warm-started by the greedy engines. This is the "LPS" column/curve
+/// generator for Table 6 and Fig. 7.
+pub fn solve_packing(
+    blocks: &[Block],
+    tile: Tile,
+    discipline: Discipline,
+    budget: Budget,
+) -> ExactResult {
+    exact::solve(blocks, tile, discipline, budget)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::BlockKind;
+    use crate::ilp::bnb::BnbConfig;
+    use crate::ilp::model::{DenseModel, PipelineModel};
+    use crate::pack::placement::validate;
+
+    fn blk(rows: usize, cols: usize, layer: usize) -> Block {
+        Block { rows, cols, layer, replica: 0, grid: (0, 0), kind: BlockKind::Sparse }
+    }
+
+    fn paper_items() -> Vec<Block> {
+        [
+            (257, 256), (257, 256), (257, 256), (129, 256), (129, 128),
+            (129, 128), (129, 128), (129, 128), (65, 128), (148, 64),
+            (65, 64), (65, 64), (65, 64),
+        ]
+        .iter()
+        .enumerate()
+        .map(|(i, &(r, c))| blk(r, c, i))
+        .collect()
+    }
+
+    /// The headline BILP result, via the faithful Eq. 6 formulation:
+    /// dense packing of the 13-item list into T(512,512) uses 2 bins.
+    /// (Debug builds solve the LP relaxations ~20x slower, so they run the
+    /// first 8 items — still cross-validated against the exact search.)
+    #[test]
+    fn eq6_bilp_dense_demo_two_bins() {
+        let tile = Tile::new(512, 512);
+        let blocks: Vec<Block> = if cfg!(debug_assertions) {
+            paper_items().into_iter().take(8).collect()
+        } else {
+            paper_items()
+        };
+        let m = DenseModel::build(&blocks, tile);
+        // the specialized search provides the expected optimum
+        let seed = exact::solve(&blocks, tile, Discipline::Dense, Budget::default());
+        assert!(seed.optimal);
+        if !cfg!(debug_assertions) {
+            assert_eq!(seed.packing.n_bins, 2, "paper Table 3 headline");
+        }
+        let r = bnb::solve(&m.lp, &BnbConfig::default(), None);
+        let (obj, assign) = r.best.expect("no BILP solution found");
+        assert_eq!(obj.round() as usize, seed.packing.n_bins, "Eq.6 optimum");
+        let p = m.decode(&blocks, tile, &assign);
+        validate(&p).unwrap();
+        assert_eq!(p.n_bins, seed.packing.n_bins);
+    }
+
+    /// Eq. 7 formulation on a reduced instance (the full 13-item pipeline
+    /// BILP needs thousands of LP-bounded nodes — the exact::solve path
+    /// covers the full demo; bench_ilp measures the blow-up).
+    #[test]
+    fn eq7_bilp_small_pipeline() {
+        let tile = Tile::new(512, 512);
+        let blocks = vec![
+            blk(257, 256, 0),
+            blk(257, 256, 1),
+            blk(129, 256, 2),
+            blk(129, 128, 3),
+            blk(65, 64, 4),
+        ];
+        let m = PipelineModel::build(&blocks, tile);
+        let r = bnb::solve(&m.lp, &BnbConfig::default(), None);
+        let (obj, assign) = r.best.expect("no BILP solution");
+        let p = m.decode(&blocks, tile, &assign);
+        validate(&p).unwrap();
+        // rows: 257+257+129+129+65 = 837 -> >= 2 bins; cols 960 -> >= 2
+        // and 2 bins are achievable: {item0,item2,item4},{item1,item3}
+        assert_eq!(obj.round() as usize, 2);
+        assert_eq!(p.n_bins, 2);
+        assert!(r.proven);
+    }
+
+    #[test]
+    fn solve_packing_matches_specialized() {
+        let tile = Tile::new(512, 512);
+        let blocks = paper_items();
+        let d = solve_packing(&blocks, tile, Discipline::Dense, Budget::default());
+        let p = solve_packing(&blocks, tile, Discipline::Pipeline, Budget::default());
+        assert_eq!((d.packing.n_bins, p.packing.n_bins), (2, 4));
+        assert!(d.optimal && p.optimal);
+    }
+}

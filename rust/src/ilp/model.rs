@@ -1,0 +1,388 @@
+//! BILP formulations of the packing problems (paper Eq. 6 and Eq. 7).
+//!
+//! These builders produce the *faithful* binary linear programs the paper
+//! solves with lp_solve, over items sorted in the order the formulations
+//! assume (non-increasing width so any later item fits a shelf initialized
+//! by an earlier one).  Variable layout is recorded so solutions can be
+//! decoded back into geometric [`Packing`]s.
+
+use super::simplex::{Cmp, Constraint, Lp};
+use crate::geom::{Block, Placement, Tile};
+use crate::pack::{Discipline, Packing};
+
+/// Dense (Eq. 6) model: shelf packing.
+///
+/// Variables (items pre-sorted by non-increasing cols, then rows):
+/// * `y[j]`    — item j initializes a shelf;
+/// * `q[i]`    — item i's shelf initializes a bin;
+/// * `x[i][j]`, i<j — item j joins the shelf initialized by item i;
+/// * `z[k][i]`, k<i — shelf i goes into the bin initialized by shelf k.
+///
+/// Objective: minimize Σ q (number of bins).
+pub struct DenseModel {
+    pub lp: Lp,
+    pub order: Vec<usize>, // model item -> index into the original blocks
+    n: usize,
+}
+
+/// Pipeline (Eq. 7) model: one staircase per bin.
+///
+/// Variables: `y[j]` bin j used; `x[i][j]`, j <= i — item i in bin j
+/// (symmetry breaking: item i may only use the first i+1 bins).
+pub struct PipelineModel {
+    pub lp: Lp,
+    pub order: Vec<usize>,
+    n: usize,
+}
+
+fn sorted_order(blocks: &[Block]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..blocks.len()).collect();
+    order.sort_by(|&a, &b| {
+        blocks[b]
+            .cols
+            .cmp(&blocks[a].cols)
+            .then(blocks[b].rows.cmp(&blocks[a].rows))
+            .then(a.cmp(&b))
+    });
+    order
+}
+
+impl DenseModel {
+    /// Index helpers over the packed variable vector.
+    fn y(&self, j: usize) -> usize {
+        j
+    }
+    fn q(&self, i: usize) -> usize {
+        self.n + i
+    }
+    /// x[i][j] for i<j, row-major upper triangle.
+    fn x(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < j);
+        2 * self.n + tri_index(self.n, i, j)
+    }
+    fn z(&self, k: usize, i: usize) -> usize {
+        debug_assert!(k < i);
+        2 * self.n + self.n * (self.n - 1) / 2 + tri_index(self.n, k, i)
+    }
+
+    pub fn n_vars(&self) -> usize {
+        2 * self.n + self.n * (self.n - 1)
+    }
+
+    pub fn build(blocks: &[Block], tile: Tile) -> DenseModel {
+        let order = sorted_order(blocks);
+        let n = order.len();
+        let mut m = DenseModel { lp: Lp::default(), order, n };
+        let nv = m.n_vars();
+        let rows = |i: usize| blocks[m.order[i]].rows as f64;
+        let cols = |i: usize| blocks[m.order[i]].cols as f64;
+        let t1 = tile.n_row as f64;
+        let t2 = tile.n_col as f64;
+
+        let mut obj = vec![0.0; nv];
+        for i in 0..n {
+            obj[m.q(i)] = 1.0; // Eq. 6a
+        }
+        let mut cons: Vec<Constraint> = Vec::new();
+
+        // Eq. 6b: every item joins exactly one shelf (its own or earlier).
+        for j in 0..n {
+            let mut terms: Vec<(usize, f64)> = (0..j).map(|i| (m.x(i, j), 1.0)).collect();
+            terms.push((m.y(j), 1.0));
+            cons.push(Constraint { terms, cmp: Cmp::Eq, rhs: 1.0 });
+        }
+        // Eq. 6c: shelf row capacity: Σ_j rows_j x[i][j] <= (T1 - rows_i) y[i].
+        for i in 0..n {
+            let mut terms: Vec<(usize, f64)> =
+                (i + 1..n).map(|j| (m.x(i, j), rows(j))).collect();
+            terms.push((m.y(i), -(t1 - rows(i))));
+            cons.push(Constraint { terms, cmp: Cmp::Le, rhs: 0.0 });
+        }
+        // Eq. 6e: a shelf initializes a bin or joins an earlier shelf's bin.
+        for i in 0..n {
+            let mut terms: Vec<(usize, f64)> = (0..i).map(|k| (m.z(k, i), 1.0)).collect();
+            terms.push((m.q(i), 1.0));
+            terms.push((m.y(i), -1.0));
+            cons.push(Constraint { terms, cmp: Cmp::Eq, rhs: 0.0 });
+        }
+        // Eq. 6d: bin column capacity: Σ_i cols_i z[k][i] <= (T2 - cols_k) q[k].
+        for k in 0..n {
+            let mut terms: Vec<(usize, f64)> =
+                (k + 1..n).map(|i| (m.z(k, i), cols(i))).collect();
+            terms.push((m.q(k), -(t2 - cols(k))));
+            cons.push(Constraint { terms, cmp: Cmp::Le, rhs: 0.0 });
+        }
+        // binary upper bounds
+        for v in 0..nv {
+            cons.push(Constraint { terms: vec![(v, 1.0)], cmp: Cmp::Le, rhs: 1.0 });
+        }
+        m.lp = Lp { n_vars: nv, objective: obj, constraints: cons };
+        m
+    }
+
+    /// Decode a 0/1 assignment into a geometric packing.
+    pub fn decode(&self, blocks: &[Block], tile: Tile, assignment: &[u8]) -> Packing {
+        let n = self.n;
+        // shelf membership
+        let mut shelf_of = vec![usize::MAX; n];
+        for j in 0..n {
+            if assignment[self.y(j)] == 1 {
+                shelf_of[j] = j;
+            } else {
+                for i in 0..j {
+                    if assignment[self.x(i, j)] == 1 {
+                        shelf_of[j] = i;
+                    }
+                }
+            }
+        }
+        // bin membership of shelves
+        let mut bin_of_shelf = vec![usize::MAX; n];
+        let mut bin_ids = Vec::new();
+        for i in 0..n {
+            if assignment[self.y(i)] == 0 {
+                continue;
+            }
+            if assignment[self.q(i)] == 1 {
+                bin_of_shelf[i] = bin_ids.len();
+                bin_ids.push(i);
+            }
+        }
+        for i in 0..n {
+            if assignment[self.y(i)] == 1 && bin_of_shelf[i] == usize::MAX {
+                for k in 0..i {
+                    if assignment[self.z(k, i)] == 1 {
+                        bin_of_shelf[i] = bin_of_shelf[k];
+                    }
+                }
+            }
+        }
+        // geometric layout: shelves side by side (x), members stacked (y)
+        let mut shelf_x = vec![0usize; n];
+        let mut bin_col_used = vec![0usize; bin_ids.len()];
+        for i in 0..n {
+            if assignment[self.y(i)] == 1 {
+                let b = bin_of_shelf[i];
+                shelf_x[i] = bin_col_used[b];
+                bin_col_used[b] += blocks[self.order[i]].cols;
+            }
+        }
+        let mut shelf_fill = vec![0usize; n];
+        let mut placements = Vec::with_capacity(n);
+        for j in 0..n {
+            let sh = shelf_of[j];
+            let b = bin_of_shelf[sh];
+            placements.push(Placement {
+                block: self.order[j],
+                bin: b,
+                x: shelf_x[sh],
+                y: shelf_fill[sh],
+            });
+            shelf_fill[sh] += blocks[self.order[j]].rows;
+        }
+        Packing {
+            tile,
+            discipline: Discipline::Dense,
+            blocks: blocks.to_vec(),
+            placements,
+            n_bins: bin_ids.len(),
+        }
+    }
+}
+
+impl PipelineModel {
+    fn y(&self, j: usize) -> usize {
+        j
+    }
+    /// x[i][j] defined for j <= i (symmetry breaking).
+    fn x(&self, i: usize, j: usize) -> usize {
+        debug_assert!(j <= i);
+        self.n + i * (i + 1) / 2 + j
+    }
+
+    pub fn n_vars(&self) -> usize {
+        self.n + self.n * (self.n + 1) / 2
+    }
+
+    pub fn build(blocks: &[Block], tile: Tile) -> PipelineModel {
+        let order = sorted_order(blocks);
+        let n = order.len();
+        let mut m = PipelineModel { lp: Lp::default(), order, n };
+        let nv = m.n_vars();
+        let rows = |i: usize| blocks[m.order[i]].rows as f64;
+        let cols = |i: usize| blocks[m.order[i]].cols as f64;
+
+        let mut obj = vec![0.0; nv];
+        for j in 0..n {
+            obj[m.y(j)] = 1.0; // Eq. 7a
+        }
+        let mut cons: Vec<Constraint> = Vec::new();
+        // Eq. 7b (per item): Σ_j x[i][j] = 1
+        for i in 0..n {
+            let terms: Vec<(usize, f64)> = (0..=i).map(|j| (m.x(i, j), 1.0)).collect();
+            cons.push(Constraint { terms, cmp: Cmp::Eq, rhs: 1.0 });
+        }
+        // Eq. 7c/7d: bin word-line and bit-line capacity.
+        for j in 0..n {
+            let mut rterms: Vec<(usize, f64)> =
+                (j..n).map(|i| (m.x(i, j), rows(i))).collect();
+            rterms.push((m.y(j), -(tile.n_row as f64)));
+            cons.push(Constraint { terms: rterms, cmp: Cmp::Le, rhs: 0.0 });
+            let mut cterms: Vec<(usize, f64)> =
+                (j..n).map(|i| (m.x(i, j), cols(i))).collect();
+            cterms.push((m.y(j), -(tile.n_col as f64)));
+            cons.push(Constraint { terms: cterms, cmp: Cmp::Le, rhs: 0.0 });
+        }
+        // Eq. 7e is implied by the capacity rows when rows/cols > 0, but we
+        // keep the explicit link for items that are degenerate in one dim.
+        for i in 0..n {
+            for j in 0..=i {
+                cons.push(Constraint {
+                    terms: vec![(m.x(i, j), 1.0), (m.y(j), -1.0)],
+                    cmp: Cmp::Le,
+                    rhs: 0.0,
+                });
+            }
+        }
+        // symmetry: bins open in order
+        for j in 1..n {
+            cons.push(Constraint {
+                terms: vec![(m.y(j), 1.0), (m.y(j - 1), -1.0)],
+                cmp: Cmp::Le,
+                rhs: 0.0,
+            });
+        }
+        for v in 0..nv {
+            cons.push(Constraint { terms: vec![(v, 1.0)], cmp: Cmp::Le, rhs: 1.0 });
+        }
+        m.lp = Lp { n_vars: nv, objective: obj, constraints: cons };
+        m
+    }
+
+    /// Decode a 0/1 assignment into a staircase packing.
+    pub fn decode(&self, blocks: &[Block], tile: Tile, assignment: &[u8]) -> Packing {
+        let n = self.n;
+        let mut bin_of = vec![usize::MAX; n];
+        for i in 0..n {
+            for j in 0..=i {
+                if assignment[self.x(i, j)] == 1 {
+                    bin_of[i] = j;
+                }
+            }
+        }
+        let used: Vec<usize> = {
+            let mut u: Vec<usize> = bin_of.clone();
+            u.sort_unstable();
+            u.dedup();
+            u
+        };
+        let remap = |j: usize| used.iter().position(|&u| u == j).unwrap();
+        let mut rows_used = vec![0usize; used.len()];
+        let mut cols_used = vec![0usize; used.len()];
+        let mut placements = Vec::with_capacity(n);
+        for i in 0..n {
+            let b = remap(bin_of[i]);
+            placements.push(Placement {
+                block: self.order[i],
+                bin: b,
+                x: cols_used[b],
+                y: rows_used[b],
+            });
+            rows_used[b] += blocks[self.order[i]].rows;
+            cols_used[b] += blocks[self.order[i]].cols;
+        }
+        Packing {
+            tile,
+            discipline: Discipline::Pipeline,
+            blocks: blocks.to_vec(),
+            placements,
+            n_bins: used.len(),
+        }
+    }
+}
+
+/// Upper-triangle linear index for (i, j) with i < j over n items.
+fn tri_index(n: usize, i: usize, j: usize) -> usize {
+    debug_assert!(i < j && j < n);
+    i * n - i * (i + 1) / 2 + (j - i - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::BlockKind;
+
+    fn blk(rows: usize, cols: usize, layer: usize) -> Block {
+        Block { rows, cols, layer, replica: 0, grid: (0, 0), kind: BlockKind::Sparse }
+    }
+
+    #[test]
+    fn tri_index_is_bijection() {
+        let n = 7;
+        let mut seen = std::collections::BTreeSet::new();
+        for i in 0..n {
+            for j in i + 1..n {
+                assert!(seen.insert(tri_index(n, i, j)));
+            }
+        }
+        assert_eq!(seen.len(), n * (n - 1) / 2);
+        assert_eq!(*seen.iter().max().unwrap(), n * (n - 1) / 2 - 1);
+    }
+
+    #[test]
+    fn dense_model_var_counts() {
+        let blocks = vec![blk(2, 2, 0), blk(2, 2, 1), blk(2, 2, 2)];
+        let m = DenseModel::build(&blocks, Tile::new(4, 4));
+        assert_eq!(m.n_vars(), 2 * 3 + 3 * 2); // y,q + x,z triangles
+        assert_eq!(m.lp.n_vars, m.n_vars());
+        // 3 Eq6b + 3 Eq6c + 3 Eq6e + 3 Eq6d + bounds
+        assert_eq!(m.lp.constraints.len(), 12 + m.n_vars());
+    }
+
+    #[test]
+    fn pipeline_model_var_counts() {
+        let blocks = vec![blk(2, 2, 0), blk(2, 2, 1), blk(2, 2, 2)];
+        let m = PipelineModel::build(&blocks, Tile::new(4, 4));
+        assert_eq!(m.n_vars(), 3 + 6);
+        let n_link = 6; // x<=y pairs
+        let n_sym = 2;
+        assert_eq!(m.lp.constraints.len(), 3 + 6 + n_link + n_sym + m.n_vars());
+    }
+
+    #[test]
+    fn order_sorted_by_cols_desc() {
+        let blocks = vec![blk(1, 10, 0), blk(1, 30, 1), blk(1, 20, 2)];
+        let m = DenseModel::build(&blocks, Tile::new(64, 64));
+        assert_eq!(m.order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn dense_decode_single_shelf() {
+        // two items stacked in one shelf in one bin
+        let blocks = vec![blk(2, 4, 0), blk(2, 3, 1)];
+        let m = DenseModel::build(&blocks, Tile::new(8, 8));
+        let mut a = vec![0u8; m.n_vars()];
+        a[m.y(0)] = 1;
+        a[m.q(0)] = 1;
+        a[m.x(0, 1)] = 1;
+        let p = m.decode(&blocks, Tile::new(8, 8), &a);
+        assert_eq!(p.n_bins, 1);
+        crate::pack::placement::validate(&p).unwrap();
+        // stacked along rows at the same x
+        assert_eq!(p.placements[0].x, p.placements[1].x);
+        assert_ne!(p.placements[0].y, p.placements[1].y);
+    }
+
+    #[test]
+    fn pipeline_decode_staircase() {
+        let blocks = vec![blk(2, 2, 0), blk(3, 3, 1)];
+        let m = PipelineModel::build(&blocks, Tile::new(8, 8));
+        let mut a = vec![0u8; m.n_vars()];
+        a[m.y(0)] = 1;
+        a[m.x(0, 0)] = 1;
+        a[m.x(1, 0)] = 1;
+        let p = m.decode(&blocks, Tile::new(8, 8), &a);
+        assert_eq!(p.n_bins, 1);
+        crate::pack::placement::validate(&p).unwrap();
+    }
+}

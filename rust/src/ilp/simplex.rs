@@ -1,0 +1,444 @@
+//! Dense two-phase primal simplex for linear programs.
+//!
+//! Substrate for the binary linear optimization of §2.2 (the paper used
+//! lp_solve [36]): solves `min c·x  s.t.  A x {<=,=,>=} b, x >= 0`.
+//! Bland's anti-cycling rule, explicit artificial variables, dense tableau.
+//! Problem sizes here are the LP relaxations of Eq. 6/Eq. 7 at demo scale
+//! (hundreds of rows/columns), for which a dense tableau is the right tool.
+
+/// Constraint comparison operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Eq,
+    Ge,
+}
+
+/// A sparse linear constraint `Σ coef_i · x_i  (cmp)  rhs`.
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    pub terms: Vec<(usize, f64)>,
+    pub cmp: Cmp,
+    pub rhs: f64,
+}
+
+/// LP in natural form: minimize `objective · x` subject to `constraints`,
+/// `x >= 0`.
+#[derive(Debug, Clone, Default)]
+pub struct Lp {
+    pub n_vars: usize,
+    pub objective: Vec<f64>,
+    pub constraints: Vec<Constraint>,
+}
+
+/// Simplex outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpResult {
+    Optimal { objective: f64, x: Vec<f64> },
+    Infeasible,
+    Unbounded,
+    IterationLimit,
+}
+
+const EPS: f64 = 1e-9;
+
+/// Solve the LP with two-phase dense simplex.
+pub fn solve(lp: &Lp) -> LpResult {
+    let m = lp.constraints.len();
+    let n = lp.n_vars;
+    assert_eq!(lp.objective.len(), n, "objective arity");
+
+    // Normalize rows to b >= 0 and count slack/artificial columns.
+    // Column layout: [x (n)] [slack/surplus (n_slack)] [artificial (n_art)]
+    let mut n_slack = 0usize;
+    let mut n_art = 0usize;
+    struct RowPlan {
+        flip: bool,
+        slack: Option<(usize, f64)>, // (col offset within slack, sign)
+        art: Option<usize>,          // col offset within artificials
+    }
+    let mut plans = Vec::with_capacity(m);
+    for c in &lp.constraints {
+        let flip = c.rhs < 0.0;
+        let cmp = if flip {
+            match c.cmp {
+                Cmp::Le => Cmp::Ge,
+                Cmp::Ge => Cmp::Le,
+                Cmp::Eq => Cmp::Eq,
+            }
+        } else {
+            c.cmp
+        };
+        let (slack, art) = match cmp {
+            Cmp::Le => {
+                let s = Some((n_slack, 1.0));
+                n_slack += 1;
+                (s, None)
+            }
+            Cmp::Ge => {
+                let s = Some((n_slack, -1.0));
+                n_slack += 1;
+                let a = Some(n_art);
+                n_art += 1;
+                (s, a)
+            }
+            Cmp::Eq => {
+                let a = Some(n_art);
+                n_art += 1;
+                (None, a)
+            }
+        };
+        plans.push(RowPlan { flip, slack, art });
+    }
+
+    let total = n + n_slack + n_art;
+    // tableau: m rows x (total + 1) cols (last = rhs)
+    let mut t = vec![vec![0.0f64; total + 1]; m];
+    let mut basis = vec![usize::MAX; m];
+    for (i, (c, plan)) in lp.constraints.iter().zip(&plans).enumerate() {
+        let sign = if plan.flip { -1.0 } else { 1.0 };
+        for &(j, v) in &c.terms {
+            assert!(j < n, "constraint references var {j} >= n_vars {n}");
+            t[i][j] += sign * v;
+        }
+        t[i][total] = sign * c.rhs;
+        if let Some((off, s)) = plan.slack {
+            t[i][n + off] = s;
+            if s > 0.0 {
+                basis[i] = n + off;
+            }
+        }
+        if let Some(off) = plan.art {
+            t[i][n + n_slack + off] = 1.0;
+            basis[i] = n + n_slack + off;
+        }
+        debug_assert!(basis[i] != usize::MAX);
+    }
+
+    let max_iters = 50 * (m + total).max(100);
+
+    // ---- Phase 1: minimize sum of artificials ----
+    if n_art > 0 {
+        // objective c[a_k] = 1 for artificials; express in terms of the
+        // starting basis by subtracting each artificial-basic row, which
+        // zeroes the basic artificial columns and accumulates -b in rhs.
+        let mut cost = vec![0.0f64; total + 1];
+        for k in 0..n_art {
+            cost[n + n_slack + k] = 1.0;
+        }
+        for i in 0..m {
+            if basis[i] >= n + n_slack {
+                for j in 0..=total {
+                    cost[j] -= t[i][j];
+                }
+            }
+        }
+        match pivot_loop(&mut t, &mut basis, &mut cost, total, max_iters) {
+            PivotOutcome::Done => {}
+            PivotOutcome::Unbounded => return LpResult::Infeasible, // phase-1 bounded by 0
+            PivotOutcome::Limit => return LpResult::IterationLimit,
+        }
+        if -cost[total] > 1e-7 {
+            return LpResult::Infeasible;
+        }
+        // Drive remaining artificials out of the basis where possible.
+        for i in 0..m {
+            if basis[i] >= n + n_slack {
+                if let Some(j) = (0..n + n_slack).find(|&j| t[i][j].abs() > EPS) {
+                    pivot(&mut t, &mut basis, i, j, total);
+                } // else the row is redundant (all-zero): harmless
+            }
+        }
+    }
+
+    // ---- Phase 2: minimize the real objective ----
+    let mut cost = vec![0.0f64; total + 1];
+    for j in 0..n {
+        cost[j] = lp.objective[j];
+    }
+    // express objective in terms of non-basic variables
+    for i in 0..m {
+        let bj = basis[i];
+        if bj < total && cost[bj].abs() > EPS {
+            let factor = cost[bj];
+            for j in 0..=total {
+                cost[j] -= factor * t[i][j];
+            }
+        }
+    }
+    // forbid artificials from re-entering
+    let art_start = n + n_slack;
+
+    let outcome = pivot_loop_restricted(&mut t, &mut basis, &mut cost, total, art_start, max_iters);
+    match outcome {
+        PivotOutcome::Unbounded => return LpResult::Unbounded,
+        PivotOutcome::Limit => return LpResult::IterationLimit,
+        PivotOutcome::Done => {}
+    }
+
+    let mut x = vec![0.0f64; n];
+    for i in 0..m {
+        if basis[i] < n {
+            x[basis[i]] = t[i][total];
+        }
+    }
+    let objective = lp.objective.iter().zip(&x).map(|(c, v)| c * v).sum();
+    LpResult::Optimal { objective, x }
+}
+
+enum PivotOutcome {
+    Done,
+    Unbounded,
+    Limit,
+}
+
+fn pivot_loop(
+    t: &mut [Vec<f64>],
+    basis: &mut [usize],
+    cost: &mut [f64],
+    total: usize,
+    max_iters: usize,
+) -> PivotOutcome {
+    pivot_loop_restricted(t, basis, cost, total, total, max_iters)
+}
+
+/// Simplex pivoting; columns >= `col_limit` are excluded from entering.
+fn pivot_loop_restricted(
+    t: &mut [Vec<f64>],
+    basis: &mut [usize],
+    cost: &mut [f64],
+    total: usize,
+    col_limit: usize,
+    max_iters: usize,
+) -> PivotOutcome {
+    let m = t.len();
+    for iter in 0..max_iters {
+        // entering column: Dantzig rule, Bland fallback after stalling
+        let bland = iter > max_iters / 2;
+        let mut enter = usize::MAX;
+        if bland {
+            for j in 0..col_limit {
+                if cost[j] < -EPS {
+                    enter = j;
+                    break;
+                }
+            }
+        } else {
+            let mut best = -EPS;
+            for j in 0..col_limit {
+                if cost[j] < best {
+                    best = cost[j];
+                    enter = j;
+                }
+            }
+        }
+        if enter == usize::MAX {
+            return PivotOutcome::Done;
+        }
+        // leaving row: min ratio; Bland tie-break on basis index
+        let mut leave = usize::MAX;
+        let mut best_ratio = f64::INFINITY;
+        for i in 0..m {
+            if t[i][enter] > EPS {
+                let ratio = t[i][total] / t[i][enter];
+                if ratio < best_ratio - EPS
+                    || (ratio < best_ratio + EPS
+                        && leave != usize::MAX
+                        && basis[i] < basis[leave])
+                {
+                    best_ratio = ratio;
+                    leave = i;
+                }
+            }
+        }
+        if leave == usize::MAX {
+            return PivotOutcome::Unbounded;
+        }
+        pivot_with_cost(t, basis, cost, leave, enter, total);
+    }
+    PivotOutcome::Limit
+}
+
+fn pivot(t: &mut [Vec<f64>], basis: &mut [usize], row: usize, col: usize, total: usize) {
+    let piv = t[row][col];
+    debug_assert!(piv.abs() > EPS);
+    for j in 0..=total {
+        t[row][j] /= piv;
+    }
+    for i in 0..t.len() {
+        if i != row && t[i][col].abs() > EPS {
+            let f = t[i][col];
+            for j in 0..=total {
+                t[i][j] -= f * t[row][j];
+            }
+        }
+    }
+    basis[row] = col;
+}
+
+fn pivot_with_cost(
+    t: &mut [Vec<f64>],
+    basis: &mut [usize],
+    cost: &mut [f64],
+    row: usize,
+    col: usize,
+    total: usize,
+) {
+    pivot(t, basis, row, col, total);
+    if cost[col].abs() > EPS {
+        let f = cost[col];
+        for j in 0..=total {
+            cost[j] -= f * t[row][j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lp(n: usize, obj: &[f64], cons: &[(&[(usize, f64)], Cmp, f64)]) -> Lp {
+        Lp {
+            n_vars: n,
+            objective: obj.to_vec(),
+            constraints: cons
+                .iter()
+                .map(|(t, c, r)| Constraint { terms: t.to_vec(), cmp: *c, rhs: *r })
+                .collect(),
+        }
+    }
+
+    fn assert_optimal(r: LpResult, want_obj: f64, want_x: Option<&[f64]>) {
+        match r {
+            LpResult::Optimal { objective, x } => {
+                assert!((objective - want_obj).abs() < 1e-6, "obj {objective} want {want_obj}");
+                if let Some(w) = want_x {
+                    for (i, (a, b)) in x.iter().zip(w).enumerate() {
+                        assert!((a - b).abs() < 1e-6, "x[{i}] {a} want {b}");
+                    }
+                }
+            }
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn textbook_max_as_min() {
+        // max 3x + 5y s.t. x<=4, 2y<=12, 3x+2y<=18  => opt 36 at (2,6)
+        let r = solve(&lp(
+            2,
+            &[-3.0, -5.0],
+            &[
+                (&[(0, 1.0)], Cmp::Le, 4.0),
+                (&[(1, 2.0)], Cmp::Le, 12.0),
+                (&[(0, 3.0), (1, 2.0)], Cmp::Le, 18.0),
+            ],
+        ));
+        assert_optimal(r, -36.0, Some(&[2.0, 6.0]));
+    }
+
+    #[test]
+    fn equality_constraints() {
+        // min x + y s.t. x + y = 5, x - y = 1 => (3,2), obj 5
+        let r = solve(&lp(
+            2,
+            &[1.0, 1.0],
+            &[
+                (&[(0, 1.0), (1, 1.0)], Cmp::Eq, 5.0),
+                (&[(0, 1.0), (1, -1.0)], Cmp::Eq, 1.0),
+            ],
+        ));
+        assert_optimal(r, 5.0, Some(&[3.0, 2.0]));
+    }
+
+    #[test]
+    fn ge_constraints() {
+        // min 2x + 3y s.t. x + y >= 4, x >= 1 => (4,0) obj 8
+        let r = solve(&lp(
+            2,
+            &[2.0, 3.0],
+            &[
+                (&[(0, 1.0), (1, 1.0)], Cmp::Ge, 4.0),
+                (&[(0, 1.0)], Cmp::Ge, 1.0),
+            ],
+        ));
+        assert_optimal(r, 8.0, Some(&[4.0, 0.0]));
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let r = solve(&lp(
+            1,
+            &[1.0],
+            &[
+                (&[(0, 1.0)], Cmp::Le, 1.0),
+                (&[(0, 1.0)], Cmp::Ge, 2.0),
+            ],
+        ));
+        assert_eq!(r, LpResult::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        // min -x s.t. x >= 0 (no upper bound)
+        let r = solve(&lp(1, &[-1.0], &[(&[(0, 1.0)], Cmp::Ge, 0.0)]));
+        assert_eq!(r, LpResult::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalized() {
+        // min x s.t. -x <= -3  (i.e. x >= 3)
+        let r = solve(&lp(1, &[1.0], &[(&[(0, -1.0)], Cmp::Le, -3.0)]));
+        assert_optimal(r, 3.0, Some(&[3.0]));
+    }
+
+    #[test]
+    fn degenerate_lp_terminates() {
+        // several redundant constraints through the same vertex
+        let r = solve(&lp(
+            2,
+            &[-1.0, -1.0],
+            &[
+                (&[(0, 1.0), (1, 1.0)], Cmp::Le, 2.0),
+                (&[(0, 2.0), (1, 2.0)], Cmp::Le, 4.0),
+                (&[(0, 1.0)], Cmp::Le, 2.0),
+                (&[(1, 1.0)], Cmp::Le, 2.0),
+            ],
+        ));
+        assert_optimal(r, -2.0, None);
+    }
+
+    #[test]
+    fn bin_packing_lp_relaxation_fractional() {
+        // 3 unit items, bins of capacity 2: LP uses 1.5 bins.
+        // vars: y0..y2 bin-open, x[i][j] item i in bin j (9 vars, offset 3)
+        let xv = |i: usize, j: usize| 3 + i * 3 + j;
+        let mut cons: Vec<Constraint> = Vec::new();
+        for i in 0..3 {
+            cons.push(Constraint {
+                terms: (0..3).map(|j| (xv(i, j), 1.0)).collect(),
+                cmp: Cmp::Eq,
+                rhs: 1.0,
+            });
+        }
+        for j in 0..3 {
+            let mut terms: Vec<(usize, f64)> = (0..3).map(|i| (xv(i, j), 1.0)).collect();
+            terms.push((j, -2.0));
+            cons.push(Constraint { terms, cmp: Cmp::Le, rhs: 0.0 });
+        }
+        for j in 0..3 {
+            cons.push(Constraint { terms: vec![(j, 1.0)], cmp: Cmp::Le, rhs: 1.0 });
+        }
+        let mut obj = vec![0.0; 12];
+        obj[0] = 1.0;
+        obj[1] = 1.0;
+        obj[2] = 1.0;
+        let r = solve(&Lp { n_vars: 12, objective: obj, constraints: cons });
+        match r {
+            LpResult::Optimal { objective, .. } => {
+                assert!((objective - 1.5).abs() < 1e-6, "obj {objective}")
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

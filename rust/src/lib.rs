@@ -1,0 +1,41 @@
+//! # xbarmap
+//!
+//! Reproduction of *"A Simple Packing Algorithm for Optimized Mapping of
+//! Artificial Neural Networks onto Non-Volatile Memory Cross-Bar Arrays"*
+//! (W. Haensch, 2024).
+//!
+//! The library maps the layers of an artificial neural network onto a set of
+//! fixed-capacity physical cross-bar array tiles, treating the mapping as a
+//! two-dimensional bin-packing problem, and searches over tile array
+//! dimensions (capacity and aspect ratio) for the configuration that
+//! minimises total tile area under a chosen design objective:
+//!
+//! * **dense packing** — maximum weight-storage density, shared input/output
+//!   lines allowed (no pipelining),
+//! * **pipeline packing** — non-overlapping input/output channels so that all
+//!   network layers can operate simultaneously,
+//! * **RAPA** — replicated arrays with permuted assignment for load-balanced
+//!   pipelined CNN throughput.
+//!
+//! Three packing engines are provided: the paper's *simple packing
+//! algorithm* ([`pack::simple`]), classical first-fit-decreasing baselines
+//! ([`pack::ffd`]), and an exact branch-and-bound **binary linear
+//! optimization** solver ([`ilp`]) implementing the paper's Eq. 6 (dense)
+//! and Eq. 7 (pipeline) formulations (substituting the paper's lp_solve).
+//!
+//! The numerical hot path (analog tile matrix-vector product with DAC/ADC
+//! quantisation) is an AOT-compiled JAX/Pallas kernel executed from Rust
+//! through the PJRT C API ([`runtime`]); Python never runs at request time.
+pub mod geom;
+pub mod nets;
+pub mod frag;
+pub mod pack;
+pub mod ilp;
+pub mod area;
+pub mod perf;
+pub mod opt;
+pub mod sim;
+pub mod runtime;
+pub mod coordinator;
+pub mod report;
+pub mod util;

@@ -1,0 +1,274 @@
+//! xbarmap CLI — leader entrypoint.
+//!
+//! Subcommands:
+//! * `repro`  — regenerate paper tables/figures into an output directory;
+//! * `sweep`  — run the §3.1 optimization sweep for a zoo network;
+//! * `pack`   — pack one network onto one tile dimension, print placement;
+//! * `info`   — show a network's layers, WM shapes and reuse factors;
+//! * `serve`  — end-to-end serving through the AOT crossbar artifact.
+
+use anyhow::{anyhow, Result};
+use std::path::Path;
+use xbarmap::area::AreaModel;
+use xbarmap::coordinator::{digits, Coordinator, CoordinatorConfig};
+use xbarmap::frag;
+use xbarmap::geom::Tile;
+use xbarmap::ilp;
+use xbarmap::nets::zoo;
+use xbarmap::opt::{self, Engine, SweepConfig};
+use xbarmap::pack::{self, Discipline};
+use xbarmap::report;
+use xbarmap::util::cli::{usage, Args, OptSpec};
+use xbarmap::util::prng::Rng;
+use xbarmap::util::table::{sig3, Table};
+
+const SUBCOMMANDS: &[(&str, &str)] = &[
+    ("repro", "regenerate paper tables/figures (table1 table3 table5 fig4 fig7 fig8 fig9 table6 fig10 latency | all)"),
+    ("sweep", "run the §3.1 tile-dimension optimization sweep"),
+    ("pack", "pack a network onto one tile dimension"),
+    ("info", "describe a zoo network"),
+    ("serve", "serve synthetic digit requests through the AOT crossbar model"),
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print!("{}", usage("xbarmap", "ANN-to-crossbar mapping optimizer", SUBCOMMANDS, &[]));
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "repro" => cmd_repro(rest),
+        "sweep" => cmd_sweep(rest),
+        "pack" => cmd_pack(rest),
+        "info" => cmd_info(rest),
+        "serve" => cmd_serve(rest),
+        "--help" | "help" | "-h" => {
+            print!("{}", usage("xbarmap", "ANN-to-crossbar mapping optimizer", SUBCOMMANDS, &[]));
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}' — try `xbarmap help`")),
+    }
+}
+
+fn parse_discipline(s: &str) -> Result<Discipline> {
+    match s {
+        "dense" => Ok(Discipline::Dense),
+        "pipeline" => Ok(Discipline::Pipeline),
+        _ => Err(anyhow!("--discipline must be dense|pipeline, got {s}")),
+    }
+}
+
+fn parse_engine(s: &str, nodes: u64) -> Result<Engine> {
+    match s {
+        "simple" => Ok(Engine::Simple),
+        "ffd" => Ok(Engine::Ffd),
+        "lps" | "ilp" => Ok(Engine::Ilp { max_nodes: nodes }),
+        _ => Err(anyhow!("--engine must be simple|ffd|lps, got {s}")),
+    }
+}
+
+fn net_by_name(name: &str) -> Result<xbarmap::nets::Network> {
+    zoo::by_name(name).ok_or_else(|| {
+        anyhow!("unknown network '{name}' (try lenet|alexnet|resnet9|resnet18|resnet34|resnet50|bert|digits-mlp)")
+    })
+}
+
+fn cmd_repro(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "out", help: "output directory", value: Some("DIR"), default: Some("results") },
+        OptSpec { name: "fast", help: "smaller sweeps/budgets (CI)", value: None, default: None },
+    ];
+    let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
+    let out = a.get("out").unwrap().to_string();
+    let written = report::run(&a.positional, Path::new(&out), a.flag("fast"))?;
+    println!("\nwrote {} experiment(s) to {out}/", written.len());
+    Ok(())
+}
+
+fn cmd_sweep(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "net", help: "zoo network", value: Some("NAME"), default: Some("resnet18") },
+        OptSpec { name: "discipline", help: "dense|pipeline", value: Some("D"), default: Some("dense") },
+        OptSpec { name: "engine", help: "simple|ffd|lps", value: Some("E"), default: Some("simple") },
+        OptSpec { name: "aspects", help: "max aspect ratio (1..=8)", value: Some("N"), default: Some("8") },
+        OptSpec { name: "rapa", help: "balanced RAPA replication n0", value: Some("N"), default: None },
+        OptSpec { name: "ilp-nodes", help: "branch&bound node budget", value: Some("N"), default: Some("2000000") },
+    ];
+    let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
+    let net = net_by_name(a.req("net").map_err(|e| anyhow!(e))?)?;
+    let discipline = parse_discipline(a.req("discipline").map_err(|e| anyhow!(e))?)?;
+    let nodes = a.req_usize("ilp-nodes").map_err(|e| anyhow!(e))? as u64;
+    let engine = parse_engine(a.req("engine").map_err(|e| anyhow!(e))?, nodes)?;
+    let max_aspect = a.req_usize("aspects").map_err(|e| anyhow!(e))?.clamp(1, 8);
+    let mut cfg = SweepConfig {
+        discipline,
+        engine,
+        aspects: (1..=max_aspect).collect(),
+        ..SweepConfig::paper_default(discipline)
+    };
+    if let Some(n0) = a.get_usize("rapa").map_err(|e| anyhow!(e))? {
+        cfg.replication = Some(xbarmap::perf::rapa::plan_balanced(&net, n0));
+    }
+    let pts = opt::sweep(&net, &cfg);
+    let mut t = Table::new(&["tile", "aspect", "blocks", "tiles", "tile eff", "pack eff", "area mm2"]);
+    for p in &pts {
+        t.row(&[
+            p.tile.to_string(),
+            p.aspect.to_string(),
+            p.n_blocks.to_string(),
+            p.n_tiles.to_string(),
+            sig3(p.tile_eff),
+            sig3(p.packing_eff),
+            sig3(p.total_area_mm2),
+        ]);
+    }
+    println!("{}", t.render());
+    for p in opt::best_per_aspect(&pts) {
+        println!("best @aspect {}: {} tiles={} area={} mm2", p.aspect, p.tile, p.n_tiles, sig3(p.total_area_mm2));
+    }
+    let best = opt::optimum(&pts).unwrap();
+    println!(
+        "\nOPTIMUM {} ({}): {} tiles, {} mm2, tile_eff {}",
+        best.tile,
+        cfg.engine,
+        best.n_tiles,
+        sig3(best.total_area_mm2),
+        sig3(best.tile_eff)
+    );
+    Ok(())
+}
+
+fn cmd_pack(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "net", help: "zoo network", value: Some("NAME"), default: Some("lenet") },
+        OptSpec { name: "rows", help: "tile word lines", value: Some("N"), default: Some("256") },
+        OptSpec { name: "cols", help: "tile bit lines", value: Some("N"), default: Some("256") },
+        OptSpec { name: "discipline", help: "dense|pipeline", value: Some("D"), default: Some("dense") },
+        OptSpec { name: "engine", help: "simple|ffd|lps", value: Some("E"), default: Some("simple") },
+        OptSpec { name: "ilp-nodes", help: "branch&bound node budget", value: Some("N"), default: Some("2000000") },
+    ];
+    let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
+    let net = net_by_name(a.req("net").map_err(|e| anyhow!(e))?)?;
+    let tile = Tile::new(
+        a.req_usize("rows").map_err(|e| anyhow!(e))?,
+        a.req_usize("cols").map_err(|e| anyhow!(e))?,
+    );
+    let discipline = parse_discipline(a.req("discipline").map_err(|e| anyhow!(e))?)?;
+    let nodes = a.req_usize("ilp-nodes").map_err(|e| anyhow!(e))? as u64;
+    let engine = parse_engine(a.req("engine").map_err(|e| anyhow!(e))?, nodes)?;
+    let blocks = frag::fragment_network(&net, tile);
+    let packing = match engine {
+        Engine::Simple => pack::simple::pack(&blocks, tile, discipline),
+        Engine::Ffd => pack::ffd::pack(&blocks, tile, discipline),
+        Engine::Ilp { max_nodes } => {
+            let r = ilp::solve_packing(
+                &blocks,
+                tile,
+                discipline,
+                ilp::Budget { max_nodes, ..Default::default() },
+            );
+            println!(
+                "LPS: lower bound {} | optimal {} | nodes {}",
+                r.lower_bound, r.optimal, r.nodes
+            );
+            r.packing
+        }
+    };
+    pack::placement::validate(&packing).map_err(|e| anyhow!("invalid packing: {e}"))?;
+    let area = AreaModel::paper_default();
+    println!(
+        "{} on {} [{discipline}/{engine}]: {} blocks -> {} tiles | packing eff {} | tile eff {} | total {} mm2",
+        net.name,
+        tile,
+        blocks.len(),
+        packing.n_bins,
+        sig3(packing.packing_efficiency()),
+        sig3(area.efficiency(tile)),
+        sig3(area.total_area_mm2(packing.n_bins, tile)),
+    );
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let specs = [OptSpec { name: "net", help: "zoo network", value: Some("NAME"), default: Some("resnet18") }];
+    let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
+    let net = net_by_name(a.req("net").map_err(|e| anyhow!(e))?)?;
+    println!("{} — {} ({} layers, {} weights)", net.name, net.input_desc, net.n_layers(), net.total_weights());
+    let mut t = Table::new(&["layer", "WM rows", "WM cols", "weights", "N_reuse"]);
+    for l in &net.layers {
+        let (r, c) = l.matrix_shape();
+        t.row(&[
+            l.name.clone(),
+            r.to_string(),
+            c.to_string(),
+            l.weights().to_string(),
+            l.reuse().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "requests", help: "number of synthetic requests", value: Some("N"), default: Some("2048") },
+        OptSpec { name: "artifacts", help: "artifacts directory", value: Some("DIR"), default: None },
+        OptSpec { name: "seed", help: "workload PRNG seed", value: Some("N"), default: Some("7") },
+        OptSpec { name: "fp32", help: "serve the fp32 oracle instead of the crossbar model", value: None, default: None },
+    ];
+    let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
+    let n = a.req_usize("requests").map_err(|e| anyhow!(e))?;
+    let seed = a.req_usize("seed").map_err(|e| anyhow!(e))? as u64;
+    let cfg = CoordinatorConfig {
+        artifacts: a.get("artifacts").map(|s| s.to_string()),
+        crossbar: !a.flag("fp32"),
+        ..Default::default()
+    };
+    let coordinator = Coordinator::new(&cfg)?;
+    println!(
+        "deployment: DigitsMLP on {} -> {} tiles, {} mm2, modeled latency {:.1} ns",
+        coordinator.tile,
+        coordinator.mapping.n_tiles(),
+        sig3(coordinator.total_area_mm2),
+        coordinator.modeled_latency_s * 1e9,
+    );
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    let producer = std::thread::spawn(move || {
+        let mut rng = Rng::new(seed);
+        for s in digits::synth_digits(&mut rng, n, 0.35) {
+            if tx.send(s).is_err() {
+                break;
+            }
+        }
+    });
+    let stats = coordinator.serve(rx)?;
+    producer.join().map_err(|_| anyhow!("producer thread panicked"))?;
+
+    println!(
+        "served {} requests in {} batches over {:.3}s -> {:.0} req/s | batch p50 {:.3} ms p95 {:.3} ms | accuracy {:.4}",
+        stats.requests,
+        stats.batches,
+        stats.wall_s,
+        stats.throughput_per_s,
+        stats.batch_p50_s * 1e3,
+        stats.batch_p95_s * 1e3,
+        stats.accuracy,
+    );
+    if let Some(build_acc) = coordinator.build_time_accuracy() {
+        println!("build-time crossbar accuracy (meta.json): {build_acc:.4}");
+    }
+    Ok(())
+}

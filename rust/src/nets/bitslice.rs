@@ -1,0 +1,107 @@
+//! Bit slicing (paper §1/§2): NVM cells with few conductance levels store a
+//! `weight_bits`-bit weight across `ceil(weight_bits / bits_per_cell)`
+//! physical columns ("slices"), each holding one digit of the weight in
+//! radix 2^bits_per_cell; the chip combines slice outputs digitally with
+//! shift-and-add. As the paper notes, "this multiplies the number of
+//! physical tiles per network layer and will impact the chip area
+//! accordingly" — this module quantifies exactly that impact so the §3.1
+//! optimizer can sweep it (the `ablation` repro experiment).
+
+use super::Network;
+
+/// Bit-slicing configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BitSlice {
+    /// logical weight precision required by the model
+    pub weight_bits: u32,
+    /// conductance levels one physical cell can hold, in bits
+    pub bits_per_cell: u32,
+}
+
+impl BitSlice {
+    pub fn new(weight_bits: u32, bits_per_cell: u32) -> BitSlice {
+        assert!(weight_bits >= 1 && bits_per_cell >= 1, "bits must be positive");
+        BitSlice { weight_bits, bits_per_cell }
+    }
+
+    /// Physical column copies per logical weight column.
+    pub fn slices(&self) -> usize {
+        self.weight_bits.div_ceil(self.bits_per_cell) as usize
+    }
+
+    /// No slicing needed (analog cell holds the full precision).
+    pub fn none() -> BitSlice {
+        BitSlice { weight_bits: 8, bits_per_cell: 8 }
+    }
+}
+
+/// Logical WM shapes after slicing: each layer's column (bit-line) count is
+/// multiplied by the slice count — every output neuron owns one column per
+/// weight digit. Row (word-line) structure is unchanged: all slices see the
+/// same activations.
+pub fn sliced_shapes(net: &Network, cfg: BitSlice) -> Vec<(usize, usize)> {
+    let s = cfg.slices();
+    net.matrix_shapes()
+        .into_iter()
+        .map(|(rows, cols)| (rows, cols * s))
+        .collect()
+}
+
+/// Weight-cell inflation factor (equals the slice count).
+pub fn cell_inflation(cfg: BitSlice) -> f64 {
+    cfg.slices() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::zoo;
+
+    #[test]
+    fn slice_counts() {
+        assert_eq!(BitSlice::new(8, 8).slices(), 1);
+        assert_eq!(BitSlice::new(8, 4).slices(), 2);
+        assert_eq!(BitSlice::new(8, 3).slices(), 3);
+        assert_eq!(BitSlice::new(8, 2).slices(), 4);
+        assert_eq!(BitSlice::new(8, 1).slices(), 8);
+        assert_eq!(BitSlice::none().slices(), 1);
+    }
+
+    #[test]
+    fn shapes_scale_columns_only() {
+        let net = zoo::lenet();
+        let base = net.matrix_shapes();
+        let sliced = sliced_shapes(&net, BitSlice::new(8, 2));
+        for ((r0, c0), (r1, c1)) in base.iter().zip(&sliced) {
+            assert_eq!(r0, r1);
+            assert_eq!(c0 * 4, *c1);
+        }
+    }
+
+    #[test]
+    fn slicing_multiplies_tiles() {
+        // the paper's statement, measured end to end
+        use crate::frag;
+        use crate::geom::Tile;
+        use crate::pack::{self, Discipline};
+        let net = zoo::lenet();
+        let tile = Tile::new(256, 256);
+        let count = |cfg: BitSlice| {
+            let blocks: Vec<_> = sliced_shapes(&net, cfg)
+                .into_iter()
+                .enumerate()
+                .flat_map(|(li, (r, c))| frag::fragment_matrix(r, c, tile, li, 0))
+                .collect();
+            pack::ffd::pack(&blocks, tile, Discipline::Dense).n_bins
+        };
+        let t1 = count(BitSlice::new(8, 8));
+        let t4 = count(BitSlice::new(8, 2));
+        assert!(t4 >= 3 * t1, "4 slices should ~4x the tiles: {t1} -> {t4}");
+    }
+
+    #[test]
+    #[should_panic(expected = "bits must be positive")]
+    fn zero_bits_rejected() {
+        BitSlice::new(0, 1);
+    }
+}

@@ -1,0 +1,233 @@
+//! ANN layer descriptions and their crossbar weight-matrix shapes.
+//!
+//! A network layer maps to a logical weight matrix `L_i(m_inp, m_out)`:
+//! * fully connected: `m_inp = fan_in (+1 bias row)`, `m_out = fan_out`;
+//! * convolution: via the RAPA im2col construction (paper Fig. 3) the
+//!   filter bank becomes `WM` with `m_inp = k²·d_in (+1)`, `m_out = d_out`,
+//!   and the layer's **weight reuse factor** `N_reuse` is the number of
+//!   input-matrix columns `((n_in − k + 2p)/s + 1)²` (Table 1).
+//!
+//! The zoo ([`zoo`]) provides the paper's workloads with standard geometry.
+
+pub mod bitslice;
+pub mod zoo;
+
+use std::fmt;
+
+/// Layer kind with the geometry needed to derive WM shape and reuse.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Fully connected fan_in -> fan_out.
+    Fc { fan_in: usize, fan_out: usize },
+    /// 2-D convolution on square inputs.
+    Conv {
+        in_ch: usize,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+        /// square spatial input size n_in
+        in_size: usize,
+    },
+}
+
+/// One network layer: kind + bias convention + optional reuse override
+/// (used for sequence models where every FC is reused per token).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub bias: bool,
+    pub reuse_override: Option<usize>,
+}
+
+impl Layer {
+    pub fn fc(name: &str, fan_in: usize, fan_out: usize) -> Self {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Fc { fan_in, fan_out },
+            bias: true,
+            reuse_override: None,
+        }
+    }
+
+    pub fn conv(
+        name: &str,
+        in_ch: usize,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+        in_size: usize,
+    ) -> Self {
+        Layer {
+            name: name.into(),
+            kind: LayerKind::Conv { in_ch, out_ch, kernel, stride, padding, in_size },
+            bias: true,
+            reuse_override: None,
+        }
+    }
+
+    /// FC layer reused `n` times per inference (e.g. once per token).
+    pub fn fc_reused(name: &str, fan_in: usize, fan_out: usize, n: usize) -> Self {
+        let mut l = Layer::fc(name, fan_in, fan_out);
+        l.reuse_override = Some(n);
+        l
+    }
+
+    /// Spatial output size of a conv layer (square).
+    pub fn out_size(&self) -> Option<usize> {
+        match self.kind {
+            LayerKind::Conv { kernel, stride, padding, in_size, .. } => {
+                assert!(in_size + 2 * padding >= kernel, "conv geometry: {self:?}");
+                Some((in_size + 2 * padding - kernel) / stride + 1)
+            }
+            LayerKind::Fc { .. } => None,
+        }
+    }
+
+    /// Logical weight-matrix shape (rows = inputs(+bias), cols = outputs).
+    pub fn matrix_shape(&self) -> (usize, usize) {
+        let b = self.bias as usize;
+        match self.kind {
+            LayerKind::Fc { fan_in, fan_out } => (fan_in + b, fan_out),
+            LayerKind::Conv { in_ch, out_ch, kernel, .. } => (kernel * kernel * in_ch + b, out_ch),
+        }
+    }
+
+    /// Weight reuse factor N_reuse (Table 1): IM columns for conv, 1 for FC
+    /// unless overridden.
+    pub fn reuse(&self) -> usize {
+        if let Some(r) = self.reuse_override {
+            return r;
+        }
+        match self.kind {
+            LayerKind::Fc { .. } => 1,
+            LayerKind::Conv { .. } => {
+                let o = self.out_size().unwrap();
+                o * o
+            }
+        }
+    }
+
+    /// Number of weight parameters (incl. bias if present).
+    pub fn weights(&self) -> usize {
+        let (r, c) = self.matrix_shape();
+        r * c
+    }
+
+    /// MACs per inference = weights x reuse.
+    pub fn macs(&self) -> usize {
+        self.weights() * self.reuse()
+    }
+}
+
+impl fmt::Display for Layer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let (r, c) = self.matrix_shape();
+        write!(f, "{} WM({r}x{c}) reuse={}", self.name, self.reuse())
+    }
+}
+
+/// A network: ordered layers plus workload metadata.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Network {
+    pub name: String,
+    /// dataset / input description (shape source only, see DESIGN.md)
+    pub input_desc: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn new(name: &str, input_desc: &str, layers: Vec<Layer>) -> Self {
+        Network { name: name.into(), input_desc: input_desc.into(), layers }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.layers.iter().map(Layer::weights).sum()
+    }
+
+    pub fn total_macs(&self) -> usize {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    pub fn max_reuse(&self) -> usize {
+        self.layers.iter().map(Layer::reuse).max().unwrap_or(1)
+    }
+
+    /// Logical WM shapes in layer order.
+    pub fn matrix_shapes(&self) -> Vec<(usize, usize)> {
+        self.layers.iter().map(Layer::matrix_shape).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fc_shape_includes_bias_row() {
+        let l = Layer::fc("fc", 784, 256);
+        assert_eq!(l.matrix_shape(), (785, 256));
+        assert_eq!(l.reuse(), 1);
+        assert_eq!(l.weights(), 785 * 256);
+    }
+
+    #[test]
+    fn conv_im2col_shape() {
+        // paper Fig. 3: WM is d_out x (k^2 d_in (+1)); our (rows, cols)
+        // convention stores the transpose: rows = k^2 d_in + 1.
+        let l = Layer::conv("c", 3, 64, 7, 2, 3, 224);
+        assert_eq!(l.matrix_shape(), (7 * 7 * 3 + 1, 64));
+    }
+
+    #[test]
+    fn conv_out_size_and_reuse_table1() {
+        // Table 1 geometries
+        let resnet50 = Layer::conv("c1", 3, 64, 7, 2, 3, 224);
+        assert_eq!(resnet50.out_size(), Some(112));
+        assert_eq!(resnet50.reuse(), 12544);
+        let alexnet = Layer::conv("c1", 3, 64, 11, 4, 2, 224);
+        assert_eq!(alexnet.out_size(), Some(55));
+        assert_eq!(alexnet.reuse(), 3025);
+        let lenet = Layer::conv("c1", 1, 6, 5, 1, 2, 28);
+        assert_eq!(lenet.reuse(), 784);
+    }
+
+    #[test]
+    fn reuse_override_for_sequence_models() {
+        let l = Layer::fc_reused("q", 768, 768, 64);
+        assert_eq!(l.reuse(), 64);
+        assert_eq!(l.matrix_shape(), (769, 768));
+    }
+
+    #[test]
+    fn macs_are_weights_times_reuse() {
+        let l = Layer::conv("c", 3, 8, 3, 1, 1, 8);
+        assert_eq!(l.reuse(), 64);
+        assert_eq!(l.macs(), l.weights() * 64);
+    }
+
+    #[test]
+    fn network_aggregates() {
+        let n = Network::new(
+            "tiny",
+            "test",
+            vec![Layer::fc("a", 10, 20), Layer::conv("b", 1, 4, 3, 1, 1, 6)],
+        );
+        assert_eq!(n.n_layers(), 2);
+        assert_eq!(n.total_weights(), 11 * 20 + 10 * 4);
+        assert_eq!(n.max_reuse(), 36);
+        assert_eq!(n.matrix_shapes(), vec![(11, 20), (10, 4)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "conv geometry")]
+    fn bad_conv_geometry_panics() {
+        Layer::conv("bad", 1, 1, 9, 1, 0, 4).out_size();
+    }
+}

@@ -1,0 +1,294 @@
+//! The paper's workload networks with standard geometry.
+//!
+//! Layer lists include every weight-bearing layer (convs incl. downsample
+//! projections, final FCs). Pooling/activation layers carry no weights and
+//! are represented only through the spatial sizes fed to subsequent convs.
+
+use super::{Layer, Network};
+
+/// LeNet-5-style network on MNIST 1x28x28 (Table 1: first-layer reuse 784).
+pub fn lenet() -> Network {
+    Network::new(
+        "LeNet",
+        "MNIST 1x28x28",
+        vec![
+            Layer::conv("conv1", 1, 6, 5, 1, 2, 28), // out 28 -> pool 14
+            Layer::conv("conv2", 6, 16, 5, 1, 0, 14), // out 10 -> pool 5
+            Layer::fc("fc1", 400, 120),
+            Layer::fc("fc2", 120, 84),
+            Layer::fc("fc3", 84, 10),
+        ],
+    )
+}
+
+/// AlexNet on ImageNet 3x224x224 (Table 1: first-layer reuse 3025).
+pub fn alexnet() -> Network {
+    Network::new(
+        "AlexNet",
+        "ImageNet 3x224x224",
+        vec![
+            Layer::conv("conv1", 3, 64, 11, 4, 2, 224), // out 55 -> pool 27
+            Layer::conv("conv2", 64, 192, 5, 1, 2, 27), // out 27 -> pool 13
+            Layer::conv("conv3", 192, 384, 3, 1, 1, 13),
+            Layer::conv("conv4", 384, 256, 3, 1, 1, 13),
+            Layer::conv("conv5", 256, 256, 3, 1, 1, 13), // out 13 -> pool 6
+            Layer::fc("fc1", 9216, 4096),
+            Layer::fc("fc2", 4096, 4096),
+            Layer::fc("fc3", 4096, 1000),
+        ],
+    )
+}
+
+/// ResNet9 (DAWNBench-style) on CIFAR10 3x32x32.
+///
+/// Standard geometry gives first-layer reuse 32² = 1024; the paper's
+/// Table 1 lists 729 = 27², implying k=6, p=0 on the first conv. Use
+/// [`resnet9_paper_calib`] to reproduce the paper's number verbatim;
+/// EXPERIMENTS.md documents the discrepancy.
+pub fn resnet9() -> Network {
+    Network::new(
+        "ResNet9",
+        "CIFAR10 3x32x32",
+        vec![
+            Layer::conv("conv1", 3, 64, 3, 1, 1, 32),
+            Layer::conv("conv2", 64, 128, 3, 1, 1, 32), // pool -> 16
+            Layer::conv("res1a", 128, 128, 3, 1, 1, 16),
+            Layer::conv("res1b", 128, 128, 3, 1, 1, 16),
+            Layer::conv("conv3", 128, 256, 3, 1, 1, 16), // pool -> 8
+            Layer::conv("conv4", 256, 512, 3, 1, 1, 8), // pool -> 4
+            Layer::conv("res2a", 512, 512, 3, 1, 1, 4),
+            Layer::conv("res2b", 512, 512, 3, 1, 1, 4),
+            Layer::fc("fc", 512, 10),
+        ],
+    )
+}
+
+/// ResNet9 variant whose first conv reproduces Table 1's N_reuse = 729.
+pub fn resnet9_paper_calib() -> Network {
+    let mut n = resnet9();
+    n.name = "ResNet9(paper-calib)".into();
+    n.layers[0] = Layer::conv("conv1", 3, 64, 6, 1, 0, 32); // out 27 -> 729
+    n
+}
+
+fn basic_block(
+    layers: &mut Vec<Layer>,
+    stage: usize,
+    block: usize,
+    in_ch: usize,
+    out_ch: usize,
+    stride: usize,
+    in_size: usize,
+) -> usize {
+    let pfx = format!("l{stage}b{block}");
+    layers.push(Layer::conv(&format!("{pfx}.conv1"), in_ch, out_ch, 3, stride, 1, in_size));
+    let mid = (in_size + 2 - 3) / stride + 1;
+    layers.push(Layer::conv(&format!("{pfx}.conv2"), out_ch, out_ch, 3, 1, 1, mid));
+    if stride != 1 || in_ch != out_ch {
+        layers.push(Layer::conv(&format!("{pfx}.down"), in_ch, out_ch, 1, stride, 0, in_size));
+    }
+    mid
+}
+
+fn bottleneck_block(
+    layers: &mut Vec<Layer>,
+    stage: usize,
+    block: usize,
+    in_ch: usize,
+    width: usize,
+    stride: usize,
+    in_size: usize,
+) -> (usize, usize) {
+    let out_ch = width * 4;
+    let pfx = format!("l{stage}b{block}");
+    layers.push(Layer::conv(&format!("{pfx}.conv1"), in_ch, width, 1, 1, 0, in_size));
+    layers.push(Layer::conv(&format!("{pfx}.conv2"), width, width, 3, stride, 1, in_size));
+    let mid = (in_size + 2 - 3) / stride + 1;
+    layers.push(Layer::conv(&format!("{pfx}.conv3"), width, out_ch, 1, 1, 0, mid));
+    if stride != 1 || in_ch != out_ch {
+        layers.push(Layer::conv(&format!("{pfx}.down"), in_ch, out_ch, 1, stride, 0, in_size));
+    }
+    (out_ch, mid)
+}
+
+fn resnet_basic(name: &str, blocks: [usize; 4]) -> Network {
+    let mut layers = vec![Layer::conv("conv1", 3, 64, 7, 2, 3, 224)]; // out 112, pool -> 56
+    let mut size = 56;
+    let mut in_ch = 64;
+    for (stage, (&n_blocks, out_ch)) in blocks.iter().zip([64usize, 128, 256, 512]).enumerate() {
+        for b in 0..n_blocks {
+            let stride = if b == 0 && stage > 0 { 2 } else { 1 };
+            size = basic_block(&mut layers, stage + 1, b, in_ch, out_ch, stride, size);
+            in_ch = out_ch;
+        }
+    }
+    layers.push(Layer::fc("fc", 512, 1000));
+    Network::new(name, "ImageNet 3x224x224", layers)
+}
+
+/// ResNet18 on ImageNet (the paper's main optimization workload).
+pub fn resnet18() -> Network {
+    resnet_basic("ResNet18", [2, 2, 2, 2])
+}
+
+/// ResNet34 on ImageNet.
+pub fn resnet34() -> Network {
+    resnet_basic("ResNet34", [3, 4, 6, 3])
+}
+
+/// ResNet50 on ImageNet (bottleneck blocks; Fig. 10 left workload).
+pub fn resnet50() -> Network {
+    let mut layers = vec![Layer::conv("conv1", 3, 64, 7, 2, 3, 224)];
+    let mut size = 56;
+    let mut in_ch = 64;
+    for (stage, (&n_blocks, width)) in [3usize, 4, 6, 3].iter().zip([64usize, 128, 256, 512]).enumerate() {
+        for b in 0..n_blocks {
+            let stride = if b == 0 && stage > 0 { 2 } else { 1 };
+            let (oc, sz) = bottleneck_block(&mut layers, stage + 1, b, in_ch, width, stride, size);
+            in_ch = oc;
+            size = sz;
+        }
+    }
+    layers.push(Layer::fc("fc", 2048, 1000));
+    Network::new("ResNet50", "ImageNet 3x224x224", layers)
+}
+
+/// One BERT encoder layer: 12 heads, sequence length S, embedding d=768
+/// (Fig. 10 right workload). Weight matrices: Q, K, V, O projections and
+/// the two FFN matrices; every FC is reused once per token (reuse = S).
+pub fn bert_layer(seq_len: usize) -> Network {
+    let d = 768;
+    let ffn = 3072;
+    Network::new(
+        &format!("BERT-layer(S={seq_len})"),
+        &format!("token sequence S={seq_len}, d={d}, 12 heads"),
+        vec![
+            Layer::fc_reused("attn.q", d, d, seq_len),
+            Layer::fc_reused("attn.k", d, d, seq_len),
+            Layer::fc_reused("attn.v", d, d, seq_len),
+            Layer::fc_reused("attn.o", d, d, seq_len),
+            Layer::fc_reused("ffn.w1", d, ffn, seq_len),
+            Layer::fc_reused("ffn.w2", ffn, d, seq_len),
+        ],
+    )
+}
+
+/// The crossbar MLP served by the e2e example (mirrors python/compile/model.py).
+pub fn digits_mlp() -> Network {
+    Network::new(
+        "DigitsMLP",
+        "synthetic digits 28x28",
+        vec![
+            Layer::fc("fc1", 784, 256),
+            Layer::fc("fc2", 256, 128),
+            Layer::fc("fc3", 128, 10),
+        ],
+    )
+}
+
+/// All named zoo entries (used by the CLI).
+pub fn by_name(name: &str) -> Option<Network> {
+    match name.to_ascii_lowercase().as_str() {
+        "lenet" => Some(lenet()),
+        "alexnet" => Some(alexnet()),
+        "resnet9" => Some(resnet9()),
+        "resnet9-paper" => Some(resnet9_paper_calib()),
+        "resnet18" => Some(resnet18()),
+        "resnet34" => Some(resnet34()),
+        "resnet50" => Some(resnet50()),
+        "bert" => Some(bert_layer(64)),
+        "digits-mlp" => Some(digits_mlp()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_reuse_factors() {
+        assert_eq!(resnet50().layers[0].reuse(), 12544);
+        assert_eq!(alexnet().layers[0].reuse(), 3025);
+        assert_eq!(lenet().layers[0].reuse(), 784);
+        assert_eq!(resnet9_paper_calib().layers[0].reuse(), 729);
+        assert_eq!(resnet9().layers[0].reuse(), 1024); // standard geometry
+    }
+
+    #[test]
+    fn resnet18_weight_count_near_11_5m() {
+        // paper §3.1: "ResNet18/ImageNet has 11.5M weight parameters"
+        let w = resnet18().total_weights();
+        assert!(
+            (11_000_000..12_200_000).contains(&w),
+            "ResNet18 weights {w} outside expected band"
+        );
+    }
+
+    #[test]
+    fn resnet9_weight_count_near_1_9m() {
+        // paper Table 6 text: ResNet9/Cifar10 ~1.9M parameters... standard
+        // DAWNBench ResNet9 has ~6.6M; the paper's 1.9M suggests a slimmer
+        // variant. We assert our standard geometry is in the small-CNN range
+        // and document the difference in EXPERIMENTS.md.
+        let w = resnet9().total_weights();
+        assert!(w > 1_000_000, "ResNet9 weights {w} implausibly small");
+    }
+
+    #[test]
+    fn resnet18_layer_count() {
+        // 1 stem + stages (2 blocks x 2 convs each + 1 downsample in stages
+        // 2..4) + fc = 1 + (4 + 5 + 5 + 5) + 1 = 21 weight layers (17 named
+        // convs + 3 downsample projections + fc)
+        assert_eq!(resnet18().n_layers(), 21);
+    }
+
+    #[test]
+    fn resnet50_structure() {
+        let n = resnet50();
+        // 1 stem + 3*3+1 + 4*3+1 + 6*3+1 + 3*3+1 (+downsample per stage) + fc
+        assert_eq!(n.n_layers(), 1 + (9 + 1) + (12 + 1) + (18 + 1) + (9 + 1) + 1);
+        assert_eq!(n.layers.last().unwrap().matrix_shape(), (2049, 1000));
+        // ~25.5M params
+        let w = n.total_weights();
+        assert!((24_000_000..27_000_000).contains(&w), "ResNet50 weights {w}");
+    }
+
+    #[test]
+    fn resnet_spatial_sizes_consistent() {
+        // every conv's implied output feeds the next conv's in_size within
+        // each stage; downsample convs mirror their block's input
+        for net in [resnet18(), resnet34(), resnet50()] {
+            for l in &net.layers {
+                l.out_size(); // panics on inconsistent geometry
+            }
+        }
+    }
+
+    #[test]
+    fn bert_layer_shapes() {
+        let n = bert_layer(64);
+        let shapes = n.matrix_shapes();
+        assert_eq!(shapes[0], (769, 768));
+        assert_eq!(shapes[4], (769, 3072));
+        assert_eq!(shapes[5], (3073, 768));
+        assert!(n.layers.iter().all(|l| l.reuse() == 64));
+        // ~7M params for one encoder layer
+        let w = n.total_weights();
+        assert!((7_000_000..7_500_000).contains(&w), "BERT layer weights {w}");
+    }
+
+    #[test]
+    fn zoo_by_name_roundtrip() {
+        for name in ["lenet", "alexnet", "resnet9", "resnet18", "resnet34", "resnet50", "bert", "digits-mlp"] {
+            assert!(by_name(name).is_some(), "{name} missing from zoo");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn alexnet_fc1_geometry() {
+        // conv5 out 13 -> pool 6 -> 256*36 = 9216 inputs
+        assert_eq!(alexnet().layers[5].matrix_shape(), (9217, 4096));
+    }
+}

@@ -1,0 +1,125 @@
+//! Communication-aware optimization (paper §5 future work: "introduce
+//! constraints related to tile communication"; §4: "an increase in the
+//! number of tiles will lead to greater complexity in inter-tile
+//! communication").
+//!
+//! The plain §3.1 objective minimizes total tile area. This extension
+//! scores each sweep point with a combined cost
+//!
+//! ```text
+//! cost = area_mm2 * (1 + lambda * messages / messages_min)
+//! ```
+//!
+//! where `messages` is the per-inference inter-tile message count from the
+//! cycle simulator ([`crate::sim`]) and `messages_min` the minimum across
+//! the sweep — so `lambda` expresses how many relative area units one unit
+//! of relative communication is worth. `lambda = 0` recovers the paper's
+//! objective; large `lambda` drives the optimum toward fewer, larger tiles.
+
+use super::{sweep, SweepConfig, SweepPoint};
+use crate::nets::Network;
+use crate::pack::Discipline;
+use crate::perf::Execution;
+use crate::sim::{map_and_simulate, SimConfig};
+
+/// A sweep point extended with its communication load.
+#[derive(Debug, Clone)]
+pub struct CommPoint {
+    pub point: SweepPoint,
+    /// inter-tile messages per inference
+    pub messages: u64,
+    /// combined area-communication cost
+    pub cost: f64,
+}
+
+/// Evaluate the sweep under the combined objective.
+pub fn comm_aware_sweep(net: &Network, cfg: &SweepConfig, lambda: f64) -> Vec<CommPoint> {
+    assert!(lambda >= 0.0, "lambda must be non-negative");
+    let exec = match cfg.discipline {
+        Discipline::Dense => Execution::Sequential,
+        Discipline::Pipeline => Execution::Pipelined,
+    };
+    let points = sweep(net, cfg);
+    let mut sim_cfg = SimConfig::new(net, exec);
+    if let Some(r) = &cfg.replication {
+        sim_cfg.replication = r.clone();
+    }
+    let msgs: Vec<u64> = points
+        .iter()
+        .map(|p| map_and_simulate(net, p.tile, cfg.discipline, &sim_cfg, 1).1.messages)
+        .collect();
+    let msg_min = msgs.iter().copied().filter(|&m| m > 0).min().unwrap_or(1).max(1);
+    points
+        .into_iter()
+        .zip(msgs)
+        .map(|(point, messages)| {
+            let rel = messages as f64 / msg_min as f64;
+            let cost = point.total_area_mm2 * (1.0 + lambda * rel);
+            CommPoint { point, messages, cost }
+        })
+        .collect()
+}
+
+/// Minimum-cost configuration under the combined objective.
+pub fn comm_aware_optimum(net: &Network, cfg: &SweepConfig, lambda: f64) -> Option<CommPoint> {
+    comm_aware_sweep(net, cfg, lambda)
+        .into_iter()
+        .min_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::zoo;
+    use crate::opt;
+
+    #[test]
+    fn lambda_zero_recovers_area_objective() {
+        let net = zoo::resnet18();
+        let cfg = SweepConfig::square(Discipline::Pipeline);
+        let plain = opt::optimum(&opt::sweep(&net, &cfg)).unwrap();
+        let comm = comm_aware_optimum(&net, &cfg, 0.0).unwrap();
+        assert_eq!(comm.point.tile, plain.tile);
+        assert_eq!(comm.cost, plain.total_area_mm2);
+    }
+
+    #[test]
+    fn messages_decrease_with_tile_capacity() {
+        let net = zoo::resnet18();
+        let cfg = SweepConfig::square(Discipline::Pipeline);
+        let pts = comm_aware_sweep(&net, &cfg, 0.0);
+        let first = pts.first().unwrap(); // smallest tiles
+        let last = pts.last().unwrap(); // largest tiles
+        assert!(
+            first.messages > last.messages,
+            "messages {} @{} !> {} @{}",
+            first.messages,
+            first.point.tile,
+            last.messages,
+            last.point.tile
+        );
+    }
+
+    #[test]
+    fn high_lambda_pushes_optimum_to_larger_tiles() {
+        // §4: communication complexity penalizes many-tile mappings
+        let net = zoo::resnet18();
+        let cfg = SweepConfig::square(Discipline::Pipeline);
+        let area_opt = comm_aware_optimum(&net, &cfg, 0.0).unwrap();
+        let comm_opt = comm_aware_optimum(&net, &cfg, 5.0).unwrap();
+        assert!(
+            comm_opt.point.tile.capacity() >= area_opt.point.tile.capacity(),
+            "comm-aware optimum {} should not be smaller than area optimum {}",
+            comm_opt.point.tile,
+            area_opt.point.tile
+        );
+        assert!(comm_opt.point.n_tiles <= area_opt.point.n_tiles);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn negative_lambda_rejected() {
+        let net = zoo::lenet();
+        comm_aware_sweep(&net, &SweepConfig::square(Discipline::Dense), -1.0);
+    }
+}

@@ -1,0 +1,320 @@
+//! The §3.1 optimization process: sweep tile array dimensions and aspect
+//! ratios, find the minimum-total-tile-area configuration per aspect ratio,
+//! and the global optimum across aspects (Figs. 7–10, Table 6).
+//!
+//! For each candidate tile `T(n_row, n_col = n_row·aspect)` the network is
+//! re-fragmented (each tile dimension induces its own fragmentation, §2.1),
+//! packed with the selected engine, and priced with the area model.
+
+pub mod comm;
+
+use crate::area::AreaModel;
+use crate::frag;
+use crate::geom::Tile;
+use crate::ilp;
+use crate::nets::Network;
+use crate::pack::{self, Discipline};
+
+/// Packing engine selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// the paper's simple (next-fit) algorithm
+    Simple,
+    /// first-fit-decreasing baseline
+    Ffd,
+    /// binary linear optimization (budgeted branch & bound)
+    Ilp { max_nodes: u64 },
+}
+
+impl std::fmt::Display for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Engine::Simple => write!(f, "simple"),
+            Engine::Ffd => write!(f, "ffd"),
+            Engine::Ilp { .. } => write!(f, "lps"),
+        }
+    }
+}
+
+/// Sweep configuration (defaults follow §3.1: base dims 2^6..2^13 with
+/// aspect ratios n_row/n_col = 1..8 — tall tiles, matching the paper's
+/// winning rectangular configuration 2560x512 = 5x(512x512)).
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub discipline: Discipline,
+    pub engine: Engine,
+    /// column dimension exponents: n_col = 2^k for k in this inclusive range
+    pub row_exp: (u32, u32),
+    /// aspect factors: n_row = n_col * aspect
+    pub aspects: Vec<usize>,
+    /// per-layer RAPA replication (None = no replication)
+    pub replication: Option<Vec<usize>>,
+    pub area: AreaModel,
+}
+
+impl SweepConfig {
+    pub fn paper_default(discipline: Discipline) -> SweepConfig {
+        SweepConfig {
+            discipline,
+            engine: Engine::Simple,
+            row_exp: (6, 13),
+            aspects: (1..=8).collect(),
+            replication: None,
+            area: AreaModel::paper_default(),
+        }
+    }
+
+    /// Square-arrays-only variant (Fig. 8 / Fig. 10).
+    pub fn square(discipline: Discipline) -> SweepConfig {
+        SweepConfig { aspects: vec![1], ..SweepConfig::paper_default(discipline) }
+    }
+}
+
+/// One evaluated tile configuration.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub tile: Tile,
+    pub aspect: usize,
+    pub n_blocks: usize,
+    pub n_tiles: usize,
+    /// tiles for a 1:1 mapping (every fragment its own tile)
+    pub n_tiles_one_to_one: usize,
+    pub tile_eff: f64,
+    pub packing_eff: f64,
+    pub total_area_mm2: f64,
+    /// pure array area (the "100 % efficiency" area Fig. 7 plots)
+    pub array_area_mm2: f64,
+}
+
+/// Evaluate a single tile configuration.
+pub fn evaluate(net: &Network, tile: Tile, cfg: &SweepConfig) -> SweepPoint {
+    let ones = vec![1usize; net.n_layers()];
+    let replication = cfg.replication.as_ref().unwrap_or(&ones);
+    let blocks = frag::fragment_network_replicated(net, tile, replication);
+    let n_blocks = blocks.len();
+    let packing = match cfg.engine {
+        Engine::Simple => pack::simple::pack(&blocks, tile, cfg.discipline),
+        Engine::Ffd => pack::ffd::pack(&blocks, tile, cfg.discipline),
+        Engine::Ilp { max_nodes } => {
+            ilp::solve_packing(&blocks, tile, cfg.discipline, ilp::Budget { max_nodes, ..Default::default() }).packing
+        }
+    };
+    let n_tiles = packing.n_tiles();
+    SweepPoint {
+        tile,
+        aspect: (tile.n_row / tile.n_col).max(1),
+        n_blocks,
+        n_tiles,
+        n_tiles_one_to_one: n_blocks,
+        tile_eff: cfg.area.efficiency(tile),
+        packing_eff: packing.packing_efficiency(),
+        total_area_mm2: cfg.area.total_area_mm2(n_tiles, tile),
+        array_area_mm2: n_tiles as f64 * cfg.area.array_area_um2(tile) * 1e-6,
+    }
+}
+
+/// Full sweep over base dimensions x aspect ratios.
+pub fn sweep(net: &Network, cfg: &SweepConfig) -> Vec<SweepPoint> {
+    let mut out = Vec::new();
+    for k in cfg.row_exp.0..=cfg.row_exp.1 {
+        let n_col = 1usize << k;
+        for &aspect in &cfg.aspects {
+            let tile = Tile::new(n_col * aspect, n_col);
+            out.push(evaluate(net, tile, cfg));
+        }
+    }
+    out
+}
+
+/// Minimum-area point for each aspect ratio (§3.1 step 2).
+pub fn best_per_aspect(points: &[SweepPoint]) -> Vec<SweepPoint> {
+    let mut aspects: Vec<usize> = points.iter().map(|p| p.aspect).collect();
+    aspects.sort_unstable();
+    aspects.dedup();
+    aspects
+        .into_iter()
+        .filter_map(|a| {
+            points
+                .iter()
+                .filter(|p| p.aspect == a)
+                .min_by(|x, y| x.total_area_mm2.partial_cmp(&y.total_area_mm2).unwrap())
+                .cloned()
+        })
+        .collect()
+}
+
+/// Global optimum (§3.1 step 3): minimum area across all points.
+pub fn optimum(points: &[SweepPoint]) -> Option<SweepPoint> {
+    points
+        .iter()
+        .min_by(|x, y| x.total_area_mm2.partial_cmp(&y.total_area_mm2).unwrap())
+        .cloned()
+}
+
+impl crate::pack::Packing {
+    /// Convenience alias used by the sweep (`n_bins` are physical tiles).
+    pub fn n_tiles(&self) -> usize {
+        self.n_bins
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::zoo;
+    use crate::perf::rapa;
+
+    #[test]
+    fn square_sweep_shapes() {
+        let net = zoo::lenet();
+        let cfg = SweepConfig::square(Discipline::Dense);
+        let pts = sweep(&net, &cfg);
+        assert_eq!(pts.len(), 8); // k = 6..=13
+        assert!(pts.iter().all(|p| p.tile.is_square()));
+        assert!(pts.iter().all(|p| p.n_tiles >= 1));
+    }
+
+    #[test]
+    fn full_sweep_covers_paper_range() {
+        let net = zoo::lenet();
+        let cfg = SweepConfig::paper_default(Discipline::Dense);
+        let pts = sweep(&net, &cfg);
+        assert_eq!(pts.len(), 64); // 8 sizes x 8 aspects
+        let min_tile = pts.iter().map(|p| p.tile).min_by_key(|t| t.capacity()).unwrap();
+        let max_tile = pts.iter().map(|p| p.tile).max_by_key(|t| t.capacity()).unwrap();
+        assert_eq!((min_tile.n_row, min_tile.n_col), (64, 64));
+        assert_eq!((max_tile.n_row, max_tile.n_col), (65536, 8192));
+    }
+
+    #[test]
+    fn resnet18_dense_square_optimum_matches_fig8() {
+        // Fig. 8 left: dense square optimum = 16 tiles of 1024x1024
+        let net = zoo::resnet18();
+        let cfg = SweepConfig::square(Discipline::Dense);
+        let pts = sweep(&net, &cfg);
+        let best = optimum(&pts).unwrap();
+        // our calibration puts the dense square optimum on the flat part of
+        // the area curve between 1024² (paper's 16 tiles) and 2048²; both
+        // are within a few percent of area (documented in EXPERIMENTS.md)
+        assert!(
+            best.tile == Tile::new(1024, 1024) || best.tile == Tile::new(2048, 2048),
+            "optimum tile {:?}",
+            best.tile
+        );
+        assert!(
+            (4..=18).contains(&best.n_tiles),
+            "tiles {} vs paper's 16",
+            best.n_tiles
+        );
+    }
+
+    #[test]
+    fn resnet18_pipeline_square_optimum_matches_fig8() {
+        // Fig. 8 right: pipeline square optimum = 68 tiles of 512x512
+        let net = zoo::resnet18();
+        let cfg = SweepConfig::square(Discipline::Pipeline);
+        let pts = sweep(&net, &cfg);
+        let best = optimum(&pts).unwrap();
+        assert_eq!(best.tile.n_row, 512, "optimum tile {:?}", best.tile);
+        assert!(
+            (55..=90).contains(&best.n_tiles),
+            "tiles {} vs paper's 68",
+            best.n_tiles
+        );
+    }
+
+    #[test]
+    fn pipeline_area_roughly_double_dense() {
+        // Fig. 8: "the area cost of the pipeline solution is about twice
+        // that of the dense solution"
+        let net = zoo::resnet18();
+        let dense = optimum(&sweep(&net, &SweepConfig::square(Discipline::Dense))).unwrap();
+        let pipe = optimum(&sweep(&net, &SweepConfig::square(Discipline::Pipeline))).unwrap();
+        let ratio = pipe.total_area_mm2 / dense.total_area_mm2;
+        assert!((1.3..=3.5).contains(&ratio), "pipeline/dense area ratio {ratio}");
+    }
+
+    #[test]
+    fn rectangular_pipeline_cuts_tiles_vs_square() {
+        // §3.1: "the area penalty of the pipeline solution can be cut
+        // approximately in half with 17 rectangular arrays of 2560x512" —
+        // our sweep uses power-of-two rows with col = rows*aspect; assert
+        // the qualitative effect: fewer tiles at similar-or-better area.
+        let net = zoo::resnet18();
+        let sq = optimum(&sweep(&net, &SweepConfig::square(Discipline::Pipeline))).unwrap();
+        let rect_cfg = SweepConfig::paper_default(Discipline::Pipeline);
+        let rect_pts = sweep(&net, &rect_cfg);
+        let rect = optimum(&rect_pts).unwrap();
+        assert!(rect.total_area_mm2 <= sq.total_area_mm2 * 1.05);
+        assert!(
+            rect.n_tiles < sq.n_tiles,
+            "rect {} tiles !< square {} tiles",
+            rect.n_tiles,
+            sq.n_tiles
+        );
+    }
+
+    #[test]
+    fn best_per_aspect_returns_one_point_per_aspect() {
+        let net = zoo::lenet();
+        let cfg = SweepConfig::paper_default(Discipline::Dense);
+        let pts = sweep(&net, &cfg);
+        let best = best_per_aspect(&pts);
+        assert_eq!(best.len(), 8);
+        let mut aspects: Vec<usize> = best.iter().map(|p| p.aspect).collect();
+        aspects.sort_unstable();
+        assert_eq!(aspects, (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rapa_replication_inflates_area() {
+        let net = zoo::resnet18();
+        let mut cfg = SweepConfig::square(Discipline::Pipeline);
+        let base = optimum(&sweep(&net, &cfg)).unwrap();
+        cfg.replication = Some(rapa::plan_balanced(&net, 128));
+        let rapa_best = optimum(&sweep(&net, &cfg)).unwrap();
+        let ratio = rapa_best.total_area_mm2 / base.total_area_mm2;
+        // paper Fig. 9: RAPA area cost ~5x vs the dense solution
+        assert!((2.0..=12.0).contains(&ratio), "RAPA area ratio {ratio}");
+    }
+
+    #[test]
+    fn min_tiles_not_min_area() {
+        // the paper's key observation: the minimum number of tiles does not
+        // necessarily give the minimum total tile area
+        let net = zoo::resnet18();
+        let cfg = SweepConfig::square(Discipline::Dense);
+        let pts = sweep(&net, &cfg);
+        let min_tiles = pts.iter().min_by_key(|p| p.n_tiles).unwrap();
+        let min_area = optimum(&pts).unwrap();
+        assert!(
+            min_tiles.tile != min_area.tile,
+            "expected distinct optima: tiles@{} area@{}",
+            min_tiles.tile,
+            min_area.tile
+        );
+        assert!(min_tiles.n_tiles <= min_area.n_tiles);
+        assert!(min_area.total_area_mm2 <= min_tiles.total_area_mm2);
+    }
+
+    #[test]
+    fn ilp_engine_never_more_tiles_than_simple() {
+        let net = zoo::lenet();
+        for d in [Discipline::Dense, Discipline::Pipeline] {
+            let mut cfg = SweepConfig::square(d);
+            cfg.row_exp = (7, 9);
+            let simple_pts = sweep(&net, &cfg);
+            cfg.engine = Engine::Ilp { max_nodes: 200_000 };
+            let lps_pts = sweep(&net, &cfg);
+            for (s, l) in simple_pts.iter().zip(&lps_pts) {
+                assert!(
+                    l.n_tiles <= s.n_tiles,
+                    "{} {d}: lps {} > simple {}",
+                    s.tile,
+                    l.n_tiles,
+                    s.n_tiles
+                );
+            }
+        }
+    }
+}

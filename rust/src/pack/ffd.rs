@@ -1,0 +1,210 @@
+//! First-fit-decreasing baselines (ablation against the paper's next-fit).
+//!
+//! * dense: first-fit shelf — each block tries every open shelf in every
+//!   open bin before opening a new shelf/bin (classical FFD-Shelf of Lodi
+//!   et al. 2002, the survey the paper cites as [38]);
+//! * pipeline: first-fit 2-constraint vector packing — each block goes in
+//!   the first open bin with enough residual word *and* bit lines.
+//!
+//! FFD dominates next-fit on quality at O(n²) worst case; the benches
+//! quantify the quality/runtime trade against [`super::simple`].
+
+use super::{order_blocks, Discipline, Packing, SortOrder};
+use crate::geom::{Block, Placement, Tile};
+
+/// Pack with first-fit-decreasing.
+pub fn pack(blocks: &[Block], tile: Tile, discipline: Discipline) -> Packing {
+    let ordered = order_blocks(blocks, SortOrder::RowsDesc);
+    for b in &ordered {
+        assert!(
+            tile.fits(b.rows, b.cols),
+            "block {b:?} larger than tile {tile}: fragment with this tile first"
+        );
+    }
+    match discipline {
+        Discipline::Dense => dense_first_fit(ordered, tile),
+        Discipline::Pipeline => pipeline_first_fit(ordered, tile),
+    }
+}
+
+#[derive(Debug)]
+struct Shelf {
+    x: usize,
+    width: usize,
+    fill: usize, // rows used
+}
+
+#[derive(Debug, Default)]
+struct DenseBin {
+    shelves: Vec<Shelf>,
+    col_used: usize,
+    /// max over shelves of (n_row - fill): a block with more rows than this
+    /// cannot join any shelf here — lets the first-fit scan skip whole bins
+    /// (EXPERIMENTS.md §Perf #2)
+    max_free_rows: usize,
+    /// widest shelf: a block wider than this cannot join any shelf here
+    max_width: usize,
+}
+
+impl DenseBin {
+    fn refresh_max_free(&mut self, n_row: usize) {
+        self.max_free_rows = self
+            .shelves
+            .iter()
+            .map(|s| n_row - s.fill)
+            .max()
+            .unwrap_or(0);
+    }
+}
+
+/// FFD shelf packing (see module docs).
+fn dense_first_fit(blocks: Vec<Block>, tile: Tile) -> Packing {
+    let mut bins: Vec<DenseBin> = Vec::new();
+    let mut placements = Vec::with_capacity(blocks.len());
+
+    'blocks: for (idx, b) in blocks.iter().enumerate() {
+        // 1) existing shelf anywhere. Unlike the next-fit engine (whose
+        //    current shelf is always the rightmost and may widen into the
+        //    bin's free space), closed shelves have neighbours to their
+        //    right, so a block may only join if it fits the shelf's width.
+        for (bi, bin) in bins.iter_mut().enumerate() {
+            if b.rows > bin.max_free_rows || b.cols > bin.max_width {
+                continue; // no shelf in this bin can host the block
+            }
+            for sh in bin.shelves.iter_mut() {
+                if sh.fill + b.rows <= tile.n_row && b.cols <= sh.width {
+                    placements.push(Placement { block: idx, bin: bi, x: sh.x, y: sh.fill });
+                    sh.fill += b.rows;
+                    bin.refresh_max_free(tile.n_row);
+                    continue 'blocks;
+                }
+            }
+        }
+        // 2) new shelf in an existing bin
+        for (bi, bin) in bins.iter_mut().enumerate() {
+            if bin.col_used + b.cols <= tile.n_col {
+                let x = bin.col_used;
+                bin.shelves.push(Shelf { x, width: b.cols, fill: b.rows });
+                bin.col_used += b.cols;
+                bin.max_free_rows = bin.max_free_rows.max(tile.n_row - b.rows);
+                bin.max_width = bin.max_width.max(b.cols);
+                placements.push(Placement { block: idx, bin: bi, x, y: 0 });
+                continue 'blocks;
+            }
+        }
+        // 3) new bin
+        bins.push(DenseBin {
+            shelves: vec![Shelf { x: 0, width: b.cols, fill: b.rows }],
+            col_used: b.cols,
+            max_free_rows: tile.n_row - b.rows,
+            max_width: b.cols,
+        });
+        placements.push(Placement { block: idx, bin: bins.len() - 1, x: 0, y: 0 });
+    }
+
+    let n_bins = bins.len();
+    Packing { tile, discipline: Discipline::Dense, blocks, placements, n_bins }
+}
+
+/// FFD two-constraint staircase packing (see module docs).
+fn pipeline_first_fit(blocks: Vec<Block>, tile: Tile) -> Packing {
+    let mut rows_used: Vec<usize> = Vec::new();
+    let mut cols_used: Vec<usize> = Vec::new();
+    let mut placements = Vec::with_capacity(blocks.len());
+
+    for (idx, b) in blocks.iter().enumerate() {
+        let slot = (0..rows_used.len()).find(|&i| {
+            rows_used[i] + b.rows <= tile.n_row && cols_used[i] + b.cols <= tile.n_col
+        });
+        let bi = match slot {
+            Some(i) => i,
+            None => {
+                rows_used.push(0);
+                cols_used.push(0);
+                rows_used.len() - 1
+            }
+        };
+        placements.push(Placement { block: idx, bin: bi, x: cols_used[bi], y: rows_used[bi] });
+        rows_used[bi] += b.rows;
+        cols_used[bi] += b.cols;
+    }
+
+    let n_bins = rows_used.len();
+    Packing { tile, discipline: Discipline::Pipeline, blocks, placements, n_bins }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::BlockKind;
+    use crate::pack::placement::validate;
+    use crate::pack::simple;
+
+    fn blk(rows: usize, cols: usize, layer: usize) -> Block {
+        Block { rows, cols, layer, replica: 0, grid: (0, 0), kind: BlockKind::Sparse }
+    }
+
+    fn paper_items() -> Vec<Block> {
+        [
+            (257, 256), (257, 256), (257, 256), (129, 256), (129, 128),
+            (129, 128), (129, 128), (129, 128), (65, 128), (148, 64),
+            (65, 64), (65, 64), (65, 64),
+        ]
+        .iter()
+        .enumerate()
+        .map(|(i, &(r, c))| blk(r, c, i))
+        .collect()
+    }
+
+    #[test]
+    fn ffd_dense_demo_two_bins() {
+        let p = pack(&paper_items(), Tile::new(512, 512), Discipline::Dense);
+        validate(&p).unwrap();
+        assert_eq!(p.n_bins, 2);
+    }
+
+    #[test]
+    fn ffd_pipeline_demo_near_optimum() {
+        // exact optimum is 4 (ilp tests); greedy FFD lands at 5 here
+        let p = pack(&paper_items(), Tile::new(512, 512), Discipline::Pipeline);
+        validate(&p).unwrap();
+        assert!((4..=5).contains(&p.n_bins), "bins {}", p.n_bins);
+    }
+
+    #[test]
+    fn ffd_never_worse_than_next_fit() {
+        use crate::frag::fragment_network;
+        use crate::nets::zoo;
+        let tile = Tile::new(256, 256);
+        for net in [zoo::lenet(), zoo::alexnet(), zoo::resnet18()] {
+            let blocks = fragment_network(&net, tile);
+            for d in [Discipline::Dense, Discipline::Pipeline] {
+                let nf = simple::pack(&blocks, tile, d);
+                let ff = pack(&blocks, tile, d);
+                validate(&ff).unwrap();
+                assert!(
+                    ff.n_bins <= nf.n_bins,
+                    "{} {d}: ffd {} > next-fit {}",
+                    net.name,
+                    ff.n_bins,
+                    nf.n_bins
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ffd_dense_respects_column_budget_when_widening() {
+        let blocks = vec![blk(30, 10, 0), blk(30, 60, 1), blk(30, 60, 2), blk(5, 40, 3)];
+        let p = pack(&blocks, Tile::new(64, 64), Discipline::Dense);
+        validate(&p).unwrap();
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(pack(&[], Tile::new(8, 8), Discipline::Dense).n_bins, 0);
+        let p = pack(&[blk(8, 8, 0)], Tile::new(8, 8), Discipline::Pipeline);
+        assert_eq!(p.n_bins, 1);
+        validate(&p).unwrap();
+    }
+}

@@ -1,0 +1,167 @@
+//! Packing of fragmented blocks into physical tiles (bins).
+//!
+//! Two disciplines (paper §2.2):
+//! * [`Discipline::Dense`] — shelf packing; blocks may share word/bit lines
+//!   across network layers (Fig. 2a/b). Highest density, no pipelining.
+//! * [`Discipline::Pipeline`] — staircase packing; blocks in one tile must
+//!   share no word line and no bit line (Fig. 2c), enabling simultaneous
+//!   operation of all layers.
+//!
+//! Engines: [`simple`] (the paper's §3 contribution), [`ffd`] (classical
+//! first-fit-decreasing baselines), and the exact [`crate::ilp`] solver.
+//! All return a [`Packing`] with explicit coordinates checked by
+//! [`placement::validate`].
+
+pub mod ffd;
+pub mod placement;
+pub mod simple;
+
+use crate::geom::{Block, Placement, Tile};
+
+/// Packing discipline (paper Fig. 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Discipline {
+    Dense,
+    Pipeline,
+}
+
+impl std::fmt::Display for Discipline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Discipline::Dense => write!(f, "dense"),
+            Discipline::Pipeline => write!(f, "pipeline"),
+        }
+    }
+}
+
+/// Result of packing a block set into tiles of one dimension.
+#[derive(Debug, Clone)]
+pub struct Packing {
+    pub tile: Tile,
+    pub discipline: Discipline,
+    /// the block set, in the order referenced by `placements[].block`
+    pub blocks: Vec<Block>,
+    pub placements: Vec<Placement>,
+    pub n_bins: usize,
+}
+
+impl Packing {
+    /// Weights stored across all blocks.
+    pub fn stored_weights(&self) -> usize {
+        self.blocks.iter().map(Block::weights).sum()
+    }
+
+    /// Packing efficiency: stored weights / provisioned cross-points.
+    /// (Distinct from tile *array efficiency*, which is a circuit-area
+    /// property — see paper §4 discussion.)
+    pub fn packing_efficiency(&self) -> f64 {
+        if self.n_bins == 0 {
+            return 0.0;
+        }
+        self.stored_weights() as f64 / (self.n_bins * self.tile.capacity()) as f64
+    }
+
+    /// Blocks grouped by bin, for reports and the simulator.
+    pub fn bins(&self) -> Vec<Vec<&Placement>> {
+        let mut bins: Vec<Vec<&Placement>> = vec![Vec::new(); self.n_bins];
+        for p in &self.placements {
+            bins[p.bin].push(p);
+        }
+        bins
+    }
+
+    /// Map layer index -> bins hosting at least one of its blocks.
+    pub fn layer_bins(&self, layer: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .placements
+            .iter()
+            .filter(|p| self.blocks[p.block].layer == layer)
+            .map(|p| p.bin)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+/// Block placement order used by the greedy engines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SortOrder {
+    /// descending row dimension (§2.1's convention; FFD-style, default)
+    RowsDesc,
+    /// ascending row dimension (§3's literal wording, for ablation)
+    RowsAsc,
+    /// input order (no sort)
+    AsGiven,
+}
+
+pub(crate) fn order_blocks(blocks: &[Block], order: SortOrder) -> Vec<Block> {
+    let mut v = blocks.to_vec();
+    match order {
+        SortOrder::AsGiven => {}
+        SortOrder::RowsDesc => crate::frag::sort_for_packing(&mut v),
+        SortOrder::RowsAsc => {
+            crate::frag::sort_for_packing(&mut v);
+            v.reverse();
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::BlockKind;
+
+    fn blk(rows: usize, cols: usize, layer: usize) -> Block {
+        Block { rows, cols, layer, replica: 0, grid: (0, 0), kind: BlockKind::Sparse }
+    }
+
+    #[test]
+    fn packing_efficiency_full_bin() {
+        let tile = Tile::new(10, 10);
+        let blocks = vec![blk(10, 10, 0)];
+        let p = Packing {
+            tile,
+            discipline: Discipline::Dense,
+            blocks,
+            placements: vec![Placement { block: 0, bin: 0, x: 0, y: 0 }],
+            n_bins: 1,
+        };
+        assert_eq!(p.packing_efficiency(), 1.0);
+        assert_eq!(p.stored_weights(), 100);
+    }
+
+    #[test]
+    fn layer_bins_dedup() {
+        let tile = Tile::new(10, 10);
+        let blocks = vec![blk(2, 2, 5), blk(2, 2, 5), blk(2, 2, 6)];
+        let p = Packing {
+            tile,
+            discipline: Discipline::Dense,
+            blocks,
+            placements: vec![
+                Placement { block: 0, bin: 0, x: 0, y: 0 },
+                Placement { block: 1, bin: 0, x: 2, y: 0 },
+                Placement { block: 2, bin: 1, x: 0, y: 0 },
+            ],
+            n_bins: 2,
+        };
+        assert_eq!(p.layer_bins(5), vec![0]);
+        assert_eq!(p.layer_bins(6), vec![1]);
+        assert!(p.layer_bins(7).is_empty());
+        assert_eq!(p.bins().len(), 2);
+        assert_eq!(p.bins()[0].len(), 2);
+    }
+
+    #[test]
+    fn order_blocks_modes() {
+        let blocks = vec![blk(1, 1, 0), blk(9, 1, 1), blk(5, 1, 2)];
+        let asc = order_blocks(&blocks, SortOrder::RowsAsc);
+        assert_eq!(asc.iter().map(|b| b.rows).collect::<Vec<_>>(), vec![1, 5, 9]);
+        let desc = order_blocks(&blocks, SortOrder::RowsDesc);
+        assert_eq!(desc.iter().map(|b| b.rows).collect::<Vec<_>>(), vec![9, 5, 1]);
+        let given = order_blocks(&blocks, SortOrder::AsGiven);
+        assert_eq!(given.iter().map(|b| b.rows).collect::<Vec<_>>(), vec![1, 9, 5]);
+    }
+}

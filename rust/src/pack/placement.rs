@@ -1,0 +1,217 @@
+//! Geometric validation of packings.
+//!
+//! Every packing engine's output is checked against the physical rules the
+//! paper's Fig. 2 imposes:
+//!
+//! * every block placed exactly once, inside tile bounds;
+//! * no two blocks in a bin overlap geometrically;
+//! * **pipeline** additionally: no two blocks in a bin share any word line
+//!   (row span) or any bit line (column span) — the Fig. 2c condition that
+//!   makes simultaneous layer operation possible.
+
+use super::{Discipline, Packing};
+use crate::geom::Span;
+
+/// Validate a packing; returns a descriptive error on the first violation.
+pub fn validate(p: &Packing) -> Result<(), String> {
+    // every block exactly once
+    let mut seen = vec![false; p.blocks.len()];
+    for pl in &p.placements {
+        if pl.block >= p.blocks.len() {
+            return Err(format!("placement references unknown block {}", pl.block));
+        }
+        if seen[pl.block] {
+            return Err(format!("block {} placed twice", pl.block));
+        }
+        seen[pl.block] = true;
+        if pl.bin >= p.n_bins {
+            return Err(format!("placement bin {} out of range ({})", pl.bin, p.n_bins));
+        }
+    }
+    if let Some(missing) = seen.iter().position(|s| !s) {
+        return Err(format!("block {missing} not placed"));
+    }
+
+    // bounds
+    for pl in &p.placements {
+        let b = &p.blocks[pl.block];
+        if pl.y + b.rows > p.tile.n_row || pl.x + b.cols > p.tile.n_col {
+            return Err(format!(
+                "block {} ({}x{}) at ({},{}) exceeds tile {}",
+                pl.block, b.rows, b.cols, pl.x, pl.y, p.tile
+            ));
+        }
+    }
+
+    // per-bin pairwise checks
+    let mut by_bin: Vec<Vec<usize>> = vec![Vec::new(); p.n_bins];
+    for (i, pl) in p.placements.iter().enumerate() {
+        by_bin[pl.bin].push(i);
+    }
+    for bin in &by_bin {
+        for (ai, &a) in bin.iter().enumerate() {
+            for &b in &bin[ai + 1..] {
+                let (pa, pb) = (&p.placements[a], &p.placements[b]);
+                let (ba, bb) = (&p.blocks[pa.block], &p.blocks[pb.block]);
+                let rows_a = Span::new(pa.y, ba.rows);
+                let rows_b = Span::new(pb.y, bb.rows);
+                let cols_a = Span::new(pa.x, ba.cols);
+                let cols_b = Span::new(pb.x, bb.cols);
+                let row_overlap = rows_a.overlaps(&rows_b);
+                let col_overlap = cols_a.overlaps(&cols_b);
+                if row_overlap && col_overlap {
+                    return Err(format!(
+                        "blocks {} and {} overlap in bin {}",
+                        pa.block, pb.block, pa.bin
+                    ));
+                }
+                if p.discipline == Discipline::Pipeline && (row_overlap || col_overlap) {
+                    return Err(format!(
+                        "pipeline violation: blocks {} and {} share {} lines in bin {}",
+                        pa.block,
+                        pb.block,
+                        if row_overlap { "word (input)" } else { "bit (output)" },
+                        pa.bin
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Count of used bins that actually host at least one block (diagnostic —
+/// engines should not report empty bins).
+pub fn occupied_bins(p: &Packing) -> usize {
+    let mut used = vec![false; p.n_bins];
+    for pl in &p.placements {
+        used[pl.bin] = true;
+    }
+    used.iter().filter(|u| **u).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::{Block, BlockKind, Placement, Tile};
+
+    fn blk(rows: usize, cols: usize, layer: usize) -> Block {
+        Block { rows, cols, layer, replica: 0, grid: (0, 0), kind: BlockKind::Sparse }
+    }
+
+    fn packing(
+        discipline: Discipline,
+        blocks: Vec<Block>,
+        placements: Vec<Placement>,
+        n_bins: usize,
+    ) -> Packing {
+        Packing { tile: Tile::new(10, 10), discipline, blocks, placements, n_bins }
+    }
+
+    #[test]
+    fn valid_dense_shelf_accepted() {
+        let p = packing(
+            Discipline::Dense,
+            vec![blk(5, 4, 0), blk(5, 4, 1), blk(10, 6, 2)],
+            vec![
+                Placement { block: 0, bin: 0, x: 0, y: 0 },
+                Placement { block: 1, bin: 0, x: 0, y: 5 },
+                Placement { block: 2, bin: 0, x: 4, y: 0 },
+            ],
+            1,
+        );
+        validate(&p).unwrap();
+        assert_eq!(occupied_bins(&p), 1);
+    }
+
+    #[test]
+    fn overlap_rejected() {
+        let p = packing(
+            Discipline::Dense,
+            vec![blk(5, 5, 0), blk(5, 5, 1)],
+            vec![
+                Placement { block: 0, bin: 0, x: 0, y: 0 },
+                Placement { block: 1, bin: 0, x: 4, y: 4 },
+            ],
+            1,
+        );
+        assert!(validate(&p).unwrap_err().contains("overlap"));
+    }
+
+    #[test]
+    fn shared_rows_ok_dense_fatal_pipeline() {
+        let blocks = vec![blk(5, 5, 0), blk(5, 5, 1)];
+        let placements = vec![
+            Placement { block: 0, bin: 0, x: 0, y: 0 },
+            Placement { block: 1, bin: 0, x: 5, y: 0 }, // same rows, distinct cols
+        ];
+        let dense = packing(Discipline::Dense, blocks.clone(), placements.clone(), 1);
+        validate(&dense).unwrap();
+        let pipe = packing(Discipline::Pipeline, blocks, placements, 1);
+        let err = validate(&pipe).unwrap_err();
+        assert!(err.contains("word (input)"), "{err}");
+    }
+
+    #[test]
+    fn shared_cols_fatal_pipeline() {
+        let blocks = vec![blk(5, 5, 0), blk(5, 5, 1)];
+        let placements = vec![
+            Placement { block: 0, bin: 0, x: 0, y: 0 },
+            Placement { block: 1, bin: 0, x: 0, y: 5 }, // same cols, distinct rows
+        ];
+        let pipe = packing(Discipline::Pipeline, blocks, placements, 1);
+        assert!(validate(&pipe).unwrap_err().contains("bit (output)"));
+    }
+
+    #[test]
+    fn staircase_accepted_pipeline() {
+        let p = packing(
+            Discipline::Pipeline,
+            vec![blk(4, 4, 0), blk(4, 4, 1)],
+            vec![
+                Placement { block: 0, bin: 0, x: 0, y: 0 },
+                Placement { block: 1, bin: 0, x: 4, y: 4 },
+            ],
+            1,
+        );
+        validate(&p).unwrap();
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let p = packing(
+            Discipline::Dense,
+            vec![blk(5, 5, 0)],
+            vec![Placement { block: 0, bin: 0, x: 6, y: 0 }],
+            1,
+        );
+        assert!(validate(&p).unwrap_err().contains("exceeds tile"));
+    }
+
+    #[test]
+    fn unplaced_and_double_placed_rejected() {
+        let p = packing(Discipline::Dense, vec![blk(1, 1, 0)], vec![], 0);
+        assert!(validate(&p).unwrap_err().contains("not placed"));
+        let p = packing(
+            Discipline::Dense,
+            vec![blk(1, 1, 0)],
+            vec![
+                Placement { block: 0, bin: 0, x: 0, y: 0 },
+                Placement { block: 0, bin: 0, x: 2, y: 2 },
+            ],
+            1,
+        );
+        assert!(validate(&p).unwrap_err().contains("twice"));
+    }
+
+    #[test]
+    fn bad_bin_index_rejected() {
+        let p = packing(
+            Discipline::Dense,
+            vec![blk(1, 1, 0)],
+            vec![Placement { block: 0, bin: 3, x: 0, y: 0 }],
+            1,
+        );
+        assert!(validate(&p).unwrap_err().contains("out of range"));
+    }
+}

@@ -1,0 +1,238 @@
+//! The paper's simple packing algorithm (§3).
+//!
+//! Blocks are sorted by row dimension and placed in sequence:
+//!
+//! * **dense** — next-fit shelf: the first block starts a shelf in the
+//!   lower-left corner of the first tile; subsequent blocks stack along the
+//!   word-line (row) direction while `Σ rows <= n_row` (Eq. 6c). When a
+//!   block does not fit, a new shelf opens to the right of the previous one
+//!   (shelf width = widest member, `Σ widths <= n_col`, Eq. 6d); when no
+//!   shelf fits, a new tile opens. This reproduces the layered structure of
+//!   paper Fig. 5.
+//! * **pipeline** — next-fit staircase: blocks are placed corner-to-corner
+//!   along the tile diagonal so no two blocks share a word line or a bit
+//!   line (Fig. 2c); a block that would exceed either `Σ rows <= n_row` or
+//!   `Σ cols <= n_col` (Eq. 7c/7d) opens a new tile. This reproduces the
+//!   staircase structure of paper Fig. 6.
+
+use super::{order_blocks, Discipline, Packing, SortOrder};
+use crate::geom::{Block, Placement, Tile};
+
+/// Pack with the paper's defaults (descending row order).
+pub fn pack(blocks: &[Block], tile: Tile, discipline: Discipline) -> Packing {
+    pack_ordered(blocks, tile, discipline, SortOrder::RowsDesc)
+}
+
+/// Pack with an explicit placement order (ablation hook).
+pub fn pack_ordered(
+    blocks: &[Block],
+    tile: Tile,
+    discipline: Discipline,
+    order: SortOrder,
+) -> Packing {
+    let ordered = order_blocks(blocks, order);
+    for b in &ordered {
+        assert!(
+            tile.fits(b.rows, b.cols),
+            "block {b:?} larger than tile {tile}: fragment with this tile first"
+        );
+    }
+    match discipline {
+        Discipline::Dense => dense_next_fit(ordered, tile),
+        Discipline::Pipeline => pipeline_next_fit(ordered, tile),
+    }
+}
+
+/// Dense next-fit shelf packing (see module docs).
+fn dense_next_fit(blocks: Vec<Block>, tile: Tile) -> Packing {
+    let mut placements = Vec::with_capacity(blocks.len());
+    let mut n_bins = 0usize;
+
+    // Current shelf state within the current bin.
+    let mut shelf_x = 0usize; // column offset of current shelf
+    let mut shelf_width = 0usize; // widest member of current shelf
+    let mut shelf_fill = 0usize; // rows used in current shelf
+
+    for (idx, b) in blocks.iter().enumerate() {
+        if n_bins == 0 {
+            n_bins = 1;
+        }
+        // 1) try current shelf: must fit in rows and not widen the shelf
+        //    beyond the bin's remaining column budget.
+        let widened = shelf_width.max(b.cols);
+        if shelf_fill > 0 && shelf_fill + b.rows <= tile.n_row && shelf_x + widened <= tile.n_col
+        {
+            placements.push(Placement { block: idx, bin: n_bins - 1, x: shelf_x, y: shelf_fill });
+            shelf_fill += b.rows;
+            shelf_width = widened;
+            continue;
+        }
+        // 2) open a new shelf to the right (next-fit: never revisit old shelves)
+        let next_x = shelf_x + shelf_width;
+        if shelf_fill > 0 && next_x + b.cols <= tile.n_col {
+            shelf_x = next_x;
+            shelf_width = b.cols;
+            shelf_fill = b.rows;
+            placements.push(Placement { block: idx, bin: n_bins - 1, x: shelf_x, y: 0 });
+            continue;
+        }
+        // 3) open a new bin (or place the very first block)
+        if shelf_fill > 0 {
+            n_bins += 1;
+        }
+        shelf_x = 0;
+        shelf_width = b.cols;
+        shelf_fill = b.rows;
+        placements.push(Placement { block: idx, bin: n_bins - 1, x: 0, y: 0 });
+    }
+
+    Packing { tile, discipline: Discipline::Dense, blocks, placements, n_bins }
+}
+
+/// Pipeline next-fit staircase packing (see module docs).
+fn pipeline_next_fit(blocks: Vec<Block>, tile: Tile) -> Packing {
+    let mut placements = Vec::with_capacity(blocks.len());
+    let mut n_bins = 0usize;
+    let mut row_used = 0usize;
+    let mut col_used = 0usize;
+
+    for (idx, b) in blocks.iter().enumerate() {
+        let fits = row_used + b.rows <= tile.n_row && col_used + b.cols <= tile.n_col;
+        if n_bins == 0 || !fits {
+            n_bins += 1;
+            row_used = 0;
+            col_used = 0;
+        }
+        placements.push(Placement { block: idx, bin: n_bins - 1, x: col_used, y: row_used });
+        row_used += b.rows;
+        col_used += b.cols;
+    }
+
+    Packing { tile, discipline: Discipline::Pipeline, blocks, placements, n_bins }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::BlockKind;
+    use crate::pack::placement::validate;
+
+    fn blk(rows: usize, cols: usize, layer: usize) -> Block {
+        Block { rows, cols, layer, replica: 0, grid: (0, 0), kind: BlockKind::Sparse }
+    }
+
+    /// The paper's 13-item demo list (Eq. 7 text), layers tagged by index.
+    pub fn paper_items() -> Vec<Block> {
+        [
+            (257, 256),
+            (257, 256),
+            (257, 256),
+            (129, 256),
+            (129, 128),
+            (129, 128),
+            (129, 128),
+            (129, 128),
+            (65, 128),
+            (148, 64),
+            (65, 64),
+            (65, 64),
+            (65, 64),
+        ]
+        .iter()
+        .enumerate()
+        .map(|(i, &(r, c))| blk(r, c, i))
+        .collect()
+    }
+
+    #[test]
+    fn dense_demo_within_one_of_optimum() {
+        // Paper Table 3 / Fig. 5: the binary-linear-optimization optimum for
+        // the demo list is 2 bins (asserted in the ilp tests). The greedy
+        // next-fit simple algorithm lands within one bin of it — the
+        // "good correlation, not equality" of paper Fig. 7.
+        let p = pack(&paper_items(), Tile::new(512, 512), Discipline::Dense);
+        validate(&p).unwrap();
+        assert_eq!(p.n_bins, 3, "placements: {:?}", p.placements);
+    }
+
+    #[test]
+    fn pipeline_demo_within_one_of_optimum() {
+        // Paper Table 5 / Fig. 6: pipeline optimum is 4 bins; next-fit
+        // staircase uses 6 (it cannot revisit earlier bins).
+        let p = pack(&paper_items(), Tile::new(512, 512), Discipline::Pipeline);
+        validate(&p).unwrap();
+        assert_eq!(p.n_bins, 6, "placements: {:?}", p.placements);
+    }
+
+    #[test]
+    fn single_block_single_bin() {
+        for d in [Discipline::Dense, Discipline::Pipeline] {
+            let p = pack(&[blk(10, 10, 0)], Tile::new(64, 64), d);
+            assert_eq!(p.n_bins, 1);
+            assert_eq!(p.placements[0], Placement { block: 0, bin: 0, x: 0, y: 0 });
+        }
+    }
+
+    #[test]
+    fn empty_input_zero_bins() {
+        for d in [Discipline::Dense, Discipline::Pipeline] {
+            let p = pack(&[], Tile::new(64, 64), d);
+            assert_eq!(p.n_bins, 0);
+            assert!(p.placements.is_empty());
+        }
+    }
+
+    #[test]
+    fn full_blocks_one_bin_each() {
+        let blocks = vec![blk(64, 64, 0), blk(64, 64, 1), blk(64, 64, 2)];
+        for d in [Discipline::Dense, Discipline::Pipeline] {
+            let p = pack(&blocks, Tile::new(64, 64), d);
+            validate(&p).unwrap();
+            assert_eq!(p.n_bins, 3, "{d}");
+        }
+    }
+
+    #[test]
+    fn pipeline_uses_at_least_dense_bins() {
+        let blocks = paper_items();
+        let tile = Tile::new(512, 512);
+        let dense = pack(&blocks, tile, Discipline::Dense);
+        let pipe = pack(&blocks, tile, Discipline::Pipeline);
+        assert!(pipe.n_bins >= dense.n_bins);
+    }
+
+    #[test]
+    #[should_panic(expected = "larger than tile")]
+    fn oversized_block_rejected() {
+        pack(&[blk(100, 1, 0)], Tile::new(64, 64), Discipline::Dense);
+    }
+
+    #[test]
+    fn dense_shelves_never_overlap_even_with_mixed_widths() {
+        // regression: a wide block joining a narrow shelf must account for
+        // the shelf's widened footprint against the column budget
+        let blocks = vec![blk(30, 10, 0), blk(30, 60, 1), blk(30, 60, 2), blk(5, 40, 3)];
+        let p = pack_ordered(&blocks, Tile::new(64, 64), Discipline::Dense, SortOrder::AsGiven);
+        validate(&p).unwrap();
+    }
+
+    #[test]
+    fn ascending_order_ablation_still_valid() {
+        let p = pack_ordered(
+            &paper_items(),
+            Tile::new(512, 512),
+            Discipline::Dense,
+            SortOrder::RowsAsc,
+        );
+        validate(&p).unwrap();
+        // ascending order wastes shelves; expect >= the optimum's bins
+        assert!(p.n_bins >= 2);
+    }
+
+    #[test]
+    fn packing_efficiency_in_unit_interval() {
+        let p = pack(&paper_items(), Tile::new(512, 512), Discipline::Dense);
+        let e = p.packing_efficiency();
+        assert!(e > 0.0 && e <= 1.0, "efficiency {e}");
+    }
+}

@@ -1,0 +1,175 @@
+//! Latency and throughput models (paper Eq. 3–4) and the RAPA replication
+//! planner (Fig. 3).
+
+pub mod rapa;
+
+use crate::nets::Network;
+
+/// Timing parameters (seconds). The tile time is dominated by bit-line
+/// integration (t_tile ≈ t_int, §2); digital post-processing and inter-tile
+/// communication are modelled as lump terms exactly as in Eq. 3/4.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingModel {
+    /// per-tile execution (integration) time
+    pub t_tile: f64,
+    /// additional digital processing per inference
+    pub t_dig: f64,
+    /// inter-tile communication per inference
+    pub t_com: f64,
+}
+
+impl Default for TimingModel {
+    fn default() -> Self {
+        // 100 ns integration (typical for PCM/ReRAM readout), communication
+        // and digital lumps well hidden below it.
+        TimingModel { t_tile: 100e-9, t_dig: 20e-9, t_com: 20e-9 }
+    }
+}
+
+/// Execution style for the latency model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Execution {
+    /// one layer at a time, signal traverses all layers (Eq. 3)
+    Sequential,
+    /// all layers active simultaneously, staged on the slowest (Eq. 4)
+    Pipelined,
+}
+
+/// Effective per-layer reuse after replication: ceil(N_reuse / N_rapa).
+pub fn effective_reuse(net: &Network, replication: &[usize]) -> Vec<usize> {
+    assert_eq!(replication.len(), net.n_layers(), "replication arity");
+    net.layers
+        .iter()
+        .zip(replication)
+        .map(|(l, &r)| l.reuse().div_ceil(r.max(1)))
+        .collect()
+}
+
+/// Latency of one inference (seconds) under the paper's model.
+pub fn latency(
+    net: &Network,
+    replication: &[usize],
+    timing: &TimingModel,
+    exec: Execution,
+) -> f64 {
+    let reuse = effective_reuse(net, replication);
+    match exec {
+        Execution::Sequential => {
+            // Eq. 3: t = t_tile * Σ_k N_reuse^k + t_dig + t_com
+            timing.t_tile * reuse.iter().sum::<usize>() as f64 + timing.t_dig + timing.t_com
+        }
+        Execution::Pipelined => {
+            // Eq. 4: t = max(t_tile * N_reuse^max, t_com, t_dig)
+            let slowest = reuse.iter().copied().max().unwrap_or(0) as f64;
+            (timing.t_tile * slowest).max(timing.t_com).max(timing.t_dig)
+        }
+    }
+}
+
+/// Steady-state throughput (inferences/second).
+///
+/// Sequential execution admits one inference per full latency; a pipeline
+/// accepts a new inference every pipeline beat (its Eq. 4 latency).
+pub fn throughput(
+    net: &Network,
+    replication: &[usize],
+    timing: &TimingModel,
+    exec: Execution,
+) -> f64 {
+    1.0 / latency(net, replication, timing, exec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::{zoo, Layer, Network};
+
+    fn fc_net(n: usize) -> Network {
+        Network::new(
+            "fc",
+            "t",
+            (0..n).map(|i| Layer::fc(&format!("l{i}"), 64, 64)).collect(),
+        )
+    }
+
+    #[test]
+    fn fc_sequential_latency_is_nl_tiles() {
+        // Eq. 3 with N_reuse == 1 for all k: t = N_L * t_tile + t_dig + t_com
+        let net = fc_net(5);
+        let tm = TimingModel { t_tile: 100e-9, t_dig: 7e-9, t_com: 3e-9 };
+        let t = latency(&net, &vec![1; 5], &tm, Execution::Sequential);
+        assert!((t - (5.0 * 100e-9 + 10e-9)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn fc_pipeline_latency_is_single_tile() {
+        let net = fc_net(5);
+        let tm = TimingModel::default();
+        let t = latency(&net, &vec![1; 5], &tm, Execution::Pipelined);
+        assert!((t - 100e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn pipeline_floor_is_communication() {
+        let net = fc_net(2);
+        let tm = TimingModel { t_tile: 1e-9, t_dig: 0.0, t_com: 50e-9 };
+        let t = latency(&net, &vec![1; 2], &tm, Execution::Pipelined);
+        assert_eq!(t, 50e-9);
+    }
+
+    #[test]
+    fn cnn_pipeline_dominated_by_first_layer_reuse() {
+        // §2: "most of the execution time is spent in the first layers"
+        let net = zoo::resnet18();
+        let tm = TimingModel::default();
+        let ones = vec![1; net.n_layers()];
+        let t = latency(&net, &ones, &tm, Execution::Pipelined);
+        assert!((t - tm.t_tile * net.max_reuse() as f64).abs() < 1e-12);
+        assert_eq!(net.max_reuse(), 12544); // conv1 on 224²
+    }
+
+    #[test]
+    fn rapa_replication_cuts_pipeline_latency() {
+        let net = zoo::resnet18();
+        let tm = TimingModel::default();
+        let ones = vec![1; net.n_layers()];
+        let base = latency(&net, &ones, &tm, Execution::Pipelined);
+        let plan = rapa::plan_balanced(&net, 128);
+        let accel = latency(&net, &plan, &tm, Execution::Pipelined);
+        let speedup = base / accel;
+        // paper Fig. 9: RAPA 128/4 gives ~100x throughput improvement
+        assert!(
+            (50.0..=128.0).contains(&speedup),
+            "RAPA speedup {speedup} outside expected band"
+        );
+    }
+
+    #[test]
+    fn effective_reuse_ceils() {
+        let net = fc_net(1);
+        let mut n2 = net.clone();
+        n2.layers[0].reuse_override = Some(10);
+        assert_eq!(effective_reuse(&n2, &[3]), vec![4]); // ceil(10/3)
+        assert_eq!(effective_reuse(&n2, &[1]), vec![10]);
+    }
+
+    #[test]
+    fn throughput_is_reciprocal() {
+        let net = fc_net(3);
+        let tm = TimingModel::default();
+        let lat = latency(&net, &vec![1; 3], &tm, Execution::Pipelined);
+        let thr = throughput(&net, &vec![1; 3], &tm, Execution::Pipelined);
+        assert!((thr * lat - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sequential_slower_than_pipeline() {
+        let net = zoo::alexnet();
+        let tm = TimingModel::default();
+        let ones = vec![1; net.n_layers()];
+        assert!(
+            latency(&net, &ones, &tm, Execution::Sequential)
+                > latency(&net, &ones, &tm, Execution::Pipelined)
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! RAPA (Replicated Arrays with Permuted Assignment) planning — Fig. 3.
+//!
+//! Replicating a layer's weight matrix N_rapa times lets N_rapa columns of
+//! its im2col input matrix be processed in parallel, dividing the layer's
+//! effective reuse by N_rapa.  The planner chooses per-layer factors so
+//! that the computational load `ceil(N_reuse / N_rapa)` is similar across
+//! the network ("load balance... otherwise the slowest layer will be the
+//! performance bottleneck").
+
+use crate::nets::{LayerKind, Network};
+
+/// The paper's "n0/f" notation (e.g. 128/4 for ResNet): the first layer
+/// gets `n0`, and the factor divides by `f` every time the spatial
+/// resolution drops (each CNN stage), clamped to >= 1. FC layers get 1.
+pub fn plan_geometric(net: &Network, n0: usize, f: usize) -> Vec<usize> {
+    assert!(n0 >= 1 && f >= 1);
+    let mut out = Vec::with_capacity(net.n_layers());
+    let mut current = n0;
+    let mut last_out_size: Option<usize> = None;
+    for layer in &net.layers {
+        match layer.kind {
+            LayerKind::Fc { .. } => out.push(1),
+            LayerKind::Conv { .. } => {
+                let o = layer.out_size().unwrap();
+                if let Some(prev) = last_out_size {
+                    if o < prev {
+                        current = (current / f).max(1);
+                    }
+                }
+                last_out_size = Some(o);
+                out.push(current.max(1));
+            }
+        }
+    }
+    out
+}
+
+/// Load-balanced plan: replicate each layer proportionally to its reuse so
+/// every layer's effective reuse matches the first layer's after `n0`-fold
+/// replication. `r_l = clamp(round(reuse_l * n0 / reuse_max), 1, n0)`.
+pub fn plan_balanced(net: &Network, n0: usize) -> Vec<usize> {
+    assert!(n0 >= 1);
+    let reuse_max = net.max_reuse().max(1);
+    net.layers
+        .iter()
+        .map(|l| {
+            let r = (l.reuse() * n0 + reuse_max / 2) / reuse_max;
+            r.clamp(1, n0)
+        })
+        .collect()
+}
+
+/// Uniform replication (BERT's "replicate by the sequence length S").
+pub fn plan_uniform(net: &Network, s: usize) -> Vec<usize> {
+    vec![s.max(1); net.n_layers()]
+}
+
+/// Total weight inflation factor of a plan (area cost of replication).
+pub fn weight_inflation(net: &Network, plan: &[usize]) -> f64 {
+    assert_eq!(plan.len(), net.n_layers());
+    let base: usize = net.total_weights();
+    let replicated: usize = net
+        .layers
+        .iter()
+        .zip(plan)
+        .map(|(l, &r)| l.weights() * r.max(1))
+        .sum();
+    replicated as f64 / base as f64
+}
+
+/// Load imbalance of a plan: max over layers of effective reuse divided by
+/// the mean (1.0 = perfectly balanced).
+pub fn imbalance(net: &Network, plan: &[usize]) -> f64 {
+    let eff = super::effective_reuse(net, plan);
+    let max = *eff.iter().max().unwrap_or(&1) as f64;
+    let mean = eff.iter().sum::<usize>() as f64 / eff.len().max(1) as f64;
+    max / mean.max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nets::zoo;
+
+    #[test]
+    fn geometric_resnet18_starts_at_n0_and_decays() {
+        let net = zoo::resnet18();
+        let plan = plan_geometric(&net, 128, 4);
+        assert_eq!(plan[0], 128); // conv1
+        // monotone non-increasing over conv layers
+        let conv_plan: Vec<usize> = plan
+            .iter()
+            .zip(&net.layers)
+            .filter(|(_, l)| matches!(l.kind, crate::nets::LayerKind::Conv { .. }))
+            .map(|(r, _)| *r)
+            .collect();
+        for w in conv_plan.windows(2) {
+            assert!(w[0] >= w[1], "{conv_plan:?}");
+        }
+        // fc gets 1
+        assert_eq!(*plan.last().unwrap(), 1);
+        // four stages of downsampling after conv1 -> 128/4^4 -> 1 at the end
+        assert_eq!(*conv_plan.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn balanced_reduces_imbalance() {
+        let net = zoo::resnet18();
+        let ones = vec![1; net.n_layers()];
+        let plan = plan_balanced(&net, 128);
+        assert!(imbalance(&net, &plan) < imbalance(&net, &ones));
+        assert!(plan.iter().all(|&r| (1..=128).contains(&r)));
+        assert_eq!(plan[0], 128); // max-reuse layer gets the full factor
+    }
+
+    #[test]
+    fn uniform_plan_for_bert() {
+        let net = zoo::bert_layer(64);
+        let plan = plan_uniform(&net, 64);
+        assert_eq!(plan, vec![64; 6]);
+        // uniform replication perfectly balances a uniform-reuse network
+        assert!((imbalance(&net, &plan) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weight_inflation_bounds() {
+        let net = zoo::resnet18();
+        let ones = vec![1; net.n_layers()];
+        assert_eq!(weight_inflation(&net, &ones), 1.0);
+        let plan = plan_balanced(&net, 128);
+        let infl = weight_inflation(&net, &plan);
+        // paper Fig. 9: RAPA area cost ~5x for ResNet18 128/4
+        assert!((1.5..=12.0).contains(&infl), "inflation {infl}");
+    }
+
+    #[test]
+    fn geometric_f1_never_decays() {
+        let net = zoo::resnet18();
+        let plan = plan_geometric(&net, 8, 1);
+        let conv_replication: Vec<usize> = plan
+            .iter()
+            .zip(&net.layers)
+            .filter(|(_, l)| matches!(l.kind, crate::nets::LayerKind::Conv { .. }))
+            .map(|(r, _)| *r)
+            .collect();
+        assert!(conv_replication.iter().all(|&r| r == 8));
+    }
+}

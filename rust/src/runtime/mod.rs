@@ -1,0 +1,178 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! This is the only module that touches the `xla` crate. Artifacts are the
+//! HLO-text lowerings produced once by `python/compile/aot.py` (HLO *text*
+//! rather than serialized protos because xla_extension 0.5.1 rejects
+//! jax >= 0.5's 64-bit instruction ids; the text parser reassigns them).
+//! Python never runs at request time: the rust binary is self-contained
+//! once `artifacts/` exists.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// An f32 tensor (row-major) crossing the runtime boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(anyhow!("shape {shape:?} wants {n} elements, got {}", data.len()));
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row-major argmax along the last axis (batch of logits -> classes).
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        let cols = *self.shape.last().unwrap_or(&1);
+        self.data
+            .chunks(cols)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+/// PJRT CPU runtime holding compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled HLO artifact.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub path: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModel> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(LoadedModel {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            path: path.to_path_buf(),
+        })
+    }
+}
+
+impl LoadedModel {
+    /// Execute with f32 inputs; returns the first element of the result
+    /// tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Tensor> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let shape: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&t.data)
+                .reshape(&shape)
+                .map_err(|e| anyhow!("reshape input to {shape:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("no output buffer"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch output: {e:?}"))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple output: {e:?}"))?;
+        let shape = out
+            .array_shape()
+            .map_err(|e| anyhow!("output shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = out.to_vec::<f32>().map_err(|e| anyhow!("output data: {e:?}"))?;
+        Tensor::new(dims, data)
+    }
+}
+
+/// Locate the artifacts directory: explicit argument, `XBARMAP_ARTIFACTS`,
+/// or `./artifacts` relative to the current directory / crate root.
+pub fn artifacts_dir(explicit: Option<&str>) -> PathBuf {
+    if let Some(p) = explicit {
+        return PathBuf::from(p);
+    }
+    if let Ok(p) = std::env::var("XBARMAP_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checked() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn tensor_argmax_rows() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.0, 1.0, 0.2, 0.3]).unwrap();
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn artifacts_dir_explicit_wins() {
+        assert_eq!(artifacts_dir(Some("/tmp/a")), PathBuf::from("/tmp/a"));
+    }
+
+    // PJRT-touching tests live in rust/tests/integration_runtime.rs so the
+    // unit suite stays free of the (slow) client construction.
+}

@@ -1,0 +1,261 @@
+//! Cycle-level execution simulator for a mapped network.
+//!
+//! Validates the closed-form latency models (Eq. 3/4) from first
+//! principles and produces the throughput/utilization numbers behind
+//! Fig. 9's performance claims: the chip is simulated as a set of tiles
+//! (the packing's bins), each serving the layer blocks placed on it, in
+//! tile-time quanta ("cycles" of duration `t_tile`).
+//!
+//! * **Sequential** execution activates one layer at a time; a layer with
+//!   effective reuse `r` holds its tiles for `r` cycles; the next inference
+//!   starts only after the previous one drained (plus the lump `t_dig`,
+//!   `t_com` terms of Eq. 3).
+//! * **Pipelined** execution streams inferences: every layer works on a
+//!   different inference simultaneously, so a new input is accepted every
+//!   `beat = max_l r_l` cycles (Eq. 4) and the first result appears after
+//!   `depth` stages.
+
+use crate::nets::Network;
+use crate::pack::{Discipline, Packing};
+use crate::perf::{effective_reuse, Execution, TimingModel};
+
+/// Simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub timing: TimingModel,
+    pub exec: Execution,
+    /// per-layer RAPA replication (1 = none)
+    pub replication: Vec<usize>,
+}
+
+impl SimConfig {
+    pub fn new(net: &Network, exec: Execution) -> SimConfig {
+        SimConfig {
+            timing: TimingModel::default(),
+            exec,
+            replication: vec![1; net.n_layers()],
+        }
+    }
+}
+
+/// Simulation outcome for a batch of inferences.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub n_inferences: usize,
+    /// tile-time quanta until the last result
+    pub makespan_cycles: u64,
+    /// seconds from first input to first result
+    pub first_latency_s: f64,
+    /// seconds until the last result
+    pub total_time_s: f64,
+    /// steady-state results per second
+    pub throughput_per_s: f64,
+    /// per-tile busy cycles
+    pub tile_busy: Vec<u64>,
+    /// mean tile utilization over the makespan
+    pub utilization: f64,
+    /// inter-tile messages (layer boundary crossings x inferences)
+    pub messages: u64,
+}
+
+/// Simulate `n_inferences` through the mapped network.
+///
+/// The packing must host every layer of `net` (its blocks' `layer` fields
+/// index into `net.layers`).
+pub fn simulate(
+    net: &Network,
+    packing: &Packing,
+    cfg: &SimConfig,
+    n_inferences: usize,
+) -> SimReport {
+    assert!(n_inferences > 0, "need at least one inference");
+    let reuse = effective_reuse(net, &cfg.replication);
+    let n_layers = net.n_layers();
+    let n_tiles = packing.n_bins.max(1);
+
+    // tiles hosting each layer
+    let mut layer_tiles: Vec<Vec<usize>> = vec![Vec::new(); n_layers];
+    for l in 0..n_layers {
+        layer_tiles[l] = packing.layer_bins(l);
+    }
+    for (l, tiles) in layer_tiles.iter().enumerate() {
+        assert!(
+            !tiles.is_empty(),
+            "layer {l} has no blocks in the packing — fragment the same network"
+        );
+    }
+
+    // inter-tile messages: one per consecutive-layer tile pair per inference
+    let mut messages_per_inf = 0u64;
+    for w in layer_tiles.windows(2) {
+        let crossing = w[0].iter().any(|t| !w[1].contains(t)) || w[0].len() > 1;
+        if crossing {
+            messages_per_inf += (w[0].len() * w[1].len()) as u64;
+        }
+    }
+
+    let mut tile_busy = vec![0u64; n_tiles];
+    let (makespan, first_latency_cycles) = match cfg.exec {
+        Execution::Sequential => {
+            // layers run one after another; each inference drains fully
+            let per_inf: u64 = reuse.iter().map(|&r| r as u64).sum();
+            for (l, tiles) in layer_tiles.iter().enumerate() {
+                for &t in tiles {
+                    tile_busy[t] += reuse[l] as u64 * n_inferences as u64;
+                }
+            }
+            (per_inf * n_inferences as u64, per_inf)
+        }
+        Execution::Pipelined => {
+            // beat = slowest stage; depth = number of stages
+            let beat = reuse.iter().copied().max().unwrap_or(1) as u64;
+            let depth = n_layers as u64;
+            for (l, tiles) in layer_tiles.iter().enumerate() {
+                for &t in tiles {
+                    tile_busy[t] += reuse[l] as u64 * n_inferences as u64;
+                }
+            }
+            (depth * beat + (n_inferences as u64 - 1) * beat, depth * beat)
+        }
+    };
+
+    let lump = cfg.timing.t_dig + cfg.timing.t_com;
+    let total_time_s = makespan as f64 * cfg.timing.t_tile
+        + match cfg.exec {
+            Execution::Sequential => lump * n_inferences as f64,
+            Execution::Pipelined => lump,
+        };
+    let first_latency_s = first_latency_cycles as f64 * cfg.timing.t_tile + lump;
+    let throughput = n_inferences as f64 / total_time_s;
+    let busy_total: u64 = tile_busy.iter().sum();
+    let utilization = busy_total as f64 / (makespan.max(1) * n_tiles as u64) as f64;
+
+    SimReport {
+        n_inferences,
+        makespan_cycles: makespan,
+        first_latency_s,
+        total_time_s,
+        throughput_per_s: throughput,
+        tile_busy,
+        utilization,
+        messages: messages_per_inf * n_inferences as u64,
+    }
+}
+
+/// Convenience: pack a network and simulate in one call.
+pub fn map_and_simulate(
+    net: &Network,
+    tile: crate::geom::Tile,
+    discipline: Discipline,
+    cfg: &SimConfig,
+    n_inferences: usize,
+) -> (Packing, SimReport) {
+    let blocks = crate::frag::fragment_network_replicated(net, tile, &cfg.replication);
+    let packing = crate::pack::simple::pack(&blocks, tile, discipline);
+    let report = simulate(net, &packing, cfg, n_inferences);
+    (packing, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geom::Tile;
+    use crate::nets::zoo;
+    use crate::perf::{latency, rapa};
+
+    const T: Tile = Tile::new(512, 512);
+
+    #[test]
+    fn sequential_single_inference_matches_eq3() {
+        let net = zoo::lenet();
+        let cfg = SimConfig::new(&net, Execution::Sequential);
+        let (_, rep) = map_and_simulate(&net, T, Discipline::Dense, &cfg, 1);
+        let analytic = latency(&net, &cfg.replication, &cfg.timing, Execution::Sequential);
+        assert!(
+            (rep.total_time_s - analytic).abs() / analytic < 1e-9,
+            "sim {} vs Eq.3 {}",
+            rep.total_time_s,
+            analytic
+        );
+    }
+
+    #[test]
+    fn pipelined_beat_matches_eq4() {
+        let net = zoo::lenet();
+        let cfg = SimConfig::new(&net, Execution::Pipelined);
+        let (_, rep) = map_and_simulate(&net, T, Discipline::Pipeline, &cfg, 1000);
+        // steady-state inter-result spacing == Eq. 4 latency
+        let beat = latency(&net, &cfg.replication, &cfg.timing, Execution::Pipelined);
+        let spacing = rep.total_time_s / rep.n_inferences as f64;
+        assert!(
+            (spacing - beat).abs() / beat < 0.05,
+            "spacing {spacing} vs beat {beat}"
+        );
+    }
+
+    #[test]
+    fn pipeline_beats_sequential_throughput() {
+        let net = zoo::lenet();
+        let seq_cfg = SimConfig::new(&net, Execution::Sequential);
+        let pipe_cfg = SimConfig::new(&net, Execution::Pipelined);
+        let (_, seq) = map_and_simulate(&net, T, Discipline::Dense, &seq_cfg, 100);
+        let (_, pipe) = map_and_simulate(&net, T, Discipline::Pipeline, &pipe_cfg, 100);
+        assert!(pipe.throughput_per_s > seq.throughput_per_s);
+    }
+
+    #[test]
+    fn rapa_improves_pipeline_throughput_about_100x() {
+        // Fig. 9: RAPA (128/4) throughput improvement ~100x over plain
+        // pipeline for ResNet18/ImageNet
+        let net = zoo::resnet18();
+        let base_cfg = SimConfig::new(&net, Execution::Pipelined);
+        let (_, base) = map_and_simulate(&net, T, Discipline::Pipeline, &base_cfg, 200);
+        let mut rapa_cfg = SimConfig::new(&net, Execution::Pipelined);
+        rapa_cfg.replication = rapa::plan_balanced(&net, 128);
+        let (_, fast) = map_and_simulate(&net, T, Discipline::Pipeline, &rapa_cfg, 200);
+        let speedup = fast.throughput_per_s / base.throughput_per_s;
+        assert!(
+            (40.0..=130.0).contains(&speedup),
+            "RAPA throughput speedup {speedup}"
+        );
+    }
+
+    #[test]
+    fn utilization_in_unit_interval_and_busy_conserved() {
+        let net = zoo::alexnet();
+        let cfg = SimConfig::new(&net, Execution::Sequential);
+        let (packing, rep) = map_and_simulate(&net, T, Discipline::Dense, &cfg, 3);
+        assert!(rep.utilization > 0.0 && rep.utilization <= 1.0);
+        assert_eq!(rep.tile_busy.len(), packing.n_bins);
+        // every tile hosting blocks accumulates busy time
+        assert!(rep.tile_busy.iter().all(|&b| b > 0));
+    }
+
+    #[test]
+    fn messages_scale_with_inferences() {
+        let net = zoo::lenet();
+        let cfg = SimConfig::new(&net, Execution::Pipelined);
+        let (_, r1) = map_and_simulate(&net, T, Discipline::Pipeline, &cfg, 10);
+        let (_, r2) = map_and_simulate(&net, T, Discipline::Pipeline, &cfg, 20);
+        assert_eq!(r2.messages, 2 * r1.messages);
+    }
+
+    #[test]
+    fn first_latency_less_than_total_for_batches() {
+        let net = zoo::lenet();
+        let cfg = SimConfig::new(&net, Execution::Pipelined);
+        let (_, rep) = map_and_simulate(&net, T, Discipline::Pipeline, &cfg, 50);
+        assert!(rep.first_latency_s < rep.total_time_s);
+    }
+
+    #[test]
+    #[should_panic(expected = "layer")]
+    fn packing_of_wrong_network_rejected() {
+        let net = zoo::lenet();
+        let other = zoo::alexnet();
+        let blocks = crate::frag::fragment_network(&net, T);
+        let packing = crate::pack::simple::pack(&blocks, T, Discipline::Dense);
+        let cfg = SimConfig::new(&other, Execution::Sequential);
+        simulate(&other, &packing, &cfg, 1);
+    }
+}

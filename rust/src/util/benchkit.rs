@@ -1,0 +1,169 @@
+//! Micro-benchmark harness (criterion is not vendored offline).
+//!
+//! `cargo bench` targets use `harness = false` and call [`Bench::run`]
+//! directly. The harness warms up, auto-scales iteration counts to a target
+//! measurement time, and reports min/p50/p95/mean per benchmark in both
+//! human-readable and machine-readable (JSON lines) form.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected statistics (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl Stats {
+    pub fn throughput_per_sec(&self) -> f64 {
+        1e9 / self.p50_ns
+    }
+}
+
+/// Benchmark runner with fixed warmup/measure budgets.
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    pub results: Vec<Stats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new(Duration::from_millis(200), Duration::from_millis(800))
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: Duration, measure: Duration) -> Self {
+        Bench { warmup, measure, results: Vec::new() }
+    }
+
+    /// Fast profile for CI / smoke runs (XBARMAP_BENCH_FAST=1).
+    pub fn from_env() -> Self {
+        if std::env::var("XBARMAP_BENCH_FAST").is_ok() {
+            Bench::new(Duration::from_millis(20), Duration::from_millis(100))
+        } else {
+            Bench::default()
+        }
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call.
+    /// The return value is passed through `black_box` to keep the work alive.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Stats {
+        // Warmup + calibration: how many iters fit in the warmup budget?
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.warmup || warm_iters < 3 {
+            black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = self.warmup.as_secs_f64() / warm_iters.max(1) as f64;
+        // Batch size targeting ~1ms per sample so Instant overhead is noise.
+        let batch = ((1e-3 / per_iter.max(1e-9)) as u64).clamp(1, 1_000_000);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let meas_start = Instant::now();
+        let mut total_iters = 0u64;
+        while meas_start.elapsed() < self.measure || samples.len() < 5 {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            let dt = t0.elapsed().as_secs_f64() * 1e9 / batch as f64;
+            samples.push(dt);
+            total_iters += batch;
+            if samples.len() > 10_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| samples[(p * (samples.len() - 1) as f64).round() as usize];
+        let stats = Stats {
+            name: name.to_string(),
+            iters: total_iters,
+            min_ns: samples[0],
+            p50_ns: pct(0.50),
+            p95_ns: pct(0.95),
+            mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+        };
+        println!(
+            "bench {:<44} p50 {:>12}  p95 {:>12}  min {:>12}  ({} iters)",
+            stats.name,
+            fmt_ns(stats.p50_ns),
+            fmt_ns(stats.p95_ns),
+            fmt_ns(stats.min_ns),
+            stats.iters
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Emit one JSON line per result (consumed by EXPERIMENTS.md tooling).
+    pub fn emit_jsonl(&self) {
+        use crate::util::json::{Json, JsonObj};
+        for s in &self.results {
+            let mut o = JsonObj::new();
+            o.set("name", s.name.as_str())
+                .set("p50_ns", s.p50_ns)
+                .set("p95_ns", s.p95_ns)
+                .set("min_ns", s.min_ns)
+                .set("mean_ns", s.mean_ns)
+                .set("iters", s.iters);
+            println!("BENCH_JSON {}", Json::Obj(o).dumps());
+        }
+    }
+}
+
+/// Human-friendly nanosecond formatting.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new(Duration::from_millis(5), Duration::from_millis(20));
+        let s = b.run("noop-ish", || 1 + 1).clone();
+        assert!(s.min_ns >= 0.0 && s.p50_ns >= s.min_ns && s.p95_ns >= s.p50_ns);
+        assert!(s.iters > 0);
+    }
+
+    #[test]
+    fn slower_work_measures_slower() {
+        let mut b = Bench::new(Duration::from_millis(5), Duration::from_millis(30));
+        let fast = b.run("fast", || 0u64).p50_ns;
+        let slow = b
+            .run("slow", || {
+                (0..2000u64).fold(0u64, |a, x| a.wrapping_add(black_box(x) * x))
+            })
+            .p50_ns;
+        assert!(slow > fast, "slow {slow} !> fast {fast}");
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5e3).contains("µs"));
+        assert!(fmt_ns(5e6).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

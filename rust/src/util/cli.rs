@@ -1,0 +1,195 @@
+//! Minimal command-line parser (clap is not in the offline vendor set).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value` and
+//! positional arguments, with typed accessors and generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for usage text and validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None => boolean flag; Some(meta) => takes a value shown as <meta>.
+    pub value: Option<&'static str>,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv items against a spec. Unknown `--options` error out.
+    pub fn parse(raw: &[String], specs: &[OptSpec]) -> Result<Args, String> {
+        let mut a = Args::default();
+        for s in specs {
+            if let (Some(_), Some(d)) = (s.value, s.default) {
+                a.opts.insert(s.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}"))?;
+                match (spec.value, inline) {
+                    (None, None) => a.flags.push(name),
+                    (None, Some(_)) => return Err(format!("--{name} takes no value")),
+                    (Some(_), Some(v)) => {
+                        a.opts.insert(name, v);
+                    }
+                    (Some(_), None) => {
+                        let v = it
+                            .next()
+                            .ok_or_else(|| format!("--{name} requires a value"))?;
+                        a.opts.insert(name, v.clone());
+                    }
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        self.opts
+            .get(name)
+            .map(|v| v.parse::<usize>().map_err(|_| format!("--{name}: expected integer, got '{v}'")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        self.opts
+            .get(name)
+            .map(|v| v.parse::<f64>().map_err(|_| format!("--{name}: expected number, got '{v}'")))
+            .transpose()
+    }
+
+    /// Required typed accessors (use after defaults were supplied).
+    pub fn req(&self, name: &str) -> Result<&str, String> {
+        self.get(name).ok_or_else(|| format!("--{name} is required"))
+    }
+
+    pub fn req_usize(&self, name: &str) -> Result<usize, String> {
+        self.get_usize(name)?
+            .ok_or_else(|| format!("--{name} is required"))
+    }
+
+    pub fn req_f64(&self, name: &str) -> Result<f64, String> {
+        self.get_f64(name)?
+            .ok_or_else(|| format!("--{name} is required"))
+    }
+}
+
+/// Render usage text for a command.
+pub fn usage(prog: &str, about: &str, subcommands: &[(&str, &str)], specs: &[OptSpec]) -> String {
+    let mut s = format!("{prog} — {about}\n\nUSAGE:\n  {prog}");
+    if !subcommands.is_empty() {
+        s.push_str(" <COMMAND>");
+    }
+    s.push_str(" [OPTIONS]\n");
+    if !subcommands.is_empty() {
+        s.push_str("\nCOMMANDS:\n");
+        for (name, help) in subcommands {
+            s.push_str(&format!("  {name:<14} {help}\n"));
+        }
+    }
+    if !specs.is_empty() {
+        s.push_str("\nOPTIONS:\n");
+        for spec in specs {
+            let left = match spec.value {
+                Some(meta) => format!("--{} <{meta}>", spec.name),
+                None => format!("--{}", spec.name),
+            };
+            let dflt = spec
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {left:<26} {}{dflt}\n", spec.help));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "out", help: "output dir", value: Some("DIR"), default: Some("results") },
+            OptSpec { name: "seed", help: "prng seed", value: Some("N"), default: Some("7") },
+            OptSpec { name: "verbose", help: "log more", value: None, default: None },
+        ]
+    }
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let a = Args::parse(&[], &specs()).unwrap();
+        assert_eq!(a.get("out"), Some("results"));
+        assert_eq!(a.get_usize("seed").unwrap(), Some(7));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn parse_forms() {
+        let a = Args::parse(&sv(&["--out", "/tmp/x", "--seed=9", "--verbose", "pos1"]), &specs()).unwrap();
+        assert_eq!(a.get("out"), Some("/tmp/x"));
+        assert_eq!(a.get_usize("seed").unwrap(), Some(9));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(Args::parse(&sv(&["--nope"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["--out"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(Args::parse(&sv(&["--verbose=yes"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&sv(&["--seed", "abc"]), &specs()).unwrap();
+        assert!(a.get_usize("seed").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_everything() {
+        let u = usage("xbarmap", "test", &[("repro", "regen figures")], &specs());
+        for needle in ["xbarmap", "repro", "--out", "--verbose", "default: results"] {
+            assert!(u.contains(needle), "usage missing {needle}: {u}");
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Self-built substrates: the offline crate set vendors only the xla stack,
+//! so JSON, CLI parsing, PRNG, property testing and micro-benchmarking are
+//! implemented here (see DESIGN.md §3 substitutions).
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod table;

@@ -1,0 +1,136 @@
+//! Tiny property-based testing kit (proptest is not vendored offline).
+//!
+//! A property is a closure over a [`crate::util::prng::Rng`]; the runner
+//! executes it for N deterministic cases and, on failure, retries with the
+//! same seed to report the minimal failing case index so failures are
+//! reproducible from the printed seed.
+
+use crate::util::prng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0x5EED_CAFE }
+    }
+}
+
+/// Run `prop` for `cfg.cases` deterministic cases. `prop` returns
+/// Err(description) to fail a case. Panics with seed + case index on the
+/// first failure so `cargo test` output pinpoints the reproduction.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        // Each case gets an independent, reproducible stream.
+        let mut rng = Rng::new(cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{} (seed={:#x}): {msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Shorthand with the default config.
+pub fn quickcheck<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check(name, Config::default(), prop);
+}
+
+/// Generator helpers for common shapes used across the packing tests.
+pub mod gen {
+    use crate::util::prng::Rng;
+
+    /// A plausible weight-matrix shape (rows, cols), log-uniform-ish.
+    pub fn layer_shape(rng: &mut Rng, max_dim: usize) -> (usize, usize) {
+        let dim = |r: &mut Rng| {
+            let exp = r.range(0, 13.min(63 - max_dim.leading_zeros() as usize));
+            let base = 1usize << exp;
+            r.range(base, (2 * base).min(max_dim)).max(1)
+        };
+        (dim(rng), dim(rng))
+    }
+
+    /// A tile dimension: power-of-two in [64, 8192] with aspect 1..8.
+    pub fn tile_dims(rng: &mut Rng) -> (usize, usize) {
+        let n_row = 1usize << rng.range(6, 13);
+        let aspect = rng.range(1, 8);
+        (n_row, (n_row / aspect).max(1))
+    }
+
+    /// A vector of block shapes all fitting within (n_row, n_col).
+    pub fn blocks_within(
+        rng: &mut Rng,
+        n: usize,
+        n_row: usize,
+        n_col: usize,
+    ) -> Vec<(usize, usize)> {
+        (0..n)
+            .map(|_| (rng.range(1, n_row), rng.range(1, n_col)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        quickcheck("u64 roundtrip", |rng| {
+            let v = rng.next_u64();
+            if v.wrapping_add(0).wrapping_sub(0) == v {
+                Ok(())
+            } else {
+                Err("arithmetic broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_context() {
+        check("always fails", Config { cases: 3, seed: 1 }, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        quickcheck("gen bounds", |rng| {
+            let (r, c) = gen::tile_dims(rng);
+            if !(64..=8192).contains(&r) || c == 0 || c > r {
+                return Err(format!("tile dims out of range: {r}x{c}"));
+            }
+            for (br, bc) in gen::blocks_within(rng, 16, r, c) {
+                if br == 0 || br > r || bc == 0 || bc > c {
+                    return Err(format!("block {br}x{bc} outside tile {r}x{c}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut trace_a = Vec::new();
+        let mut trace_b = Vec::new();
+        check("trace a", Config { cases: 16, seed: 42 }, |rng| {
+            trace_a.push(rng.next_u64());
+            Ok(())
+        });
+        check("trace b", Config { cases: 16, seed: 42 }, |rng| {
+            trace_b.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(trace_a, trace_b);
+    }
+}

@@ -1,0 +1,192 @@
+//! Integration: the BILP/branch&bound stack against the greedy engines and
+//! against the faithful Eq. 6/Eq. 7 formulations.
+
+use xbarmap::geom::{Block, BlockKind, Tile};
+use xbarmap::ilp::{self, bnb::BnbConfig, model::PipelineModel, Budget};
+use xbarmap::pack::{self, placement, Discipline};
+use xbarmap::report::paper_demo_items;
+use xbarmap::util::prng::Rng;
+
+fn random_blocks(rng: &mut Rng, n: usize, tile: Tile) -> Vec<Block> {
+    (0..n)
+        .map(|i| Block {
+            rows: rng.range(1, tile.n_row),
+            cols: rng.range(1, tile.n_col),
+            layer: i,
+            replica: 0,
+            grid: (0, 0),
+            kind: BlockKind::Sparse,
+        })
+        .collect()
+}
+
+#[test]
+fn demo_headline_2_and_4_bins() {
+    let tile = Tile::new(512, 512);
+    let items = paper_demo_items();
+    let dense = ilp::solve_packing(&items, tile, Discipline::Dense, Budget::default());
+    let pipe = ilp::solve_packing(&items, tile, Discipline::Pipeline, Budget::default());
+    assert_eq!(dense.packing.n_bins, 2, "paper Table 3");
+    assert_eq!(pipe.packing.n_bins, 4, "paper Table 5");
+    assert!(dense.optimal && pipe.optimal);
+    placement::validate(&dense.packing).unwrap();
+    placement::validate(&pipe.packing).unwrap();
+}
+
+/// Cross-validate the specialized combinatorial search against the faithful
+/// Eq. 7 BILP on random small instances: both must find the same optimum.
+#[test]
+fn bilp_and_specialized_agree_on_small_pipeline_instances() {
+    let tile = Tile::new(256, 256);
+    let mut rng = Rng::new(0xC0FFEE);
+    for case in 0..12 {
+        let n = rng.range(3, 7);
+        let blocks = random_blocks(&mut rng, n, tile);
+        let exact = ilp::solve_packing(&blocks, tile, Discipline::Pipeline, Budget::default());
+        let m = PipelineModel::build(&blocks, tile);
+        let r = ilp::bnb::solve(&m.lp, &BnbConfig::default(), None);
+        let (obj, assign) = r.best.unwrap_or_else(|| panic!("case {case}: BILP found nothing"));
+        assert!(r.proven, "case {case}: BILP not proven");
+        assert_eq!(
+            obj.round() as usize,
+            exact.packing.n_bins,
+            "case {case}: BILP {} != specialized {} for {:?}",
+            obj,
+            exact.packing.n_bins,
+            blocks.iter().map(|b| (b.rows, b.cols)).collect::<Vec<_>>()
+        );
+        let p = m.decode(&blocks, tile, &assign);
+        placement::validate(&p).unwrap();
+    }
+}
+
+#[test]
+fn exact_never_worse_than_greedy_on_random_instances() {
+    let tile = Tile::new(512, 512);
+    let mut rng = Rng::new(42);
+    for _ in 0..10 {
+        let n = rng.range(8, 24);
+        let blocks = random_blocks(&mut rng, n, tile);
+        for d in [Discipline::Dense, Discipline::Pipeline] {
+            let greedy = pack::ffd::pack(&blocks, tile, d).n_bins;
+            let r = ilp::solve_packing(
+                &blocks,
+                tile,
+                d,
+                Budget { max_nodes: 300_000, ..Default::default() },
+            );
+            placement::validate(&r.packing).unwrap();
+            assert!(r.packing.n_bins <= greedy);
+            assert!(r.packing.n_bins >= r.lower_bound);
+        }
+    }
+}
+
+#[test]
+fn optimality_certificates_are_sound() {
+    // when the solver claims optimal, no better solution can exist: verify
+    // against brute force on tiny instances
+    let tile = Tile::new(100, 100);
+    let mut rng = Rng::new(7);
+    for _ in 0..8 {
+        let n = rng.range(3, 6);
+        let blocks = random_blocks(&mut rng, n, tile);
+        let r = ilp::solve_packing(&blocks, tile, Discipline::Pipeline, Budget::default());
+        assert!(r.optimal);
+        let best = brute_force_pipeline(&blocks, tile);
+        assert_eq!(r.packing.n_bins, best, "{blocks:?}");
+    }
+}
+
+fn brute_force_pipeline(blocks: &[Block], tile: Tile) -> usize {
+    fn rec(
+        blocks: &[Block],
+        tile: Tile,
+        assign: &mut Vec<usize>,
+        i: usize,
+        used: usize,
+        best: &mut usize,
+    ) {
+        if used >= *best {
+            return;
+        }
+        if i == blocks.len() {
+            *best = used;
+            return;
+        }
+        for b in 0..=used {
+            if b >= *best {
+                break;
+            }
+            assign[i] = b;
+            let mut rows = vec![0usize; used.max(b + 1)];
+            let mut cols = vec![0usize; used.max(b + 1)];
+            let mut ok = true;
+            for j in 0..=i {
+                let blk = blocks[j];
+                let bj = assign[j];
+                rows[bj] += blk.rows;
+                cols[bj] += blk.cols;
+                if rows[bj] > tile.n_row || cols[bj] > tile.n_col {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                rec(blocks, tile, assign, i + 1, used.max(b + 1), best);
+            }
+        }
+    }
+    let n = blocks.len();
+    let mut best = n;
+    let mut assign = vec![0usize; n];
+    rec(blocks, tile, &mut assign, 0, 0, &mut best);
+    best
+}
+
+#[test]
+fn node_budget_is_respected() {
+    let tile = Tile::new(512, 512);
+    let mut rng = Rng::new(99);
+    let blocks = random_blocks(&mut rng, 60, tile);
+    let r = ilp::solve_packing(
+        &blocks,
+        tile,
+        Discipline::Pipeline,
+        Budget { max_nodes: 1_000, ..Default::default() },
+    );
+    assert!(r.nodes <= 1_001);
+    placement::validate(&r.packing).unwrap();
+}
+
+#[test]
+fn max_items_guard_falls_back_to_greedy() {
+    let tile = Tile::new(512, 512);
+    let mut rng = Rng::new(5);
+    let blocks = random_blocks(&mut rng, 30, tile);
+    let r = ilp::solve_packing(
+        &blocks,
+        tile,
+        Discipline::Dense,
+        Budget { max_nodes: 1_000_000, max_items: 10 },
+    );
+    assert_eq!(r.nodes, 0, "search must be skipped above max_items");
+    placement::validate(&r.packing).unwrap();
+}
+
+#[test]
+fn lps_matches_simple_at_large_arrays_table6() {
+    // Table 6 row 5: at 1024x1024, LPS and the simple approach coincide
+    let net = xbarmap::nets::zoo::resnet18();
+    let tile = Tile::new(1024, 1024);
+    let blocks = xbarmap::frag::fragment_network(&net, tile);
+    let simple = pack::simple::pack(&blocks, tile, Discipline::Dense).n_bins;
+    let lps = ilp::solve_packing(&blocks, tile, Discipline::Dense, Budget::default());
+    assert!(lps.packing.n_bins <= simple);
+    assert!(
+        simple - lps.packing.n_bins <= 2,
+        "at 1024² LPS {} and simple {} should nearly coincide",
+        lps.packing.n_bins,
+        simple
+    );
+}

@@ -1,0 +1,150 @@
+//! Integration: fragmentation -> packing -> validation across the zoo.
+
+use xbarmap::frag::{self, Census};
+use xbarmap::geom::Tile;
+use xbarmap::nets::zoo;
+use xbarmap::pack::{self, placement, Discipline};
+
+fn zoo_nets() -> Vec<xbarmap::nets::Network> {
+    vec![
+        zoo::lenet(),
+        zoo::alexnet(),
+        zoo::resnet9(),
+        zoo::resnet18(),
+        zoo::resnet34(),
+        zoo::resnet50(),
+        zoo::bert_layer(64),
+        zoo::digits_mlp(),
+    ]
+}
+
+#[test]
+fn every_network_packs_validly_on_every_tile() {
+    let tiles = [
+        Tile::new(64, 64),
+        Tile::new(256, 256),
+        Tile::new(1024, 1024),
+        Tile::new(2048, 256),
+        Tile::new(128, 1024),
+    ];
+    for net in zoo_nets() {
+        for tile in tiles {
+            let blocks = frag::fragment_network(&net, tile);
+            assert_eq!(
+                frag::total_block_weights(&blocks),
+                net.total_weights(),
+                "{} on {tile}: weights not conserved",
+                net.name
+            );
+            for discipline in [Discipline::Dense, Discipline::Pipeline] {
+                for (engine, packing) in [
+                    ("simple", pack::simple::pack(&blocks, tile, discipline)),
+                    ("ffd", pack::ffd::pack(&blocks, tile, discipline)),
+                ] {
+                    placement::validate(&packing).unwrap_or_else(|e| {
+                        panic!("{} {tile} {discipline} {engine}: {e}", net.name)
+                    });
+                    assert!(packing.n_bins <= blocks.len(), "worse than 1:1");
+                    assert!(packing.n_bins >= 1);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pipeline_needs_at_least_dense_tiles_everywhere() {
+    for net in zoo_nets() {
+        let tile = Tile::new(512, 512);
+        let blocks = frag::fragment_network(&net, tile);
+        let dense = pack::ffd::pack(&blocks, tile, Discipline::Dense);
+        let pipe = pack::ffd::pack(&blocks, tile, Discipline::Pipeline);
+        assert!(
+            pipe.n_bins >= dense.n_bins,
+            "{}: pipeline {} < dense {}",
+            net.name,
+            pipe.n_bins,
+            dense.n_bins
+        );
+    }
+}
+
+#[test]
+fn census_partitions_block_count() {
+    for net in zoo_nets() {
+        for k in [6, 8, 10, 13] {
+            let tile = Tile::new(1 << k, 1 << k);
+            let blocks = frag::fragment_network(&net, tile);
+            let c = Census::of(&blocks);
+            assert_eq!(c.total, c.full + c.row_full + c.col_full + c.sparse);
+            assert_eq!(c.total, blocks.len());
+        }
+    }
+}
+
+#[test]
+fn fig4_shape_for_resnet18() {
+    // Fig. 4: full blocks dominate at small arrays and vanish at large ones;
+    // at the largest array every layer is a single (sparse) block.
+    let net = zoo::resnet18();
+    let small = Census::of(&frag::fragment_network(&net, Tile::new(64, 64)));
+    let large = Census::of(&frag::fragment_network(&net, Tile::new(8192, 8192)));
+    assert!(small.full > small.sparse, "small arrays dominated by full blocks: {small:?}");
+    assert_eq!(large.full, 0, "{large:?}");
+    assert_eq!(large.total, net.n_layers());
+    assert_eq!(large.sparse, net.n_layers());
+}
+
+#[test]
+fn one_to_one_upper_bounds_all_engines() {
+    let net = zoo::alexnet();
+    for k in 6..=13 {
+        let tile = Tile::new(1 << k, 1 << k);
+        let blocks = frag::fragment_network(&net, tile);
+        for d in [Discipline::Dense, Discipline::Pipeline] {
+            assert!(pack::simple::pack(&blocks, tile, d).n_bins <= blocks.len());
+            assert!(pack::ffd::pack(&blocks, tile, d).n_bins <= blocks.len());
+        }
+    }
+}
+
+#[test]
+fn replication_scales_bins_roughly_linearly() {
+    let net = zoo::lenet();
+    let tile = Tile::new(256, 256);
+    let ones = vec![1; net.n_layers()];
+    let fours = vec![4; net.n_layers()];
+    let b1 = pack::ffd::pack(
+        &frag::fragment_network_replicated(&net, tile, &ones),
+        tile,
+        Discipline::Pipeline,
+    );
+    let b4 = pack::ffd::pack(
+        &frag::fragment_network_replicated(&net, tile, &fours),
+        tile,
+        Discipline::Pipeline,
+    );
+    let ratio = b4.n_bins as f64 / b1.n_bins as f64;
+    assert!((2.0..=6.0).contains(&ratio), "4x replication -> {ratio}x bins");
+}
+
+#[test]
+fn dense_packing_efficiency_beats_pipeline() {
+    let net = zoo::resnet18();
+    let tile = Tile::new(512, 512);
+    let blocks = frag::fragment_network(&net, tile);
+    let dense = pack::ffd::pack(&blocks, tile, Discipline::Dense);
+    let pipe = pack::ffd::pack(&blocks, tile, Discipline::Pipeline);
+    assert!(dense.packing_efficiency() > pipe.packing_efficiency());
+}
+
+#[test]
+fn layer_bins_cover_all_layers() {
+    let net = zoo::resnet50();
+    let tile = Tile::new(512, 512);
+    let blocks = frag::fragment_network(&net, tile);
+    let p = pack::simple::pack(&blocks, tile, Discipline::Dense);
+    for l in 0..net.n_layers() {
+        assert!(!p.layer_bins(l).is_empty(), "layer {l} unhosted");
+    }
+}

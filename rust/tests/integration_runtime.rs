@@ -1,0 +1,220 @@
+//! Integration: PJRT runtime + coordinator against the AOT artifacts.
+//!
+//! Requires `make artifacts` (skips gracefully when artifacts are absent so
+//! `cargo test` stays usable in a fresh checkout).
+
+use xbarmap::coordinator::{digits, Coordinator, CoordinatorConfig};
+use xbarmap::runtime::{artifacts_dir, Runtime, Tensor};
+use xbarmap::util::json::{self, Json};
+use xbarmap::util::prng::Rng;
+
+fn have_artifacts() -> bool {
+    artifacts_dir(None).join("meta.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn load_testvec() -> (Vec<f32>, Vec<usize>, Vec<f32>, Vec<f32>) {
+    let dir = artifacts_dir(None);
+    let tv = json::parse(&std::fs::read_to_string(dir.join("testvec.json")).unwrap()).unwrap();
+    let f32s = |k: &str| -> Vec<f32> {
+        tv.get(k)
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect()
+    };
+    let labels = tv
+        .get("labels")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    (f32s("input"), labels, f32s("logits_crossbar"), f32s("logits_fp32"))
+}
+
+/// The core AOT fidelity check: HLO text -> PJRT -> identical numbers to
+/// the build-time jax execution, for BOTH the quantized crossbar model and
+/// the fp32 oracle.
+#[test]
+fn golden_vector_round_trip() {
+    require_artifacts!();
+    let dir = artifacts_dir(None);
+    let (input, _, want_xbar, want_fp32) = load_testvec();
+    let batch = input.len() / digits::N_PIXELS;
+    let rt = Runtime::cpu().unwrap();
+    for (artifact, want, tol) in [
+        ("model.hlo.txt", &want_xbar, 1e-3f32),
+        ("model_fp32.hlo.txt", &want_fp32, 1e-3f32),
+    ] {
+        let model = rt.load_hlo_text(&dir.join(artifact)).unwrap();
+        let out = model
+            .run(&[Tensor::new(vec![batch, digits::N_PIXELS], input.clone()).unwrap()])
+            .unwrap();
+        assert_eq!(out.shape, vec![batch, 10]);
+        let max_diff = out
+            .data
+            .iter()
+            .zip(want.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff < tol, "{artifact}: max diff {max_diff}");
+    }
+}
+
+#[test]
+fn tile_mvm_artifact_runs_with_runtime_weights() {
+    require_artifacts!();
+    let dir = artifacts_dir(None);
+    let rt = Runtime::cpu().unwrap();
+    let tile_op = rt.load_hlo_text(&dir.join("tile_mvm.hlo.txt")).unwrap();
+    // weights as a runtime parameter: zero weights -> zero outputs
+    let meta = json::parse(&std::fs::read_to_string(dir.join("meta.json")).unwrap()).unwrap();
+    let batch = meta.get("batch").unwrap().as_usize().unwrap();
+    let rows = meta.get("tile.n_row").unwrap().as_usize().unwrap();
+    let cols = meta.get("tile.n_col").unwrap().as_usize().unwrap();
+    let x = Tensor::new(vec![batch, rows], vec![1.0; batch * rows]).unwrap();
+    let w0 = Tensor::zeros(vec![rows, cols]);
+    let out = tile_op.run(&[x.clone(), w0]).unwrap();
+    assert_eq!(out.shape, vec![batch, cols]);
+    assert!(out.data.iter().all(|v| *v == 0.0), "zero weights must give zero output");
+
+    // identity-ish weights: column j gets the quantized copy of sum over a
+    // single word line -> deterministic across runs
+    let mut wdata = vec![0f32; rows * cols];
+    for j in 0..cols.min(rows) {
+        wdata[j * cols + j] = 0.5;
+    }
+    let w = Tensor::new(vec![rows, cols], wdata).unwrap();
+    let out1 = tile_op.run(&[x.clone(), w.clone()]).unwrap();
+    let out2 = tile_op.run(&[x, w]).unwrap();
+    assert_eq!(out1.data, out2.data, "tile op must be deterministic");
+    assert!(out1.data.iter().any(|v| *v != 0.0));
+}
+
+#[test]
+fn coordinator_serves_accurately() {
+    require_artifacts!();
+    let coordinator = Coordinator::new(&CoordinatorConfig::default()).unwrap();
+    let mut rng = Rng::new(77);
+    let samples = digits::synth_digits(&mut rng, 512, 0.35);
+    let preds = coordinator.classify(&samples).unwrap();
+    let acc = preds
+        .iter()
+        .zip(&samples)
+        .filter(|(p, s)| **p == s.label)
+        .count() as f64
+        / samples.len() as f64;
+    assert!(acc > 0.95, "served accuracy {acc}");
+    if let Some(build_acc) = coordinator.build_time_accuracy() {
+        assert!((acc - build_acc).abs() < 0.05, "served {acc} vs build {build_acc}");
+    }
+}
+
+#[test]
+fn coordinator_batching_edges() {
+    require_artifacts!();
+    let c = Coordinator::new(&CoordinatorConfig::default()).unwrap();
+    // 1-sample batch and full batch
+    let mut rng = Rng::new(3);
+    let one = digits::synth_digits(&mut rng, 1, 0.0);
+    let logits = c.infer(&one[0].pixels, 1).unwrap();
+    assert_eq!(logits.shape, vec![1, 10]);
+    // oversized batch rejected
+    let too_big = vec![0f32; (c.batch + 1) * digits::N_PIXELS];
+    assert!(c.infer(&too_big, c.batch + 1).is_err());
+    // wrong element count rejected
+    assert!(c.infer(&[0f32; 3], 1).is_err());
+    // padding must not change the real rows: same sample alone vs in a
+    // partially-padded batch
+    let pair = digits::synth_digits(&mut rng, 2, 0.0);
+    let flat: Vec<f32> = pair.iter().flat_map(|s| s.pixels.iter().copied()).collect();
+    let both = c.infer(&flat, 2).unwrap();
+    let solo = c.infer(&pair[0].pixels, 1).unwrap();
+    for (a, b) in solo.data.iter().zip(&both.data[..10]) {
+        assert!((a - b).abs() < 1e-5, "padding changed logits: {a} vs {b}");
+    }
+}
+
+#[test]
+fn serve_loop_processes_all_requests() {
+    require_artifacts!();
+    let c = Coordinator::new(&CoordinatorConfig::default()).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let n = 100;
+    let producer = std::thread::spawn(move || {
+        let mut rng = Rng::new(5);
+        for s in digits::synth_digits(&mut rng, n, 0.35) {
+            tx.send(s).unwrap();
+        }
+    });
+    let stats = c.serve(rx).unwrap();
+    producer.join().unwrap();
+    assert_eq!(stats.requests, n);
+    assert!(stats.batches >= n / c.batch);
+    assert!(stats.throughput_per_s > 0.0);
+    assert!(stats.accuracy > 0.9);
+}
+
+#[test]
+fn deployment_mapping_is_consistent() {
+    require_artifacts!();
+    let c = Coordinator::new(&CoordinatorConfig::default()).unwrap();
+    // DigitsMLP = 785x256 + 257x128 + 129x10 on 256² tiles
+    xbarmap::pack::placement::validate(&c.mapping).unwrap();
+    assert!(c.mapping.n_tiles() >= 4, "at least the full 785x256 fragments");
+    assert!(c.total_area_mm2 > 0.0);
+    assert!(c.modeled_latency_s > 0.0);
+}
+
+#[test]
+fn corrupt_artifact_fails_cleanly() {
+    require_artifacts!();
+    let dir = std::env::temp_dir().join("xbarmap_corrupt");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("bad.hlo.txt"), "HloModule nonsense\nENTRY { garbage }").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let err = match rt.load_hlo_text(&dir.join("bad.hlo.txt")) {
+        Err(e) => e,
+        Ok(_) => panic!("garbage HLO must not load"),
+    };
+    assert!(format!("{err:?}").contains("bad.hlo.txt"), "error names the artifact: {err:?}");
+    // missing file
+    assert!(rt.load_hlo_text(&dir.join("absent.hlo.txt")).is_err());
+}
+
+#[test]
+fn coordinator_missing_artifacts_fails_with_hint() {
+    let cfg = CoordinatorConfig {
+        artifacts: Some("/tmp/definitely_absent_artifacts_dir".into()),
+        ..Default::default()
+    };
+    let err = match Coordinator::new(&cfg) {
+        Err(e) => e,
+        Ok(_) => panic!("missing artifacts must not load"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "error should tell the user the fix: {msg}");
+}
+
+#[test]
+fn wrong_input_shape_rejected_by_runtime() {
+    require_artifacts!();
+    let dir = artifacts_dir(None);
+    let rt = Runtime::cpu().unwrap();
+    let model = rt.load_hlo_text(&dir.join("model.hlo.txt")).unwrap();
+    // wrong rank / wrong element count must not execute
+    let bad = Tensor::new(vec![2, 2], vec![0.0; 4]).unwrap();
+    assert!(model.run(&[bad]).is_err());
+}

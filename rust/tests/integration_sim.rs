@@ -1,0 +1,99 @@
+//! Integration: cycle-level simulator vs the closed-form Eq. 3/4 models,
+//! and the Fig. 9 performance narrative.
+
+use xbarmap::geom::Tile;
+use xbarmap::nets::zoo;
+use xbarmap::pack::Discipline;
+use xbarmap::perf::{self, rapa, Execution, TimingModel};
+use xbarmap::sim::{map_and_simulate, SimConfig};
+
+const T: Tile = Tile::new(512, 512);
+
+#[test]
+fn eq3_holds_for_every_zoo_network() {
+    for net in [zoo::lenet(), zoo::alexnet(), zoo::resnet18(), zoo::resnet50()] {
+        let cfg = SimConfig::new(&net, Execution::Sequential);
+        let (_, rep) = map_and_simulate(&net, T, Discipline::Dense, &cfg, 1);
+        let analytic = perf::latency(&net, &cfg.replication, &cfg.timing, Execution::Sequential);
+        let err = (rep.total_time_s - analytic).abs() / analytic;
+        assert!(err < 1e-9, "{}: sim {} vs Eq.3 {}", net.name, rep.total_time_s, analytic);
+    }
+}
+
+#[test]
+fn eq4_steady_state_throughput() {
+    for net in [zoo::lenet(), zoo::resnet18()] {
+        let cfg = SimConfig::new(&net, Execution::Pipelined);
+        let (_, rep) = map_and_simulate(&net, T, Discipline::Pipeline, &cfg, 500);
+        let beat = perf::latency(&net, &cfg.replication, &cfg.timing, Execution::Pipelined);
+        let spacing = rep.total_time_s / rep.n_inferences as f64;
+        assert!(
+            (spacing - beat).abs() / beat < 0.1,
+            "{}: spacing {spacing} vs Eq.4 beat {beat}",
+            net.name
+        );
+    }
+}
+
+#[test]
+fn fig9_performance_narrative() {
+    // RAPA ~100x over plain pipeline; even larger vs non-pipelined dense.
+    let net = zoo::resnet18();
+    let seq_cfg = SimConfig::new(&net, Execution::Sequential);
+    let (_, seq) = map_and_simulate(&net, T, Discipline::Dense, &seq_cfg, 64);
+    let pipe_cfg = SimConfig::new(&net, Execution::Pipelined);
+    let (_, pipe) = map_and_simulate(&net, T, Discipline::Pipeline, &pipe_cfg, 64);
+    let mut rapa_cfg = SimConfig::new(&net, Execution::Pipelined);
+    rapa_cfg.replication = rapa::plan_balanced(&net, 128);
+    let (_, fast) = map_and_simulate(&net, T, Discipline::Pipeline, &rapa_cfg, 64);
+
+    let rapa_vs_pipe = fast.throughput_per_s / pipe.throughput_per_s;
+    let rapa_vs_dense = fast.throughput_per_s / seq.throughput_per_s;
+    assert!((40.0..=140.0).contains(&rapa_vs_pipe), "RAPA vs pipeline {rapa_vs_pipe}");
+    assert!(rapa_vs_dense > rapa_vs_pipe, "dense sequential must be the slowest baseline");
+}
+
+#[test]
+fn rapa_utilization_improves_load_balance() {
+    let net = zoo::resnet18();
+    let plain = SimConfig::new(&net, Execution::Pipelined);
+    let (_, base) = map_and_simulate(&net, T, Discipline::Pipeline, &plain, 64);
+    let mut balanced = SimConfig::new(&net, Execution::Pipelined);
+    balanced.replication = rapa::plan_balanced(&net, 128);
+    let (_, rapa_rep) = map_and_simulate(&net, T, Discipline::Pipeline, &balanced, 64);
+    assert!(
+        rapa_rep.utilization > base.utilization,
+        "RAPA util {} !> plain util {}",
+        rapa_rep.utilization,
+        base.utilization
+    );
+}
+
+#[test]
+fn timing_lump_terms_respected() {
+    let net = zoo::lenet();
+    let mut cfg = SimConfig::new(&net, Execution::Pipelined);
+    cfg.timing = TimingModel { t_tile: 1e-9, t_dig: 0.0, t_com: 1e-3 };
+    let (_, rep) = map_and_simulate(&net, T, Discipline::Pipeline, &cfg, 1);
+    // communication dominates the modeled pipeline beat... but the simulator
+    // charges the lump once per stream, so first latency >= t_com
+    assert!(rep.first_latency_s >= 1e-3);
+}
+
+#[test]
+fn makespan_grows_linearly_with_inferences() {
+    let net = zoo::alexnet();
+    let cfg = SimConfig::new(&net, Execution::Pipelined);
+    let (_, r10) = map_and_simulate(&net, T, Discipline::Pipeline, &cfg, 10);
+    let (_, r100) = map_and_simulate(&net, T, Discipline::Pipeline, &cfg, 100);
+    let growth = (r100.makespan_cycles - r10.makespan_cycles) as f64 / 90.0;
+    let beat = r10.makespan_cycles as f64
+        - net.n_layers() as f64 * 0.0; // sanity: positive slope near the beat
+    assert!(growth > 0.0 && beat > 0.0);
+    // slope == beat cycles
+    let expected = perf::effective_reuse(&net, &cfg.replication)
+        .into_iter()
+        .max()
+        .unwrap() as f64;
+    assert!((growth - expected).abs() < 1e-9, "slope {growth} vs beat {expected}");
+}

@@ -1,0 +1,151 @@
+//! Integration: the §3.1 optimization sweep end-to-end (Fig. 8/9/10 and
+//! Table 6 claims at the level the repro harness asserts them).
+
+use xbarmap::area::AreaModel;
+use xbarmap::geom::Tile;
+use xbarmap::nets::zoo;
+use xbarmap::opt::{self, Engine, SweepConfig};
+use xbarmap::pack::Discipline;
+use xbarmap::perf::rapa;
+use xbarmap::report;
+
+#[test]
+fn fig8_dense_and_pipeline_optima() {
+    let net = zoo::resnet18();
+    let dense = opt::optimum(&opt::sweep(&net, &SweepConfig::square(Discipline::Dense))).unwrap();
+    let pipe =
+        opt::optimum(&opt::sweep(&net, &SweepConfig::square(Discipline::Pipeline))).unwrap();
+    // paper: dense 16 @1024², pipeline 68 @512² — assert the bands
+    assert!(dense.tile.n_row >= 1024 && dense.tile.n_row <= 2048, "{:?}", dense.tile);
+    assert_eq!(pipe.tile.n_row, 512, "{:?}", pipe.tile);
+    assert!((55..=90).contains(&pipe.n_tiles), "pipeline tiles {}", pipe.n_tiles);
+    // area ordering: pipeline costs more
+    assert!(pipe.total_area_mm2 > dense.total_area_mm2);
+}
+
+#[test]
+fn paper_2560x512_configuration_is_in_the_rect_sweep() {
+    let net = zoo::resnet18();
+    let cfg = SweepConfig::paper_default(Discipline::Pipeline);
+    let pts = opt::sweep(&net, &cfg);
+    let p2560 = pts
+        .iter()
+        .find(|p| p.tile == Tile::new(2560, 512))
+        .expect("2560x512 must be swept (aspect 5 @ 512)");
+    // paper: "approximately in half with 17 rectangular arrays of 2560x512"
+    assert!(
+        (16..=20).contains(&p2560.n_tiles),
+        "2560x512 tiles {} vs paper's 17",
+        p2560.n_tiles
+    );
+    let best = opt::optimum(&pts).unwrap();
+    assert!(best.n_tiles < 40, "rect optimum should slash tile count, got {}", best.n_tiles);
+}
+
+#[test]
+fn fig9_groups_ranking() {
+    // Fig. 9: the three groups have comparable areas per discipline but
+    // RAPA >> pipeline >= dense; rect variants use fewer tiles.
+    let net = zoo::resnet18();
+    let rapa_plan = rapa::plan_balanced(&net, 128);
+    let run = |discipline, aspects: Vec<usize>, replication: Option<Vec<usize>>| {
+        let cfg = SweepConfig {
+            discipline,
+            aspects,
+            replication,
+            ..SweepConfig::paper_default(discipline)
+        };
+        opt::optimum(&opt::sweep(&net, &cfg)).unwrap()
+    };
+    let dense_sq = run(Discipline::Dense, vec![1], None);
+    let dense_rect = run(Discipline::Dense, (1..=8).collect(), None);
+    let pipe_sq = run(Discipline::Pipeline, vec![1], None);
+    let pipe_rect = run(Discipline::Pipeline, (1..=8).collect(), None);
+    let rapa_sq = run(Discipline::Pipeline, vec![1], Some(rapa_plan.clone()));
+    let rapa_rect = run(Discipline::Pipeline, (1..=8).collect(), Some(rapa_plan));
+
+    assert!(dense_rect.total_area_mm2 <= dense_sq.total_area_mm2 * 1.02);
+    assert!(pipe_rect.total_area_mm2 <= pipe_sq.total_area_mm2 * 1.02);
+    assert!(pipe_rect.n_tiles < pipe_sq.n_tiles);
+    assert!(rapa_sq.total_area_mm2 > pipe_sq.total_area_mm2);
+    assert!(rapa_rect.total_area_mm2 > pipe_rect.total_area_mm2);
+    // RAPA area cost vs dense optimum: paper says ~5x
+    let ratio = rapa_sq.total_area_mm2 / dense_sq.total_area_mm2;
+    assert!((3.0..=15.0).contains(&ratio), "RAPA/dense area ratio {ratio}");
+}
+
+#[test]
+fn table6_counts_in_paper_bands() {
+    // paper: ResNet18@256²: 208 (1:1), 177 (LPS), 191 (simple);
+    //        ResNet9@256²: 40/34/35; ResNet18@1024²: 16; ResNet9@1024²: 3.
+    let area = AreaModel::paper_default();
+    let t256 = Tile::new(256, 256);
+    let t1024 = Tile::new(1024, 1024);
+
+    let net18 = zoo::resnet18();
+    let blocks = xbarmap::frag::fragment_network(&net18, t256);
+    let one = blocks.len();
+    let simple = xbarmap::pack::simple::pack(&blocks, t256, Discipline::Dense).n_bins;
+    assert!((190..=240).contains(&one), "1:1 {one} vs paper 208");
+    assert!((160..=210).contains(&simple), "simple {simple} vs paper 191");
+    let total = area.total_area_mm2(one, t256);
+    assert!((190.0..=300.0).contains(&total), "1:1 area {total} vs paper 239 mm²");
+
+    let blocks1024 = xbarmap::frag::fragment_network(&net18, t1024);
+    let s1024 = xbarmap::pack::simple::pack(&blocks1024, t1024, Discipline::Dense).n_bins;
+    assert!((12..=20).contains(&s1024), "{s1024} vs paper 16");
+
+    let net9 = zoo::resnet9();
+    let b9 = xbarmap::frag::fragment_network(&net9, t256);
+    let one9 = b9.len();
+    let s9 = xbarmap::pack::simple::pack(&b9, t256, Discipline::Dense).n_bins;
+    // our standard ResNet9 is heavier than the paper's 1.9M-param variant;
+    // assert orderings rather than absolute counts, documented in EXPERIMENTS.md
+    assert!(s9 <= one9);
+    let b9_1024 = xbarmap::frag::fragment_network(&net9, t1024);
+    let s9_1024 = xbarmap::pack::simple::pack(&b9_1024, t1024, Discipline::Dense).n_bins;
+    assert!(s9_1024 < s9, "larger arrays need fewer tiles");
+}
+
+#[test]
+fn fig10_optimized_beats_one_to_one_at_large_tiles() {
+    // Fig. 10: "the 1:1 implementation loses out at larger tile sizes"
+    for net in [zoo::resnet50(), zoo::bert_layer(64)] {
+        let cfg = SweepConfig::square(Discipline::Pipeline);
+        let pts = opt::sweep(&net, &cfg);
+        let large = pts.iter().find(|p| p.tile.n_row == 4096).unwrap();
+        assert!(
+            large.n_tiles < large.n_tiles_one_to_one,
+            "{}: optimized {} !< 1:1 {}",
+            net.name,
+            large.n_tiles,
+            large.n_tiles_one_to_one
+        );
+    }
+}
+
+#[test]
+fn engines_consistent_across_sweep() {
+    let net = zoo::lenet();
+    for d in [Discipline::Dense, Discipline::Pipeline] {
+        let mk = |engine| SweepConfig { engine, ..SweepConfig::square(d) };
+        let simple = opt::sweep(&net, &mk(Engine::Simple));
+        let ffd = opt::sweep(&net, &mk(Engine::Ffd));
+        let lps = opt::sweep(&net, &mk(Engine::Ilp { max_nodes: 100_000 }));
+        for ((s, f), l) in simple.iter().zip(&ffd).zip(&lps) {
+            assert!(f.n_tiles <= s.n_tiles, "{d} {}: ffd > simple", s.tile);
+            assert!(l.n_tiles <= f.n_tiles, "{d} {}: lps > ffd", s.tile);
+        }
+    }
+}
+
+#[test]
+fn report_harness_runs_every_experiment_fast() {
+    let dir = std::env::temp_dir().join("xbarmap_repro_fast");
+    let _ = std::fs::remove_dir_all(&dir);
+    let written = report::run(&["all".to_string()], &dir, true).unwrap();
+    assert_eq!(written.len(), report::EXPERIMENTS.len());
+    for id in report::EXPERIMENTS {
+        assert!(dir.join(format!("{id}.csv")).exists(), "{id}.csv missing");
+    }
+}
