@@ -1,5 +1,11 @@
 //! Bench: the full §3.1 optimization sweep (the repro harness hot path —
 //! Figs. 8, 9, 10 each run one or more of these).
+//!
+//! The 64-config benches run twice — once through the serial reference loop
+//! and once through the parallel allocation-lean engine — so the recorded
+//! `BENCH_sweep.json` medians document the speedup this engine exists for.
+//! Set `XBARMAP_SWEEP_THREADS` to pin the worker count and
+//! `XBARMAP_BENCH_FAST=1` for a CI smoke run.
 
 use xbarmap::nets::zoo;
 use xbarmap::opt::{self, Engine, SweepConfig};
@@ -10,19 +16,28 @@ use xbarmap::util::benchkit::Bench;
 fn main() {
     let mut b = Bench::from_env();
     let net = zoo::resnet18();
+    println!("sweep workers: {}", opt::sweep_threads());
+
+    let full = SweepConfig::paper_default(Discipline::Pipeline);
+    b.run("sweep/resnet18/pipeline/full(64 configs)/serial", || {
+        opt::sweep_serial(&net, &full).len()
+    });
+    b.run("sweep/resnet18/pipeline/full(64 configs)/parallel", || {
+        opt::sweep(&net, &full).len()
+    });
 
     b.run("sweep/resnet18/dense/square(8 sizes)", || {
         opt::sweep(&net, &SweepConfig::square(Discipline::Dense)).len()
-    });
-    b.run("sweep/resnet18/pipeline/full(64 configs)", || {
-        opt::sweep(&net, &SweepConfig::paper_default(Discipline::Pipeline)).len()
     });
 
     let rapa_cfg = SweepConfig {
         replication: Some(rapa::plan_balanced(&net, 128)),
         ..SweepConfig::paper_default(Discipline::Pipeline)
     };
-    b.run("sweep/resnet18/rapa128/full(64 configs)", || {
+    b.run("sweep/resnet18/rapa128/full(64 configs)/serial", || {
+        opt::sweep_serial(&net, &rapa_cfg).len()
+    });
+    b.run("sweep/resnet18/rapa128/full(64 configs)/parallel", || {
         opt::sweep(&net, &rapa_cfg).len()
     });
 
@@ -39,5 +54,22 @@ fn main() {
         opt::sweep(&big, &SweepConfig::square(Discipline::Pipeline)).len()
     });
 
+    // headline: wall-clock speedup of the parallel engine on the 64-config
+    // ResNet-18 sweep (acceptance target: >= 2x on a multi-core host)
+    let p50 = |name: &str| {
+        b.results
+            .iter()
+            .find(|s| s.name == name)
+            .map(|s| s.p50_ns)
+            .unwrap_or(f64::NAN)
+    };
+    let speedup = p50("sweep/resnet18/pipeline/full(64 configs)/serial")
+        / p50("sweep/resnet18/pipeline/full(64 configs)/parallel");
+    println!("parallel speedup (64-config pipeline sweep): {speedup:.2}x");
+
     b.emit_jsonl();
+    match b.write_json_report("sweep") {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("BENCH_sweep.json not written: {e}"),
+    }
 }

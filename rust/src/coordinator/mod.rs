@@ -5,13 +5,19 @@
 //! paper's packing machinery (so every inference is accounted against a
 //! concrete tile configuration: count, area, modeled latency), and then
 //! serves batched inference requests. Python is never on this path.
+//!
+//! [`batched_sweep`] is the design-service side of the coordinator: many
+//! (network, sweep-config) requests priced concurrently through the §3.1
+//! optimization engine with deterministic, request-ordered results — the
+//! entry point for serving tile-dimension studies to multiple tenants.
 
 pub mod digits;
 
 use crate::area::AreaModel;
 use crate::frag;
 use crate::geom::Tile;
-use crate::nets::zoo;
+use crate::nets::{zoo, Network};
+use crate::opt::{self, SweepConfig, SweepPoint};
 use crate::pack::{self, Discipline, Packing};
 use crate::perf::{self, Execution, TimingModel};
 use crate::runtime::{artifacts_dir, LoadedModel, Runtime, Tensor};
@@ -223,6 +229,45 @@ impl Coordinator {
     }
 }
 
+/// One batched-sweep work item: a named network plus the sweep
+/// configuration to price it under.
+#[derive(Debug, Clone)]
+pub struct SweepRequest {
+    pub name: String,
+    pub net: Network,
+    pub cfg: SweepConfig,
+}
+
+/// Result of one [`SweepRequest`].
+#[derive(Debug, Clone)]
+pub struct SweepResponse {
+    pub name: String,
+    pub points: Vec<SweepPoint>,
+    pub best: Option<SweepPoint>,
+}
+
+/// Evaluate many networks' §3.1 sweeps concurrently (the coordinator's
+/// batched-sweep entry point). Parallelism is across requests — each
+/// request runs the single-worker sweep engine with its own scratch arena —
+/// so responses come back in request order with values identical to a
+/// serial run.
+pub fn batched_sweep(requests: &[SweepRequest]) -> Vec<SweepResponse> {
+    batched_sweep_with_threads(requests, opt::sweep_threads())
+}
+
+/// [`batched_sweep`] with an explicit worker count.
+pub fn batched_sweep_with_threads(
+    requests: &[SweepRequest],
+    threads: usize,
+) -> Vec<SweepResponse> {
+    crate::util::par::par_for_ordered(requests.len(), threads, || (), |_, i, local| {
+        let r = &requests[i];
+        let points = opt::sweep_with_threads(&r.net, &r.cfg, 1);
+        let best = opt::optimum(&points);
+        local.push((i, SweepResponse { name: r.name.clone(), points, best }));
+    })
+}
+
 #[cfg(test)]
 mod tests {
     // Coordinator construction needs artifacts + a PJRT client; those paths
@@ -236,5 +281,51 @@ mod tests {
         assert!(c.crossbar);
         assert_eq!(c.discipline, Discipline::Dense);
         assert!(c.artifacts.is_none());
+    }
+
+    #[test]
+    fn batched_sweep_matches_direct_and_preserves_order() {
+        let requests = vec![
+            SweepRequest {
+                name: "lenet/dense".into(),
+                net: zoo::lenet(),
+                cfg: SweepConfig::square(Discipline::Dense),
+            },
+            SweepRequest {
+                name: "lenet/pipeline".into(),
+                net: zoo::lenet(),
+                cfg: SweepConfig::square(Discipline::Pipeline),
+            },
+            SweepRequest {
+                name: "resnet9/dense".into(),
+                net: zoo::resnet9(),
+                cfg: SweepConfig::square(Discipline::Dense),
+            },
+        ];
+        let batched = batched_sweep_with_threads(&requests, 3);
+        assert_eq!(batched.len(), requests.len());
+        for (resp, req) in batched.iter().zip(&requests) {
+            assert_eq!(resp.name, req.name);
+            let direct = opt::sweep_serial(&req.net, &req.cfg);
+            assert_eq!(resp.points.len(), direct.len());
+            for (a, b) in resp.points.iter().zip(&direct) {
+                assert_eq!((a.tile, a.n_tiles), (b.tile, b.n_tiles));
+                assert_eq!(a.total_area_mm2.to_bits(), b.total_area_mm2.to_bits());
+            }
+            assert!(resp.best.is_some());
+        }
+    }
+
+    #[test]
+    fn batched_sweep_empty_and_single() {
+        assert!(batched_sweep_with_threads(&[], 4).is_empty());
+        let reqs = vec![SweepRequest {
+            name: "solo".into(),
+            net: zoo::lenet(),
+            cfg: SweepConfig::square(Discipline::Dense),
+        }];
+        let out = batched_sweep_with_threads(&reqs, 16);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].points.len(), 8);
     }
 }

@@ -53,10 +53,26 @@ pub fn fragment_matrix(
     layer: usize,
     replica: usize,
 ) -> Vec<Block> {
+    let mut out = Vec::new();
+    fragment_matrix_into(m_inp, m_out, tile, layer, replica, &mut out);
+    out
+}
+
+/// [`fragment_matrix`] appending into a caller-provided buffer — the
+/// allocation-lean form the sweep's per-worker scratch arena uses so block
+/// vectors are reused across grid points instead of reallocated.
+pub fn fragment_matrix_into(
+    m_inp: usize,
+    m_out: usize,
+    tile: Tile,
+    layer: usize,
+    replica: usize,
+    out: &mut Vec<Block>,
+) {
     assert!(m_inp > 0 && m_out > 0, "empty matrix {m_inp}x{m_out}");
     let gr = m_inp.div_ceil(tile.n_row);
     let gc = m_out.div_ceil(tile.n_col);
-    let mut out = Vec::with_capacity(gr * gc);
+    out.reserve(gr * gc);
     for i in 0..gr {
         let rows = (m_inp - i * tile.n_row).min(tile.n_row);
         for j in 0..gc {
@@ -71,7 +87,6 @@ pub fn fragment_matrix(
             });
         }
     }
-    out
 }
 
 /// Fragment every layer of a network onto `tile` (replica 0 only).
@@ -87,15 +102,27 @@ pub fn fragment_network_replicated(
     tile: Tile,
     replication: &[usize],
 ) -> Vec<Block> {
-    assert_eq!(replication.len(), net.n_layers(), "replication arity");
     let mut out = Vec::new();
+    fragment_network_replicated_into(net, tile, replication, &mut out);
+    out
+}
+
+/// [`fragment_network_replicated`] into a caller-provided buffer (cleared
+/// first, capacity retained across calls).
+pub fn fragment_network_replicated_into(
+    net: &Network,
+    tile: Tile,
+    replication: &[usize],
+    out: &mut Vec<Block>,
+) {
+    assert_eq!(replication.len(), net.n_layers(), "replication arity");
+    out.clear();
     for (li, layer) in net.layers.iter().enumerate() {
         let (m_inp, m_out) = layer.matrix_shape();
         for rep in 0..replication[li].max(1) {
-            out.extend(fragment_matrix(m_inp, m_out, tile, li, rep));
+            fragment_matrix_into(m_inp, m_out, tile, li, rep, out);
         }
     }
-    out
 }
 
 /// Total weights across blocks — must equal the replicated network total

@@ -8,9 +8,15 @@
 //! seconds and, under a node budget, improves the greedy incumbent on
 //! network-scale instances (reporting the residual gap like an LPS run
 //! that hit its iteration limit).
+//!
+//! The search works over an index permutation into the borrowed block
+//! slice (no block-vector clones), and [`solve_with_hint`] /
+//! [`solve_bins`] accept an *upper-bound hint* from a neighbouring sweep
+//! configuration so grid points warm-start instead of solving cold
+//! (EXPERIMENTS.md §Perf #3).
 
 use crate::geom::{Block, Placement, Tile};
-use crate::pack::{ffd, simple, Discipline, Packing};
+use crate::pack::{ffd, simple, Discipline, PackScratch, Packing, SortOrder};
 
 /// Node budget for the exact search.
 #[derive(Debug, Clone, Copy)]
@@ -40,6 +46,16 @@ pub struct ExactResult {
     pub nodes: u64,
 }
 
+/// Count-only result for the sweep hot path: same solver, no [`Packing`]
+/// materialized (the sweep prices configurations by bin count alone).
+#[derive(Debug, Clone, Copy)]
+pub struct BinsResult {
+    pub n_bins: usize,
+    pub lower_bound: usize,
+    pub optimal: bool,
+    pub nodes: u64,
+}
+
 /// Combinatorial lower bounds on the number of bins.
 pub fn lower_bound(blocks: &[Block], tile: Tile, discipline: Discipline) -> usize {
     if blocks.is_empty() {
@@ -63,6 +79,23 @@ pub fn lower_bound(blocks: &[Block], tile: Tile, discipline: Discipline) -> usiz
 /// Solve to optimality or budget exhaustion, warm-started with the better
 /// of the simple (next-fit) and FFD packings.
 pub fn solve(blocks: &[Block], tile: Tile, discipline: Discipline, budget: Budget) -> ExactResult {
+    solve_with_hint(blocks, tile, discipline, budget, None)
+}
+
+/// Like [`solve`], with an optional upper-bound hint from a neighbouring
+/// sweep configuration. The search first explores only assignments with at
+/// most `hint` bins (tighter pruning than the greedy incumbent's bound);
+/// if it *proves* that space empty it iteratively relaxes toward the plain
+/// incumbent bound with the remaining node budget, so a misleading hint
+/// can cost budget but never correctness. Bin counts returned are always
+/// those of an actual packing for *this* tile.
+pub fn solve_with_hint(
+    blocks: &[Block],
+    tile: Tile,
+    discipline: Discipline,
+    budget: Budget,
+    hint: Option<usize>,
+) -> ExactResult {
     let lb = lower_bound(blocks, tile, discipline);
     let nf = simple::pack(blocks, tile, discipline);
     let ff = ffd::pack(blocks, tile, discipline);
@@ -74,59 +107,163 @@ pub fn solve(blocks: &[Block], tile: Tile, discipline: Discipline, budget: Budge
         return ExactResult { packing: incumbent, lower_bound: lb, optimal: false, nodes: 0 };
     }
     match discipline {
-        Discipline::Pipeline => pipeline_search(blocks, tile, budget, incumbent, lb),
-        Discipline::Dense => dense_search(blocks, tile, budget, incumbent, lb),
+        Discipline::Pipeline => {
+            let s = pipeline_search(blocks, tile, budget.max_nodes, incumbent.n_bins, lb, hint);
+            let (packing, optimal) = match s.assign {
+                Some(a) => {
+                    let p = decode_pipeline(blocks, &s.order, tile, &a);
+                    let opt = s.proven || p.n_bins == lb;
+                    (p, opt)
+                }
+                None => (incumbent, s.proven),
+            };
+            ExactResult { packing, lower_bound: lb, optimal, nodes: s.nodes }
+        }
+        Discipline::Dense => {
+            let s = dense_search(blocks, tile, budget.max_nodes, incumbent.n_bins, lb, hint);
+            let (packing, optimal) = match s.assign {
+                Some(a) => {
+                    let p = decode_dense(blocks, &s.order, tile, &a);
+                    let opt = s.proven || p.n_bins == lb;
+                    (p, opt)
+                }
+                None => (incumbent, s.proven),
+            };
+            ExactResult { packing, lower_bound: lb, optimal, nodes: s.nodes }
+        }
     }
+}
+
+/// Count-only variant of [`solve_with_hint`] for the sweep hot path: greedy
+/// incumbents run through the caller's [`PackScratch`] (no block-vector
+/// clones, no `Packing`), and only the bin count of the best assignment is
+/// returned. Values agree with [`solve_with_hint`] for identical inputs.
+/// `scratch.placements` is cleared before returning — the reported count
+/// need not come from the engine that ran through the scratch last.
+pub fn solve_bins(
+    blocks: &[Block],
+    tile: Tile,
+    discipline: Discipline,
+    budget: Budget,
+    hint: Option<usize>,
+    scratch: &mut PackScratch,
+) -> BinsResult {
+    let lb = lower_bound(blocks, tile, discipline);
+    if blocks.is_empty() {
+        return BinsResult { n_bins: 0, lower_bound: 0, optimal: true, nodes: 0 };
+    }
+    let nf = simple::pack_into(blocks, tile, discipline, SortOrder::RowsDesc, scratch);
+    let ff = ffd::pack_into(blocks, tile, discipline, scratch);
+    let incumbent = ff.min(nf);
+    // count-only API: the scratch holds FFD's placements at this point,
+    // which need not correspond to the returned bin count (it may come
+    // from the simple engine or the search below) — never hand them back
+    scratch.placements.clear();
+    if incumbent <= lb {
+        return BinsResult { n_bins: incumbent, lower_bound: lb, optimal: true, nodes: 0 };
+    }
+    if blocks.len() > budget.max_items {
+        return BinsResult { n_bins: incumbent, lower_bound: lb, optimal: false, nodes: 0 };
+    }
+    let s = match discipline {
+        Discipline::Pipeline => {
+            let s = pipeline_search(blocks, tile, budget.max_nodes, incumbent, lb, hint);
+            SearchSummary { found: s.assign.is_some(), bins: s.bins, nodes: s.nodes, proven: s.proven }
+        }
+        Discipline::Dense => {
+            let s = dense_search(blocks, tile, budget.max_nodes, incumbent, lb, hint);
+            SearchSummary { found: s.assign.is_some(), bins: s.bins, nodes: s.nodes, proven: s.proven }
+        }
+    };
+    if s.found {
+        BinsResult { n_bins: s.bins, lower_bound: lb, optimal: s.proven || s.bins == lb, nodes: s.nodes }
+    } else {
+        BinsResult { n_bins: incumbent, lower_bound: lb, optimal: s.proven, nodes: s.nodes }
+    }
+}
+
+struct SearchSummary {
+    found: bool,
+    bins: usize,
+    nodes: u64,
+    proven: bool,
 }
 
 // ---------------------------------------------------------------------------
 // Pipeline: two-constraint vector packing
 // ---------------------------------------------------------------------------
 
+struct PipeSearch {
+    /// item position -> original block index (sorted placement order)
+    order: Vec<u32>,
+    /// winning assignment (item position -> bin), if one beat the bound
+    assign: Option<Vec<usize>>,
+    /// bins of `assign` when present, else the final search bound
+    bins: usize,
+    nodes: u64,
+    /// every assignment better than the returned solution (or, with no
+    /// solution, better than the plain incumbent bound) was ruled out
+    proven: bool,
+}
+
 struct PipeCtx<'a> {
-    items: &'a [Block],   // sorted desc
-    order: Vec<usize>,    // item -> original index
+    blocks: &'a [Block],
+    order: &'a [u32], // item position -> original index, sorted desc
     tile: Tile,
     budget: u64,
     nodes: u64,
     best_bins: usize,
     best_assign: Option<Vec<usize>>, // item -> bin
     lb: usize,
-    // suffix sums for bounds
+    // suffix sums over the sorted order, for bounds
     suffix_rows: Vec<usize>,
     suffix_cols: Vec<usize>,
     exhausted: bool,
 }
 
+impl PipeCtx<'_> {
+    #[inline]
+    fn item(&self, i: usize) -> Block {
+        self.blocks[self.order[i] as usize]
+    }
+
+    fn n_items(&self) -> usize {
+        self.order.len()
+    }
+}
+
 fn pipeline_search(
     blocks: &[Block],
     tile: Tile,
-    budget: Budget,
-    incumbent: Packing,
+    max_nodes: u64,
+    incumbent_bins: usize,
     lb: usize,
-) -> ExactResult {
-    let mut order: Vec<usize> = (0..blocks.len()).collect();
-    order.sort_by(|&a, &b| {
-        (blocks[b].rows + blocks[b].cols)
-            .cmp(&(blocks[a].rows + blocks[a].cols))
-            .then(blocks[b].rows.cmp(&blocks[a].rows))
-            .then(a.cmp(&b))
+    hint: Option<usize>,
+) -> PipeSearch {
+    let mut order: Vec<u32> = (0..blocks.len() as u32).collect();
+    order.sort_by(|&ia, &ib| {
+        let (a, b) = (&blocks[ia as usize], &blocks[ib as usize]);
+        (b.rows + b.cols)
+            .cmp(&(a.rows + a.cols))
+            .then(b.rows.cmp(&a.rows))
+            .then(ia.cmp(&ib))
     });
-    let items: Vec<Block> = order.iter().map(|&i| blocks[i]).collect();
-    let n = items.len();
+    let n = order.len();
     let mut suffix_rows = vec![0usize; n + 1];
     let mut suffix_cols = vec![0usize; n + 1];
     for i in (0..n).rev() {
-        suffix_rows[i] = suffix_rows[i + 1] + items[i].rows;
-        suffix_cols[i] = suffix_cols[i + 1] + items[i].cols;
+        let b = &blocks[order[i] as usize];
+        suffix_rows[i] = suffix_rows[i + 1] + b.rows;
+        suffix_cols[i] = suffix_cols[i + 1] + b.cols;
     }
+
     let mut ctx = PipeCtx {
-        items: &items,
-        order,
+        blocks,
+        order: &order,
         tile,
-        budget: budget.max_nodes,
+        budget: max_nodes,
         nodes: 0,
-        best_bins: incumbent.n_bins,
+        best_bins: incumbent_bins,
         best_assign: None,
         lb,
         suffix_rows,
@@ -136,20 +273,40 @@ fn pipeline_search(
     let mut bins_rows: Vec<usize> = Vec::new();
     let mut bins_cols: Vec<usize> = Vec::new();
     let mut assign = vec![usize::MAX; n];
-    pipe_dfs(&mut ctx, 0, &mut bins_rows, &mut bins_cols, &mut assign);
 
-    let (packing, optimal) = match ctx.best_assign {
-        Some(a) => {
-            let p = decode_pipeline(blocks, &ctx.order, tile, &a);
-            let opt = !ctx.exhausted || p.n_bins == lb;
-            (p, opt)
+    // Iterative deepening on the bin bound, starting from the neighbour's
+    // hint: each pass explores only assignments with fewer bins than
+    // `target`. Without a hint this is a single pass at the incumbent bound
+    // (the classic cold solve, node for node); with a hint the first pass
+    // is much narrower and usually terminal. A pass that proves its space
+    // empty raises the target, so a misleading hint can never degrade the
+    // result below the cold solve's.
+    //
+    // The first pass runs at `hint + 1`, not `hint`: a neighbour's achieved
+    // count is expected to be *matched*, not beaten, and the DFS shrinks
+    // its own bound as it finds better solutions anyway — so the common
+    // plateau case (optimum == hint) resolves in one pass instead of
+    // proving `< hint` empty twice. `lb + 1` floor: a pass at
+    // `target <= lb` is empty by construction.
+    let mut target = incumbent_bins
+        .min(hint.map_or(usize::MAX, |h| h.saturating_add(1)))
+        .max(lb + 1);
+    loop {
+        ctx.best_bins = target;
+        ctx.exhausted = false;
+        bins_rows.clear();
+        bins_cols.clear();
+        assign.fill(usize::MAX);
+        pipe_dfs(&mut ctx, 0, &mut bins_rows, &mut bins_cols, &mut assign);
+        if ctx.best_assign.is_some() || ctx.exhausted || target >= incumbent_bins {
+            break;
         }
-        None => {
-            let opt = !ctx.exhausted || incumbent.n_bins == lb;
-            (incumbent, opt)
-        }
-    };
-    ExactResult { packing, lower_bound: lb, optimal, nodes: ctx.nodes }
+        target += 1;
+    }
+
+    // destructure first so ctx's borrow of `order` ends before the move
+    let PipeCtx { best_assign, best_bins, nodes, exhausted, .. } = ctx;
+    PipeSearch { assign: best_assign, bins: best_bins, nodes, proven: !exhausted, order }
 }
 
 fn pipe_dfs(
@@ -165,7 +322,7 @@ fn pipe_dfs(
     }
     ctx.nodes += 1;
     let used = bins_rows.len();
-    if i == ctx.items.len() {
+    if i == ctx.n_items() {
         if used < ctx.best_bins {
             ctx.best_bins = used;
             ctx.best_assign = Some(assign.clone());
@@ -187,7 +344,7 @@ fn pipe_dfs(
         return;
     }
 
-    let it = ctx.items[i];
+    let it = ctx.item(i);
     // try open bins, skipping bins with identical residual capacity
     let mut tried: Vec<(usize, usize)> = Vec::new();
     for b in 0..used {
@@ -210,10 +367,6 @@ fn pipe_dfs(
         }
     }
     // open a new bin (symmetry: the new bin is always the next index)
-    if used + 1 < ctx.best_bins || (used + 1 == ctx.best_bins && i + 1 == ctx.items.len()) {
-        // opening the (best_bins)-th bin can only tie; only allow it when
-        // it completes the assignment — otherwise prune
-    }
     if used + 1 <= ctx.best_bins - 1 {
         bins_rows.push(it.rows);
         bins_cols.push(it.cols);
@@ -225,14 +378,15 @@ fn pipe_dfs(
     }
 }
 
-fn decode_pipeline(blocks: &[Block], order: &[usize], tile: Tile, assign: &[usize]) -> Packing {
+fn decode_pipeline(blocks: &[Block], order: &[u32], tile: Tile, assign: &[usize]) -> Packing {
     let n_bins = assign.iter().copied().max().map_or(0, |m| m + 1);
     let mut rows_used = vec![0usize; n_bins];
     let mut cols_used = vec![0usize; n_bins];
     let mut placements = Vec::with_capacity(assign.len());
     for (i, &b) in assign.iter().enumerate() {
-        let blk = blocks[order[i]];
-        placements.push(Placement { block: order[i], bin: b, x: cols_used[b], y: rows_used[b] });
+        let oi = order[i] as usize;
+        let blk = blocks[oi];
+        placements.push(Placement { block: oi, bin: b, x: cols_used[b], y: rows_used[b] });
         rows_used[b] += blk.rows;
         cols_used[b] += blk.cols;
     }
@@ -262,47 +416,67 @@ struct DBin {
     shelves: Vec<Shelf>,
 }
 
+struct DenseSearch {
+    order: Vec<u32>,
+    assign: Option<Vec<(usize, usize)>>, // item -> (bin, shelf)
+    bins: usize,
+    nodes: u64,
+    proven: bool,
+}
+
 struct DenseCtx<'a> {
-    items: &'a [Block], // sorted desc by cols then rows
-    order: Vec<usize>,
+    blocks: &'a [Block],
+    order: &'a [u32], // item position -> original index, sorted desc by cols then rows
     tile: Tile,
     budget: u64,
     nodes: u64,
     best_bins: usize,
-    best_assign: Option<Vec<(usize, usize)>>, // item -> (bin, shelf)
+    best_assign: Option<Vec<(usize, usize)>>,
     lb: usize,
     suffix_area: Vec<usize>,
     exhausted: bool,
 }
 
+impl DenseCtx<'_> {
+    #[inline]
+    fn item(&self, i: usize) -> Block {
+        self.blocks[self.order[i] as usize]
+    }
+
+    fn n_items(&self) -> usize {
+        self.order.len()
+    }
+}
+
 fn dense_search(
     blocks: &[Block],
     tile: Tile,
-    budget: Budget,
-    incumbent: Packing,
+    max_nodes: u64,
+    incumbent_bins: usize,
     lb: usize,
-) -> ExactResult {
-    let mut order: Vec<usize> = (0..blocks.len()).collect();
-    order.sort_by(|&a, &b| {
-        blocks[b]
-            .cols
-            .cmp(&blocks[a].cols)
-            .then(blocks[b].rows.cmp(&blocks[a].rows))
-            .then(a.cmp(&b))
+    hint: Option<usize>,
+) -> DenseSearch {
+    let mut order: Vec<u32> = (0..blocks.len() as u32).collect();
+    order.sort_by(|&ia, &ib| {
+        let (a, b) = (&blocks[ia as usize], &blocks[ib as usize]);
+        b.cols
+            .cmp(&a.cols)
+            .then(b.rows.cmp(&a.rows))
+            .then(ia.cmp(&ib))
     });
-    let items: Vec<Block> = order.iter().map(|&i| blocks[i]).collect();
-    let n = items.len();
+    let n = order.len();
     let mut suffix_area = vec![0usize; n + 1];
     for i in (0..n).rev() {
-        suffix_area[i] = suffix_area[i + 1] + items[i].weights();
+        suffix_area[i] = suffix_area[i + 1] + blocks[order[i] as usize].weights();
     }
+
     let mut ctx = DenseCtx {
-        items: &items,
-        order,
+        blocks,
+        order: &order,
         tile,
-        budget: budget.max_nodes,
+        budget: max_nodes,
         nodes: 0,
-        best_bins: incumbent.n_bins,
+        best_bins: incumbent_bins,
         best_assign: None,
         lb,
         suffix_area,
@@ -310,20 +484,26 @@ fn dense_search(
     };
     let mut bins: Vec<DBin> = Vec::new();
     let mut assign = vec![(usize::MAX, usize::MAX); n];
-    dense_dfs(&mut ctx, 0, &mut bins, &mut assign);
 
-    let (packing, optimal) = match ctx.best_assign {
-        Some(a) => {
-            let p = decode_dense(blocks, &ctx.order, tile, &a);
-            let opt = !ctx.exhausted || p.n_bins == lb;
-            (p, opt)
+    // Iterative deepening from the hinted bound (see pipeline_search).
+    let mut target = incumbent_bins
+        .min(hint.map_or(usize::MAX, |h| h.saturating_add(1)))
+        .max(lb + 1);
+    loop {
+        ctx.best_bins = target;
+        ctx.exhausted = false;
+        bins.clear();
+        assign.fill((usize::MAX, usize::MAX));
+        dense_dfs(&mut ctx, 0, &mut bins, &mut assign);
+        if ctx.best_assign.is_some() || ctx.exhausted || target >= incumbent_bins {
+            break;
         }
-        None => {
-            let opt = !ctx.exhausted || incumbent.n_bins == lb;
-            (incumbent, opt)
-        }
-    };
-    ExactResult { packing, lower_bound: lb, optimal, nodes: ctx.nodes }
+        target += 1;
+    }
+
+    // destructure first so ctx's borrow of `order` ends before the move
+    let DenseCtx { best_assign, best_bins, nodes, exhausted, .. } = ctx;
+    DenseSearch { assign: best_assign, bins: best_bins, nodes, proven: !exhausted, order }
 }
 
 fn dense_dfs(
@@ -338,7 +518,7 @@ fn dense_dfs(
     }
     ctx.nodes += 1;
     let used = bins.len();
-    if i == ctx.items.len() {
+    if i == ctx.n_items() {
         if used < ctx.best_bins {
             ctx.best_bins = used;
             ctx.best_assign = Some(assign.clone());
@@ -365,7 +545,7 @@ fn dense_dfs(
         return;
     }
 
-    let it = ctx.items[i];
+    let it = ctx.item(i);
     // 1) join an existing shelf (item cols <= shelf width by sort order)
     let mut tried_shelves: Vec<(usize, usize)> = Vec::new();
     for b in 0..used {
@@ -393,7 +573,7 @@ fn dense_dfs(
     let mut tried_bins: Vec<usize> = Vec::new();
     for b in 0..used {
         let key = bins[b].col_used;
-        if bins[b].col_used + it.cols > ctx.tile.n_col || tried_bins.contains(&key_ref(&key)) {
+        if bins[b].col_used + it.cols > ctx.tile.n_col || tried_bins.contains(&key) {
             continue;
         }
         tried_bins.push(key);
@@ -422,13 +602,9 @@ fn dense_dfs(
     }
 }
 
-fn key_ref(k: &usize) -> &usize {
-    k
-}
-
 fn decode_dense(
     blocks: &[Block],
-    order: &[usize],
+    order: &[u32],
     tile: Tile,
     assign: &[(usize, usize)],
 ) -> Packing {
@@ -443,7 +619,8 @@ fn decode_dense(
     let mut rbins = vec![RBin::default(); n_bins];
     let mut placements = Vec::with_capacity(assign.len());
     for (i, &(b, s)) in assign.iter().enumerate() {
-        let blk = blocks[order[i]];
+        let oi = order[i] as usize;
+        let blk = blocks[oi];
         let rb = &mut rbins[b];
         if s == rb.shelf_x.len() {
             rb.shelf_x.push(rb.col_used);
@@ -451,7 +628,7 @@ fn decode_dense(
             rb.col_used += blk.cols;
         }
         placements.push(Placement {
-            block: order[i],
+            block: oi,
             bin: b,
             x: rbins[b].shelf_x[s],
             y: rbins[b].shelf_fill[s],
@@ -557,5 +734,62 @@ mod tests {
         let mut seen: Vec<usize> = r.packing.placements.iter().map(|p| p.block).collect();
         seen.sort_unstable();
         assert_eq!(seen, (0..13).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn solve_bins_matches_full_solve() {
+        use crate::frag::fragment_network;
+        use crate::nets::zoo;
+        let mut scratch = PackScratch::default();
+        for tile in [Tile::new(256, 256), Tile::new(512, 512)] {
+            let blocks = fragment_network(&zoo::lenet(), tile);
+            for d in [Discipline::Dense, Discipline::Pipeline] {
+                for hint in [None, Some(1), Some(usize::MAX)] {
+                    let budget = Budget { max_nodes: 50_000, ..Default::default() };
+                    let full = solve_with_hint(&blocks, tile, d, budget, hint);
+                    let bins = solve_bins(&blocks, tile, d, budget, hint, &mut scratch);
+                    assert_eq!(bins.n_bins, full.packing.n_bins, "{tile} {d} {hint:?}");
+                    assert_eq!(bins.lower_bound, full.lower_bound);
+                    assert_eq!(bins.optimal, full.optimal);
+                    assert_eq!(bins.nodes, full.nodes);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn misleading_hint_never_degrades_result() {
+        // a hint below the true optimum forces the fallback phase; the
+        // result must match the cold solve's bin count
+        let items = paper_items();
+        let t = Tile::new(512, 512);
+        for d in [Discipline::Dense, Discipline::Pipeline] {
+            let cold = solve(&items, t, d, Budget::default());
+            let warm = solve_with_hint(&items, t, d, Budget::default(), Some(1));
+            validate(&warm.packing).unwrap();
+            assert_eq!(warm.packing.n_bins, cold.packing.n_bins, "{d}");
+            // a truthful hint (the cold optimum itself) must also agree
+            let tight =
+                solve_with_hint(&items, t, d, Budget::default(), Some(cold.packing.n_bins));
+            assert_eq!(tight.packing.n_bins, cold.packing.n_bins, "{d} tight");
+        }
+    }
+
+    #[test]
+    fn hint_prunes_nodes_on_demo_instances() {
+        // warm-starting with the known optimum should never need more nodes
+        // than the cold search
+        let items = paper_items();
+        let t = Tile::new(512, 512);
+        for d in [Discipline::Dense, Discipline::Pipeline] {
+            let cold = solve(&items, t, d, Budget::default());
+            let warm = solve_with_hint(&items, t, d, Budget::default(), Some(cold.packing.n_bins));
+            assert!(
+                warm.nodes <= cold.nodes,
+                "{d}: warm {} nodes > cold {}",
+                warm.nodes,
+                cold.nodes
+            );
+        }
     }
 }

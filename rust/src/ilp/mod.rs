@@ -18,9 +18,9 @@ pub mod model;
 pub mod simplex;
 
 use crate::geom::{Block, Tile};
-use crate::pack::Discipline;
+use crate::pack::{Discipline, PackScratch};
 
-pub use exact::{Budget, ExactResult};
+pub use exact::{BinsResult, Budget, ExactResult};
 
 /// Solve a packing instance exactly (or best-effort under budget),
 /// warm-started by the greedy engines. This is the "LPS" column/curve
@@ -32,6 +32,21 @@ pub fn solve_packing(
     budget: Budget,
 ) -> ExactResult {
     exact::solve(blocks, tile, discipline, budget)
+}
+
+/// Count-only solve for the sweep hot path: no `Packing` materialized, the
+/// greedy incumbents run through the caller's scratch arena, and an
+/// optional upper-bound hint from a neighbouring configuration warm-starts
+/// the branch & bound (see [`exact::solve_bins`]).
+pub fn solve_packing_bins(
+    blocks: &[Block],
+    tile: Tile,
+    discipline: Discipline,
+    budget: Budget,
+    hint: Option<usize>,
+    scratch: &mut PackScratch,
+) -> BinsResult {
+    exact::solve_bins(blocks, tile, discipline, budget, hint, scratch)
 }
 
 #[cfg(test)]

@@ -23,9 +23,19 @@
 //! optimization** solver ([`ilp`]) implementing the paper's Eq. 6 (dense)
 //! and Eq. 7 (pipeline) formulations (substituting the paper's lp_solve).
 //!
+//! The §3.1 tile-dimension search ([`opt::sweep`]) is a parallel,
+//! allocation-lean evaluation engine: grid points fan out over scoped
+//! worker threads with deterministic result ordering, each worker reuses a
+//! scratch arena (fragmentation + packing buffers) across the grid points
+//! it evaluates, and ILP points warm-start from neighbouring
+//! configurations. [`coordinator::batched_sweep`] serves many networks'
+//! sweeps concurrently; [`opt::sweep_serial`] is the reference loop the
+//! determinism suite pins the engine against.
+//!
 //! The numerical hot path (analog tile matrix-vector product with DAC/ADC
 //! quantisation) is an AOT-compiled JAX/Pallas kernel executed from Rust
-//! through the PJRT C API ([`runtime`]); Python never runs at request time.
+//! through the PJRT C API ([`runtime`], behind the `pjrt` cargo feature);
+//! Python never runs at request time.
 pub mod geom;
 pub mod nets;
 pub mod frag;

@@ -105,6 +105,7 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         OptSpec { name: "aspects", help: "max aspect ratio (1..=8)", value: Some("N"), default: Some("8") },
         OptSpec { name: "rapa", help: "balanced RAPA replication n0", value: Some("N"), default: None },
         OptSpec { name: "ilp-nodes", help: "branch&bound node budget", value: Some("N"), default: Some("2000000") },
+        OptSpec { name: "threads", help: "sweep worker threads (0 = auto)", value: Some("N"), default: Some("0") },
     ];
     let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
     let net = net_by_name(a.req("net").map_err(|e| anyhow!(e))?)?;
@@ -112,6 +113,7 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
     let nodes = a.req_usize("ilp-nodes").map_err(|e| anyhow!(e))? as u64;
     let engine = parse_engine(a.req("engine").map_err(|e| anyhow!(e))?, nodes)?;
     let max_aspect = a.req_usize("aspects").map_err(|e| anyhow!(e))?.clamp(1, 8);
+    let threads = a.req_usize("threads").map_err(|e| anyhow!(e))?;
     let mut cfg = SweepConfig {
         discipline,
         engine,
@@ -121,7 +123,11 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
     if let Some(n0) = a.get_usize("rapa").map_err(|e| anyhow!(e))? {
         cfg.replication = Some(xbarmap::perf::rapa::plan_balanced(&net, n0));
     }
-    let pts = opt::sweep(&net, &cfg);
+    let pts = if threads == 0 {
+        opt::sweep(&net, &cfg)
+    } else {
+        opt::sweep_with_threads(&net, &cfg, threads)
+    };
     let mut t = Table::new(&["tile", "aspect", "blocks", "tiles", "tile eff", "pack eff", "area mm2"]);
     for p in &pts {
         t.row(&[

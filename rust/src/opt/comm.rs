@@ -60,11 +60,12 @@ pub fn comm_aware_sweep(net: &Network, cfg: &SweepConfig, lambda: f64) -> Vec<Co
         .collect()
 }
 
-/// Minimum-cost configuration under the combined objective.
+/// Minimum-cost configuration under the combined objective (total-order
+/// safe like [`crate::opt::optimum`]).
 pub fn comm_aware_optimum(net: &Network, cfg: &SweepConfig, lambda: f64) -> Option<CommPoint> {
     comm_aware_sweep(net, cfg, lambda)
         .into_iter()
-        .min_by(|a, b| a.cost.partial_cmp(&b.cost).unwrap())
+        .min_by(|a, b| a.cost.total_cmp(&b.cost))
 }
 
 #[cfg(test)]

@@ -5,6 +5,15 @@
 //! For each candidate tile `T(n_row, n_col = n_row·aspect)` the network is
 //! re-fragmented (each tile dimension induces its own fragmentation, §2.1),
 //! packed with the selected engine, and priced with the area model.
+//!
+//! [`sweep`] is a parallel, allocation-lean evaluation engine: grid points
+//! fan out over `std::thread::scope` workers with deterministic result
+//! ordering, each worker reuses a [`SweepScratch`] arena (fragmentation
+//! buffer + packing permutation/placement buffers) across the grid points
+//! it evaluates, and `Engine::Ilp` points warm-start their branch & bound
+//! from the neighbouring configuration in the same aspect column instead of
+//! solving cold. [`sweep_serial`] is the straightforward reference loop over
+//! the owned-allocation engines, kept for the determinism suite.
 
 pub mod comm;
 
@@ -86,47 +95,223 @@ pub struct SweepPoint {
     pub array_area_mm2: f64,
 }
 
-/// Evaluate a single tile configuration.
+/// Per-worker scratch arena for the allocation-lean sweep path: the
+/// fragmentation buffer and the packing engines' permutation/placement
+/// buffers are reused across every grid point a worker evaluates, so after
+/// warm-up a configuration is evaluated without heap allocation on the
+/// simple/FFD path.
+#[derive(Debug, Default)]
+pub struct SweepScratch {
+    blocks: Vec<crate::geom::Block>,
+    pack: pack::PackScratch,
+}
+
+impl SweepScratch {
+    pub fn new() -> SweepScratch {
+        SweepScratch::default()
+    }
+}
+
+/// Evaluate a single tile configuration (owned-allocation convenience
+/// wrapper; the aspect is derived from the tile since callers construct
+/// their own tiles here — the sweep itself propagates the requested aspect
+/// through [`evaluate_with_aspect`]).
 pub fn evaluate(net: &Network, tile: Tile, cfg: &SweepConfig) -> SweepPoint {
+    evaluate_with_aspect(net, tile, (tile.n_row / tile.n_col.max(1)).max(1), cfg)
+}
+
+/// Evaluate a single tile configuration under an explicitly requested
+/// aspect ratio (recorded verbatim in the returned point, so degenerate or
+/// non-power-of-two tile shapes never alias into the wrong aspect bucket).
+pub fn evaluate_with_aspect(
+    net: &Network,
+    tile: Tile,
+    aspect: usize,
+    cfg: &SweepConfig,
+) -> SweepPoint {
     let ones = vec![1usize; net.n_layers()];
-    let replication = cfg.replication.as_ref().unwrap_or(&ones);
-    let blocks = frag::fragment_network_replicated(net, tile, replication);
-    let n_blocks = blocks.len();
-    let packing = match cfg.engine {
-        Engine::Simple => pack::simple::pack(&blocks, tile, cfg.discipline),
-        Engine::Ffd => pack::ffd::pack(&blocks, tile, cfg.discipline),
+    let replication = cfg.replication.as_deref().unwrap_or(&ones);
+    let mut scratch = SweepScratch::default();
+    evaluate_lean(net, tile, aspect, replication, cfg, None, &mut scratch)
+}
+
+/// Allocation-lean evaluation core shared by the sweep workers: fragments
+/// into the scratch arena, counts bins through the borrowed-slice packing
+/// APIs, and prices the configuration. `warm` is the neighbouring
+/// configuration's bin count (`Engine::Ilp` warm-start; ignored by the
+/// greedy engines).
+fn evaluate_lean(
+    net: &Network,
+    tile: Tile,
+    aspect: usize,
+    replication: &[usize],
+    cfg: &SweepConfig,
+    warm: Option<usize>,
+    scratch: &mut SweepScratch,
+) -> SweepPoint {
+    frag::fragment_network_replicated_into(net, tile, replication, &mut scratch.blocks);
+    let n_blocks = scratch.blocks.len();
+    let n_tiles = match cfg.engine {
+        Engine::Simple => pack::simple::pack_into(
+            &scratch.blocks,
+            tile,
+            cfg.discipline,
+            pack::SortOrder::RowsDesc,
+            &mut scratch.pack,
+        ),
+        Engine::Ffd => {
+            pack::ffd::pack_into(&scratch.blocks, tile, cfg.discipline, &mut scratch.pack)
+        }
         Engine::Ilp { max_nodes } => {
-            ilp::solve_packing(&blocks, tile, cfg.discipline, ilp::Budget { max_nodes, ..Default::default() }).packing
+            ilp::solve_packing_bins(
+                &scratch.blocks,
+                tile,
+                cfg.discipline,
+                ilp::Budget { max_nodes, ..Default::default() },
+                warm,
+                &mut scratch.pack,
+            )
+            .n_bins
         }
     };
-    let n_tiles = packing.n_tiles();
+    let stored = frag::total_block_weights(&scratch.blocks);
     SweepPoint {
         tile,
-        aspect: (tile.n_row / tile.n_col).max(1),
+        aspect,
         n_blocks,
         n_tiles,
         n_tiles_one_to_one: n_blocks,
         tile_eff: cfg.area.efficiency(tile),
-        packing_eff: packing.packing_efficiency(),
+        packing_eff: pack::packing_efficiency(stored, n_tiles, tile.capacity()),
         total_area_mm2: cfg.area.total_area_mm2(n_tiles, tile),
         array_area_mm2: n_tiles as f64 * cfg.area.array_area_um2(tile) * 1e-6,
     }
 }
 
-/// Full sweep over base dimensions x aspect ratios.
+/// Worker-thread count for [`sweep`]: the `XBARMAP_SWEEP_THREADS`
+/// environment variable when set (>= 1), else the machine's available
+/// parallelism.
+pub fn sweep_threads() -> usize {
+    if let Ok(v) = std::env::var("XBARMAP_SWEEP_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Full sweep over base dimensions x aspect ratios — parallel across
+/// [`sweep_threads`] workers, deterministic: point ordering and values are
+/// identical to [`sweep_serial`] regardless of scheduling.
 pub fn sweep(net: &Network, cfg: &SweepConfig) -> Vec<SweepPoint> {
+    sweep_with_threads(net, cfg, sweep_threads())
+}
+
+/// [`sweep`] with an explicit worker count (1 = in-place, no threads).
+///
+/// Work decomposition: with a greedy engine every grid point is an
+/// independent task; with `Engine::Ilp` the tasks are whole aspect columns
+/// walked in increasing capacity order, so each point's branch & bound
+/// warm-starts from its smaller neighbour (§3.1 capacity monotonicity — a
+/// larger tile at the same aspect virtually never needs more tiles, and the
+/// solver treats the hint as a refutable bound, so the heuristic is free to
+/// be wrong). Results are gathered per worker and re-ordered by grid index
+/// before returning.
+pub fn sweep_with_threads(net: &Network, cfg: &SweepConfig, threads: usize) -> Vec<SweepPoint> {
+    let ones = vec![1usize; net.n_layers()];
+    let replication: &[usize] = cfg.replication.as_deref().unwrap_or(&ones);
+    let sizes: Vec<usize> = (cfg.row_exp.0..=cfg.row_exp.1).map(|k| 1usize << k).collect();
+    let n_aspects = cfg.aspects.len();
+    let n_points = sizes.len() * n_aspects;
+    if n_points == 0 {
+        return Vec::new();
+    }
+
+    let chained = matches!(cfg.engine, Engine::Ilp { .. });
+    let n_tasks = if chained { n_aspects } else { n_points };
+    let out = crate::util::par::par_for_ordered(
+        n_tasks,
+        threads,
+        SweepScratch::default,
+        |scratch, t, local| {
+            if chained {
+                // one aspect column, sizes small -> large, carrying the
+                // warm-start chain
+                let ai = t;
+                let aspect = cfg.aspects[ai];
+                let mut warm = None;
+                for (si, &n_col) in sizes.iter().enumerate() {
+                    let tile = Tile::new(n_col * aspect, n_col);
+                    let p = evaluate_lean(net, tile, aspect, replication, cfg, warm, scratch);
+                    warm = Some(p.n_tiles);
+                    local.push((si * n_aspects + ai, p));
+                }
+            } else {
+                let (si, ai) = (t / n_aspects, t % n_aspects);
+                let aspect = cfg.aspects[ai];
+                let tile = Tile::new(sizes[si] * aspect, sizes[si]);
+                let p = evaluate_lean(net, tile, aspect, replication, cfg, None, scratch);
+                local.push((t, p));
+            }
+        },
+    );
+    debug_assert_eq!(out.len(), n_points);
+    out
+}
+
+/// Reference serial implementation: the straightforward per-config loop
+/// over the owned-allocation engines, with the same per-aspect ILP
+/// warm-start chain as the parallel engine. Kept as the oracle for the
+/// determinism suite ([`sweep`] must match it byte for byte) and as the
+/// baseline the sweep benches measure speedup against.
+pub fn sweep_serial(net: &Network, cfg: &SweepConfig) -> Vec<SweepPoint> {
+    let ones = vec![1usize; net.n_layers()];
+    let replication: &[usize] = cfg.replication.as_deref().unwrap_or(&ones);
     let mut out = Vec::new();
+    let mut warm: Vec<Option<usize>> = vec![None; cfg.aspects.len()];
     for k in cfg.row_exp.0..=cfg.row_exp.1 {
         let n_col = 1usize << k;
-        for &aspect in &cfg.aspects {
+        for (ai, &aspect) in cfg.aspects.iter().enumerate() {
             let tile = Tile::new(n_col * aspect, n_col);
-            out.push(evaluate(net, tile, cfg));
+            let blocks = frag::fragment_network_replicated(net, tile, replication);
+            let n_blocks = blocks.len();
+            let packing = match cfg.engine {
+                Engine::Simple => pack::simple::pack(&blocks, tile, cfg.discipline),
+                Engine::Ffd => pack::ffd::pack(&blocks, tile, cfg.discipline),
+                Engine::Ilp { max_nodes } => {
+                    ilp::exact::solve_with_hint(
+                        &blocks,
+                        tile,
+                        cfg.discipline,
+                        ilp::Budget { max_nodes, ..Default::default() },
+                        warm[ai],
+                    )
+                    .packing
+                }
+            };
+            let n_tiles = packing.n_tiles();
+            warm[ai] = Some(n_tiles);
+            out.push(SweepPoint {
+                tile,
+                aspect,
+                n_blocks,
+                n_tiles,
+                n_tiles_one_to_one: n_blocks,
+                tile_eff: cfg.area.efficiency(tile),
+                packing_eff: packing.packing_efficiency(),
+                total_area_mm2: cfg.area.total_area_mm2(n_tiles, tile),
+                array_area_mm2: n_tiles as f64 * cfg.area.array_area_um2(tile) * 1e-6,
+            });
         }
     }
     out
 }
 
-/// Minimum-area point for each aspect ratio (§3.1 step 2).
+/// Minimum-area point for each aspect ratio (§3.1 step 2). Total-order
+/// safe: NaN areas (degenerate area models) sort last instead of
+/// panicking.
 pub fn best_per_aspect(points: &[SweepPoint]) -> Vec<SweepPoint> {
     let mut aspects: Vec<usize> = points.iter().map(|p| p.aspect).collect();
     aspects.sort_unstable();
@@ -137,17 +322,18 @@ pub fn best_per_aspect(points: &[SweepPoint]) -> Vec<SweepPoint> {
             points
                 .iter()
                 .filter(|p| p.aspect == a)
-                .min_by(|x, y| x.total_area_mm2.partial_cmp(&y.total_area_mm2).unwrap())
+                .min_by(|x, y| x.total_area_mm2.total_cmp(&y.total_area_mm2))
                 .cloned()
         })
         .collect()
 }
 
 /// Global optimum (§3.1 step 3): minimum area across all points.
+/// Total-order safe like [`best_per_aspect`].
 pub fn optimum(points: &[SweepPoint]) -> Option<SweepPoint> {
     points
         .iter()
-        .min_by(|x, y| x.total_area_mm2.partial_cmp(&y.total_area_mm2).unwrap())
+        .min_by(|x, y| x.total_area_mm2.total_cmp(&y.total_area_mm2))
         .cloned()
 }
 
@@ -163,6 +349,84 @@ mod tests {
     use super::*;
     use crate::nets::zoo;
     use crate::perf::rapa;
+
+    #[test]
+    fn parallel_sweep_matches_serial_reference() {
+        let net = zoo::lenet();
+        for cfg in [
+            SweepConfig::paper_default(Discipline::Dense),
+            SweepConfig::square(Discipline::Pipeline),
+        ] {
+            let serial = sweep_serial(&net, &cfg);
+            let par = sweep_with_threads(&net, &cfg, 4);
+            assert_eq!(par.len(), serial.len());
+            for (a, b) in par.iter().zip(&serial) {
+                assert_eq!(a.tile, b.tile);
+                assert_eq!(a.aspect, b.aspect);
+                assert_eq!(a.n_tiles, b.n_tiles);
+                assert_eq!(a.n_blocks, b.n_blocks);
+                assert_eq!(a.total_area_mm2.to_bits(), b.total_area_mm2.to_bits());
+                assert_eq!(a.packing_eff.to_bits(), b.packing_eff.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn requested_aspect_is_propagated() {
+        let net = zoo::lenet();
+        let cfg = SweepConfig { aspects: vec![3], ..SweepConfig::paper_default(Discipline::Dense) };
+        let pts = sweep(&net, &cfg);
+        assert!(pts.iter().all(|p| p.aspect == 3));
+        assert!(pts.iter().all(|p| p.tile.n_row == 3 * p.tile.n_col));
+    }
+
+    #[test]
+    fn optimum_total_order_safe_on_nan() {
+        let mk = |area: f64| SweepPoint {
+            tile: Tile::new(64, 64),
+            aspect: 1,
+            n_blocks: 1,
+            n_tiles: 1,
+            n_tiles_one_to_one: 1,
+            tile_eff: 0.5,
+            packing_eff: 0.5,
+            total_area_mm2: area,
+            array_area_mm2: area,
+        };
+        let pts = vec![mk(f64::NAN), mk(2.0), mk(1.0)];
+        let best = optimum(&pts).unwrap();
+        assert_eq!(best.total_area_mm2, 1.0);
+        let per_aspect = best_per_aspect(&pts);
+        assert_eq!(per_aspect.len(), 1);
+        assert_eq!(per_aspect[0].total_area_mm2, 1.0);
+    }
+
+    #[test]
+    fn ilp_sweep_warm_chain_matches_cold_points() {
+        // the warm-started chain must agree with independently cold-solved
+        // points (both prove optimality at this scale)
+        let net = zoo::lenet();
+        let mut cfg = SweepConfig::square(Discipline::Pipeline);
+        cfg.row_exp = (7, 9);
+        cfg.engine = Engine::Ilp { max_nodes: 200_000 };
+        let chain = sweep(&net, &cfg);
+        for p in &chain {
+            let cold = evaluate(&net, p.tile, &cfg);
+            assert_eq!(p.n_tiles, cold.n_tiles, "{}", p.tile);
+        }
+    }
+
+    #[test]
+    fn single_thread_and_oversubscribed_agree() {
+        let net = zoo::lenet();
+        let cfg = SweepConfig::paper_default(Discipline::Pipeline);
+        let one = sweep_with_threads(&net, &cfg, 1);
+        let many = sweep_with_threads(&net, &cfg, 64); // more workers than tasks
+        assert_eq!(one.len(), many.len());
+        for (a, b) in one.iter().zip(&many) {
+            assert_eq!((a.tile, a.n_tiles), (b.tile, b.n_tiles));
+        }
+    }
 
     #[test]
     fn square_sweep_shapes() {

@@ -9,21 +9,45 @@
 //! FFD dominates next-fit on quality at O(n²) worst case; the benches
 //! quantify the quality/runtime trade against [`super::simple`].
 
-use super::{order_blocks, Discipline, Packing, SortOrder};
+use super::{order_indices, Discipline, PackScratch, Packing, SortOrder};
 use crate::geom::{Block, Placement, Tile};
 
 /// Pack with first-fit-decreasing.
 pub fn pack(blocks: &[Block], tile: Tile, discipline: Discipline) -> Packing {
-    let ordered = order_blocks(blocks, SortOrder::RowsDesc);
-    for b in &ordered {
-        assert!(
-            tile.fits(b.rows, b.cols),
-            "block {b:?} larger than tile {tile}: fragment with this tile first"
-        );
+    let mut scratch = PackScratch::default();
+    let n_bins = pack_into(blocks, tile, discipline, &mut scratch);
+    Packing {
+        tile,
+        discipline,
+        blocks: blocks.to_vec(),
+        placements: std::mem::take(&mut scratch.placements),
+        n_bins,
     }
+}
+
+/// Allocation-lean core (see [`super::simple::pack_into`]): borrowed block
+/// slice, placements in `scratch.placements` referencing original indices,
+/// bin count returned. The pipeline engine's per-bin budgets also live in
+/// `scratch`; the dense engine's shelf lists are the one remaining local
+/// allocation (off the default sweep path, which uses the simple engine).
+pub fn pack_into(
+    blocks: &[Block],
+    tile: Tile,
+    discipline: Discipline,
+    scratch: &mut PackScratch,
+) -> usize {
+    super::assert_blocks_fit(blocks, tile);
+    let PackScratch { perm, placements, bin_rows, bin_cols } = scratch;
+    order_indices(blocks, SortOrder::RowsDesc, perm);
+    placements.clear();
+    placements.reserve(blocks.len());
     match discipline {
-        Discipline::Dense => dense_first_fit(ordered, tile),
-        Discipline::Pipeline => pipeline_first_fit(ordered, tile),
+        Discipline::Dense => dense_first_fit(blocks, perm, tile, placements),
+        Discipline::Pipeline => {
+            bin_rows.clear();
+            bin_cols.clear();
+            pipeline_first_fit(blocks, perm, tile, bin_rows, bin_cols, placements)
+        }
     }
 }
 
@@ -58,11 +82,17 @@ impl DenseBin {
 }
 
 /// FFD shelf packing (see module docs).
-fn dense_first_fit(blocks: Vec<Block>, tile: Tile) -> Packing {
+fn dense_first_fit(
+    blocks: &[Block],
+    perm: &[u32],
+    tile: Tile,
+    placements: &mut Vec<Placement>,
+) -> usize {
     let mut bins: Vec<DenseBin> = Vec::new();
-    let mut placements = Vec::with_capacity(blocks.len());
 
-    'blocks: for (idx, b) in blocks.iter().enumerate() {
+    'blocks: for &oi in perm {
+        let idx = oi as usize;
+        let b = &blocks[idx];
         // 1) existing shelf anywhere. Unlike the next-fit engine (whose
         //    current shelf is always the rightmost and may widen into the
         //    bin's free space), closed shelves have neighbours to their
@@ -102,17 +132,23 @@ fn dense_first_fit(blocks: Vec<Block>, tile: Tile) -> Packing {
         placements.push(Placement { block: idx, bin: bins.len() - 1, x: 0, y: 0 });
     }
 
-    let n_bins = bins.len();
-    Packing { tile, discipline: Discipline::Dense, blocks, placements, n_bins }
+    bins.len()
 }
 
-/// FFD two-constraint staircase packing (see module docs).
-fn pipeline_first_fit(blocks: Vec<Block>, tile: Tile) -> Packing {
-    let mut rows_used: Vec<usize> = Vec::new();
-    let mut cols_used: Vec<usize> = Vec::new();
-    let mut placements = Vec::with_capacity(blocks.len());
-
-    for (idx, b) in blocks.iter().enumerate() {
+/// FFD two-constraint staircase packing (see module docs). `rows_used` /
+/// `cols_used` are caller-provided (cleared) scratch so the sweep reuses
+/// their capacity across grid points.
+fn pipeline_first_fit(
+    blocks: &[Block],
+    perm: &[u32],
+    tile: Tile,
+    rows_used: &mut Vec<usize>,
+    cols_used: &mut Vec<usize>,
+    placements: &mut Vec<Placement>,
+) -> usize {
+    for &oi in perm {
+        let idx = oi as usize;
+        let b = &blocks[idx];
         let slot = (0..rows_used.len()).find(|&i| {
             rows_used[i] + b.rows <= tile.n_row && cols_used[i] + b.cols <= tile.n_col
         });
@@ -129,8 +165,7 @@ fn pipeline_first_fit(blocks: Vec<Block>, tile: Tile) -> Packing {
         cols_used[bi] += b.cols;
     }
 
-    let n_bins = rows_used.len();
-    Packing { tile, discipline: Discipline::Pipeline, blocks, placements, n_bins }
+    rows_used.len()
 }
 
 #[cfg(test)]

@@ -55,10 +55,7 @@ impl Packing {
     /// (Distinct from tile *array efficiency*, which is a circuit-area
     /// property — see paper §4 discussion.)
     pub fn packing_efficiency(&self) -> f64 {
-        if self.n_bins == 0 {
-            return 0.0;
-        }
-        self.stored_weights() as f64 / (self.n_bins * self.tile.capacity()) as f64
+        packing_efficiency(self.stored_weights(), self.n_bins, self.tile.capacity())
     }
 
     /// Blocks grouped by bin, for reports and the simulator.
@@ -95,17 +92,78 @@ pub enum SortOrder {
     AsGiven,
 }
 
-pub(crate) fn order_blocks(blocks: &[Block], order: SortOrder) -> Vec<Block> {
-    let mut v = blocks.to_vec();
+/// Reusable buffers for the allocation-lean packing path. One instance per
+/// sweep worker amortizes the permutation/placement/bin-state allocations
+/// across every grid point the worker evaluates (EXPERIMENTS.md §Perf #1);
+/// the block slice itself is only ever borrowed, never cloned.
+#[derive(Debug, Default)]
+pub struct PackScratch {
+    /// index permutation into the borrowed block slice
+    pub(crate) perm: Vec<u32>,
+    /// placements produced by the last `pack_into` call
+    /// (`Placement::block` indexes the original, un-sorted slice)
+    pub placements: Vec<Placement>,
+    /// per-bin word-line budget (pipeline engines)
+    pub(crate) bin_rows: Vec<usize>,
+    /// per-bin bit-line budget (pipeline engines)
+    pub(crate) bin_cols: Vec<usize>,
+}
+
+impl PackScratch {
+    pub fn new() -> PackScratch {
+        PackScratch::default()
+    }
+}
+
+/// Fill `out` with the placement order as an index permutation into
+/// `blocks`, without cloning or reordering the blocks themselves. Uses the
+/// same key as [`crate::frag::sort_for_packing`] (provenance tie-breaks,
+/// then original index via the stable sort), so results are deterministic.
+pub(crate) fn order_indices(blocks: &[Block], order: SortOrder, out: &mut Vec<u32>) {
+    debug_assert!(blocks.len() <= u32::MAX as usize);
+    out.clear();
+    out.extend(0..blocks.len() as u32);
     match order {
         SortOrder::AsGiven => {}
-        SortOrder::RowsDesc => crate::frag::sort_for_packing(&mut v),
+        SortOrder::RowsDesc => sort_indices_desc(blocks, out),
         SortOrder::RowsAsc => {
-            crate::frag::sort_for_packing(&mut v);
-            v.reverse();
+            // mirror the old owned-block behavior exactly: sort descending,
+            // then reverse (equal keys end up reversed too)
+            sort_indices_desc(blocks, out);
+            out.reverse();
         }
     }
-    v
+}
+
+fn sort_indices_desc(blocks: &[Block], idx: &mut [u32]) {
+    idx.sort_by(|&ia, &ib| {
+        let (a, b) = (&blocks[ia as usize], &blocks[ib as usize]);
+        b.rows
+            .cmp(&a.rows)
+            .then(b.cols.cmp(&a.cols))
+            .then(a.layer.cmp(&b.layer))
+            .then(a.replica.cmp(&b.replica))
+            .then(a.grid.cmp(&b.grid))
+    });
+}
+
+/// Packing-efficiency formula, defined once so the owned
+/// ([`Packing::packing_efficiency`]) and allocation-lean
+/// ([`crate::opt`] sweep) paths agree bit for bit.
+pub fn packing_efficiency(stored_weights: usize, n_bins: usize, capacity: usize) -> f64 {
+    if n_bins == 0 {
+        return 0.0;
+    }
+    stored_weights as f64 / (n_bins * capacity) as f64
+}
+
+pub(crate) fn assert_blocks_fit(blocks: &[Block], tile: Tile) {
+    for b in blocks {
+        assert!(
+            tile.fits(b.rows, b.cols),
+            "block {b:?} larger than tile {tile}: fragment with this tile first"
+        );
+    }
 }
 
 #[cfg(test)]
@@ -155,13 +213,32 @@ mod tests {
     }
 
     #[test]
-    fn order_blocks_modes() {
+    fn order_indices_modes() {
         let blocks = vec![blk(1, 1, 0), blk(9, 1, 1), blk(5, 1, 2)];
-        let asc = order_blocks(&blocks, SortOrder::RowsAsc);
-        assert_eq!(asc.iter().map(|b| b.rows).collect::<Vec<_>>(), vec![1, 5, 9]);
-        let desc = order_blocks(&blocks, SortOrder::RowsDesc);
-        assert_eq!(desc.iter().map(|b| b.rows).collect::<Vec<_>>(), vec![9, 5, 1]);
-        let given = order_blocks(&blocks, SortOrder::AsGiven);
-        assert_eq!(given.iter().map(|b| b.rows).collect::<Vec<_>>(), vec![1, 9, 5]);
+        let rows_in = |perm: &[u32]| -> Vec<usize> {
+            perm.iter().map(|&i| blocks[i as usize].rows).collect()
+        };
+        let mut perm = Vec::new();
+        order_indices(&blocks, SortOrder::RowsAsc, &mut perm);
+        assert_eq!(rows_in(&perm), vec![1, 5, 9]);
+        order_indices(&blocks, SortOrder::RowsDesc, &mut perm);
+        assert_eq!(rows_in(&perm), vec![9, 5, 1]);
+        order_indices(&blocks, SortOrder::AsGiven, &mut perm);
+        assert_eq!(rows_in(&perm), vec![1, 9, 5]);
+    }
+
+    #[test]
+    fn order_indices_matches_owned_sort() {
+        // the permutation must visit blocks in exactly the order the old
+        // owned-block sort produced
+        let blocks: Vec<Block> = (0..20)
+            .map(|i| blk(1 + (i * 7) % 13, 1 + (i * 5) % 11, i))
+            .collect();
+        let mut owned = blocks.clone();
+        crate::frag::sort_for_packing(&mut owned);
+        let mut perm = Vec::new();
+        order_indices(&blocks, SortOrder::RowsDesc, &mut perm);
+        let via_perm: Vec<Block> = perm.iter().map(|&i| blocks[i as usize]).collect();
+        assert_eq!(via_perm, owned);
     }
 }

@@ -15,7 +15,7 @@
 //!   `Σ cols <= n_col` (Eq. 7c/7d) opens a new tile. This reproduces the
 //!   staircase structure of paper Fig. 6.
 
-use super::{order_blocks, Discipline, Packing, SortOrder};
+use super::{order_indices, Discipline, PackScratch, Packing, SortOrder};
 use crate::geom::{Block, Placement, Tile};
 
 /// Pack with the paper's defaults (descending row order).
@@ -30,22 +30,48 @@ pub fn pack_ordered(
     discipline: Discipline,
     order: SortOrder,
 ) -> Packing {
-    let ordered = order_blocks(blocks, order);
-    for b in &ordered {
-        assert!(
-            tile.fits(b.rows, b.cols),
-            "block {b:?} larger than tile {tile}: fragment with this tile first"
-        );
+    let mut scratch = PackScratch::default();
+    let n_bins = pack_into(blocks, tile, discipline, order, &mut scratch);
+    Packing {
+        tile,
+        discipline,
+        blocks: blocks.to_vec(),
+        placements: std::mem::take(&mut scratch.placements),
+        n_bins,
     }
+}
+
+/// Allocation-lean core shared by [`pack`] and the sweep hot path: the block
+/// slice is only borrowed (placement order is an index permutation held in
+/// `scratch`), placements land in `scratch.placements` with
+/// [`Placement::block`] indexing the original slice, and the bin count is
+/// returned. After the scratch buffers warm up, evaluating a new tile
+/// configuration allocates nothing on this path.
+pub fn pack_into(
+    blocks: &[Block],
+    tile: Tile,
+    discipline: Discipline,
+    order: SortOrder,
+    scratch: &mut PackScratch,
+) -> usize {
+    super::assert_blocks_fit(blocks, tile);
+    let PackScratch { perm, placements, .. } = scratch;
+    order_indices(blocks, order, perm);
+    placements.clear();
+    placements.reserve(blocks.len());
     match discipline {
-        Discipline::Dense => dense_next_fit(ordered, tile),
-        Discipline::Pipeline => pipeline_next_fit(ordered, tile),
+        Discipline::Dense => dense_next_fit(blocks, perm, tile, placements),
+        Discipline::Pipeline => pipeline_next_fit(blocks, perm, tile, placements),
     }
 }
 
 /// Dense next-fit shelf packing (see module docs).
-fn dense_next_fit(blocks: Vec<Block>, tile: Tile) -> Packing {
-    let mut placements = Vec::with_capacity(blocks.len());
+fn dense_next_fit(
+    blocks: &[Block],
+    perm: &[u32],
+    tile: Tile,
+    placements: &mut Vec<Placement>,
+) -> usize {
     let mut n_bins = 0usize;
 
     // Current shelf state within the current bin.
@@ -53,7 +79,9 @@ fn dense_next_fit(blocks: Vec<Block>, tile: Tile) -> Packing {
     let mut shelf_width = 0usize; // widest member of current shelf
     let mut shelf_fill = 0usize; // rows used in current shelf
 
-    for (idx, b) in blocks.iter().enumerate() {
+    for &oi in perm {
+        let idx = oi as usize;
+        let b = &blocks[idx];
         if n_bins == 0 {
             n_bins = 1;
         }
@@ -86,17 +114,23 @@ fn dense_next_fit(blocks: Vec<Block>, tile: Tile) -> Packing {
         placements.push(Placement { block: idx, bin: n_bins - 1, x: 0, y: 0 });
     }
 
-    Packing { tile, discipline: Discipline::Dense, blocks, placements, n_bins }
+    n_bins
 }
 
 /// Pipeline next-fit staircase packing (see module docs).
-fn pipeline_next_fit(blocks: Vec<Block>, tile: Tile) -> Packing {
-    let mut placements = Vec::with_capacity(blocks.len());
+fn pipeline_next_fit(
+    blocks: &[Block],
+    perm: &[u32],
+    tile: Tile,
+    placements: &mut Vec<Placement>,
+) -> usize {
     let mut n_bins = 0usize;
     let mut row_used = 0usize;
     let mut col_used = 0usize;
 
-    for (idx, b) in blocks.iter().enumerate() {
+    for &oi in perm {
+        let idx = oi as usize;
+        let b = &blocks[idx];
         let fits = row_used + b.rows <= tile.n_row && col_used + b.cols <= tile.n_col;
         if n_bins == 0 || !fits {
             n_bins += 1;
@@ -108,7 +142,7 @@ fn pipeline_next_fit(blocks: Vec<Block>, tile: Tile) -> Packing {
         col_used += b.cols;
     }
 
-    Packing { tile, discipline: Discipline::Pipeline, blocks, placements, n_bins }
+    n_bins
 }
 
 #[cfg(test)]

@@ -1,13 +1,22 @@
 //! PJRT runtime: load AOT artifacts (HLO text) and execute them.
 //!
-//! This is the only module that touches the `xla` crate. Artifacts are the
-//! HLO-text lowerings produced once by `python/compile/aot.py` (HLO *text*
-//! rather than serialized protos because xla_extension 0.5.1 rejects
-//! jax >= 0.5's 64-bit instruction ids; the text parser reassigns them).
-//! Python never runs at request time: the rust binary is self-contained
-//! once `artifacts/` exists.
+//! This is the only module that touches the `xla` crate, and that crate is
+//! only present on hosts with the vendored xla stack — so the PJRT client
+//! is gated behind the `pjrt` cargo feature. Without it (the offline
+//! default) [`Runtime`] and [`LoadedModel`] keep their full API but every
+//! execution path returns a descriptive error; [`Tensor`] and
+//! [`artifacts_dir`] are always available, so the mapping/packing/serving
+//! bookkeeping (and its tests) never depend on the feature.
+//!
+//! With `pjrt`: artifacts are the HLO-text lowerings produced once by
+//! `python/compile/aot.py` (HLO *text* rather than serialized protos
+//! because xla_extension 0.5.1 rejects jax >= 0.5's 64-bit instruction
+//! ids; the text parser reassigns them). Python never runs at request
+//! time: the rust binary is self-contained once `artifacts/` exists.
 
-use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::{anyhow, Result};
 use std::path::{Path, PathBuf};
 
 /// An f32 tensor (row-major) crossing the runtime boundary.
@@ -60,17 +69,20 @@ impl Tensor {
 }
 
 /// PJRT CPU runtime holding compiled executables.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
 }
 
 /// One compiled HLO artifact.
+#[cfg(feature = "pjrt")]
 pub struct LoadedModel {
     exe: xla::PjRtLoadedExecutable,
     pub name: String,
     pub path: PathBuf,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU PJRT client.
     pub fn cpu() -> Result<Runtime> {
@@ -104,6 +116,7 @@ impl Runtime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl LoadedModel {
     /// Execute with f32 inputs; returns the first element of the result
     /// tuple (aot.py lowers with `return_tuple=True`).
@@ -133,6 +146,50 @@ impl LoadedModel {
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
         let data = out.to_vec::<f32>().map_err(|e| anyhow!("output data: {e:?}"))?;
         Tensor::new(dims, data)
+    }
+}
+
+/// Message every stubbed execution path returns when the crate is built
+/// without the `pjrt` feature (the offline default — the xla crate is not
+/// in the image's crate set).
+#[cfg(not(feature = "pjrt"))]
+pub const PJRT_UNAVAILABLE: &str = "xbarmap was built without the `pjrt` feature (the offline \
+image does not vendor the xla crate); rebuild with `--features pjrt` on a host with the \
+vendored xla stack to execute AOT artifacts";
+
+/// Stub PJRT runtime: full API, every execution path errors (see module
+/// docs).
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    _private: (),
+}
+
+/// Stub compiled-artifact handle (never constructed at runtime).
+#[cfg(not(feature = "pjrt"))]
+pub struct LoadedModel {
+    pub name: String,
+    pub path: PathBuf,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Err(anyhow!("PJRT cpu client: {PJRT_UNAVAILABLE}"))
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without pjrt)".to_string()
+    }
+
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModel> {
+        Err(anyhow!("parse {path:?}: {PJRT_UNAVAILABLE}"))
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl LoadedModel {
+    pub fn run(&self, _inputs: &[Tensor]) -> Result<Tensor> {
+        Err(anyhow!("execute {}: {PJRT_UNAVAILABLE}", self.name))
     }
 }
 

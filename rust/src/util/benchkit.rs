@@ -120,6 +120,74 @@ impl Bench {
             println!("BENCH_JSON {}", Json::Obj(o).dumps());
         }
     }
+
+    /// Write a `BENCH_<tag>.json` medians file (bench name -> p50 ns) at the
+    /// repo root, printing per-bench deltas against the previous file when
+    /// one exists — the perf trajectory record EXPERIMENTS.md tracks.
+    /// Returns the path written.
+    pub fn write_json_report(&self, tag: &str) -> std::io::Result<std::path::PathBuf> {
+        self.write_json_report_to(&bench_report_dir(), tag)
+    }
+
+    /// [`Self::write_json_report`] into an explicit directory (no
+    /// environment lookups — also what the unit tests use, since mutating
+    /// env vars races with concurrently running tests).
+    pub fn write_json_report_to(
+        &self,
+        dir: &std::path::Path,
+        tag: &str,
+    ) -> std::io::Result<std::path::PathBuf> {
+        use crate::util::json::{self, Json, JsonObj};
+        let path = dir.join(format!("BENCH_{tag}.json"));
+        let previous = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|s| json::parse(&s).ok());
+        if let Some(prev) = previous.as_ref().and_then(Json::as_obj) {
+            let mut any = false;
+            for s in &self.results {
+                if let Some(old) = prev.get(&s.name).and_then(Json::as_f64) {
+                    if old > 0.0 {
+                        let delta = (s.p50_ns - old) / old * 100.0;
+                        println!(
+                            "delta {:<44} {:>12} -> {:>12}  ({:+.1}%)",
+                            s.name,
+                            fmt_ns(old),
+                            fmt_ns(s.p50_ns),
+                            delta
+                        );
+                        any = true;
+                    }
+                }
+            }
+            if any {
+                println!("(vs previous {})", path.display());
+            }
+        }
+        let mut o = JsonObj::new();
+        for s in &self.results {
+            o.set(s.name.as_str(), s.p50_ns);
+        }
+        std::fs::write(&path, Json::Obj(o).pretty() + "\n")?;
+        Ok(path)
+    }
+}
+
+/// Directory for `BENCH_*.json` reports: `XBARMAP_BENCH_DIR` when set, else
+/// the nearest ancestor of the working directory containing `ROADMAP.md`
+/// (the repo root — benches run from `rust/`), else the working directory.
+fn bench_report_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("XBARMAP_BENCH_DIR") {
+        return std::path::PathBuf::from(d);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| std::path::PathBuf::from("."));
+    loop {
+        if dir.join("ROADMAP.md").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return std::path::PathBuf::from(".");
+        }
+    }
 }
 
 /// Human-friendly nanosecond formatting.
@@ -157,6 +225,21 @@ mod tests {
             })
             .p50_ns;
         assert!(slow > fast, "slow {slow} !> fast {fast}");
+    }
+
+    #[test]
+    fn json_report_written_and_compared() {
+        let dir = std::env::temp_dir().join("xbarmap_benchkit_report");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut b = Bench::new(Duration::from_millis(2), Duration::from_millis(5));
+        b.run("unit/report", || 1u64);
+        let p = b.write_json_report_to(&dir, "test").unwrap();
+        assert!(p.ends_with("BENCH_test.json"), "{}", p.display());
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("unit/report"), "{text}");
+        // second write compares against the first and overwrites cleanly
+        b.write_json_report_to(&dir, "test").unwrap();
     }
 
     #[test]

@@ -1,0 +1,122 @@
+//! Determinism: the parallel sweep engine must return byte-identical
+//! `SweepPoint` ordering and values to the serial reference implementation
+//! (`opt::sweep_serial`), for every network/discipline/engine combination
+//! the repro harness exercises. f64 fields are compared through `to_bits`
+//! so "close enough" can never mask a scheduling-dependent divergence.
+
+use xbarmap::nets::zoo;
+use xbarmap::opt::{self, Engine, SweepConfig, SweepPoint};
+use xbarmap::pack::Discipline;
+use xbarmap::perf::rapa;
+
+/// Byte-level equality of two sweep results (order and values).
+fn assert_identical(parallel: &[SweepPoint], serial: &[SweepPoint], what: &str) {
+    assert_eq!(parallel.len(), serial.len(), "{what}: point count");
+    for (i, (p, s)) in parallel.iter().zip(serial).enumerate() {
+        assert_eq!(p.tile, s.tile, "{what}[{i}]: tile");
+        assert_eq!(p.aspect, s.aspect, "{what}[{i}]: aspect");
+        assert_eq!(p.n_blocks, s.n_blocks, "{what}[{i}]: n_blocks");
+        assert_eq!(p.n_tiles, s.n_tiles, "{what}[{i}]: n_tiles");
+        assert_eq!(
+            p.n_tiles_one_to_one, s.n_tiles_one_to_one,
+            "{what}[{i}]: n_tiles_one_to_one"
+        );
+        assert_eq!(p.tile_eff.to_bits(), s.tile_eff.to_bits(), "{what}[{i}]: tile_eff");
+        assert_eq!(
+            p.packing_eff.to_bits(),
+            s.packing_eff.to_bits(),
+            "{what}[{i}]: packing_eff"
+        );
+        assert_eq!(
+            p.total_area_mm2.to_bits(),
+            s.total_area_mm2.to_bits(),
+            "{what}[{i}]: total_area_mm2"
+        );
+        assert_eq!(
+            p.array_area_mm2.to_bits(),
+            s.array_area_mm2.to_bits(),
+            "{what}[{i}]: array_area_mm2"
+        );
+    }
+}
+
+fn check(net: &xbarmap::nets::Network, cfg: &SweepConfig, what: &str) {
+    let serial = opt::sweep_serial(net, cfg);
+    // several worker counts: fewer than tasks, more than tasks, and the
+    // ambient default — scheduling must never leak into the results
+    for threads in [2, 5, 64] {
+        let par = opt::sweep_with_threads(net, cfg, threads);
+        assert_identical(&par, &serial, &format!("{what}/threads{threads}"));
+    }
+    let ambient = opt::sweep(net, cfg);
+    assert_identical(&ambient, &serial, &format!("{what}/ambient"));
+}
+
+#[test]
+fn lenet_dense_and_pipeline_full_grid() {
+    let net = zoo::lenet();
+    for d in [Discipline::Dense, Discipline::Pipeline] {
+        check(&net, &SweepConfig::paper_default(d), &format!("lenet/{d}/rect"));
+        check(&net, &SweepConfig::square(d), &format!("lenet/{d}/square"));
+    }
+}
+
+#[test]
+fn resnet18_dense_full_grid() {
+    let net = zoo::resnet18();
+    check(&net, &SweepConfig::paper_default(Discipline::Dense), "resnet18/dense/rect");
+}
+
+#[test]
+fn resnet18_pipeline_full_grid() {
+    let net = zoo::resnet18();
+    check(&net, &SweepConfig::paper_default(Discipline::Pipeline), "resnet18/pipeline/rect");
+}
+
+#[test]
+fn resnet18_rapa_replicated() {
+    let net = zoo::resnet18();
+    let cfg = SweepConfig {
+        replication: Some(rapa::plan_balanced(&net, 128)),
+        ..SweepConfig::square(Discipline::Pipeline)
+    };
+    check(&net, &cfg, "resnet18/rapa128/square");
+}
+
+#[test]
+fn ffd_engine_deterministic() {
+    let net = zoo::lenet();
+    for d in [Discipline::Dense, Discipline::Pipeline] {
+        let cfg = SweepConfig { engine: Engine::Ffd, ..SweepConfig::paper_default(d) };
+        check(&net, &cfg, &format!("lenet/ffd/{d}"));
+    }
+}
+
+#[test]
+fn ilp_engine_deterministic_with_warm_chains() {
+    // ILP tasks are whole aspect columns so the warm-start chain is
+    // scheduling-independent; serial and parallel must agree exactly
+    let net = zoo::lenet();
+    for d in [Discipline::Dense, Discipline::Pipeline] {
+        let cfg = SweepConfig {
+            engine: Engine::Ilp { max_nodes: 100_000 },
+            row_exp: (7, 10),
+            aspects: (1..=4).collect(),
+            ..SweepConfig::paper_default(d)
+        };
+        check(&net, &cfg, &format!("lenet/lps/{d}"));
+    }
+}
+
+#[test]
+fn repeated_runs_are_stable() {
+    // the parallel engine against itself across runs (no hidden
+    // scheduling dependence, no uninitialized scratch reuse)
+    let net = zoo::lenet();
+    let cfg = SweepConfig::paper_default(Discipline::Pipeline);
+    let first = opt::sweep(&net, &cfg);
+    for _ in 0..3 {
+        let again = opt::sweep(&net, &cfg);
+        assert_identical(&again, &first, "repeat");
+    }
+}

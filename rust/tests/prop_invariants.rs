@@ -140,6 +140,59 @@ fn prop_ilp_sandwich() {
 }
 
 #[test]
+fn prop_index_based_packing_matches_owned_block_packing() {
+    // The allocation-lean engines place blocks through an index permutation
+    // into the borrowed slice. The old implementation cloned the block
+    // vector and sorted it in place — reproduce that owned-block order here
+    // (sort a clone, pack AsGiven) and require identical bin counts, plus
+    // pack_into/pack parity with shared scratch across instances.
+    let mut scratch = pack::PackScratch::new();
+    check("index == owned-block", Config { cases: 120, seed: 0xFA }, |rng| {
+        let (tr, tc) = gen::tile_dims(rng);
+        let tile = Tile::new(tr, tc);
+        let n = rng.range(1, 40);
+        let blocks = random_blocks(rng, n, tile);
+        let mut owned = blocks.clone();
+        frag::sort_for_packing(&mut owned);
+        for d in [Discipline::Dense, Discipline::Pipeline] {
+            // simple engine: new index path vs old owned-sorted path
+            let new_bins = pack::simple::pack(&blocks, tile, d).n_bins;
+            let old_bins =
+                pack::simple::pack_ordered(&owned, tile, d, SortOrder::AsGiven).n_bins;
+            if new_bins != old_bins {
+                return Err(format!("simple {d}: index {new_bins} != owned {old_bins}"));
+            }
+            // scratch-based cores agree with the owned wrappers
+            let lean_simple = pack::simple::pack_into(
+                &blocks,
+                tile,
+                d,
+                SortOrder::RowsDesc,
+                &mut scratch,
+            );
+            if lean_simple != new_bins {
+                return Err(format!("simple {d}: pack_into {lean_simple} != pack {new_bins}"));
+            }
+            let ffd_bins = pack::ffd::pack(&blocks, tile, d).n_bins;
+            let lean_ffd = pack::ffd::pack_into(&blocks, tile, d, &mut scratch);
+            if lean_ffd != ffd_bins {
+                return Err(format!("ffd {d}: pack_into {lean_ffd} != pack {ffd_bins}"));
+            }
+            // lean placements must validate when wrapped into a Packing
+            let p = pack::Packing {
+                tile,
+                discipline: d,
+                blocks: blocks.clone(),
+                placements: scratch.placements.clone(),
+                n_bins: lean_ffd,
+            };
+            placement::validate(&p).map_err(|e| format!("lean ffd {d}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_pipeline_capacity_sums() {
     // in any valid pipeline packing, per-bin row/col sums respect Eq. 7c/7d
     check("eq7 capacity", Config { cases: 100, seed: 0xF6 }, |rng| {
