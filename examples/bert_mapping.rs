@@ -1,17 +1,18 @@
-//! Mapping one BERT encoder layer onto crossbar tiles (paper Fig. 10 right).
+//! Mapping one BERT encoder layer onto crossbar tiles (paper Fig. 10 right)
+//! through the `plan` front door.
 //!
 //! Run: `cargo run --release --example bert_mapping`
 //!
 //! Compares optimized pipeline packing against 1:1 mapping across square
 //! tile sizes, with and without the "maximum parallelism" replication
-//! (every FC weight matrix cloned once per token, N_rapa = S).
+//! (every FC weight matrix cloned once per token, N_rapa = S) — one
+//! fixed-tile [`MapRequest`] per row.
 
 use xbarmap::area::AreaModel;
-use xbarmap::frag;
-use xbarmap::geom::Tile;
 use xbarmap::nets::zoo;
-use xbarmap::pack::{self, Discipline};
+use xbarmap::pack::Discipline;
 use xbarmap::perf::{self, rapa, Execution, TimingModel};
+use xbarmap::plan::{MapRequest, Replication};
 use xbarmap::util::table::{sig3, Table};
 
 fn main() {
@@ -26,24 +27,30 @@ fn main() {
     );
 
     let area = AreaModel::paper_default();
-    let plans: [(&str, Vec<usize>); 2] = [
-        ("plain", vec![1; net.n_layers()]),
-        ("max-parallel xS", rapa::plan_uniform(&net, seq)),
+    let plans: [(&str, Replication); 2] = [
+        ("plain", Replication::None),
+        ("max-parallel xS", Replication::Uniform(seq)),
     ];
 
-    for (name, plan) in &plans {
+    for (name, replication) in &plans {
         println!("== {name}");
         let mut t = Table::new(&["tile", "blocks (=1:1 tiles)", "tiles opt", "area opt mm2", "area 1:1 mm2"]);
         for k in 6..=13u32 {
-            let tile = Tile::new(1 << k, 1 << k);
-            let blocks = frag::fragment_network_replicated(&net, tile, plan);
-            let packing = pack::simple::pack(&blocks, tile, Discipline::Pipeline);
+            let tile = 1usize << k;
+            let best = MapRequest::zoo("bert")
+                .tile(tile, tile)
+                .discipline(Discipline::Pipeline)
+                .replication(replication.clone())
+                .build()
+                .and_then(|p| p.plan())
+                .expect("bert plan")
+                .best;
             t.row(&[
-                tile.to_string(),
-                blocks.len().to_string(),
-                packing.n_bins.to_string(),
-                sig3(area.total_area_mm2(packing.n_bins, tile)),
-                sig3(area.total_area_mm2(blocks.len(), tile)),
+                best.tile.to_string(),
+                best.n_blocks.to_string(),
+                best.n_tiles.to_string(),
+                sig3(best.total_area_mm2),
+                sig3(area.total_area_mm2(best.n_tiles_one_to_one, best.tile)),
             ]);
         }
         println!("{}", t.render());
@@ -51,13 +58,15 @@ fn main() {
 
     // throughput effect of the replication (Eq. 4)
     let timing = TimingModel::default();
-    let t_plain = perf::latency(&net, &plans[0].1, &timing, Execution::Pipelined);
-    let t_par = perf::latency(&net, &plans[1].1, &timing, Execution::Pipelined);
+    let plain = vec![1; net.n_layers()];
+    let par = rapa::plan_uniform(&net, seq);
+    let t_plain = perf::latency(&net, &plain, &timing, Execution::Pipelined);
+    let t_par = perf::latency(&net, &par, &timing, Execution::Pipelined);
     println!(
         "pipeline beat: plain {:.1} ns vs max-parallel {:.1} ns ({}x faster at {}x the weights)",
         t_plain * 1e9,
         t_par * 1e9,
         sig3(t_plain / t_par),
-        sig3(rapa::weight_inflation(&net, &plans[1].1)),
+        sig3(rapa::weight_inflation(&net, &par)),
     );
 }

@@ -19,6 +19,7 @@
 
 use anyhow::{anyhow, Result};
 use xbarmap::coordinator::{digits, Coordinator, CoordinatorConfig};
+use xbarmap::plan::MapRequest;
 use xbarmap::runtime::Tensor;
 use xbarmap::util::json::{self, Json};
 use xbarmap::util::prng::Rng;
@@ -55,6 +56,12 @@ fn main() -> Result<()> {
     println!("  packing efficiency: {:.3}", coordinator.mapping.packing_efficiency());
     println!("  total tile area   : {:.2} mm²", coordinator.total_area_mm2);
     println!("  modeled latency   : {:.0} ns (Eq. 3)", coordinator.modeled_latency_s * 1e9);
+    // the coordinator maps its deployment through the plan front door;
+    // this is the equivalent v1 wire request (`xbarmap plan` input line)
+    let deploy_req = MapRequest::zoo("digits-mlp")
+        .tile(coordinator.tile.n_row, coordinator.tile.n_col)
+        .id("lenet-e2e-deployment");
+    println!("  plan wire request : {}", deploy_req.to_json().dumps());
 
     // ---- 2. golden-vector verification (build-time jax == request-time rust) ----
     let (input, labels, want_logits) = read_testvec(&coordinator.artifacts)?;

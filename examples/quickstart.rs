@@ -1,62 +1,90 @@
-//! Quickstart: pack the paper's 13-item demo list into T(512,512) tiles
-//! with all three engines and both disciplines, and price the results.
+//! Quickstart: the `plan` front door on the paper's 13-item demo list.
 //!
 //! Run: `cargo run --release --example quickstart`
+//!
+//! Builds a [`MapRequest`] — the crate's canonical entry point — for an
+//! inline network whose weight matrices reproduce the §2.2 demo list
+//! exactly, prices it on T(512,512) tiles with all three engines and both
+//! disciplines, and prints one request's v1 JSON wire form (what
+//! `xbarmap plan` consumes per line).
 //!
 //! Reproduces the paper's §2.2 headline: binary linear optimization packs
 //! the list into 2 tiles densely and 4 tiles pipeline-enabled (Tables 3/5,
 //! Figs. 5/6), while the greedy engines land within a bin or two.
 
-use xbarmap::area::AreaModel;
-use xbarmap::ilp;
-use xbarmap::pack::{self, placement, Discipline};
-use xbarmap::report::paper_demo_items;
+use xbarmap::nets::{Layer, Network};
+use xbarmap::opt::Engine;
+use xbarmap::pack::Discipline;
+use xbarmap::plan::MapRequest;
 use xbarmap::util::table::{sig3, Table};
 
-fn main() {
-    let tile = xbarmap::geom::Tile::new(512, 512);
-    let items = paper_demo_items();
-    let area = AreaModel::paper_default();
-
-    println!("demo list: {} blocks, {} weights total\n", items.len(), items
+/// The §2.2 demo list as an inline network: item `(r, c)` is a
+/// fully-connected layer `fc(r-1, c)` whose bias row makes the weight
+/// matrix exactly `r x c`, so fragmentation onto T(512,512) yields the
+/// paper's 13 blocks verbatim.
+fn demo13() -> Network {
+    let items: [(usize, usize); 13] = [
+        (257, 256), (257, 256), (257, 256), (129, 256), (129, 128),
+        (129, 128), (129, 128), (129, 128), (65, 128), (148, 64),
+        (65, 64), (65, 64), (65, 64),
+    ];
+    let layers = items
         .iter()
-        .map(|b| b.weights())
-        .sum::<usize>());
+        .enumerate()
+        .map(|(i, &(r, c))| Layer::fc(&format!("item{}", i + 1), r - 1, c))
+        .collect();
+    Network::new("demo13", "paper §2.2 demo list", layers)
+}
+
+fn main() {
+    let base = MapRequest::inline(demo13()).tile(512, 512).placements(true);
+
+    // the v1 wire form of one request — `xbarmap plan` reads one of these
+    // per line and streams back one plan per line
+    println!("wire request: {}\n", base.clone().id("quickstart").to_json().dumps());
 
     let mut t = Table::new(&["discipline", "engine", "tiles", "packing eff", "total area mm2"]);
     for discipline in [Discipline::Dense, Discipline::Pipeline] {
-        let engines: Vec<(&str, pack::Packing)> = vec![
-            ("simple (next-fit)", pack::simple::pack(&items, tile, discipline)),
-            ("ffd", pack::ffd::pack(&items, tile, discipline)),
-            (
-                "lps (branch&bound)",
-                ilp::solve_packing(&items, tile, discipline, ilp::Budget::default()).packing,
-            ),
-        ];
-        for (name, packing) in engines {
-            placement::validate(&packing).expect("engine produced a valid packing");
+        for (name, engine) in [
+            ("simple (next-fit)", Engine::Simple),
+            ("ffd", Engine::Ffd),
+            ("lps (branch&bound)", Engine::Ilp { max_nodes: Engine::DEFAULT_ILP_NODES }),
+        ] {
+            let plan = base
+                .clone()
+                .discipline(discipline)
+                .engine(engine)
+                .build()
+                .and_then(|p| p.plan())
+                .expect("demo plan");
             t.row(&[
                 discipline.to_string(),
                 name.into(),
-                packing.n_bins.to_string(),
-                sig3(packing.packing_efficiency()),
-                sig3(area.total_area_mm2(packing.n_bins, tile)),
+                plan.best.n_tiles.to_string(),
+                sig3(plan.best.packing_eff),
+                sig3(plan.best.total_area_mm2),
             ]);
         }
     }
     println!("{}", t.render());
 
     // Show the optimal pipeline placement as a staircase diagram.
-    let r = ilp::solve_packing(&items, tile, Discipline::Pipeline, ilp::Budget::default());
+    let planner = base
+        .discipline(Discipline::Pipeline)
+        .engine(Engine::Ilp { max_nodes: Engine::DEFAULT_ILP_NODES })
+        .build()
+        .expect("valid demo request");
+    let plan = planner.plan().expect("demo plan");
+    let packing = planner.pack(plan.best.tile).expect("demo pack").packing;
     println!(
         "pipeline optimum ({} bins, optimal={}, {} search nodes):",
-        r.packing.n_bins, r.optimal, r.nodes
+        plan.best.n_tiles, plan.provenance.optimal, plan.provenance.nodes
     );
-    for (bin, placements) in r.packing.bins().iter().enumerate() {
+    for (bin, placements) in packing.bins().iter().enumerate() {
         let desc: Vec<String> = placements
             .iter()
             .map(|p| {
-                let b = r.packing.blocks[p.block];
+                let b = packing.blocks[p.block];
                 format!("item{}({}x{})@({},{})", p.block + 1, b.rows, b.cols, p.x, p.y)
             })
             .collect();

@@ -3,59 +3,50 @@
 //!
 //! Run: `cargo run --release --example rapa_throughput`
 //!
-//! Maps ResNet18 onto 512x512 tiles under three execution regimes and runs
-//! the cycle-level simulator: dense sequential, plain pipeline, and
+//! Maps ResNet18 onto 512x512 tiles through the `plan` front door under
+//! three execution regimes and runs the cycle-level simulator on each
+//! planner-produced packing: dense sequential, plain pipeline, and
 //! RAPA-replicated pipeline at several replication factors.
 
-use xbarmap::area::AreaModel;
-use xbarmap::geom::Tile;
-use xbarmap::nets::zoo;
 use xbarmap::pack::Discipline;
-use xbarmap::perf::{rapa, Execution};
-use xbarmap::sim::{map_and_simulate, SimConfig};
+use xbarmap::perf::Execution;
+use xbarmap::plan::{MapRequest, Replication};
+use xbarmap::sim::{self, SimConfig};
 use xbarmap::util::table::{sig3, Table};
 
 fn main() {
-    let net = zoo::resnet18();
-    let tile = Tile::new(512, 512);
-    let area = AreaModel::paper_default();
     let n_inferences = 256;
 
     let mut t = Table::new(&[
         "regime", "tiles", "area mm2", "first latency", "throughput inf/s", "speedup", "util",
     ]);
 
-    let mut base_throughput = None;
-    let regimes: Vec<(String, Discipline, Execution, Vec<usize>)> = {
-        let mut v = vec![
-            (
-                "dense sequential".to_string(),
-                Discipline::Dense,
-                Execution::Sequential,
-                vec![1; net.n_layers()],
-            ),
-            (
-                "pipeline".to_string(),
-                Discipline::Pipeline,
-                Execution::Pipelined,
-                vec![1; net.n_layers()],
-            ),
-        ];
-        for n0 in [8, 32, 128] {
-            v.push((
-                format!("pipeline + RAPA {n0}"),
-                Discipline::Pipeline,
-                Execution::Pipelined,
-                rapa::plan_balanced(&net, n0),
-            ));
-        }
-        v
-    };
+    let mut regimes: Vec<(String, Discipline, Execution, Replication)> = vec![
+        ("dense sequential".to_string(), Discipline::Dense, Execution::Sequential, Replication::None),
+        ("pipeline".to_string(), Discipline::Pipeline, Execution::Pipelined, Replication::None),
+    ];
+    for n0 in [8, 32, 128] {
+        regimes.push((
+            format!("pipeline + RAPA {n0}"),
+            Discipline::Pipeline,
+            Execution::Pipelined,
+            Replication::Balanced(n0),
+        ));
+    }
 
+    let mut base_throughput = None;
     for (name, discipline, exec, replication) in regimes {
-        let mut cfg = SimConfig::new(&net, exec);
-        cfg.replication = replication;
-        let (packing, rep) = map_and_simulate(&net, tile, discipline, &cfg, n_inferences);
+        let planner = MapRequest::zoo("resnet18")
+            .tile(512, 512)
+            .discipline(discipline)
+            .replication(replication)
+            .build()
+            .expect("valid regime request");
+        let plan = planner.plan().expect("regime plan");
+        let packing = planner.pack(plan.best.tile).expect("regime pack").packing;
+        let mut cfg = SimConfig::new(planner.network(), exec);
+        cfg.replication = planner.replication().to_vec();
+        let rep = sim::simulate(planner.network(), &packing, &cfg, n_inferences);
         let speedup = match base_throughput {
             None => {
                 base_throughput = Some(rep.throughput_per_s);
@@ -65,8 +56,8 @@ fn main() {
         };
         t.row(&[
             name,
-            packing.n_bins.to_string(),
-            sig3(area.total_area_mm2(packing.n_bins, tile)),
+            plan.best.n_tiles.to_string(),
+            sig3(plan.best.total_area_mm2),
             format!("{:.2} µs", rep.first_latency_s * 1e6),
             sig3(rep.throughput_per_s),
             format!("{:.1}x", speedup),

@@ -1,35 +1,31 @@
-//! ResNet18/ImageNet tile-dimension optimization (paper §3.1, Figs. 8/9).
+//! ResNet18/ImageNet tile-dimension optimization (paper §3.1, Figs. 8/9)
+//! through the `plan` front door.
 //!
 //! Run: `cargo run --release --example resnet18_sweep`
 //!
-//! Sweeps square and rectangular tile arrays for dense and pipeline
-//! packing, prints the per-aspect optima and the headline observations:
+//! Builds one [`MapRequest`] per study — square and rectangular tile
+//! spaces, dense and pipeline packing — and reads everything off the
+//! returned plans: the per-aspect optima and the headline observations:
 //! * minimum tiles != minimum area,
 //! * pipeline costs ~2x dense area,
 //! * a tall rectangular array (the paper's 2560x512) slashes the pipeline
 //!   tile count at similar area.
 
-use xbarmap::nets::zoo;
-use xbarmap::opt::{self, SweepConfig};
 use xbarmap::pack::Discipline;
+use xbarmap::plan::MapRequest;
 use xbarmap::util::table::{sig3, Table};
 
 fn main() {
-    let net = zoo::resnet18();
-    println!(
-        "{} — {} layers, {:.1}M weights\n",
-        net.name,
-        net.n_layers(),
-        net.total_weights() as f64 / 1e6
-    );
-
     for discipline in [Discipline::Dense, Discipline::Pipeline] {
         println!("== {discipline} packing, square arrays (Fig. 8)");
-        let cfg = SweepConfig::square(discipline);
-        let pts = opt::sweep(&net, &cfg);
-        let best = opt::optimum(&pts).unwrap();
+        let plan = MapRequest::zoo("resnet18")
+            .discipline(discipline)
+            .grid((6, 13), vec![1])
+            .build()
+            .and_then(|p| p.plan())
+            .expect("sweep plan");
         let mut t = Table::new(&["tile", "blocks", "tiles", "tile eff", "pack eff", "area mm2", ""]);
-        for p in &pts {
+        for p in &plan.points {
             t.row(&[
                 p.tile.to_string(),
                 p.n_blocks.to_string(),
@@ -37,17 +33,26 @@ fn main() {
                 sig3(p.tile_eff),
                 sig3(p.packing_eff),
                 sig3(p.total_area_mm2),
-                if p.tile == best.tile { "<- optimum".into() } else { "".into() },
+                if p.tile == plan.best.tile { "<- optimum".into() } else { "".into() },
             ]);
         }
         println!("{}", t.render());
     }
 
     println!("== pipeline packing, rectangular arrays (aspect 1..8)");
-    let cfg = SweepConfig::paper_default(Discipline::Pipeline);
-    let pts = opt::sweep(&net, &cfg);
+    let plan = MapRequest::zoo("resnet18")
+        .discipline(Discipline::Pipeline)
+        .build()
+        .and_then(|p| p.plan())
+        .expect("sweep plan");
+    println!(
+        "{} — modeled pipeline latency {:.1} ns, {:.0} inf/s\n",
+        plan.network,
+        plan.latency_s * 1e9,
+        plan.throughput_per_s
+    );
     let mut t = Table::new(&["aspect", "best tile", "tiles", "area mm2"]);
-    for p in opt::best_per_aspect(&pts) {
+    for p in &plan.best_per_aspect {
         t.row(&[
             p.aspect.to_string(),
             p.tile.to_string(),
@@ -56,11 +61,10 @@ fn main() {
         ]);
     }
     println!("{}", t.render());
-    let best = opt::optimum(&pts).unwrap();
     println!(
         "global pipeline optimum: {} with {} tiles at {} mm2 (paper: ~17 tiles of 2560x512)",
-        best.tile,
-        best.n_tiles,
-        sig3(best.total_area_mm2)
+        plan.best.tile,
+        plan.best.n_tiles,
+        sig3(plan.best.total_area_mm2)
     );
 }

@@ -1,10 +1,15 @@
-//! Bench: fragmentation + greedy packing hot paths (the inner loop of the
-//! §3.1 sweep — Table 6 / Fig. 7 workloads).
+//! Bench: fragmentation + packing hot paths (the inner loop of the §3.1
+//! sweep — Table 6 / Fig. 7 workloads).
+//!
+//! The `plan/...` rows measure the full fixed-tile front door (fragment +
+//! pack + price through a [`xbarmap::plan::MapRequest`]); the `fragment/`
+//! and demo-list rows pin the stage internals the planner composes.
 
 use xbarmap::frag;
 use xbarmap::geom::Tile;
 use xbarmap::nets::zoo;
 use xbarmap::pack::{self, Discipline};
+use xbarmap::plan::MapRequest;
 use xbarmap::util::benchkit::Bench;
 
 fn main() {
@@ -16,18 +21,24 @@ fn main() {
         b.run(&format!("fragment/resnet18/{}", tile), || {
             frag::fragment_network(&net, tile)
         });
-        let blocks = frag::fragment_network(&net, tile);
         for d in [Discipline::Dense, Discipline::Pipeline] {
-            b.run(&format!("simple/resnet18/{tile}/{d}"), || {
-                pack::simple::pack(&blocks, tile, d).n_bins
+            let simple =
+                MapRequest::zoo("resnet18").tile(tile.n_row, tile.n_col).discipline(d);
+            let simple = simple.build().unwrap();
+            b.run(&format!("plan/simple/resnet18/{tile}/{d}"), || {
+                simple.plan().unwrap().best.n_tiles
             });
-            b.run(&format!("ffd/resnet18/{tile}/{d}"), || {
-                pack::ffd::pack(&blocks, tile, d).n_bins
-            });
+            let ffd = MapRequest::zoo("resnet18")
+                .tile(tile.n_row, tile.n_col)
+                .discipline(d)
+                .engine(xbarmap::opt::Engine::Ffd)
+                .build()
+                .unwrap();
+            b.run(&format!("plan/ffd/resnet18/{tile}/{d}"), || ffd.plan().unwrap().best.n_tiles);
         }
     }
 
-    // the paper's 13-item demo (Table 3/5 instance)
+    // the paper's 13-item demo (Table 3/5 instance) — raw engine internals
     let demo = xbarmap::report::paper_demo_items();
     let tile = Tile::new(512, 512);
     b.run("simple/demo13/dense", || pack::simple::pack(&demo, tile, Discipline::Dense).n_bins);

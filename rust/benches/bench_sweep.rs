@@ -1,16 +1,19 @@
 //! Bench: the full §3.1 optimization sweep (the repro harness hot path —
 //! Figs. 8, 9, 10 each run one or more of these).
 //!
-//! The 64-config benches run twice — once through the serial reference loop
-//! and once through the parallel allocation-lean engine — so the recorded
-//! `BENCH_sweep.json` medians document the speedup this engine exists for.
-//! Set `XBARMAP_SWEEP_THREADS` to pin the worker count and
-//! `XBARMAP_BENCH_FAST=1` for a CI smoke run.
+//! The parallel rows drive the sweep through the [`xbarmap::plan`] front
+//! door (a `MapRequest` planned end to end — what `xbarmap plan`/`sweep`
+//! serve); the serial rows pin the hidden `opt::sweep_serial` reference
+//! loop, so the recorded `BENCH_sweep.json` medians document the speedup
+//! the parallel engine exists for. Set `XBARMAP_SWEEP_THREADS` to pin the
+//! worker count and `XBARMAP_BENCH_FAST=1` for a CI smoke run; CI gates
+//! these medians against the committed baseline via `xbarmap bench-gate`.
 
 use xbarmap::nets::zoo;
 use xbarmap::opt::{self, Engine, SweepConfig};
 use xbarmap::pack::Discipline;
 use xbarmap::perf::rapa;
+use xbarmap::plan::{MapRequest, Replication};
 use xbarmap::util::benchkit::Bench;
 
 fn main() {
@@ -22,13 +25,14 @@ fn main() {
     b.run("sweep/resnet18/pipeline/full(64 configs)/serial", || {
         opt::sweep_serial(&net, &full).len()
     });
+    let full_plan =
+        MapRequest::zoo("resnet18").discipline(Discipline::Pipeline).build().unwrap();
     b.run("sweep/resnet18/pipeline/full(64 configs)/parallel", || {
-        opt::sweep(&net, &full).len()
+        full_plan.plan().unwrap().points.len()
     });
 
-    b.run("sweep/resnet18/dense/square(8 sizes)", || {
-        opt::sweep(&net, &SweepConfig::square(Discipline::Dense)).len()
-    });
+    let dense_sq = MapRequest::zoo("resnet18").grid((6, 13), vec![1]).build().unwrap();
+    b.run("sweep/resnet18/dense/square(8 sizes)", || dense_sq.plan().unwrap().points.len());
 
     let rapa_cfg = SweepConfig {
         replication: Some(rapa::plan_balanced(&net, 128)),
@@ -37,22 +41,28 @@ fn main() {
     b.run("sweep/resnet18/rapa128/full(64 configs)/serial", || {
         opt::sweep_serial(&net, &rapa_cfg).len()
     });
+    let rapa_plan = MapRequest::zoo("resnet18")
+        .discipline(Discipline::Pipeline)
+        .replication(Replication::Balanced(128))
+        .build()
+        .unwrap();
     b.run("sweep/resnet18/rapa128/full(64 configs)/parallel", || {
-        opt::sweep(&net, &rapa_cfg).len()
+        rapa_plan.plan().unwrap().points.len()
     });
 
-    let lps_cfg = SweepConfig {
-        engine: Engine::Ilp { max_nodes: 50_000 },
-        ..SweepConfig::square(Discipline::Dense)
-    };
-    b.run("sweep/resnet18/dense/square/lps-50k", || {
-        opt::sweep(&net, &lps_cfg).len()
-    });
+    let lps_plan = MapRequest::zoo("resnet18")
+        .grid((6, 13), vec![1])
+        .engine(Engine::Ilp { max_nodes: 50_000 })
+        .build()
+        .unwrap();
+    b.run("sweep/resnet18/dense/square/lps-50k", || lps_plan.plan().unwrap().points.len());
 
-    let big = zoo::resnet50();
-    b.run("sweep/resnet50/pipeline/square", || {
-        opt::sweep(&big, &SweepConfig::square(Discipline::Pipeline)).len()
-    });
+    let big_plan = MapRequest::zoo("resnet50")
+        .discipline(Discipline::Pipeline)
+        .grid((6, 13), vec![1])
+        .build()
+        .unwrap();
+    b.run("sweep/resnet50/pipeline/square", || big_plan.plan().unwrap().points.len());
 
     // headline: wall-clock speedup of the parallel engine on the 64-config
     // ResNet-18 sweep (acceptance target: >= 2x on a multi-core host)

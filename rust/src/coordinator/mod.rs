@@ -7,19 +7,18 @@
 //! serves batched inference requests. Python is never on this path.
 //!
 //! [`batched_sweep`] is the design-service side of the coordinator: many
-//! (network, sweep-config) requests priced concurrently through the §3.1
-//! optimization engine with deterministic, request-ordered results — the
-//! entry point for serving tile-dimension studies to multiple tenants.
+//! (network, sweep-config) requests priced concurrently with
+//! deterministic, request-ordered results. It is a compatibility shim over
+//! [`crate::plan::serve_batch`] — new callers should build
+//! [`crate::plan::MapRequest`]s and serve those directly.
 
 pub mod digits;
 
-use crate::area::AreaModel;
-use crate::frag;
 use crate::geom::Tile;
-use crate::nets::{zoo, Network};
-use crate::opt::{self, SweepConfig, SweepPoint};
-use crate::pack::{self, Discipline, Packing};
-use crate::perf::{self, Execution, TimingModel};
+use crate::nets::Network;
+use crate::opt::{SweepConfig, SweepPoint};
+use crate::pack::{Discipline, Packing};
+use crate::plan::{self, MapRequest, NetworkSpec, Replication};
 use crate::runtime::{artifacts_dir, LoadedModel, Runtime, Tensor};
 use crate::util::json::{self, Json};
 use anyhow::{anyhow, Context, Result};
@@ -92,21 +91,17 @@ impl Coordinator {
         let model = runtime.load_hlo_text(&dir.join(artifact))?;
 
         // map the served network onto the physical tile configuration
-        let net = zoo::digits_mlp();
-        let blocks = frag::fragment_network(&net, tile);
-        let mapping = pack::simple::pack(&blocks, tile, cfg.discipline);
-        let area = AreaModel::paper_default();
-        let total_area_mm2 = area.total_area_mm2(mapping.n_tiles(), tile);
-        let replication = vec![1; net.n_layers()];
-        let modeled_latency_s = perf::latency(
-            &net,
-            &replication,
-            &TimingModel::default(),
-            match cfg.discipline {
-                Discipline::Dense => Execution::Sequential,
-                Discipline::Pipeline => Execution::Pipelined,
-            },
-        );
+        // through the planning front door
+        let planner = MapRequest::zoo("digits-mlp")
+            .tile(tile.n_row, tile.n_col)
+            .discipline(cfg.discipline)
+            .build()
+            .map_err(|e| anyhow!("deployment plan: {e}"))?;
+        let deployment = planner.plan().map_err(|e| anyhow!("deployment plan: {e}"))?;
+        let mapping =
+            planner.pack(tile).map_err(|e| anyhow!("deployment pack: {e}"))?.packing;
+        let total_area_mm2 = deployment.best.total_area_mm2;
+        let modeled_latency_s = deployment.latency_s;
 
         Ok(Coordinator {
             runtime,
@@ -247,25 +242,51 @@ pub struct SweepResponse {
 }
 
 /// Evaluate many networks' §3.1 sweeps concurrently (the coordinator's
-/// batched-sweep entry point). Parallelism is across requests — each
-/// request runs the single-worker sweep engine with its own scratch arena —
-/// so responses come back in request order with values identical to a
-/// serial run.
+/// batched-sweep entry point). Compatibility shim: each [`SweepRequest`]
+/// is translated into a [`MapRequest`] and served through
+/// [`plan::serve_batch`], so responses come back in request order with
+/// values identical to a serial run.
+#[doc(hidden)]
 pub fn batched_sweep(requests: &[SweepRequest]) -> Vec<SweepResponse> {
-    batched_sweep_with_threads(requests, opt::sweep_threads())
+    batched_sweep_with_threads(requests, crate::opt::sweep_threads())
 }
 
 /// [`batched_sweep`] with an explicit worker count.
+#[doc(hidden)]
 pub fn batched_sweep_with_threads(
     requests: &[SweepRequest],
     threads: usize,
 ) -> Vec<SweepResponse> {
-    crate::util::par::par_for_ordered(requests.len(), threads, || (), |_, i, local| {
-        let r = &requests[i];
-        let points = opt::sweep_with_threads(&r.net, &r.cfg, 1);
-        let best = opt::optimum(&points);
-        local.push((i, SweepResponse { name: r.name.clone(), points, best }));
-    })
+    let map_requests: Vec<MapRequest> = requests.iter().map(to_map_request).collect();
+    plan::serve_batch_with_threads(&map_requests, threads)
+        .into_iter()
+        .zip(requests)
+        .map(|(r, req)| match r {
+            Ok(p) => {
+                SweepResponse { name: p.id.clone(), best: Some(p.best.clone()), points: p.points }
+            }
+            // legacy contract: a request the planner rejects (e.g. an
+            // empty grid, which the old loop swept into zero points)
+            // degrades to an empty response instead of failing the batch
+            Err(_) => SweepResponse { name: req.name.clone(), points: Vec::new(), best: None },
+        })
+        .collect()
+}
+
+/// Translate a legacy [`SweepRequest`] into the typed front-door request
+/// it always was: inline network, §3.1 grid, min-area objective.
+fn to_map_request(r: &SweepRequest) -> MapRequest {
+    let mut req = MapRequest::with_network(NetworkSpec::Inline(r.net.clone()))
+        .id(&r.name)
+        .grid(r.cfg.row_exp, r.cfg.aspects.clone())
+        .engine(r.cfg.engine)
+        .discipline(r.cfg.discipline)
+        .sort(r.cfg.sort)
+        .area(r.cfg.area);
+    if let Some(plan) = &r.cfg.replication {
+        req = req.replication(Replication::Explicit(plan.clone()));
+    }
+    req
 }
 
 #[cfg(test)]
@@ -274,6 +295,8 @@ mod tests {
     // are covered by rust/tests/integration_runtime.rs. Pure helpers are
     // tested here.
     use super::*;
+    use crate::nets::zoo;
+    use crate::opt;
 
     #[test]
     fn config_defaults() {

@@ -90,6 +90,11 @@ pub fn fragment_matrix_into(
 }
 
 /// Fragment every layer of a network onto `tile` (replica 0 only).
+///
+/// Stage internal of the [`crate::plan`] front door — build a
+/// [`crate::plan::MapRequest`] instead of wiring fragmentation and packing
+/// by hand.
+#[doc(hidden)]
 pub fn fragment_network(net: &Network, tile: Tile) -> Vec<Block> {
     fragment_network_replicated(net, tile, &vec![1; net.n_layers()])
 }
@@ -97,6 +102,7 @@ pub fn fragment_network(net: &Network, tile: Tile) -> Vec<Block> {
 /// Fragment with a per-layer replication factor (RAPA, Fig. 3): layer `i`
 /// contributes `replication[i]` identical copies of its fragment set,
 /// tagged with distinct replica indices.
+#[doc(hidden)]
 pub fn fragment_network_replicated(
     net: &Network,
     tile: Tile,

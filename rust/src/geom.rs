@@ -32,6 +32,17 @@ impl Tile {
         self.n_row as f64 / self.n_col as f64
     }
 
+    /// The §3.1 integer aspect factor, exactly: `Some(n_row / n_col)` when
+    /// the rows are an integer multiple of the columns, `None` otherwise
+    /// (wide or non-integer-aspect tiles never alias into a grid bucket).
+    pub fn exact_aspect(&self) -> Option<usize> {
+        if self.n_col > 0 && self.n_row % self.n_col == 0 {
+            Some(self.n_row / self.n_col)
+        } else {
+            None
+        }
+    }
+
     pub fn is_square(&self) -> bool {
         self.n_row == self.n_col
     }
@@ -137,6 +148,15 @@ mod tests {
         assert!(!t.fits(513, 1));
         assert!(!t.fits(1, 257));
         assert_eq!(t.to_string(), "T(512,256)");
+    }
+
+    #[test]
+    fn exact_aspect_is_rounding_free() {
+        assert_eq!(Tile::new(512, 512).exact_aspect(), Some(1));
+        assert_eq!(Tile::new(2560, 512).exact_aspect(), Some(5));
+        assert_eq!(Tile::new(96, 64).exact_aspect(), None); // 1.5, not 1
+        assert_eq!(Tile::new(64, 96).exact_aspect(), None); // wide tile
+        assert_eq!(Tile::new(64, 0).exact_aspect(), None);
     }
 
     #[test]

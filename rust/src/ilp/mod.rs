@@ -25,6 +25,10 @@ pub use exact::{BinsResult, Budget, ExactResult};
 /// Solve a packing instance exactly (or best-effort under budget),
 /// warm-started by the greedy engines. This is the "LPS" column/curve
 /// generator for Table 6 and Fig. 7.
+///
+/// Engine internal of the [`crate::plan`] front door — build a
+/// [`crate::plan::MapRequest`] instead of calling the solver directly.
+#[doc(hidden)]
 pub fn solve_packing(
     blocks: &[Block],
     tile: Tile,

@@ -2,40 +2,75 @@
 //!
 //! Reproduction of *"A Simple Packing Algorithm for Optimized Mapping of
 //! Artificial Neural Networks onto Non-Volatile Memory Cross-Bar Arrays"*
-//! (W. Haensch, 2024).
+//! (W. Haensch, 2024), grown into a servable mapping engine.
 //!
 //! The library maps the layers of an artificial neural network onto a set of
 //! fixed-capacity physical cross-bar array tiles, treating the mapping as a
 //! two-dimensional bin-packing problem, and searches over tile array
 //! dimensions (capacity and aspect ratio) for the configuration that
-//! minimises total tile area under a chosen design objective:
+//! optimises a chosen design objective.
 //!
-//! * **dense packing** — maximum weight-storage density, shared input/output
-//!   lines allowed (no pipelining),
-//! * **pipeline packing** — non-overlapping input/output channels so that all
-//!   network layers can operate simultaneously,
-//! * **RAPA** — replicated arrays with permuted assignment for load-balanced
-//!   pipelined CNN throughput.
+//! ## The front door: [`plan`]
 //!
-//! Three packing engines are provided: the paper's *simple packing
-//! algorithm* ([`pack::simple`]), classical first-fit-decreasing baselines
-//! ([`pack::ffd`]), and an exact branch-and-bound **binary linear
-//! optimization** solver ([`ilp`]) implementing the paper's Eq. 6 (dense)
-//! and Eq. 7 (pipeline) formulations (substituting the paper's lp_solve).
+//! All of that is driven through one typed, serializable API — build a
+//! [`plan::MapRequest`], validate it into a [`plan::Planner`], get a
+//! [`plan::MapPlan`]:
 //!
-//! The §3.1 tile-dimension search ([`opt::sweep`]) is a parallel,
-//! allocation-lean evaluation engine: grid points fan out over scoped
-//! worker threads with deterministic result ordering, each worker reuses a
-//! scratch arena (fragmentation + packing buffers) across the grid points
-//! it evaluates, and ILP points warm-start from neighbouring
-//! configurations. [`coordinator::batched_sweep`] serves many networks'
-//! sweeps concurrently; [`opt::sweep_serial`] is the reference loop the
-//! determinism suite pins the engine against.
+//! ```no_run
+//! use xbarmap::plan::MapRequest;
+//! use xbarmap::pack::Discipline;
+//! use xbarmap::opt::Engine;
 //!
-//! The numerical hot path (analog tile matrix-vector product with DAC/ADC
-//! quantisation) is an AOT-compiled JAX/Pallas kernel executed from Rust
-//! through the PJRT C API ([`runtime`], behind the `pjrt` cargo feature);
-//! Python never runs at request time.
+//! // §3.1 sweep: every tile dimension 2^6..2^13 x aspects 1..8, priced
+//! // with the paper's area model, optimum = minimum total tile area.
+//! let plan = MapRequest::zoo("resnet18")
+//!     .discipline(Discipline::Pipeline)
+//!     .engine(Engine::Simple)
+//!     .build()
+//!     .unwrap()
+//!     .plan()
+//!     .unwrap();
+//! println!("{} tiles of {} at {} mm2", plan.best.n_tiles, plan.best.tile,
+//!          plan.best.total_area_mm2);
+//!
+//! // One fixed tile, with explicit per-tile placements:
+//! let packed = MapRequest::zoo("lenet").tile(256, 256).placements(true)
+//!     .build().unwrap().plan().unwrap();
+//! assert!(packed.placements.is_some());
+//! ```
+//!
+//! Requests select the network (zoo name or inline layer spec), the tile
+//! space (fixed tile or §3.1 grid), the packing discipline and engine, the
+//! design objective (min-area | min-tiles | max-throughput), RAPA
+//! replication, the ILP node budget and the sweep worker count. Plans carry
+//! every evaluated point, the per-aspect minima, the chosen optimum,
+//! optional placements, Eq. 3/4 latency/throughput, and provenance (budget
+//! spent, warm-start hits, proof status).
+//!
+//! Both sides have a versioned JSON wire format ([`plan::wire`], `"v":1`):
+//! [`plan::serve_jsonl`] streams JSONL requests to JSONL plans (the
+//! `xbarmap plan` subcommand), and [`plan::serve_batch`] prices many
+//! decoded requests concurrently for multi-tenant serving.
+//!
+//! ## Under the hood
+//!
+//! * **Disciplines** (paper §2.2): *dense* shelf packing (maximum density,
+//!   shared input/output lines) and *pipeline* staircase packing
+//!   (non-overlapping channels so all layers operate simultaneously), plus
+//!   RAPA replication for load-balanced pipelined CNN throughput.
+//! * **Engines**: the paper's *simple packing algorithm* ([`pack::simple`]),
+//!   first-fit-decreasing baselines ([`pack::ffd`]), and an exact
+//!   branch-and-bound **binary linear optimization** solver ([`ilp`])
+//!   implementing the paper's Eq. 6/Eq. 7 formulations.
+//! * **Sweep** ([`opt`]): a parallel, allocation-lean §3.1 evaluation
+//!   engine — grid points fan out over scoped workers with deterministic
+//!   ordering, per-worker scratch arenas, and ILP warm-starts along aspect
+//!   columns. The planner is its only intended caller; the stage functions
+//!   stay available as `#[doc(hidden)]` internals.
+//! * **Serving** ([`coordinator`]): batched inference through the
+//!   AOT-compiled JAX/Pallas crossbar kernel via the PJRT C API
+//!   ([`runtime`], behind the `pjrt` cargo feature) — Python never runs at
+//!   request time — with the deployment mapped and priced by the planner.
 pub mod geom;
 pub mod nets;
 pub mod frag;
@@ -44,6 +79,7 @@ pub mod ilp;
 pub mod area;
 pub mod perf;
 pub mod opt;
+pub mod plan;
 pub mod sim;
 pub mod runtime;
 pub mod coordinator;

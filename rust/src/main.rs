@@ -1,24 +1,29 @@
 //! xbarmap CLI — leader entrypoint.
 //!
 //! Subcommands:
-//! * `repro`  — regenerate paper tables/figures into an output directory;
-//! * `sweep`  — run the §3.1 optimization sweep for a zoo network;
-//! * `pack`   — pack one network onto one tile dimension, print placement;
-//! * `info`   — show a network's layers, WM shapes and reuse factors;
-//! * `serve`  — end-to-end serving through the AOT crossbar artifact.
+//! * `repro`      — regenerate paper tables/figures into an output directory;
+//! * `sweep`      — run the §3.1 optimization sweep for a zoo network;
+//! * `pack`       — pack one network onto one tile dimension, print placement;
+//! * `plan`       — serve JSONL MapRequests as JSONL MapPlans (file or stdin);
+//! * `info`       — show a network's layers, WM shapes and reuse factors;
+//! * `serve`      — end-to-end serving through the AOT crossbar artifact;
+//! * `bench-gate` — compare BENCH_*.json medians against a baseline.
+//!
+//! `sweep` and `pack` are thin shims over the [`xbarmap::plan`] front door;
+//! `plan` is its wire-format service endpoint.
 
 use anyhow::{anyhow, Result};
+use std::io::Write as _;
 use std::path::Path;
-use xbarmap::area::AreaModel;
 use xbarmap::coordinator::{digits, Coordinator, CoordinatorConfig};
-use xbarmap::frag;
-use xbarmap::geom::Tile;
-use xbarmap::ilp;
 use xbarmap::nets::zoo;
-use xbarmap::opt::{self, Engine, SweepConfig};
-use xbarmap::pack::{self, Discipline};
+use xbarmap::opt::Engine;
+use xbarmap::pack::Discipline;
+use xbarmap::plan::{self, MapRequest, Replication};
 use xbarmap::report;
+use xbarmap::util::benchkit;
 use xbarmap::util::cli::{usage, Args, OptSpec};
+use xbarmap::util::json;
 use xbarmap::util::prng::Rng;
 use xbarmap::util::table::{sig3, Table};
 
@@ -26,8 +31,10 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("repro", "regenerate paper tables/figures (table1 table3 table5 fig4 fig7 fig8 fig9 table6 fig10 latency | all)"),
     ("sweep", "run the §3.1 tile-dimension optimization sweep"),
     ("pack", "pack a network onto one tile dimension"),
+    ("plan", "stream JSONL mapping requests -> JSONL plans (v1 wire format)"),
     ("info", "describe a zoo network"),
     ("serve", "serve synthetic digit requests through the AOT crossbar model"),
+    ("bench-gate", "fail when bench medians regress past a baseline"),
 ];
 
 fn main() {
@@ -52,37 +59,16 @@ fn run(argv: &[String]) -> Result<()> {
         "repro" => cmd_repro(rest),
         "sweep" => cmd_sweep(rest),
         "pack" => cmd_pack(rest),
+        "plan" => cmd_plan(rest),
         "info" => cmd_info(rest),
         "serve" => cmd_serve(rest),
+        "bench-gate" => cmd_bench_gate(rest),
         "--help" | "help" | "-h" => {
             print!("{}", usage("xbarmap", "ANN-to-crossbar mapping optimizer", SUBCOMMANDS, &[]));
             Ok(())
         }
         other => Err(anyhow!("unknown command '{other}' — try `xbarmap help`")),
     }
-}
-
-fn parse_discipline(s: &str) -> Result<Discipline> {
-    match s {
-        "dense" => Ok(Discipline::Dense),
-        "pipeline" => Ok(Discipline::Pipeline),
-        _ => Err(anyhow!("--discipline must be dense|pipeline, got {s}")),
-    }
-}
-
-fn parse_engine(s: &str, nodes: u64) -> Result<Engine> {
-    match s {
-        "simple" => Ok(Engine::Simple),
-        "ffd" => Ok(Engine::Ffd),
-        "lps" | "ilp" => Ok(Engine::Ilp { max_nodes: nodes }),
-        _ => Err(anyhow!("--engine must be simple|ffd|lps, got {s}")),
-    }
-}
-
-fn net_by_name(name: &str) -> Result<xbarmap::nets::Network> {
-    zoo::by_name(name).ok_or_else(|| {
-        anyhow!("unknown network '{name}' (try lenet|alexnet|resnet9|resnet18|resnet34|resnet50|bert|digits-mlp)")
-    })
 }
 
 fn cmd_repro(argv: &[String]) -> Result<()> {
@@ -108,28 +94,26 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         OptSpec { name: "threads", help: "sweep worker threads (0 = auto)", value: Some("N"), default: Some("0") },
     ];
     let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
-    let net = net_by_name(a.req("net").map_err(|e| anyhow!(e))?)?;
-    let discipline = parse_discipline(a.req("discipline").map_err(|e| anyhow!(e))?)?;
+    let discipline: Discipline =
+        a.req("discipline").map_err(|e| anyhow!(e))?.parse().map_err(|e: String| anyhow!(e))?;
     let nodes = a.req_usize("ilp-nodes").map_err(|e| anyhow!(e))? as u64;
-    let engine = parse_engine(a.req("engine").map_err(|e| anyhow!(e))?, nodes)?;
+    let engine = Engine::parse_with_budget(a.req("engine").map_err(|e| anyhow!(e))?, nodes)
+        .map_err(|e| anyhow!(e))?;
     let max_aspect = a.req_usize("aspects").map_err(|e| anyhow!(e))?.clamp(1, 8);
     let threads = a.req_usize("threads").map_err(|e| anyhow!(e))?;
-    let mut cfg = SweepConfig {
-        discipline,
-        engine,
-        aspects: (1..=max_aspect).collect(),
-        ..SweepConfig::paper_default(discipline)
-    };
+
+    let mut request = MapRequest::zoo(a.req("net").map_err(|e| anyhow!(e))?)
+        .discipline(discipline)
+        .engine(engine)
+        .grid((6, 13), (1..=max_aspect).collect())
+        .threads(threads);
     if let Some(n0) = a.get_usize("rapa").map_err(|e| anyhow!(e))? {
-        cfg.replication = Some(xbarmap::perf::rapa::plan_balanced(&net, n0));
+        request = request.replication(Replication::Balanced(n0));
     }
-    let pts = if threads == 0 {
-        opt::sweep(&net, &cfg)
-    } else {
-        opt::sweep_with_threads(&net, &cfg, threads)
-    };
+    let mapping = request.build()?.plan()?;
+
     let mut t = Table::new(&["tile", "aspect", "blocks", "tiles", "tile eff", "pack eff", "area mm2"]);
-    for p in &pts {
+    for p in &mapping.points {
         t.row(&[
             p.tile.to_string(),
             p.aspect.to_string(),
@@ -141,14 +125,14 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
-    for p in opt::best_per_aspect(&pts) {
+    for p in &mapping.best_per_aspect {
         println!("best @aspect {}: {} tiles={} area={} mm2", p.aspect, p.tile, p.n_tiles, sig3(p.total_area_mm2));
     }
-    let best = opt::optimum(&pts).unwrap();
+    let best = &mapping.best;
     println!(
         "\nOPTIMUM {} ({}): {} tiles, {} mm2, tile_eff {}",
         best.tile,
-        cfg.engine,
+        mapping.engine,
         best.n_tiles,
         sig3(best.total_area_mm2),
         sig3(best.tile_eff)
@@ -166,51 +150,74 @@ fn cmd_pack(argv: &[String]) -> Result<()> {
         OptSpec { name: "ilp-nodes", help: "branch&bound node budget", value: Some("N"), default: Some("2000000") },
     ];
     let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
-    let net = net_by_name(a.req("net").map_err(|e| anyhow!(e))?)?;
-    let tile = Tile::new(
-        a.req_usize("rows").map_err(|e| anyhow!(e))?,
-        a.req_usize("cols").map_err(|e| anyhow!(e))?,
-    );
-    let discipline = parse_discipline(a.req("discipline").map_err(|e| anyhow!(e))?)?;
+    let discipline: Discipline =
+        a.req("discipline").map_err(|e| anyhow!(e))?.parse().map_err(|e: String| anyhow!(e))?;
     let nodes = a.req_usize("ilp-nodes").map_err(|e| anyhow!(e))? as u64;
-    let engine = parse_engine(a.req("engine").map_err(|e| anyhow!(e))?, nodes)?;
-    let blocks = frag::fragment_network(&net, tile);
-    let packing = match engine {
-        Engine::Simple => pack::simple::pack(&blocks, tile, discipline),
-        Engine::Ffd => pack::ffd::pack(&blocks, tile, discipline),
-        Engine::Ilp { max_nodes } => {
-            let r = ilp::solve_packing(
-                &blocks,
-                tile,
-                discipline,
-                ilp::Budget { max_nodes, ..Default::default() },
-            );
-            println!(
-                "LPS: lower bound {} | optimal {} | nodes {}",
-                r.lower_bound, r.optimal, r.nodes
-            );
-            r.packing
-        }
-    };
-    pack::placement::validate(&packing).map_err(|e| anyhow!("invalid packing: {e}"))?;
-    let area = AreaModel::paper_default();
+    let engine = Engine::parse_with_budget(a.req("engine").map_err(|e| anyhow!(e))?, nodes)
+        .map_err(|e| anyhow!(e))?;
+
+    let mapping = MapRequest::zoo(a.req("net").map_err(|e| anyhow!(e))?)
+        .tile(
+            a.req_usize("rows").map_err(|e| anyhow!(e))?,
+            a.req_usize("cols").map_err(|e| anyhow!(e))?,
+        )
+        .discipline(discipline)
+        .engine(engine)
+        .placements(true)
+        .build()?
+        .plan()?;
+
+    if matches!(mapping.engine, Engine::Ilp { .. }) {
+        println!(
+            "LPS: lower bound {} | optimal {} | nodes {}",
+            mapping.provenance.lower_bound, mapping.provenance.optimal, mapping.provenance.nodes
+        );
+    }
+    let best = &mapping.best;
     println!(
         "{} on {} [{discipline}/{engine}]: {} blocks -> {} tiles | packing eff {} | tile eff {} | total {} mm2",
-        net.name,
-        tile,
-        blocks.len(),
-        packing.n_bins,
-        sig3(packing.packing_efficiency()),
-        sig3(area.efficiency(tile)),
-        sig3(area.total_area_mm2(packing.n_bins, tile)),
+        mapping.network,
+        best.tile,
+        best.n_blocks,
+        best.n_tiles,
+        sig3(best.packing_eff),
+        sig3(best.tile_eff),
+        sig3(best.total_area_mm2),
     );
+    Ok(())
+}
+
+/// The design-service endpoint: JSONL requests in, JSONL plans out.
+fn cmd_plan(argv: &[String]) -> Result<()> {
+    let specs = [OptSpec {
+        name: "in",
+        help: "JSONL request file ('-' = stdin)",
+        value: Some("FILE"),
+        default: Some("-"),
+    }];
+    let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
+    let source = a.req("in").map_err(|e| anyhow!(e))?;
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    let summary = if source == "-" {
+        let stdin = std::io::stdin();
+        plan::serve_jsonl(stdin.lock(), &mut out)?
+    } else {
+        let file = std::fs::File::open(source)
+            .map_err(|e| anyhow!("open {source}: {e}"))?;
+        plan::serve_jsonl(std::io::BufReader::new(file), &mut out)?
+    };
+    out.flush()?;
+    eprintln!("served {} request(s), {} error(s)", summary.requests, summary.errors);
     Ok(())
 }
 
 fn cmd_info(argv: &[String]) -> Result<()> {
     let specs = [OptSpec { name: "net", help: "zoo network", value: Some("NAME"), default: Some("resnet18") }];
     let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
-    let net = net_by_name(a.req("net").map_err(|e| anyhow!(e))?)?;
+    let name = a.req("net").map_err(|e| anyhow!(e))?;
+    let net = zoo::by_name(name)
+        .ok_or_else(|| anyhow!("unknown network '{name}' (try {})", zoo::NAMES.join("|")))?;
     println!("{} — {} ({} layers, {} weights)", net.name, net.input_desc, net.n_layers(), net.total_weights());
     let mut t = Table::new(&["layer", "WM rows", "WM cols", "weights", "N_reuse"]);
     for l in &net.layers {
@@ -277,4 +284,39 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         println!("build-time crossbar accuracy (meta.json): {build_acc:.4}");
     }
     Ok(())
+}
+
+/// CI regression gate over `BENCH_*.json` medians (see
+/// [`benchkit::gate_medians`]); fails when any shared benchmark regressed
+/// past the tolerance.
+fn cmd_bench_gate(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "baseline", help: "committed medians file", value: Some("FILE"), default: None },
+        OptSpec { name: "current", help: "freshly measured medians file", value: Some("FILE"), default: None },
+        OptSpec { name: "tol-pct", help: "max allowed regression, percent", value: Some("P"), default: Some("15") },
+    ];
+    let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
+    let tol = a.req_f64("tol-pct").map_err(|e| anyhow!(e))?;
+    let load = |key: &str| -> Result<json::Json> {
+        let path = a.req(key).map_err(|e| anyhow!(e))?;
+        let text = std::fs::read_to_string(path).map_err(|e| anyhow!("read {path}: {e}"))?;
+        json::parse(&text).map_err(|e| anyhow!("parse {path}: {e}"))
+    };
+    let report = benchkit::gate_medians(&load("baseline")?, &load("current")?, tol);
+    for line in &report.compared {
+        println!("{line}");
+    }
+    if report.compared.is_empty() {
+        println!("bench-gate: no shared benchmarks between baseline and current");
+    }
+    if report.regressions.is_empty() {
+        println!("bench-gate OK (tolerance {tol}%)");
+        Ok(())
+    } else {
+        Err(anyhow!(
+            "bench-gate: {} regression(s) past {tol}%:\n  {}",
+            report.regressions.len(),
+            report.regressions.join("\n  ")
+        ))
+    }
 }

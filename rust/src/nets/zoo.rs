@@ -186,6 +186,12 @@ pub fn digits_mlp() -> Network {
     )
 }
 
+/// Canonical tokens accepted by [`by_name`], for error messages and docs.
+pub const NAMES: &[&str] = &[
+    "lenet", "alexnet", "resnet9", "resnet9-paper", "resnet18", "resnet34", "resnet50", "bert",
+    "digits-mlp",
+];
+
 /// All named zoo entries (used by the CLI).
 pub fn by_name(name: &str) -> Option<Network> {
     match name.to_ascii_lowercase().as_str() {
@@ -280,7 +286,7 @@ mod tests {
 
     #[test]
     fn zoo_by_name_roundtrip() {
-        for name in ["lenet", "alexnet", "resnet9", "resnet18", "resnet34", "resnet50", "bert", "digits-mlp"] {
+        for name in NAMES {
             assert!(by_name(name).is_some(), "{name} missing from zoo");
         }
         assert!(by_name("nope").is_none());

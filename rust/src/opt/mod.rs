@@ -22,7 +22,7 @@ use crate::frag;
 use crate::geom::Tile;
 use crate::ilp;
 use crate::nets::Network;
-use crate::pack::{self, Discipline};
+use crate::pack::{self, Discipline, SortOrder};
 
 /// Packing engine selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -35,13 +35,45 @@ pub enum Engine {
     Ilp { max_nodes: u64 },
 }
 
+impl Engine {
+    /// Default branch & bound node budget (== `ilp::Budget::default()`),
+    /// used when an engine is parsed from its bare token.
+    pub const DEFAULT_ILP_NODES: u64 = 2_000_000;
+
+    /// Canonical wire/CLI token. `Display` and `FromStr` round-trip through
+    /// it: the ILP engine prints as the paper's `"lps"` and parses back
+    /// from `"lps"` (with `"ilp"` kept as an input alias).
+    pub fn canonical(&self) -> &'static str {
+        match self {
+            Engine::Simple => "simple",
+            Engine::Ffd => "ffd",
+            Engine::Ilp { .. } => "lps",
+        }
+    }
+
+    /// Parse an engine token with an explicit branch & bound budget for the
+    /// ILP engine (the greedy engines ignore it).
+    pub fn parse_with_budget(s: &str, max_nodes: u64) -> Result<Engine, String> {
+        match s {
+            "simple" => Ok(Engine::Simple),
+            "ffd" => Ok(Engine::Ffd),
+            "lps" | "ilp" => Ok(Engine::Ilp { max_nodes }),
+            _ => Err(format!("engine must be simple|ffd|lps (alias: ilp), got '{s}'")),
+        }
+    }
+}
+
 impl std::fmt::Display for Engine {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            Engine::Simple => write!(f, "simple"),
-            Engine::Ffd => write!(f, "ffd"),
-            Engine::Ilp { .. } => write!(f, "lps"),
-        }
+        f.write_str(self.canonical())
+    }
+}
+
+impl std::str::FromStr for Engine {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        Engine::parse_with_budget(s, Engine::DEFAULT_ILP_NODES)
     }
 }
 
@@ -58,6 +90,8 @@ pub struct SweepConfig {
     pub aspects: Vec<usize>,
     /// per-layer RAPA replication (None = no replication)
     pub replication: Option<Vec<usize>>,
+    /// block placement order for the simple engine (§2.1 vs §3 wording)
+    pub sort: SortOrder,
     pub area: AreaModel,
 }
 
@@ -69,6 +103,7 @@ impl SweepConfig {
             row_exp: (6, 13),
             aspects: (1..=8).collect(),
             replication: None,
+            sort: SortOrder::RowsDesc,
             area: AreaModel::paper_default(),
         }
     }
@@ -80,7 +115,7 @@ impl SweepConfig {
 }
 
 /// One evaluated tile configuration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SweepPoint {
     pub tile: Tile,
     pub aspect: usize,
@@ -113,22 +148,15 @@ impl SweepScratch {
 }
 
 /// Evaluate a single tile configuration (owned-allocation convenience
-/// wrapper; the aspect is derived from the tile since callers construct
-/// their own tiles here — the sweep itself propagates the requested aspect
-/// through [`evaluate_with_aspect`]).
-pub fn evaluate(net: &Network, tile: Tile, cfg: &SweepConfig) -> SweepPoint {
-    evaluate_with_aspect(net, tile, (tile.n_row / tile.n_col.max(1)).max(1), cfg)
-}
-
-/// Evaluate a single tile configuration under an explicitly requested
-/// aspect ratio (recorded verbatim in the returned point, so degenerate or
-/// non-power-of-two tile shapes never alias into the wrong aspect bucket).
-pub fn evaluate_with_aspect(
-    net: &Network,
-    tile: Tile,
-    aspect: usize,
-    cfg: &SweepConfig,
-) -> SweepPoint {
+/// wrapper for the [`crate::plan`] front door and tests).
+///
+/// The aspect is taken **explicitly** and recorded verbatim in the returned
+/// point. The old form derived it as `n_row / n_col`, which silently
+/// rounded non-integer aspects (a 96×64 tile aliased into aspect 1); use
+/// [`Tile::exact_aspect`] when you only have a tile, and pick a sentinel
+/// (the planner uses 0 = "off-grid") for tiles with no integer aspect.
+#[doc(hidden)]
+pub fn evaluate(net: &Network, tile: Tile, aspect: usize, cfg: &SweepConfig) -> SweepPoint {
     let ones = vec![1usize; net.n_layers()];
     let replication = cfg.replication.as_deref().unwrap_or(&ones);
     let mut scratch = SweepScratch::default();
@@ -156,7 +184,7 @@ fn evaluate_lean(
             &scratch.blocks,
             tile,
             cfg.discipline,
-            pack::SortOrder::RowsDesc,
+            cfg.sort,
             &mut scratch.pack,
         ),
         Engine::Ffd => {
@@ -205,6 +233,10 @@ pub fn sweep_threads() -> usize {
 /// Full sweep over base dimensions x aspect ratios — parallel across
 /// [`sweep_threads`] workers, deterministic: point ordering and values are
 /// identical to [`sweep_serial`] regardless of scheduling.
+///
+/// Internal engine behind [`crate::plan`] — build a
+/// [`crate::plan::MapRequest`] instead of calling this directly.
+#[doc(hidden)]
 pub fn sweep(net: &Network, cfg: &SweepConfig) -> Vec<SweepPoint> {
     sweep_with_threads(net, cfg, sweep_threads())
 }
@@ -219,6 +251,7 @@ pub fn sweep(net: &Network, cfg: &SweepConfig) -> Vec<SweepPoint> {
 /// solver treats the hint as a refutable bound, so the heuristic is free to
 /// be wrong). Results are gathered per worker and re-ordered by grid index
 /// before returning.
+#[doc(hidden)]
 pub fn sweep_with_threads(net: &Network, cfg: &SweepConfig, threads: usize) -> Vec<SweepPoint> {
     let ones = vec![1usize; net.n_layers()];
     let replication: &[usize] = cfg.replication.as_deref().unwrap_or(&ones);
@@ -266,6 +299,7 @@ pub fn sweep_with_threads(net: &Network, cfg: &SweepConfig, threads: usize) -> V
 /// warm-start chain as the parallel engine. Kept as the oracle for the
 /// determinism suite ([`sweep`] must match it byte for byte) and as the
 /// baseline the sweep benches measure speedup against.
+#[doc(hidden)]
 pub fn sweep_serial(net: &Network, cfg: &SweepConfig) -> Vec<SweepPoint> {
     let ones = vec![1usize; net.n_layers()];
     let replication: &[usize] = cfg.replication.as_deref().unwrap_or(&ones);
@@ -278,7 +312,9 @@ pub fn sweep_serial(net: &Network, cfg: &SweepConfig) -> Vec<SweepPoint> {
             let blocks = frag::fragment_network_replicated(net, tile, replication);
             let n_blocks = blocks.len();
             let packing = match cfg.engine {
-                Engine::Simple => pack::simple::pack(&blocks, tile, cfg.discipline),
+                Engine::Simple => {
+                    pack::simple::pack_ordered(&blocks, tile, cfg.discipline, cfg.sort)
+                }
                 Engine::Ffd => pack::ffd::pack(&blocks, tile, cfg.discipline),
                 Engine::Ilp { max_nodes } => {
                     ilp::exact::solve_with_hint(
@@ -411,9 +447,40 @@ mod tests {
         cfg.engine = Engine::Ilp { max_nodes: 200_000 };
         let chain = sweep(&net, &cfg);
         for p in &chain {
-            let cold = evaluate(&net, p.tile, &cfg);
+            let cold = evaluate(&net, p.tile, p.aspect, &cfg);
             assert_eq!(p.n_tiles, cold.n_tiles, "{}", p.tile);
         }
+    }
+
+    #[test]
+    fn engine_display_fromstr_roundtrip() {
+        for e in [Engine::Simple, Engine::Ffd, Engine::Ilp { max_nodes: Engine::DEFAULT_ILP_NODES }]
+        {
+            assert_eq!(e.to_string().parse::<Engine>().unwrap(), e);
+        }
+        // "ilp" stays an accepted input alias for the canonical "lps"
+        assert_eq!("ilp".parse::<Engine>().unwrap().canonical(), "lps");
+        assert_eq!(
+            Engine::parse_with_budget("ilp", 7).unwrap(),
+            Engine::Ilp { max_nodes: 7 }
+        );
+        assert!("lp".parse::<Engine>().is_err());
+    }
+
+    #[test]
+    fn evaluate_takes_aspect_explicitly_no_rounding() {
+        // the old signature derived aspect = n_row / n_col, so a 96x64 tile
+        // (true aspect 1.5) silently aliased into aspect 1 — the aspect is
+        // now the caller's, recorded verbatim
+        let net = zoo::lenet();
+        let cfg = SweepConfig::paper_default(Discipline::Dense);
+        let off_grid = Tile::new(96, 64);
+        assert_eq!(off_grid.exact_aspect(), None);
+        let p = evaluate(&net, off_grid, 0, &cfg);
+        assert_eq!(p.aspect, 0, "sentinel aspect preserved, not rounded to 1");
+        let on_grid = Tile::new(2560, 512);
+        let p = evaluate(&net, on_grid, on_grid.exact_aspect().unwrap(), &cfg);
+        assert_eq!(p.aspect, 5);
     }
 
     #[test]

@@ -13,6 +13,7 @@ use super::{order_indices, Discipline, PackScratch, Packing, SortOrder};
 use crate::geom::{Block, Placement, Tile};
 
 /// Pack with first-fit-decreasing.
+#[doc(hidden)]
 pub fn pack(blocks: &[Block], tile: Tile, discipline: Discipline) -> Packing {
     let mut scratch = PackScratch::default();
     let n_bins = pack_into(blocks, tile, discipline, &mut scratch);

@@ -25,11 +25,31 @@ pub enum Discipline {
     Pipeline,
 }
 
+impl Discipline {
+    /// Canonical wire/CLI token; [`std::fmt::Display`] and
+    /// [`std::str::FromStr`] round-trip through it.
+    pub fn canonical(&self) -> &'static str {
+        match self {
+            Discipline::Dense => "dense",
+            Discipline::Pipeline => "pipeline",
+        }
+    }
+}
+
 impl std::fmt::Display for Discipline {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            Discipline::Dense => write!(f, "dense"),
-            Discipline::Pipeline => write!(f, "pipeline"),
+        f.write_str(self.canonical())
+    }
+}
+
+impl std::str::FromStr for Discipline {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "dense" => Ok(Discipline::Dense),
+            "pipeline" => Ok(Discipline::Pipeline),
+            _ => Err(format!("discipline must be dense|pipeline, got '{s}'")),
         }
     }
 }
@@ -90,6 +110,42 @@ pub enum SortOrder {
     RowsAsc,
     /// input order (no sort)
     AsGiven,
+}
+
+impl SortOrder {
+    /// Canonical wire/CLI token; `Display`/`FromStr` round-trip through it.
+    pub fn canonical(&self) -> &'static str {
+        match self {
+            SortOrder::RowsDesc => "rows-desc",
+            SortOrder::RowsAsc => "rows-asc",
+            SortOrder::AsGiven => "as-given",
+        }
+    }
+}
+
+impl Default for SortOrder {
+    fn default() -> Self {
+        SortOrder::RowsDesc
+    }
+}
+
+impl std::fmt::Display for SortOrder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.canonical())
+    }
+}
+
+impl std::str::FromStr for SortOrder {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "rows-desc" => Ok(SortOrder::RowsDesc),
+            "rows-asc" => Ok(SortOrder::RowsAsc),
+            "as-given" => Ok(SortOrder::AsGiven),
+            _ => Err(format!("sort order must be rows-desc|rows-asc|as-given, got '{s}'")),
+        }
+    }
 }
 
 /// Reusable buffers for the allocation-lean packing path. One instance per
@@ -225,6 +281,18 @@ mod tests {
         assert_eq!(rows_in(&perm), vec![9, 5, 1]);
         order_indices(&blocks, SortOrder::AsGiven, &mut perm);
         assert_eq!(rows_in(&perm), vec![1, 9, 5]);
+    }
+
+    #[test]
+    fn discipline_and_sort_order_roundtrip() {
+        for d in [Discipline::Dense, Discipline::Pipeline] {
+            assert_eq!(d.to_string().parse::<Discipline>().unwrap(), d);
+        }
+        for o in [SortOrder::RowsDesc, SortOrder::RowsAsc, SortOrder::AsGiven] {
+            assert_eq!(o.to_string().parse::<SortOrder>().unwrap(), o);
+        }
+        assert!("fancy".parse::<Discipline>().is_err());
+        assert!("rows".parse::<SortOrder>().is_err());
     }
 
     #[test]

@@ -19,11 +19,16 @@ use super::{order_indices, Discipline, PackScratch, Packing, SortOrder};
 use crate::geom::{Block, Placement, Tile};
 
 /// Pack with the paper's defaults (descending row order).
+///
+/// Engine internal of the [`crate::plan`] front door — build a
+/// [`crate::plan::MapRequest`] instead of calling engines directly.
+#[doc(hidden)]
 pub fn pack(blocks: &[Block], tile: Tile, discipline: Discipline) -> Packing {
     pack_ordered(blocks, tile, discipline, SortOrder::RowsDesc)
 }
 
 /// Pack with an explicit placement order (ablation hook).
+#[doc(hidden)]
 pub fn pack_ordered(
     blocks: &[Block],
     tile: Tile,

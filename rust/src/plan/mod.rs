@@ -1,0 +1,917 @@
+//! The crate's front door: one typed, serializable planning API over the
+//! paper's whole workflow.
+//!
+//! A [`MapRequest`] describes *what* to map — a network (zoo name or inline
+//! layer spec), a tile space (one fixed tile or the §3.1 grid), a packing
+//! engine and discipline, a design objective, RAPA replication, an ILP
+//! budget and a worker count. [`MapRequest::build`] validates it into a
+//! [`Planner`]; [`Planner::plan`] runs fragmentation, packing, pricing and
+//! the tile-dimension sweep and returns a [`MapPlan`]: every evaluated
+//! point, the per-aspect minima, the objective's chosen optimum, optional
+//! per-tile placements, Eq. 3/4 latency/throughput, and provenance (budget
+//! spent, warm-start hits, proof status).
+//!
+//! Both ends are wire-stable: [`wire`] gives `MapRequest`/`MapPlan` a
+//! versioned (`"v":1`) JSON encoding, [`serve_jsonl`] streams JSONL
+//! requests to JSONL plans (the `xbarmap plan` endpoint), and
+//! [`serve_batch`] prices many decoded requests concurrently with
+//! deterministic, request-ordered results — the multi-tenant design
+//! service the coordinator fronts.
+//!
+//! ```
+//! use xbarmap::plan::MapRequest;
+//! use xbarmap::pack::Discipline;
+//!
+//! let plan = MapRequest::zoo("lenet")
+//!     .discipline(Discipline::Pipeline)
+//!     .build()
+//!     .unwrap()
+//!     .plan()
+//!     .unwrap();
+//! assert_eq!(plan.points.len(), 64); // 8 sizes x 8 aspects
+//! println!("optimum: {} at {} mm2", plan.best.tile, plan.best.total_area_mm2);
+//! ```
+//!
+//! The per-stage free functions (`frag::fragment_network`, the
+//! `pack::*`/`ilp` engines, `opt::sweep`, `coordinator::batched_sweep`)
+//! remain available as `#[doc(hidden)]` internals the planner calls.
+
+pub mod wire;
+
+use crate::area::AreaModel;
+use crate::frag;
+use crate::geom::{Placement, Tile};
+use crate::ilp;
+use crate::nets::{zoo, Network};
+use crate::opt::{self, Engine, SweepConfig, SweepPoint};
+use crate::pack::{self, Discipline, Packing, SortOrder};
+use crate::perf::{self, rapa, Execution, TimingModel};
+use crate::sim::{self, SimConfig};
+use std::io::{BufRead, Write};
+
+/// Wire-format version stamped into (and required of) every serialized
+/// request and plan.
+pub const WIRE_VERSION: u64 = 1;
+
+/// Aspect recorded for fixed tiles that sit off the §3.1 integer-aspect
+/// grid (e.g. 96x64 or wide tiles) — never rounded into a real bucket.
+pub const OFF_GRID_ASPECT: usize = 0;
+
+/// Inferences simulated per candidate when ranking by the max-throughput
+/// objective (cycle-level model, deterministic).
+const SIM_INFERENCES: usize = 32;
+
+/// Planning/validation error (also the wire-decode error type).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanError(pub String);
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+fn err(msg: impl Into<String>) -> PlanError {
+    PlanError(msg.into())
+}
+
+/// The network a request maps: a zoo name resolved at build time, or an
+/// inline layer spec carried on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetworkSpec {
+    Zoo(String),
+    Inline(Network),
+}
+
+/// The tile configurations a request prices.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TileSpace {
+    /// one explicit tile dimension
+    Fixed(Tile),
+    /// the §3.1 grid: `n_col = 2^k` for `k` in `row_exp`, `n_row = n_col *
+    /// aspect` for each aspect factor
+    Grid { row_exp: (u32, u32), aspects: Vec<usize> },
+}
+
+impl TileSpace {
+    /// The paper's §3.1 default grid: 2^6..2^13 base dims, aspects 1..=8.
+    pub fn paper_grid() -> TileSpace {
+        TileSpace::Grid { row_exp: (6, 13), aspects: (1..=8).collect() }
+    }
+}
+
+/// Design objective selecting the plan's optimum among evaluated points.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// minimum total tile area (the paper's §3.1 criterion)
+    MinArea,
+    /// fewest physical tiles (area breaks ties)
+    MinTiles,
+    /// highest cycle-level simulated throughput among the per-aspect area
+    /// winners (area breaks ties); Eq. 3/4 latency alone cannot rank tiles
+    MaxThroughput,
+}
+
+impl Objective {
+    /// Canonical wire/CLI token; `Display`/`FromStr` round-trip through it.
+    pub fn canonical(&self) -> &'static str {
+        match self {
+            Objective::MinArea => "min-area",
+            Objective::MinTiles => "min-tiles",
+            Objective::MaxThroughput => "max-throughput",
+        }
+    }
+}
+
+impl std::fmt::Display for Objective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.canonical())
+    }
+}
+
+impl std::str::FromStr for Objective {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "min-area" => Ok(Objective::MinArea),
+            "min-tiles" => Ok(Objective::MinTiles),
+            "max-throughput" => Ok(Objective::MaxThroughput),
+            _ => Err(format!(
+                "objective must be min-area|min-tiles|max-throughput, got '{s}'"
+            )),
+        }
+    }
+}
+
+/// RAPA replication request, resolved to a per-layer factor vector at
+/// build time (`perf::rapa` planners).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Replication {
+    /// no replication (every factor 1)
+    None,
+    /// reuse-balanced plan with first-layer factor `n0`
+    Balanced(usize),
+    /// geometric plan `n0, n0/f, n0/f², ...` (paper Fig. 9's "128/4")
+    Geometric(usize, usize),
+    /// the same factor for every layer (BERT "max parallelism xS")
+    Uniform(usize),
+    /// explicit per-layer factors (arity checked against the network)
+    Explicit(Vec<usize>),
+}
+
+/// A validated, typed, serializable mapping request — the single entry
+/// point for packing one tile, sweeping the §3.1 grid, and serving both.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MapRequest {
+    /// caller-chosen correlation id, echoed into the plan ("" = none)
+    pub id: String,
+    pub network: NetworkSpec,
+    pub tiles: TileSpace,
+    pub engine: Engine,
+    pub discipline: Discipline,
+    pub objective: Objective,
+    pub replication: Replication,
+    /// sweep worker threads (0 = auto via [`opt::sweep_threads`])
+    pub threads: usize,
+    /// include the chosen configuration's per-tile placements in the plan
+    pub include_placements: bool,
+    /// simple-engine block placement order (ablation hook)
+    pub sort: SortOrder,
+    /// area/pricing model (defaults to the paper calibration)
+    pub area: AreaModel,
+}
+
+impl MapRequest {
+    /// Start a request for a zoo network (resolved and validated by
+    /// [`MapRequest::build`]).
+    pub fn zoo(name: &str) -> MapRequest {
+        MapRequest::with_network(NetworkSpec::Zoo(name.to_string()))
+    }
+
+    /// Start a request for an inline network description.
+    pub fn inline(net: Network) -> MapRequest {
+        MapRequest::with_network(NetworkSpec::Inline(net))
+    }
+
+    /// Start a request from an already-built [`NetworkSpec`] with the
+    /// paper's defaults: §3.1 grid, simple engine, dense discipline,
+    /// min-area objective, no replication.
+    pub fn with_network(network: NetworkSpec) -> MapRequest {
+        MapRequest {
+            id: String::new(),
+            network,
+            tiles: TileSpace::paper_grid(),
+            engine: Engine::Simple,
+            discipline: Discipline::Dense,
+            objective: Objective::MinArea,
+            replication: Replication::None,
+            threads: 0,
+            include_placements: false,
+            sort: SortOrder::RowsDesc,
+            area: AreaModel::paper_default(),
+        }
+    }
+
+    pub fn id(mut self, id: &str) -> Self {
+        self.id = id.to_string();
+        self
+    }
+
+    /// Price one fixed tile dimension instead of sweeping the grid.
+    pub fn tile(mut self, rows: usize, cols: usize) -> Self {
+        self.tiles = TileSpace::Fixed(Tile::new(rows, cols));
+        self
+    }
+
+    /// Sweep a §3.1 grid: `n_col = 2^k` for `k` in `row_exp` (inclusive),
+    /// `n_row = n_col * aspect` for each aspect factor.
+    pub fn grid(mut self, row_exp: (u32, u32), aspects: Vec<usize>) -> Self {
+        self.tiles = TileSpace::Grid { row_exp, aspects };
+        self
+    }
+
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Select the ILP engine with an explicit branch & bound node budget.
+    pub fn ilp(mut self, max_nodes: u64) -> Self {
+        self.engine = Engine::Ilp { max_nodes };
+        self
+    }
+
+    pub fn discipline(mut self, discipline: Discipline) -> Self {
+        self.discipline = discipline;
+        self
+    }
+
+    pub fn objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    pub fn replication(mut self, replication: Replication) -> Self {
+        self.replication = replication;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn placements(mut self, include: bool) -> Self {
+        self.include_placements = include;
+        self
+    }
+
+    pub fn sort(mut self, sort: SortOrder) -> Self {
+        self.sort = sort;
+        self
+    }
+
+    pub fn area(mut self, area: AreaModel) -> Self {
+        self.area = area;
+        self
+    }
+
+    /// Validate into a [`Planner`]: resolves the network, checks the tile
+    /// space, engine budget and replication arity.
+    pub fn build(self) -> Result<Planner, PlanError> {
+        let net = match &self.network {
+            NetworkSpec::Zoo(name) => zoo::by_name(name).ok_or_else(|| {
+                err(format!("unknown network '{name}' (try {})", zoo::NAMES.join("|")))
+            })?,
+            NetworkSpec::Inline(net) => {
+                if net.layers.is_empty() {
+                    return Err(err("inline network has no layers"));
+                }
+                net.clone()
+            }
+        };
+        match &self.tiles {
+            TileSpace::Fixed(t) => {
+                if t.n_row == 0 || t.n_col == 0 {
+                    return Err(err(format!("degenerate tile {t}")));
+                }
+            }
+            TileSpace::Grid { row_exp, aspects } => {
+                if row_exp.0 > row_exp.1 {
+                    return Err(err(format!(
+                        "empty grid: row_exp {}..={}",
+                        row_exp.0, row_exp.1
+                    )));
+                }
+                if row_exp.1 > 20 {
+                    return Err(err(format!("row exponent {} too large (max 20)", row_exp.1)));
+                }
+                if aspects.is_empty() {
+                    return Err(err("grid has no aspect factors"));
+                }
+                if let Some(a) = aspects.iter().find(|&&a| a == 0 || a > 64) {
+                    return Err(err(format!("aspect factor {a} outside 1..=64")));
+                }
+            }
+        }
+        if let Engine::Ilp { max_nodes } = self.engine {
+            if max_nodes == 0 {
+                return Err(err("ILP node budget must be >= 1"));
+            }
+        }
+        let replication = match &self.replication {
+            Replication::None => vec![1; net.n_layers()],
+            Replication::Balanced(n0) => {
+                if *n0 == 0 {
+                    return Err(err("balanced replication n0 must be >= 1"));
+                }
+                rapa::plan_balanced(&net, *n0)
+            }
+            Replication::Geometric(n0, f) => {
+                if *n0 == 0 || *f == 0 {
+                    return Err(err("geometric replication needs n0 >= 1 and factor >= 1"));
+                }
+                rapa::plan_geometric(&net, *n0, *f)
+            }
+            Replication::Uniform(s) => {
+                if *s == 0 {
+                    return Err(err("uniform replication factor must be >= 1"));
+                }
+                rapa::plan_uniform(&net, *s)
+            }
+            Replication::Explicit(v) => {
+                if v.len() != net.n_layers() {
+                    return Err(err(format!(
+                        "replication arity {} != {} layers",
+                        v.len(),
+                        net.n_layers()
+                    )));
+                }
+                if v.iter().any(|&r| r == 0) {
+                    return Err(err("replication factors must be >= 1"));
+                }
+                v.clone()
+            }
+        };
+        Ok(Planner { request: self, net, replication })
+    }
+
+    /// Encode to the v1 wire object ([`wire::request_to_json`]).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        wire::request_to_json(self)
+    }
+
+    /// Decode from a v1 wire object ([`wire::request_from_json`]).
+    pub fn from_json(j: &crate::util::json::Json) -> Result<MapRequest, PlanError> {
+        wire::request_from_json(j)
+    }
+}
+
+/// A validated request plus its resolved network and per-layer replication
+/// factors — ready to produce [`MapPlan`]s and [`Packing`]s.
+#[derive(Debug, Clone)]
+pub struct Planner {
+    request: MapRequest,
+    net: Network,
+    replication: Vec<usize>,
+}
+
+/// Packing of one tile configuration with solver provenance.
+#[derive(Debug, Clone)]
+pub struct PackOutcome {
+    pub packing: Packing,
+    /// branch & bound nodes spent (0 for the greedy engines)
+    pub nodes: u64,
+    /// true when the ILP engine proved optimality
+    pub optimal: bool,
+    /// ILP lower bound on the bin count (0 for the greedy engines)
+    pub lower_bound: usize,
+}
+
+impl Planner {
+    pub fn request(&self) -> &MapRequest {
+        &self.request
+    }
+
+    /// The resolved network this planner maps.
+    pub fn network(&self) -> &Network {
+        &self.net
+    }
+
+    /// The resolved per-layer RAPA replication factors.
+    pub fn replication(&self) -> &[usize] {
+        &self.replication
+    }
+
+    fn sweep_config(&self) -> SweepConfig {
+        let (row_exp, aspects) = match &self.request.tiles {
+            TileSpace::Grid { row_exp, aspects } => (*row_exp, aspects.clone()),
+            // unused by the fixed-tile path
+            TileSpace::Fixed(_) => ((0, 0), Vec::new()),
+        };
+        SweepConfig {
+            discipline: self.request.discipline,
+            engine: self.request.engine,
+            row_exp,
+            aspects,
+            replication: Some(self.replication.clone()),
+            sort: self.request.sort,
+            area: self.request.area,
+        }
+    }
+
+    fn execution(&self) -> Execution {
+        match self.request.discipline {
+            Discipline::Dense => Execution::Sequential,
+            Discipline::Pipeline => Execution::Pipelined,
+        }
+    }
+
+    /// Fragment and pack the network onto one tile dimension with the
+    /// request's engine, validating the placement. This is the exact
+    /// owned-allocation engine path (ILP solved cold), so placements are
+    /// byte-identical to calling the engines directly. An engine emitting
+    /// an invalid packing surfaces as an error, not a panic.
+    pub fn pack(&self, tile: Tile) -> Result<PackOutcome, PlanError> {
+        self.pack_with_hint(tile, None)
+    }
+
+    /// [`Planner::pack`] with an ILP warm-start hint (a neighbouring
+    /// configuration's bin count, as the §3.1 sweep chain passes it).
+    /// [`Planner::plan`] reconstructs the chosen point's hint so the packed
+    /// placements land on exactly the bin count the sweep reported, even
+    /// when the budget is too small to prove optimality.
+    fn pack_with_hint(&self, tile: Tile, hint: Option<usize>) -> Result<PackOutcome, PlanError> {
+        let req = &self.request;
+        let blocks = frag::fragment_network_replicated(&self.net, tile, &self.replication);
+        let (packing, nodes, optimal, lower_bound) = match req.engine {
+            Engine::Simple => {
+                (pack::simple::pack_ordered(&blocks, tile, req.discipline, req.sort), 0, false, 0)
+            }
+            Engine::Ffd => (pack::ffd::pack(&blocks, tile, req.discipline), 0, false, 0),
+            Engine::Ilp { max_nodes } => {
+                let r = ilp::exact::solve_with_hint(
+                    &blocks,
+                    tile,
+                    req.discipline,
+                    ilp::Budget { max_nodes, ..Default::default() },
+                    hint,
+                );
+                (r.packing, r.nodes, r.optimal, r.lower_bound)
+            }
+        };
+        pack::placement::validate(&packing)
+            .map_err(|e| err(format!("{} produced an invalid packing on {tile}: {e}", req.engine)))?;
+        Ok(PackOutcome { packing, nodes, optimal, lower_bound })
+    }
+
+    /// Price a packed configuration exactly as the sweep's evaluation core
+    /// does — same formulas in the same operand order, so the values are
+    /// bitwise equal to a sweep over the same tile.
+    fn point_from_packing(&self, tile: Tile, aspect: usize, packing: &Packing) -> SweepPoint {
+        let area = &self.request.area;
+        let n_blocks = packing.blocks.len();
+        let n_tiles = packing.n_bins;
+        let stored = frag::total_block_weights(&packing.blocks);
+        SweepPoint {
+            tile,
+            aspect,
+            n_blocks,
+            n_tiles,
+            n_tiles_one_to_one: n_blocks,
+            tile_eff: area.efficiency(tile),
+            packing_eff: pack::packing_efficiency(stored, n_tiles, tile.capacity()),
+            total_area_mm2: area.total_area_mm2(n_tiles, tile),
+            array_area_mm2: n_tiles as f64 * area.array_area_um2(tile) * 1e-6,
+        }
+    }
+
+    /// Evaluate the request's tile space, choose the objective's optimum,
+    /// pack it for provenance (and placements when requested), and price
+    /// latency/throughput.
+    pub fn plan(&self) -> Result<MapPlan, PlanError> {
+        let req = &self.request;
+        let threads = if req.threads == 0 { opt::sweep_threads() } else { req.threads };
+        let (points, fixed_outcome) = match &req.tiles {
+            TileSpace::Grid { .. } => {
+                let cfg = self.sweep_config();
+                (opt::sweep_with_threads(&self.net, &cfg, threads), None)
+            }
+            TileSpace::Fixed(tile) => {
+                // one fragment + pack serves the point, the placements and
+                // the provenance (a separate sweep-style evaluation would
+                // solve the identical instance twice)
+                let aspect = tile.exact_aspect().unwrap_or(OFF_GRID_ASPECT);
+                let outcome = self.pack_with_hint(*tile, None)?;
+                let point = self.point_from_packing(*tile, aspect, &outcome.packing);
+                (vec![point], Some(outcome))
+            }
+        };
+        let best_per_aspect = opt::best_per_aspect(&points);
+        let best = self.choose(&points, &best_per_aspect)?;
+        let outcome = match fixed_outcome {
+            Some(o) => Some(o),
+            // the sweep solved the chosen ILP point warm-started from its
+            // smaller neighbour in the same aspect column; reconstruct
+            // that hint so the placement solve reproduces the reported
+            // bin count. Greedy engines without a placement request have
+            // nothing to add over the sweep's own evaluation.
+            None if req.include_placements || matches!(req.engine, Engine::Ilp { .. }) => {
+                let hint = match (&req.engine, &req.tiles) {
+                    (Engine::Ilp { .. }, TileSpace::Grid { aspects, .. }) => points
+                        .iter()
+                        .position(|p| p.tile == best.tile)
+                        .and_then(|i| i.checked_sub(aspects.len()))
+                        .map(|prev| points[prev].n_tiles),
+                    _ => None,
+                };
+                Some(self.pack_with_hint(best.tile, hint)?)
+            }
+            None => None,
+        };
+        let timing = TimingModel::default();
+        let exec = self.execution();
+        let warm_hits = match (&req.engine, &req.tiles) {
+            (Engine::Ilp { .. }, TileSpace::Grid { aspects, .. }) => {
+                count_warm_hits(&points, aspects.len())
+            }
+            _ => 0,
+        };
+        Ok(MapPlan {
+            id: req.id.clone(),
+            network: self.net.name.clone(),
+            discipline: req.discipline,
+            engine: req.engine,
+            objective: req.objective,
+            placements: if req.include_placements {
+                outcome.as_ref().map(|o| o.packing.placements.clone())
+            } else {
+                None
+            },
+            best,
+            best_per_aspect,
+            points,
+            latency_s: perf::latency(&self.net, &self.replication, &timing, exec),
+            throughput_per_s: perf::throughput(&self.net, &self.replication, &timing, exec),
+            provenance: Provenance {
+                budget_nodes: match req.engine {
+                    Engine::Ilp { max_nodes } => max_nodes,
+                    _ => 0,
+                },
+                nodes: outcome.as_ref().map_or(0, |o| o.nodes),
+                optimal: outcome.as_ref().is_some_and(|o| o.optimal),
+                lower_bound: outcome.as_ref().map_or(0, |o| o.lower_bound),
+                warm_hits,
+                threads,
+            },
+        })
+    }
+
+    fn choose(
+        &self,
+        points: &[SweepPoint],
+        per_aspect: &[SweepPoint],
+    ) -> Result<SweepPoint, PlanError> {
+        match self.request.objective {
+            Objective::MinArea => {
+                Ok(opt::optimum(points).expect("validated tile space is non-empty"))
+            }
+            Objective::MinTiles => Ok(points
+                .iter()
+                .min_by(|x, y| {
+                    x.n_tiles
+                        .cmp(&y.n_tiles)
+                        .then(x.total_area_mm2.total_cmp(&y.total_area_mm2))
+                })
+                .cloned()
+                .expect("validated tile space is non-empty")),
+            Objective::MaxThroughput => {
+                // area-prune to the per-aspect winners, then rank by the
+                // cycle-level simulator (deterministic)
+                let candidates = if per_aspect.is_empty() { points } else { per_aspect };
+                let sim_cfg = SimConfig {
+                    timing: TimingModel::default(),
+                    exec: self.execution(),
+                    replication: self.replication.clone(),
+                };
+                let mut best: Option<(f64, &SweepPoint)> = None;
+                for p in candidates {
+                    let packing = self.pack(p.tile)?.packing;
+                    let rep = sim::simulate(&self.net, &packing, &sim_cfg, SIM_INFERENCES);
+                    let better = match &best {
+                        None => true,
+                        Some((t, b)) => {
+                            rep.throughput_per_s > *t
+                                || (rep.throughput_per_s == *t
+                                    && p.total_area_mm2.total_cmp(&b.total_area_mm2).is_lt())
+                        }
+                    };
+                    if better {
+                        best = Some((rep.throughput_per_s, p));
+                    }
+                }
+                Ok(best.expect("validated tile space is non-empty").1.clone())
+            }
+        }
+    }
+}
+
+/// Count confirmed warm-start hints in a grid sweep: ILP points whose bin
+/// count equals their smaller neighbour's in the same aspect column (the
+/// §3.1 capacity-monotonicity heuristic the solver warm-starts from).
+fn count_warm_hits(points: &[SweepPoint], n_aspects: usize) -> usize {
+    if n_aspects == 0 {
+        return 0;
+    }
+    points
+        .iter()
+        .enumerate()
+        .filter(|(i, p)| *i >= n_aspects && p.n_tiles == points[i - n_aspects].n_tiles)
+        .count()
+}
+
+/// The planner's result: everything a tenant needs to adopt (or audit) a
+/// mapping, in a wire-stable shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MapPlan {
+    /// the request's correlation id, echoed back
+    pub id: String,
+    /// resolved network name
+    pub network: String,
+    pub discipline: Discipline,
+    pub engine: Engine,
+    pub objective: Objective,
+    /// every evaluated tile configuration, in grid order
+    pub points: Vec<SweepPoint>,
+    /// minimum-area point per aspect ratio (§3.1 step 2)
+    pub best_per_aspect: Vec<SweepPoint>,
+    /// the objective's chosen optimum
+    pub best: SweepPoint,
+    /// per-tile placements of the chosen configuration (when requested).
+    /// For ILP grid sweeps the placement solve replays the chosen point's
+    /// warm-start hint, so these always realize exactly `best.n_tiles`
+    /// bins — even under budgets too small to prove optimality.
+    pub placements: Option<Vec<Placement>>,
+    /// Eq. 3/4 modeled latency of one inference, seconds
+    pub latency_s: f64,
+    /// Eq. 3/4 steady-state inferences per second
+    pub throughput_per_s: f64,
+    pub provenance: Provenance,
+}
+
+impl MapPlan {
+    /// Encode to the v1 wire object ([`wire::plan_to_json`]).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        wire::plan_to_json(self)
+    }
+
+    /// Decode from a v1 wire object ([`wire::plan_from_json`]).
+    pub fn from_json(j: &crate::util::json::Json) -> Result<MapPlan, PlanError> {
+        wire::plan_from_json(j)
+    }
+}
+
+/// How a mapping was produced: engine budget, search effort, proof status
+/// and sweep parallelism — enough to reproduce or audit the plan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Provenance {
+    /// branch & bound node budget (0 for the greedy engines)
+    pub budget_nodes: u64,
+    /// nodes spent packing the chosen configuration
+    pub nodes: u64,
+    /// chosen configuration proven optimal by the ILP engine
+    pub optimal: bool,
+    /// ILP lower bound on the chosen configuration's bin count
+    pub lower_bound: usize,
+    /// grid points whose warm-start hint was confirmed (ILP sweeps)
+    pub warm_hits: usize,
+    /// sweep worker threads used
+    pub threads: usize,
+}
+
+/// Plan many requests concurrently (the design-service entry point behind
+/// `coordinator::batched_sweep` and `xbarmap plan`). Parallelism is across
+/// requests — each plan runs single-worker — and results come back in
+/// request order, identical to a serial run.
+pub fn serve_batch(requests: &[MapRequest]) -> Vec<Result<MapPlan, PlanError>> {
+    serve_batch_with_threads(requests, opt::sweep_threads())
+}
+
+/// [`serve_batch`] with an explicit worker count.
+pub fn serve_batch_with_threads(
+    requests: &[MapRequest],
+    threads: usize,
+) -> Vec<Result<MapPlan, PlanError>> {
+    crate::util::par::par_for_ordered(requests.len(), threads, || (), |_, i, local| {
+        let mut req = requests[i].clone();
+        req.threads = 1; // parallelism is across requests
+        local.push((i, req.build().and_then(|p| p.plan())));
+    })
+}
+
+/// Outcome of a [`serve_jsonl`] run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeSummary {
+    pub requests: usize,
+    pub errors: usize,
+}
+
+/// The v1 JSONL service loop: read one JSON [`MapRequest`] per input line,
+/// stream one JSON line per request — a [`MapPlan`] on success, else
+/// `{"v":1,"line":N,"error":"..."}` — flushing after every line so
+/// downstream consumers see plans as they are produced. Blank lines are
+/// skipped; a malformed line is reported and does not stop the stream.
+pub fn serve_jsonl<R: BufRead, W: Write>(input: R, out: &mut W) -> std::io::Result<ServeSummary> {
+    use crate::util::json::{Json, JsonObj};
+    let mut summary = ServeSummary { requests: 0, errors: 0 };
+    for (idx, line) in input.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        summary.requests += 1;
+        match plan_line(line) {
+            Ok(plan) => writeln!(out, "{}", plan.to_json().dumps())?,
+            Err(e) => {
+                summary.errors += 1;
+                let mut o = JsonObj::new();
+                o.set("v", WIRE_VERSION).set("line", idx + 1).set("error", e.0.as_str());
+                writeln!(out, "{}", Json::Obj(o).dumps())?;
+            }
+        }
+        out.flush()?;
+    }
+    Ok(summary)
+}
+
+fn plan_line(line: &str) -> Result<MapPlan, PlanError> {
+    let j = crate::util::json::parse(line).map_err(|e| err(format!("parse request: {e}")))?;
+    MapRequest::from_json(&j)?.build()?.plan()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_validates_requests() {
+        assert!(MapRequest::zoo("lenet").build().is_ok());
+        let msg = |r: MapRequest| r.build().unwrap_err().0;
+        assert!(msg(MapRequest::zoo("nope")).contains("unknown network"));
+        assert!(msg(MapRequest::zoo("lenet").tile(0, 64)).contains("degenerate"));
+        assert!(msg(MapRequest::zoo("lenet").grid((8, 6), vec![1])).contains("empty grid"));
+        assert!(msg(MapRequest::zoo("lenet").grid((6, 8), vec![])).contains("no aspect"));
+        assert!(msg(MapRequest::zoo("lenet").grid((6, 8), vec![0])).contains("aspect factor"));
+        assert!(msg(MapRequest::zoo("lenet").ilp(0)).contains("budget"));
+        assert!(
+            msg(MapRequest::zoo("lenet").replication(Replication::Explicit(vec![1, 2])))
+                .contains("arity")
+        );
+        assert!(
+            msg(MapRequest::inline(Network::new("empty", "none", vec![])))
+                .contains("no layers")
+        );
+    }
+
+    #[test]
+    fn replication_specs_resolve_to_rapa_plans() {
+        let net = zoo::resnet18();
+        let p = MapRequest::zoo("resnet18")
+            .replication(Replication::Balanced(128))
+            .build()
+            .unwrap();
+        assert_eq!(p.replication(), rapa::plan_balanced(&net, 128).as_slice());
+        let p = MapRequest::zoo("resnet18")
+            .replication(Replication::Geometric(128, 4))
+            .build()
+            .unwrap();
+        assert_eq!(p.replication(), rapa::plan_geometric(&net, 128, 4).as_slice());
+        let p = MapRequest::zoo("bert").replication(Replication::Uniform(64)).build().unwrap();
+        assert_eq!(p.replication(), rapa::plan_uniform(p.network(), 64).as_slice());
+    }
+
+    #[test]
+    fn fixed_tile_plan_matches_direct_engine() {
+        let tile = Tile::new(256, 256);
+        let planner = MapRequest::zoo("lenet")
+            .tile(tile.n_row, tile.n_col)
+            .discipline(Discipline::Pipeline)
+            .placements(true)
+            .build()
+            .unwrap();
+        let plan = planner.plan().unwrap();
+        let blocks = frag::fragment_network(planner.network(), tile);
+        let direct = pack::simple::pack(&blocks, tile, Discipline::Pipeline);
+        assert_eq!(plan.points.len(), 1);
+        assert_eq!(plan.best.n_tiles, direct.n_bins);
+        assert_eq!(plan.placements.as_deref(), Some(direct.placements.as_slice()));
+        assert_eq!(plan.best.aspect, 1);
+    }
+
+    #[test]
+    fn off_grid_fixed_tile_gets_sentinel_aspect() {
+        let plan = MapRequest::zoo("lenet").tile(96, 64).build().unwrap().plan().unwrap();
+        assert_eq!(plan.best.aspect, OFF_GRID_ASPECT);
+    }
+
+    #[test]
+    fn grid_plan_equals_hidden_sweep() {
+        let planner = MapRequest::zoo("lenet").discipline(Discipline::Pipeline).build().unwrap();
+        let plan = planner.plan().unwrap();
+        let cfg = SweepConfig::paper_default(Discipline::Pipeline);
+        let direct = opt::sweep_serial(planner.network(), &cfg);
+        assert_eq!(plan.points.len(), direct.len());
+        for (a, b) in plan.points.iter().zip(&direct) {
+            assert_eq!((a.tile, a.n_tiles), (b.tile, b.n_tiles));
+            assert_eq!(a.total_area_mm2.to_bits(), b.total_area_mm2.to_bits());
+        }
+        assert_eq!(plan.best, opt::optimum(&direct).unwrap());
+        assert_eq!(plan.best_per_aspect.len(), 8);
+    }
+
+    #[test]
+    fn objectives_pick_distinct_optima() {
+        // paper observation: min tiles != min area on resnet18 dense/square
+        let base = MapRequest::zoo("resnet18").grid((6, 13), vec![1]);
+        let by_area = base.clone().objective(Objective::MinArea).build().unwrap().plan().unwrap();
+        let by_tiles = base.clone().objective(Objective::MinTiles).build().unwrap().plan().unwrap();
+        assert!(by_tiles.best.n_tiles <= by_area.best.n_tiles);
+        assert!(by_area.best.total_area_mm2 <= by_tiles.best.total_area_mm2);
+        assert_ne!(by_area.best.tile, by_tiles.best.tile);
+    }
+
+    #[test]
+    fn max_throughput_objective_selects_a_per_aspect_winner() {
+        let plan = MapRequest::zoo("lenet")
+            .grid((7, 9), vec![1, 2])
+            .discipline(Discipline::Pipeline)
+            .objective(Objective::MaxThroughput)
+            .build()
+            .unwrap()
+            .plan()
+            .unwrap();
+        assert!(plan.best_per_aspect.iter().any(|p| p.tile == plan.best.tile));
+        assert!(plan.throughput_per_s > 0.0);
+    }
+
+    #[test]
+    fn ilp_provenance_records_budget_and_warm_hits() {
+        let plan = MapRequest::zoo("lenet")
+            .grid((7, 9), vec![1])
+            .ilp(200_000)
+            .discipline(Discipline::Pipeline)
+            .build()
+            .unwrap()
+            .plan()
+            .unwrap();
+        assert_eq!(plan.provenance.budget_nodes, 200_000);
+        assert!(plan.provenance.optimal, "lenet at this scale proves optimality");
+        assert!(plan.provenance.lower_bound >= 1);
+        // capacity monotonicity: the 3-point column confirms some hints
+        assert!(plan.provenance.warm_hits <= 2);
+    }
+
+    #[test]
+    fn serve_batch_preserves_request_order_and_reports_errors() {
+        let reqs = vec![
+            MapRequest::zoo("lenet").id("a").grid((6, 13), vec![1]),
+            MapRequest::zoo("ghost-net").id("b"),
+            MapRequest::zoo("lenet").id("c").grid((6, 13), vec![1]).discipline(Discipline::Pipeline),
+        ];
+        let out = serve_batch_with_threads(&reqs, 3);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].as_ref().unwrap().id, "a");
+        assert!(out[1].as_ref().unwrap_err().0.contains("unknown network"));
+        assert_eq!(out[2].as_ref().unwrap().id, "c");
+        let serial = serve_batch_with_threads(&reqs, 1);
+        assert_eq!(out[0].as_ref().unwrap().points, serial[0].as_ref().unwrap().points);
+    }
+
+    #[test]
+    fn serve_jsonl_streams_plans_and_inline_errors() {
+        let input = concat!(
+            r#"{"v":1,"id":"q1","net":{"zoo":"lenet"},"tiles":{"fixed":[256,256]}}"#,
+            "\n\n",
+            "not json\n",
+            r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"grid":{"row_exp":[6,8],"aspects":[1]}}}"#,
+            "\n",
+        );
+        let mut out = Vec::new();
+        let summary = serve_jsonl(input.as_bytes(), &mut out).unwrap();
+        assert_eq!(summary, ServeSummary { requests: 3, errors: 1 });
+        let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().trim().lines().collect();
+        assert_eq!(lines.len(), 3);
+        let first = crate::util::json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("id").and_then(|v| v.as_str()), Some("q1"));
+        assert_eq!(first.get("v").and_then(|v| v.as_usize()), Some(1));
+        let err_line = crate::util::json::parse(lines[1]).unwrap();
+        assert!(err_line.get("error").is_some());
+        assert_eq!(err_line.get("line").and_then(|v| v.as_usize()), Some(3));
+        let third = crate::util::json::parse(lines[2]).unwrap();
+        assert_eq!(third.get("points").and_then(|v| v.as_arr()).map(|a| a.len()), Some(3));
+    }
+}

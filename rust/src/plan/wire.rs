@@ -1,0 +1,667 @@
+//! v1 JSON wire format for [`MapRequest`] / [`MapPlan`].
+//!
+//! Every document carries a `"v": 1` version tag and is rejected on
+//! mismatch, so the JSONL service endpoints can evolve the schema without
+//! silently misreading old clients. Serialization is canonical (fixed key
+//! order, optional fields omitted when they hold their defaults), and
+//! `parse -> serialize -> parse` is the identity — enforced by the
+//! property suite in `rust/tests/integration_plan.rs`.
+//!
+//! Request schema (minimal form: `{"v":1,"net":{"zoo":"resnet18"}}`):
+//!
+//! ```json
+//! {"v":1, "id":"tenant-42",
+//!  "net": {"zoo":"resnet18"} | {"name":..,"input":..,"layers":[
+//!          {"name":"fc1","fc":[784,256]} |
+//!          {"name":"c1","conv":[3,64,7,2,3,224],"bias":false,"reuse":64}]},
+//!  "discipline":"dense|pipeline", "engine":"simple|ffd|lps", "ilp_nodes":N,
+//!  "tiles": {"fixed":[rows,cols]} | {"grid":{"row_exp":[6,13],"aspects":[1,..,8]}},
+//!  "objective":"min-area|min-tiles|max-throughput",
+//!  "replication": {"balanced":128} | {"geometric":[128,4]} | {"uniform":64}
+//!               | {"explicit":[..]},
+//!  "threads":0, "placements":true, "sort":"rows-desc|rows-asc|as-given",
+//!  "area": {"d_unit_in":..,"d_unit_out":..,"d_cnt":..,"periph_gamma":..,"ref_edge":..}}
+//! ```
+//!
+//! Plan schema: see [`plan_to_json`] (points/best/best_per_aspect as
+//! sweep-point objects, placements as `[block,bin,x,y]` rows, and a
+//! `provenance` object with budget, nodes, proof status, warm-start hits
+//! and worker count).
+//!
+//! Numbers ride on the `util::json` f64 value model, so integers are exact
+//! only up to 2^53 — ILP node budgets beyond that (quadrillions of nodes,
+//! far past any practical solve) would round on the wire.
+
+use super::{
+    MapPlan, MapRequest, NetworkSpec, Objective, PlanError, Provenance, Replication, TileSpace,
+    WIRE_VERSION,
+};
+use crate::area::AreaModel;
+use crate::geom::{Placement, Tile};
+use crate::nets::{Layer, LayerKind, Network};
+use crate::opt::{Engine, SweepPoint};
+use crate::pack::SortOrder;
+use crate::util::json::{Json, JsonObj};
+
+fn err(msg: impl Into<String>) -> PlanError {
+    PlanError(msg.into())
+}
+
+// ---- small typed accessors over the Json value model ----
+
+fn obj<'a>(j: &'a Json, what: &str) -> Result<&'a JsonObj, PlanError> {
+    j.as_obj().ok_or_else(|| err(format!("{what} must be a JSON object")))
+}
+
+/// Exact non-negative integer, or `None`: fractional values are rejected
+/// (`256.9` must not silently plan a 256-row tile) and the f64 mantissa
+/// bound (2^53) caps what can ride the wire losslessly.
+fn exact_int(j: &Json) -> Option<u64> {
+    let n = j.as_f64()?;
+    if n < 0.0 || n != n.trunc() || n > 9_007_199_254_740_992.0 {
+        return None;
+    }
+    Some(n as u64)
+}
+
+fn exact_usize(j: &Json) -> Option<usize> {
+    exact_int(j).map(|n| n as usize)
+}
+
+fn get_usize(o: &JsonObj, k: &str) -> Result<usize, PlanError> {
+    o.get(k)
+        .and_then(exact_usize)
+        .ok_or_else(|| err(format!("missing/invalid integer '{k}'")))
+}
+
+fn get_u64(o: &JsonObj, k: &str) -> Result<u64, PlanError> {
+    o.get(k).and_then(exact_int).ok_or_else(|| err(format!("missing/invalid integer '{k}'")))
+}
+
+fn get_f64(o: &JsonObj, k: &str) -> Result<f64, PlanError> {
+    o.get(k).and_then(Json::as_f64).ok_or_else(|| err(format!("missing/invalid number '{k}'")))
+}
+
+fn get_str<'a>(o: &'a JsonObj, k: &str) -> Result<&'a str, PlanError> {
+    o.get(k).and_then(Json::as_str).ok_or_else(|| err(format!("missing/invalid string '{k}'")))
+}
+
+fn usize_arr(j: &Json, what: &str) -> Result<Vec<usize>, PlanError> {
+    let a = j.as_arr().ok_or_else(|| err(format!("{what} must be an array of integers")))?;
+    let v: Vec<usize> = a.iter().filter_map(exact_usize).collect();
+    if v.len() != a.len() {
+        return Err(err(format!("{what} must be an array of integers")));
+    }
+    Ok(v)
+}
+
+fn check_version(o: &JsonObj, what: &str) -> Result<(), PlanError> {
+    match o.get("v").and_then(Json::as_f64) {
+        // exact integral match: "v":1.9 is a mismatch, not a v1 document
+        Some(v) if v == v.trunc() && v as u64 == WIRE_VERSION => Ok(()),
+        Some(v) => Err(err(format!("unsupported {what} wire version {v} (expected {WIRE_VERSION})"))),
+        None => Err(err(format!("{what} missing wire version tag \"v\""))),
+    }
+}
+
+// ---- MapRequest ----
+
+/// Encode a request as a canonical v1 wire object.
+pub fn request_to_json(r: &MapRequest) -> Json {
+    let mut o = JsonObj::new();
+    o.set("v", WIRE_VERSION);
+    if !r.id.is_empty() {
+        o.set("id", r.id.as_str());
+    }
+    o.set("net", net_spec_to_json(&r.network));
+    o.set("discipline", r.discipline.canonical());
+    o.set("engine", r.engine.canonical());
+    if let Engine::Ilp { max_nodes } = r.engine {
+        o.set("ilp_nodes", max_nodes);
+    }
+    o.set("tiles", tiles_to_json(&r.tiles));
+    o.set("objective", r.objective.canonical());
+    match &r.replication {
+        Replication::None => {}
+        Replication::Balanced(n0) => {
+            let mut m = JsonObj::new();
+            m.set("balanced", *n0);
+            o.set("replication", m);
+        }
+        Replication::Geometric(n0, f) => {
+            let mut m = JsonObj::new();
+            m.set("geometric", vec![Json::from(*n0), Json::from(*f)]);
+            o.set("replication", m);
+        }
+        Replication::Uniform(s) => {
+            let mut m = JsonObj::new();
+            m.set("uniform", *s);
+            o.set("replication", m);
+        }
+        Replication::Explicit(v) => {
+            let mut m = JsonObj::new();
+            m.set("explicit", v.iter().map(|&x| Json::from(x)).collect::<Vec<_>>());
+            o.set("replication", m);
+        }
+    }
+    if r.threads != 0 {
+        o.set("threads", r.threads);
+    }
+    if r.include_placements {
+        o.set("placements", true);
+    }
+    if r.sort != SortOrder::RowsDesc {
+        o.set("sort", r.sort.canonical());
+    }
+    if r.area != AreaModel::paper_default() {
+        o.set("area", area_to_json(&r.area));
+    }
+    Json::Obj(o)
+}
+
+/// Decode a v1 wire object into a request. Omitted optional fields take
+/// the paper defaults, so `{"v":1,"net":{"zoo":"resnet18"}}` is a complete
+/// request.
+pub fn request_from_json(j: &Json) -> Result<MapRequest, PlanError> {
+    let o = obj(j, "request")?;
+    check_version(o, "request")?;
+    let net = net_spec_from_json(o.get("net").ok_or_else(|| err("request missing 'net'"))?)?;
+    let mut r = MapRequest::with_network(net);
+    if let Some(id) = o.get("id") {
+        r.id = id.as_str().ok_or_else(|| err("'id' must be a string"))?.to_string();
+    }
+    if let Some(d) = o.get("discipline") {
+        r.discipline = d
+            .as_str()
+            .ok_or_else(|| err("'discipline' must be a string"))?
+            .parse()
+            .map_err(PlanError)?;
+    }
+    if let Some(e) = o.get("engine") {
+        let token = e.as_str().ok_or_else(|| err("'engine' must be a string"))?;
+        let nodes = match o.get("ilp_nodes") {
+            Some(n) => exact_int(n).ok_or_else(|| err("'ilp_nodes' must be an integer"))?,
+            None => Engine::DEFAULT_ILP_NODES,
+        };
+        r.engine = Engine::parse_with_budget(token, nodes).map_err(PlanError)?;
+    }
+    if let Some(t) = o.get("tiles") {
+        r.tiles = tiles_from_json(t)?;
+    }
+    if let Some(ob) = o.get("objective") {
+        r.objective = ob
+            .as_str()
+            .ok_or_else(|| err("'objective' must be a string"))?
+            .parse()
+            .map_err(PlanError)?;
+    }
+    if let Some(rep) = o.get("replication") {
+        r.replication = replication_from_json(rep)?;
+    }
+    if let Some(t) = o.get("threads") {
+        r.threads = exact_usize(t).ok_or_else(|| err("'threads' must be an integer"))?;
+    }
+    if let Some(p) = o.get("placements") {
+        r.include_placements = p.as_bool().ok_or_else(|| err("'placements' must be a bool"))?;
+    }
+    if let Some(s) = o.get("sort") {
+        r.sort =
+            s.as_str().ok_or_else(|| err("'sort' must be a string"))?.parse().map_err(PlanError)?;
+    }
+    if let Some(a) = o.get("area") {
+        r.area = area_from_json(a)?;
+    }
+    Ok(r)
+}
+
+fn net_spec_to_json(spec: &NetworkSpec) -> JsonObj {
+    let mut o = JsonObj::new();
+    match spec {
+        NetworkSpec::Zoo(name) => {
+            o.set("zoo", name.as_str());
+        }
+        NetworkSpec::Inline(net) => {
+            o.set("name", net.name.as_str());
+            o.set("input", net.input_desc.as_str());
+            o.set(
+                "layers",
+                net.layers.iter().map(|l| Json::Obj(layer_to_json(l))).collect::<Vec<_>>(),
+            );
+        }
+    }
+    o
+}
+
+fn net_spec_from_json(j: &Json) -> Result<NetworkSpec, PlanError> {
+    let o = obj(j, "'net'")?;
+    if let Some(z) = o.get("zoo") {
+        return Ok(NetworkSpec::Zoo(
+            z.as_str().ok_or_else(|| err("'net.zoo' must be a string"))?.to_string(),
+        ));
+    }
+    let name = get_str(o, "name")?;
+    let input = o.get("input").and_then(Json::as_str).unwrap_or("");
+    let layers = o
+        .get("layers")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| err("inline 'net' needs a 'layers' array"))?
+        .iter()
+        .map(layer_from_json)
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(NetworkSpec::Inline(Network::new(name, input, layers)))
+}
+
+fn layer_to_json(l: &Layer) -> JsonObj {
+    let mut o = JsonObj::new();
+    o.set("name", l.name.as_str());
+    match l.kind {
+        LayerKind::Fc { fan_in, fan_out } => {
+            o.set("fc", vec![Json::from(fan_in), Json::from(fan_out)]);
+        }
+        LayerKind::Conv { in_ch, out_ch, kernel, stride, padding, in_size } => {
+            o.set(
+                "conv",
+                [in_ch, out_ch, kernel, stride, padding, in_size]
+                    .iter()
+                    .map(|&x| Json::from(x))
+                    .collect::<Vec<_>>(),
+            );
+        }
+    }
+    if !l.bias {
+        o.set("bias", false);
+    }
+    if let Some(r) = l.reuse_override {
+        o.set("reuse", r);
+    }
+    o
+}
+
+fn layer_from_json(j: &Json) -> Result<Layer, PlanError> {
+    let o = obj(j, "layer")?;
+    let name = get_str(o, "name")?;
+    let mut layer = if let Some(fc) = o.get("fc") {
+        let dims = usize_arr(fc, "'fc'")?;
+        if dims.len() != 2 {
+            return Err(err("'fc' must be [fan_in, fan_out]"));
+        }
+        Layer::fc(name, dims[0], dims[1])
+    } else if let Some(conv) = o.get("conv") {
+        let d = usize_arr(conv, "'conv'")?;
+        if d.len() != 6 {
+            return Err(err("'conv' must be [in_ch,out_ch,kernel,stride,padding,in_size]"));
+        }
+        Layer::conv(name, d[0], d[1], d[2], d[3], d[4], d[5])
+    } else {
+        return Err(err(format!("layer '{name}' needs an 'fc' or 'conv' shape")));
+    };
+    if let Some(b) = o.get("bias") {
+        layer.bias = b.as_bool().ok_or_else(|| err("'bias' must be a bool"))?;
+    }
+    if let Some(r) = o.get("reuse") {
+        layer.reuse_override =
+            Some(exact_usize(r).ok_or_else(|| err("'reuse' must be an integer"))?);
+    }
+    Ok(layer)
+}
+
+fn tiles_to_json(t: &TileSpace) -> JsonObj {
+    let mut o = JsonObj::new();
+    match t {
+        TileSpace::Fixed(tile) => {
+            o.set("fixed", vec![Json::from(tile.n_row), Json::from(tile.n_col)]);
+        }
+        TileSpace::Grid { row_exp, aspects } => {
+            let mut g = JsonObj::new();
+            g.set("row_exp", vec![Json::from(row_exp.0), Json::from(row_exp.1)]);
+            g.set("aspects", aspects.iter().map(|&a| Json::from(a)).collect::<Vec<_>>());
+            o.set("grid", g);
+        }
+    }
+    o
+}
+
+fn tiles_from_json(j: &Json) -> Result<TileSpace, PlanError> {
+    let o = obj(j, "'tiles'")?;
+    if let Some(f) = o.get("fixed") {
+        let d = usize_arr(f, "'tiles.fixed'")?;
+        if d.len() != 2 {
+            return Err(err("'tiles.fixed' must be [rows, cols]"));
+        }
+        return Ok(TileSpace::Fixed(Tile::new(d[0], d[1])));
+    }
+    let g = obj(
+        o.get("grid").ok_or_else(|| err("'tiles' needs 'fixed' or 'grid'"))?,
+        "'tiles.grid'",
+    )?;
+    let re = usize_arr(
+        g.get("row_exp").ok_or_else(|| err("'tiles.grid' missing 'row_exp'"))?,
+        "'row_exp'",
+    )?;
+    if re.len() != 2 {
+        return Err(err("'row_exp' must be [lo, hi]"));
+    }
+    let exp = |v: usize| u32::try_from(v).map_err(|_| err(format!("row exponent {v} out of range")));
+    let aspects = usize_arr(
+        g.get("aspects").ok_or_else(|| err("'tiles.grid' missing 'aspects'"))?,
+        "'aspects'",
+    )?;
+    Ok(TileSpace::Grid { row_exp: (exp(re[0])?, exp(re[1])?), aspects })
+}
+
+fn replication_from_json(j: &Json) -> Result<Replication, PlanError> {
+    if matches!(j, Json::Null) {
+        return Ok(Replication::None);
+    }
+    let o = obj(j, "'replication'")?;
+    if let Some(n) = o.get("balanced") {
+        return Ok(Replication::Balanced(
+            exact_usize(n).ok_or_else(|| err("'balanced' must be an integer"))?,
+        ));
+    }
+    if let Some(g) = o.get("geometric") {
+        let d = usize_arr(g, "'geometric'")?;
+        if d.len() != 2 {
+            return Err(err("'geometric' must be [n0, factor]"));
+        }
+        return Ok(Replication::Geometric(d[0], d[1]));
+    }
+    if let Some(u) = o.get("uniform") {
+        return Ok(Replication::Uniform(
+            exact_usize(u).ok_or_else(|| err("'uniform' must be an integer"))?,
+        ));
+    }
+    if let Some(e) = o.get("explicit") {
+        return Ok(Replication::Explicit(usize_arr(e, "'explicit'")?));
+    }
+    Err(err("'replication' needs balanced|geometric|uniform|explicit"))
+}
+
+fn area_to_json(a: &AreaModel) -> JsonObj {
+    let mut o = JsonObj::new();
+    o.set("d_unit_in", a.d_unit_in)
+        .set("d_unit_out", a.d_unit_out)
+        .set("d_cnt", a.d_cnt)
+        .set("periph_gamma", a.periph_gamma)
+        .set("ref_edge", a.ref_edge);
+    o
+}
+
+fn area_from_json(j: &Json) -> Result<AreaModel, PlanError> {
+    let o = obj(j, "'area'")?;
+    Ok(AreaModel {
+        d_unit_in: get_f64(o, "d_unit_in")?,
+        d_unit_out: get_f64(o, "d_unit_out")?,
+        d_cnt: get_f64(o, "d_cnt")?,
+        periph_gamma: get_f64(o, "periph_gamma")?,
+        ref_edge: get_f64(o, "ref_edge")?,
+    })
+}
+
+// ---- MapPlan ----
+
+/// Encode a plan as a canonical v1 wire object.
+pub fn plan_to_json(p: &MapPlan) -> Json {
+    let mut o = JsonObj::new();
+    o.set("v", WIRE_VERSION);
+    if !p.id.is_empty() {
+        o.set("id", p.id.as_str());
+    }
+    o.set("net", p.network.as_str());
+    o.set("discipline", p.discipline.canonical());
+    o.set("engine", p.engine.canonical());
+    if let Engine::Ilp { max_nodes } = p.engine {
+        o.set("ilp_nodes", max_nodes);
+    }
+    o.set("objective", p.objective.canonical());
+    o.set("points", p.points.iter().map(|pt| Json::Obj(point_to_json(pt))).collect::<Vec<_>>());
+    o.set(
+        "best_per_aspect",
+        p.best_per_aspect.iter().map(|pt| Json::Obj(point_to_json(pt))).collect::<Vec<_>>(),
+    );
+    o.set("best", point_to_json(&p.best));
+    if let Some(placements) = &p.placements {
+        o.set(
+            "placements",
+            placements
+                .iter()
+                .map(|pl| {
+                    Json::Arr(vec![
+                        Json::from(pl.block),
+                        Json::from(pl.bin),
+                        Json::from(pl.x),
+                        Json::from(pl.y),
+                    ])
+                })
+                .collect::<Vec<_>>(),
+        );
+    }
+    o.set("latency_s", p.latency_s);
+    o.set("throughput_per_s", p.throughput_per_s);
+    let mut prov = JsonObj::new();
+    prov.set("budget_nodes", p.provenance.budget_nodes)
+        .set("nodes", p.provenance.nodes)
+        .set("optimal", p.provenance.optimal)
+        .set("lower_bound", p.provenance.lower_bound)
+        .set("warm_hits", p.provenance.warm_hits)
+        .set("threads", p.provenance.threads);
+    o.set("provenance", prov);
+    Json::Obj(o)
+}
+
+/// Decode a v1 wire object into a plan.
+pub fn plan_from_json(j: &Json) -> Result<MapPlan, PlanError> {
+    let o = obj(j, "plan")?;
+    check_version(o, "plan")?;
+    let engine = {
+        let token = get_str(o, "engine")?;
+        let nodes = match o.get("ilp_nodes") {
+            Some(n) => exact_int(n).ok_or_else(|| err("'ilp_nodes' must be an integer"))?,
+            None => Engine::DEFAULT_ILP_NODES,
+        };
+        Engine::parse_with_budget(token, nodes).map_err(PlanError)?
+    };
+    let points_of = |k: &str| -> Result<Vec<SweepPoint>, PlanError> {
+        o.get(k)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err(format!("plan missing '{k}' array")))?
+            .iter()
+            .map(point_from_json)
+            .collect()
+    };
+    let placements = match o.get("placements") {
+        None | Some(Json::Null) => None,
+        Some(arr) => Some(
+            arr.as_arr()
+                .ok_or_else(|| err("'placements' must be an array"))?
+                .iter()
+                .map(|row| {
+                    let d = usize_arr(row, "placement")?;
+                    if d.len() != 4 {
+                        return Err(err("placement must be [block,bin,x,y]"));
+                    }
+                    Ok(Placement { block: d[0], bin: d[1], x: d[2], y: d[3] })
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+        ),
+    };
+    let prov = obj(
+        o.get("provenance").ok_or_else(|| err("plan missing 'provenance'"))?,
+        "'provenance'",
+    )?;
+    Ok(MapPlan {
+        id: o.get("id").and_then(Json::as_str).unwrap_or("").to_string(),
+        network: get_str(o, "net")?.to_string(),
+        discipline: get_str(o, "discipline")?.parse().map_err(PlanError)?,
+        engine,
+        objective: get_str(o, "objective")?.parse().map_err(PlanError)?,
+        points: points_of("points")?,
+        best_per_aspect: points_of("best_per_aspect")?,
+        best: point_from_json(o.get("best").ok_or_else(|| err("plan missing 'best'"))?)?,
+        placements,
+        latency_s: get_f64(o, "latency_s")?,
+        throughput_per_s: get_f64(o, "throughput_per_s")?,
+        provenance: Provenance {
+            budget_nodes: get_u64(prov, "budget_nodes")?,
+            nodes: get_u64(prov, "nodes")?,
+            optimal: prov
+                .get("optimal")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| err("provenance missing 'optimal'"))?,
+            lower_bound: get_usize(prov, "lower_bound")?,
+            warm_hits: get_usize(prov, "warm_hits")?,
+            threads: get_usize(prov, "threads")?,
+        },
+    })
+}
+
+fn point_to_json(p: &SweepPoint) -> JsonObj {
+    let mut o = JsonObj::new();
+    o.set("tile", vec![Json::from(p.tile.n_row), Json::from(p.tile.n_col)])
+        .set("aspect", p.aspect)
+        .set("blocks", p.n_blocks)
+        .set("tiles", p.n_tiles)
+        .set("one_to_one", p.n_tiles_one_to_one)
+        .set("tile_eff", p.tile_eff)
+        .set("pack_eff", p.packing_eff)
+        .set("area_mm2", p.total_area_mm2)
+        .set("array_area_mm2", p.array_area_mm2);
+    o
+}
+
+fn point_from_json(j: &Json) -> Result<SweepPoint, PlanError> {
+    let o = obj(j, "sweep point")?;
+    let t = usize_arr(o.get("tile").ok_or_else(|| err("point missing 'tile'"))?, "'tile'")?;
+    if t.len() != 2 {
+        return Err(err("'tile' must be [rows, cols]"));
+    }
+    Ok(SweepPoint {
+        tile: Tile::new(t[0], t[1]),
+        aspect: get_usize(o, "aspect")?,
+        n_blocks: get_usize(o, "blocks")?,
+        n_tiles: get_usize(o, "tiles")?,
+        n_tiles_one_to_one: get_usize(o, "one_to_one")?,
+        tile_eff: get_f64(o, "tile_eff")?,
+        packing_eff: get_f64(o, "pack_eff")?,
+        total_area_mm2: get_f64(o, "area_mm2")?,
+        array_area_mm2: get_f64(o, "array_area_mm2")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pack::Discipline;
+
+    #[test]
+    fn minimal_request_parses_with_paper_defaults() {
+        let j = crate::util::json::parse(r#"{"v":1,"net":{"zoo":"resnet18"}}"#).unwrap();
+        let r = request_from_json(&j).unwrap();
+        assert_eq!(r, MapRequest::zoo("resnet18"));
+        assert_eq!(r.tiles, TileSpace::paper_grid());
+        assert_eq!(r.engine, Engine::Simple);
+        assert_eq!(r.objective, Objective::MinArea);
+    }
+
+    #[test]
+    fn version_tag_is_required_and_checked() {
+        let missing = crate::util::json::parse(r#"{"net":{"zoo":"lenet"}}"#).unwrap();
+        assert!(request_from_json(&missing).unwrap_err().0.contains("version"));
+        let wrong = crate::util::json::parse(r#"{"v":2,"net":{"zoo":"lenet"}}"#).unwrap();
+        assert!(request_from_json(&wrong).unwrap_err().0.contains("unsupported"));
+        // fractional versions are mismatches, not truncated to v1
+        let frac = crate::util::json::parse(r#"{"v":1.9,"net":{"zoo":"lenet"}}"#).unwrap();
+        assert!(request_from_json(&frac).unwrap_err().0.contains("unsupported"));
+    }
+
+    #[test]
+    fn full_request_roundtrips() {
+        let r = MapRequest::zoo("resnet18")
+            .id("tenant-7")
+            .grid((7, 10), vec![1, 2, 4])
+            .ilp(50_000)
+            .discipline(Discipline::Pipeline)
+            .objective(Objective::MinTiles)
+            .replication(Replication::Geometric(128, 4))
+            .threads(3)
+            .placements(true)
+            .sort(SortOrder::RowsAsc)
+            .area(AreaModel::calibrated(2.0, 128, 0.3));
+        let j = request_to_json(&r);
+        let back = request_from_json(&crate::util::json::parse(&j.dumps()).unwrap()).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(request_to_json(&back).dumps(), j.dumps());
+    }
+
+    #[test]
+    fn inline_network_roundtrips() {
+        let net = Network::new(
+            "custom",
+            "test 8x8",
+            vec![
+                Layer::conv("c1", 3, 8, 3, 1, 1, 8),
+                {
+                    let mut l = Layer::fc("fc", 32, 10);
+                    l.bias = false;
+                    l
+                },
+                Layer::fc_reused("q", 16, 16, 7),
+            ],
+        );
+        let r = MapRequest::inline(net.clone()).tile(64, 64);
+        let j = request_to_json(&r);
+        let back = request_from_json(&crate::util::json::parse(&j.dumps()).unwrap()).unwrap();
+        match &back.network {
+            NetworkSpec::Inline(n) => assert_eq!(n, &net),
+            other => panic!("expected inline network, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn planned_lenet_plan_roundtrips() {
+        let plan = MapRequest::zoo("lenet")
+            .tile(256, 256)
+            .discipline(Discipline::Pipeline)
+            .placements(true)
+            .build()
+            .unwrap()
+            .plan()
+            .unwrap();
+        let j = plan_to_json(&plan);
+        let back = plan_from_json(&crate::util::json::parse(&j.dumps()).unwrap()).unwrap();
+        assert_eq!(back, plan);
+        assert_eq!(plan_to_json(&back).dumps(), j.dumps());
+    }
+
+    #[test]
+    fn bad_layer_and_tiles_are_rejected() {
+        for (src, needle) in [
+            (r#"{"v":1,"net":{"name":"x","layers":[{"name":"l"}]}}"#, "'fc' or 'conv'"),
+            (r#"{"v":1,"net":{"name":"x","layers":[{"name":"l","fc":[1]}]}}"#, "fan_in"),
+            (r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{}}"#, "'fixed' or 'grid'"),
+            (r#"{"v":1,"net":{"zoo":"lenet"},"engine":"magic"}"#, "engine"),
+            (r#"{"v":1,"net":{"zoo":"lenet"},"replication":{}}"#, "replication"),
+        ] {
+            let j = crate::util::json::parse(src).unwrap();
+            let e = request_from_json(&j).unwrap_err();
+            assert!(e.0.contains(needle), "{src}: {e}");
+        }
+    }
+
+    #[test]
+    fn fractional_and_oversized_integers_are_rejected_not_truncated() {
+        for src in [
+            // a 256.9-row tile must not silently plan a 256-row one
+            r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"fixed":[256.9,64]}}"#,
+            r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"grid":{"row_exp":[6,9],"aspects":[1.5]}}}"#,
+            r#"{"v":1,"net":{"zoo":"lenet"},"threads":2.7}"#,
+            r#"{"v":1,"net":{"zoo":"lenet"},"engine":"lps","ilp_nodes":1.5}"#,
+            r#"{"v":1,"net":{"zoo":"lenet"},"replication":{"balanced":-3}}"#,
+            // u32 narrowing must not wrap row exponents into the valid range
+            r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"grid":{"row_exp":[4294967302,4294967305],"aspects":[1]}}}"#,
+        ] {
+            let j = crate::util::json::parse(src).unwrap();
+            assert!(request_from_json(&j).is_err(), "accepted: {src}");
+        }
+    }
+}

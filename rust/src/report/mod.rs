@@ -11,9 +11,9 @@ use crate::frag::{self, Census};
 use crate::geom::{Block, BlockKind, Tile};
 use crate::ilp;
 use crate::nets::zoo;
-use crate::opt::{self, Engine, SweepConfig};
 use crate::pack::{self, Discipline};
-use crate::perf::{self, rapa, Execution, TimingModel};
+use crate::perf::{self, Execution, TimingModel};
+use crate::plan::{MapRequest, Replication};
 use crate::sim::{self, SimConfig};
 use crate::util::table::{sig3, Table};
 use std::path::Path;
@@ -145,7 +145,6 @@ pub fn fig4() -> Table {
 /// tile area (at 100 % array efficiency, like the paper's fig) vs number
 /// of tiles, for dense/square and pipeline/rectangular ResNet18 mappings.
 pub fn fig7(fast: bool) -> Table {
-    let net = zoo::resnet18();
     let mut t = Table::new(&[
         "scenario", "engine", "tile", "tiles", "array area mm2", "total area mm2",
     ]);
@@ -154,19 +153,18 @@ pub fn fig7(fast: bool) -> Table {
         ("pipeline/rect", Discipline::Pipeline, (1..=8).collect()),
     ];
     for (name, discipline, aspects) in scenarios {
-        for engine in [Engine::Simple, Engine::Ilp { max_nodes: budget(fast).max_nodes }] {
-            let cfg = SweepConfig {
-                discipline,
-                engine,
-                aspects: aspects.clone(),
-                row_exp: if fast { (8, 11) } else { (6, 13) },
-                ..SweepConfig::paper_default(discipline)
-            };
-            let pts = opt::sweep(&net, &cfg);
-            for p in opt::best_per_aspect(&pts) {
+        for ilp_nodes in [None, Some(budget(fast).max_nodes)] {
+            let mut req = MapRequest::zoo("resnet18")
+                .discipline(discipline)
+                .grid(if fast { (8, 11) } else { (6, 13) }, aspects.clone());
+            if let Some(nodes) = ilp_nodes {
+                req = req.ilp(nodes);
+            }
+            let plan = req.build().and_then(|p| p.plan()).expect("fig7 plan");
+            for p in &plan.best_per_aspect {
                 t.row(&[
                     name.into(),
-                    engine.to_string(),
+                    plan.engine.to_string(),
                     p.tile.to_string(),
                     p.n_tiles.to_string(),
                     sig3(p.array_area_mm2),
@@ -181,15 +179,17 @@ pub fn fig7(fast: bool) -> Table {
 /// Figure 8: ResNet18 square-array optimization curves (dense & pipeline):
 /// total tile area, tile count, mapping efficiency, tile dimension.
 pub fn fig8() -> Table {
-    let net = zoo::resnet18();
     let mut t = Table::new(&[
         "discipline", "tile", "tiles", "total area mm2", "mapping eff", "tile eff", "optimum",
     ]);
     for discipline in [Discipline::Dense, Discipline::Pipeline] {
-        let cfg = SweepConfig::square(discipline);
-        let pts = opt::sweep(&net, &cfg);
-        let best = opt::optimum(&pts).unwrap();
-        for p in &pts {
+        let plan = MapRequest::zoo("resnet18")
+            .discipline(discipline)
+            .grid((6, 13), vec![1])
+            .build()
+            .and_then(|p| p.plan())
+            .expect("fig8 plan");
+        for p in &plan.points {
             t.row(&[
                 discipline.to_string(),
                 p.tile.to_string(),
@@ -197,7 +197,7 @@ pub fn fig8() -> Table {
                 sig3(p.total_area_mm2),
                 sig3(p.packing_eff),
                 sig3(p.tile_eff),
-                if p.tile == best.tile { "*".into() } else { "".into() },
+                if p.tile == plan.best.tile { "*".into() } else { "".into() },
             ]);
         }
     }
@@ -207,41 +207,39 @@ pub fn fig8() -> Table {
 /// Figure 9: optimum configurations for ResNet18/ImageNet across the six
 /// groups (dense/pipeline/RAPA x square/rect), with simulated throughput.
 pub fn fig9() -> Table {
-    let net = zoo::resnet18();
-    // the paper's "N_rapa = 128 for 1st layer and successive reduction by 4"
-    let rapa_plan = rapa::plan_geometric(&net, 128, 4);
     let mut t = Table::new(&[
         "group", "tile", "tiles", "tile eff", "total area mm2", "throughput inf/s",
     ]);
-    let groups: [(&str, Discipline, Vec<usize>, Option<Vec<usize>>); 6] = [
-        ("dense square", Discipline::Dense, vec![1], None),
-        ("dense rect", Discipline::Dense, (1..=8).collect(), None),
-        ("pipeline square", Discipline::Pipeline, vec![1], None),
-        ("pipeline rect", Discipline::Pipeline, (1..=8).collect(), None),
-        ("RAPA square", Discipline::Pipeline, vec![1], Some(rapa_plan.clone())),
-        ("RAPA rect", Discipline::Pipeline, (1..=8).collect(), Some(rapa_plan.clone())),
+    // the paper's "N_rapa = 128 for 1st layer and successive reduction by 4"
+    let rapa = Replication::Geometric(128, 4);
+    let groups: [(&str, Discipline, Vec<usize>, Replication); 6] = [
+        ("dense square", Discipline::Dense, vec![1], Replication::None),
+        ("dense rect", Discipline::Dense, (1..=8).collect(), Replication::None),
+        ("pipeline square", Discipline::Pipeline, vec![1], Replication::None),
+        ("pipeline rect", Discipline::Pipeline, (1..=8).collect(), Replication::None),
+        ("RAPA square", Discipline::Pipeline, vec![1], rapa.clone()),
+        ("RAPA rect", Discipline::Pipeline, (1..=8).collect(), rapa.clone()),
     ];
     for (name, discipline, aspects, replication) in groups {
-        let cfg = SweepConfig {
-            discipline,
-            aspects,
-            replication: replication.clone(),
-            ..SweepConfig::paper_default(discipline)
-        };
-        let pts = opt::sweep(&net, &cfg);
-        let best = opt::optimum(&pts).unwrap();
+        let planner = MapRequest::zoo("resnet18")
+            .discipline(discipline)
+            .grid((6, 13), aspects)
+            .replication(replication)
+            .build()
+            .expect("valid fig9 request");
+        let plan = planner.plan().expect("fig9 plan");
+        let best = &plan.best;
         // simulate the chosen configuration
-        let mut sim_cfg = SimConfig::new(
-            &net,
-            match discipline {
+        let sim_cfg = SimConfig {
+            timing: TimingModel::default(),
+            exec: match discipline {
                 Discipline::Dense => Execution::Sequential,
                 Discipline::Pipeline => Execution::Pipelined,
             },
-        );
-        if let Some(r) = &replication {
-            sim_cfg.replication = r.clone();
-        }
-        let (_, rep) = sim::map_and_simulate(&net, best.tile, discipline, &sim_cfg, 100);
+            replication: planner.replication().to_vec(),
+        };
+        let packing = planner.pack(best.tile).expect("fig9 pack").packing;
+        let rep = sim::simulate(planner.network(), &packing, &sim_cfg, 100);
         t.row(&[
             name.into(),
             best.tile.to_string(),
@@ -259,20 +257,24 @@ pub fn fig9() -> Table {
 pub fn table6(fast: bool) -> Table {
     let area = AreaModel::paper_default();
     let mut t = Table::new(&["Array", "Network", "option", "tiles", "area mm2"]);
-    for net in [zoo::resnet18(), zoo::resnet9()] {
+    for net in ["resnet18", "resnet9"] {
         for tile in [Tile::new(256, 256), Tile::new(1024, 1024)] {
-            let blocks = frag::fragment_network(&net, tile);
-            let one_to_one = blocks.len();
-            let simple = pack::simple::pack(&blocks, tile, Discipline::Dense).n_bins;
-            let lps = ilp::solve_packing(&blocks, tile, Discipline::Dense, budget(fast))
-                .packing
-                .n_bins;
-            for (option, tiles) in
-                [("Mapping 1:1", one_to_one), ("LPS", lps), ("Simple approach", simple)]
-            {
+            let request = MapRequest::zoo(net).tile(tile.n_row, tile.n_col);
+            let simple =
+                request.clone().build().and_then(|p| p.plan()).expect("table6 plan");
+            let lps = request
+                .ilp(budget(fast).max_nodes)
+                .build()
+                .and_then(|p| p.plan())
+                .expect("table6 plan");
+            for (option, tiles) in [
+                ("Mapping 1:1", simple.best.n_tiles_one_to_one),
+                ("LPS", lps.best.n_tiles),
+                ("Simple approach", simple.best.n_tiles),
+            ] {
                 t.row(&[
                     tile.to_string(),
-                    net.name.clone(),
+                    simple.network.clone(),
                     option.into(),
                     tiles.to_string(),
                     sig3(area.total_area_mm2(tiles, tile)),
@@ -290,46 +292,46 @@ pub fn fig10(fast: bool) -> Table {
     let mut t = Table::new(&[
         "workload", "variant", "tile", "tiles opt", "tiles 1:1", "area opt mm2", "area 1:1 mm2",
     ]);
-    let resnet = zoo::resnet50();
-    let bert = zoo::bert_layer(64);
-    let workloads: [(&str, &crate::nets::Network, Vec<(&str, Option<Vec<usize>>)>); 2] = [
+    let workloads: [(&str, &str, Vec<(&str, Replication)>); 2] = [
         (
             "ResNet50/ImageNet",
-            &resnet,
+            "resnet50",
             vec![
-                ("plain", None),
-                ("RAPA 128/4", Some(rapa::plan_geometric(&resnet, 128, 4))),
+                ("plain", Replication::None),
+                ("RAPA 128/4", Replication::Geometric(128, 4)),
             ],
         ),
         (
             "BERT layer S=64",
-            &bert,
+            "bert",
             vec![
-                ("plain", None),
-                ("max parallel xS", Some(rapa::plan_uniform(&bert, 64))),
+                ("plain", Replication::None),
+                ("max parallel xS", Replication::Uniform(64)),
             ],
         ),
     ];
     let area = AreaModel::paper_default();
     let exps = if fast { 8..=11u32 } else { 6..=13u32 };
-    for (wname, net, variants) in workloads {
+    for (wname, zoo_name, variants) in workloads {
         for (vname, replication) in variants {
             for k in exps.clone() {
                 let tile = Tile::new(1 << k, 1 << k);
-                let ones = vec![1usize; net.n_layers()];
-                let plan = replication.clone().unwrap_or(ones);
-                let blocks = frag::fragment_network_replicated(net, tile, &plan);
-                let opt_tiles =
-                    pack::simple::pack(&blocks, tile, Discipline::Pipeline).n_bins;
-                let one_to_one = blocks.len();
+                let best = MapRequest::zoo(zoo_name)
+                    .tile(tile.n_row, tile.n_col)
+                    .discipline(Discipline::Pipeline)
+                    .replication(replication.clone())
+                    .build()
+                    .and_then(|p| p.plan())
+                    .expect("fig10 plan")
+                    .best;
                 t.row(&[
                     wname.into(),
                     vname.into(),
                     tile.to_string(),
-                    opt_tiles.to_string(),
-                    one_to_one.to_string(),
-                    sig3(area.total_area_mm2(opt_tiles, tile)),
-                    sig3(area.total_area_mm2(one_to_one, tile)),
+                    best.n_tiles.to_string(),
+                    best.n_tiles_one_to_one.to_string(),
+                    sig3(area.total_area_mm2(best.n_tiles, tile)),
+                    sig3(area.total_area_mm2(best.n_tiles_one_to_one, tile)),
                 ]);
             }
         }
@@ -375,26 +377,44 @@ pub fn ablation() -> Table {
     let tile = Tile::new(256, 256);
     let mut t = Table::new(&["study", "setting", "tiles", "area mm2", "note"]);
 
-    // 1) bit slicing: 8-bit weights across cells of b bits
+    // 1) bit slicing: 8-bit weights across cells of b bits — the sliced
+    //    WM shapes become a bias-free inline network, so the study runs
+    //    through the same front door as everything else
     for bits_per_cell in [8u32, 4, 2, 1] {
         let cfg = BitSlice::new(8, bits_per_cell);
-        let blocks: Vec<Block> = sliced_shapes(&net, cfg)
+        let layers = sliced_shapes(&net, cfg)
             .into_iter()
             .enumerate()
-            .flat_map(|(li, (r, c))| frag::fragment_matrix(r, c, tile, li, 0))
+            .map(|(li, (r, c))| {
+                let mut l = crate::nets::Layer::fc(&format!("sliced{li}"), r, c);
+                l.bias = false; // shapes are exact, no implicit bias row
+                l
+            })
             .collect();
-        let bins = pack::ffd::pack(&blocks, tile, Discipline::Dense).n_bins;
+        let sliced_net = crate::nets::Network::new("resnet18-sliced", "bit-sliced WMs", layers);
+        let best = MapRequest::inline(sliced_net)
+            .tile(tile.n_row, tile.n_col)
+            .engine(crate::opt::Engine::Ffd)
+            .build()
+            .and_then(|p| p.plan())
+            .expect("bit-slicing plan")
+            .best;
         t.row(&[
             "bit-slicing".into(),
             format!("8b weights / {bits_per_cell}b cells ({} slices)", cfg.slices()),
-            bins.to_string(),
-            sig3(area.total_area_mm2(bins, tile)),
+            best.n_tiles.to_string(),
+            sig3(best.total_area_mm2),
             "§2: slices multiply tiles per layer".into(),
         ]);
     }
 
     // 2) manufacturing yield: optimum under rising defect density
-    let pts = opt::sweep(&net, &SweepConfig::square(Discipline::Dense));
+    let pts = MapRequest::zoo("resnet18")
+        .grid((6, 13), vec![1])
+        .build()
+        .and_then(|p| p.plan())
+        .expect("yield sweep plan")
+        .points;
     for d0 in [0.0f64, 0.02, 0.1, 0.3] {
         let ym = YieldModel::new(d0);
         let ranked = yield_ranked(&pts, &area, &ym);
@@ -411,7 +431,7 @@ pub fn ablation() -> Table {
     // 3) communication-aware objective (§4/§5): lambda trades relative
     //    area against relative inter-tile message count
     for lambda in [0.0f64, 1.0, 5.0] {
-        let cfg = SweepConfig::square(Discipline::Pipeline);
+        let cfg = crate::opt::SweepConfig::square(Discipline::Pipeline);
         let best = crate::opt::comm::comm_aware_optimum(&net, &cfg, lambda).unwrap();
         t.row(&[
             "comm-aware".into(),
@@ -423,18 +443,22 @@ pub fn ablation() -> Table {
     }
 
     // 4) simple-algorithm sort order (§2.1 descending vs §3 ascending text)
-    let blocks = frag::fragment_network(&net, tile);
     for (name, order) in [
         ("rows desc (§2.1)", crate::pack::SortOrder::RowsDesc),
         ("rows asc (§3 literal)", crate::pack::SortOrder::RowsAsc),
         ("unsorted", crate::pack::SortOrder::AsGiven),
     ] {
-        let p = pack::simple::pack_ordered(&blocks, tile, Discipline::Dense, order);
+        let p = MapRequest::zoo("resnet18")
+            .tile(tile.n_row, tile.n_col)
+            .sort(order)
+            .build()
+            .and_then(|p| p.plan())
+            .expect("sort-order plan");
         t.row(&[
             "sort-order".into(),
             name.into(),
-            p.n_bins.to_string(),
-            sig3(area.total_area_mm2(p.n_bins, tile)),
+            p.best.n_tiles.to_string(),
+            sig3(p.best.total_area_mm2),
             "sorting helps; direction is a wash at this size".into(),
         ]);
     }

@@ -172,6 +172,54 @@ impl Bench {
     }
 }
 
+/// Result of a [`gate_medians`] comparison.
+#[derive(Debug, Clone, Default)]
+pub struct GateReport {
+    /// one human-readable line per benchmark present in both files
+    pub compared: Vec<String>,
+    /// descriptions of benchmarks that regressed past the tolerance
+    pub regressions: Vec<String>,
+}
+
+/// Compare two `BENCH_*.json` medians documents (benchmark name -> p50 ns)
+/// and flag every shared benchmark whose current median is more than
+/// `tol_pct` percent slower than the baseline. Benchmarks present in only
+/// one file are ignored (new/retired benches don't gate), so the committed
+/// baseline only needs refreshing when names or hardware change.
+pub fn gate_medians(baseline: &crate::util::json::Json, current: &crate::util::json::Json, tol_pct: f64) -> GateReport {
+    use crate::util::json::Json;
+    let mut report = GateReport::default();
+    let (Some(base), Some(cur)) = (baseline.as_obj(), current.as_obj()) else {
+        return report;
+    };
+    for (name, old) in base.iter() {
+        let (Some(old_ns), Some(new_ns)) =
+            (old.as_f64(), cur.get(name).and_then(Json::as_f64))
+        else {
+            continue;
+        };
+        if old_ns <= 0.0 {
+            continue;
+        }
+        let delta = (new_ns - old_ns) / old_ns * 100.0;
+        report.compared.push(format!(
+            "gate  {:<44} {:>12} -> {:>12}  ({:+.1}%)",
+            name,
+            fmt_ns(old_ns),
+            fmt_ns(new_ns),
+            delta
+        ));
+        if delta > tol_pct {
+            report.regressions.push(format!(
+                "{name}: {} -> {} ({delta:+.1}% > {tol_pct}%)",
+                fmt_ns(old_ns),
+                fmt_ns(new_ns)
+            ));
+        }
+    }
+    report
+}
+
 /// Directory for `BENCH_*.json` reports: `XBARMAP_BENCH_DIR` when set, else
 /// the nearest ancestor of the working directory containing `ROADMAP.md`
 /// (the repo root — benches run from `rust/`), else the working directory.
@@ -240,6 +288,24 @@ mod tests {
         assert!(text.contains("unit/report"), "{text}");
         // second write compares against the first and overwrites cleanly
         b.write_json_report_to(&dir, "test").unwrap();
+    }
+
+    #[test]
+    fn gate_flags_only_regressions_past_tolerance() {
+        let parse = |s: &str| crate::util::json::parse(s).unwrap();
+        let base = parse(r#"{"a": 100.0, "b": 100.0, "gone": 50.0}"#);
+        let cur = parse(r#"{"a": 110.0, "b": 130.0, "new": 1.0}"#);
+        let r = gate_medians(&base, &cur, 15.0);
+        // "gone"/"new" are unshared and ignored; "a" (+10%) passes, "b"
+        // (+30%) regresses
+        assert_eq!(r.compared.len(), 2);
+        assert_eq!(r.regressions.len(), 1);
+        assert!(r.regressions[0].starts_with("b:"), "{:?}", r.regressions);
+        // speedups never gate
+        let faster = parse(r#"{"a": 50.0, "b": 60.0}"#);
+        assert!(gate_medians(&base, &faster, 15.0).regressions.is_empty());
+        // non-object documents compare nothing
+        assert!(gate_medians(&parse("[]"), &cur, 15.0).compared.is_empty());
     }
 
     #[test]

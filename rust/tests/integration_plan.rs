@@ -1,0 +1,368 @@
+//! Integration suite for the `plan` front door: the redesign must be
+//! *behavior-preserving* (planner placements byte-identical to direct
+//! engine calls for every engine) and *wire-stable* (parse -> serialize ->
+//! parse is the identity for both `MapRequest` and `MapPlan`).
+
+use xbarmap::area::AreaModel;
+use xbarmap::frag;
+use xbarmap::geom::{Placement, Tile};
+use xbarmap::ilp;
+use xbarmap::nets::{Layer, Network};
+use xbarmap::opt::{Engine, SweepPoint};
+use xbarmap::pack::{self, Discipline, SortOrder};
+use xbarmap::plan::{
+    MapPlan, MapRequest, NetworkSpec, Objective, Provenance, Replication, TileSpace,
+};
+use xbarmap::util::json;
+use xbarmap::util::prng::Rng;
+use xbarmap::util::prop::{self, Config};
+
+// large enough to prove optimality at these scales, so the warm-started
+// sweep and the cold direct solve agree on every instance
+const ILP_TEST_NODES: u64 = 200_000;
+
+fn engines() -> [Engine; 3] {
+    [Engine::Simple, Engine::Ffd, Engine::Ilp { max_nodes: ILP_TEST_NODES }]
+}
+
+/// Placements a direct (non-planner) engine call produces.
+fn direct_placements(
+    net_name: &str,
+    tile: Tile,
+    discipline: Discipline,
+    engine: Engine,
+) -> (usize, Vec<Placement>) {
+    let net = xbarmap::nets::zoo::by_name(net_name).unwrap();
+    let blocks = frag::fragment_network(&net, tile);
+    let packing = match engine {
+        Engine::Simple => pack::simple::pack(&blocks, tile, discipline),
+        Engine::Ffd => pack::ffd::pack(&blocks, tile, discipline),
+        Engine::Ilp { max_nodes } => {
+            ilp::solve_packing(
+                &blocks,
+                tile,
+                discipline,
+                ilp::Budget { max_nodes, ..Default::default() },
+            )
+            .packing
+        }
+    };
+    (packing.n_bins, packing.placements)
+}
+
+#[test]
+fn plan_placements_byte_identical_to_direct_engine_calls() {
+    // the acceptance bar: for all three engines on lenet and resnet18, the
+    // planner's placements equal the direct engine wiring it replaced
+    for (net, tile) in [("lenet", Tile::new(256, 256)), ("resnet18", Tile::new(512, 512))] {
+        for discipline in [Discipline::Dense, Discipline::Pipeline] {
+            for engine in engines() {
+                let plan = MapRequest::zoo(net)
+                    .tile(tile.n_row, tile.n_col)
+                    .discipline(discipline)
+                    .engine(engine)
+                    .placements(true)
+                    .build()
+                    .unwrap()
+                    .plan()
+                    .unwrap();
+                let (n_bins, placements) = direct_placements(net, tile, discipline, engine);
+                assert_eq!(plan.best.n_tiles, n_bins, "{net} {tile} {discipline} {engine}");
+                assert_eq!(
+                    plan.placements.as_deref(),
+                    Some(placements.as_slice()),
+                    "{net} {tile} {discipline} {engine}: placements diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn grid_plan_placements_match_direct_call_at_chosen_tile() {
+    for engine in engines() {
+        let plan = MapRequest::zoo("lenet")
+            .grid((7, 9), vec![1])
+            .discipline(Discipline::Pipeline)
+            .engine(engine)
+            .placements(true)
+            .build()
+            .unwrap()
+            .plan()
+            .unwrap();
+        // the direct call the sweep made for this point: greedy engines
+        // are hint-free; the ILP point was warm-started from its smaller
+        // neighbour in the aspect column, so replay that exact call
+        let (n_bins, placements) = match engine {
+            Engine::Ilp { max_nodes } => {
+                let net = xbarmap::nets::zoo::by_name("lenet").unwrap();
+                let blocks = frag::fragment_network(&net, plan.best.tile);
+                let hint = plan
+                    .points
+                    .iter()
+                    .position(|p| p.tile == plan.best.tile)
+                    .and_then(|i| i.checked_sub(1)) // one aspect => column stride 1
+                    .map(|prev| plan.points[prev].n_tiles);
+                let r = ilp::exact::solve_with_hint(
+                    &blocks,
+                    plan.best.tile,
+                    Discipline::Pipeline,
+                    ilp::Budget { max_nodes, ..Default::default() },
+                    hint,
+                );
+                (r.packing.n_bins, r.packing.placements)
+            }
+            _ => direct_placements("lenet", plan.best.tile, Discipline::Pipeline, engine),
+        };
+        assert_eq!(plan.best.n_tiles, n_bins, "{engine}");
+        assert_eq!(plan.placements.as_deref(), Some(placements.as_slice()), "{engine}");
+        // and in every case the placements fit within the reported count
+        let max_bin = plan.placements.as_deref().unwrap().iter().map(|p| p.bin).max().unwrap();
+        assert!(max_bin < plan.best.n_tiles, "{engine}: placements exceed reported count");
+    }
+}
+
+#[test]
+fn legacy_batched_sweep_degrades_rejected_requests_to_empty_responses() {
+    use xbarmap::coordinator::{batched_sweep_with_threads, SweepRequest};
+    use xbarmap::nets::zoo;
+    use xbarmap::opt::SweepConfig;
+    // an empty grid used to sweep into zero points; the planner rejects
+    // it, and the shim must degrade rather than panic the whole batch
+    let mut empty = SweepConfig::square(Discipline::Dense);
+    empty.aspects.clear();
+    let requests = vec![
+        SweepRequest { name: "empty".into(), net: zoo::lenet(), cfg: empty },
+        SweepRequest {
+            name: "ok".into(),
+            net: zoo::lenet(),
+            cfg: SweepConfig::square(Discipline::Dense),
+        },
+    ];
+    let out = batched_sweep_with_threads(&requests, 2);
+    assert_eq!(out.len(), 2);
+    assert_eq!(out[0].name, "empty");
+    assert!(out[0].points.is_empty() && out[0].best.is_none());
+    assert_eq!(out[1].name, "ok");
+    assert_eq!(out[1].points.len(), 8);
+}
+
+// ---- wire round-trip property tests (parse -> serialize -> parse = id) ----
+
+fn gen_network_spec(rng: &mut Rng) -> NetworkSpec {
+    if rng.chance(0.7) {
+        let name = *rng.choose(&["lenet", "alexnet", "resnet18", "resnet50", "bert"]);
+        NetworkSpec::Zoo(name.to_string())
+    } else {
+        let n_layers = rng.range(1, 4);
+        let layers = (0..n_layers)
+            .map(|i| {
+                let mut l = if rng.chance(0.5) {
+                    Layer::fc(&format!("fc{i}"), rng.range(1, 2048), rng.range(1, 2048))
+                } else {
+                    let k = rng.range(1, 7);
+                    Layer::conv(
+                        &format!("conv{i}"),
+                        rng.range(1, 64),
+                        rng.range(1, 64),
+                        k,
+                        rng.range(1, 3),
+                        rng.range(0, 3),
+                        rng.range(k, 64),
+                    )
+                };
+                l.bias = rng.chance(0.8);
+                if rng.chance(0.2) {
+                    l.reuse_override = Some(rng.range(1, 512));
+                }
+                l
+            })
+            .collect();
+        NetworkSpec::Inline(Network::new("inline-net", "prop test", layers))
+    }
+}
+
+fn gen_request(rng: &mut Rng) -> MapRequest {
+    let mut r = MapRequest::with_network(gen_network_spec(rng));
+    if rng.chance(0.5) {
+        r.id = format!("req-{}", rng.range(0, 9999));
+    }
+    r.tiles = if rng.chance(0.5) {
+        TileSpace::Fixed(Tile::new(rng.range(1, 4096), rng.range(1, 4096)))
+    } else {
+        let lo = rng.range(4, 12) as u32;
+        TileSpace::Grid {
+            row_exp: (lo, lo + rng.range(0, 4) as u32),
+            aspects: (1..=rng.range(1, 8)).collect(),
+        }
+    };
+    r.engine = match rng.range(0, 2) {
+        0 => Engine::Simple,
+        1 => Engine::Ffd,
+        _ => Engine::Ilp { max_nodes: rng.range(1, 5_000_000) as u64 },
+    };
+    r.discipline = if rng.chance(0.5) { Discipline::Dense } else { Discipline::Pipeline };
+    r.objective = *rng.choose(&[Objective::MinArea, Objective::MinTiles, Objective::MaxThroughput]);
+    r.replication = match rng.range(0, 4) {
+        0 => Replication::None,
+        1 => Replication::Balanced(rng.range(1, 256)),
+        2 => Replication::Geometric(rng.range(1, 256), rng.range(1, 8)),
+        3 => Replication::Uniform(rng.range(1, 64)),
+        _ => Replication::Explicit((0..rng.range(1, 6)).map(|_| rng.range(1, 8)).collect()),
+    };
+    r.threads = rng.range(0, 16);
+    r.include_placements = rng.chance(0.5);
+    r.sort = *rng.choose(&[SortOrder::RowsDesc, SortOrder::RowsAsc, SortOrder::AsGiven]);
+    if rng.chance(0.3) {
+        r.area = AreaModel::calibrated(
+            0.5 + rng.range(1, 400) as f64 / 100.0,
+            1 << rng.range(6, 10),
+            rng.range(5, 95) as f64 / 100.0,
+        );
+    }
+    r
+}
+
+#[test]
+fn prop_map_request_json_roundtrip_is_identity() {
+    prop::check("MapRequest wire roundtrip", Config { cases: 256, seed: 0xB0A7 }, |rng| {
+        let r = gen_request(rng);
+        let j1 = r.to_json();
+        let parsed = json::parse(&j1.dumps()).map_err(|e| format!("reparse: {e}"))?;
+        let r2 = MapRequest::from_json(&parsed).map_err(|e| format!("decode: {e}"))?;
+        if r2 != r {
+            return Err(format!("request changed across the wire:\n  {r:?}\n  {r2:?}"));
+        }
+        let j2 = r2.to_json();
+        if j1.dumps() != j2.dumps() {
+            return Err(format!("serialization not canonical:\n  {}\n  {}", j1.dumps(), j2.dumps()));
+        }
+        Ok(())
+    });
+}
+
+fn gen_point(rng: &mut Rng) -> SweepPoint {
+    SweepPoint {
+        tile: Tile::new(rng.range(1, 1 << 14), rng.range(1, 1 << 14)),
+        aspect: rng.range(0, 8),
+        n_blocks: rng.range(0, 4096),
+        n_tiles: rng.range(0, 4096),
+        n_tiles_one_to_one: rng.range(0, 4096),
+        tile_eff: rng.f64(),
+        packing_eff: rng.f64(),
+        total_area_mm2: rng.f64() * 1e4,
+        array_area_mm2: rng.f64() * 1e4,
+    }
+}
+
+fn gen_plan(rng: &mut Rng) -> MapPlan {
+    let points: Vec<SweepPoint> = (0..rng.range(1, 8)).map(|_| gen_point(rng)).collect();
+    MapPlan {
+        id: if rng.chance(0.5) { format!("plan-{}", rng.range(0, 999)) } else { String::new() },
+        network: "PropNet".to_string(),
+        discipline: if rng.chance(0.5) { Discipline::Dense } else { Discipline::Pipeline },
+        engine: match rng.range(0, 2) {
+            0 => Engine::Simple,
+            1 => Engine::Ffd,
+            _ => Engine::Ilp { max_nodes: rng.range(1, 5_000_000) as u64 },
+        },
+        objective: *rng.choose(&[
+            Objective::MinArea,
+            Objective::MinTiles,
+            Objective::MaxThroughput,
+        ]),
+        best: gen_point(rng),
+        best_per_aspect: (0..rng.range(0, 4)).map(|_| gen_point(rng)).collect(),
+        points,
+        placements: rng.chance(0.5).then(|| {
+            (0..rng.range(0, 32))
+                .map(|_| Placement {
+                    block: rng.range(0, 512),
+                    bin: rng.range(0, 64),
+                    x: rng.range(0, 4096),
+                    y: rng.range(0, 4096),
+                })
+                .collect()
+        }),
+        latency_s: rng.f64() * 1e-3,
+        throughput_per_s: rng.f64() * 1e6,
+        provenance: Provenance {
+            budget_nodes: rng.range(0, 5_000_000) as u64,
+            nodes: rng.range(0, 5_000_000) as u64,
+            optimal: rng.chance(0.5),
+            lower_bound: rng.range(0, 64),
+            warm_hits: rng.range(0, 64),
+            threads: rng.range(1, 64),
+        },
+    }
+}
+
+#[test]
+fn prop_map_plan_json_roundtrip_is_identity() {
+    prop::check("MapPlan wire roundtrip", Config { cases: 128, seed: 0x504C_414E }, |rng| {
+        let p = gen_plan(rng);
+        let j1 = p.to_json();
+        let parsed = json::parse(&j1.dumps()).map_err(|e| format!("reparse: {e}"))?;
+        let p2 = MapPlan::from_json(&parsed).map_err(|e| format!("decode: {e}"))?;
+        if p2 != p {
+            return Err("plan changed across the wire".to_string());
+        }
+        if p2.to_json().dumps() != j1.dumps() {
+            return Err("plan serialization not canonical".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn real_plans_roundtrip_for_all_engines() {
+    for engine in engines() {
+        let plan = MapRequest::zoo("lenet")
+            .grid((7, 9), vec![1, 2])
+            .engine(engine)
+            .discipline(Discipline::Pipeline)
+            .placements(true)
+            .id("rt")
+            .build()
+            .unwrap()
+            .plan()
+            .unwrap();
+        let wire = plan.to_json().dumps();
+        let back = MapPlan::from_json(&json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, plan, "{engine}");
+    }
+}
+
+#[test]
+fn batched_sweep_still_matches_serial_through_the_planner() {
+    // the legacy coordinator entry point is now a shim over
+    // plan::serve_batch; its contract (request-ordered, byte-identical to
+    // a serial sweep) must survive the rewiring
+    use xbarmap::coordinator::{batched_sweep_with_threads, SweepRequest};
+    use xbarmap::nets::zoo;
+    use xbarmap::opt::{self, SweepConfig};
+    let requests = vec![
+        SweepRequest {
+            name: "lenet/dense".into(),
+            net: zoo::lenet(),
+            cfg: SweepConfig::square(Discipline::Dense),
+        },
+        SweepRequest {
+            name: "lenet/pipeline".into(),
+            net: zoo::lenet(),
+            cfg: SweepConfig::paper_default(Discipline::Pipeline),
+        },
+    ];
+    let batched = batched_sweep_with_threads(&requests, 2);
+    assert_eq!(batched.len(), 2);
+    for (resp, req) in batched.iter().zip(&requests) {
+        assert_eq!(resp.name, req.name);
+        let direct = opt::sweep_serial(&req.net, &req.cfg);
+        assert_eq!(resp.points.len(), direct.len());
+        for (a, b) in resp.points.iter().zip(&direct) {
+            assert_eq!((a.tile, a.n_tiles), (b.tile, b.n_tiles));
+            assert_eq!(a.total_area_mm2.to_bits(), b.total_area_mm2.to_bits());
+        }
+        assert_eq!(resp.best.as_ref(), opt::optimum(&direct).as_ref());
+    }
+}
