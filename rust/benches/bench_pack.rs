@@ -44,5 +44,39 @@ fn main() {
     b.run("simple/demo13/dense", || pack::simple::pack(&demo, tile, Discipline::Dense).n_bins);
     b.run("ffd/demo13/pipeline", || pack::ffd::pack(&demo, tile, Discipline::Pipeline).n_bins);
 
+    // counted kernel vs per-block count-only engine on a block-heavy
+    // workload (BERT layer S=64 replicated x64 at 64x64 tiles: ~10^5
+    // blocks, ~12 shape classes). Both rows count bins only — this is the
+    // inner loop of one §3.1 sweep point.
+    let bert = zoo::bert_layer(64);
+    let reps = vec![64usize; bert.n_layers()];
+    let small = Tile::new(64, 64);
+    let classes = frag::shape_classes(&bert, small, &reps);
+    let mut counted_scratch = pack::counted::CountedScratch::new();
+    b.run("counted/bert-x64/T(64,64)/pipeline", || {
+        pack::counted::simple_bins(
+            &classes,
+            small,
+            Discipline::Pipeline,
+            pack::SortOrder::RowsDesc,
+            &mut counted_scratch,
+        )
+    });
+    let blocks = frag::fragment_network_replicated(&bert, small, &reps);
+    let mut pack_scratch = pack::PackScratch::new();
+    b.run("per-block/bert-x64/T(64,64)/pipeline", || {
+        pack::simple::pack_into(
+            &blocks,
+            small,
+            Discipline::Pipeline,
+            pack::SortOrder::RowsDesc,
+            &mut pack_scratch,
+        )
+    });
+
     b.emit_jsonl();
+    match b.write_json_report("pack") {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("BENCH_pack.json not written: {e}"),
+    }
 }

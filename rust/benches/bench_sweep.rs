@@ -64,6 +64,32 @@ fn main() {
         .unwrap();
     b.run("sweep/resnet50/pipeline/square", || big_plan.plan().unwrap().points.len());
 
+    // counted-kernel headline: a block-heavy config — one BERT layer
+    // (S=64) replicated x64 fragments into ~10^5 blocks at 64x64 tiles,
+    // but only ~2 shape classes per layer. The materialized row is the
+    // per-block reference loop; the counted row is the same sweep through
+    // the plan front door (shape-class census + closed-form runs), pinned
+    // to ONE worker so the ratio isolates the kernel, not thread
+    // parallelism (both rows single-threaded).
+    let bert = zoo::bert_layer(64);
+    let bert_cfg = SweepConfig {
+        replication: Some(rapa::plan_uniform(&bert, 64)),
+        ..SweepConfig::square(Discipline::Pipeline)
+    };
+    b.run("sweep/bert-x64/pipeline/square(8 sizes)/materialized", || {
+        opt::sweep_serial(&bert, &bert_cfg).len()
+    });
+    let bert_plan = MapRequest::zoo("bert")
+        .grid((6, 13), vec![1])
+        .discipline(Discipline::Pipeline)
+        .replication(Replication::Uniform(64))
+        .threads(1)
+        .build()
+        .unwrap();
+    b.run("sweep/bert-x64/pipeline/square(8 sizes)/counted", || {
+        bert_plan.plan().unwrap().points.len()
+    });
+
     // headline: wall-clock speedup of the parallel engine on the 64-config
     // ResNet-18 sweep (acceptance target: >= 2x on a multi-core host)
     let p50 = |name: &str| {
@@ -76,6 +102,12 @@ fn main() {
     let speedup = p50("sweep/resnet18/pipeline/full(64 configs)/serial")
         / p50("sweep/resnet18/pipeline/full(64 configs)/parallel");
     println!("parallel speedup (64-config pipeline sweep): {speedup:.2}x");
+    // counted-path headline — both rows single-threaded, so this is the
+    // kernel's own win (acceptance target: >= 3x median on the block-heavy
+    // config; in practice orders of magnitude)
+    let counted_speedup = p50("sweep/bert-x64/pipeline/square(8 sizes)/materialized")
+        / p50("sweep/bert-x64/pipeline/square(8 sizes)/counted");
+    println!("counted speedup (BERT x64 square sweep): {counted_speedup:.2}x");
 
     b.emit_jsonl();
     match b.write_json_report("sweep") {

@@ -44,6 +44,136 @@ pub fn classify(rows: usize, cols: usize, tile: Tile) -> BlockKind {
     }
 }
 
+/// One shape class of a fragmentation: `count` blocks of identical
+/// `rows x cols` dimensions from one layer (all RAPA replicas merged),
+/// with provenance back into the layer's fragmentation grid.
+///
+/// Eq. 5 cuts a layer into a `gr x gc` grid whose blocks take at most
+/// **four** distinct shapes (the §2.1 kinds of Fig. 4): the full interior,
+/// a right-edge column of row-full blocks, a bottom-edge row of col-full
+/// blocks, and one sparse corner. [`shape_classes_into`] emits exactly
+/// those classes — at most `4 x n_layers` of them, computed in closed form
+/// from the layer shapes without materializing a single [`Block`] — and the
+/// counted packing kernels ([`crate::pack::counted`]) price a tile
+/// configuration from them alone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShapeClass {
+    /// word lines per block, 1..=n_row
+    pub rows: usize,
+    /// bit lines per block, 1..=n_col
+    pub cols: usize,
+    /// §2.1 kind relative to the fragmenting tile (unique per layer class)
+    pub kind: BlockKind,
+    /// total blocks in this class: grid span x `replicas`
+    pub count: usize,
+    /// index of the source network layer
+    pub layer: usize,
+    /// layer replicas (RAPA) merged into `count`
+    pub replicas: usize,
+    /// half-open range of fragmentation-grid row indices covered
+    pub grid_rows: (usize, usize),
+    /// half-open range of fragmentation-grid column indices covered
+    pub grid_cols: (usize, usize),
+}
+
+impl ShapeClass {
+    /// Blocks of this class per replica (its grid-range area).
+    pub fn per_replica(&self) -> usize {
+        (self.grid_rows.1 - self.grid_rows.0) * (self.grid_cols.1 - self.grid_cols.0)
+    }
+
+    /// Weights stored across all blocks of the class.
+    pub fn weights(&self) -> usize {
+        self.count * self.rows * self.cols
+    }
+}
+
+/// Shape-class census of a replicated network fragmentation — the counted
+/// equivalent of [`fragment_network_replicated_into`], O(layers) instead of
+/// O(blocks). Classes come out grouped by layer in layer order (at most
+/// four per layer), `out` is cleared first (capacity retained).
+pub fn shape_classes_into(
+    net: &Network,
+    tile: Tile,
+    replication: &[usize],
+    out: &mut Vec<ShapeClass>,
+) {
+    assert_eq!(replication.len(), net.n_layers(), "replication arity");
+    out.clear();
+    for (li, layer) in net.layers.iter().enumerate() {
+        let (m_inp, m_out) = layer.matrix_shape();
+        assert!(m_inp > 0 && m_out > 0, "empty matrix {m_inp}x{m_out}");
+        let replicas = replication[li].max(1);
+        let gr = m_inp.div_ceil(tile.n_row);
+        let gc = m_out.div_ceil(tile.n_col);
+        let rem_r = m_inp % tile.n_row; // 0 = rows divide exactly
+        let rem_c = m_out % tile.n_col;
+        let fr = if rem_r == 0 { gr } else { gr - 1 }; // full-height grid rows
+        let fc = if rem_c == 0 { gc } else { gc - 1 }; // full-width grid cols
+        let mut push = |rows: usize, cols: usize, grid_rows: (usize, usize), grid_cols: (usize, usize)| {
+            out.push(ShapeClass {
+                rows,
+                cols,
+                kind: classify(rows, cols, tile),
+                count: (grid_rows.1 - grid_rows.0) * (grid_cols.1 - grid_cols.0) * replicas,
+                layer: li,
+                replicas,
+                grid_rows,
+                grid_cols,
+            });
+        };
+        if fr > 0 && fc > 0 {
+            push(tile.n_row, tile.n_col, (0, fr), (0, fc));
+        }
+        if fr > 0 && rem_c > 0 {
+            push(tile.n_row, rem_c, (0, fr), (fc, gc));
+        }
+        if rem_r > 0 && fc > 0 {
+            push(rem_r, tile.n_col, (fr, gr), (0, fc));
+        }
+        if rem_r > 0 && rem_c > 0 {
+            push(rem_r, rem_c, (fr, gr), (fc, gc));
+        }
+    }
+}
+
+/// Owned-allocation convenience form of [`shape_classes_into`].
+pub fn shape_classes(net: &Network, tile: Tile, replication: &[usize]) -> Vec<ShapeClass> {
+    let mut out = Vec::new();
+    shape_classes_into(net, tile, replication, &mut out);
+    out
+}
+
+/// Total blocks across a class list (== the materialized block count).
+pub fn total_class_blocks(classes: &[ShapeClass]) -> usize {
+    classes.iter().map(|c| c.count).sum()
+}
+
+/// Total weights across a class list (== [`total_block_weights`] of the
+/// materialized blocks — the same integer, so efficiencies derived from it
+/// are bit-identical).
+pub fn total_class_weights(classes: &[ShapeClass]) -> usize {
+    classes.iter().map(ShapeClass::weights).sum()
+}
+
+impl Census {
+    /// [`Census::of`] computed from a shape-class census instead of a block
+    /// list — identical counts, no blocks materialized.
+    pub fn of_classes(classes: &[ShapeClass]) -> Census {
+        let mut c = Census::default();
+        for s in classes {
+            c.total += s.count;
+            match s.kind {
+                BlockKind::Full => c.full += s.count,
+                BlockKind::RowFull => c.row_full += s.count,
+                BlockKind::ColFull => c.col_full += s.count,
+                BlockKind::Sparse => c.sparse += s.count,
+            }
+        }
+        c
+    }
+}
+
 /// Fragment a single logical matrix `(m_inp, m_out)` for layer `layer`,
 /// replica `replica`, onto tiles of dimension `tile`.
 pub fn fragment_matrix(
@@ -274,5 +404,84 @@ mod tests {
     #[should_panic(expected = "empty matrix")]
     fn zero_dim_rejected() {
         fragment_matrix(0, 5, T, 0, 0);
+    }
+
+    /// Reference census computed the slow way: materialize and bucket.
+    fn classes_via_blocks(net: &crate::nets::Network, tile: Tile, reps: &[usize]) -> Census {
+        Census::of(&fragment_network_replicated(net, tile, reps))
+    }
+
+    #[test]
+    fn shape_classes_match_materialized_census_across_zoo() {
+        for net in [zoo::lenet(), zoo::alexnet(), zoo::resnet18(), zoo::bert_layer(64)] {
+            let ones = vec![1usize; net.n_layers()];
+            for tile in [Tile::new(64, 64), Tile::new(256, 256), Tile::new(2048, 512)] {
+                let classes = shape_classes(&net, tile, &ones);
+                assert!(classes.len() <= 4 * net.n_layers(), "{}: {} classes", net.name, classes.len());
+                assert_eq!(
+                    Census::of_classes(&classes),
+                    classes_via_blocks(&net, tile, &ones),
+                    "{} {tile}",
+                    net.name
+                );
+                let blocks = fragment_network(&net, tile);
+                assert_eq!(total_class_blocks(&classes), blocks.len());
+                assert_eq!(total_class_weights(&classes), total_block_weights(&blocks));
+            }
+        }
+    }
+
+    #[test]
+    fn shape_classes_respect_replication() {
+        let net = zoo::lenet();
+        let reps = vec![4, 2, 1, 3, 1];
+        let tile = Tile::new(256, 256);
+        let classes = shape_classes(&net, tile, &reps);
+        assert_eq!(Census::of_classes(&classes), classes_via_blocks(&net, tile, &reps));
+        assert_eq!(
+            total_class_weights(&classes),
+            total_block_weights(&fragment_network_replicated(&net, tile, &reps))
+        );
+        // replicas multiply counts, and per-replica spans stay grid-exact
+        for c in &classes {
+            assert_eq!(c.count, c.per_replica() * c.replicas);
+            assert_eq!(c.replicas, reps[c.layer].max(1));
+        }
+    }
+
+    #[test]
+    fn shape_class_kinds_are_unique_per_layer() {
+        // at most one class of each §2.1 kind per layer — the as-given
+        // run reconstruction in pack::counted relies on this
+        let net = zoo::resnet18();
+        let ones = vec![1usize; net.n_layers()];
+        for tile in [Tile::new(64, 64), Tile::new(512, 512), Tile::new(8192, 8192)] {
+            let classes = shape_classes(&net, tile, &ones);
+            for li in 0..net.n_layers() {
+                let kinds: Vec<BlockKind> =
+                    classes.iter().filter(|c| c.layer == li).map(|c| c.kind).collect();
+                let mut dedup = kinds.clone();
+                dedup.dedup();
+                assert_eq!(kinds.len(), dedup.len(), "layer {li} at {tile}: {kinds:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn shape_classes_exact_fit_is_one_full_class() {
+        let net = crate::nets::Network::new(
+            "exact",
+            "test",
+            vec![{
+                let mut l = crate::nets::Layer::fc("fc", 256, 256);
+                l.bias = false; // 256x256 exactly
+                l
+            }],
+        );
+        let classes = shape_classes(&net, T, &[1]);
+        assert_eq!(classes.len(), 1);
+        assert_eq!(classes[0].kind, BlockKind::Full);
+        assert_eq!(classes[0].count, 1);
+        assert_eq!(classes[0].grid_rows, (0, 1));
     }
 }

@@ -15,8 +15,9 @@
 //! configuration so grid points warm-start instead of solving cold
 //! (EXPERIMENTS.md §Perf #3).
 
+use crate::frag::{self, ShapeClass};
 use crate::geom::{Block, Placement, Tile};
-use crate::pack::{ffd, simple, Discipline, PackScratch, Packing, SortOrder};
+use crate::pack::{counted, ffd, simple, Discipline, PackScratch, Packing, SortOrder};
 
 /// Node budget for the exact search.
 #[derive(Debug, Clone, Copy)]
@@ -76,6 +77,28 @@ pub fn lower_bound(blocks: &[Block], tile: Tile, discipline: Discipline) -> usiz
     }
 }
 
+/// [`lower_bound`] computed from a shape-class census — the same integer
+/// (the bounds are sums over blocks, and the census carries exact counts),
+/// in O(classes) with no blocks materialized.
+pub fn lower_bound_classes(classes: &[ShapeClass], tile: Tile, discipline: Discipline) -> usize {
+    if frag::total_class_blocks(classes) == 0 {
+        return 0;
+    }
+    let area: usize = classes.iter().map(ShapeClass::weights).sum();
+    let lb_area = area.div_ceil(tile.capacity());
+    match discipline {
+        Discipline::Dense => lb_area.max(1),
+        Discipline::Pipeline => {
+            let rows: usize = classes.iter().map(|c| c.count * c.rows).sum();
+            let cols: usize = classes.iter().map(|c| c.count * c.cols).sum();
+            lb_area
+                .max(rows.div_ceil(tile.n_row))
+                .max(cols.div_ceil(tile.n_col))
+                .max(1)
+        }
+    }
+}
+
 /// Solve to optimality or budget exhaustion, warm-started with the better
 /// of the simple (next-fit) and FFD packings.
 pub fn solve(blocks: &[Block], tile: Tile, discipline: Discipline, budget: Budget) -> ExactResult {
@@ -108,7 +131,7 @@ pub fn solve_with_hint(
     }
     match discipline {
         Discipline::Pipeline => {
-            let s = pipeline_search(blocks, tile, budget.max_nodes, incumbent.n_bins, lb, hint);
+            let s = pipeline_search(blocks, tile, budget.max_nodes, incumbent.n_bins, lb, hint, 0);
             let (packing, optimal) = match s.assign {
                 Some(a) => {
                     let p = decode_pipeline(blocks, &s.order, tile, &a);
@@ -120,7 +143,7 @@ pub fn solve_with_hint(
             ExactResult { packing, lower_bound: lb, optimal, nodes: s.nodes }
         }
         Discipline::Dense => {
-            let s = dense_search(blocks, tile, budget.max_nodes, incumbent.n_bins, lb, hint);
+            let s = dense_search(blocks, tile, budget.max_nodes, incumbent.n_bins, lb, hint, 0);
             let (packing, optimal) = match s.assign {
                 Some(a) => {
                     let p = decode_dense(blocks, &s.order, tile, &a);
@@ -165,16 +188,69 @@ pub fn solve_bins(
     if blocks.len() > budget.max_items {
         return BinsResult { n_bins: incumbent, lower_bound: lb, optimal: false, nodes: 0 };
     }
-    let s = match discipline {
-        Discipline::Pipeline => {
-            let s = pipeline_search(blocks, tile, budget.max_nodes, incumbent, lb, hint);
-            SearchSummary { found: s.assign.is_some(), bins: s.bins, nodes: s.nodes, proven: s.proven }
-        }
-        Discipline::Dense => {
-            let s = dense_search(blocks, tile, budget.max_nodes, incumbent, lb, hint);
-            SearchSummary { found: s.assign.is_some(), bins: s.bins, nodes: s.nodes, proven: s.proven }
-        }
-    };
+    let s = search_bins(blocks, tile, discipline, budget.max_nodes, incumbent, lb, hint, 0);
+    if s.found {
+        BinsResult { n_bins: s.bins, lower_bound: lb, optimal: s.proven || s.bins == lb, nodes: s.nodes }
+    } else {
+        BinsResult { n_bins: incumbent, lower_bound: lb, optimal: s.proven, nodes: s.nodes }
+    }
+}
+
+/// Count-only solve straight from a shape-class census — the fully counted
+/// ILP path the sweep uses. The greedy incumbents and the lower bound are
+/// computed from the classes alone (O(classes), see
+/// [`crate::pack::counted`]); blocks are materialized via the `materialize`
+/// callback **only** when an actual tree search is warranted (incumbent
+/// above the bound and the instance within `budget.max_items`).
+///
+/// Counted preprocessing before the search:
+/// * **Full blocks are pinned one-per-tile** — a block filling the tile in
+///   both dimensions shares it with nothing, so the search runs over the
+///   remaining blocks only, against `pinned` saturated (inert) bins. The
+///   per-block reference descends its Full items as a branchless chain of
+///   one node each; that node charge is replayed here per deepening pass,
+///   so node budgets (and therefore results) stay **bit-identical** to
+///   [`solve_bins`] on the materialized set.
+/// * identical-block symmetry breaking inside the search itself (shared
+///   with the per-block path — see `pipe_dfs`/`dense_dfs`).
+///
+/// `blocks` is a caller scratch buffer; on return it holds the non-Full
+/// remainder of the materialized set (or is untouched when no search ran).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_bins_census(
+    classes: &[ShapeClass],
+    tile: Tile,
+    discipline: Discipline,
+    budget: Budget,
+    hint: Option<usize>,
+    blocks: &mut Vec<Block>,
+    materialize: impl FnOnce(&mut Vec<Block>),
+    counted_scratch: &mut counted::CountedScratch,
+) -> BinsResult {
+    let total = frag::total_class_blocks(classes);
+    if total == 0 {
+        return BinsResult { n_bins: 0, lower_bound: 0, optimal: true, nodes: 0 };
+    }
+    let lb = lower_bound_classes(classes, tile, discipline);
+    let nf = counted::simple_bins(classes, tile, discipline, SortOrder::RowsDesc, counted_scratch);
+    let ff = counted::ffd_bins(classes, tile, discipline, counted_scratch);
+    let incumbent = ff.min(nf);
+    if incumbent <= lb {
+        return BinsResult { n_bins: incumbent, lower_bound: lb, optimal: true, nodes: 0 };
+    }
+    if total > budget.max_items {
+        return BinsResult { n_bins: incumbent, lower_bound: lb, optimal: false, nodes: 0 };
+    }
+    let pinned: usize = classes
+        .iter()
+        .filter(|c| c.rows == tile.n_row && c.cols == tile.n_col)
+        .map(|c| c.count)
+        .sum();
+    materialize(blocks);
+    debug_assert_eq!(blocks.len(), total, "materialize() must produce the censused blocks");
+    blocks.retain(|b| !(b.rows == tile.n_row && b.cols == tile.n_col));
+    debug_assert_eq!(blocks.len(), total - pinned);
+    let s = search_bins(blocks, tile, discipline, budget.max_nodes, incumbent, lb, hint, pinned);
     if s.found {
         BinsResult { n_bins: s.bins, lower_bound: lb, optimal: s.proven || s.bins == lb, nodes: s.nodes }
     } else {
@@ -187,6 +263,32 @@ struct SearchSummary {
     bins: usize,
     nodes: u64,
     proven: bool,
+}
+
+/// Dispatch to the discipline's branch & bound, count-only form. `pinned`
+/// Full blocks are represented as saturated bins the search never touches
+/// (pass 0 when `blocks` is the complete set).
+#[allow(clippy::too_many_arguments)]
+fn search_bins(
+    blocks: &[Block],
+    tile: Tile,
+    discipline: Discipline,
+    max_nodes: u64,
+    incumbent: usize,
+    lb: usize,
+    hint: Option<usize>,
+    pinned: usize,
+) -> SearchSummary {
+    match discipline {
+        Discipline::Pipeline => {
+            let s = pipeline_search(blocks, tile, max_nodes, incumbent, lb, hint, pinned);
+            SearchSummary { found: s.assign.is_some(), bins: s.bins, nodes: s.nodes, proven: s.proven }
+        }
+        Discipline::Dense => {
+            let s = dense_search(blocks, tile, max_nodes, incumbent, lb, hint, pinned);
+            SearchSummary { found: s.assign.is_some(), bins: s.bins, nodes: s.nodes, proven: s.proven }
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -219,6 +321,10 @@ struct PipeCtx<'a> {
     suffix_rows: Vec<usize>,
     suffix_cols: Vec<usize>,
     exhausted: bool,
+    /// saturated bins pinned outside the search (one per excluded Full
+    /// block); they hold no slack and fit nothing, so only the bin-count
+    /// offset remains
+    pinned: usize,
 }
 
 impl PipeCtx<'_> {
@@ -239,6 +345,7 @@ fn pipeline_search(
     incumbent_bins: usize,
     lb: usize,
     hint: Option<usize>,
+    pinned: usize,
 ) -> PipeSearch {
     let mut order: Vec<u32> = (0..blocks.len() as u32).collect();
     order.sort_by(|&ia, &ib| {
@@ -269,6 +376,7 @@ fn pipeline_search(
         suffix_rows,
         suffix_cols,
         exhausted: false,
+        pinned,
     };
     let mut bins_rows: Vec<usize> = Vec::new();
     let mut bins_cols: Vec<usize> = Vec::new();
@@ -297,7 +405,20 @@ fn pipeline_search(
         bins_rows.clear();
         bins_cols.clear();
         assign.fill(usize::MAX);
-        pipe_dfs(&mut ctx, 0, &mut bins_rows, &mut bins_cols, &mut assign);
+        // replay the branchless descent through the pinned Full blocks (one
+        // node each, every pass) so budgets behave exactly as if they were
+        // search items — lb >= pinned guarantees the per-block search never
+        // prunes inside that chain
+        for _ in 0..ctx.pinned {
+            if ctx.nodes >= ctx.budget {
+                ctx.exhausted = true;
+                break;
+            }
+            ctx.nodes += 1;
+        }
+        if !ctx.exhausted {
+            pipe_dfs(&mut ctx, 0, &mut bins_rows, &mut bins_cols, &mut assign);
+        }
         if ctx.best_assign.is_some() || ctx.exhausted || target >= incumbent_bins {
             break;
         }
@@ -321,7 +442,7 @@ fn pipe_dfs(
         return;
     }
     ctx.nodes += 1;
-    let used = bins_rows.len();
+    let used = ctx.pinned + bins_rows.len();
     if i == ctx.n_items() {
         if used < ctx.best_bins {
             ctx.best_bins = used;
@@ -332,7 +453,8 @@ fn pipe_dfs(
     if used >= ctx.best_bins {
         return;
     }
-    // bound: remaining demand minus slack in open bins
+    // bound: remaining demand minus slack in open bins (pinned bins are
+    // saturated — zero slack by construction)
     let slack_rows: usize = bins_rows.iter().map(|&r| ctx.tile.n_row - r).sum();
     let slack_cols: usize = bins_cols.iter().map(|&c| ctx.tile.n_col - c).sum();
     let need_rows = ctx.suffix_rows[i].saturating_sub(slack_rows);
@@ -345,9 +467,19 @@ fn pipe_dfs(
     }
 
     let it = ctx.item(i);
+    // identical-block symmetry breaking: a block identical to its
+    // predecessor in the sorted order never goes in an earlier bin — any
+    // solution permutes (swap the two interchangeable blocks) into this
+    // canonical form, so the restriction is loss-free
+    let min_bin = if i > 0 {
+        let prev = ctx.item(i - 1);
+        if prev.rows == it.rows && prev.cols == it.cols { assign[i - 1] } else { 0 }
+    } else {
+        0
+    };
     // try open bins, skipping bins with identical residual capacity
     let mut tried: Vec<(usize, usize)> = Vec::new();
-    for b in 0..used {
+    for b in min_bin..bins_rows.len() {
         let key = (bins_rows[b], bins_cols[b]);
         if tried.contains(&key) {
             continue;
@@ -368,9 +500,9 @@ fn pipe_dfs(
     }
     // open a new bin (symmetry: the new bin is always the next index)
     if used + 1 <= ctx.best_bins - 1 {
+        assign[i] = bins_rows.len();
         bins_rows.push(it.rows);
         bins_cols.push(it.cols);
-        assign[i] = used;
         pipe_dfs(ctx, i + 1, bins_rows, bins_cols, assign);
         assign[i] = usize::MAX;
         bins_rows.pop();
@@ -435,6 +567,8 @@ struct DenseCtx<'a> {
     lb: usize,
     suffix_area: Vec<usize>,
     exhausted: bool,
+    /// saturated bins pinned outside the search (see [`PipeCtx::pinned`])
+    pinned: usize,
 }
 
 impl DenseCtx<'_> {
@@ -455,6 +589,7 @@ fn dense_search(
     incumbent_bins: usize,
     lb: usize,
     hint: Option<usize>,
+    pinned: usize,
 ) -> DenseSearch {
     let mut order: Vec<u32> = (0..blocks.len() as u32).collect();
     order.sort_by(|&ia, &ib| {
@@ -481,6 +616,7 @@ fn dense_search(
         lb,
         suffix_area,
         exhausted: false,
+        pinned,
     };
     let mut bins: Vec<DBin> = Vec::new();
     let mut assign = vec![(usize::MAX, usize::MAX); n];
@@ -494,7 +630,18 @@ fn dense_search(
         ctx.exhausted = false;
         bins.clear();
         assign.fill((usize::MAX, usize::MAX));
-        dense_dfs(&mut ctx, 0, &mut bins, &mut assign);
+        // replay the pinned Full blocks' branchless node charge (see
+        // pipeline_search)
+        for _ in 0..ctx.pinned {
+            if ctx.nodes >= ctx.budget {
+                ctx.exhausted = true;
+                break;
+            }
+            ctx.nodes += 1;
+        }
+        if !ctx.exhausted {
+            dense_dfs(&mut ctx, 0, &mut bins, &mut assign);
+        }
         if ctx.best_assign.is_some() || ctx.exhausted || target >= incumbent_bins {
             break;
         }
@@ -517,7 +664,7 @@ fn dense_dfs(
         return;
     }
     ctx.nodes += 1;
-    let used = bins.len();
+    let used = ctx.pinned + bins.len();
     if i == ctx.n_items() {
         if used < ctx.best_bins {
             ctx.best_bins = used;
@@ -528,7 +675,8 @@ fn dense_dfs(
     if used >= ctx.best_bins {
         return;
     }
-    // area bound: free space in open bins (shelf leftovers + unopened cols)
+    // area bound: free space in open bins (shelf leftovers + unopened
+    // cols); pinned bins are packed solid and contribute none
     let free: usize = bins
         .iter()
         .map(|b| {
@@ -546,10 +694,20 @@ fn dense_dfs(
     }
 
     let it = ctx.item(i);
+    // identical-block symmetry breaking (see pipe_dfs): a block identical
+    // to its predecessor never takes a lexicographically earlier
+    // (bin, shelf) slot
+    let (min_b, min_s) = if i > 0 {
+        let prev = ctx.item(i - 1);
+        if prev.rows == it.rows && prev.cols == it.cols { assign[i - 1] } else { (0, 0) }
+    } else {
+        (0, 0)
+    };
     // 1) join an existing shelf (item cols <= shelf width by sort order)
     let mut tried_shelves: Vec<(usize, usize)> = Vec::new();
-    for b in 0..used {
-        for s in 0..bins[b].shelves.len() {
+    for b in min_b..bins.len() {
+        let s_lo = if b == min_b { min_s } else { 0 };
+        for s in s_lo..bins[b].shelves.len() {
             let sh = &bins[b].shelves[s];
             let key = (sh.width, sh.fill);
             if sh.fill + it.rows > ctx.tile.n_row || it.cols > sh.width {
@@ -569,9 +727,10 @@ fn dense_dfs(
             }
         }
     }
-    // 2) open a new shelf in an existing bin
+    // 2) open a new shelf in an existing bin (slot (b, shelves.len()) is
+    //    always lexicographically >= the predecessor's for b >= min_b)
     let mut tried_bins: Vec<usize> = Vec::new();
-    for b in 0..used {
+    for b in min_b..bins.len() {
         let key = bins[b].col_used;
         if bins[b].col_used + it.cols > ctx.tile.n_col || tried_bins.contains(&key) {
             continue;
@@ -591,11 +750,11 @@ fn dense_dfs(
     }
     // 3) open a new bin
     if used + 1 <= ctx.best_bins - 1 {
+        assign[i] = (bins.len(), 0);
         bins.push(DBin {
             col_used: it.cols,
             shelves: vec![Shelf { width: it.cols, fill: it.rows, x: 0 }],
         });
-        assign[i] = (used, 0);
         dense_dfs(ctx, i + 1, bins, assign);
         assign[i] = (usize::MAX, usize::MAX);
         bins.pop();
@@ -773,6 +932,101 @@ mod tests {
                 solve_with_hint(&items, t, d, Budget::default(), Some(cold.packing.n_bins));
             assert_eq!(tight.packing.n_bins, cold.packing.n_bins, "{d} tight");
         }
+    }
+
+    #[test]
+    fn solve_bins_census_matches_per_block_solver() {
+        use crate::nets::zoo;
+        use crate::nets::{Layer, Network};
+        let mut pscratch = PackScratch::default();
+        let mut cscratch = counted::CountedScratch::new();
+        let mut buf = Vec::new();
+        // lenet exercises the no-Full-blocks case; the inline net fragments
+        // into five Full blocks at 128x128, so the pinned search path (and
+        // its node-charge replay) is exercised under the tight budget too
+        let nets = vec![
+            (zoo::lenet(), vec![Tile::new(128, 128), Tile::new(256, 256), Tile::new(512, 512)]),
+            (
+                Network::new(
+                    "full-heavy",
+                    "test",
+                    vec![Layer::fc("a", 300, 300), Layer::fc("b", 200, 150)],
+                ),
+                vec![Tile::new(128, 128)],
+            ),
+        ];
+        for (net, tiles) in nets {
+            let ones = vec![1usize; net.n_layers()];
+            for tile in tiles {
+                let classes = frag::shape_classes(&net, tile, &ones);
+                let blocks = frag::fragment_network(&net, tile);
+            for d in [Discipline::Dense, Discipline::Pipeline] {
+                for hint in [None, Some(1), Some(usize::MAX)] {
+                    // a tight budget exercises exhaustion parity: the pinned
+                    // search must stop at the same point the per-block
+                    // search (which descends its Full items) would
+                    for max_nodes in [200u64, 50_000] {
+                        let budget = Budget { max_nodes, ..Default::default() };
+                        let per_block = solve_bins(&blocks, tile, d, budget, hint, &mut pscratch);
+                        let census = solve_bins_census(
+                            &classes,
+                            tile,
+                            d,
+                            budget,
+                            hint,
+                            &mut buf,
+                            |out| {
+                                frag::fragment_network_replicated_into(&net, tile, &ones, out)
+                            },
+                            &mut cscratch,
+                        );
+                        let what = format!("{tile} {d} {hint:?} n{max_nodes}");
+                        assert_eq!(census.n_bins, per_block.n_bins, "{what}: bins");
+                        assert_eq!(census.lower_bound, per_block.lower_bound, "{what}: lb");
+                        assert_eq!(census.optimal, per_block.optimal, "{what}: optimal");
+                        assert_eq!(census.nodes, per_block.nodes, "{what}: nodes");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn symmetry_broken_search_still_proves_identical_block_optima() {
+        // five identical 300x300 blocks in a 512x512 tile: one per bin in
+        // both disciplines, strictly above the area bound, so the search
+        // must run (greedy == 5 > lb) and prove 5 optimal
+        let items: Vec<Block> = (0..5).map(|i| blk(300, 300, i)).collect();
+        let t = Tile::new(512, 512);
+        for d in [Discipline::Dense, Discipline::Pipeline] {
+            let r = solve(&items, t, d, Budget::default());
+            validate(&r.packing).unwrap();
+            assert_eq!(r.packing.n_bins, 5, "{d}");
+            assert!(r.optimal, "{d}");
+            assert!(r.nodes > 0, "{d}: search must actually run");
+        }
+    }
+
+    #[test]
+    fn lower_bound_classes_matches_block_lower_bound() {
+        use crate::nets::zoo;
+        for net in [zoo::lenet(), zoo::resnet18()] {
+            let ones = vec![1usize; net.n_layers()];
+            for tile in [Tile::new(64, 64), Tile::new(256, 256), Tile::new(4096, 512)] {
+                let classes = frag::shape_classes(&net, tile, &ones);
+                let blocks = frag::fragment_network(&net, tile);
+                for d in [Discipline::Dense, Discipline::Pipeline] {
+                    assert_eq!(
+                        lower_bound_classes(&classes, tile, d),
+                        lower_bound(&blocks, tile, d),
+                        "{} {tile} {d}",
+                        net.name
+                    );
+                }
+            }
+        }
+        assert_eq!(lower_bound_classes(&[], Tile::new(64, 64), Discipline::Dense), 0);
     }
 
     #[test]

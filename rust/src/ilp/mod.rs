@@ -20,7 +20,7 @@ pub mod simplex;
 use crate::geom::{Block, Tile};
 use crate::pack::{Discipline, PackScratch};
 
-pub use exact::{BinsResult, Budget, ExactResult};
+pub use exact::{lower_bound_classes, solve_bins_census, BinsResult, Budget, ExactResult};
 
 /// Solve a packing instance exactly (or best-effort under budget),
 /// warm-started by the greedy engines. This is the "LPS" column/curve
@@ -38,10 +38,12 @@ pub fn solve_packing(
     exact::solve(blocks, tile, discipline, budget)
 }
 
-/// Count-only solve for the sweep hot path: no `Packing` materialized, the
-/// greedy incumbents run through the caller's scratch arena, and an
+/// Count-only solve over a materialized block slice: no `Packing` built,
+/// the greedy incumbents run through the caller's scratch arena, and an
 /// optional upper-bound hint from a neighbouring configuration warm-starts
-/// the branch & bound (see [`exact::solve_bins`]).
+/// the branch & bound (see [`exact::solve_bins`]). The sweep itself goes
+/// further and uses [`solve_bins_census`], which prices from the
+/// shape-class census and only materializes blocks when the search runs.
 pub fn solve_packing_bins(
     blocks: &[Block],
     tile: Tile,

@@ -62,11 +62,19 @@
 //!   first-fit-decreasing baselines ([`pack::ffd`]), and an exact
 //!   branch-and-bound **binary linear optimization** solver ([`ilp`])
 //!   implementing the paper's Eq. 6/Eq. 7 formulations.
-//! * **Sweep** ([`opt`]): a parallel, allocation-lean §3.1 evaluation
-//!   engine — grid points fan out over scoped workers with deterministic
-//!   ordering, per-worker scratch arenas, and ILP warm-starts along aspect
-//!   columns. The planner is its only intended caller; the stage functions
-//!   stay available as `#[doc(hidden)]` internals.
+//! * **Counted kernels** ([`frag::ShapeClass`] + [`pack::counted`]):
+//!   Eq. 5 fragmentation produces at most four distinct block shapes per
+//!   layer, so bin counts are computed in closed form over an O(layers)
+//!   shape-class census instead of materializing and sorting O(blocks) —
+//!   exactly equal (bit-identical efficiencies) to the per-block engines,
+//!   and the default pricing path whenever placements aren't requested
+//!   (`MapPlan::provenance.counted`).
+//! * **Sweep** ([`opt`]): a parallel, counted §3.1 evaluation engine —
+//!   every grid point is an independent task fanned over scoped workers
+//!   with deterministic ordering, per-worker scratch arenas, and ILP
+//!   warm-starts from counted simple-engine hints. The planner is its only
+//!   intended caller; the stage functions stay available as
+//!   `#[doc(hidden)]` internals.
 //! * **Serving** ([`coordinator`]): batched inference through the
 //!   AOT-compiled JAX/Pallas crossbar kernel via the PJRT C API
 //!   ([`runtime`], behind the `pjrt` cargo feature) — Python never runs at

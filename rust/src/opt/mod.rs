@@ -6,14 +6,21 @@
 //! re-fragmented (each tile dimension induces its own fragmentation, §2.1),
 //! packed with the selected engine, and priced with the area model.
 //!
-//! [`sweep`] is a parallel, allocation-lean evaluation engine: grid points
-//! fan out over `std::thread::scope` workers with deterministic result
-//! ordering, each worker reuses a [`SweepScratch`] arena (fragmentation
-//! buffer + packing permutation/placement buffers) across the grid points
-//! it evaluates, and `Engine::Ilp` points warm-start their branch & bound
-//! from the neighbouring configuration in the same aspect column instead of
-//! solving cold. [`sweep_serial`] is the straightforward reference loop over
-//! the owned-allocation engines, kept for the determinism suite.
+//! [`sweep`] is a parallel, **counted** evaluation engine: every grid point
+//! is priced straight from the §2.1 shape-class census
+//! ([`crate::frag::ShapeClass`], at most four classes per layer) through
+//! the counted packing kernels ([`crate::pack::counted`]) — O(classes)
+//! per point instead of O(blocks log blocks), and no block is materialized
+//! unless an ILP point needs an actual tree search. Grid points fan out
+//! over `std::thread::scope` workers with deterministic result ordering;
+//! each worker reuses a [`SweepScratch`] arena across the points it
+//! evaluates, and every `Engine::Ilp` point is an independent task that
+//! warm-starts its branch & bound from a cheap counted-simple-engine hint
+//! for the neighbouring (next smaller) configuration in its aspect column.
+//! [`sweep_serial`] is the straightforward reference loop over the
+//! owned-allocation per-block engines, kept for the determinism suite —
+//! which therefore doubles as the counted-vs-materialized equivalence
+//! gate.
 
 pub mod comm;
 
@@ -130,15 +137,17 @@ pub struct SweepPoint {
     pub array_area_mm2: f64,
 }
 
-/// Per-worker scratch arena for the allocation-lean sweep path: the
-/// fragmentation buffer and the packing engines' permutation/placement
-/// buffers are reused across every grid point a worker evaluates, so after
-/// warm-up a configuration is evaluated without heap allocation on the
-/// simple/FFD path.
+/// Per-worker scratch arena for the counted sweep path: the shape-class
+/// census and the counted kernels' run/bin buffers are reused across every
+/// grid point a worker evaluates, so after warm-up a configuration is
+/// priced without heap allocation on the simple path. The block buffer is
+/// touched only when an ILP point needs an actual tree search (lazy
+/// materialization inside [`crate::ilp::solve_bins_census`]).
 #[derive(Debug, Default)]
 pub struct SweepScratch {
+    classes: Vec<frag::ShapeClass>,
+    counted: pack::counted::CountedScratch,
     blocks: Vec<crate::geom::Block>,
-    pack: pack::PackScratch,
 }
 
 impl SweepScratch {
@@ -163,11 +172,12 @@ pub fn evaluate(net: &Network, tile: Tile, aspect: usize, cfg: &SweepConfig) -> 
     evaluate_lean(net, tile, aspect, replication, cfg, None, &mut scratch)
 }
 
-/// Allocation-lean evaluation core shared by the sweep workers: fragments
-/// into the scratch arena, counts bins through the borrowed-slice packing
-/// APIs, and prices the configuration. `warm` is the neighbouring
-/// configuration's bin count (`Engine::Ilp` warm-start; ignored by the
-/// greedy engines).
+/// Counted evaluation core shared by the sweep workers: censuses the
+/// fragmentation in O(layers), counts bins through the counted kernels,
+/// and prices the configuration — bit-identical to the per-block engines
+/// (efficiencies are derived from the same integers through the same
+/// shared formula). `warm` is the neighbouring configuration's counted
+/// hint (`Engine::Ilp` warm-start; ignored by the greedy engines).
 fn evaluate_lean(
     net: &Network,
     tile: Tile,
@@ -177,33 +187,44 @@ fn evaluate_lean(
     warm: Option<usize>,
     scratch: &mut SweepScratch,
 ) -> SweepPoint {
-    frag::fragment_network_replicated_into(net, tile, replication, &mut scratch.blocks);
-    let n_blocks = scratch.blocks.len();
-    let n_tiles = match cfg.engine {
-        Engine::Simple => pack::simple::pack_into(
-            &scratch.blocks,
-            tile,
-            cfg.discipline,
-            cfg.sort,
-            &mut scratch.pack,
-        ),
-        Engine::Ffd => {
-            pack::ffd::pack_into(&scratch.blocks, tile, cfg.discipline, &mut scratch.pack)
+    evaluate_lean_full(net, tile, aspect, replication, cfg, warm, scratch).0
+}
+
+/// [`evaluate_lean`] keeping the ILP solver provenance (None for the
+/// greedy engines) — the planner's counted fixed-tile path needs it.
+fn evaluate_lean_full(
+    net: &Network,
+    tile: Tile,
+    aspect: usize,
+    replication: &[usize],
+    cfg: &SweepConfig,
+    warm: Option<usize>,
+    scratch: &mut SweepScratch,
+) -> (SweepPoint, Option<ilp::BinsResult>) {
+    let SweepScratch { classes, counted, blocks } = scratch;
+    frag::shape_classes_into(net, tile, replication, classes);
+    let n_blocks = frag::total_class_blocks(classes);
+    let (n_tiles, solve) = match cfg.engine {
+        Engine::Simple => {
+            (pack::counted::simple_bins(classes, tile, cfg.discipline, cfg.sort, counted), None)
         }
+        Engine::Ffd => (pack::counted::ffd_bins(classes, tile, cfg.discipline, counted), None),
         Engine::Ilp { max_nodes } => {
-            ilp::solve_packing_bins(
-                &scratch.blocks,
+            let r = ilp::solve_bins_census(
+                classes,
                 tile,
                 cfg.discipline,
                 ilp::Budget { max_nodes, ..Default::default() },
                 warm,
-                &mut scratch.pack,
-            )
-            .n_bins
+                blocks,
+                |out| frag::fragment_network_replicated_into(net, tile, replication, out),
+                counted,
+            );
+            (r.n_bins, Some(r))
         }
     };
-    let stored = frag::total_block_weights(&scratch.blocks);
-    SweepPoint {
+    let stored = frag::total_class_weights(classes);
+    let point = SweepPoint {
         tile,
         aspect,
         n_blocks,
@@ -213,7 +234,70 @@ fn evaluate_lean(
         packing_eff: pack::packing_efficiency(stored, n_tiles, tile.capacity()),
         total_area_mm2: cfg.area.total_area_mm2(n_tiles, tile),
         array_area_mm2: n_tiles as f64 * cfg.area.array_area_um2(tile) * 1e-6,
+    };
+    (point, solve)
+}
+
+/// Counted evaluation of one configuration with ILP solver provenance
+/// (zeros for the greedy engines). Used by the [`crate::plan`] front door
+/// to price fixed tiles without materializing blocks or placements.
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub struct CountedEval {
+    pub point: SweepPoint,
+    pub nodes: u64,
+    pub optimal: bool,
+    pub lower_bound: usize,
+}
+
+/// See [`CountedEval`]. `warm` is an optional ILP warm-start hint.
+#[doc(hidden)]
+pub fn evaluate_counted(
+    net: &Network,
+    tile: Tile,
+    aspect: usize,
+    cfg: &SweepConfig,
+    warm: Option<usize>,
+) -> CountedEval {
+    let ones = vec![1usize; net.n_layers()];
+    let replication = cfg.replication.as_deref().unwrap_or(&ones);
+    let mut scratch = SweepScratch::default();
+    let (point, solve) =
+        evaluate_lean_full(net, tile, aspect, replication, cfg, warm, &mut scratch);
+    match solve {
+        Some(r) => {
+            CountedEval { point, nodes: r.nodes, optimal: r.optimal, lower_bound: r.lower_bound }
+        }
+        None => CountedEval { point, nodes: 0, optimal: false, lower_bound: 0 },
     }
+}
+
+/// The sweep's ILP warm-start hint for a grid point: the counted
+/// simple-engine bin count of `prev_tile` (the next smaller configuration
+/// in the same aspect column). O(shape classes) — no blocks, no search.
+/// Exposed so the planner's placement solve can replay the exact hint the
+/// sweep used and land on exactly the reported bin count.
+#[doc(hidden)]
+pub fn ilp_sweep_hint(
+    net: &Network,
+    prev_tile: Tile,
+    replication: &[usize],
+    discipline: Discipline,
+) -> usize {
+    let mut scratch = SweepScratch::default();
+    counted_simple_hint(net, prev_tile, replication, discipline, &mut scratch)
+}
+
+fn counted_simple_hint(
+    net: &Network,
+    tile: Tile,
+    replication: &[usize],
+    discipline: Discipline,
+    scratch: &mut SweepScratch,
+) -> usize {
+    let SweepScratch { classes, counted, .. } = scratch;
+    frag::shape_classes_into(net, tile, replication, classes);
+    pack::counted::simple_bins(classes, tile, discipline, SortOrder::RowsDesc, counted)
 }
 
 /// Worker-thread count for [`sweep`]: the `XBARMAP_SWEEP_THREADS`
@@ -243,14 +327,16 @@ pub fn sweep(net: &Network, cfg: &SweepConfig) -> Vec<SweepPoint> {
 
 /// [`sweep`] with an explicit worker count (1 = in-place, no threads).
 ///
-/// Work decomposition: with a greedy engine every grid point is an
-/// independent task; with `Engine::Ilp` the tasks are whole aspect columns
-/// walked in increasing capacity order, so each point's branch & bound
-/// warm-starts from its smaller neighbour (§3.1 capacity monotonicity — a
-/// larger tile at the same aspect virtually never needs more tiles, and the
-/// solver treats the hint as a refutable bound, so the heuristic is free to
-/// be wrong). Results are gathered per worker and re-ordered by grid index
-/// before returning.
+/// Work decomposition: **every** grid point is an independent task — ILP
+/// points included, so square (`aspects=[1]`) ILP sweeps now parallelize
+/// across sizes instead of serializing one warm-start chain per aspect
+/// column. Each ILP point warm-starts from the counted simple-engine bin
+/// count of its smaller neighbour in the same aspect column (§3.1 capacity
+/// monotonicity — a larger tile at the same aspect virtually never needs
+/// more tiles; the hint is O(shape classes) to compute and the solver
+/// treats it as a refutable bound, so the heuristic is free to be wrong).
+/// Results are gathered per worker and re-ordered by grid index before
+/// returning.
 #[doc(hidden)]
 pub fn sweep_with_threads(net: &Network, cfg: &SweepConfig, threads: usize) -> Vec<SweepPoint> {
     let ones = vec![1usize; net.n_layers()];
@@ -262,32 +348,22 @@ pub fn sweep_with_threads(net: &Network, cfg: &SweepConfig, threads: usize) -> V
         return Vec::new();
     }
 
-    let chained = matches!(cfg.engine, Engine::Ilp { .. });
-    let n_tasks = if chained { n_aspects } else { n_points };
     let out = crate::util::par::par_for_ordered(
-        n_tasks,
+        n_points,
         threads,
         SweepScratch::default,
         |scratch, t, local| {
-            if chained {
-                // one aspect column, sizes small -> large, carrying the
-                // warm-start chain
-                let ai = t;
-                let aspect = cfg.aspects[ai];
-                let mut warm = None;
-                for (si, &n_col) in sizes.iter().enumerate() {
-                    let tile = Tile::new(n_col * aspect, n_col);
-                    let p = evaluate_lean(net, tile, aspect, replication, cfg, warm, scratch);
-                    warm = Some(p.n_tiles);
-                    local.push((si * n_aspects + ai, p));
-                }
+            let (si, ai) = (t / n_aspects, t % n_aspects);
+            let aspect = cfg.aspects[ai];
+            let tile = Tile::new(sizes[si] * aspect, sizes[si]);
+            let warm = if matches!(cfg.engine, Engine::Ilp { .. }) && si > 0 {
+                let prev = Tile::new(sizes[si - 1] * aspect, sizes[si - 1]);
+                Some(counted_simple_hint(net, prev, replication, cfg.discipline, scratch))
             } else {
-                let (si, ai) = (t / n_aspects, t % n_aspects);
-                let aspect = cfg.aspects[ai];
-                let tile = Tile::new(sizes[si] * aspect, sizes[si]);
-                let p = evaluate_lean(net, tile, aspect, replication, cfg, None, scratch);
-                local.push((t, p));
-            }
+                None
+            };
+            let p = evaluate_lean(net, tile, aspect, replication, cfg, warm, scratch);
+            local.push((t, p));
         },
     );
     debug_assert_eq!(out.len(), n_points);
@@ -295,19 +371,21 @@ pub fn sweep_with_threads(net: &Network, cfg: &SweepConfig, threads: usize) -> V
 }
 
 /// Reference serial implementation: the straightforward per-config loop
-/// over the owned-allocation engines, with the same per-aspect ILP
-/// warm-start chain as the parallel engine. Kept as the oracle for the
-/// determinism suite ([`sweep`] must match it byte for byte) and as the
-/// baseline the sweep benches measure speedup against.
+/// over the owned-allocation **per-block** engines, with the same
+/// per-point ILP warm-start hints as the parallel engine (derived here by
+/// materializing and packing the neighbour, so the determinism suite
+/// cross-checks the counted hint kernel as well). Kept as the oracle for
+/// the determinism suite ([`sweep`], which runs fully counted, must match
+/// it byte for byte) and as the baseline the sweep benches measure the
+/// counted path's speedup against.
 #[doc(hidden)]
 pub fn sweep_serial(net: &Network, cfg: &SweepConfig) -> Vec<SweepPoint> {
     let ones = vec![1usize; net.n_layers()];
     let replication: &[usize] = cfg.replication.as_deref().unwrap_or(&ones);
     let mut out = Vec::new();
-    let mut warm: Vec<Option<usize>> = vec![None; cfg.aspects.len()];
     for k in cfg.row_exp.0..=cfg.row_exp.1 {
         let n_col = 1usize << k;
-        for (ai, &aspect) in cfg.aspects.iter().enumerate() {
+        for &aspect in cfg.aspects.iter() {
             let tile = Tile::new(n_col * aspect, n_col);
             let blocks = frag::fragment_network_replicated(net, tile, replication);
             let n_blocks = blocks.len();
@@ -317,18 +395,22 @@ pub fn sweep_serial(net: &Network, cfg: &SweepConfig) -> Vec<SweepPoint> {
                 }
                 Engine::Ffd => pack::ffd::pack(&blocks, tile, cfg.discipline),
                 Engine::Ilp { max_nodes } => {
+                    let warm = (k > cfg.row_exp.0).then(|| {
+                        let prev = Tile::new((n_col / 2) * aspect, n_col / 2);
+                        let pblocks = frag::fragment_network_replicated(net, prev, replication);
+                        pack::simple::pack(&pblocks, prev, cfg.discipline).n_bins
+                    });
                     ilp::exact::solve_with_hint(
                         &blocks,
                         tile,
                         cfg.discipline,
                         ilp::Budget { max_nodes, ..Default::default() },
-                        warm[ai],
+                        warm,
                     )
                     .packing
                 }
             };
             let n_tiles = packing.n_tiles();
-            warm[ai] = Some(n_tiles);
             out.push(SweepPoint {
                 tile,
                 aspect,
@@ -439,8 +521,9 @@ mod tests {
 
     #[test]
     fn ilp_sweep_warm_chain_matches_cold_points() {
-        // the warm-started chain must agree with independently cold-solved
-        // points (both prove optimality at this scale)
+        // warm-started points (counted simple-engine hint from the smaller
+        // neighbour) must agree with independently cold-solved points
+        // (both prove optimality at this scale)
         let net = zoo::lenet();
         let mut cfg = SweepConfig::square(Discipline::Pipeline);
         cfg.row_exp = (7, 9);
@@ -449,6 +532,38 @@ mod tests {
         for p in &chain {
             let cold = evaluate(&net, p.tile, p.aspect, &cfg);
             assert_eq!(p.n_tiles, cold.n_tiles, "{}", p.tile);
+        }
+    }
+
+    #[test]
+    fn ilp_sweep_hint_matches_per_block_simple_engine() {
+        // the counted hint the sweep feeds each ILP point must equal the
+        // per-block simple engine's bin count for the same neighbour
+        let net = zoo::resnet18();
+        let ones = vec![1usize; net.n_layers()];
+        for d in [Discipline::Dense, Discipline::Pipeline] {
+            for tile in [Tile::new(128, 128), Tile::new(512, 256)] {
+                let blocks = frag::fragment_network_replicated(&net, tile, &ones);
+                let reference = pack::simple::pack(&blocks, tile, d).n_bins;
+                assert_eq!(ilp_sweep_hint(&net, tile, &ones, d), reference, "{tile} {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn square_ilp_sweep_parallelizes_across_sizes() {
+        // aspects=[1] ILP sweeps used to be one serial chain; per-point
+        // tasks must still give byte-identical results at any worker count
+        let net = zoo::lenet();
+        let mut cfg = SweepConfig::square(Discipline::Pipeline);
+        cfg.row_exp = (7, 10);
+        cfg.engine = Engine::Ilp { max_nodes: 100_000 };
+        let one = sweep_with_threads(&net, &cfg, 1);
+        let many = sweep_with_threads(&net, &cfg, 4);
+        assert_eq!(one.len(), many.len());
+        for (a, b) in one.iter().zip(&many) {
+            assert_eq!((a.tile, a.n_tiles), (b.tile, b.n_tiles));
+            assert_eq!(a.packing_eff.to_bits(), b.packing_eff.to_bits());
         }
     }
 

@@ -1,0 +1,538 @@
+//! Counted packing kernels: price a tile configuration straight from the
+//! §2.1 shape-class census ([`crate::frag::ShapeClass`]) without ever
+//! materializing a block.
+//!
+//! Eq. 5 fragmentation produces at most **four** distinct block shapes per
+//! layer (Fig. 4), yet the per-block engines sort and walk every block —
+//! O(n log n) per sweep point for work that is closed-form over the
+//! classes. This module is the closed form:
+//!
+//! * the placement order collapses to a sequence of [`Run`]s (maximal
+//!   groups of identical `rows x cols` blocks) — O(classes) long for the
+//!   sorted orders, O(grid rows) for the `as-given` ablation;
+//! * a run of identical blocks places in closed form under both simple
+//!   disciplines: dense next-fit shelves fill `floor(n_row/rows)` blocks
+//!   per shelf and `floor(n_col/cols)` shelves per tile, pipeline
+//!   staircases fill `min(n_row/rows, n_col/cols)` blocks per tile — the
+//!   partial-shelf/tile cursor carries between runs so the bin count is
+//!   **exactly** the per-block engine's, not an approximation;
+//! * FFD processes runs against its open-bin state (O(runs x bins), still
+//!   free of the per-block sort and scan).
+//!
+//! Equivalence with the per-block engines is property-tested in
+//! `rust/tests/prop_counted.rs` and enforced sweep-wide by the determinism
+//! suite (`opt::sweep` routes through this module, `opt::sweep_serial`
+//! stays per-block).
+
+use super::{Discipline, SortOrder};
+use crate::frag::ShapeClass;
+use crate::geom::Tile;
+
+/// A run of `count` identical `rows x cols` blocks in placement order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Run {
+    pub rows: usize,
+    pub cols: usize,
+    pub count: usize,
+}
+
+/// Reusable buffers for the counted path — one per sweep worker, so after
+/// warm-up a grid point is priced without heap allocation on the simple
+/// path (the FFD dense path keeps per-bin shelf lists).
+#[derive(Debug, Default)]
+pub struct CountedScratch {
+    runs: Vec<Run>,
+    ffd_dense: Vec<FfdBin>,
+    pipe_rows: Vec<usize>,
+    pipe_cols: Vec<usize>,
+}
+
+impl CountedScratch {
+    pub fn new() -> CountedScratch {
+        CountedScratch::default()
+    }
+}
+
+/// Collapse a shape-class census into the run sequence the per-block
+/// engines would traverse under `order`:
+///
+/// * `rows-desc` / `rows-asc` — classes merged across layers by shape and
+///   sorted by the [`super::order_indices`] key (provenance tie-breaks are
+///   irrelevant: blocks of equal shape are interchangeable for counting);
+/// * `as-given` — the fragmentation's layer/replica/row-major sequence,
+///   reconstructed per grid row from the class provenance ranges (O(grid
+///   rows) runs; only this ablation order needs them).
+pub fn runs_from_census(classes: &[ShapeClass], order: SortOrder, out: &mut Vec<Run>) {
+    out.clear();
+    match order {
+        SortOrder::RowsDesc | SortOrder::RowsAsc => {
+            out.extend(classes.iter().map(|c| Run { rows: c.rows, cols: c.cols, count: c.count }));
+            out.sort_unstable_by(|a, b| b.rows.cmp(&a.rows).then(b.cols.cmp(&a.cols)));
+            merge_adjacent(out);
+            if order == SortOrder::RowsAsc {
+                out.reverse();
+            }
+        }
+        SortOrder::AsGiven => {
+            let mut i = 0;
+            while i < classes.len() {
+                let layer = classes[i].layer;
+                let start = i;
+                while i < classes.len() && classes[i].layer == layer {
+                    i += 1;
+                }
+                as_given_layer_runs(&classes[start..i], out);
+            }
+        }
+    }
+}
+
+/// Emit one layer's as-given (row-major, replica-by-replica) run sequence.
+/// Relies on the census emitting at most one class per §2.1 kind per layer.
+fn as_given_layer_runs(group: &[ShapeClass], out: &mut Vec<Run>) {
+    use crate::geom::BlockKind;
+    let by_kind = |k: BlockKind| group.iter().find(|c| c.kind == k);
+    let full = by_kind(BlockKind::Full);
+    let row_full = by_kind(BlockKind::RowFull);
+    let col_full = by_kind(BlockKind::ColFull);
+    let sparse = by_kind(BlockKind::Sparse);
+    let fr = full.or(row_full).map_or(0, |c| c.grid_rows.1 - c.grid_rows.0);
+    let fc = full.or(col_full).map_or(0, |c| c.grid_cols.1 - c.grid_cols.0);
+    let replicas = group.first().map_or(0, |c| c.replicas);
+    for _ in 0..replicas {
+        // fr full-height grid rows: [Full x fc, RowFull x 1] each
+        match (full, row_full) {
+            (Some(f), Some(rf)) => {
+                for _ in 0..fr {
+                    emit(out, f.rows, f.cols, fc);
+                    emit(out, rf.rows, rf.cols, 1);
+                }
+            }
+            (Some(f), None) => emit(out, f.rows, f.cols, fr * fc),
+            (None, Some(rf)) => emit(out, rf.rows, rf.cols, fr),
+            (None, None) => debug_assert_eq!(fr, 0),
+        }
+        // the remainder row: [ColFull x fc, Sparse x 1]
+        if let Some(cf) = col_full {
+            emit(out, cf.rows, cf.cols, fc);
+        }
+        if let Some(sp) = sparse {
+            emit(out, sp.rows, sp.cols, 1);
+        }
+    }
+}
+
+fn emit(out: &mut Vec<Run>, rows: usize, cols: usize, count: usize) {
+    if count == 0 {
+        return;
+    }
+    if let Some(last) = out.last_mut() {
+        if last.rows == rows && last.cols == cols {
+            last.count += count;
+            return;
+        }
+    }
+    out.push(Run { rows, cols, count });
+}
+
+fn merge_adjacent(runs: &mut Vec<Run>) {
+    let mut w = 0;
+    for i in 0..runs.len() {
+        if w > 0 && runs[w - 1].rows == runs[i].rows && runs[w - 1].cols == runs[i].cols {
+            runs[w - 1].count += runs[i].count;
+        } else {
+            runs[w] = runs[i];
+            w += 1;
+        }
+    }
+    runs.truncate(w);
+}
+
+fn assert_classes_fit(classes: &[ShapeClass], tile: Tile) {
+    for c in classes {
+        assert!(
+            tile.fits(c.rows, c.cols),
+            "class {c:?} larger than tile {tile}: fragment with this tile first"
+        );
+    }
+}
+
+/// Bin count of [`super::simple`] (the paper's next-fit algorithm) over a
+/// shape-class census — identical to `simple::pack_ordered(...).n_bins` on
+/// the materialized blocks, in O(runs) after the census.
+pub fn simple_bins(
+    classes: &[ShapeClass],
+    tile: Tile,
+    discipline: Discipline,
+    order: SortOrder,
+    scratch: &mut CountedScratch,
+) -> usize {
+    assert_classes_fit(classes, tile);
+    runs_from_census(classes, order, &mut scratch.runs);
+    match discipline {
+        Discipline::Dense => {
+            let mut st = DenseNextFit::default();
+            for run in &scratch.runs {
+                st.place_run(tile, run.rows, run.cols, run.count);
+            }
+            st.n_bins
+        }
+        Discipline::Pipeline => {
+            let mut st = PipeNextFit::default();
+            for run in &scratch.runs {
+                st.place_run(tile, run.rows, run.cols, run.count);
+            }
+            st.n_bins
+        }
+    }
+}
+
+/// Bin count of [`super::ffd`] over a shape-class census — identical to
+/// `ffd::pack(...).n_bins` on the materialized blocks. O(runs x bins): the
+/// per-block sort and first-fit scans collapse, the open-bin state remains.
+pub fn ffd_bins(
+    classes: &[ShapeClass],
+    tile: Tile,
+    discipline: Discipline,
+    scratch: &mut CountedScratch,
+) -> usize {
+    assert_classes_fit(classes, tile);
+    let CountedScratch { runs, ffd_dense, pipe_rows, pipe_cols } = scratch;
+    runs_from_census(classes, SortOrder::RowsDesc, runs);
+    match discipline {
+        Discipline::Dense => {
+            ffd_dense.clear();
+            for run in runs.iter() {
+                ffd_dense_run(tile, run, ffd_dense);
+            }
+            ffd_dense.len()
+        }
+        Discipline::Pipeline => {
+            pipe_rows.clear();
+            pipe_cols.clear();
+            for run in runs.iter() {
+                ffd_pipe_run(tile, run, pipe_rows, pipe_cols);
+            }
+            pipe_rows.len()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// simple (next-fit) closed forms
+// ---------------------------------------------------------------------------
+
+/// Dense next-fit shelf cursor carried between runs. Mirrors
+/// [`super::simple`]'s `dense_next_fit` decision for every block of a run:
+/// join the current shelf while Eq. 6c/6d hold, open new shelves to the
+/// right, open new bins — but a run of `k` identical blocks resolves in
+/// O(1) instead of k iterations.
+#[derive(Debug, Default)]
+struct DenseNextFit {
+    n_bins: usize,
+    shelf_x: usize,
+    shelf_width: usize,
+    shelf_fill: usize,
+}
+
+impl DenseNextFit {
+    fn place_run(&mut self, tile: Tile, r: usize, c: usize, mut k: usize) {
+        if k == 0 {
+            return;
+        }
+        if self.n_bins == 0 {
+            self.n_bins = 1;
+        }
+        let per_shelf = tile.n_row / r;
+        if self.shelf_fill > 0 {
+            // 1) join the current shelf while rows fit (Eq. 6c) and the
+            //    widened shelf stays inside the column budget (Eq. 6d);
+            //    the shelf only widens if at least one block joins
+            let widened = self.shelf_width.max(c);
+            if self.shelf_x + widened <= tile.n_col {
+                let t = ((tile.n_row - self.shelf_fill) / r).min(k);
+                if t > 0 {
+                    self.shelf_fill += t * r;
+                    self.shelf_width = widened;
+                    k -= t;
+                    if k == 0 {
+                        return;
+                    }
+                }
+            }
+            // 2) new shelves of width c to the right of the current one
+            let next_x = self.shelf_x + self.shelf_width;
+            let s_fit = (tile.n_col - next_x) / c;
+            let cap = s_fit * per_shelf;
+            if k <= cap {
+                self.settle(next_x, r, c, per_shelf, k);
+                return;
+            }
+            k -= cap;
+            // 3) the remainder needs a fresh bin (next-fit never revisits)
+            self.n_bins += 1;
+        }
+        // fresh bins: floor(n_col/c) shelves of per_shelf blocks each
+        let bin_cap = (tile.n_col / c) * per_shelf;
+        let extra = (k - 1) / bin_cap;
+        self.n_bins += extra;
+        self.settle(0, r, c, per_shelf, k - extra * bin_cap);
+    }
+
+    /// Leave the cursor exactly where the per-block loop would after laying
+    /// `k >= 1` blocks into consecutive width-`c` shelves from `base_x`.
+    fn settle(&mut self, base_x: usize, r: usize, c: usize, per_shelf: usize, k: usize) {
+        debug_assert!(k >= 1);
+        let full = k / per_shelf;
+        let rem = k % per_shelf;
+        if rem == 0 {
+            self.shelf_x = base_x + (full - 1) * c;
+            self.shelf_fill = per_shelf * r;
+        } else {
+            self.shelf_x = base_x + full * c;
+            self.shelf_fill = rem * r;
+        }
+        self.shelf_width = c;
+    }
+}
+
+/// Pipeline next-fit staircase cursor (Eq. 7c/7d): a tile takes
+/// `min(n_row/rows, n_col/cols)` blocks of a shape along its diagonal.
+#[derive(Debug, Default)]
+struct PipeNextFit {
+    n_bins: usize,
+    row_used: usize,
+    col_used: usize,
+}
+
+impl PipeNextFit {
+    fn place_run(&mut self, tile: Tile, r: usize, c: usize, mut k: usize) {
+        if k == 0 {
+            return;
+        }
+        if self.n_bins > 0 {
+            let t = ((tile.n_row - self.row_used) / r)
+                .min((tile.n_col - self.col_used) / c)
+                .min(k);
+            self.row_used += t * r;
+            self.col_used += t * c;
+            k -= t;
+            if k == 0 {
+                return;
+            }
+        }
+        let per_bin = (tile.n_row / r).min(tile.n_col / c);
+        let new_bins = k.div_ceil(per_bin);
+        self.n_bins += new_bins;
+        let last = k - (new_bins - 1) * per_bin;
+        self.row_used = last * r;
+        self.col_used = last * c;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FFD over runs
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default, Clone)]
+struct FfdShelf {
+    width: usize,
+    fill: usize,
+}
+
+#[derive(Debug, Default, Clone)]
+struct FfdBin {
+    col_used: usize,
+    shelves: Vec<FfdShelf>,
+}
+
+/// One run through FFD dense shelves: fill existing shelves first-fit in
+/// (bin, shelf) order, then new shelves in the first bins with column
+/// budget, then fresh bins. Identical blocks saturate each target before
+/// moving on — exactly the per-block scan's behavior, since earlier
+/// fit-failures can only be made worse by placing more blocks.
+fn ffd_dense_run(tile: Tile, run: &Run, bins: &mut Vec<FfdBin>) {
+    let (r, c) = (run.rows, run.cols);
+    let mut k = run.count;
+    // 1) existing shelves (width must fit: closed shelves cannot widen)
+    for bin in bins.iter_mut() {
+        for sh in bin.shelves.iter_mut() {
+            if c <= sh.width && sh.fill + r <= tile.n_row {
+                let t = ((tile.n_row - sh.fill) / r).min(k);
+                sh.fill += t * r;
+                k -= t;
+                if k == 0 {
+                    return;
+                }
+            }
+        }
+    }
+    // 2) new shelves in existing bins
+    let per_shelf = tile.n_row / r;
+    for bin in bins.iter_mut() {
+        while k > 0 && bin.col_used + c <= tile.n_col {
+            let t = per_shelf.min(k);
+            bin.shelves.push(FfdShelf { width: c, fill: t * r });
+            bin.col_used += c;
+            k -= t;
+        }
+        if k == 0 {
+            return;
+        }
+    }
+    // 3) fresh bins
+    let bin_cap = (tile.n_col / c) * per_shelf;
+    while k > 0 {
+        let placed = bin_cap.min(k);
+        k -= placed;
+        let full = placed / per_shelf;
+        let rem = placed % per_shelf;
+        let mut bin = FfdBin::default();
+        bin.shelves.reserve(full + (rem > 0) as usize);
+        for _ in 0..full {
+            bin.shelves.push(FfdShelf { width: c, fill: per_shelf * r });
+        }
+        if rem > 0 {
+            bin.shelves.push(FfdShelf { width: c, fill: rem * r });
+        }
+        bin.col_used = (full + (rem > 0) as usize) * c;
+        bins.push(bin);
+    }
+}
+
+/// One run through FFD two-constraint vector packing: each open bin absorbs
+/// its residual capacity in blocks, then fresh bins take
+/// `min(n_row/rows, n_col/cols)` each.
+fn ffd_pipe_run(tile: Tile, run: &Run, rows_used: &mut Vec<usize>, cols_used: &mut Vec<usize>) {
+    let (r, c) = (run.rows, run.cols);
+    let mut k = run.count;
+    for i in 0..rows_used.len() {
+        if rows_used[i] + r <= tile.n_row && cols_used[i] + c <= tile.n_col {
+            let t = ((tile.n_row - rows_used[i]) / r)
+                .min((tile.n_col - cols_used[i]) / c)
+                .min(k);
+            rows_used[i] += t * r;
+            cols_used[i] += t * c;
+            k -= t;
+            if k == 0 {
+                return;
+            }
+        }
+    }
+    let per_bin = (tile.n_row / r).min(tile.n_col / c);
+    while k > 0 {
+        let t = per_bin.min(k);
+        rows_used.push(t * r);
+        cols_used.push(t * c);
+        k -= t;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frag;
+    use crate::nets::zoo;
+    use crate::pack::{ffd, simple};
+
+    const ORDERS: [SortOrder; 3] = [SortOrder::RowsDesc, SortOrder::RowsAsc, SortOrder::AsGiven];
+
+    fn check_net(net: &crate::nets::Network, tile: Tile, reps: &[usize]) {
+        let classes = frag::shape_classes(net, tile, reps);
+        let blocks = frag::fragment_network_replicated(net, tile, reps);
+        let mut scratch = CountedScratch::new();
+        for d in [Discipline::Dense, Discipline::Pipeline] {
+            for order in ORDERS {
+                let counted = simple_bins(&classes, tile, d, order, &mut scratch);
+                let reference = simple::pack_ordered(&blocks, tile, d, order).n_bins;
+                assert_eq!(counted, reference, "{} {tile} {d} {order} simple", net.name);
+            }
+            let counted = ffd_bins(&classes, tile, d, &mut scratch);
+            let reference = ffd::pack(&blocks, tile, d).n_bins;
+            assert_eq!(counted, reference, "{} {tile} {d} ffd", net.name);
+        }
+    }
+
+    #[test]
+    fn counted_matches_per_block_across_zoo() {
+        for net in [zoo::lenet(), zoo::alexnet(), zoo::resnet18(), zoo::bert_layer(64)] {
+            let ones = vec![1usize; net.n_layers()];
+            for tile in [Tile::new(64, 64), Tile::new(256, 256), Tile::new(1024, 256)] {
+                check_net(&net, tile, &ones);
+            }
+        }
+    }
+
+    #[test]
+    fn counted_matches_per_block_under_replication() {
+        let net = zoo::lenet();
+        check_net(&net, Tile::new(128, 128), &[4, 2, 1, 3, 1]);
+        let net = zoo::resnet18();
+        let reps = crate::perf::rapa::plan_balanced(&net, 128);
+        check_net(&net, Tile::new(256, 256), &reps);
+    }
+
+    #[test]
+    fn run_sequence_collapses_to_classes_for_sorted_orders() {
+        let net = zoo::bert_layer(64);
+        let tile = Tile::new(64, 64);
+        let ones = vec![1usize; net.n_layers()];
+        let classes = frag::shape_classes(&net, tile, &ones);
+        let mut runs = Vec::new();
+        runs_from_census(&classes, SortOrder::RowsDesc, &mut runs);
+        // BERT's six layers share three distinct matrix shapes; at 64x64
+        // their classes merge into a handful of runs despite ~10^3 blocks
+        assert!(runs.len() <= classes.len());
+        assert!(runs.len() < 16, "{} runs", runs.len());
+        let total: usize = runs.iter().map(|r| r.count).sum();
+        assert_eq!(total, frag::total_class_blocks(&classes));
+        // descending order
+        for w in runs.windows(2) {
+            assert!(
+                w[0].rows > w[1].rows || (w[0].rows == w[1].rows && w[0].cols > w[1].cols),
+                "not strictly ordered: {:?}",
+                w
+            );
+        }
+    }
+
+    #[test]
+    fn as_given_runs_preserve_fragmentation_order() {
+        let net = zoo::alexnet();
+        let tile = Tile::new(512, 512);
+        let ones = vec![1usize; net.n_layers()];
+        let classes = frag::shape_classes(&net, tile, &ones);
+        let mut runs = Vec::new();
+        runs_from_census(&classes, SortOrder::AsGiven, &mut runs);
+        // expanding the runs must reproduce the materialized block sequence
+        let blocks = frag::fragment_network(&net, tile);
+        let mut expanded = Vec::new();
+        for r in &runs {
+            for _ in 0..r.count {
+                expanded.push((r.rows, r.cols));
+            }
+        }
+        let reference: Vec<(usize, usize)> = blocks.iter().map(|b| (b.rows, b.cols)).collect();
+        assert_eq!(expanded, reference);
+    }
+
+    #[test]
+    fn empty_census_zero_bins() {
+        let mut scratch = CountedScratch::new();
+        for d in [Discipline::Dense, Discipline::Pipeline] {
+            assert_eq!(simple_bins(&[], Tile::new(8, 8), d, SortOrder::RowsDesc, &mut scratch), 0);
+            assert_eq!(ffd_bins(&[], Tile::new(8, 8), d, &mut scratch), 0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "larger than tile")]
+    fn oversized_class_rejected() {
+        let net = zoo::lenet();
+        let classes = frag::shape_classes(&net, Tile::new(512, 512), &[1; 5]);
+        // classes were cut for 512x512; pricing them against a smaller tile
+        // must fail loudly, exactly like the per-block engines
+        let mut scratch = CountedScratch::new();
+        simple_bins(&classes, Tile::new(64, 64), Discipline::Dense, SortOrder::RowsDesc, &mut scratch);
+    }
+}

@@ -12,6 +12,7 @@
 //! All return a [`Packing`] with explicit coordinates checked by
 //! [`placement::validate`].
 
+pub mod counted;
 pub mod ffd;
 pub mod placement;
 pub mod simple;
@@ -98,6 +99,27 @@ impl Packing {
         v.sort_unstable();
         v.dedup();
         v
+    }
+
+    /// [`Packing::layer_bins`] for every layer `0..n_layers` in one pass
+    /// over the placements — O(placements + layers) instead of the
+    /// O(layers x placements) of calling `layer_bins` per layer (the
+    /// simulator's per-layer scan used to be quadratic at network scale).
+    /// Blocks tagged with a layer `>= n_layers` are ignored, matching the
+    /// per-layer queries.
+    pub fn layer_bins_map(&self, n_layers: usize) -> Vec<Vec<usize>> {
+        let mut map: Vec<Vec<usize>> = vec![Vec::new(); n_layers];
+        for p in &self.placements {
+            let l = self.blocks[p.block].layer;
+            if l < n_layers {
+                map[l].push(p.bin);
+            }
+        }
+        for v in &mut map {
+            v.sort_unstable();
+            v.dedup();
+        }
+        map
     }
 }
 
@@ -266,6 +288,12 @@ mod tests {
         assert!(p.layer_bins(7).is_empty());
         assert_eq!(p.bins().len(), 2);
         assert_eq!(p.bins()[0].len(), 2);
+        // the one-pass map agrees with the per-layer queries
+        let map = p.layer_bins_map(8);
+        assert_eq!(map.len(), 8);
+        for l in 0..8 {
+            assert_eq!(map[l], p.layer_bins(l), "layer {l}");
+        }
     }
 
     #[test]

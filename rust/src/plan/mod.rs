@@ -439,11 +439,12 @@ impl Planner {
         self.pack_with_hint(tile, None)
     }
 
-    /// [`Planner::pack`] with an ILP warm-start hint (a neighbouring
-    /// configuration's bin count, as the §3.1 sweep chain passes it).
-    /// [`Planner::plan`] reconstructs the chosen point's hint so the packed
-    /// placements land on exactly the bin count the sweep reported, even
-    /// when the budget is too small to prove optimality.
+    /// [`Planner::pack`] with an ILP warm-start hint (the counted
+    /// simple-engine bin count of the neighbouring configuration, as the
+    /// §3.1 sweep passes it). [`Planner::plan`] reconstructs the chosen
+    /// point's hint so the packed placements land on exactly the bin count
+    /// the sweep reported, even when the budget is too small to prove
+    /// optimality.
     fn pack_with_hint(&self, tile: Tile, hint: Option<usize>) -> Result<PackOutcome, PlanError> {
         let req = &self.request;
         let blocks = frag::fragment_network_replicated(&self.net, tile, &self.replication);
@@ -489,48 +490,105 @@ impl Planner {
         }
     }
 
+    /// The counted warm-start hint the §3.1 sweep fed the chosen ILP grid
+    /// point (None for greedy engines, fixed tiles, or the smallest size).
+    fn grid_replay_hint(&self, points: &[SweepPoint], best: &SweepPoint) -> Option<usize> {
+        match (&self.request.engine, &self.request.tiles) {
+            (Engine::Ilp { .. }, TileSpace::Grid { aspects, .. }) => points
+                .iter()
+                .position(|p| p.tile == best.tile)
+                .and_then(|i| i.checked_sub(aspects.len()))
+                .map(|prev| {
+                    opt::ilp_sweep_hint(
+                        &self.net,
+                        points[prev].tile,
+                        &self.replication,
+                        self.request.discipline,
+                    )
+                }),
+            _ => None,
+        }
+    }
+
     /// Evaluate the request's tile space, choose the objective's optimum,
-    /// pack it for provenance (and placements when requested), and price
+    /// attach provenance (and placements when requested), and price
     /// latency/throughput.
+    ///
+    /// Point pricing runs on the **counted** shape-class path
+    /// (`provenance.counted` records this): grid sweeps always, and fixed
+    /// tiles unless their placements are requested — no per-block state is
+    /// materialized for pricing, so large or RAPA-replicated requests cost
+    /// O(shape classes) per point instead of O(blocks log blocks).
+    /// Placements, when requested, always come from the exact per-block
+    /// engines (identical numbers, plus coordinates), solved once for the
+    /// chosen tile.
     pub fn plan(&self) -> Result<MapPlan, PlanError> {
         let req = &self.request;
         let threads = if req.threads == 0 { opt::sweep_threads() } else { req.threads };
-        let (points, fixed_outcome) = match &req.tiles {
+        // whether the `points` array is priced through the counted path:
+        // grid sweeps always are (placements, when requested, come from a
+        // separate per-block solve of the chosen tile); a fixed tile is
+        // counted unless its placements are requested, in which case the
+        // one per-block pack also serves as the point
+        let counted_mode = match &req.tiles {
+            TileSpace::Grid { .. } => true,
+            TileSpace::Fixed(_) => !req.include_placements,
+        };
+        // `fixed_solve` carries counted ILP provenance; `fixed_outcome` a
+        // materialized packing (placement requests)
+        let (points, fixed_solve, fixed_outcome) = match &req.tiles {
             TileSpace::Grid { .. } => {
                 let cfg = self.sweep_config();
-                (opt::sweep_with_threads(&self.net, &cfg, threads), None)
+                (opt::sweep_with_threads(&self.net, &cfg, threads), None, None)
             }
             TileSpace::Fixed(tile) => {
-                // one fragment + pack serves the point, the placements and
-                // the provenance (a separate sweep-style evaluation would
-                // solve the identical instance twice)
                 let aspect = tile.exact_aspect().unwrap_or(OFF_GRID_ASPECT);
-                let outcome = self.pack_with_hint(*tile, None)?;
-                let point = self.point_from_packing(*tile, aspect, &outcome.packing);
-                (vec![point], Some(outcome))
+                if counted_mode {
+                    let eval =
+                        opt::evaluate_counted(&self.net, *tile, aspect, &self.sweep_config(), None);
+                    (vec![eval.point.clone()], Some(eval), None)
+                } else {
+                    // one fragment + pack serves the point, the placements
+                    // and the provenance
+                    let outcome = self.pack_with_hint(*tile, None)?;
+                    let point = self.point_from_packing(*tile, aspect, &outcome.packing);
+                    (vec![point], None, Some(outcome))
+                }
             }
         };
         let best_per_aspect = opt::best_per_aspect(&points);
         let best = self.choose(&points, &best_per_aspect)?;
-        let outcome = match fixed_outcome {
-            Some(o) => Some(o),
-            // the sweep solved the chosen ILP point warm-started from its
-            // smaller neighbour in the same aspect column; reconstruct
-            // that hint so the placement solve reproduces the reported
-            // bin count. Greedy engines without a placement request have
-            // nothing to add over the sweep's own evaluation.
-            None if req.include_placements || matches!(req.engine, Engine::Ilp { .. }) => {
-                let hint = match (&req.engine, &req.tiles) {
-                    (Engine::Ilp { .. }, TileSpace::Grid { aspects, .. }) => points
-                        .iter()
-                        .position(|p| p.tile == best.tile)
-                        .and_then(|i| i.checked_sub(aspects.len()))
-                        .map(|prev| points[prev].n_tiles),
-                    _ => None,
-                };
-                Some(self.pack_with_hint(best.tile, hint)?)
+        let (outcome, solve) = match (fixed_outcome, fixed_solve) {
+            (Some(o), _) => (Some(o), None),
+            (None, Some(s)) => (None, Some(s)),
+            (None, None) if req.include_placements => {
+                // the sweep solved the chosen ILP point warm-started from
+                // the counted hint of its smaller neighbour; replay that
+                // hint so the placement solve reproduces the reported bin
+                // count
+                let hint = self.grid_replay_hint(&points, &best);
+                (Some(self.pack_with_hint(best.tile, hint)?), None)
             }
-            None => None,
+            (None, None) if matches!(req.engine, Engine::Ilp { .. }) => {
+                // ILP provenance for the chosen grid point without
+                // materializing placements: re-run the counted solve with
+                // the replayed hint (identical numbers to the sweep's own)
+                let hint = self.grid_replay_hint(&points, &best);
+                let eval = opt::evaluate_counted(
+                    &self.net,
+                    best.tile,
+                    best.aspect,
+                    &self.sweep_config(),
+                    hint,
+                );
+                (None, Some(eval))
+            }
+            (None, None) => (None, None),
+        };
+        let (nodes, optimal, lower_bound) = match (&outcome, &solve) {
+            (Some(o), _) => (o.nodes, o.optimal, o.lower_bound),
+            (None, Some(s)) => (s.nodes, s.optimal, s.lower_bound),
+            (None, None) => (0, false, 0),
         };
         let timing = TimingModel::default();
         let exec = self.execution();
@@ -561,11 +619,12 @@ impl Planner {
                     Engine::Ilp { max_nodes } => max_nodes,
                     _ => 0,
                 },
-                nodes: outcome.as_ref().map_or(0, |o| o.nodes),
-                optimal: outcome.as_ref().is_some_and(|o| o.optimal),
-                lower_bound: outcome.as_ref().map_or(0, |o| o.lower_bound),
+                nodes,
+                optimal,
+                lower_bound,
                 warm_hits,
                 threads,
+                counted: counted_mode,
             },
         })
     }
@@ -619,9 +678,12 @@ impl Planner {
     }
 }
 
-/// Count confirmed warm-start hints in a grid sweep: ILP points whose bin
-/// count equals their smaller neighbour's in the same aspect column (the
-/// §3.1 capacity-monotonicity heuristic the solver warm-starts from).
+/// Count capacity-monotonicity plateaus in an ILP grid sweep: points
+/// whose bin count equals their smaller neighbour's in the same aspect
+/// column. This is the structure the warm-start hints exploit (each point
+/// is hinted with the neighbour's counted simple-engine count, an upper
+/// bound on the neighbour's ILP count), not a literal count of
+/// hint-value matches.
 fn count_warm_hits(points: &[SweepPoint], n_aspects: usize) -> usize {
     if n_aspects == 0 {
         return 0;
@@ -686,10 +748,19 @@ pub struct Provenance {
     pub optimal: bool,
     /// ILP lower bound on the chosen configuration's bin count
     pub lower_bound: usize,
-    /// grid points whose warm-start hint was confirmed (ILP sweeps)
+    /// ILP grid points sitting on a capacity-monotonicity plateau (bin
+    /// count equal to the smaller neighbour's in the same aspect column —
+    /// the structure the warm-start hints exploit)
     pub warm_hits: usize,
     /// sweep worker threads used
     pub threads: usize,
+    /// the `points` array was priced through the counted shape-class path
+    /// (grid sweeps always; fixed tiles unless placements were requested,
+    /// where the one per-block pack doubles as the point). Placements
+    /// themselves always come from the per-block engines; on the counted
+    /// path per-block state is materialized only where an ILP search
+    /// demanded it, never for pricing.
+    pub counted: bool,
 }
 
 /// Plan many requests concurrently (the design-service entry point behind
@@ -856,6 +927,32 @@ mod tests {
             .unwrap();
         assert!(plan.best_per_aspect.iter().any(|p| p.tile == plan.best.tile));
         assert!(plan.throughput_per_s > 0.0);
+    }
+
+    #[test]
+    fn counted_mode_prices_identically_to_placement_mode() {
+        // without a placement request the planner prices through the
+        // counted shape-class path; numbers must match the per-block
+        // engines bit for bit, and the mode is recorded in provenance
+        for engine in [Engine::Simple, Engine::Ffd, Engine::Ilp { max_nodes: 200_000 }] {
+            let base = MapRequest::zoo("lenet").tile(256, 256).discipline(Discipline::Pipeline).engine(engine);
+            let counted = base.clone().build().unwrap().plan().unwrap();
+            let placed = base.placements(true).build().unwrap().plan().unwrap();
+            assert!(counted.provenance.counted, "{engine}");
+            assert!(!placed.provenance.counted, "{engine}");
+            assert!(counted.placements.is_none());
+            assert_eq!(counted.best.n_tiles, placed.best.n_tiles, "{engine}");
+            assert_eq!(
+                counted.best.packing_eff.to_bits(),
+                placed.best.packing_eff.to_bits(),
+                "{engine}"
+            );
+            assert_eq!(
+                counted.best.total_area_mm2.to_bits(),
+                placed.best.total_area_mm2.to_bits(),
+                "{engine}"
+            );
+        }
     }
 
     #[test]

@@ -25,8 +25,9 @@
 //!
 //! Plan schema: see [`plan_to_json`] (points/best/best_per_aspect as
 //! sweep-point objects, placements as `[block,bin,x,y]` rows, and a
-//! `provenance` object with budget, nodes, proof status, warm-start hits
-//! and worker count).
+//! `provenance` object with budget, nodes, proof status, warm-start hits,
+//! worker count, and whether the plan was priced through the counted
+//! shape-class path).
 //!
 //! Numbers ride on the `util::json` f64 value model, so integers are exact
 //! only up to 2^53 — ILP node budgets beyond that (quadrillions of nodes,
@@ -444,7 +445,8 @@ pub fn plan_to_json(p: &MapPlan) -> Json {
         .set("optimal", p.provenance.optimal)
         .set("lower_bound", p.provenance.lower_bound)
         .set("warm_hits", p.provenance.warm_hits)
-        .set("threads", p.provenance.threads);
+        .set("threads", p.provenance.threads)
+        .set("counted", p.provenance.counted);
     o.set("provenance", prov);
     Json::Obj(o)
 }
@@ -511,6 +513,15 @@ pub fn plan_from_json(j: &Json) -> Result<MapPlan, PlanError> {
             lower_bound: get_usize(prov, "lower_bound")?,
             warm_hits: get_usize(prov, "warm_hits")?,
             threads: get_usize(prov, "threads")?,
+            // absent in pre-counted-kernel documents (those plans were
+            // priced per-block); present-but-mistyped is a decode error
+            // like every other provenance field
+            counted: match prov.get("counted") {
+                None => false,
+                Some(v) => {
+                    v.as_bool().ok_or_else(|| err("provenance 'counted' must be a bool"))?
+                }
+            },
         },
     })
 }

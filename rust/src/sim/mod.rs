@@ -73,11 +73,9 @@ pub fn simulate(
     let n_layers = net.n_layers();
     let n_tiles = packing.n_bins.max(1);
 
-    // tiles hosting each layer
-    let mut layer_tiles: Vec<Vec<usize>> = vec![Vec::new(); n_layers];
-    for l in 0..n_layers {
-        layer_tiles[l] = packing.layer_bins(l);
-    }
+    // tiles hosting each layer — one pass over the placements (the old
+    // per-layer `layer_bins` queries were O(layers x placements))
+    let layer_tiles: Vec<Vec<usize>> = packing.layer_bins_map(n_layers);
     for (l, tiles) in layer_tiles.iter().enumerate() {
         assert!(
             !tiles.is_empty(),

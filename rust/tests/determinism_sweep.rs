@@ -94,8 +94,11 @@ fn ffd_engine_deterministic() {
 
 #[test]
 fn ilp_engine_deterministic_with_warm_chains() {
-    // ILP tasks are whole aspect columns so the warm-start chain is
-    // scheduling-independent; serial and parallel must agree exactly
+    // every ILP point is an independent task whose warm-start hint is a
+    // deterministic function of its own grid position (counted simple
+    // count of the smaller neighbour), so scheduling cannot leak into the
+    // results; serial (per-block hints) and parallel (counted hints) must
+    // agree exactly — this also cross-checks the counted hint kernel
     let net = zoo::lenet();
     for d in [Discipline::Dense, Discipline::Pipeline] {
         let cfg = SweepConfig {

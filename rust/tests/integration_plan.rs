@@ -91,8 +91,10 @@ fn grid_plan_placements_match_direct_call_at_chosen_tile() {
             .plan()
             .unwrap();
         // the direct call the sweep made for this point: greedy engines
-        // are hint-free; the ILP point was warm-started from its smaller
-        // neighbour in the aspect column, so replay that exact call
+        // are hint-free; the ILP point was warm-started with the counted
+        // simple-engine bin count of its smaller neighbour in the aspect
+        // column (== the per-block simple engine's count, property-tested
+        // in prop_counted.rs), so replay that exact call
         let (n_bins, placements) = match engine {
             Engine::Ilp { max_nodes } => {
                 let net = xbarmap::nets::zoo::by_name("lenet").unwrap();
@@ -102,7 +104,11 @@ fn grid_plan_placements_match_direct_call_at_chosen_tile() {
                     .iter()
                     .position(|p| p.tile == plan.best.tile)
                     .and_then(|i| i.checked_sub(1)) // one aspect => column stride 1
-                    .map(|prev| plan.points[prev].n_tiles);
+                    .map(|prev| {
+                        let prev_tile = plan.points[prev].tile;
+                        let pblocks = frag::fragment_network(&net, prev_tile);
+                        pack::simple::pack(&pblocks, prev_tile, Discipline::Pipeline).n_bins
+                    });
                 let r = ilp::exact::solve_with_hint(
                     &blocks,
                     plan.best.tile,
@@ -293,6 +299,7 @@ fn gen_plan(rng: &mut Rng) -> MapPlan {
             lower_bound: rng.range(0, 64),
             warm_hits: rng.range(0, 64),
             threads: rng.range(1, 64),
+            counted: rng.chance(0.5),
         },
     }
 }

@@ -1,0 +1,228 @@
+//! Counted-vs-materialized equivalence (the PR 3 acceptance bar): pricing
+//! a tile configuration from the §2.1 shape-class census must produce the
+//! **identical** bin count — and bit-identical packing efficiency — to
+//! fragmenting every block and running the per-block engines, for all
+//! three engines, both disciplines, every sort order, and arbitrary RAPA
+//! replication vectors.
+
+use xbarmap::frag;
+use xbarmap::geom::Tile;
+use xbarmap::ilp;
+use xbarmap::nets::{zoo, Layer, Network};
+use xbarmap::pack::{self, counted, Discipline, SortOrder};
+use xbarmap::util::prng::Rng;
+use xbarmap::util::prop::{check, Config};
+
+const ORDERS: [SortOrder; 3] = [SortOrder::RowsDesc, SortOrder::RowsAsc, SortOrder::AsGiven];
+const DISCIPLINES: [Discipline; 2] = [Discipline::Dense, Discipline::Pipeline];
+
+/// A random little network: 1..5 fc layers (some bias-free) whose matrices
+/// deliberately mix exact-multiple and ragged dimensions against the tile.
+fn gen_net(rng: &mut Rng, tile: Tile) -> Network {
+    let n_layers = rng.range(1, 5);
+    let layers = (0..n_layers)
+        .map(|i| {
+            // with 30% probability snap a dimension to a tile multiple so
+            // Full/RowFull/ColFull classes all get exercised
+            let mut dim = |t: usize| {
+                if rng.chance(0.3) {
+                    t * rng.range(1, 4)
+                } else {
+                    rng.range(1, 3 * t)
+                }
+            };
+            let (fan_in, fan_out) = (dim(tile.n_row), dim(tile.n_col));
+            let mut l = Layer::fc(&format!("fc{i}"), fan_in.max(1), fan_out.max(1));
+            l.bias = rng.chance(0.5);
+            l
+        })
+        .collect();
+    Network::new("prop-net", "counted equivalence", layers)
+}
+
+fn gen_replication(rng: &mut Rng, n_layers: usize) -> Vec<usize> {
+    (0..n_layers)
+        .map(|_| if rng.chance(0.3) { rng.range(2, 5) } else { 1 })
+        .collect()
+}
+
+fn gen_tile(rng: &mut Rng) -> Tile {
+    let n_col = 1usize << rng.range(5, 9); // 32..512
+    let aspect = rng.range(1, 4);
+    Tile::new(n_col * aspect, n_col)
+}
+
+#[test]
+fn prop_census_conserves_blocks_weights_and_kinds() {
+    check("census conservation", Config { cases: 200, seed: 0xC0DE_C1 }, |rng| {
+        let tile = gen_tile(rng);
+        let net = gen_net(rng, tile);
+        let reps = gen_replication(rng, net.n_layers());
+        let classes = frag::shape_classes(&net, tile, &reps);
+        let blocks = frag::fragment_network_replicated(&net, tile, &reps);
+        if frag::total_class_blocks(&classes) != blocks.len() {
+            return Err(format!(
+                "census {} blocks != materialized {}",
+                frag::total_class_blocks(&classes),
+                blocks.len()
+            ));
+        }
+        if frag::total_class_weights(&classes) != frag::total_block_weights(&blocks) {
+            return Err("census weights diverge".into());
+        }
+        if frag::Census::of_classes(&classes) != frag::Census::of(&blocks) {
+            return Err(format!(
+                "kind census diverges: {:?} vs {:?}",
+                frag::Census::of_classes(&classes),
+                frag::Census::of(&blocks)
+            ));
+        }
+        if classes.len() > 4 * net.n_layers() {
+            return Err(format!("{} classes for {} layers", classes.len(), net.n_layers()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_counted_simple_matches_per_block_all_orders() {
+    let mut scratch = counted::CountedScratch::new();
+    check("counted simple == per-block", Config { cases: 150, seed: 0xC0DE_C2 }, |rng| {
+        let tile = gen_tile(rng);
+        let net = gen_net(rng, tile);
+        let reps = gen_replication(rng, net.n_layers());
+        let classes = frag::shape_classes(&net, tile, &reps);
+        let blocks = frag::fragment_network_replicated(&net, tile, &reps);
+        let stored_counted = frag::total_class_weights(&classes);
+        let stored_blocks = frag::total_block_weights(&blocks);
+        for d in DISCIPLINES {
+            for order in ORDERS {
+                let c = counted::simple_bins(&classes, tile, d, order, &mut scratch);
+                let r = pack::simple::pack_ordered(&blocks, tile, d, order).n_bins;
+                if c != r {
+                    return Err(format!("simple {d} {order}: counted {c} != per-block {r}"));
+                }
+                // efficiencies derive from the same integers through the
+                // same shared formula -> bit-identical
+                let eff_c = pack::packing_efficiency(stored_counted, c, tile.capacity());
+                let eff_r = pack::packing_efficiency(stored_blocks, r, tile.capacity());
+                if eff_c.to_bits() != eff_r.to_bits() {
+                    return Err(format!("simple {d} {order}: eff bits diverge"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_counted_ffd_matches_per_block() {
+    let mut scratch = counted::CountedScratch::new();
+    check("counted ffd == per-block", Config { cases: 150, seed: 0xC0DE_C3 }, |rng| {
+        let tile = gen_tile(rng);
+        let net = gen_net(rng, tile);
+        let reps = gen_replication(rng, net.n_layers());
+        let classes = frag::shape_classes(&net, tile, &reps);
+        let blocks = frag::fragment_network_replicated(&net, tile, &reps);
+        for d in DISCIPLINES {
+            let c = counted::ffd_bins(&classes, tile, d, &mut scratch);
+            let r = pack::ffd::pack(&blocks, tile, d).n_bins;
+            if c != r {
+                return Err(format!("ffd {d}: counted {c} != per-block {r}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_counted_ilp_matches_per_block() {
+    let mut cscratch = counted::CountedScratch::new();
+    let mut pscratch = pack::PackScratch::new();
+    let mut buf = Vec::new();
+    check("counted ilp == per-block", Config { cases: 40, seed: 0xC0DE_C4 }, |rng| {
+        // small instances so the searches actually run within the budget
+        let tile = Tile::new(1usize << rng.range(6, 8), 1usize << rng.range(6, 8));
+        let net = gen_net(rng, tile);
+        let reps = vec![1usize; net.n_layers()];
+        let classes = frag::shape_classes(&net, tile, &reps);
+        if frag::total_class_blocks(&classes) > 80 {
+            return Ok(()); // keep the search tractable; coverage comes from volume
+        }
+        let blocks = frag::fragment_network_replicated(&net, tile, &reps);
+        for d in DISCIPLINES {
+            for max_nodes in [500u64, 20_000] {
+                let budget = ilp::Budget { max_nodes, ..Default::default() };
+                for hint in [None, Some(2)] {
+                    let per_block =
+                        ilp::exact::solve_bins(&blocks, tile, d, budget, hint, &mut pscratch);
+                    let census = ilp::solve_bins_census(
+                        &classes,
+                        tile,
+                        d,
+                        budget,
+                        hint,
+                        &mut buf,
+                        |out| frag::fragment_network_replicated_into(&net, tile, &reps, out),
+                        &mut cscratch,
+                    );
+                    if census.n_bins != per_block.n_bins {
+                        return Err(format!(
+                            "ilp {d} n{max_nodes} {hint:?}: counted {} != per-block {}",
+                            census.n_bins, per_block.n_bins
+                        ));
+                    }
+                    if census.lower_bound != per_block.lower_bound
+                        || census.optimal != per_block.optimal
+                        || census.nodes != per_block.nodes
+                    {
+                        return Err(format!(
+                            "ilp {d} n{max_nodes} {hint:?}: provenance diverges ({:?} vs {:?})",
+                            (census.lower_bound, census.optimal, census.nodes),
+                            (per_block.lower_bound, per_block.optimal, per_block.nodes),
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The zoo, including RAPA-replicated configurations, through the counted
+/// kernels — the concrete workloads the sweep prices every day.
+#[test]
+fn zoo_counted_equivalence_including_replication() {
+    let mut scratch = counted::CountedScratch::new();
+    let cases: Vec<(Network, Vec<usize>)> = vec![
+        (zoo::lenet(), vec![1; 5]),
+        (zoo::alexnet(), vec![1; zoo::alexnet().n_layers()]),
+        (zoo::resnet18(), vec![1; zoo::resnet18().n_layers()]),
+        (zoo::resnet18(), xbarmap::perf::rapa::plan_balanced(&zoo::resnet18(), 128)),
+        // uniform x8 keeps the debug-build per-block reference tractable;
+        // the benches run the full x64 BERT replication in release
+        (zoo::bert_layer(64), vec![8; 6]),
+    ];
+    for (net, reps) in cases {
+        for tile in [Tile::new(64, 64), Tile::new(256, 256), Tile::new(1024, 512)] {
+            let classes = frag::shape_classes(&net, tile, &reps);
+            let blocks = frag::fragment_network_replicated(&net, tile, &reps);
+            for d in DISCIPLINES {
+                for order in ORDERS {
+                    assert_eq!(
+                        counted::simple_bins(&classes, tile, d, order, &mut scratch),
+                        pack::simple::pack_ordered(&blocks, tile, d, order).n_bins,
+                        "{} {tile} {d} {order} simple",
+                        net.name
+                    );
+                }
+                assert_eq!(
+                    counted::ffd_bins(&classes, tile, d, &mut scratch),
+                    pack::ffd::pack(&blocks, tile, d).n_bins,
+                    "{} {tile} {d} ffd",
+                    net.name
+                );
+            }
+        }
+    }
+}
