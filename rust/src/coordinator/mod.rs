@@ -21,6 +21,7 @@ use crate::pack::{Discipline, Packing};
 use crate::plan::{self, MapRequest, NetworkSpec, Replication};
 use crate::runtime::{artifacts_dir, LoadedModel, Runtime, Tensor};
 use crate::util::json::{self, Json};
+use crate::util::stats;
 use anyhow::{anyhow, Context, Result};
 use std::path::PathBuf;
 use std::sync::mpsc::Receiver;
@@ -91,15 +92,16 @@ impl Coordinator {
         let model = runtime.load_hlo_text(&dir.join(artifact))?;
 
         // map the served network onto the physical tile configuration
-        // through the planning front door
+        // through the planning front door — one solve produces both the
+        // adopted mapping and its pricing, so the two can never diverge
+        // (the old plan()-then-pack() pair fragmented and packed twice)
         let planner = MapRequest::zoo("digits-mlp")
             .tile(tile.n_row, tile.n_col)
             .discipline(cfg.discipline)
             .build()
             .map_err(|e| anyhow!("deployment plan: {e}"))?;
-        let deployment = planner.plan().map_err(|e| anyhow!("deployment plan: {e}"))?;
-        let mapping =
-            planner.pack(tile).map_err(|e| anyhow!("deployment pack: {e}"))?.packing;
+        let (deployment, mapping) =
+            planner.plan_deployment().map_err(|e| anyhow!("deployment plan: {e}"))?;
         let total_area_mm2 = deployment.best.total_area_mm2;
         let modeled_latency_s = deployment.latency_s;
 
@@ -198,22 +200,19 @@ impl Coordinator {
         flush(&mut pending, &mut batch_times, &mut correct, &mut total)?;
 
         let wall = start.elapsed().as_secs_f64();
+        // total_cmp (NaN can't panic the sort) + the shared nearest-rank
+        // percentile — the same definition the planning service's stats
+        // frame reports, and exact at small batch counts where the old
+        // `.round()` picker chose the wrong rank
         let mut sorted = batch_times.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| {
-            if sorted.is_empty() {
-                0.0
-            } else {
-                sorted[((sorted.len() - 1) as f64 * p).round() as usize]
-            }
-        };
+        stats::sort_samples(&mut sorted);
         Ok(ServeStats {
             requests: total,
             batches: batch_times.len(),
             wall_s: wall,
             throughput_per_s: total as f64 / wall.max(1e-12),
-            batch_p50_s: pct(0.50),
-            batch_p95_s: pct(0.95),
+            batch_p50_s: stats::percentile_nearest_rank(&sorted, 0.50),
+            batch_p95_s: stats::percentile_nearest_rank(&sorted, 0.95),
             accuracy: if total == 0 { 0.0 } else { correct as f64 / total as f64 },
         })
     }

@@ -52,6 +52,16 @@
 //! `xbarmap plan` subcommand), and [`plan::serve_batch`] prices many
 //! decoded requests concurrently for multi-tenant serving.
 //!
+//! For an always-on deployment, [`service`] wires the same wire format
+//! into a long-running TCP listener — `xbarmap serve --plans --addr
+//! HOST:PORT` — with a bounded request queue feeding a shared worker pool
+//! (fair interleaving across connections, backpressure instead of
+//! unbounded buffering), a canonical-request plan cache, graceful
+//! SIGINT shutdown that drains in-flight plans, and an in-band
+//! `{"v":1,"cmd":"stats"}` request reporting counters and p50/p95 plan
+//! latency. Per connection, responses are byte-identical to piping the
+//! same stream through [`plan::serve_jsonl`].
+//!
 //! ## Under the hood
 //!
 //! * **Disciplines** (paper §2.2): *dense* shelf packing (maximum density,
@@ -88,6 +98,7 @@ pub mod area;
 pub mod perf;
 pub mod opt;
 pub mod plan;
+pub mod service;
 pub mod sim;
 pub mod runtime;
 pub mod coordinator;

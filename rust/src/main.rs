@@ -6,7 +6,8 @@
 //! * `pack`       — pack one network onto one tile dimension, print placement;
 //! * `plan`       — serve JSONL MapRequests as JSONL MapPlans (file or stdin);
 //! * `info`       — show a network's layers, WM shapes and reuse factors;
-//! * `serve`      — end-to-end serving through the AOT crossbar artifact;
+//! * `serve`      — end-to-end serving through the AOT crossbar artifact, or
+//!   with `--plans` the long-running TCP/JSONL planning service;
 //! * `bench-gate` — compare BENCH_*.json medians against a baseline.
 //!
 //! `sweep` and `pack` are thin shims over the [`xbarmap::plan`] front door;
@@ -21,6 +22,7 @@ use xbarmap::opt::Engine;
 use xbarmap::pack::Discipline;
 use xbarmap::plan::{self, MapRequest, Replication};
 use xbarmap::report;
+use xbarmap::service::{Service, ServiceConfig};
 use xbarmap::util::benchkit;
 use xbarmap::util::cli::{usage, Args, OptSpec};
 use xbarmap::util::json;
@@ -33,7 +35,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("pack", "pack a network onto one tile dimension"),
     ("plan", "stream JSONL mapping requests -> JSONL plans (v1 wire format)"),
     ("info", "describe a zoo network"),
-    ("serve", "serve synthetic digit requests through the AOT crossbar model"),
+    ("serve", "serve inference (--plans: long-running TCP/JSONL planning service)"),
     ("bench-gate", "fail when bench medians regress past a baseline"),
 ];
 
@@ -235,6 +237,11 @@ fn cmd_info(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(argv: &[String]) -> Result<()> {
+    // `serve --plans` is the long-running planning service; plain `serve`
+    // drives digit inference through the AOT crossbar artifact
+    if argv.iter().any(|a| a == "--plans") {
+        return cmd_serve_plans(argv);
+    }
     let specs = [
         OptSpec { name: "requests", help: "number of synthetic requests", value: Some("N"), default: Some("2048") },
         OptSpec { name: "artifacts", help: "artifacts directory", value: Some("DIR"), default: None },
@@ -283,6 +290,46 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     if let Some(build_acc) = coordinator.build_time_accuracy() {
         println!("build-time crossbar accuracy (meta.json): {build_acc:.4}");
     }
+    Ok(())
+}
+
+/// The always-on planning service: a TCP listener speaking the same JSONL
+/// wire as `xbarmap plan`, with a bounded queue + worker pool, a
+/// canonical-request plan cache, an in-band `{"v":1,"cmd":"stats"}`
+/// request, and graceful drain on ctrl-C.
+fn cmd_serve_plans(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "plans", help: "serve mapping plans over TCP/JSONL", value: None, default: None },
+        OptSpec { name: "addr", help: "listen address (':0' = ephemeral port)", value: Some("HOST:PORT"), default: Some("127.0.0.1:7878") },
+        OptSpec { name: "workers", help: "planning worker threads (0 = auto)", value: Some("N"), default: Some("0") },
+        OptSpec { name: "queue", help: "bounded request-queue capacity", value: Some("N"), default: Some("64") },
+        OptSpec { name: "cache", help: "plan-cache entries (0 = disable)", value: Some("N"), default: Some("256") },
+    ];
+    let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
+    let cfg = ServiceConfig {
+        addr: a.req("addr").map_err(|e| anyhow!(e))?.to_string(),
+        workers: a.req_usize("workers").map_err(|e| anyhow!(e))?,
+        queue_capacity: a.req_usize("queue").map_err(|e| anyhow!(e))?.max(1),
+        cache_capacity: a.req_usize("cache").map_err(|e| anyhow!(e))?,
+        watch_sigint: true,
+    };
+    let service = Service::bind(&cfg).map_err(|e| anyhow!("bind {}: {e}", cfg.addr))?;
+    eprintln!(
+        "xbarmap planning service listening on {} (queue {}, cache {}, ctrl-C drains and exits)",
+        service.local_addr()?,
+        cfg.queue_capacity,
+        cfg.cache_capacity,
+    );
+    let stats = service.run()?;
+    eprintln!(
+        "served {} plan(s) ({} cache hit(s)), {} error(s) over {} connection(s) | plan p50 {:.3} ms p95 {:.3} ms",
+        stats.served,
+        stats.cache_hits,
+        stats.errors,
+        stats.connections,
+        stats.plan_p50_s * 1e3,
+        stats.plan_p95_s * 1e3,
+    );
     Ok(())
 }
 

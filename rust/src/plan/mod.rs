@@ -523,6 +523,39 @@ impl Planner {
     /// engines (identical numbers, plus coordinates), solved once for the
     /// chosen tile.
     pub fn plan(&self) -> Result<MapPlan, PlanError> {
+        self.plan_with_outcome().map(|(plan, _)| plan)
+    }
+
+    /// Plan a fixed-tile deployment with **one** solve: the returned
+    /// [`MapPlan`] and the returned [`Packing`] come from the same
+    /// materialized per-block pack, so the mapping a server adopts and the
+    /// pricing it reports can never diverge (and startup pays a single
+    /// fragmentation + packing pass, not two). The serving coordinator is
+    /// the intended caller. Errors on grid requests — a deployment is one
+    /// physical tile dimension.
+    pub fn plan_deployment(&self) -> Result<(MapPlan, Packing), PlanError> {
+        if !matches!(self.request.tiles, TileSpace::Fixed(_)) {
+            return Err(err("plan_deployment requires a fixed tile — a deployment is one physical tile dimension, not a grid"));
+        }
+        let (mut plan, outcome) = if self.request.include_placements {
+            self.plan_with_outcome()?
+        } else {
+            // force materialization so the point, the provenance and the
+            // returned packing all come from this one solve
+            let mut forced = self.clone();
+            forced.request.include_placements = true;
+            forced.plan_with_outcome()?
+        };
+        let outcome = outcome.expect("fixed-tile placement plans materialize a packing");
+        if !self.request.include_placements {
+            plan.placements = None; // the packing carries them instead
+        }
+        Ok((plan, outcome.packing))
+    }
+
+    /// [`Planner::plan`] keeping the materialized [`PackOutcome`] (when one
+    /// was solved) alongside the plan it priced.
+    fn plan_with_outcome(&self) -> Result<(MapPlan, Option<PackOutcome>), PlanError> {
         let req = &self.request;
         let threads = if req.threads == 0 { opt::sweep_threads() } else { req.threads };
         // whether the `points` array is priced through the counted path:
@@ -598,7 +631,7 @@ impl Planner {
             }
             _ => 0,
         };
-        Ok(MapPlan {
+        let plan = MapPlan {
             id: req.id.clone(),
             network: self.net.name.clone(),
             discipline: req.discipline,
@@ -626,7 +659,8 @@ impl Planner {
                 threads,
                 counted: counted_mode,
             },
-        })
+        };
+        Ok((plan, outcome))
     }
 
     fn choose(
@@ -784,6 +818,13 @@ pub fn serve_batch_with_threads(
 }
 
 /// Outcome of a [`serve_jsonl`] run.
+///
+/// `requests` counts the non-blank lines that were served (one response
+/// line each); `errors` counts how many of those responded with an error
+/// frame. Neither is a line *number*: error frames carry the physical
+/// 1-based input line in their `"line"` field (blank lines included), so
+/// with blank lines in the input an error's `"line"` can exceed
+/// `requests` — that is the documented contract, not a miscount.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ServeSummary {
     pub requests: usize,
@@ -791,12 +832,14 @@ pub struct ServeSummary {
 }
 
 /// The v1 JSONL service loop: read one JSON [`MapRequest`] per input line,
-/// stream one JSON line per request — a [`MapPlan`] on success, else
-/// `{"v":1,"line":N,"error":"..."}` — flushing after every line so
-/// downstream consumers see plans as they are produced. Blank lines are
-/// skipped; a malformed line is reported and does not stop the stream.
+/// stream one JSON line per request — a [`MapPlan`] on success, else the
+/// [`wire::error_frame`] `{"v":1,"line":N,"error":"..."}` where `N` is the
+/// **physical** 1-based input line number (blank lines count toward `N`
+/// but produce no response and are excluded from
+/// [`ServeSummary::requests`]) — flushing after every line so downstream
+/// consumers see plans as they are produced. A malformed line is reported
+/// and does not stop the stream.
 pub fn serve_jsonl<R: BufRead, W: Write>(input: R, out: &mut W) -> std::io::Result<ServeSummary> {
-    use crate::util::json::{Json, JsonObj};
     let mut summary = ServeSummary { requests: 0, errors: 0 };
     for (idx, line) in input.lines().enumerate() {
         let line = line?;
@@ -809,9 +852,7 @@ pub fn serve_jsonl<R: BufRead, W: Write>(input: R, out: &mut W) -> std::io::Resu
             Ok(plan) => writeln!(out, "{}", plan.to_json().dumps())?,
             Err(e) => {
                 summary.errors += 1;
-                let mut o = JsonObj::new();
-                o.set("v", WIRE_VERSION).set("line", idx + 1).set("error", e.0.as_str());
-                writeln!(out, "{}", Json::Obj(o).dumps())?;
+                writeln!(out, "{}", wire::error_frame(idx + 1, &e).dumps())?;
             }
         }
         out.flush()?;
@@ -819,9 +860,18 @@ pub fn serve_jsonl<R: BufRead, W: Write>(input: R, out: &mut W) -> std::io::Resu
     Ok(summary)
 }
 
-fn plan_line(line: &str) -> Result<MapPlan, PlanError> {
+/// Parse one JSONL line into a decoded [`MapRequest`] — the first stage
+/// of [`serve_jsonl`]. The network service ([`crate::service`]) decodes
+/// the same wire via [`MapRequest::from_json`] on its already-parsed
+/// document (it must inspect the JSON before deciding the line is a
+/// request), with the identical `parse request:` error prefix.
+pub fn parse_request_line(line: &str) -> Result<MapRequest, PlanError> {
     let j = crate::util::json::parse(line).map_err(|e| err(format!("parse request: {e}")))?;
-    MapRequest::from_json(&j)?.build()?.plan()
+    MapRequest::from_json(&j)
+}
+
+fn plan_line(line: &str) -> Result<MapPlan, PlanError> {
+    parse_request_line(line)?.build()?.plan()
 }
 
 #[cfg(test)]
@@ -986,6 +1036,62 @@ mod tests {
         assert_eq!(out[2].as_ref().unwrap().id, "c");
         let serial = serve_batch_with_threads(&reqs, 1);
         assert_eq!(out[0].as_ref().unwrap().points, serial[0].as_ref().unwrap().points);
+    }
+
+    #[test]
+    fn plan_deployment_solves_once_and_matches_the_engine() {
+        let tile = Tile::new(256, 256);
+        let planner = MapRequest::zoo("lenet")
+            .tile(tile.n_row, tile.n_col)
+            .discipline(Discipline::Pipeline)
+            .build()
+            .unwrap();
+        let (plan, mapping) = planner.plan_deployment().unwrap();
+        // the mapping is the exact per-block engine pack, and the plan
+        // prices it: same bin count, and the latency the fixed-tile plan
+        // path reports
+        let direct = planner.pack(tile).unwrap().packing;
+        assert_eq!(mapping.placements, direct.placements);
+        assert_eq!(mapping.n_bins, direct.n_bins);
+        assert_eq!(plan.best.n_tiles, mapping.n_bins);
+        let solo = planner.plan().unwrap();
+        assert_eq!(plan.best.total_area_mm2.to_bits(), solo.best.total_area_mm2.to_bits());
+        assert_eq!(plan.latency_s.to_bits(), solo.latency_s.to_bits());
+        // placements live on the packing unless the request asked for them
+        assert!(plan.placements.is_none());
+        let (plan2, mapping2) = MapRequest::zoo("lenet")
+            .tile(tile.n_row, tile.n_col)
+            .discipline(Discipline::Pipeline)
+            .placements(true)
+            .build()
+            .unwrap()
+            .plan_deployment()
+            .unwrap();
+        assert_eq!(plan2.placements.as_deref(), Some(mapping2.placements.as_slice()));
+        // a deployment is one physical tile dimension — grids are rejected
+        let grid = MapRequest::zoo("lenet").build().unwrap();
+        assert!(grid.plan_deployment().unwrap_err().0.contains("fixed tile"));
+    }
+
+    #[test]
+    fn serve_jsonl_error_lines_are_physical_line_numbers() {
+        // two blank lines precede the malformed request: the error frame
+        // points at physical line 4 of the input while the summary counts
+        // only the two non-blank requests — the documented contract
+        let input = concat!(
+            "\n\n",
+            r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"fixed":[256,256]}}"#,
+            "\n",
+            "not json\n",
+        );
+        let mut out = Vec::new();
+        let summary = serve_jsonl(input.as_bytes(), &mut out).unwrap();
+        assert_eq!(summary, ServeSummary { requests: 2, errors: 1 });
+        let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().trim().lines().collect();
+        assert_eq!(lines.len(), 2);
+        let err_line = crate::util::json::parse(lines[1]).unwrap();
+        assert_eq!(err_line.get("line").and_then(|v| v.as_usize()), Some(4));
+        assert!(err_line.get("error").is_some());
     }
 
     #[test]

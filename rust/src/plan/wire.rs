@@ -96,7 +96,7 @@ fn usize_arr(j: &Json, what: &str) -> Result<Vec<usize>, PlanError> {
     Ok(v)
 }
 
-fn check_version(o: &JsonObj, what: &str) -> Result<(), PlanError> {
+pub(crate) fn check_version(o: &JsonObj, what: &str) -> Result<(), PlanError> {
     match o.get("v").and_then(Json::as_f64) {
         // exact integral match: "v":1.9 is a mismatch, not a v1 document
         Some(v) if v == v.trunc() && v as u64 == WIRE_VERSION => Ok(()),
@@ -526,6 +526,69 @@ pub fn plan_from_json(j: &Json) -> Result<MapPlan, PlanError> {
     })
 }
 
+// ---- service frames ----
+
+/// The JSONL error frame shared by every request-path loop:
+/// `{"v":1,"line":N,"error":"..."}`. `line` is the **physical** 1-based
+/// line number within the input stream or connection — blank lines count,
+/// so the number always points at the offending line of whatever the
+/// client actually sent (it is *not* the request ordinal; see
+/// [`super::ServeSummary`]).
+pub fn error_frame(line: usize, e: &PlanError) -> Json {
+    let mut o = JsonObj::new();
+    o.set("v", WIRE_VERSION).set("line", line).set("error", e.0.as_str());
+    Json::Obj(o)
+}
+
+/// Counters and plan-latency percentiles reported by the planning
+/// service's in-band `{"v":1,"cmd":"stats"}` request.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct StatsSnapshot {
+    /// plan responses served (cache hits included; error frames excluded)
+    pub served: u64,
+    /// error frames served
+    pub errors: u64,
+    /// plan responses answered from the canonical-request cache
+    pub cache_hits: u64,
+    /// connections accepted since startup
+    pub connections: u64,
+    /// nearest-rank p50 of plan *solve* latency, seconds (cache hits and
+    /// error frames don't contribute samples)
+    pub plan_p50_s: f64,
+    /// nearest-rank p95 of plan solve latency, seconds
+    pub plan_p95_s: f64,
+}
+
+/// Encode a stats snapshot as the v1 `{"v":1,"stats":{...}}` frame.
+pub fn stats_frame(s: &StatsSnapshot) -> Json {
+    let mut inner = JsonObj::new();
+    inner
+        .set("served", s.served)
+        .set("errors", s.errors)
+        .set("cache_hits", s.cache_hits)
+        .set("connections", s.connections)
+        .set("plan_p50_s", s.plan_p50_s)
+        .set("plan_p95_s", s.plan_p95_s);
+    let mut o = JsonObj::new();
+    o.set("v", WIRE_VERSION).set("stats", inner);
+    Json::Obj(o)
+}
+
+/// Decode a v1 stats frame (the client-side partner of [`stats_frame`]).
+pub fn stats_from_json(j: &Json) -> Result<StatsSnapshot, PlanError> {
+    let o = obj(j, "stats frame")?;
+    check_version(o, "stats frame")?;
+    let s = obj(o.get("stats").ok_or_else(|| err("frame missing 'stats'"))?, "'stats'")?;
+    Ok(StatsSnapshot {
+        served: get_u64(s, "served")?,
+        errors: get_u64(s, "errors")?,
+        cache_hits: get_u64(s, "cache_hits")?,
+        connections: get_u64(s, "connections")?,
+        plan_p50_s: get_f64(s, "plan_p50_s")?,
+        plan_p95_s: get_f64(s, "plan_p95_s")?,
+    })
+}
+
 fn point_to_json(p: &SweepPoint) -> JsonObj {
     let mut o = JsonObj::new();
     o.set("tile", vec![Json::from(p.tile.n_row), Json::from(p.tile.n_col)])
@@ -657,6 +720,30 @@ mod tests {
             let e = request_from_json(&j).unwrap_err();
             assert!(e.0.contains(needle), "{src}: {e}");
         }
+    }
+
+    #[test]
+    fn error_frame_carries_physical_line_number() {
+        let f = error_frame(7, &PlanError("boom".into()));
+        assert_eq!(f.dumps(), r#"{"v":1,"line":7,"error":"boom"}"#);
+    }
+
+    #[test]
+    fn stats_frame_roundtrips() {
+        let s = StatsSnapshot {
+            served: 41,
+            errors: 2,
+            cache_hits: 17,
+            connections: 5,
+            plan_p50_s: 0.0125,
+            plan_p95_s: 0.25,
+        };
+        let j = stats_frame(&s);
+        let back = stats_from_json(&crate::util::json::parse(&j.dumps()).unwrap()).unwrap();
+        assert_eq!(back, s);
+        // version tag is enforced like every other frame
+        let unversioned = crate::util::json::parse(r#"{"stats":{}}"#).unwrap();
+        assert!(stats_from_json(&unversioned).unwrap_err().0.contains("version"));
     }
 
     #[test]

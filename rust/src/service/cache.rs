@@ -1,0 +1,163 @@
+//! Canonical-request plan cache.
+//!
+//! Multi-tenant traffic repeats itself: zoo networks under the default
+//! §3.1 grid, the same fixed-tile pricing question from every replica of a
+//! design loop. Plans are deterministic functions of the request, so the
+//! service memoizes them keyed by the request's **canonical v1
+//! serialization** ([`crate::plan::wire::request_to_json`] emits a fixed
+//! key order with defaults omitted, so any two requests that decode equal
+//! serialize equal). The correlation id is cleared out of the key — and
+//! out of the cached plan — because it only echoes back to the caller:
+//! tenants asking the same design question under different ids share one
+//! entry, and the hit path re-stamps the incoming id before serializing.
+//!
+//! Eviction is FIFO with a fixed entry capacity — the goal is a bounded
+//! memory footprint for an always-on service, not a perfect hit rate.
+
+use crate::plan::{MapPlan, MapRequest};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+struct Inner {
+    map: HashMap<String, Arc<MapPlan>>,
+    /// insertion order, oldest first (FIFO eviction)
+    order: VecDeque<String>,
+}
+
+/// Bounded memoization of canonical request → plan. Capacity 0 disables
+/// caching entirely (every lookup misses, inserts are dropped).
+pub struct PlanCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+impl PlanCache {
+    pub fn new(capacity: usize) -> PlanCache {
+        PlanCache {
+            capacity,
+            inner: Mutex::new(Inner { map: HashMap::new(), order: VecDeque::new() }),
+        }
+    }
+
+    /// Whether lookups can ever hit — callers skip [`PlanCache::key`]'s
+    /// clone + serialization when not.
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// The cache key: the request's canonical serialization with the
+    /// correlation id cleared (the id is an echo, not an input to
+    /// planning).
+    ///
+    /// An id-carrying request pays one request clone here, and a hit pays
+    /// one plan clone to restamp the id — both deliberate: canonical
+    /// serialization owns the equality rule (no hand-rolled field
+    /// stripping to drift), and a hit's clone+serialize is still orders
+    /// of magnitude cheaper than the solve it avoids.
+    pub fn key(req: &MapRequest) -> String {
+        if req.id.is_empty() {
+            return req.to_json().dumps();
+        }
+        let mut anon = req.clone();
+        anon.id = String::new();
+        anon.to_json().dumps()
+    }
+
+    /// Look up a cached plan. The returned plan carries an empty id — the
+    /// caller re-stamps the incoming request's id before serializing.
+    pub fn get(&self, key: &str) -> Option<Arc<MapPlan>> {
+        if self.capacity == 0 {
+            return None;
+        }
+        self.inner.lock().unwrap().map.get(key).cloned()
+    }
+
+    /// Insert a plan (id already cleared by the caller). Replaces an
+    /// existing entry for the same key without consuming extra capacity;
+    /// otherwise evicts the oldest entry once full.
+    pub fn insert(&self, key: String, plan: Arc<MapPlan>) {
+        if self.capacity == 0 {
+            return;
+        }
+        debug_assert!(plan.id.is_empty(), "cached plans must be anonymous");
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.insert(key.clone(), plan).is_none() {
+            inner.order.push_back(key);
+            if inner.order.len() > self.capacity {
+                if let Some(oldest) = inner.order.pop_front() {
+                    inner.map.remove(&oldest);
+                }
+            }
+        }
+    }
+
+    /// Entries currently cached.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::MapRequest;
+
+    fn plan_for(req: &MapRequest) -> Arc<MapPlan> {
+        let mut plan = req.clone().build().unwrap().plan().unwrap();
+        plan.id.clear();
+        Arc::new(plan)
+    }
+
+    #[test]
+    fn key_ignores_the_correlation_id_only() {
+        let a = MapRequest::zoo("lenet").id("tenant-a").tile(256, 256);
+        let b = MapRequest::zoo("lenet").id("tenant-b").tile(256, 256);
+        let c = MapRequest::zoo("lenet").id("tenant-a").tile(256, 128);
+        assert_eq!(PlanCache::key(&a), PlanCache::key(&b));
+        assert_ne!(PlanCache::key(&a), PlanCache::key(&c));
+        // and the key of an id-less request matches the anonymized form
+        assert_eq!(PlanCache::key(&a), PlanCache::key(&MapRequest::zoo("lenet").tile(256, 256)));
+    }
+
+    #[test]
+    fn fifo_eviction_bounds_the_entry_count() {
+        let cache = PlanCache::new(2);
+        let reqs: Vec<MapRequest> = [64, 128, 256]
+            .iter()
+            .map(|&r| MapRequest::zoo("lenet").tile(r, 64))
+            .collect();
+        for req in &reqs {
+            cache.insert(PlanCache::key(req), plan_for(req));
+        }
+        assert_eq!(cache.len(), 2);
+        // the oldest entry was evicted, the two newest remain
+        assert!(cache.get(&PlanCache::key(&reqs[0])).is_none());
+        assert!(cache.get(&PlanCache::key(&reqs[1])).is_some());
+        assert!(cache.get(&PlanCache::key(&reqs[2])).is_some());
+    }
+
+    #[test]
+    fn replacing_a_key_does_not_consume_capacity() {
+        let cache = PlanCache::new(2);
+        let a = MapRequest::zoo("lenet").tile(64, 64);
+        let b = MapRequest::zoo("lenet").tile(128, 64);
+        cache.insert(PlanCache::key(&a), plan_for(&a));
+        cache.insert(PlanCache::key(&a), plan_for(&a));
+        cache.insert(PlanCache::key(&b), plan_for(&b));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(&PlanCache::key(&a)).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let cache = PlanCache::new(0);
+        let a = MapRequest::zoo("lenet").tile(64, 64);
+        cache.insert(PlanCache::key(&a), plan_for(&a));
+        assert!(cache.get(&PlanCache::key(&a)).is_none());
+        assert!(cache.is_empty());
+    }
+}

@@ -1,0 +1,204 @@
+//! Per-connection response ordering.
+//!
+//! Requests from one connection fan out across the shared worker pool and
+//! complete in any order, but the JSONL contract (and byte-identity with
+//! [`crate::plan::serve_jsonl`]) requires responses in request order. Each
+//! connection therefore owns a [`Conn`]: workers deliver `(seq, line)`
+//! pairs, and the writer emits a line the moment it becomes the next one
+//! in sequence, parking out-of-order completions until their turn. When
+//! the reader side signals how many responses are owed in total
+//! ([`Conn::finish_input`] at EOF or shutdown), the write half shuts down
+//! as soon as the last one is out — the client sees every response, then
+//! EOF.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::sync::{Mutex, MutexGuard};
+
+struct Writer {
+    /// write half; `None` once closed (all responses out) or broken
+    stream: Option<TcpStream>,
+    /// next sequence number to emit
+    next_seq: usize,
+    /// out-of-order completions parked until their turn
+    parked: BTreeMap<usize, String>,
+    /// total responses owed, known once the reader side is done
+    total: Option<usize>,
+    /// a flusher is currently writing outside the lock (single-flusher
+    /// discipline: everyone else just parks and leaves)
+    writing: bool,
+}
+
+/// The write half of one client connection (shared `Arc<Conn>` between the
+/// connection's reader thread and every worker holding one of its jobs).
+pub(crate) struct Conn {
+    writer: Mutex<Writer>,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream) -> Conn {
+        Conn {
+            writer: Mutex::new(Writer {
+                stream: Some(stream),
+                next_seq: 0,
+                parked: BTreeMap::new(),
+                total: None,
+                writing: false,
+            }),
+        }
+    }
+
+    /// Deliver response `seq` (one JSON document, no trailing newline).
+    /// Emitted as soon as it is next in request order — along with any
+    /// parked successors it unblocks — otherwise parked. A client that
+    /// disappeared mid-stream degrades to discarding: the write error
+    /// closes the stream and later deliveries drain silently.
+    pub fn deliver(&self, seq: usize, line: String) {
+        let mut w = self.writer.lock().unwrap();
+        w.parked.insert(seq, line);
+        self.pump(w);
+    }
+
+    /// The reader side is done (EOF, shutdown, or a read error): exactly
+    /// `total` responses are owed in all. Closes the write half once the
+    /// last one is out — immediately, if everything was already delivered.
+    pub fn finish_input(&self, total: usize) {
+        let mut w = self.writer.lock().unwrap();
+        w.total = Some(total);
+        self.pump(w);
+    }
+
+    /// Drain every in-order line. Socket writes happen **outside** the
+    /// lock so a stalled client blocks only its own connection, never the
+    /// workers delivering to other connections; the `writing` flag keeps
+    /// a single flusher active at a time (others park and leave), which
+    /// preserves sequence order. Flushed per batch so clients see
+    /// responses as they are produced, like serve_jsonl.
+    fn pump(&self, mut w: MutexGuard<'_, Writer>) {
+        if w.writing {
+            return; // the active flusher will pick our lines up
+        }
+        w.writing = true;
+        loop {
+            let mut batch = Vec::new();
+            while let Some(line) = w.parked.remove(&w.next_seq) {
+                w.next_seq += 1;
+                batch.push(line);
+            }
+            if batch.is_empty() {
+                break;
+            }
+            let mut stream = w.stream.take();
+            drop(w);
+            let broken = match stream.as_mut() {
+                Some(s) => {
+                    let mut wrote = batch.iter().try_for_each(|line| writeln!(s, "{line}"));
+                    wrote = wrote.and_then(|()| s.flush());
+                    wrote.is_err()
+                }
+                None => false,
+            };
+            if broken {
+                // client gone (or stalled past the write timeout): keep
+                // draining sequence numbers, stop writing
+                stream = None;
+            }
+            w = self.writer.lock().unwrap();
+            w.stream = stream;
+        }
+        // lock held: no new lines can arrive between the last drain and
+        // the close decision / releasing the flusher role
+        if w.total == Some(w.next_seq) {
+            if let Some(stream) = w.stream.take() {
+                let _ = stream.shutdown(Shutdown::Write);
+            }
+            w.parked.clear();
+        }
+        w.writing = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader};
+    use std::net::TcpListener;
+
+    /// A loopback socket pair: (service-side stream, client-side stream).
+    fn pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (server, client)
+    }
+
+    #[test]
+    fn out_of_order_deliveries_emerge_in_sequence() {
+        let (server, client) = pair();
+        let conn = Conn::new(server);
+        conn.deliver(2, "third".into());
+        conn.deliver(0, "first".into());
+        conn.deliver(1, "second".into());
+        conn.finish_input(3);
+        let lines: Vec<String> =
+            BufReader::new(client).lines().collect::<Result<_, _>>().unwrap();
+        assert_eq!(lines, ["first", "second", "third"]);
+    }
+
+    #[test]
+    fn finish_before_delivery_still_flushes_everything_then_eof() {
+        let (server, client) = pair();
+        let conn = Conn::new(server);
+        conn.finish_input(2);
+        conn.deliver(1, "b".into());
+        conn.deliver(0, "a".into());
+        let lines: Vec<String> =
+            BufReader::new(client).lines().collect::<Result<_, _>>().unwrap();
+        assert_eq!(lines, ["a", "b"]);
+    }
+
+    #[test]
+    fn zero_requests_closes_immediately() {
+        let (server, client) = pair();
+        let conn = Conn::new(server);
+        conn.finish_input(0);
+        let mut buf = String::new();
+        assert_eq!(BufReader::new(client).read_line(&mut buf).unwrap(), 0);
+    }
+
+    #[test]
+    fn concurrent_deliveries_keep_sequence_order() {
+        let (server, client) = pair();
+        let conn = std::sync::Arc::new(Conn::new(server));
+        let n = 64usize;
+        let handles: Vec<_> = (0..n)
+            .rev()
+            .map(|seq| {
+                let conn = std::sync::Arc::clone(&conn);
+                std::thread::spawn(move || conn.deliver(seq, format!("line-{seq}")))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        conn.finish_input(n);
+        let lines: Vec<String> =
+            BufReader::new(client).lines().collect::<Result<_, _>>().unwrap();
+        let expect: Vec<String> = (0..n).map(|i| format!("line-{i}")).collect();
+        assert_eq!(lines, expect);
+    }
+
+    #[test]
+    fn a_vanished_client_drains_without_panicking() {
+        let (server, client) = pair();
+        drop(client);
+        let conn = Conn::new(server);
+        // big payloads so the kernel buffer can't absorb them silently
+        for seq in 0..64 {
+            conn.deliver(seq, "x".repeat(1 << 16));
+        }
+        conn.finish_input(64);
+    }
+}

@@ -1,0 +1,483 @@
+//! Always-on planning service: `xbarmap serve --plans` — a TCP/JSONL
+//! listener over the [`crate::plan`] front door.
+//!
+//! Each connection speaks the same v1 wire protocol as
+//! [`crate::plan::serve_jsonl`]: one JSON [`MapRequest`] per line in, one
+//! JSON line back per request — a [`crate::plan::MapPlan`] on success,
+//! else the [`wire::error_frame`] with the connection's physical line
+//! number — in request order, byte-identical to piping the same stream
+//! through `xbarmap plan`. The one deliberate divergence: a document with
+//! a `"cmd"` key and no `"net"` key (never a decodable request; the file
+//! endpoint answers it with a missing-`'net'` error frame) is claimed by
+//! the in-band command extension below. On top of that file-endpoint
+//! contract the service adds what an always-on deployment needs:
+//!
+//! * a **shared worker pool** behind a **bounded request queue**
+//!   ([`crate::util::mpmc`]): requests from all connections interleave in
+//!   arrival order, and a flood backpressures the sockets (readers block
+//!   pushing, TCP windows fill) instead of buffering without limit;
+//! * a **canonical-request plan cache** ([`cache::PlanCache`]): identical
+//!   requests — across connections, with the correlation id ignored — are
+//!   answered from memory;
+//! * **graceful shutdown**: SIGINT/ctrl-C (or [`ServiceHandle::shutdown`])
+//!   stops accepting and reading, drains every request already read, and
+//!   closes each connection only after its last owed response;
+//! * an **in-band `{"v":1,"cmd":"stats"}` request** answered with the
+//!   [`wire::stats_frame`]: served/errored/cache-hit counts and
+//!   nearest-rank p50/p95 plan-solve latency.
+
+mod cache;
+mod conn;
+
+pub use cache::PlanCache;
+
+use crate::plan::{self, wire, PlanError};
+use crate::util::json::Json;
+use crate::util::mpmc::Queue;
+use crate::util::stats::{percentile_nearest_rank, sort_samples};
+use conn::Conn;
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, ErrorKind, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// How often blocked reads and the accept loop re-check the shutdown flag.
+const POLL: Duration = Duration::from_millis(50);
+
+/// Cap on how long one response write may stall on a client that stopped
+/// reading. The per-connection writer holds that connection's lock while
+/// writing, so without a cap one dead-slow client could pin workers;
+/// on timeout the write errors and the connection degrades to discarding.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Plan-solve latency samples kept for the percentile report (a bounded
+/// window so an always-on service's memory stays flat; the `stats` frame
+/// reports percentiles over the most recent window).
+const LATENCY_WINDOW: usize = 4096;
+
+/// Largest accepted request line. Inline-network requests are the big
+/// ones (a few KB per layer); anything past this is a client outside the
+/// protocol, answered with an error frame and disconnected so a
+/// never-newlining stream can't grow the line buffer without limit.
+const MAX_LINE_BYTES: usize = 8 << 20;
+
+/// Configuration for [`Service::bind`].
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// listen address, `HOST:PORT` (`:0` picks an ephemeral port)
+    pub addr: String,
+    /// planning worker threads (0 = available parallelism)
+    pub workers: usize,
+    /// bounded request-queue capacity (the backpressure horizon)
+    pub queue_capacity: usize,
+    /// plan-cache entries (0 disables caching)
+    pub cache_capacity: usize,
+    /// also shut down on SIGINT/ctrl-C (the CLI sets this; tests drive
+    /// shutdown through [`ServiceHandle`] instead)
+    pub watch_sigint: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            addr: "127.0.0.1:7878".into(),
+            workers: 0,
+            queue_capacity: 64,
+            cache_capacity: 256,
+            watch_sigint: false,
+        }
+    }
+}
+
+/// One unit of work: a non-blank line read from a connection, owed the
+/// response with sequence number `seq` on that connection.
+struct Job {
+    conn: Arc<Conn>,
+    seq: usize,
+    /// physical 1-based line number within the connection (blank lines
+    /// count), echoed into error frames
+    line_no: usize,
+    text: String,
+}
+
+struct StatsInner {
+    served: u64,
+    errors: u64,
+    cache_hits: u64,
+    connections: u64,
+    latencies: VecDeque<f64>,
+}
+
+/// State shared by the accept loop, connection readers and workers.
+struct Shared {
+    shutdown: AtomicBool,
+    sigint: Option<&'static AtomicBool>,
+    queue: Queue<Job>,
+    cache: PlanCache,
+    stats: Mutex<StatsInner>,
+}
+
+impl Shared {
+    fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+            || self.sigint.map(|f| f.load(Ordering::SeqCst)).unwrap_or(false)
+    }
+
+    fn snapshot(&self) -> wire::StatsSnapshot {
+        let s = self.stats.lock().unwrap();
+        let mut lat: Vec<f64> = s.latencies.iter().copied().collect();
+        sort_samples(&mut lat);
+        wire::StatsSnapshot {
+            served: s.served,
+            errors: s.errors,
+            cache_hits: s.cache_hits,
+            connections: s.connections,
+            plan_p50_s: percentile_nearest_rank(&lat, 0.50),
+            plan_p95_s: percentile_nearest_rank(&lat, 0.95),
+        }
+    }
+}
+
+/// A bound (but not yet running) planning service.
+pub struct Service {
+    listener: TcpListener,
+    workers: usize,
+    shared: Arc<Shared>,
+}
+
+/// Remote control for a running [`Service`]: trip shutdown, read stats.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    shared: Arc<Shared>,
+}
+
+impl ServiceHandle {
+    /// Begin graceful shutdown: stop accepting and reading, drain every
+    /// request already read, close connections after their last response.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// A point-in-time copy of the service counters and latency
+    /// percentiles (the same numbers the in-band `stats` command reports).
+    pub fn stats(&self) -> wire::StatsSnapshot {
+        self.shared.snapshot()
+    }
+}
+
+impl Service {
+    /// Bind the listener (the service starts accepting only on
+    /// [`Service::run`]).
+    pub fn bind(cfg: &ServiceConfig) -> std::io::Result<Service> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let workers = if cfg.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            cfg.workers
+        };
+        Ok(Service {
+            listener,
+            workers,
+            shared: Arc::new(Shared {
+                shutdown: AtomicBool::new(false),
+                sigint: if cfg.watch_sigint { Some(sigint_flag()) } else { None },
+                queue: Queue::bounded(cfg.queue_capacity),
+                cache: PlanCache::new(cfg.cache_capacity),
+                stats: Mutex::new(StatsInner {
+                    served: 0,
+                    errors: 0,
+                    cache_hits: 0,
+                    connections: 0,
+                    latencies: VecDeque::new(),
+                }),
+            }),
+        })
+    }
+
+    /// The bound address — read this after binding to `:0`.
+    pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    pub fn handle(&self) -> ServiceHandle {
+        ServiceHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Serve until shutdown (signal or handle), then drain and return the
+    /// final stats. Blocks the calling thread; connection readers and the
+    /// worker pool run on their own threads.
+    pub fn run(self) -> std::io::Result<wire::StatsSnapshot> {
+        let shared = self.shared;
+        let mut workers = Vec::with_capacity(self.workers);
+        for _ in 0..self.workers {
+            let sh = Arc::clone(&shared);
+            workers.push(std::thread::spawn(move || {
+                while let Some(job) = sh.queue.pop() {
+                    let response = respond(&sh, &job);
+                    job.conn.deliver(job.seq, response);
+                }
+            }));
+        }
+
+        if let Err(e) = self.listener.set_nonblocking(true) {
+            // same discipline as the fatal accept arm: never leave the
+            // already-spawned workers parked on the queue forever
+            shared.queue.close();
+            return Err(e);
+        }
+        let mut readers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !shared.is_shutdown() {
+            // reap finished readers on every iteration — a service is
+            // busiest exactly when the idle (WouldBlock) branch never runs,
+            // and that's when join handles would otherwise accumulate
+            let mut i = 0;
+            while i < readers.len() {
+                if readers[i].is_finished() {
+                    let _ = readers.swap_remove(i).join();
+                } else {
+                    i += 1;
+                }
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    shared.stats.lock().unwrap().connections += 1;
+                    let _ = stream.set_nodelay(true);
+                    // try_clone fails under fd exhaustion (connection
+                    // floods) — shed this connection, keep serving
+                    let Ok(writer) = stream.try_clone() else { continue };
+                    let _ = writer.set_write_timeout(Some(WRITE_TIMEOUT));
+                    let sh = Arc::clone(&shared);
+                    readers.push(std::thread::spawn(move || {
+                        read_conn(&sh, stream, Arc::new(Conn::new(writer)));
+                    }));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(POLL);
+                }
+                Err(e) => {
+                    // fatal listener error: let the workers drain and exit
+                    // rather than leaving them parked on the queue forever
+                    shared.queue.close();
+                    return Err(e);
+                }
+            }
+        }
+
+        // Drain: readers notice the flag within one POLL and stop feeding;
+        // everything they already enqueued still gets planned and written.
+        for r in readers {
+            let _ = r.join();
+        }
+        shared.queue.close();
+        for w in workers {
+            let _ = w.join();
+        }
+        Ok(shared.snapshot())
+    }
+}
+
+/// Read one connection's request lines into the shared queue. Every
+/// non-blank line claims the next response sequence number; on EOF, error
+/// or shutdown the connection is owed exactly the responses claimed so
+/// far, and [`Conn::finish_input`] arranges the close after the last one.
+///
+/// Lines are assembled from **raw bytes** (`read_until`, not `read_line`:
+/// the latter's UTF-8 guard discards a call's appended bytes when a poll
+/// timeout lands mid multi-byte character — bytes already consumed from
+/// the socket would be silently lost), capped at [`MAX_LINE_BYTES`] per
+/// line via `Take` so one never-newlining client can't grow memory past
+/// the cap: an oversized line answers with an error frame and drops the
+/// connection. Invalid UTF-8 flows (lossily decoded) into the normal
+/// parse-error frame instead of killing the stream.
+fn read_conn(shared: &Shared, stream: TcpStream, conn: Arc<Conn>) {
+    // a read timeout turns the blocking read into a poll so shutdown is
+    // observed even on idle connections
+    let _ = stream.set_read_timeout(Some(POLL));
+    let mut reader = BufReader::new(stream);
+    let mut seq = 0usize;
+    let mut line_no = 0usize;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut eof = false;
+    'conn: while !eof {
+        buf.clear();
+        let mut oversized = false;
+        // assemble one line across poll ticks (a timeout mid-line leaves
+        // the partial bytes in buf and the next read appends to them)
+        loop {
+            if shared.is_shutdown() {
+                break 'conn;
+            }
+            let room = (MAX_LINE_BYTES + 1).saturating_sub(buf.len()) as u64;
+            match reader.by_ref().take(room).read_until(b'\n', &mut buf) {
+                Ok(_) => {
+                    if buf.last() == Some(&b'\n') {
+                        break; // complete line
+                    }
+                    if buf.len() > MAX_LINE_BYTES {
+                        oversized = true;
+                        break;
+                    }
+                    // no newline, under the cap: EOF — a final line
+                    // without a trailing newline may still be in buf
+                    eof = true;
+                    break;
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                    ) =>
+                {
+                    continue; // poll tick; bytes read so far stay in buf
+                }
+                Err(_) => break 'conn,
+            }
+        }
+        if oversized {
+            // answer in-order like any other response, then hang up — the
+            // client is outside the protocol the bounded queue can pace
+            line_no += 1;
+            shared.stats.lock().unwrap().errors += 1;
+            let e = PlanError(format!("request line exceeds {MAX_LINE_BYTES} bytes"));
+            conn.deliver(seq, wire::error_frame(line_no, &e).dumps());
+            seq += 1;
+            break;
+        }
+        if eof && buf.iter().all(u8::is_ascii_whitespace) {
+            break;
+        }
+        line_no += 1;
+        let text = String::from_utf8_lossy(&buf);
+        let text = text.trim();
+        if text.is_empty() {
+            continue;
+        }
+        let job = Job { conn: Arc::clone(&conn), seq, line_no, text: text.to_string() };
+        seq += 1;
+        // blocks while the queue is full — this is the backpressure path
+        // (the socket stops being read, so the client's TCP window fills)
+        if shared.queue.push(job).is_err() {
+            // queue closed mid-push: shutdown raced us; the job was
+            // refused, so give its sequence number back
+            seq -= 1;
+            break;
+        }
+    }
+    conn.finish_input(seq);
+}
+
+/// Produce the response line for one job (no trailing newline), updating
+/// the service counters.
+fn respond(shared: &Shared, job: &Job) -> String {
+    let j = match crate::util::json::parse(&job.text) {
+        Ok(j) => j,
+        // same message plan::parse_request_line produces, so error frames
+        // stay byte-identical to serve_jsonl's
+        Err(e) => {
+            return error_response(
+                shared,
+                job.line_no,
+                &PlanError(format!("parse request: {e}")),
+            )
+        }
+    };
+    // In-band commands are a service extension over the serve_jsonl wire.
+    // The decoder ignores unknown keys, so a request carrying a stray
+    // "cmd" key is still a valid MapRequest — the command path therefore
+    // claims only documents without "net", which could never have decoded
+    // as a request (serve_jsonl answers that class with a missing-'net'
+    // error frame; this is the one deliberate divergence, documented on
+    // the module).
+    if j.get("cmd").is_some() && j.get("net").is_none() {
+        return respond_cmd(shared, &j, job.line_no);
+    }
+    let req = match plan::MapRequest::from_json(&j) {
+        Ok(req) => req,
+        Err(e) => return error_response(shared, job.line_no, &e),
+    };
+    // key computation clones + serializes the request, so skip it when
+    // caching is off (--cache 0)
+    let key = if shared.cache.enabled() { Some(PlanCache::key(&req)) } else { None };
+    if let Some(cached) = key.as_deref().and_then(|k| shared.cache.get(k)) {
+        let mut stats = shared.stats.lock().unwrap();
+        stats.cache_hits += 1;
+        stats.served += 1;
+        drop(stats);
+        let mut plan = (*cached).clone();
+        plan.id = req.id.clone();
+        return plan.to_json().dumps();
+    }
+    let t0 = Instant::now();
+    match req.build().and_then(|p| p.plan()) {
+        Ok(plan) => {
+            let solve_s = t0.elapsed().as_secs_f64();
+            let mut stats = shared.stats.lock().unwrap();
+            stats.served += 1;
+            if stats.latencies.len() == LATENCY_WINDOW {
+                stats.latencies.pop_front();
+            }
+            stats.latencies.push_back(solve_s);
+            drop(stats);
+            if let Some(key) = key {
+                let mut anon = plan.clone();
+                anon.id.clear();
+                shared.cache.insert(key, Arc::new(anon));
+            }
+            plan.to_json().dumps()
+        }
+        Err(e) => error_response(shared, job.line_no, &e),
+    }
+}
+
+fn respond_cmd(shared: &Shared, j: &Json, line_no: usize) -> String {
+    let frame = (|| {
+        let o = j.as_obj().ok_or_else(|| PlanError("command must be a JSON object".into()))?;
+        // the same version rule (and error wording) every other frame uses
+        wire::check_version(o, "command")?;
+        match o.get("cmd").and_then(Json::as_str) {
+            Some("stats") => Ok(wire::stats_frame(&shared.snapshot())),
+            other => Err(PlanError(format!(
+                "unknown command '{}' (try \"stats\")",
+                other.unwrap_or("?")
+            ))),
+        }
+    })();
+    match frame {
+        Ok(f) => f.dumps(),
+        Err(e) => error_response(shared, line_no, &e),
+    }
+}
+
+fn error_response(shared: &Shared, line_no: usize, e: &PlanError) -> String {
+    shared.stats.lock().unwrap().errors += 1;
+    wire::error_frame(line_no, e).dumps()
+}
+
+/// The process-wide SIGINT flag: installed once, tripped by ctrl-C.
+/// Std-only — on unix the handler registers through libc's `signal`
+/// (already linked by std; declared here rather than pulling in the libc
+/// crate), and the handler body is a single async-signal-safe store.
+#[cfg(unix)]
+fn sigint_flag() -> &'static AtomicBool {
+    static FLAG: AtomicBool = AtomicBool::new(false);
+    static INSTALL: std::sync::Once = std::sync::Once::new();
+    extern "C" fn on_sigint(_signum: i32) {
+        FLAG.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    INSTALL.call_once(|| unsafe {
+        signal(2 /* SIGINT */, on_sigint);
+    });
+    &FLAG
+}
+
+/// Non-unix fallback: no signal hookup; shutdown comes from the handle.
+#[cfg(not(unix))]
+fn sigint_flag() -> &'static AtomicBool {
+    static FLAG: AtomicBool = AtomicBool::new(false);
+    &FLAG
+}

@@ -4,7 +4,9 @@
 pub mod benchkit;
 pub mod cli;
 pub mod json;
+pub mod mpmc;
 pub mod par;
 pub mod prng;
 pub mod prop;
+pub mod stats;
 pub mod table;

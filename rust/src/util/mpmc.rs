@@ -1,0 +1,237 @@
+//! Bounded multi-producer multi-consumer queue (std has only the
+//! unbounded one-consumer `mpsc`).
+//!
+//! The planning service's request path is many connection readers feeding
+//! a shared worker pool; the queue between them must be *bounded* so a
+//! flood of requests backpressures the sockets instead of buffering
+//! without limit. [`Queue::push`] blocks while the queue is full,
+//! [`Queue::pop`] blocks while it is empty, and [`Queue::close`] wakes
+//! everyone: pushes start failing immediately, pops drain what is already
+//! queued and then return `None` — exactly the "finish in-flight work,
+//! accept no more" shutdown the service needs.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Why a non-blocking push was refused.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TryPushError<T> {
+    /// queue at capacity — the caller should block or shed load
+    Full(T),
+    /// queue closed — no more items will ever be accepted
+    Closed(T),
+}
+
+struct State<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded MPMC queue. Shared by reference (`Arc<Queue<T>>` or scoped
+/// borrows); every method takes `&self`.
+pub struct Queue<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> Queue<T> {
+    /// A queue holding at most `capacity` items (minimum 1).
+    pub fn bounded(capacity: usize) -> Queue<T> {
+        Queue {
+            state: Mutex::new(State { buf: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Enqueue, blocking while the queue is full. `Err(item)` once closed
+    /// (including while blocked — close wakes waiting producers).
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut s = self.state.lock().unwrap();
+        while s.buf.len() >= self.capacity && !s.closed {
+            s = self.not_full.wait(s).unwrap();
+        }
+        if s.closed {
+            return Err(item);
+        }
+        s.buf.push_back(item);
+        drop(s);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Enqueue without blocking.
+    pub fn try_push(&self, item: T) -> Result<(), TryPushError<T>> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err(TryPushError::Closed(item));
+        }
+        if s.buf.len() >= self.capacity {
+            return Err(TryPushError::Full(item));
+        }
+        s.buf.push_back(item);
+        drop(s);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue, blocking while the queue is empty. `None` only after
+    /// [`Queue::close`] *and* the buffer has drained, so consumers see
+    /// every item that was accepted.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.buf.pop_front() {
+                drop(s);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    /// Close the queue: subsequent (and blocked) pushes fail, pops drain
+    /// the remaining items then return `None`. Idempotent.
+    pub fn close(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.closed = true;
+        drop(s);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Items currently queued (a snapshot — racy by nature).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_within_a_single_producer() {
+        let q = Queue::bounded(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 5);
+        for i in 0..5 {
+            assert_eq!(q.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn try_push_reports_full_then_accepts_after_pop() {
+        let q = Queue::bounded(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(TryPushError::Full(3)));
+        assert_eq!(q.pop(), Some(1));
+        q.try_push(3).unwrap();
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn push_blocks_at_capacity_until_a_consumer_drains() {
+        // the backpressure path: a producer at capacity parks until pop
+        let q = Arc::new(Queue::bounded(1));
+        q.push(0usize).unwrap();
+        let unblocked = Arc::new(AtomicBool::new(false));
+        let producer = {
+            let (q, unblocked) = (Arc::clone(&q), Arc::clone(&unblocked));
+            std::thread::spawn(move || {
+                q.push(1).unwrap();
+                unblocked.store(true, Ordering::SeqCst);
+            })
+        };
+        // give the producer ample time to park on the full queue
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!unblocked.load(Ordering::SeqCst), "push returned while full");
+        assert_eq!(q.pop(), Some(0));
+        producer.join().unwrap();
+        assert!(unblocked.load(Ordering::SeqCst));
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn close_drains_queued_items_then_ends_consumers() {
+        let q = Queue::bounded(4);
+        q.push('a').unwrap();
+        q.push('b').unwrap();
+        q.close();
+        assert_eq!(q.push('c'), Err('c'));
+        assert_eq!(q.try_push('d'), Err(TryPushError::Closed('d')));
+        // already-accepted items still come out, in order
+        assert_eq!(q.pop(), Some('a'));
+        assert_eq!(q.pop(), Some('b'));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn close_wakes_a_blocked_producer() {
+        let q = Arc::new(Queue::bounded(1));
+        q.push(0usize).unwrap();
+        let producer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || q.push(1))
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(producer.join().unwrap(), Err(1));
+    }
+
+    #[test]
+    fn many_producers_many_consumers_lose_nothing() {
+        let q = Arc::new(Queue::bounded(3));
+        let n_producers = 4;
+        let per_producer = 50;
+        let mut handles = Vec::new();
+        for p in 0..n_producers {
+            let q = Arc::clone(&q);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_producer {
+                    q.push(p * per_producer + i).unwrap();
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let q = Arc::clone(&q);
+            consumers.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = q.pop() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<usize> = Vec::new();
+        for c in consumers {
+            all.extend(c.join().unwrap());
+        }
+        all.sort_unstable();
+        let expect: Vec<usize> = (0..n_producers * per_producer).collect();
+        assert_eq!(all, expect);
+    }
+}

@@ -1,0 +1,73 @@
+//! Shared order statistics for the serving paths.
+//!
+//! Both latency reporters — [`crate::coordinator::Coordinator::serve`]'s
+//! batch percentiles and the planning service's `stats` frame — need the
+//! same two ingredients: a NaN-total sort and a nearest-rank percentile.
+//! Written once here so the two can never disagree on the definition.
+
+/// Sort a latency sample ascending with [`f64::total_cmp`] — NaN sorts to
+/// the end instead of panicking the way `partial_cmp(..).unwrap()` does.
+pub fn sort_samples(samples: &mut [f64]) {
+    samples.sort_unstable_by(f64::total_cmp);
+}
+
+/// Nearest-rank percentile over an ascending sample: the smallest value
+/// whose rank is at least `⌈p·N⌉` (the NIST definition), for `p` in
+/// `(0, 1]`. Unlike interpolating or `.round()`-based pickers this is
+/// exact at small N — the p50 of two samples is the *first*, not the
+/// second. An empty sample reports 0.0.
+pub fn percentile_nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p * sorted.len() as f64).ceil().max(1.0) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_sample_reports_zero() {
+        assert_eq!(percentile_nearest_rank(&[], 0.5), 0.0);
+        assert_eq!(percentile_nearest_rank(&[], 0.95), 0.0);
+    }
+
+    #[test]
+    fn single_sample_is_every_percentile() {
+        for p in [0.01, 0.5, 0.95, 1.0] {
+            assert_eq!(percentile_nearest_rank(&[7.0], p), 7.0);
+        }
+    }
+
+    #[test]
+    fn small_n_picks_the_nearest_rank_not_the_rounded_index() {
+        // N=2: ⌈0.5·2⌉ = 1 → the first sample. The old
+        // `((N-1)·p).round()` picker chose index 1 here.
+        assert_eq!(percentile_nearest_rank(&[1.0, 9.0], 0.5), 1.0);
+        assert_eq!(percentile_nearest_rank(&[1.0, 9.0], 0.95), 9.0);
+        // N=3: p50 is the middle sample, p95 the last
+        assert_eq!(percentile_nearest_rank(&[1.0, 2.0, 3.0], 0.5), 2.0);
+        assert_eq!(percentile_nearest_rank(&[1.0, 2.0, 3.0], 0.95), 3.0);
+    }
+
+    #[test]
+    fn large_n_matches_the_textbook_ranks() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile_nearest_rank(&v, 0.50), 50.0);
+        assert_eq!(percentile_nearest_rank(&v, 0.95), 95.0);
+        assert_eq!(percentile_nearest_rank(&v, 1.0), 100.0);
+    }
+
+    #[test]
+    fn total_cmp_sort_tolerates_nan() {
+        let mut v = vec![3.0, f64::NAN, 1.0];
+        sort_samples(&mut v);
+        assert_eq!(v[0], 1.0);
+        assert_eq!(v[1], 3.0);
+        assert!(v[2].is_nan());
+        // percentiles over the finite prefix stay sane
+        assert_eq!(percentile_nearest_rank(&v, 0.5), 3.0);
+    }
+}

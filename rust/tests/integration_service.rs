@@ -1,0 +1,203 @@
+//! Integration: the TCP/JSONL planning service against the
+//! `plan::serve_jsonl` oracle — concurrent clients get byte-identical
+//! responses, repeated requests hit the cache, the in-band `stats`
+//! command answers in stream order, and shutdown drains cleanly.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::thread;
+use xbarmap::plan::{self, wire};
+use xbarmap::service::{Service, ServiceConfig, ServiceHandle};
+use xbarmap::util::json;
+
+fn start(
+    workers: usize,
+    queue: usize,
+    cache: usize,
+) -> (ServiceHandle, SocketAddr, thread::JoinHandle<wire::StatsSnapshot>) {
+    let svc = Service::bind(&ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        workers,
+        queue_capacity: queue,
+        cache_capacity: cache,
+        watch_sigint: false,
+    })
+    .unwrap();
+    let addr = svc.local_addr().unwrap();
+    let handle = svc.handle();
+    let join = thread::spawn(move || svc.run().unwrap());
+    (handle, addr, join)
+}
+
+/// What `xbarmap plan` would answer for the same stream.
+fn oracle(input: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    plan::serve_jsonl(input.as_bytes(), &mut out).unwrap();
+    String::from_utf8(out).unwrap().lines().map(str::to_string).collect()
+}
+
+/// Send one stream over a fresh connection, read every response line.
+fn drive(addr: SocketAddr, input: &str) -> Vec<String> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(input.as_bytes()).unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    BufReader::new(stream).lines().collect::<Result<_, _>>().unwrap()
+}
+
+/// One client's request stream: a small grid sweep, a blank line, a
+/// malformed line, a shared (cacheable) placement request, an unknown
+/// network, and a fixed tile that differs across clients only in id.
+fn client_stream(c: usize) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{{\"v\":1,\"id\":\"c{c}-grid\",\"net\":{{\"zoo\":\"lenet\"}},\"tiles\":{{\"grid\":{{\"row_exp\":[6,8],\"aspects\":[1,2]}}}}}}\n",
+    ));
+    s.push('\n');
+    s.push_str(&format!("not json {c}\n"));
+    s.push_str(
+        "{\"v\":1,\"net\":{\"zoo\":\"lenet\"},\"tiles\":{\"fixed\":[256,256]},\"placements\":true}\n",
+    );
+    s.push_str("{\"v\":1,\"net\":{\"zoo\":\"ghost-net\"}}\n");
+    s.push_str(&format!(
+        "{{\"v\":1,\"id\":\"c{c}-fixed\",\"net\":{{\"zoo\":\"lenet\"}},\"tiles\":{{\"fixed\":[128,128]}},\"discipline\":\"pipeline\"}}",
+    ));
+    if c != 1 {
+        // one client ends without a trailing newline; the service must
+        // still serve that final partial line, like lines() does
+        s.push('\n');
+    }
+    s
+}
+
+#[test]
+fn concurrent_connections_match_serve_jsonl_byte_for_byte() {
+    let (handle, addr, join) = start(3, 4, 64);
+    let clients: Vec<thread::JoinHandle<(String, Vec<String>)>> = (0..3)
+        .map(|c| {
+            thread::spawn(move || {
+                let input = client_stream(c);
+                let got = drive(addr, &input);
+                (input, got)
+            })
+        })
+        .collect();
+    for client in clients {
+        let (input, got) = client.join().unwrap();
+        assert_eq!(got, oracle(&input), "service responses diverge from serve_jsonl");
+    }
+    handle.shutdown();
+    let stats = join.join().unwrap();
+    assert_eq!(stats.connections, 3);
+    // per client: 3 plans (grid, placement, fixed) + 2 error frames
+    assert_eq!(stats.served, 9);
+    assert_eq!(stats.errors, 6);
+    // each of the three plan requests repeats across clients modulo id
+    // (the cache key strips it), so at most two hits per distinct plan;
+    // how many repeats land before the first insert is scheduling-
+    // dependent, so only the upper bound is deterministic
+    assert!(stats.cache_hits <= 6);
+}
+
+#[test]
+fn repeated_requests_hit_the_cache_with_identical_bytes() {
+    // one worker → jobs run strictly in stream order → deterministic hits
+    let (handle, addr, join) = start(1, 8, 64);
+    let base = r#"{"v":1,"id":"t","net":{"zoo":"lenet"},"tiles":{"fixed":[256,256]}}"#;
+    let other_id = r#"{"v":1,"id":"u","net":{"zoo":"lenet"},"tiles":{"fixed":[256,256]}}"#;
+    let input = format!("{base}\n{base}\n{base}\n{base}\n{base}\n{other_id}\n");
+    let got = drive(addr, &input);
+    assert_eq!(got, oracle(&input));
+    assert_eq!(got.len(), 6);
+    assert!(got[1..5].iter().all(|l| l == &got[0]), "cached responses must be identical");
+    // the different-id request hits the same cache entry (the key ignores
+    // the id) and gets its own id stamped back
+    assert_ne!(got[5], got[0]);
+    assert_eq!(json::parse(&got[5]).unwrap().get("id").and_then(|v| v.as_str()), Some("u"));
+    let stats = handle.stats();
+    assert_eq!(stats.served, 6);
+    assert_eq!(stats.cache_hits, 5);
+    assert_eq!(stats.errors, 0);
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn in_band_stats_command_answers_in_stream_order() {
+    let (handle, addr, join) = start(1, 8, 64);
+    let plan_req = r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"fixed":[256,256]}}"#;
+    // a request carrying a stray "cmd" key is still a valid MapRequest
+    // (the decoder ignores unknown keys) — only documents without "net"
+    // take the command path, so serve_jsonl-compatible streams never
+    // change meaning
+    let stray_cmd = r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"fixed":[256,256]},"cmd":"stats"}"#;
+    let input = format!(
+        "{plan_req}\n{}\n{plan_req}\n{}\n{}\n{stray_cmd}\n",
+        r#"{"v":1,"cmd":"stats"}"#,
+        r#"{"v":1,"cmd":"selfdestruct"}"#,
+        r#"{"cmd":"stats"}"#,
+    );
+    let got = drive(addr, &input);
+    assert_eq!(got.len(), 6);
+    assert_eq!(got[5], oracle(&format!("{stray_cmd}\n"))[0], "stray cmd key must plan normally");
+    // the stats frame sits between the two plans and counts exactly the
+    // first one (single worker, in-order queue)
+    let snap = wire::stats_from_json(&json::parse(&got[1]).unwrap()).unwrap();
+    assert_eq!(snap.served, 1);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.cache_hits, 0);
+    assert!(snap.plan_p50_s > 0.0);
+    assert!(snap.plan_p95_s >= snap.plan_p50_s);
+    // plans on lines 0 and 2, error frames for the bad commands
+    assert!(json::parse(&got[0]).unwrap().get("best").is_some());
+    assert!(json::parse(&got[2]).unwrap().get("best").is_some());
+    let unknown = json::parse(&got[3]).unwrap();
+    assert!(unknown.get("error").and_then(|e| e.as_str()).unwrap().contains("unknown command"));
+    assert_eq!(unknown.get("line").and_then(|v| v.as_usize()), Some(4));
+    let unversioned = json::parse(&got[4]).unwrap();
+    assert!(unversioned.get("error").and_then(|e| e.as_str()).unwrap().contains("version"));
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn shutdown_drains_open_connections_without_losing_responses() {
+    // tiny queue so the readers exercise the backpressure path, cache off
+    // so every request is a real solve
+    let (handle, addr, join) = start(2, 2, 0);
+    let req = r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"fixed":[64,64]}}"#;
+    let k = 6;
+    let conns: Vec<(TcpStream, BufReader<TcpStream>)> = (0..2)
+        .map(|_| {
+            let stream = TcpStream::connect(addr).unwrap();
+            let reader = BufReader::new(stream.try_clone().unwrap());
+            (stream, reader)
+        })
+        .collect();
+    let mut readers = Vec::new();
+    for (mut stream, reader) in conns {
+        for _ in 0..k {
+            stream.write_all(req.as_bytes()).unwrap();
+            stream.write_all(b"\n").unwrap();
+        }
+        // write half stays open: shutdown, not EOF, must close the conn
+        readers.push((stream, reader));
+    }
+    for (_stream, reader) in &mut readers {
+        for _ in 0..k {
+            let mut line = String::new();
+            assert!(reader.read_line(&mut line).unwrap() > 0, "response lost");
+            assert!(json::parse(line.trim()).unwrap().get("best").is_some());
+        }
+    }
+    handle.shutdown();
+    // the service closes each drained connection; clients see EOF
+    for (_stream, reader) in &mut readers {
+        let mut line = String::new();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0, "expected EOF after shutdown");
+    }
+    let stats = join.join().unwrap();
+    assert_eq!(stats.served, 2 * k as u64);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.cache_hits, 0);
+    assert!(stats.plan_p50_s > 0.0);
+}
