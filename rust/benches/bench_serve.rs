@@ -1,0 +1,100 @@
+//! Bench: planning-service round trips over a real loopback socket —
+//! the latency a tenant of `xbarmap serve --plans` actually observes.
+//!
+//! Three rows join the bench trajectory (`BENCH_serve.json`, gated in CI
+//! like the sweep/pack files):
+//!
+//! * `serve/roundtrip/lenet-fixed256/solve` — cache disabled, so every
+//!   iteration pays request decode + a real fixed-tile solve + response
+//!   serialization + two socket hops;
+//! * `serve/roundtrip/lenet-fixed256/cache-hit` — cache enabled and
+//!   warmed, so iterations measure the admission/queue/cache/re-stamp
+//!   path the multi-tenant steady state lives on;
+//! * `serve/roundtrip/cmd-stats` — the in-band stats command, the floor
+//!   the wire + queue machinery sets under any response.
+//!
+//! One persistent connection per row: connection setup is not the thing
+//! being measured, and a tenant fleet holds connections open.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use xbarmap::service::{Service, ServiceConfig, ServiceHandle};
+use xbarmap::util::benchkit::Bench;
+use xbarmap::plan::wire;
+
+fn start(cache: usize) -> (ServiceHandle, SocketAddr, std::thread::JoinHandle<wire::StatsSnapshot>) {
+    let svc = Service::bind(&ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        queue_capacity: 16,
+        cache_capacity: cache,
+        ..ServiceConfig::default()
+    })
+    .expect("bind ephemeral service");
+    let addr = svc.local_addr().unwrap();
+    let handle = svc.handle();
+    let join = std::thread::spawn(move || svc.run().unwrap());
+    (handle, addr, join)
+}
+
+fn connect(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+/// One request line out, one response line back (length keeps the work
+/// alive through black_box in the runner).
+fn roundtrip(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str, line: &mut String) -> usize {
+    stream.write_all(req.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    line.clear();
+    assert!(reader.read_line(line).unwrap() > 0, "service hung up mid-bench");
+    line.len()
+}
+
+fn main() {
+    let mut b = Bench::from_env();
+    let plan_req = r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"fixed":[256,256]}}"#;
+    let stats_req = r#"{"v":1,"cmd":"stats"}"#;
+    let mut line = String::new();
+
+    // cache off: every round trip is a real solve
+    {
+        let (handle, addr, join) = start(0);
+        let (mut stream, mut reader) = connect(addr);
+        b.run("serve/roundtrip/lenet-fixed256/solve", || {
+            roundtrip(&mut stream, &mut reader, plan_req, &mut line)
+        });
+        assert!(line.contains("\"best\""), "expected a plan, got: {line}");
+        drop((stream, reader));
+        handle.shutdown();
+        let stats = join.join().unwrap();
+        assert_eq!(stats.cache_hits, 0);
+    }
+
+    // cache on and warmed: the multi-tenant steady state
+    {
+        let (handle, addr, join) = start(256);
+        let (mut stream, mut reader) = connect(addr);
+        roundtrip(&mut stream, &mut reader, plan_req, &mut line); // warm the entry
+        b.run("serve/roundtrip/lenet-fixed256/cache-hit", || {
+            roundtrip(&mut stream, &mut reader, plan_req, &mut line)
+        });
+        b.run("serve/roundtrip/cmd-stats", || {
+            roundtrip(&mut stream, &mut reader, stats_req, &mut line)
+        });
+        assert!(line.contains("\"stats\""), "expected a stats frame, got: {line}");
+        drop((stream, reader));
+        handle.shutdown();
+        let stats = join.join().unwrap();
+        assert!(stats.cache_hits > 0, "cache-hit row never hit the cache");
+    }
+
+    b.emit_jsonl();
+    match b.write_json_report("serve") {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("BENCH_serve.json not written: {e}"),
+    }
+}

@@ -295,8 +295,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 
 /// The always-on planning service: a TCP listener speaking the same JSONL
 /// wire as `xbarmap plan`, with a bounded queue + worker pool, a
-/// canonical-request plan cache, an in-band `{"v":1,"cmd":"stats"}`
-/// request, and graceful drain on ctrl-C.
+/// canonical-request LRU plan cache (optional TTL), per-connection quotas
+/// and a service-wide in-flight admission cap (typed reject frames),
+/// in-band `{"v":1,"cmd":"stats"|"metrics"}` requests, an optional
+/// periodic metrics-file writer, and graceful drain on ctrl-C.
 fn cmd_serve_plans(argv: &[String]) -> Result<()> {
     let specs = [
         OptSpec { name: "plans", help: "serve mapping plans over TCP/JSONL", value: None, default: None },
@@ -304,21 +306,50 @@ fn cmd_serve_plans(argv: &[String]) -> Result<()> {
         OptSpec { name: "workers", help: "planning worker threads (0 = auto)", value: Some("N"), default: Some("0") },
         OptSpec { name: "queue", help: "bounded request-queue capacity", value: Some("N"), default: Some("64") },
         OptSpec { name: "cache", help: "plan-cache entries (0 = disable)", value: Some("N"), default: Some("256") },
+        OptSpec { name: "cache-ttl", help: "plan-cache entry lifetime, seconds (0 = never expires)", value: Some("SECS"), default: Some("0") },
+        OptSpec { name: "cache-max-bytes", help: "plan-cache byte budget, keys + serialized plans (0 = unbounded)", value: Some("N"), default: Some("0") },
+        OptSpec { name: "per-conn-quota", help: "requests per connection before a typed over-quota reject (0 = unlimited)", value: Some("N"), default: Some("0") },
+        OptSpec { name: "max-inflight", help: "service-wide admitted-request cap before typed over-inflight rejects (0 = unlimited)", value: Some("N"), default: Some("0") },
+        OptSpec { name: "metrics-out", help: "periodically write the gauge snapshot (BENCH_*.json schema) to FILE", value: Some("FILE"), default: None },
+        OptSpec { name: "metrics-interval", help: "seconds between metrics-file rewrites", value: Some("SECS"), default: Some("10") },
     ];
     let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
+    // upper bound keeps Duration::from_secs_f64 panic-free (it aborts past
+    // u64 seconds); 1e9 s ≈ 31 years, far beyond any sane deployment
+    const MAX_SECS: f64 = 1e9;
+    let ttl_s = a.req_f64("cache-ttl").map_err(|e| anyhow!(e))?;
+    if !(ttl_s >= 0.0 && ttl_s <= MAX_SECS) {
+        return Err(anyhow!("--cache-ttl must be between 0 and {MAX_SECS:e} seconds"));
+    }
+    let interval_s = a.req_f64("metrics-interval").map_err(|e| anyhow!(e))?;
+    if !(interval_s > 0.0 && interval_s <= MAX_SECS) {
+        return Err(anyhow!("--metrics-interval must be between 0 (exclusive) and {MAX_SECS:e} seconds"));
+    }
     let cfg = ServiceConfig {
         addr: a.req("addr").map_err(|e| anyhow!(e))?.to_string(),
         workers: a.req_usize("workers").map_err(|e| anyhow!(e))?,
         queue_capacity: a.req_usize("queue").map_err(|e| anyhow!(e))?.max(1),
         cache_capacity: a.req_usize("cache").map_err(|e| anyhow!(e))?,
+        cache_ttl: (ttl_s > 0.0).then(|| std::time::Duration::from_secs_f64(ttl_s)),
+        cache_max_bytes: a.req_usize("cache-max-bytes").map_err(|e| anyhow!(e))?,
+        per_conn_quota: a.req_usize("per-conn-quota").map_err(|e| anyhow!(e))?,
+        max_inflight: a.req_usize("max-inflight").map_err(|e| anyhow!(e))?,
+        metrics_out: a.get("metrics-out").map(std::path::PathBuf::from),
+        metrics_interval: std::time::Duration::from_secs_f64(interval_s),
         watch_sigint: true,
     };
     let service = Service::bind(&cfg).map_err(|e| anyhow!("bind {}: {e}", cfg.addr))?;
     eprintln!(
-        "xbarmap planning service listening on {} (queue {}, cache {}, ctrl-C drains and exits)",
+        "xbarmap planning service listening on {} (queue {}, cache {}{}, quota {}, inflight cap {}, ctrl-C drains and exits)",
         service.local_addr()?,
         cfg.queue_capacity,
         cfg.cache_capacity,
+        match cfg.cache_ttl {
+            Some(ttl) => format!(" ttl {:.0}s", ttl.as_secs_f64()),
+            None => String::new(),
+        },
+        if cfg.per_conn_quota == 0 { "off".to_string() } else { cfg.per_conn_quota.to_string() },
+        if cfg.max_inflight == 0 { "off".to_string() } else { cfg.max_inflight.to_string() },
     );
     let stats = service.run()?;
     eprintln!(

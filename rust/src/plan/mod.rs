@@ -63,7 +63,11 @@ const SIM_INFERENCES: usize = 32;
 
 /// Planning/validation error (also the wire-decode error type).
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct PlanError(pub String);
+pub struct PlanError(
+    /// human-readable description of what failed (the `"error"` field of
+    /// wire error frames)
+    pub String,
+);
 
 impl std::fmt::Display for PlanError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -81,7 +85,10 @@ fn err(msg: impl Into<String>) -> PlanError {
 /// inline layer spec carried on the wire.
 #[derive(Debug, Clone, PartialEq)]
 pub enum NetworkSpec {
+    /// a [`crate::nets::zoo`] network by name (resolved by
+    /// [`MapRequest::build`])
     Zoo(String),
+    /// an explicit layer list carried inline on the wire
     Inline(Network),
 }
 
@@ -168,11 +175,17 @@ pub enum Replication {
 pub struct MapRequest {
     /// caller-chosen correlation id, echoed into the plan ("" = none)
     pub id: String,
+    /// the network to map (zoo name or inline spec)
     pub network: NetworkSpec,
+    /// the tile configurations to price (one fixed tile or the §3.1 grid)
     pub tiles: TileSpace,
+    /// packing engine: the paper's simple algorithm, FFD, or exact BILP
     pub engine: Engine,
+    /// packing discipline (§2.2): dense shelves or pipeline staircases
     pub discipline: Discipline,
+    /// which evaluated point the plan reports as its optimum
     pub objective: Objective,
+    /// RAPA replication request, resolved per layer at build time
     pub replication: Replication,
     /// sweep worker threads (0 = auto via [`opt::sweep_threads`])
     pub threads: usize,
@@ -215,6 +228,7 @@ impl MapRequest {
         }
     }
 
+    /// Set the correlation id echoed back in the plan.
     pub fn id(mut self, id: &str) -> Self {
         self.id = id.to_string();
         self
@@ -233,6 +247,7 @@ impl MapRequest {
         self
     }
 
+    /// Select the packing engine.
     pub fn engine(mut self, engine: Engine) -> Self {
         self.engine = engine;
         self
@@ -244,36 +259,43 @@ impl MapRequest {
         self
     }
 
+    /// Select the packing discipline (dense or pipeline).
     pub fn discipline(mut self, discipline: Discipline) -> Self {
         self.discipline = discipline;
         self
     }
 
+    /// Select the design objective choosing the plan's optimum.
     pub fn objective(mut self, objective: Objective) -> Self {
         self.objective = objective;
         self
     }
 
+    /// Request RAPA replication (resolved per layer at build time).
     pub fn replication(mut self, replication: Replication) -> Self {
         self.replication = replication;
         self
     }
 
+    /// Set the sweep worker-thread count (0 = auto).
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads;
         self
     }
 
+    /// Include the chosen configuration's per-tile placements in the plan.
     pub fn placements(mut self, include: bool) -> Self {
         self.include_placements = include;
         self
     }
 
+    /// Set the simple engine's block placement order (ablation hook).
     pub fn sort(mut self, sort: SortOrder) -> Self {
         self.sort = sort;
         self
     }
 
+    /// Price with a custom area model instead of the paper calibration.
     pub fn area(mut self, area: AreaModel) -> Self {
         self.area = area;
         self
@@ -382,6 +404,7 @@ pub struct Planner {
 /// Packing of one tile configuration with solver provenance.
 #[derive(Debug, Clone)]
 pub struct PackOutcome {
+    /// the validated placement of every block onto tiles
     pub packing: Packing,
     /// branch & bound nodes spent (0 for the greedy engines)
     pub nodes: u64,
@@ -392,6 +415,7 @@ pub struct PackOutcome {
 }
 
 impl Planner {
+    /// The validated request this planner was built from.
     pub fn request(&self) -> &MapRequest {
         &self.request
     }
@@ -737,8 +761,11 @@ pub struct MapPlan {
     pub id: String,
     /// resolved network name
     pub network: String,
+    /// the discipline the request was packed under
     pub discipline: Discipline,
+    /// the engine that produced the packing counts
     pub engine: Engine,
+    /// the objective that chose `best`
     pub objective: Objective,
     /// every evaluated tile configuration, in grid order
     pub points: Vec<SweepPoint>,
@@ -755,6 +782,7 @@ pub struct MapPlan {
     pub latency_s: f64,
     /// Eq. 3/4 steady-state inferences per second
     pub throughput_per_s: f64,
+    /// how the mapping was produced (budget, proof status, parallelism)
     pub provenance: Provenance,
 }
 
@@ -827,7 +855,9 @@ pub fn serve_batch_with_threads(
 /// `requests` — that is the documented contract, not a miscount.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ServeSummary {
+    /// non-blank input lines served (one response line each)
     pub requests: usize,
+    /// how many of those responses were error frames
     pub errors: usize,
 }
 

@@ -29,6 +29,13 @@
 //! worker count, and whether the plan was priced through the counted
 //! shape-class path).
 //!
+//! Service frames (the planning service's side channel on the same wire):
+//! [`error_frame`], the typed admission [`reject_frame`], the
+//! [`stats_frame`]/[`metrics_frame`] pair (one shared counter serializer,
+//! so field names cannot drift), and the [`metrics_medians`] flat gauge
+//! export the `--metrics-out` writer emits. The normative spec with
+//! worked, test-pinned examples is `docs/WIRE.md` at the repo root.
+//!
 //! Numbers ride on the `util::json` f64 value model, so integers are exact
 //! only up to 2^53 — ILP node budgets beyond that (quadrillions of nodes,
 //! far past any practical solve) would round on the wire.
@@ -540,6 +547,39 @@ pub fn error_frame(line: usize, e: &PlanError) -> Json {
     Json::Obj(o)
 }
 
+/// Why the planning service refused to plan a request it could have
+/// parsed: admission control, not a malformed or unsolvable request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectKind {
+    /// the connection exhausted its `--per-conn-quota` request budget;
+    /// the service answers this frame and then closes the connection
+    OverQuota,
+    /// the service is at its `--max-inflight` admission cap; transient —
+    /// the connection stays open and the client may retry
+    OverInflight,
+}
+
+impl RejectKind {
+    /// The machine-readable token carried in the frame's `"reject"` field.
+    pub fn token(self) -> &'static str {
+        match self {
+            RejectKind::OverQuota => "over-quota",
+            RejectKind::OverInflight => "over-inflight",
+        }
+    }
+}
+
+/// A typed admission-control rejection: an [`error_frame`] (same `v`,
+/// `line`, `error` fields, so clients that only understand error frames
+/// degrade gracefully) extended with a machine-readable
+/// `"reject":"over-quota"|"over-inflight"` discriminator. Emitted only by
+/// the planning service — the file endpoint has no admission control.
+pub fn reject_frame(line: usize, kind: RejectKind, e: &PlanError) -> Json {
+    let Json::Obj(mut o) = error_frame(line, e) else { unreachable!("error_frame is an object") };
+    o.set("reject", kind.token());
+    Json::Obj(o)
+}
+
 /// Counters and plan-latency percentiles reported by the planning
 /// service's in-band `{"v":1,"cmd":"stats"}` request.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -559,26 +599,25 @@ pub struct StatsSnapshot {
     pub plan_p95_s: f64,
 }
 
-/// Encode a stats snapshot as the v1 `{"v":1,"stats":{...}}` frame.
-pub fn stats_frame(s: &StatsSnapshot) -> Json {
-    let mut inner = JsonObj::new();
-    inner
-        .set("served", s.served)
+/// Serialize the counter/percentile set shared **verbatim** by the
+/// `stats` and `metrics` frames. Both frames build their payload through
+/// this one function (and decode through [`counters_from_obj`]), so the
+/// shared field names can never drift between the two — the metrics frame
+/// is always a strict superset of the stats frame.
+fn counters_to_obj(s: &StatsSnapshot) -> JsonObj {
+    let mut o = JsonObj::new();
+    o.set("served", s.served)
         .set("errors", s.errors)
         .set("cache_hits", s.cache_hits)
         .set("connections", s.connections)
         .set("plan_p50_s", s.plan_p50_s)
         .set("plan_p95_s", s.plan_p95_s);
-    let mut o = JsonObj::new();
-    o.set("v", WIRE_VERSION).set("stats", inner);
-    Json::Obj(o)
+    o
 }
 
-/// Decode a v1 stats frame (the client-side partner of [`stats_frame`]).
-pub fn stats_from_json(j: &Json) -> Result<StatsSnapshot, PlanError> {
-    let o = obj(j, "stats frame")?;
-    check_version(o, "stats frame")?;
-    let s = obj(o.get("stats").ok_or_else(|| err("frame missing 'stats'"))?, "'stats'")?;
+/// Decode partner of [`counters_to_obj`] — one field list, used by both
+/// frame decoders.
+fn counters_from_obj(s: &JsonObj) -> Result<StatsSnapshot, PlanError> {
     Ok(StatsSnapshot {
         served: get_u64(s, "served")?,
         errors: get_u64(s, "errors")?,
@@ -587,6 +626,108 @@ pub fn stats_from_json(j: &Json) -> Result<StatsSnapshot, PlanError> {
         plan_p50_s: get_f64(s, "plan_p50_s")?,
         plan_p95_s: get_f64(s, "plan_p95_s")?,
     })
+}
+
+/// Encode a stats snapshot as the v1 `{"v":1,"stats":{...}}` frame.
+pub fn stats_frame(s: &StatsSnapshot) -> Json {
+    let mut o = JsonObj::new();
+    o.set("v", WIRE_VERSION).set("stats", counters_to_obj(s));
+    Json::Obj(o)
+}
+
+/// Decode a v1 stats frame (the client-side partner of [`stats_frame`]).
+pub fn stats_from_json(j: &Json) -> Result<StatsSnapshot, PlanError> {
+    let o = obj(j, "stats frame")?;
+    check_version(o, "stats frame")?;
+    counters_from_obj(obj(o.get("stats").ok_or_else(|| err("frame missing 'stats'"))?, "'stats'")?)
+}
+
+/// The full observability snapshot reported by the planning service's
+/// in-band `{"v":1,"cmd":"metrics"}` request and by the `--metrics-out`
+/// periodic file writer: the [`StatsSnapshot`] counters plus admission /
+/// cache / queue gauges. The stats fields are serialized through the same
+/// helper as [`stats_frame`], so the two frames cannot diverge on shared
+/// field names.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct MetricsSnapshot {
+    /// the counters the `stats` frame reports, field for field
+    pub stats: StatsSnapshot,
+    /// requests admitted but not yet answered (queued + being planned)
+    pub inflight: u64,
+    /// requests refused with the `"reject":"over-quota"` frame
+    pub rejected_over_quota: u64,
+    /// requests refused with the `"reject":"over-inflight"` frame
+    pub rejected_over_inflight: u64,
+    /// requests sitting in the bounded queue right now
+    pub queue_depth: u64,
+    /// plans currently held by the canonical-request cache
+    pub cache_entries: u64,
+    /// approximate bytes held by the cache (keys + serialized plans)
+    pub cache_bytes: u64,
+    /// cache entries dropped by TTL expiry since startup
+    pub cache_expired: u64,
+    /// seconds since the service bound its listener
+    pub uptime_s: f64,
+}
+
+/// Encode a metrics snapshot as the v1 `{"v":1,"metrics":{...}}` frame —
+/// the [`stats_frame`] counter set (shared serializer) followed by the
+/// admission/cache/queue gauges.
+pub fn metrics_frame(m: &MetricsSnapshot) -> Json {
+    let mut inner = counters_to_obj(&m.stats);
+    inner
+        .set("inflight", m.inflight)
+        .set("rejected_over_quota", m.rejected_over_quota)
+        .set("rejected_over_inflight", m.rejected_over_inflight)
+        .set("queue_depth", m.queue_depth)
+        .set("cache_entries", m.cache_entries)
+        .set("cache_bytes", m.cache_bytes)
+        .set("cache_expired", m.cache_expired)
+        .set("uptime_s", m.uptime_s);
+    let mut o = JsonObj::new();
+    o.set("v", WIRE_VERSION).set("metrics", inner);
+    Json::Obj(o)
+}
+
+/// Decode a v1 metrics frame (the client-side partner of
+/// [`metrics_frame`]).
+pub fn metrics_from_json(j: &Json) -> Result<MetricsSnapshot, PlanError> {
+    let o = obj(j, "metrics frame")?;
+    check_version(o, "metrics frame")?;
+    let m = obj(o.get("metrics").ok_or_else(|| err("frame missing 'metrics'"))?, "'metrics'")?;
+    Ok(MetricsSnapshot {
+        stats: counters_from_obj(m)?,
+        inflight: get_u64(m, "inflight")?,
+        rejected_over_quota: get_u64(m, "rejected_over_quota")?,
+        rejected_over_inflight: get_u64(m, "rejected_over_inflight")?,
+        queue_depth: get_u64(m, "queue_depth")?,
+        cache_entries: get_u64(m, "cache_entries")?,
+        cache_bytes: get_u64(m, "cache_bytes")?,
+        cache_expired: get_u64(m, "cache_expired")?,
+        uptime_s: get_f64(m, "uptime_s")?,
+    })
+}
+
+/// Flatten a metrics snapshot into the `BENCH_*.json` medians schema
+/// (flat name → number object) — what `xbarmap serve --metrics-out FILE`
+/// writes. Only **gauges** are emitted (latency in ns, occupancy), never
+/// the monotonic counters, so two snapshots of the same service can be
+/// compared with `xbarmap bench-gate` without ever-growing counters
+/// reading as regressions; the counters ride the in-band `metrics` frame.
+pub fn metrics_medians(m: &MetricsSnapshot) -> Json {
+    let mut o = JsonObj::new();
+    o.set(
+        "_schema",
+        "gauges only, BENCH_*.json-compatible (name -> number); monotonic counters \
+         ride the in-band {\"v\":1,\"cmd\":\"metrics\"} frame",
+    )
+    .set("serve/plan_p50_ns", m.stats.plan_p50_s * 1e9)
+    .set("serve/plan_p95_ns", m.stats.plan_p95_s * 1e9)
+    .set("serve/inflight", m.inflight)
+    .set("serve/queue_depth", m.queue_depth)
+    .set("serve/cache_entries", m.cache_entries)
+    .set("serve/cache_bytes", m.cache_bytes);
+    Json::Obj(o)
 }
 
 fn point_to_json(p: &SweepPoint) -> JsonObj {
@@ -726,6 +867,80 @@ mod tests {
     fn error_frame_carries_physical_line_number() {
         let f = error_frame(7, &PlanError("boom".into()));
         assert_eq!(f.dumps(), r#"{"v":1,"line":7,"error":"boom"}"#);
+    }
+
+    #[test]
+    fn reject_frame_extends_the_error_frame_with_a_typed_discriminator() {
+        let e = PlanError("connection exceeded its 8-request quota".into());
+        let f = reject_frame(9, RejectKind::OverQuota, &e);
+        assert_eq!(
+            f.dumps(),
+            r#"{"v":1,"line":9,"error":"connection exceeded its 8-request quota","reject":"over-quota"}"#
+        );
+        let f = reject_frame(3, RejectKind::OverInflight, &PlanError("full".into()));
+        assert_eq!(f.get("reject").and_then(Json::as_str), Some("over-inflight"));
+        // the v/line/error prefix is the error frame byte for byte, so
+        // clients that only understand error frames degrade gracefully
+        assert_eq!(f.get("line").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(f.get("error").and_then(Json::as_str), Some("full"));
+    }
+
+    #[test]
+    fn metrics_frame_roundtrips_and_supersets_the_stats_frame() {
+        let m = MetricsSnapshot {
+            stats: StatsSnapshot {
+                served: 41,
+                errors: 2,
+                cache_hits: 17,
+                connections: 5,
+                plan_p50_s: 0.0125,
+                plan_p95_s: 0.25,
+            },
+            inflight: 3,
+            rejected_over_quota: 1,
+            rejected_over_inflight: 7,
+            queue_depth: 2,
+            cache_entries: 12,
+            cache_bytes: 51_234,
+            cache_expired: 4,
+            uptime_s: 86.5,
+        };
+        let j = metrics_frame(&m);
+        let back = metrics_from_json(&crate::util::json::parse(&j.dumps()).unwrap()).unwrap();
+        assert_eq!(back, m);
+        // drift pin: every field of the stats payload appears, same name,
+        // in the metrics payload (both serialize through counters_to_obj)
+        let stats_obj = stats_frame(&m.stats);
+        let stats_inner = stats_obj.get("stats").and_then(Json::as_obj).unwrap();
+        let metrics_inner = j.get("metrics").and_then(Json::as_obj).unwrap();
+        for (k, v) in stats_inner.iter() {
+            assert_eq!(metrics_inner.get(k), Some(v), "stats field '{k}' drifted");
+        }
+        // version tag enforced like every other frame
+        let unversioned = crate::util::json::parse(r#"{"metrics":{}}"#).unwrap();
+        assert!(metrics_from_json(&unversioned).unwrap_err().0.contains("version"));
+    }
+
+    #[test]
+    fn metrics_medians_emit_gauges_in_the_bench_schema() {
+        let m = MetricsSnapshot {
+            stats: StatsSnapshot { plan_p50_s: 0.002, plan_p95_s: 0.03, ..Default::default() },
+            inflight: 1,
+            queue_depth: 4,
+            cache_entries: 9,
+            cache_bytes: 1000,
+            ..Default::default()
+        };
+        let j = metrics_medians(&m);
+        assert_eq!(j.get("serve/plan_p50_ns").and_then(Json::as_f64), Some(2e6));
+        assert_eq!(j.get("serve/plan_p95_ns").and_then(Json::as_f64), Some(3e7));
+        assert_eq!(j.get("serve/queue_depth").and_then(|v| v.as_usize()), Some(4));
+        // no monotonic counters: two snapshots must be bench-gate safe
+        for absent in ["serve/served", "serve/errors", "serve/cache_hits", "serve/uptime_s"] {
+            assert!(j.get(absent).is_none(), "{absent} must not be a medians row");
+        }
+        // string rows (the _schema marker) never gate (benchkit contract)
+        assert!(j.get("_schema").and_then(Json::as_str).is_some());
     }
 
     #[test]

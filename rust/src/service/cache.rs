@@ -1,4 +1,5 @@
-//! Canonical-request plan cache.
+//! Canonical-request plan cache: LRU eviction, optional TTL, byte-size
+//! accounting.
 //!
 //! Multi-tenant traffic repeats itself: zoo networks under the default
 //! §3.1 grid, the same fixed-tile pricing question from every replica of a
@@ -11,31 +12,73 @@
 //! tenants asking the same design question under different ids share one
 //! entry, and the hit path re-stamps the incoming id before serializing.
 //!
-//! Eviction is FIFO with a fixed entry capacity — the goal is a bounded
-//! memory footprint for an always-on service, not a perfect hit rate.
+//! Eviction policy (per [`PlanCache::with_policy`]):
+//!
+//! * **LRU** within a fixed entry capacity — repeated design questions
+//!   stay resident while one-off sweeps age out (the PR-4 cache was FIFO,
+//!   which evicted the hottest entry as readily as the coldest);
+//! * an optional **TTL**: once the area model (or any pricing input)
+//!   becomes mutable at runtime, a bounded entry lifetime guarantees no
+//!   client is served a plan priced under parameters older than the TTL;
+//! * **byte accounting**: every entry is charged its key length plus its
+//!   serialized plan length, so the cache's real memory footprint is
+//!   observable (`metrics` frame) and optionally bounded (`max_bytes`),
+//!   not just its entry count — one BERT grid plan is ~1000x the bytes of
+//!   a LeNet fixed-tile plan.
 
 use crate::plan::{MapPlan, MapRequest};
-use std::collections::{HashMap, VecDeque};
-use std::sync::{Arc, Mutex};
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+struct Entry {
+    plan: Arc<MapPlan>,
+    /// bytes charged to this entry: key length + serialized plan length
+    bytes: usize,
+    inserted: Instant,
+    /// logical clock value of the last hit (or the insert) — the LRU
+    /// victim is the entry with the smallest value
+    last_used: u64,
+}
 
 struct Inner {
-    map: HashMap<String, Arc<MapPlan>>,
-    /// insertion order, oldest first (FIFO eviction)
-    order: VecDeque<String>,
+    map: HashMap<String, Entry>,
+    /// logical clock: bumped on every insert and hit
+    tick: u64,
+    /// total bytes charged across live entries
+    bytes: usize,
+    /// entries dropped because their TTL elapsed (cumulative)
+    expired: u64,
 }
 
 /// Bounded memoization of canonical request → plan. Capacity 0 disables
 /// caching entirely (every lookup misses, inserts are dropped).
 pub struct PlanCache {
     capacity: usize,
+    ttl: Option<Duration>,
+    /// byte budget across entries (0 = unbounded; the entry capacity
+    /// still bounds memory)
+    max_bytes: usize,
     inner: Mutex<Inner>,
 }
 
 impl PlanCache {
+    /// An LRU cache of `capacity` entries with no TTL and no byte cap.
     pub fn new(capacity: usize) -> PlanCache {
+        PlanCache::with_policy(capacity, None, 0)
+    }
+
+    /// An LRU cache of at most `capacity` entries, each living at most
+    /// `ttl` (None = forever), charged against a `max_bytes` budget
+    /// (0 = unbounded). Eviction removes least-recently-used entries
+    /// until both bounds hold.
+    pub fn with_policy(capacity: usize, ttl: Option<Duration>, max_bytes: usize) -> PlanCache {
         PlanCache {
             capacity,
-            inner: Mutex::new(Inner { map: HashMap::new(), order: VecDeque::new() }),
+            ttl,
+            max_bytes,
+            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0, bytes: 0, expired: 0 }),
         }
     }
 
@@ -63,31 +106,108 @@ impl PlanCache {
         anon.to_json().dumps()
     }
 
-    /// Look up a cached plan. The returned plan carries an empty id — the
-    /// caller re-stamps the incoming request's id before serializing.
+    /// Look up a cached plan, refreshing its recency. An entry past its
+    /// TTL is dropped (counted in [`PlanCache::expired_total`]) and
+    /// reported as a miss — the caller re-solves and re-inserts, so no
+    /// plan older than the TTL is ever served. The returned plan carries
+    /// an empty id — the caller re-stamps the incoming request's id
+    /// before serializing.
     pub fn get(&self, key: &str) -> Option<Arc<MapPlan>> {
+        self.get_at(key, Instant::now())
+    }
+
+    fn get_at(&self, key: &str, now: Instant) -> Option<Arc<MapPlan>> {
         if self.capacity == 0 {
             return None;
         }
-        self.inner.lock().unwrap().map.get(key).cloned()
+        let mut inner = self.inner.lock().unwrap();
+        let expired = match (inner.map.get(key), self.ttl) {
+            (Some(e), Some(ttl)) => now.saturating_duration_since(e.inserted) >= ttl,
+            _ => false,
+        };
+        if expired {
+            let e = inner.map.remove(key).expect("checked above");
+            inner.bytes -= e.bytes;
+            inner.expired += 1;
+            return None;
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.get_mut(key).map(|e| {
+            e.last_used = tick;
+            Arc::clone(&e.plan)
+        })
     }
 
-    /// Insert a plan (id already cleared by the caller). Replaces an
-    /// existing entry for the same key without consuming extra capacity;
-    /// otherwise evicts the oldest entry once full.
+    /// Insert a plan (id already cleared by the caller), charging
+    /// `key.len()` plus the plan's serialized length against the byte
+    /// budget, then evicting least-recently-used entries until both the
+    /// entry and byte bounds hold. Replacing an existing key re-charges
+    /// its bytes; a plan too large for `max_bytes` on its own simply
+    /// doesn't stay resident (bounded memory wins over hit rate).
     pub fn insert(&self, key: String, plan: Arc<MapPlan>) {
+        if self.capacity == 0 {
+            return; // don't pay the serialization below just to drop it
+        }
+        let plan_len = plan.to_json().dumps().len();
+        self.insert_at(key, plan, plan_len, Instant::now())
+    }
+
+    /// [`PlanCache::insert`] with the plan's serialized length already in
+    /// hand — the service serializes the anonymized plan anyway, so the
+    /// accounting charge costs no second serialization.
+    pub fn insert_serialized(&self, key: String, plan: Arc<MapPlan>, plan_len: usize) {
+        self.insert_at(key, plan, plan_len, Instant::now())
+    }
+
+    fn insert_at(&self, key: String, plan: Arc<MapPlan>, plan_len: usize, now: Instant) {
         if self.capacity == 0 {
             return;
         }
         debug_assert!(plan.id.is_empty(), "cached plans must be anonymous");
+        let bytes = key.len() + plan_len;
         let mut inner = self.inner.lock().unwrap();
-        if inner.map.insert(key.clone(), plan).is_none() {
-            inner.order.push_back(key);
-            if inner.order.len() > self.capacity {
-                if let Some(oldest) = inner.order.pop_front() {
-                    inner.map.remove(&oldest);
+        // purge everything already past its TTL — expiry is otherwise only
+        // discovered by a lookup of the same key, which would let a
+        // never-requested-again entry hold memory (and inflate the
+        // cache_bytes gauge) forever
+        if let Some(ttl) = self.ttl {
+            let (mut freed, mut dropped) = (0usize, 0u64);
+            inner.map.retain(|_, e| {
+                let live = now.saturating_duration_since(e.inserted) < ttl;
+                if !live {
+                    freed += e.bytes;
+                    dropped += 1;
                 }
-            }
+                live
+            });
+            inner.bytes -= freed;
+            inner.expired += dropped;
+        }
+        inner.tick += 1;
+        let entry = Entry { plan, bytes, inserted: now, last_used: inner.tick };
+        if let Some(old) = inner.map.insert(key, entry) {
+            inner.bytes -= old.bytes;
+        }
+        inner.bytes += bytes;
+        // victim selection is a full O(entries) scan per eviction — a
+        // deliberate trade: hits stay O(1) and allocation-free (a
+        // tick->key index would charge every hit a BTreeMap update plus a
+        // String), and evictions only run on miss-inserts at capacity,
+        // where the preceding solve dwarfs a few-hundred-entry walk.
+        // Revisit with an ordered index if caches grow to 10^5 entries.
+        while (inner.map.len() > self.capacity
+            || (self.max_bytes > 0 && inner.bytes > self.max_bytes))
+            && !inner.map.is_empty()
+        {
+            let victim = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map has a minimum");
+            let e = inner.map.remove(&victim).expect("victim came from the map");
+            inner.bytes -= e.bytes;
         }
     }
 
@@ -96,8 +216,20 @@ impl PlanCache {
         self.inner.lock().unwrap().map.len()
     }
 
+    /// Whether the cache currently holds no entries.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Bytes currently charged across live entries (keys + serialized
+    /// plans — the footprint the `metrics` frame reports).
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Entries dropped by TTL expiry since construction.
+    pub fn expired_total(&self) -> u64 {
+        self.inner.lock().unwrap().expired
     }
 }
 
@@ -112,6 +244,17 @@ mod tests {
         Arc::new(plan)
     }
 
+    /// A plan plus its serialized length, for the explicit-clock inserts.
+    fn sized_plan(req: &MapRequest) -> (Arc<MapPlan>, usize) {
+        let plan = plan_for(req);
+        let len = plan.to_json().dumps().len();
+        (plan, len)
+    }
+
+    fn req(rows: usize) -> MapRequest {
+        MapRequest::zoo("lenet").tile(rows, 64)
+    }
+
     #[test]
     fn key_ignores_the_correlation_id_only() {
         let a = MapRequest::zoo("lenet").id("tenant-a").tile(256, 256);
@@ -124,27 +267,25 @@ mod tests {
     }
 
     #[test]
-    fn fifo_eviction_bounds_the_entry_count() {
+    fn eviction_is_lru_not_fifo() {
         let cache = PlanCache::new(2);
-        let reqs: Vec<MapRequest> = [64, 128, 256]
-            .iter()
-            .map(|&r| MapRequest::zoo("lenet").tile(r, 64))
-            .collect();
-        for req in &reqs {
-            cache.insert(PlanCache::key(req), plan_for(req));
-        }
+        let (a, b, c) = (req(64), req(128), req(256));
+        cache.insert(PlanCache::key(&a), plan_for(&a));
+        cache.insert(PlanCache::key(&b), plan_for(&b));
+        // touch the older entry: under FIFO it would still be the victim,
+        // under LRU the untouched one is
+        assert!(cache.get(&PlanCache::key(&a)).is_some());
+        cache.insert(PlanCache::key(&c), plan_for(&c));
         assert_eq!(cache.len(), 2);
-        // the oldest entry was evicted, the two newest remain
-        assert!(cache.get(&PlanCache::key(&reqs[0])).is_none());
-        assert!(cache.get(&PlanCache::key(&reqs[1])).is_some());
-        assert!(cache.get(&PlanCache::key(&reqs[2])).is_some());
+        assert!(cache.get(&PlanCache::key(&a)).is_some(), "recently used entry evicted");
+        assert!(cache.get(&PlanCache::key(&b)).is_none(), "LRU entry survived");
+        assert!(cache.get(&PlanCache::key(&c)).is_some());
     }
 
     #[test]
     fn replacing_a_key_does_not_consume_capacity() {
         let cache = PlanCache::new(2);
-        let a = MapRequest::zoo("lenet").tile(64, 64);
-        let b = MapRequest::zoo("lenet").tile(128, 64);
+        let (a, b) = (req(64), req(128));
         cache.insert(PlanCache::key(&a), plan_for(&a));
         cache.insert(PlanCache::key(&a), plan_for(&a));
         cache.insert(PlanCache::key(&b), plan_for(&b));
@@ -155,9 +296,94 @@ mod tests {
     #[test]
     fn zero_capacity_disables_caching() {
         let cache = PlanCache::new(0);
-        let a = MapRequest::zoo("lenet").tile(64, 64);
+        let a = req(64);
         cache.insert(PlanCache::key(&a), plan_for(&a));
         assert!(cache.get(&PlanCache::key(&a)).is_none());
         assert!(cache.is_empty());
+        assert!(!cache.enabled());
+        assert_eq!(cache.bytes(), 0);
+    }
+
+    #[test]
+    fn ttl_expires_entries_without_wall_clock_sleeps() {
+        let ttl = Duration::from_secs(60);
+        let cache = PlanCache::with_policy(4, Some(ttl), 0);
+        let a = req(64);
+        let key = PlanCache::key(&a);
+        let (plan, len) = sized_plan(&a);
+        let t0 = Instant::now();
+        cache.insert_at(key.clone(), plan.clone(), len, t0);
+        // young entry hits; the hit does NOT extend the lifetime (TTL is
+        // from insert, so a hot entry still refreshes after the TTL)
+        assert!(cache.get_at(&key, t0 + ttl / 2).is_some());
+        assert!(cache.get_at(&key, t0 + ttl).is_none(), "entry outlived its TTL");
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.expired_total(), 1);
+        // re-inserting after expiry restarts the clock
+        cache.insert_at(key.clone(), plan, len, t0 + ttl);
+        assert!(cache.get_at(&key, t0 + ttl + ttl / 2).is_some());
+    }
+
+    #[test]
+    fn inserts_purge_expired_entries_of_other_keys() {
+        // a one-off entry that is never looked up again must not hold
+        // memory (or inflate the gauges) past its TTL: any later insert
+        // sweeps it out
+        let ttl = Duration::from_secs(60);
+        let cache = PlanCache::with_policy(8, Some(ttl), 0);
+        let (a, b) = (req(64), req(128));
+        let (plan_a, len_a) = sized_plan(&a);
+        let (plan_b, len_b) = sized_plan(&b);
+        let t0 = Instant::now();
+        cache.insert_at(PlanCache::key(&a), plan_a, len_a, t0);
+        cache.insert_at(PlanCache::key(&b), plan_b, len_b, t0 + ttl);
+        assert_eq!(cache.len(), 1, "expired entry must be purged by the insert");
+        assert_eq!(cache.expired_total(), 1);
+        assert_eq!(cache.bytes(), PlanCache::key(&b).len() + len_b);
+        assert!(cache.get_at(&PlanCache::key(&b), t0 + ttl).is_some());
+    }
+
+    #[test]
+    fn no_ttl_means_entries_never_expire() {
+        let cache = PlanCache::new(2);
+        let a = req(64);
+        let key = PlanCache::key(&a);
+        let (plan, len) = sized_plan(&a);
+        let t0 = Instant::now();
+        cache.insert_at(key.clone(), plan, len, t0);
+        assert!(cache.get_at(&key, t0 + Duration::from_secs(1 << 20)).is_some());
+        assert_eq!(cache.expired_total(), 0);
+    }
+
+    #[test]
+    fn byte_accounting_tracks_live_entries() {
+        let cache = PlanCache::new(4);
+        let (a, b) = (req(64), req(128));
+        assert_eq!(cache.bytes(), 0);
+        cache.insert(PlanCache::key(&a), plan_for(&a));
+        let after_one = cache.bytes();
+        assert!(after_one > PlanCache::key(&a).len(), "charge must include the plan body");
+        cache.insert(PlanCache::key(&b), plan_for(&b));
+        assert!(cache.bytes() > after_one);
+        // replacing re-charges instead of double-counting
+        cache.insert(PlanCache::key(&a), plan_for(&a));
+        assert_eq!(cache.len(), 2);
+        let two = cache.bytes();
+        cache.insert(PlanCache::key(&a), plan_for(&a));
+        assert_eq!(cache.bytes(), two);
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_until_under() {
+        let a = req(64);
+        let one_entry = PlanCache::key(&a).len() + plan_for(&a).to_json().dumps().len();
+        // budget fits roughly one entry of this shape
+        let cache = PlanCache::with_policy(16, None, one_entry + one_entry / 2);
+        let b = req(128);
+        cache.insert(PlanCache::key(&a), plan_for(&a));
+        cache.insert(PlanCache::key(&b), plan_for(&b));
+        assert_eq!(cache.len(), 1, "byte budget must evict despite free entry slots");
+        assert!(cache.get(&PlanCache::key(&b)).is_some(), "newest entry must survive");
+        assert!(cache.bytes() <= one_entry + one_entry / 2);
     }
 }

@@ -24,7 +24,23 @@
 //!   closes each connection only after its last owed response;
 //! * an **in-band `{"v":1,"cmd":"stats"}` request** answered with the
 //!   [`wire::stats_frame`]: served/errored/cache-hit counts and
-//!   nearest-rank p50/p95 plan-solve latency.
+//!   nearest-rank p50/p95 plan-solve latency;
+//! * **admission control** for sustained multi-tenant traffic:
+//!   `--per-conn-quota` bounds how many requests one connection may
+//!   submit (the quota-exceeding line is answered with the typed
+//!   [`wire::reject_frame`] `"reject":"over-quota"` and the connection is
+//!   closed), and `--max-inflight` caps requests admitted service-wide
+//!   (queued + being planned); past it a request is shed with
+//!   `"reject":"over-inflight"` — transient, the connection stays open —
+//!   instead of deepening the backlog. In-band commands are exempt from
+//!   the cap (a saturated service must stay observable), and in-quota
+//!   connections are byte-unaffected either way;
+//! * **observability**: an in-band `{"v":1,"cmd":"metrics"}` request
+//!   answered with the [`wire::metrics_frame`] (the stats counters plus
+//!   inflight/rejection/queue/cache gauges, one shared serializer so
+//!   field names cannot drift), and `--metrics-out FILE` periodically
+//!   writing the [`wire::metrics_medians`] gauge snapshot in the
+//!   `BENCH_*.json` schema so serve latency joins the bench trajectory.
 
 mod cache;
 mod conn;
@@ -39,7 +55,8 @@ use conn::Conn;
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, ErrorKind, Read};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -74,6 +91,28 @@ pub struct ServiceConfig {
     pub queue_capacity: usize,
     /// plan-cache entries (0 disables caching)
     pub cache_capacity: usize,
+    /// plan-cache entry lifetime (None = entries never expire); set this
+    /// once pricing inputs can change at runtime so no stale plan outlives
+    /// the TTL
+    pub cache_ttl: Option<Duration>,
+    /// plan-cache byte budget across entries, keys + serialized plans
+    /// (0 = unbounded; the entry capacity still bounds the count) — one
+    /// BERT grid plan is ~1000x the bytes of a LeNet fixed-tile plan, so
+    /// entry counts alone don't bound memory
+    pub cache_max_bytes: usize,
+    /// requests one connection may submit before the service answers with
+    /// the typed `over-quota` reject frame and closes it (0 = unlimited)
+    pub per_conn_quota: usize,
+    /// service-wide cap on admitted requests — queued plus being planned;
+    /// past it new requests are shed with the typed `over-inflight`
+    /// reject frame instead of queueing (0 = unlimited)
+    pub max_inflight: usize,
+    /// file to periodically overwrite with the [`wire::metrics_medians`]
+    /// gauge snapshot (None = no metrics file)
+    pub metrics_out: Option<PathBuf>,
+    /// how often the metrics file is rewritten (also written once at
+    /// shutdown, so short-lived runs still leave a snapshot)
+    pub metrics_interval: Duration,
     /// also shut down on SIGINT/ctrl-C (the CLI sets this; tests drive
     /// shutdown through [`ServiceHandle`] instead)
     pub watch_sigint: bool,
@@ -86,6 +125,12 @@ impl Default for ServiceConfig {
             workers: 0,
             queue_capacity: 64,
             cache_capacity: 256,
+            cache_ttl: None,
+            cache_max_bytes: 0,
+            per_conn_quota: 0,
+            max_inflight: 0,
+            metrics_out: None,
+            metrics_interval: Duration::from_secs(10),
             watch_sigint: false,
         }
     }
@@ -107,6 +152,8 @@ struct StatsInner {
     errors: u64,
     cache_hits: u64,
     connections: u64,
+    rejected_over_quota: u64,
+    rejected_over_inflight: u64,
     latencies: VecDeque<f64>,
 }
 
@@ -117,6 +164,16 @@ struct Shared {
     queue: Queue<Job>,
     cache: PlanCache,
     stats: Mutex<StatsInner>,
+    /// requests admitted but not yet answered (queued + being planned);
+    /// readers increment before pushing, workers decrement after
+    /// delivering — the gauge the `--max-inflight` admission cap tests
+    inflight: AtomicUsize,
+    /// admission cap copied out of the config (0 = unlimited)
+    max_inflight: usize,
+    /// per-connection request quota copied out of the config (0 = none)
+    per_conn_quota: usize,
+    /// when the listener bound, for the uptime gauge
+    started: Instant,
 }
 
 impl Shared {
@@ -127,6 +184,10 @@ impl Shared {
 
     fn snapshot(&self) -> wire::StatsSnapshot {
         let s = self.stats.lock().unwrap();
+        Self::stats_of(&s)
+    }
+
+    fn stats_of(s: &StatsInner) -> wire::StatsSnapshot {
         let mut lat: Vec<f64> = s.latencies.iter().copied().collect();
         sort_samples(&mut lat);
         wire::StatsSnapshot {
@@ -138,12 +199,47 @@ impl Shared {
             plan_p95_s: percentile_nearest_rank(&lat, 0.95),
         }
     }
+
+    /// The full observability snapshot: the stats counters plus the
+    /// admission, queue and cache gauges (in-band `metrics` command and
+    /// the `--metrics-out` writer).
+    fn metrics(&self) -> wire::MetricsSnapshot {
+        let (stats, rejected_over_quota, rejected_over_inflight) = {
+            let s = self.stats.lock().unwrap();
+            (Self::stats_of(&s), s.rejected_over_quota, s.rejected_over_inflight)
+        };
+        wire::MetricsSnapshot {
+            stats,
+            inflight: self.inflight.load(Ordering::SeqCst) as u64,
+            rejected_over_quota,
+            rejected_over_inflight,
+            queue_depth: self.queue.len() as u64,
+            cache_entries: self.cache.len() as u64,
+            cache_bytes: self.cache.bytes() as u64,
+            cache_expired: self.cache.expired_total(),
+            uptime_s: self.started.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Count one admission rejection. Rejects are error frames on the
+    /// wire, so they bump `errors` too — a client watching only the
+    /// stats frame still sees the shedding — plus their own counter.
+    fn note_reject(&self, kind: wire::RejectKind) {
+        let mut s = self.stats.lock().unwrap();
+        s.errors += 1;
+        match kind {
+            wire::RejectKind::OverQuota => s.rejected_over_quota += 1,
+            wire::RejectKind::OverInflight => s.rejected_over_inflight += 1,
+        }
+    }
 }
 
 /// A bound (but not yet running) planning service.
 pub struct Service {
     listener: TcpListener,
     workers: usize,
+    metrics_out: Option<PathBuf>,
+    metrics_interval: Duration,
     shared: Arc<Shared>,
 }
 
@@ -165,6 +261,13 @@ impl ServiceHandle {
     pub fn stats(&self) -> wire::StatsSnapshot {
         self.shared.snapshot()
     }
+
+    /// The full observability snapshot (the same numbers the in-band
+    /// `metrics` command reports): the stats counters plus admission,
+    /// rejection, queue and cache gauges.
+    pub fn metrics(&self) -> wire::MetricsSnapshot {
+        self.shared.metrics()
+    }
 }
 
 impl Service {
@@ -180,18 +283,30 @@ impl Service {
         Ok(Service {
             listener,
             workers,
+            metrics_out: cfg.metrics_out.clone(),
+            metrics_interval: cfg.metrics_interval,
             shared: Arc::new(Shared {
                 shutdown: AtomicBool::new(false),
                 sigint: if cfg.watch_sigint { Some(sigint_flag()) } else { None },
                 queue: Queue::bounded(cfg.queue_capacity),
-                cache: PlanCache::new(cfg.cache_capacity),
+                cache: PlanCache::with_policy(
+                    cfg.cache_capacity,
+                    cfg.cache_ttl,
+                    cfg.cache_max_bytes,
+                ),
                 stats: Mutex::new(StatsInner {
                     served: 0,
                     errors: 0,
                     cache_hits: 0,
                     connections: 0,
+                    rejected_over_quota: 0,
+                    rejected_over_inflight: 0,
                     latencies: VecDeque::new(),
                 }),
+                inflight: AtomicUsize::new(0),
+                max_inflight: cfg.max_inflight,
+                per_conn_quota: cfg.per_conn_quota,
+                started: Instant::now(),
             }),
         })
     }
@@ -201,6 +316,8 @@ impl Service {
         self.listener.local_addr()
     }
 
+    /// A [`ServiceHandle`] for remote control (shutdown, stats, metrics)
+    /// while [`Service::run`] blocks another thread.
     pub fn handle(&self) -> ServiceHandle {
         ServiceHandle { shared: Arc::clone(&self.shared) }
     }
@@ -217,13 +334,35 @@ impl Service {
                 while let Some(job) = sh.queue.pop() {
                     let response = respond(&sh, &job);
                     job.conn.deliver(job.seq, response);
+                    // admitted at read time; answered now
+                    sh.inflight.fetch_sub(1, Ordering::SeqCst);
                 }
             }));
         }
 
+        // periodic metrics snapshots: overwrite the file every interval
+        // while running, and once more after the final drain below so
+        // short-lived runs still leave their last gauges behind
+        let metrics_writer = self.metrics_out.as_ref().map(|path| {
+            let (sh, path) = (Arc::clone(&shared), path.clone());
+            let interval = self.metrics_interval;
+            std::thread::spawn(move || {
+                let mut last = Instant::now();
+                while !sh.is_shutdown() {
+                    std::thread::sleep(POLL);
+                    if last.elapsed() >= interval {
+                        let _ = write_metrics_file(&path, &sh.metrics());
+                        last = Instant::now();
+                    }
+                }
+            })
+        });
+
         if let Err(e) = self.listener.set_nonblocking(true) {
             // same discipline as the fatal accept arm: never leave the
-            // already-spawned workers parked on the queue forever
+            // already-spawned workers parked on the queue (or the metrics
+            // writer polling a flag) forever
+            shared.shutdown.store(true, Ordering::SeqCst);
             shared.queue.close();
             return Err(e);
         }
@@ -259,6 +398,7 @@ impl Service {
                 Err(e) => {
                     // fatal listener error: let the workers drain and exit
                     // rather than leaving them parked on the queue forever
+                    shared.shutdown.store(true, Ordering::SeqCst);
                     shared.queue.close();
                     return Err(e);
                 }
@@ -274,8 +414,32 @@ impl Service {
         for w in workers {
             let _ = w.join();
         }
+        if let Some(w) = metrics_writer {
+            let _ = w.join();
+        }
+        if let Some(path) = &self.metrics_out {
+            // final snapshot after the drain, so the file reflects every
+            // response the service ever wrote
+            let _ = write_metrics_file(path, &shared.metrics());
+        }
         Ok(shared.snapshot())
     }
+}
+
+/// Replace `path` with the flat [`wire::metrics_medians`] gauge
+/// snapshot: write a sibling temp file, then rename, so a scraper never
+/// reads a half-written document. On platforms where rename refuses to
+/// replace an existing file (Windows), fall back to removing the
+/// destination first — a brief gap beats a frozen first snapshot.
+fn write_metrics_file(path: &Path, m: &wire::MetricsSnapshot) -> std::io::Result<()> {
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    std::fs::write(&tmp, wire::metrics_medians(m).pretty() + "\n")?;
+    std::fs::rename(&tmp, path).or_else(|_| {
+        std::fs::remove_file(path)?;
+        std::fs::rename(&tmp, path)
+    })
 }
 
 /// Read one connection's request lines into the shared queue. Every
@@ -343,7 +507,9 @@ fn read_conn(shared: &Shared, stream: TcpStream, conn: Arc<Conn>) {
             let e = PlanError(format!("request line exceeds {MAX_LINE_BYTES} bytes"));
             conn.deliver(seq, wire::error_frame(line_no, &e).dumps());
             seq += 1;
-            break;
+            conn.finish_input(seq);
+            drain_discard(shared, &mut reader);
+            return;
         }
         if eof && buf.iter().all(u8::is_ascii_whitespace) {
             break;
@@ -354,18 +520,91 @@ fn read_conn(shared: &Shared, stream: TcpStream, conn: Arc<Conn>) {
         if text.is_empty() {
             continue;
         }
+        // per-connection quota: `seq` counts the requests this connection
+        // already submitted, so the (quota+1)-th request gets the typed
+        // over-quota frame — in order, like any response — and the
+        // connection is closed (the client is outside its contract; a new
+        // connection gets a fresh quota)
+        if shared.per_conn_quota > 0 && seq >= shared.per_conn_quota {
+            shared.note_reject(wire::RejectKind::OverQuota);
+            let e = PlanError(format!(
+                "connection exceeded its {}-request quota",
+                shared.per_conn_quota
+            ));
+            conn.deliver(seq, wire::reject_frame(line_no, wire::RejectKind::OverQuota, &e).dumps());
+            seq += 1;
+            conn.finish_input(seq);
+            drain_discard(shared, &mut reader);
+            return;
+        }
+        // service-wide admission: reserve an in-flight slot before
+        // queueing. At the cap the request is shed with the typed
+        // over-inflight frame — transient, so the connection stays open
+        // and the client may retry — instead of deepening the backlog.
+        // In-band commands (`"cmd"` without `"net"`, recognized here by a
+        // cheap substring sniff — the real parse happens in the worker)
+        // are exempt: stats/metrics must stay answerable exactly when the
+        // service is saturated, which is when an operator asks. A false
+        // negative (e.g. `"net"` inside a string value) just falls back
+        // to normal admission; a false positive admits one line that the
+        // worker answers with a cheap error frame.
+        let looks_like_cmd = text.contains("\"cmd\"") && !text.contains("\"net\"");
+        let admitted = shared.inflight.fetch_add(1, Ordering::SeqCst);
+        if shared.max_inflight > 0 && admitted >= shared.max_inflight && !looks_like_cmd {
+            shared.inflight.fetch_sub(1, Ordering::SeqCst);
+            shared.note_reject(wire::RejectKind::OverInflight);
+            let e = PlanError(format!(
+                "service at its {}-request in-flight cap, retry later",
+                shared.max_inflight
+            ));
+            conn.deliver(
+                seq,
+                wire::reject_frame(line_no, wire::RejectKind::OverInflight, &e).dumps(),
+            );
+            seq += 1;
+            continue;
+        }
         let job = Job { conn: Arc::clone(&conn), seq, line_no, text: text.to_string() };
         seq += 1;
         // blocks while the queue is full — this is the backpressure path
         // (the socket stops being read, so the client's TCP window fills)
         if shared.queue.push(job).is_err() {
             // queue closed mid-push: shutdown raced us; the job was
-            // refused, so give its sequence number back
+            // refused, so give its sequence number (and in-flight slot)
+            // back
+            shared.inflight.fetch_sub(1, Ordering::SeqCst);
             seq -= 1;
             break;
         }
     }
     conn.finish_input(seq);
+}
+
+/// Read and discard a connection's remaining input until the client
+/// half-closes (EOF), a read error, or service shutdown. Used after a
+/// terminal frame (over-quota, oversized line): dropping the socket
+/// while unread bytes sit in the receive buffer makes the kernel reset
+/// the connection, which can destroy the very responses — the typed
+/// reject included — the client is still owed. The parked thread costs
+/// no more than any idle connection's reader, and discarding into a
+/// fixed scratch keeps memory flat however much the client streams.
+fn drain_discard(shared: &Shared, reader: &mut BufReader<TcpStream>) {
+    let mut scratch = [0u8; 4096];
+    loop {
+        if shared.is_shutdown() {
+            return;
+        }
+        match reader.read(&mut scratch) {
+            Ok(0) => return, // EOF: nothing left to abandon
+            Ok(_) => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) => {}
+            Err(_) => return,
+        }
+    }
 }
 
 /// Produce the response line for one job (no trailing newline), updating
@@ -421,9 +660,17 @@ fn respond(shared: &Shared, job: &Job) -> String {
             stats.latencies.push_back(solve_s);
             drop(stats);
             if let Some(key) = key {
+                // one serialization of the anonymized plan covers both the
+                // cache's byte accounting and — for the common id-less
+                // request, where anonymized == response — the wire bytes
                 let mut anon = plan.clone();
                 anon.id.clear();
-                shared.cache.insert(key, Arc::new(anon));
+                let anon_line = anon.to_json().dumps();
+                let anon_len = anon_line.len();
+                shared.cache.insert_serialized(key, Arc::new(anon), anon_len);
+                if plan.id.is_empty() {
+                    return anon_line;
+                }
             }
             plan.to_json().dumps()
         }
@@ -438,8 +685,9 @@ fn respond_cmd(shared: &Shared, j: &Json, line_no: usize) -> String {
         wire::check_version(o, "command")?;
         match o.get("cmd").and_then(Json::as_str) {
             Some("stats") => Ok(wire::stats_frame(&shared.snapshot())),
+            Some("metrics") => Ok(wire::metrics_frame(&shared.metrics())),
             other => Err(PlanError(format!(
-                "unknown command '{}' (try \"stats\")",
+                "unknown command '{}' (try \"stats\" or \"metrics\")",
                 other.unwrap_or("?")
             ))),
         }

@@ -11,15 +11,22 @@ use std::time::{Duration, Instant};
 /// One benchmark's collected statistics (nanoseconds per iteration).
 #[derive(Debug, Clone)]
 pub struct Stats {
+    /// benchmark name (the key in `BENCH_*.json`)
     pub name: String,
+    /// total iterations measured
     pub iters: u64,
+    /// fastest sample, ns/iter
     pub min_ns: f64,
+    /// median sample, ns/iter (the gated number)
     pub p50_ns: f64,
+    /// 95th-percentile sample, ns/iter
     pub p95_ns: f64,
+    /// mean across samples, ns/iter
     pub mean_ns: f64,
 }
 
 impl Stats {
+    /// Iterations per second at the median sample.
     pub fn throughput_per_sec(&self) -> f64 {
         1e9 / self.p50_ns
     }
@@ -29,6 +36,7 @@ impl Stats {
 pub struct Bench {
     warmup: Duration,
     measure: Duration,
+    /// every benchmark measured so far, in run order
     pub results: Vec<Stats>,
 }
 
@@ -39,6 +47,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// A runner with explicit warmup and measurement budgets.
     pub fn new(warmup: Duration, measure: Duration) -> Self {
         Bench { warmup, measure, results: Vec::new() }
     }

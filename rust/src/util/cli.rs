@@ -8,10 +8,13 @@ use std::collections::BTreeMap;
 /// Declarative option spec used for usage text and validation.
 #[derive(Debug, Clone)]
 pub struct OptSpec {
+    /// option name as typed after `--`
     pub name: &'static str,
+    /// one-line help shown in usage text
     pub help: &'static str,
     /// None => boolean flag; Some(meta) => takes a value shown as <meta>.
     pub value: Option<&'static str>,
+    /// value applied when the option is omitted (None = no default)
     pub default: Option<&'static str>,
 }
 
@@ -20,6 +23,7 @@ pub struct OptSpec {
 pub struct Args {
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// arguments that were not `--options`, in order
     pub positional: Vec<String>,
 }
 
@@ -63,14 +67,17 @@ impl Args {
         Ok(a)
     }
 
+    /// Whether a boolean flag was given.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// A value option's string (the default when one was declared).
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
     }
 
+    /// [`Args::get`] parsed as usize; `Err` on a malformed value.
     pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
         self.opts
             .get(name)
@@ -78,6 +85,7 @@ impl Args {
             .transpose()
     }
 
+    /// [`Args::get`] parsed as f64; `Err` on a malformed value.
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
         self.opts
             .get(name)
@@ -85,16 +93,18 @@ impl Args {
             .transpose()
     }
 
-    /// Required typed accessors (use after defaults were supplied).
+    /// Required string accessor (use after defaults were supplied).
     pub fn req(&self, name: &str) -> Result<&str, String> {
         self.get(name).ok_or_else(|| format!("--{name} is required"))
     }
 
+    /// Required usize accessor (use after defaults were supplied).
     pub fn req_usize(&self, name: &str) -> Result<usize, String> {
         self.get_usize(name)?
             .ok_or_else(|| format!("--{name} is required"))
     }
 
+    /// Required f64 accessor (use after defaults were supplied).
     pub fn req_f64(&self, name: &str) -> Result<f64, String> {
         self.get_f64(name)?
             .ok_or_else(|| format!("--{name} is required"))

@@ -12,11 +12,17 @@ use std::fmt::Write as _;
 /// A JSON value. Objects preserve insertion order via a parallel key list.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`
     Null,
+    /// JSON `true`/`false`
     Bool(bool),
+    /// any JSON number (integers ride exactly up to 2^53)
     Num(f64),
+    /// a JSON string
     Str(String),
+    /// a JSON array
     Arr(Vec<Json>),
+    /// a JSON object (insertion-ordered)
     Obj(JsonObj),
 }
 
@@ -28,6 +34,7 @@ pub struct JsonObj {
 }
 
 impl JsonObj {
+    /// An empty object.
     pub fn new() -> Self {
         Self::default()
     }
@@ -41,18 +48,22 @@ impl JsonObj {
         self
     }
 
+    /// Look up one key (no path traversal; see [`Json::get`] for paths).
     pub fn get(&self, k: &str) -> Option<&Json> {
         self.map.get(k)
     }
 
+    /// Number of keys.
     pub fn len(&self) -> usize {
         self.keys.len()
     }
 
+    /// Whether the object has no keys.
     pub fn is_empty(&self) -> bool {
         self.keys.is_empty()
     }
 
+    /// Iterate `(key, value)` pairs in insertion order.
     pub fn iter(&self) -> impl Iterator<Item = (&str, &Json)> {
         self.keys.iter().map(move |k| (k.as_str(), &self.map[k]))
     }
@@ -115,6 +126,7 @@ impl<T: Into<Json> + Clone> From<&[T]> for Json {
 }
 
 impl Json {
+    /// The number, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -122,10 +134,13 @@ impl Json {
         }
     }
 
+    /// The number truncated to usize, if this is a `Num` (wire decoders
+    /// that must reject fractions use their own exact-integer checks).
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The string, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -133,6 +148,7 @@ impl Json {
         }
     }
 
+    /// The boolean, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -140,6 +156,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -147,6 +164,7 @@ impl Json {
         }
     }
 
+    /// The object, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&JsonObj> {
         match self {
             Json::Obj(o) => Some(o),

@@ -111,6 +111,8 @@ impl<T> Queue<T> {
         self.state.lock().unwrap().buf.len()
     }
 
+    /// Whether nothing is currently queued (a snapshot, like
+    /// [`Queue::len`]).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -10,7 +10,9 @@ use crate::util::prng::Rng;
 /// Configuration for a property run.
 #[derive(Debug, Clone, Copy)]
 pub struct Config {
+    /// number of deterministic cases to execute
     pub cases: usize,
+    /// base seed every case's stream is derived from
     pub seed: u64,
 }
 

@@ -9,16 +9,19 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers.
     pub fn new(header: &[&str]) -> Self {
         Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append one row (arity must match the header).
     pub fn row(&mut self, cells: &[String]) -> &mut Self {
         assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
         self.rows.push(cells.to_vec());
         self
     }
 
+    /// The rows appended so far.
     pub fn rows(&self) -> &[Vec<String>] {
         &self.rows
     }

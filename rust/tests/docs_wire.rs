@@ -1,0 +1,116 @@
+//! Conformance: every JSONL example in `docs/WIRE.md` is parsed verbatim
+//! by the reference codec (`plan::wire`), so the normative spec and the
+//! implementation cannot drift. Each non-blank line inside a ` ```jsonl `
+//! fence must be valid JSON, and is routed to the matching decoder by its
+//! keys:
+//!
+//! * has `"net"` as an object → request (`MapRequest::from_json`);
+//! * has `"stats"` → stats frame; has `"metrics"` → metrics frame;
+//! * has `"cmd"` (no `"net"`) → in-band command (version + known verb);
+//! * has `"error"` → error frame shape (+ `"reject"` token when typed);
+//! * has `"best"` → plan frame (`MapPlan::from_json`).
+
+use xbarmap::plan::{MapPlan, MapRequest, wire};
+use xbarmap::util::json::{self, Json};
+
+fn wire_md() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/WIRE.md");
+    std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("docs/WIRE.md must exist next to rust/ ({path}): {e}"))
+}
+
+/// Every non-blank line inside ```jsonl fences, in document order.
+fn jsonl_examples(md: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut in_fence = false;
+    for line in md.lines() {
+        let trimmed = line.trim();
+        if in_fence {
+            if trimmed.starts_with("```") {
+                in_fence = false;
+            } else if !trimmed.is_empty() {
+                out.push(trimmed.to_string());
+            }
+        } else if trimmed == "```jsonl" {
+            in_fence = true;
+        }
+    }
+    assert!(!in_fence, "unclosed ```jsonl fence in docs/WIRE.md");
+    out
+}
+
+#[test]
+fn every_wire_md_jsonl_example_parses_against_the_reference_codec() {
+    let md = wire_md();
+    let examples = jsonl_examples(&md);
+    let (mut requests, mut plans, mut errors, mut rejects, mut stats, mut metrics, mut cmds) =
+        (0, 0, 0, 0, 0, 0, 0);
+    for line in &examples {
+        let j = json::parse(line)
+            .unwrap_or_else(|e| panic!("WIRE.md example is not JSON: {e}\n  {line}"));
+        let has = |k: &str| j.get(k).is_some();
+        if has("net") && j.get("net").and_then(Json::as_obj).is_some() {
+            MapRequest::from_json(&j)
+                .unwrap_or_else(|e| panic!("request example rejected: {e}\n  {line}"));
+            requests += 1;
+        } else if has("stats") {
+            wire::stats_from_json(&j)
+                .unwrap_or_else(|e| panic!("stats example rejected: {e}\n  {line}"));
+            stats += 1;
+        } else if has("metrics") {
+            wire::metrics_from_json(&j)
+                .unwrap_or_else(|e| panic!("metrics example rejected: {e}\n  {line}"));
+            metrics += 1;
+        } else if has("cmd") {
+            let o = j.as_obj().expect("command example must be an object");
+            assert_eq!(o.get("v").and_then(Json::as_f64), Some(1.0), "command version: {line}");
+            let verb = o.get("cmd").and_then(Json::as_str).expect("cmd must be a string");
+            assert!(
+                matches!(verb, "stats" | "metrics"),
+                "command example uses an unspecified verb '{verb}': {line}"
+            );
+            cmds += 1;
+        } else if has("error") {
+            assert_eq!(j.get("v").and_then(|v| v.as_usize()), Some(1), "error version: {line}");
+            assert!(
+                j.get("line").and_then(|v| v.as_usize()).unwrap_or(0) >= 1,
+                "error frames carry a physical 1-based line number: {line}"
+            );
+            assert!(j.get("error").and_then(Json::as_str).is_some(), "error text: {line}");
+            if let Some(token) = j.get("reject") {
+                let token = token.as_str().expect("reject token must be a string");
+                assert!(
+                    matches!(token, "over-quota" | "over-inflight"),
+                    "unspecified reject token '{token}': {line}"
+                );
+                rejects += 1;
+            } else {
+                errors += 1;
+            }
+        } else if has("best") {
+            MapPlan::from_json(&j)
+                .unwrap_or_else(|e| panic!("plan example rejected: {e}\n  {line}"));
+            plans += 1;
+        } else {
+            panic!("WIRE.md example matches no specified frame type: {line}");
+        }
+    }
+    // the spec must keep worked examples of every frame class — an edit
+    // that drops a class (or breaks fence extraction entirely) fails here
+    assert!(requests >= 5, "expected >= 5 request examples, found {requests}");
+    assert!(plans >= 1, "expected a plan example, found {plans}");
+    assert!(errors >= 2, "expected >= 2 plain error examples, found {errors}");
+    assert!(rejects >= 2, "expected both typed reject examples, found {rejects}");
+    assert_eq!(stats, 1, "expected exactly one stats frame example");
+    assert_eq!(metrics, 1, "expected exactly one metrics frame example");
+    assert!(cmds >= 2, "expected the stats and metrics command examples, found {cmds}");
+}
+
+#[test]
+fn wire_md_request_examples_are_canonical_where_they_claim_defaults() {
+    // the minimal request round-trips through canonical serialization to
+    // itself — WIRE.md §3's "canonical serialization" claim, pinned
+    let j = json::parse(r#"{"v":1,"net":{"zoo":"resnet18"}}"#).unwrap();
+    let r = MapRequest::from_json(&j).unwrap();
+    assert_eq!(r.to_json().dumps(), r#"{"v":1,"net":{"zoo":"resnet18"},"discipline":"dense","engine":"simple","tiles":{"grid":{"row_exp":[6,13],"aspects":[1,2,3,4,5,6,7,8]}},"objective":"min-area"}"#);
+}

@@ -1,7 +1,10 @@
 //! Integration: the TCP/JSONL planning service against the
 //! `plan::serve_jsonl` oracle — concurrent clients get byte-identical
-//! responses, repeated requests hit the cache, the in-band `stats`
-//! command answers in stream order, and shutdown drains cleanly.
+//! responses, repeated requests hit the cache, the in-band `stats` /
+//! `metrics` commands answer in stream order, over-quota and
+//! over-inflight requests get the typed reject frames without disturbing
+//! in-quota connections, the `--metrics-out` writer leaves a
+//! bench-schema snapshot, and shutdown drains cleanly.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -10,23 +13,28 @@ use xbarmap::plan::{self, wire};
 use xbarmap::service::{Service, ServiceConfig, ServiceHandle};
 use xbarmap::util::json;
 
+fn start_with(
+    cfg: ServiceConfig,
+) -> (ServiceHandle, SocketAddr, thread::JoinHandle<wire::StatsSnapshot>) {
+    let svc = Service::bind(&cfg).unwrap();
+    let addr = svc.local_addr().unwrap();
+    let handle = svc.handle();
+    let join = thread::spawn(move || svc.run().unwrap());
+    (handle, addr, join)
+}
+
 fn start(
     workers: usize,
     queue: usize,
     cache: usize,
 ) -> (ServiceHandle, SocketAddr, thread::JoinHandle<wire::StatsSnapshot>) {
-    let svc = Service::bind(&ServiceConfig {
+    start_with(ServiceConfig {
         addr: "127.0.0.1:0".into(),
         workers,
         queue_capacity: queue,
         cache_capacity: cache,
-        watch_sigint: false,
+        ..ServiceConfig::default()
     })
-    .unwrap();
-    let addr = svc.local_addr().unwrap();
-    let handle = svc.handle();
-    let join = thread::spawn(move || svc.run().unwrap());
-    (handle, addr, join)
 }
 
 /// What `xbarmap plan` would answer for the same stream.
@@ -157,6 +165,192 @@ fn in_band_stats_command_answers_in_stream_order() {
     assert!(unversioned.get("error").and_then(|e| e.as_str()).unwrap().contains("version"));
     handle.shutdown();
     join.join().unwrap();
+}
+
+/// A 3-line stream (grid sweep, malformed line, fixed tile) that fits a
+/// 3-request quota — the "well-behaved tenant" of the admission tests.
+fn three_line_stream(c: usize) -> String {
+    format!(
+        concat!(
+            "{{\"v\":1,\"id\":\"c{c}-grid\",\"net\":{{\"zoo\":\"lenet\"}},",
+            "\"tiles\":{{\"grid\":{{\"row_exp\":[6,8],\"aspects\":[1,2]}}}}}}\n",
+            "not json {c}\n",
+            "{{\"v\":1,\"id\":\"c{c}-fixed\",\"net\":{{\"zoo\":\"lenet\"}},",
+            "\"tiles\":{{\"fixed\":[128,128]}}}}\n",
+        ),
+        c = c
+    )
+}
+
+#[test]
+fn over_quota_connection_gets_the_typed_frame_while_others_stay_oracle_identical() {
+    let (handle, addr, join) = start_with(ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        queue_capacity: 4,
+        cache_capacity: 64,
+        per_conn_quota: 3,
+        ..ServiceConfig::default()
+    });
+    // the offender: six requests against a three-request quota
+    let over: String = (0..6)
+        .map(|i| {
+            format!(
+                "{{\"v\":1,\"id\":\"q{i}\",\"net\":{{\"zoo\":\"lenet\"}},\"tiles\":{{\"fixed\":[128,128]}}}}\n"
+            )
+        })
+        .collect();
+    let offender = {
+        let over = over.clone();
+        thread::spawn(move || drive(addr, &over))
+    };
+    // two concurrent in-quota tenants must stay byte-identical to the
+    // oracle while the offender is being cut off
+    let good: Vec<thread::JoinHandle<(String, Vec<String>)>> = (0..2)
+        .map(|c| {
+            thread::spawn(move || {
+                let input = three_line_stream(c);
+                let got = drive(addr, &input);
+                (input, got)
+            })
+        })
+        .collect();
+    for client in good {
+        let (input, got) = client.join().unwrap();
+        assert_eq!(got, oracle(&input), "in-quota connection disturbed by the offender");
+    }
+    let got = offender.join().unwrap();
+    // three answered in full, then the typed reject, then EOF — the
+    // remaining two lines are never answered (the connection is closed)
+    assert_eq!(got.len(), 4, "expected 3 plans + 1 reject, got: {got:?}");
+    let full_oracle = oracle(&over);
+    assert_eq!(got[..3], full_oracle[..3], "in-quota prefix must match serve_jsonl");
+    let reject = json::parse(&got[3]).unwrap();
+    assert_eq!(reject.get("v").and_then(|v| v.as_usize()), Some(1));
+    assert_eq!(reject.get("line").and_then(|v| v.as_usize()), Some(4));
+    assert_eq!(reject.get("reject").and_then(|r| r.as_str()), Some("over-quota"));
+    assert!(
+        reject.get("error").and_then(|e| e.as_str()).unwrap().contains("3-request quota"),
+        "{reject:?}"
+    );
+    let metrics = handle.metrics();
+    assert_eq!(metrics.rejected_over_quota, 1);
+    assert_eq!(metrics.rejected_over_inflight, 0);
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn over_inflight_requests_are_shed_with_typed_frames_and_the_connection_survives() {
+    let (handle, addr, join) = start_with(ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_capacity: 4,
+        cache_capacity: 0,
+        max_inflight: 1,
+        ..ServiceConfig::default()
+    });
+    // the first request occupies the single in-flight slot for many
+    // milliseconds (an 8-point resnet18 sweep); the reader thread claims
+    // the five follow-up lines within microseconds of each other, so each
+    // is deterministically shed at the cap
+    let slow = r#"{"v":1,"net":{"zoo":"resnet18"},"tiles":{"grid":{"row_exp":[6,9],"aspects":[1,2]}}}"#;
+    let fast = r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"fixed":[64,64]}}"#;
+    // the trailing metrics command must be ANSWERED, not shed: in-band
+    // observability is exempt from the admission cap precisely so a
+    // saturated service can still be asked what is wrong
+    let input = format!("{slow}\n{}\n{}\n", [fast; 5].join("\n"), r#"{"v":1,"cmd":"metrics"}"#);
+    let got = drive(addr, &input);
+    assert_eq!(got.len(), 7);
+    assert!(json::parse(&got[0]).unwrap().get("best").is_some(), "slow plan lost");
+    for (i, line) in got[1..6].iter().enumerate() {
+        let j = json::parse(line).unwrap();
+        assert_eq!(
+            j.get("reject").and_then(|r| r.as_str()),
+            Some("over-inflight"),
+            "line {}: {line}",
+            i + 2
+        );
+        // physical line number of the shed request, like any error frame
+        assert_eq!(j.get("line").and_then(|v| v.as_usize()), Some(i + 2));
+        assert!(j.get("error").and_then(|e| e.as_str()).unwrap().contains("in-flight cap"));
+    }
+    let observed = wire::metrics_from_json(&json::parse(&got[6]).unwrap()).unwrap();
+    assert_eq!(observed.rejected_over_inflight, 5, "the in-band probe saw the shedding");
+    // shedding is transient: the connection stayed open (we read all six
+    // responses plus EOF). Counters are asserted after the drain — the
+    // worker decrements the in-flight gauge only after delivering, so
+    // reading it before join could race that final decrement.
+    handle.shutdown();
+    join.join().unwrap();
+    let metrics = handle.metrics();
+    assert_eq!(metrics.rejected_over_inflight, 5);
+    assert_eq!(metrics.rejected_over_quota, 0);
+    assert_eq!(metrics.inflight, 0);
+    assert_eq!(metrics.stats.served, 1);
+    assert_eq!(metrics.stats.errors, 5);
+}
+
+#[test]
+fn in_band_metrics_command_reports_gauges_and_shares_stats_fields() {
+    let (handle, addr, join) = start(1, 8, 64);
+    let plan_req = r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"fixed":[256,256]}}"#;
+    let metrics_cmd = r#"{"v":1,"cmd":"metrics"}"#;
+    let input = format!("{plan_req}\n{metrics_cmd}\n{plan_req}\n{metrics_cmd}\n");
+    let got = drive(addr, &input);
+    assert_eq!(got.len(), 4);
+    let m1 = wire::metrics_from_json(&json::parse(&got[1]).unwrap()).unwrap();
+    // single worker, in-order queue: exactly the first plan is counted
+    assert_eq!(m1.stats.served, 1);
+    assert_eq!(m1.stats.cache_hits, 0);
+    assert!(m1.inflight >= 1, "the metrics job itself is in flight");
+    assert!(m1.uptime_s > 0.0);
+    let m2 = wire::metrics_from_json(&json::parse(&got[3]).unwrap()).unwrap();
+    assert_eq!(m2.stats.served, 2);
+    assert_eq!(m2.stats.cache_hits, 1, "identical request must hit the cache");
+    assert_eq!(m2.cache_entries, 1);
+    assert!(m2.cache_bytes > 0, "cached plan must be charged bytes");
+    assert_eq!(m2.cache_expired, 0);
+    assert_eq!(m2.rejected_over_quota, 0);
+    assert_eq!(m2.rejected_over_inflight, 0);
+    // the handle reports the same snapshot shape the wire does
+    let h = handle.metrics();
+    assert_eq!(h.stats.served, 2);
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn metrics_out_writes_a_bench_schema_snapshot_on_shutdown() {
+    let path = std::env::temp_dir()
+        .join(format!("xbarmap_service_metrics_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let (handle, addr, join) = start_with(ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_capacity: 4,
+        cache_capacity: 8,
+        metrics_out: Some(path.clone()),
+        // no periodic tick lands during the test; the shutdown write is
+        // the deterministic one under inspection
+        metrics_interval: std::time::Duration::from_secs(3600),
+        ..ServiceConfig::default()
+    });
+    let got = drive(addr, "{\"v\":1,\"net\":{\"zoo\":\"lenet\"},\"tiles\":{\"fixed\":[256,256]}}\n");
+    assert_eq!(got.len(), 1);
+    handle.shutdown();
+    join.join().unwrap();
+    let text = std::fs::read_to_string(&path).expect("metrics file written at shutdown");
+    let j = json::parse(&text).unwrap();
+    assert!(j.get("serve/plan_p50_ns").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    assert_eq!(j.get("serve/cache_entries").and_then(|v| v.as_usize()), Some(1));
+    assert_eq!(j.get("serve/inflight").and_then(|v| v.as_usize()), Some(0));
+    assert_eq!(j.get("serve/queue_depth").and_then(|v| v.as_usize()), Some(0));
+    // gauges only — monotonic counters would read as regressions when two
+    // snapshots are compared through `xbarmap bench-gate`
+    assert!(j.get("serve/served").is_none());
+    assert!(j.get("serve/errors").is_none());
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]
