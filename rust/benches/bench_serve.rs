@@ -13,14 +13,16 @@
 //! * `serve/roundtrip/cmd-stats` — the in-band stats command, the floor
 //!   the wire + queue machinery sets under any response.
 //!
-//! One persistent connection per row: connection setup is not the thing
-//! being measured, and a tenant fleet holds connections open.
+//! Round trips go through the crate's retrying client
+//! ([`xbarmap::plan::client`]) — the same transport a tenant fleet and
+//! the CI smoke test use — holding one persistent connection per row:
+//! connection setup is not the thing being measured.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpStream};
+use std::net::SocketAddr;
+use xbarmap::plan::client::{Client, ClientConfig};
+use xbarmap::plan::wire;
 use xbarmap::service::{Service, ServiceConfig, ServiceHandle};
 use xbarmap::util::benchkit::Bench;
-use xbarmap::plan::wire;
 
 fn start(cache: usize) -> (ServiceHandle, SocketAddr, std::thread::JoinHandle<wire::StatsSnapshot>) {
     let svc = Service::bind(&ServiceConfig {
@@ -37,20 +39,14 @@ fn start(cache: usize) -> (ServiceHandle, SocketAddr, std::thread::JoinHandle<wi
     (handle, addr, join)
 }
 
-fn connect(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
-    let stream = TcpStream::connect(addr).unwrap();
-    stream.set_nodelay(true).unwrap();
-    let reader = BufReader::new(stream.try_clone().unwrap());
-    (stream, reader)
+fn connect(addr: SocketAddr) -> Client {
+    Client::with_config(addr, ClientConfig { retries: 2, ..ClientConfig::default() })
 }
 
 /// One request line out, one response line back (length keeps the work
 /// alive through black_box in the runner).
-fn roundtrip(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &str, line: &mut String) -> usize {
-    stream.write_all(req.as_bytes()).unwrap();
-    stream.write_all(b"\n").unwrap();
-    line.clear();
-    assert!(reader.read_line(line).unwrap() > 0, "service hung up mid-bench");
+fn roundtrip(client: &mut Client, req: &str, line: &mut String) -> usize {
+    *line = client.roundtrip_line(req).expect("service round trip");
     line.len()
 }
 
@@ -63,12 +59,12 @@ fn main() {
     // cache off: every round trip is a real solve
     {
         let (handle, addr, join) = start(0);
-        let (mut stream, mut reader) = connect(addr);
+        let mut client = connect(addr);
         b.run("serve/roundtrip/lenet-fixed256/solve", || {
-            roundtrip(&mut stream, &mut reader, plan_req, &mut line)
+            roundtrip(&mut client, plan_req, &mut line)
         });
         assert!(line.contains("\"best\""), "expected a plan, got: {line}");
-        drop((stream, reader));
+        drop(client);
         handle.shutdown();
         let stats = join.join().unwrap();
         assert_eq!(stats.cache_hits, 0);
@@ -77,16 +73,16 @@ fn main() {
     // cache on and warmed: the multi-tenant steady state
     {
         let (handle, addr, join) = start(256);
-        let (mut stream, mut reader) = connect(addr);
-        roundtrip(&mut stream, &mut reader, plan_req, &mut line); // warm the entry
+        let mut client = connect(addr);
+        roundtrip(&mut client, plan_req, &mut line); // warm the entry
         b.run("serve/roundtrip/lenet-fixed256/cache-hit", || {
-            roundtrip(&mut stream, &mut reader, plan_req, &mut line)
+            roundtrip(&mut client, plan_req, &mut line)
         });
         b.run("serve/roundtrip/cmd-stats", || {
-            roundtrip(&mut stream, &mut reader, stats_req, &mut line)
+            roundtrip(&mut client, stats_req, &mut line)
         });
         assert!(line.contains("\"stats\""), "expected a stats frame, got: {line}");
-        drop((stream, reader));
+        drop(client);
         handle.shutdown();
         let stats = join.join().unwrap();
         assert!(stats.cache_hits > 0, "cache-hit row never hit the cache");

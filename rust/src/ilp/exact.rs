@@ -18,20 +18,37 @@
 use crate::frag::{self, ShapeClass};
 use crate::geom::{Block, Placement, Tile};
 use crate::pack::{counted, ffd, simple, Discipline, PackScratch, Packing, SortOrder};
+use crate::util::deadline::Deadline;
+
+/// How many node expansions the search runs between wall-clock deadline
+/// reads. The stride amortizes the `Instant::now()` call (one clock read
+/// per ~thousand nodes) and — because the check never touches the node
+/// counter — keeps node accounting bit-identical whether or not a
+/// deadline is set (`solve_bins_census_matches_per_block_solver` pins the
+/// equality).
+const DEADLINE_STRIDE: u64 = 1024;
 
 /// Node budget for the exact search.
 #[derive(Debug, Clone, Copy)]
 pub struct Budget {
+    /// node-expansion budget: the search stops (keeping the incumbent,
+    /// reporting `optimal: false`) once this many nodes were expanded
     pub max_nodes: u64,
     /// instances with more blocks than this skip the tree search and keep
     /// the greedy incumbent (the paper's "not always feasible to obtain a
     /// solution" regime for branch & bound at scale)
     pub max_items: usize,
+    /// wall-clock counterpart of `max_nodes`: checked cooperatively every
+    /// [`DEADLINE_STRIDE`] nodes, and on expiry the search bails exactly
+    /// like node exhaustion (incumbent kept, not proven). Unset
+    /// ([`Deadline::NONE`], the default) costs nothing — the node
+    /// accounting is bit-identical with and without it
+    pub deadline: Deadline,
 }
 
 impl Default for Budget {
     fn default() -> Self {
-        Budget { max_nodes: 2_000_000, max_items: 400 }
+        Budget { max_nodes: 2_000_000, max_items: 400, deadline: Deadline::NONE }
     }
 }
 
@@ -131,7 +148,7 @@ pub fn solve_with_hint(
     }
     match discipline {
         Discipline::Pipeline => {
-            let s = pipeline_search(blocks, tile, budget.max_nodes, incumbent.n_bins, lb, hint, 0);
+            let s = pipeline_search(blocks, tile, budget, incumbent.n_bins, lb, hint, 0);
             let (packing, optimal) = match s.assign {
                 Some(a) => {
                     let p = decode_pipeline(blocks, &s.order, tile, &a);
@@ -143,7 +160,7 @@ pub fn solve_with_hint(
             ExactResult { packing, lower_bound: lb, optimal, nodes: s.nodes }
         }
         Discipline::Dense => {
-            let s = dense_search(blocks, tile, budget.max_nodes, incumbent.n_bins, lb, hint, 0);
+            let s = dense_search(blocks, tile, budget, incumbent.n_bins, lb, hint, 0);
             let (packing, optimal) = match s.assign {
                 Some(a) => {
                     let p = decode_dense(blocks, &s.order, tile, &a);
@@ -188,7 +205,7 @@ pub fn solve_bins(
     if blocks.len() > budget.max_items {
         return BinsResult { n_bins: incumbent, lower_bound: lb, optimal: false, nodes: 0 };
     }
-    let s = search_bins(blocks, tile, discipline, budget.max_nodes, incumbent, lb, hint, 0);
+    let s = search_bins(blocks, tile, discipline, budget, incumbent, lb, hint, 0);
     if s.found {
         BinsResult { n_bins: s.bins, lower_bound: lb, optimal: s.proven || s.bins == lb, nodes: s.nodes }
     } else {
@@ -250,7 +267,7 @@ pub fn solve_bins_census(
     debug_assert_eq!(blocks.len(), total, "materialize() must produce the censused blocks");
     blocks.retain(|b| !(b.rows == tile.n_row && b.cols == tile.n_col));
     debug_assert_eq!(blocks.len(), total - pinned);
-    let s = search_bins(blocks, tile, discipline, budget.max_nodes, incumbent, lb, hint, pinned);
+    let s = search_bins(blocks, tile, discipline, budget, incumbent, lb, hint, pinned);
     if s.found {
         BinsResult { n_bins: s.bins, lower_bound: lb, optimal: s.proven || s.bins == lb, nodes: s.nodes }
     } else {
@@ -273,7 +290,7 @@ fn search_bins(
     blocks: &[Block],
     tile: Tile,
     discipline: Discipline,
-    max_nodes: u64,
+    budget: Budget,
     incumbent: usize,
     lb: usize,
     hint: Option<usize>,
@@ -281,11 +298,11 @@ fn search_bins(
 ) -> SearchSummary {
     match discipline {
         Discipline::Pipeline => {
-            let s = pipeline_search(blocks, tile, max_nodes, incumbent, lb, hint, pinned);
+            let s = pipeline_search(blocks, tile, budget, incumbent, lb, hint, pinned);
             SearchSummary { found: s.assign.is_some(), bins: s.bins, nodes: s.nodes, proven: s.proven }
         }
         Discipline::Dense => {
-            let s = dense_search(blocks, tile, max_nodes, incumbent, lb, hint, pinned);
+            let s = dense_search(blocks, tile, budget, incumbent, lb, hint, pinned);
             SearchSummary { found: s.assign.is_some(), bins: s.bins, nodes: s.nodes, proven: s.proven }
         }
     }
@@ -313,6 +330,9 @@ struct PipeCtx<'a> {
     order: &'a [u32], // item position -> original index, sorted desc
     tile: Tile,
     budget: u64,
+    /// wall-clock budget, read every [`DEADLINE_STRIDE`] nodes; expiry
+    /// sets `exhausted` exactly like running out of nodes
+    deadline: Deadline,
     nodes: u64,
     best_bins: usize,
     best_assign: Option<Vec<usize>>, // item -> bin
@@ -341,7 +361,7 @@ impl PipeCtx<'_> {
 fn pipeline_search(
     blocks: &[Block],
     tile: Tile,
-    max_nodes: u64,
+    budget: Budget,
     incumbent_bins: usize,
     lb: usize,
     hint: Option<usize>,
@@ -368,7 +388,8 @@ fn pipeline_search(
         blocks,
         order: &order,
         tile,
-        budget: max_nodes,
+        budget: budget.max_nodes,
+        deadline: budget.deadline,
         nodes: 0,
         best_bins: incumbent_bins,
         best_assign: None,
@@ -416,6 +437,11 @@ fn pipeline_search(
             }
             ctx.nodes += 1;
         }
+        // one deadline read per deepening pass (passes are few) so an
+        // already-expired budget never starts a descent
+        if !ctx.exhausted && ctx.deadline.is_set() && ctx.deadline.expired() {
+            ctx.exhausted = true;
+        }
         if !ctx.exhausted {
             pipe_dfs(&mut ctx, 0, &mut bins_rows, &mut bins_cols, &mut assign);
         }
@@ -442,6 +468,12 @@ fn pipe_dfs(
         return;
     }
     ctx.nodes += 1;
+    // amortized wall-clock check: never touches the node counter, so node
+    // accounting is bit-identical whether or not a deadline is set
+    if ctx.deadline.is_set() && ctx.nodes % DEADLINE_STRIDE == 0 && ctx.deadline.expired() {
+        ctx.exhausted = true;
+        return;
+    }
     let used = ctx.pinned + bins_rows.len();
     if i == ctx.n_items() {
         if used < ctx.best_bins {
@@ -561,6 +593,9 @@ struct DenseCtx<'a> {
     order: &'a [u32], // item position -> original index, sorted desc by cols then rows
     tile: Tile,
     budget: u64,
+    /// wall-clock budget, read every [`DEADLINE_STRIDE`] nodes (see
+    /// [`PipeCtx::deadline`])
+    deadline: Deadline,
     nodes: u64,
     best_bins: usize,
     best_assign: Option<Vec<(usize, usize)>>,
@@ -585,7 +620,7 @@ impl DenseCtx<'_> {
 fn dense_search(
     blocks: &[Block],
     tile: Tile,
-    max_nodes: u64,
+    budget: Budget,
     incumbent_bins: usize,
     lb: usize,
     hint: Option<usize>,
@@ -609,7 +644,8 @@ fn dense_search(
         blocks,
         order: &order,
         tile,
-        budget: max_nodes,
+        budget: budget.max_nodes,
+        deadline: budget.deadline,
         nodes: 0,
         best_bins: incumbent_bins,
         best_assign: None,
@@ -639,6 +675,10 @@ fn dense_search(
             }
             ctx.nodes += 1;
         }
+        // per-pass deadline read (see pipeline_search)
+        if !ctx.exhausted && ctx.deadline.is_set() && ctx.deadline.expired() {
+            ctx.exhausted = true;
+        }
         if !ctx.exhausted {
             dense_dfs(&mut ctx, 0, &mut bins, &mut assign);
         }
@@ -664,6 +704,12 @@ fn dense_dfs(
         return;
     }
     ctx.nodes += 1;
+    // amortized wall-clock check (see pipe_dfs): node accounting is
+    // untouched, so results are bit-identical when no deadline fires
+    if ctx.deadline.is_set() && ctx.nodes % DEADLINE_STRIDE == 0 && ctx.deadline.expired() {
+        ctx.exhausted = true;
+        return;
+    }
     let used = ctx.pinned + bins.len();
     if i == ctx.n_items() {
         if used < ctx.best_bins {

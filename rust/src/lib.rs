@@ -59,11 +59,16 @@
 //! unbounded buffering), a canonical-request LRU plan cache with an
 //! optional TTL, per-connection request quotas and a service-wide
 //! in-flight admission cap (typed `"reject"` frames on the same wire),
-//! graceful SIGINT shutdown that drains in-flight plans, in-band
+//! graceful SIGINT/SIGTERM shutdown that drains in-flight plans, in-band
 //! `{"v":1,"cmd":"stats"}` / `{"v":1,"cmd":"metrics"}` requests reporting
 //! counters and p50/p95 plan latency, and a periodic `--metrics-out`
-//! gauge snapshot in the `BENCH_*.json` schema. Per connection, responses
-//! are byte-identical to piping the same stream through
+//! gauge snapshot in the `BENCH_*.json` schema. The failure envelope is
+//! typed too: a panicking solve is contained to its one request
+//! (`"reject":"internal"`, worker survives), and `--deadline-ms` arms a
+//! per-solve wall-clock [`util::deadline::Deadline`] threaded through the
+//! sweep and kernel checkpoints (`"reject":"deadline"`). [`plan::client`]
+//! is the matching retrying client. Per connection, responses are
+//! byte-identical to piping the same stream through
 //! [`plan::serve_jsonl`]. The wire protocol is specified normatively in
 //! `docs/WIRE.md`; `docs/ARCHITECTURE.md` maps the paper's equations to
 //! the modules below.
@@ -96,9 +101,10 @@
 //!   ([`runtime`], behind the `pjrt` cargo feature) — Python never runs at
 //!   request time — with the deployment mapped and priced by the planner.
 // Public items must be documented. The serving surface (`plan`,
-// `service`, `util`) is fully audited; the algorithmic core below still
-// carries per-module allows — remove one, fix what `cargo doc` flags
-// (CI runs the doc build with warnings denied), repeat.
+// `service`, `util`) and the packing/optimization core (`pack`, `opt`)
+// are fully audited; the modules below still carry per-module allows —
+// remove one, fix what `cargo doc` flags (CI runs the doc build with
+// warnings denied), repeat.
 #![warn(missing_docs)]
 
 #[allow(missing_docs)]
@@ -107,7 +113,6 @@ pub mod geom;
 pub mod nets;
 #[allow(missing_docs)]
 pub mod frag;
-#[allow(missing_docs)]
 pub mod pack;
 #[allow(missing_docs)]
 pub mod ilp;
@@ -115,7 +120,6 @@ pub mod ilp;
 pub mod area;
 #[allow(missing_docs)]
 pub mod perf;
-#[allow(missing_docs)]
 pub mod opt;
 pub mod plan;
 pub mod service;

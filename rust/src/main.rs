@@ -4,7 +4,8 @@
 //! * `repro`      — regenerate paper tables/figures into an output directory;
 //! * `sweep`      — run the §3.1 optimization sweep for a zoo network;
 //! * `pack`       — pack one network onto one tile dimension, print placement;
-//! * `plan`       — serve JSONL MapRequests as JSONL MapPlans (file or stdin);
+//! * `plan`       — serve JSONL MapRequests as JSONL MapPlans (file or
+//!   stdin; `--connect` forwards them to a running planning service);
 //! * `info`       — show a network's layers, WM shapes and reuse factors;
 //! * `serve`      — end-to-end serving through the AOT crossbar artifact, or
 //!   with `--plans` the long-running TCP/JSONL planning service;
@@ -189,16 +190,27 @@ fn cmd_pack(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// The design-service endpoint: JSONL requests in, JSONL plans out.
+/// The design-service endpoint: JSONL requests in, JSONL plans out —
+/// solved in-process by default, or forwarded to a running
+/// `serve --plans` service with `--connect` (the retrying
+/// [`plan::client`], so transient connection loss is absorbed).
 fn cmd_plan(argv: &[String]) -> Result<()> {
-    let specs = [OptSpec {
-        name: "in",
-        help: "JSONL request file ('-' = stdin)",
-        value: Some("FILE"),
-        default: Some("-"),
-    }];
+    let specs = [
+        OptSpec { name: "in", help: "JSONL request file ('-' = stdin)", value: Some("FILE"), default: Some("-") },
+        OptSpec { name: "connect", help: "forward requests to a running planning service instead of solving in-process", value: Some("HOST:PORT"), default: None },
+        OptSpec { name: "retries", help: "retry attempts after the first, connect mode", value: Some("N"), default: Some("4") },
+        OptSpec { name: "timeout", help: "per-response read timeout in seconds, connect mode", value: Some("SECS"), default: Some("30") },
+    ];
     let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
     let source = a.req("in").map_err(|e| anyhow!(e))?;
+    if let Some(addr) = a.get("connect") {
+        let retries = a.req_usize("retries").map_err(|e| anyhow!(e))? as u32;
+        let timeout_s = a.req_f64("timeout").map_err(|e| anyhow!(e))?;
+        if !(timeout_s > 0.0 && timeout_s <= 1e9) {
+            return Err(anyhow!("--timeout must be between 0 (exclusive) and 1e9 seconds"));
+        }
+        return cmd_plan_connect(addr, source, retries, timeout_s);
+    }
     let stdout = std::io::stdout();
     let mut out = stdout.lock();
     let summary = if source == "-" {
@@ -211,6 +223,49 @@ fn cmd_plan(argv: &[String]) -> Result<()> {
     };
     out.flush()?;
     eprintln!("served {} request(s), {} error(s)", summary.requests, summary.errors);
+    Ok(())
+}
+
+/// `plan --connect`: pump the JSONL request stream through a running
+/// planning service, one lock-step round-trip per non-blank line, echoing
+/// each response line to stdout.
+fn cmd_plan_connect(addr: &str, source: &str, retries: u32, timeout_s: f64) -> Result<()> {
+    use std::io::BufRead as _;
+    use std::net::ToSocketAddrs as _;
+    let sock = addr
+        .to_socket_addrs()
+        .map_err(|e| anyhow!("resolve {addr}: {e}"))?
+        .next()
+        .ok_or_else(|| anyhow!("resolve {addr}: no addresses"))?;
+    let cfg = plan::client::ClientConfig {
+        read_timeout: std::time::Duration::from_secs_f64(timeout_s),
+        retries,
+        ..Default::default()
+    };
+    let mut client = plan::client::Client::with_config(sock, cfg);
+    let input: Box<dyn std::io::BufRead> = if source == "-" {
+        Box::new(std::io::BufReader::new(std::io::stdin()))
+    } else {
+        let file = std::fs::File::open(source).map_err(|e| anyhow!("open {source}: {e}"))?;
+        Box::new(std::io::BufReader::new(file))
+    };
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    let (mut requests, mut errors) = (0u64, 0u64);
+    for line in input.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = client.roundtrip_line(line.trim()).map_err(|e| anyhow!("{e}"))?;
+        if json::parse(&response).map_or(false, |j| j.get("error").is_some()) {
+            errors += 1;
+        }
+        requests += 1;
+        writeln!(out, "{response}")?;
+    }
+    out.flush()?;
+    eprintln!("served {requests} request(s), {errors} error(s) via {sock}");
     Ok(())
 }
 
@@ -298,7 +353,9 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
 /// canonical-request LRU plan cache (optional TTL), per-connection quotas
 /// and a service-wide in-flight admission cap (typed reject frames),
 /// in-band `{"v":1,"cmd":"stats"|"metrics"}` requests, an optional
-/// periodic metrics-file writer, and graceful drain on ctrl-C.
+/// periodic metrics-file writer, per-solve wall-clock deadlines
+/// (`--deadline-ms`, typed deadline rejects), panic containment (typed
+/// internal rejects), and graceful drain on SIGINT/ctrl-C or SIGTERM.
 fn cmd_serve_plans(argv: &[String]) -> Result<()> {
     let specs = [
         OptSpec { name: "plans", help: "serve mapping plans over TCP/JSONL", value: None, default: None },
@@ -310,6 +367,7 @@ fn cmd_serve_plans(argv: &[String]) -> Result<()> {
         OptSpec { name: "cache-max-bytes", help: "plan-cache byte budget, keys + serialized plans (0 = unbounded)", value: Some("N"), default: Some("0") },
         OptSpec { name: "per-conn-quota", help: "requests per connection before a typed over-quota reject (0 = unlimited)", value: Some("N"), default: Some("0") },
         OptSpec { name: "max-inflight", help: "service-wide admitted-request cap before typed over-inflight rejects (0 = unlimited)", value: Some("N"), default: Some("0") },
+        OptSpec { name: "deadline-ms", help: "wall-clock budget per solve in milliseconds before a typed deadline reject (0 = unbounded)", value: Some("MS"), default: Some("0") },
         OptSpec { name: "metrics-out", help: "periodically write the gauge snapshot (BENCH_*.json schema) to FILE", value: Some("FILE"), default: None },
         OptSpec { name: "metrics-interval", help: "seconds between metrics-file rewrites", value: Some("SECS"), default: Some("10") },
     ];
@@ -336,11 +394,15 @@ fn cmd_serve_plans(argv: &[String]) -> Result<()> {
         max_inflight: a.req_usize("max-inflight").map_err(|e| anyhow!(e))?,
         metrics_out: a.get("metrics-out").map(std::path::PathBuf::from),
         metrics_interval: std::time::Duration::from_secs_f64(interval_s),
+        deadline: {
+            let ms = a.req_usize("deadline-ms").map_err(|e| anyhow!(e))?;
+            (ms > 0).then(|| std::time::Duration::from_millis(ms as u64))
+        },
         watch_sigint: true,
     };
     let service = Service::bind(&cfg).map_err(|e| anyhow!("bind {}: {e}", cfg.addr))?;
     eprintln!(
-        "xbarmap planning service listening on {} (queue {}, cache {}{}, quota {}, inflight cap {}, ctrl-C drains and exits)",
+        "xbarmap planning service listening on {} (queue {}, cache {}{}, quota {}, inflight cap {}, deadline {}, SIGINT/SIGTERM drain and exit)",
         service.local_addr()?,
         cfg.queue_capacity,
         cfg.cache_capacity,
@@ -350,6 +412,10 @@ fn cmd_serve_plans(argv: &[String]) -> Result<()> {
         },
         if cfg.per_conn_quota == 0 { "off".to_string() } else { cfg.per_conn_quota.to_string() },
         if cfg.max_inflight == 0 { "off".to_string() } else { cfg.max_inflight.to_string() },
+        match cfg.deadline {
+            Some(d) => format!("{}ms", d.as_millis()),
+            None => "off".to_string(),
+        },
     );
     let stats = service.run()?;
     eprintln!(

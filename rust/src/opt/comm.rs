@@ -25,6 +25,7 @@ use crate::sim::{map_and_simulate, SimConfig};
 /// A sweep point extended with its communication load.
 #[derive(Debug, Clone)]
 pub struct CommPoint {
+    /// the underlying area-model sweep point
     pub point: SweepPoint,
     /// inter-tile messages per inference
     pub messages: u64,

@@ -30,6 +30,7 @@ use crate::geom::Tile;
 use crate::ilp;
 use crate::nets::Network;
 use crate::pack::{self, Discipline, SortOrder};
+use crate::util::deadline::Deadline;
 
 /// Packing engine selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -39,7 +40,10 @@ pub enum Engine {
     /// first-fit-decreasing baseline
     Ffd,
     /// binary linear optimization (budgeted branch & bound)
-    Ilp { max_nodes: u64 },
+    Ilp {
+        /// branch & bound node budget per grid point
+        max_nodes: u64,
+    },
 }
 
 impl Engine {
@@ -89,7 +93,9 @@ impl std::str::FromStr for Engine {
 /// winning rectangular configuration 2560x512 = 5x(512x512)).
 #[derive(Debug, Clone)]
 pub struct SweepConfig {
+    /// bin-packing discipline (dense shelves vs pipeline staircases)
     pub discipline: Discipline,
+    /// packing engine pricing each grid point
     pub engine: Engine,
     /// column dimension exponents: n_col = 2^k for k in this inclusive range
     pub row_exp: (u32, u32),
@@ -99,10 +105,20 @@ pub struct SweepConfig {
     pub replication: Option<Vec<usize>>,
     /// block placement order for the simple engine (§2.1 vs §3 wording)
     pub sort: SortOrder,
+    /// area model pricing each configuration (§3.1 / Table 5)
     pub area: AreaModel,
+    /// wall-clock budget for the whole sweep: checked before every grid
+    /// point and inside the counted/ILP kernels; once expired, remaining
+    /// points collapse to infinite-area placeholders so the sweep returns
+    /// promptly and the caller (the planning front door) can map the
+    /// expiry to a typed error. [`Deadline::NONE`] (the default) never
+    /// reads the clock
+    pub deadline: Deadline,
 }
 
 impl SweepConfig {
+    /// The paper's §3.1 sweep: 2^6..2^13 base dims, aspects 1..8, simple
+    /// engine, rows-descending placement, Table 5 area model, no deadline.
     pub fn paper_default(discipline: Discipline) -> SweepConfig {
         SweepConfig {
             discipline,
@@ -112,6 +128,7 @@ impl SweepConfig {
             replication: None,
             sort: SortOrder::RowsDesc,
             area: AreaModel::paper_default(),
+            deadline: Deadline::NONE,
         }
     }
 
@@ -124,14 +141,21 @@ impl SweepConfig {
 /// One evaluated tile configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepPoint {
+    /// the candidate tile
     pub tile: Tile,
+    /// aspect factor the tile was generated with (n_row / n_col)
     pub aspect: usize,
+    /// fragments the network cuts into at this tile
     pub n_blocks: usize,
+    /// tiles the packing engine needed
     pub n_tiles: usize,
     /// tiles for a 1:1 mapping (every fragment its own tile)
     pub n_tiles_one_to_one: usize,
+    /// the area model's tile efficiency (array area / total tile area)
     pub tile_eff: f64,
+    /// stored weights / packed tile capacity (Eq. 8)
     pub packing_eff: f64,
+    /// total chip area of the mapping, mm²
     pub total_area_mm2: f64,
     /// pure array area (the "100 % efficiency" area Fig. 7 plots)
     pub array_area_mm2: f64,
@@ -151,8 +175,27 @@ pub struct SweepScratch {
 }
 
 impl SweepScratch {
+    /// Empty scratch; buffers grow on first use and are reused after.
     pub fn new() -> SweepScratch {
         SweepScratch::default()
+    }
+}
+
+/// Placeholder for a grid point the sweep never priced because the
+/// wall-clock deadline expired: infinite area (so it can never win
+/// [`optimum`]) and zero counts. Callers that pass a deadline re-check it
+/// after the sweep and discard the whole result on expiry.
+fn expired_point(tile: Tile, aspect: usize) -> SweepPoint {
+    SweepPoint {
+        tile,
+        aspect,
+        n_blocks: 0,
+        n_tiles: 0,
+        n_tiles_one_to_one: 0,
+        tile_eff: 0.0,
+        packing_eff: 0.0,
+        total_area_mm2: f64::INFINITY,
+        array_area_mm2: f64::INFINITY,
     }
 }
 
@@ -206,15 +249,38 @@ fn evaluate_lean_full(
     let n_blocks = frag::total_class_blocks(classes);
     let (n_tiles, solve) = match cfg.engine {
         Engine::Simple => {
-            (pack::counted::simple_bins(classes, tile, cfg.discipline, cfg.sort, counted), None)
+            let n = pack::counted::simple_bins_deadline(
+                classes,
+                tile,
+                cfg.discipline,
+                cfg.sort,
+                counted,
+                cfg.deadline,
+            );
+            match n {
+                Some(n) => (n, None),
+                None => return (expired_point(tile, aspect), None),
+            }
         }
-        Engine::Ffd => (pack::counted::ffd_bins(classes, tile, cfg.discipline, counted), None),
+        Engine::Ffd => {
+            let n = pack::counted::ffd_bins_deadline(
+                classes,
+                tile,
+                cfg.discipline,
+                counted,
+                cfg.deadline,
+            );
+            match n {
+                Some(n) => (n, None),
+                None => return (expired_point(tile, aspect), None),
+            }
+        }
         Engine::Ilp { max_nodes } => {
             let r = ilp::solve_bins_census(
                 classes,
                 tile,
                 cfg.discipline,
-                ilp::Budget { max_nodes, ..Default::default() },
+                ilp::Budget { max_nodes, deadline: cfg.deadline, ..Default::default() },
                 warm,
                 blocks,
                 |out| frag::fragment_network_replicated_into(net, tile, replication, out),
@@ -356,6 +422,13 @@ pub fn sweep_with_threads(net: &Network, cfg: &SweepConfig, threads: usize) -> V
             let (si, ai) = (t / n_aspects, t % n_aspects);
             let aspect = cfg.aspects[ai];
             let tile = Tile::new(sizes[si] * aspect, sizes[si]);
+            // per-point deadline gate: once the request's wall-clock budget
+            // is gone, the remaining points are placeholders — the worker
+            // drains its queue in microseconds instead of pricing on
+            if cfg.deadline.is_set() && cfg.deadline.expired() {
+                local.push((t, expired_point(tile, aspect)));
+                return;
+            }
             let warm = if matches!(cfg.engine, Engine::Ilp { .. }) && si > 0 {
                 let prev = Tile::new(sizes[si - 1] * aspect, sizes[si - 1]);
                 Some(counted_simple_hint(net, prev, replication, cfg.discipline, scratch))
@@ -487,6 +560,19 @@ mod tests {
                 assert_eq!(a.packing_eff.to_bits(), b.packing_eff.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn expired_deadline_collapses_sweep_to_placeholders() {
+        let net = zoo::lenet();
+        let mut cfg = SweepConfig::paper_default(Discipline::Dense);
+        cfg.deadline = Deadline::after(std::time::Duration::ZERO);
+        let pts = sweep_with_threads(&net, &cfg, 2);
+        // full grid shape is preserved, every point is an inert placeholder
+        assert_eq!(pts.len(), 64);
+        assert!(pts.iter().all(|p| p.total_area_mm2.is_infinite() && p.n_tiles == 0));
+        // the caller's post-sweep expiry check is what rejects the result
+        assert!(cfg.deadline.expired());
     }
 
     #[test]

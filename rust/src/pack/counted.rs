@@ -27,12 +27,16 @@
 use super::{Discipline, SortOrder};
 use crate::frag::ShapeClass;
 use crate::geom::Tile;
+use crate::util::deadline::Deadline;
 
 /// A run of `count` identical `rows x cols` blocks in placement order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Run {
+    /// rows of every block in the run
     pub rows: usize,
+    /// columns of every block in the run
     pub cols: usize,
+    /// how many identical blocks the run stands for
     pub count: usize,
 }
 
@@ -48,6 +52,7 @@ pub struct CountedScratch {
 }
 
 impl CountedScratch {
+    /// Empty scratch; buffers grow on first use and are reused after.
     pub fn new() -> CountedScratch {
         CountedScratch::default()
     }
@@ -167,22 +172,46 @@ pub fn simple_bins(
     order: SortOrder,
     scratch: &mut CountedScratch,
 ) -> usize {
+    simple_bins_deadline(classes, tile, discipline, order, scratch, Deadline::NONE)
+        .expect("unset deadline never expires")
+}
+
+/// [`simple_bins`] with a cooperative wall-clock budget: the run loop
+/// checks `deadline` between runs and returns `None` on expiry (the
+/// scratch state is abandoned — it is cleared on the next call anyway).
+/// An unset deadline never reads the clock, so [`simple_bins`] simply
+/// delegates here.
+pub fn simple_bins_deadline(
+    classes: &[ShapeClass],
+    tile: Tile,
+    discipline: Discipline,
+    order: SortOrder,
+    scratch: &mut CountedScratch,
+    deadline: Deadline,
+) -> Option<usize> {
     assert_classes_fit(classes, tile);
     runs_from_census(classes, order, &mut scratch.runs);
+    let check = deadline.is_set();
     match discipline {
         Discipline::Dense => {
             let mut st = DenseNextFit::default();
             for run in &scratch.runs {
+                if check && deadline.expired() {
+                    return None;
+                }
                 st.place_run(tile, run.rows, run.cols, run.count);
             }
-            st.n_bins
+            Some(st.n_bins)
         }
         Discipline::Pipeline => {
             let mut st = PipeNextFit::default();
             for run in &scratch.runs {
+                if check && deadline.expired() {
+                    return None;
+                }
                 st.place_run(tile, run.rows, run.cols, run.count);
             }
-            st.n_bins
+            Some(st.n_bins)
         }
     }
 }
@@ -196,24 +225,44 @@ pub fn ffd_bins(
     discipline: Discipline,
     scratch: &mut CountedScratch,
 ) -> usize {
+    ffd_bins_deadline(classes, tile, discipline, scratch, Deadline::NONE)
+        .expect("unset deadline never expires")
+}
+
+/// [`ffd_bins`] with a cooperative wall-clock budget — `None` on expiry,
+/// checked between runs (see [`simple_bins_deadline`]).
+pub fn ffd_bins_deadline(
+    classes: &[ShapeClass],
+    tile: Tile,
+    discipline: Discipline,
+    scratch: &mut CountedScratch,
+    deadline: Deadline,
+) -> Option<usize> {
     assert_classes_fit(classes, tile);
     let CountedScratch { runs, ffd_dense, pipe_rows, pipe_cols } = scratch;
     runs_from_census(classes, SortOrder::RowsDesc, runs);
+    let check = deadline.is_set();
     match discipline {
         Discipline::Dense => {
             ffd_dense.clear();
             for run in runs.iter() {
+                if check && deadline.expired() {
+                    return None;
+                }
                 ffd_dense_run(tile, run, ffd_dense);
             }
-            ffd_dense.len()
+            Some(ffd_dense.len())
         }
         Discipline::Pipeline => {
             pipe_rows.clear();
             pipe_cols.clear();
             for run in runs.iter() {
+                if check && deadline.expired() {
+                    return None;
+                }
                 ffd_pipe_run(tile, run, pipe_rows, pipe_cols);
             }
-            pipe_rows.len()
+            Some(pipe_rows.len())
         }
     }
 }
@@ -523,6 +572,28 @@ mod tests {
             assert_eq!(simple_bins(&[], Tile::new(8, 8), d, SortOrder::RowsDesc, &mut scratch), 0);
             assert_eq!(ffd_bins(&[], Tile::new(8, 8), d, &mut scratch), 0);
         }
+    }
+
+    #[test]
+    fn expired_deadline_aborts_counted_kernels() {
+        let net = zoo::lenet();
+        let tile = Tile::new(128, 128);
+        let classes = frag::shape_classes(&net, tile, &[1; 5]);
+        let mut scratch = CountedScratch::new();
+        let expired = Deadline::after(std::time::Duration::ZERO);
+        let aborted = simple_bins_deadline(
+            &classes,
+            tile,
+            Discipline::Dense,
+            SortOrder::RowsDesc,
+            &mut scratch,
+            expired,
+        );
+        assert_eq!(aborted, None);
+        assert_eq!(ffd_bins_deadline(&classes, tile, Discipline::Pipeline, &mut scratch, expired), None);
+        // abandoned scratch state must not poison the next (undeadlined) call
+        let n = simple_bins(&classes, tile, Discipline::Dense, SortOrder::RowsDesc, &mut scratch);
+        assert!(n > 0);
     }
 
     #[test]

@@ -22,7 +22,11 @@ use crate::geom::{Block, Placement, Tile};
 /// Packing discipline (paper Fig. 2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Discipline {
+    /// shelf packing; blocks may share word/bit lines across layers
+    /// (Fig. 2a/b) — highest density, no pipelining
     Dense,
+    /// staircase packing; blocks in one tile share no word line and no
+    /// bit line (Fig. 2c), enabling simultaneous operation of all layers
     Pipeline,
 }
 
@@ -58,11 +62,16 @@ impl std::str::FromStr for Discipline {
 /// Result of packing a block set into tiles of one dimension.
 #[derive(Debug, Clone)]
 pub struct Packing {
+    /// the tile (bin) dimension everything was packed into
     pub tile: Tile,
+    /// the discipline the engine enforced
     pub discipline: Discipline,
     /// the block set, in the order referenced by `placements[].block`
     pub blocks: Vec<Block>,
+    /// one explicit coordinate per block ([`placement::validate`] checks
+    /// bounds, overlap, and the discipline's line-sharing rules)
     pub placements: Vec<Placement>,
+    /// number of tiles (bins) used
     pub n_bins: usize,
 }
 
@@ -188,6 +197,7 @@ pub struct PackScratch {
 }
 
 impl PackScratch {
+    /// Empty scratch; buffers grow on first use and are reused after.
     pub fn new() -> PackScratch {
         PackScratch::default()
     }

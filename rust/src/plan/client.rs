@@ -1,0 +1,318 @@
+//! Retrying JSONL client for the TCP planning service.
+//!
+//! The service ([`crate::service`]) is fault-isolated but the network is
+//! not: connects race the listener coming up, connections die mid-line,
+//! reads stall. Ad-hoc callers (benches, smoke tests, scripts) each grew
+//! their own retry loop; this module is the one shared client with the
+//! failure envelope handled once:
+//!
+//! * **connect timeout** and **read timeout** on the socket, so a dead
+//!   peer costs bounded time instead of hanging the caller;
+//! * **capped exponential backoff with deterministic jitter** (seeded
+//!   [`crate::util::prng::Rng`] — a test's retry schedule replays
+//!   bit-for-bit) between attempts;
+//! * **reconnect-and-resend** on transport errors: planning is a pure
+//!   function of the request, so replaying a line onto a fresh connection
+//!   is safe — the worst case is wasted solver work, never a wrong or
+//!   duplicated side effect.
+//!
+//! One request/response round-trip per call keeps the client stateless
+//! between calls apart from the reusable connection; the in-band
+//! `{"cmd":...}` control frames ride the same path ([`Client::command`]).
+
+use super::{MapPlan, MapRequest, PlanError};
+use crate::util::json::{self, Json, JsonObj};
+use crate::util::prng::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// Timeouts and retry policy for a [`Client`].
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    /// per-attempt TCP connect timeout
+    pub connect_timeout: Duration,
+    /// socket read timeout: how long one response may take end to end
+    /// before the attempt counts as failed
+    pub read_timeout: Duration,
+    /// additional attempts after the first (0 = fail fast)
+    pub retries: u32,
+    /// backoff before retry k (0-based) is `base * 2^k`, capped at
+    /// [`ClientConfig::backoff_cap`], then jittered to 50–100 % of that
+    pub backoff_base: Duration,
+    /// upper bound on the un-jittered backoff
+    pub backoff_cap: Duration,
+    /// seed for the jitter PRNG — same seed, same retry schedule
+    pub seed: u64,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            connect_timeout: Duration::from_secs(2),
+            read_timeout: Duration::from_secs(30),
+            retries: 4,
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(2),
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// Un-jittered, capped exponential backoff for 0-based attempt `k`.
+fn backoff_raw(cfg: &ClientConfig, attempt: u32) -> Duration {
+    let factor = 1u32.checked_shl(attempt).unwrap_or(u32::MAX);
+    cfg.backoff_base
+        .checked_mul(factor)
+        .map_or(cfg.backoff_cap, |d| d.min(cfg.backoff_cap))
+}
+
+/// Jittered backoff: 50–100 % of [`backoff_raw`], drawn from `rng` so the
+/// schedule is a pure function of the config seed.
+fn backoff_delay(cfg: &ClientConfig, attempt: u32, rng: &mut Rng) -> Duration {
+    backoff_raw(cfg, attempt).mul_f64(0.5 + 0.5 * rng.f64())
+}
+
+/// A reusable connection to one service address with retry-on-failure
+/// round-trips. Cheap to construct — no I/O happens until the first call.
+#[derive(Debug)]
+pub struct Client {
+    addr: SocketAddr,
+    cfg: ClientConfig,
+    rng: Rng,
+    conn: Option<Conn>,
+}
+
+#[derive(Debug)]
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    /// A client for `addr` with the default [`ClientConfig`].
+    pub fn new(addr: SocketAddr) -> Client {
+        Client::with_config(addr, ClientConfig::default())
+    }
+
+    /// A client for `addr` with an explicit config.
+    pub fn with_config(addr: SocketAddr, cfg: ClientConfig) -> Client {
+        let rng = Rng::new(cfg.seed);
+        Client { addr, cfg, rng, conn: None }
+    }
+
+    /// The address this client talks to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    fn dial(&self) -> std::io::Result<Conn> {
+        let stream = TcpStream::connect_timeout(&self.addr, self.cfg.connect_timeout)?;
+        stream.set_read_timeout(Some(self.cfg.read_timeout))?;
+        stream.set_write_timeout(Some(self.cfg.read_timeout))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Conn { reader, writer: stream })
+    }
+
+    fn conn(&mut self) -> std::io::Result<&mut Conn> {
+        if self.conn.is_none() {
+            self.conn = Some(self.dial()?);
+        }
+        Ok(self.conn.as_mut().expect("just connected"))
+    }
+
+    /// One attempt: ensure a connection, send `line`, read one response
+    /// line. EOF before a response is an error (the peer shed or died).
+    fn attempt(&mut self, line: &str) -> std::io::Result<String> {
+        let conn = self.conn()?;
+        conn.writer.write_all(line.as_bytes())?;
+        conn.writer.write_all(b"\n")?;
+        conn.writer.flush()?;
+        let mut response = String::new();
+        let n = conn.reader.read_line(&mut response)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed before a response arrived",
+            ));
+        }
+        Ok(response.trim_end().to_string())
+    }
+
+    /// Send one request line, return the raw response line. Transport
+    /// failures (connect refused, timeout, mid-line disconnect) drop the
+    /// connection, back off, and replay the line on a fresh one — safe
+    /// because planning has no side effects — up to `retries` extra
+    /// attempts, then the last I/O error surfaces as a [`PlanError`].
+    pub fn roundtrip_line(&mut self, line: &str) -> Result<String, PlanError> {
+        let mut last: Option<std::io::Error> = None;
+        for attempt in 0..=self.cfg.retries {
+            if attempt > 0 {
+                let delay = backoff_delay(&self.cfg, attempt - 1, &mut self.rng);
+                std::thread::sleep(delay);
+            }
+            match self.attempt(line) {
+                Ok(response) => return Ok(response),
+                Err(e) => {
+                    self.conn = None; // the transport is suspect: redial
+                    last = Some(e);
+                }
+            }
+        }
+        let e = last.expect("at least one attempt ran");
+        Err(PlanError(format!(
+            "service at {} unreachable after {} attempts: {e}",
+            self.addr,
+            self.cfg.retries + 1
+        )))
+    }
+
+    /// Round-trip an already-parsed response: decode the line, reject
+    /// non-objects, and surface service error frames as [`PlanError`]s.
+    fn roundtrip_json(&mut self, line: &str) -> Result<Json, PlanError> {
+        let response = self.roundtrip_line(line)?;
+        let j = json::parse(&response)
+            .map_err(|e| PlanError(format!("malformed response from {}: {e}", self.addr)))?;
+        if let Some(msg) = j.get("error").and_then(|v| v.as_str()) {
+            return Err(PlanError(msg.to_string()));
+        }
+        Ok(j)
+    }
+
+    /// Submit one [`MapRequest`] and decode the [`MapPlan`]. Typed
+    /// rejections and error frames come back as the frame's `"error"`
+    /// message (so a `"reject":"deadline"` response surfaces as a
+    /// [`PlanError`] with the stable [`super::DEADLINE_ERROR_PREFIX`]).
+    pub fn plan(&mut self, req: &MapRequest) -> Result<MapPlan, PlanError> {
+        let j = self.roundtrip_json(&req.to_json().dumps())?;
+        MapPlan::from_json(&j)
+    }
+
+    /// Send an in-band control frame (`{"v":1,"cmd":"stats"}` /
+    /// `"metrics"`) and return the response object.
+    pub fn command(&mut self, cmd: &str) -> Result<Json, PlanError> {
+        let mut obj = JsonObj::new();
+        obj.set("v", super::WIRE_VERSION);
+        obj.set("cmd", cmd);
+        self.roundtrip_json(&Json::from(obj).dumps())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+    use std::net::TcpListener;
+
+    fn cfg_fast() -> ClientConfig {
+        ClientConfig {
+            connect_timeout: Duration::from_millis(500),
+            read_timeout: Duration::from_secs(5),
+            retries: 3,
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(8),
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let cfg = ClientConfig {
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(2),
+            ..ClientConfig::default()
+        };
+        assert_eq!(backoff_raw(&cfg, 0), Duration::from_millis(50));
+        assert_eq!(backoff_raw(&cfg, 1), Duration::from_millis(100));
+        assert_eq!(backoff_raw(&cfg, 2), Duration::from_millis(200));
+        assert_eq!(backoff_raw(&cfg, 5), Duration::from_millis(1600));
+        assert_eq!(backoff_raw(&cfg, 6), Duration::from_secs(2), "capped");
+        assert_eq!(backoff_raw(&cfg, 63), Duration::from_secs(2), "shift overflow capped");
+        // jitter stays within 50-100 % and replays from the seed
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for k in 0..8 {
+            let d = backoff_delay(&cfg, k, &mut a);
+            assert!(d >= backoff_raw(&cfg, k).mul_f64(0.5) && d <= backoff_raw(&cfg, k));
+            assert_eq!(d, backoff_delay(&cfg, k, &mut b));
+        }
+    }
+
+    #[test]
+    fn roundtrips_against_an_echo_peer() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            for _ in 0..2 {
+                line.clear();
+                reader.read_line(&mut line).unwrap();
+                let mut w = &stream;
+                w.write_all(line.as_bytes()).unwrap();
+            }
+        });
+        let mut c = Client::with_config(addr, cfg_fast());
+        assert_eq!(c.roundtrip_line("{\"ping\":1}").unwrap(), "{\"ping\":1}");
+        assert_eq!(c.roundtrip_line("{\"ping\":2}").unwrap(), "{\"ping\":2}");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn reconnects_and_resends_after_a_mid_stream_disconnect() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            // first connection: read the request, then slam the door
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream);
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            drop(reader);
+            // second connection: behave
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let mut w = &stream;
+            w.write_all(line.as_bytes()).unwrap();
+        });
+        let mut c = Client::with_config(addr, cfg_fast());
+        assert_eq!(c.roundtrip_line("{\"once\":1}").unwrap(), "{\"once\":1}");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn gives_up_after_the_retry_budget() {
+        // bind, learn the port, close — nothing listens there afterwards
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        let mut c = Client::with_config(addr, cfg_fast());
+        let e = c.roundtrip_line("{}").unwrap_err();
+        assert!(e.0.contains("after 4 attempts"), "{e}");
+    }
+
+    #[test]
+    fn error_frames_surface_as_plan_errors() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let mut w = &stream;
+            w.write_all(b"{\"v\":1,\"line\":1,\"error\":\"deadline exceeded: too slow\",\"reject\":\"deadline\"}\n")
+                .unwrap();
+            // drain until the client hangs up so the write is not raced
+            let mut sink = Vec::new();
+            let _ = reader.read_to_end(&mut sink);
+        });
+        let mut c = Client::with_config(addr, cfg_fast());
+        let e = c.roundtrip_json("{\"v\":1}").unwrap_err();
+        assert!(e.is_deadline(), "{e}");
+        server.join().unwrap();
+    }
+}

@@ -36,6 +36,7 @@
 //! `pack::*`/`ilp` engines, `opt::sweep`, `coordinator::batched_sweep`)
 //! remain available as `#[doc(hidden)]` internals the planner calls.
 
+pub mod client;
 pub mod wire;
 
 use crate::area::AreaModel;
@@ -47,6 +48,7 @@ use crate::opt::{self, Engine, SweepConfig, SweepPoint};
 use crate::pack::{self, Discipline, Packing, SortOrder};
 use crate::perf::{self, rapa, Execution, TimingModel};
 use crate::sim::{self, SimConfig};
+use crate::util::deadline::Deadline;
 use std::io::{BufRead, Write};
 
 /// Wire-format version stamped into (and required of) every serialized
@@ -76,6 +78,26 @@ impl std::fmt::Display for PlanError {
 }
 
 impl std::error::Error for PlanError {}
+
+/// Stable message prefix of wall-clock deadline-expiry errors. The
+/// planning service matches on it ([`PlanError::is_deadline`]) to emit the
+/// typed `"reject":"deadline"` frame instead of a plain error frame, so
+/// the prefix is part of the crate's error contract.
+pub const DEADLINE_ERROR_PREFIX: &str = "deadline exceeded";
+
+impl PlanError {
+    /// A deadline-expiry error: `"deadline exceeded: <detail>"`, carrying
+    /// the stable [`DEADLINE_ERROR_PREFIX`].
+    pub fn deadline(detail: impl std::fmt::Display) -> PlanError {
+        PlanError(format!("{DEADLINE_ERROR_PREFIX}: {detail}"))
+    }
+
+    /// Whether this error reports a wall-clock deadline expiry
+    /// ([`Planner::plan_with_deadline`]).
+    pub fn is_deadline(&self) -> bool {
+        self.0.starts_with(DEADLINE_ERROR_PREFIX)
+    }
+}
 
 fn err(msg: impl Into<String>) -> PlanError {
     PlanError(msg.into())
@@ -430,7 +452,7 @@ impl Planner {
         &self.replication
     }
 
-    fn sweep_config(&self) -> SweepConfig {
+    fn sweep_config(&self, deadline: Deadline) -> SweepConfig {
         let (row_exp, aspects) = match &self.request.tiles {
             TileSpace::Grid { row_exp, aspects } => (*row_exp, aspects.clone()),
             // unused by the fixed-tile path
@@ -444,6 +466,7 @@ impl Planner {
             replication: Some(self.replication.clone()),
             sort: self.request.sort,
             area: self.request.area,
+            deadline,
         }
     }
 
@@ -460,7 +483,7 @@ impl Planner {
     /// byte-identical to calling the engines directly. An engine emitting
     /// an invalid packing surfaces as an error, not a panic.
     pub fn pack(&self, tile: Tile) -> Result<PackOutcome, PlanError> {
-        self.pack_with_hint(tile, None)
+        self.pack_with_hint(tile, None, Deadline::NONE)
     }
 
     /// [`Planner::pack`] with an ILP warm-start hint (the counted
@@ -469,7 +492,12 @@ impl Planner {
     /// point's hint so the packed placements land on exactly the bin count
     /// the sweep reported, even when the budget is too small to prove
     /// optimality.
-    fn pack_with_hint(&self, tile: Tile, hint: Option<usize>) -> Result<PackOutcome, PlanError> {
+    fn pack_with_hint(
+        &self,
+        tile: Tile,
+        hint: Option<usize>,
+        deadline: Deadline,
+    ) -> Result<PackOutcome, PlanError> {
         let req = &self.request;
         let blocks = frag::fragment_network_replicated(&self.net, tile, &self.replication);
         let (packing, nodes, optimal, lower_bound) = match req.engine {
@@ -482,7 +510,7 @@ impl Planner {
                     &blocks,
                     tile,
                     req.discipline,
-                    ilp::Budget { max_nodes, ..Default::default() },
+                    ilp::Budget { max_nodes, deadline, ..Default::default() },
                     hint,
                 );
                 (r.packing, r.nodes, r.optimal, r.lower_bound)
@@ -547,7 +575,20 @@ impl Planner {
     /// engines (identical numbers, plus coordinates), solved once for the
     /// chosen tile.
     pub fn plan(&self) -> Result<MapPlan, PlanError> {
-        self.plan_with_outcome().map(|(plan, _)| plan)
+        self.plan_with_deadline(Deadline::NONE)
+    }
+
+    /// [`Planner::plan`] under a cooperative wall-clock budget: the
+    /// deadline is threaded by value through the sweep, the counted
+    /// kernels and the branch & bound checkpoints, so a runaway solve
+    /// bails out within one checkpoint stride instead of pinning its
+    /// thread. On expiry the partial result is discarded and a
+    /// [`PlanError::deadline`] (stable [`DEADLINE_ERROR_PREFIX`]) comes
+    /// back — the planning service maps it to the typed
+    /// `"reject":"deadline"` frame. [`Deadline::NONE`] is exactly
+    /// [`Planner::plan`]: no clock reads, bit-identical results.
+    pub fn plan_with_deadline(&self, deadline: Deadline) -> Result<MapPlan, PlanError> {
+        self.plan_with_outcome(deadline).map(|(plan, _)| plan)
     }
 
     /// Plan a fixed-tile deployment with **one** solve: the returned
@@ -562,13 +603,13 @@ impl Planner {
             return Err(err("plan_deployment requires a fixed tile — a deployment is one physical tile dimension, not a grid"));
         }
         let (mut plan, outcome) = if self.request.include_placements {
-            self.plan_with_outcome()?
+            self.plan_with_outcome(Deadline::NONE)?
         } else {
             // force materialization so the point, the provenance and the
             // returned packing all come from this one solve
             let mut forced = self.clone();
             forced.request.include_placements = true;
-            forced.plan_with_outcome()?
+            forced.plan_with_outcome(Deadline::NONE)?
         };
         let outcome = outcome.expect("fixed-tile placement plans materialize a packing");
         if !self.request.include_placements {
@@ -579,7 +620,10 @@ impl Planner {
 
     /// [`Planner::plan`] keeping the materialized [`PackOutcome`] (when one
     /// was solved) alongside the plan it priced.
-    fn plan_with_outcome(&self) -> Result<(MapPlan, Option<PackOutcome>), PlanError> {
+    fn plan_with_outcome(
+        &self,
+        deadline: Deadline,
+    ) -> Result<(MapPlan, Option<PackOutcome>), PlanError> {
         let req = &self.request;
         let threads = if req.threads == 0 { opt::sweep_threads() } else { req.threads };
         // whether the `points` array is priced through the counted path:
@@ -595,26 +639,37 @@ impl Planner {
         // materialized packing (placement requests)
         let (points, fixed_solve, fixed_outcome) = match &req.tiles {
             TileSpace::Grid { .. } => {
-                let cfg = self.sweep_config();
+                let cfg = self.sweep_config(deadline);
                 (opt::sweep_with_threads(&self.net, &cfg, threads), None, None)
             }
             TileSpace::Fixed(tile) => {
                 let aspect = tile.exact_aspect().unwrap_or(OFF_GRID_ASPECT);
                 if counted_mode {
-                    let eval =
-                        opt::evaluate_counted(&self.net, *tile, aspect, &self.sweep_config(), None);
+                    let eval = opt::evaluate_counted(
+                        &self.net,
+                        *tile,
+                        aspect,
+                        &self.sweep_config(deadline),
+                        None,
+                    );
                     (vec![eval.point.clone()], Some(eval), None)
                 } else {
                     // one fragment + pack serves the point, the placements
                     // and the provenance
-                    let outcome = self.pack_with_hint(*tile, None)?;
+                    let outcome = self.pack_with_hint(*tile, None, deadline)?;
                     let point = self.point_from_packing(*tile, aspect, &outcome.packing);
                     (vec![point], None, Some(outcome))
                 }
             }
         };
+        // an expired budget invalidates everything above (the sweep and
+        // the solvers degrade to placeholders/unfinished incumbents once
+        // the deadline passes) — discard and report the typed error
+        if deadline.expired() {
+            return Err(PlanError::deadline("the wall-clock budget expired during the solve"));
+        }
         let best_per_aspect = opt::best_per_aspect(&points);
-        let best = self.choose(&points, &best_per_aspect)?;
+        let best = self.choose(&points, &best_per_aspect, deadline)?;
         let (outcome, solve) = match (fixed_outcome, fixed_solve) {
             (Some(o), _) => (Some(o), None),
             (None, Some(s)) => (None, Some(s)),
@@ -624,7 +679,7 @@ impl Planner {
                 // hint so the placement solve reproduces the reported bin
                 // count
                 let hint = self.grid_replay_hint(&points, &best);
-                (Some(self.pack_with_hint(best.tile, hint)?), None)
+                (Some(self.pack_with_hint(best.tile, hint, deadline)?), None)
             }
             (None, None) if matches!(req.engine, Engine::Ilp { .. }) => {
                 // ILP provenance for the chosen grid point without
@@ -635,13 +690,18 @@ impl Planner {
                     &self.net,
                     best.tile,
                     best.aspect,
-                    &self.sweep_config(),
+                    &self.sweep_config(deadline),
                     hint,
                 );
                 (None, Some(eval))
             }
             (None, None) => (None, None),
         };
+        // the replay stage above re-solves the chosen point; re-check so a
+        // budget that died inside it is reported, not returned as a plan
+        if deadline.expired() {
+            return Err(PlanError::deadline("the wall-clock budget expired during the solve"));
+        }
         let (nodes, optimal, lower_bound) = match (&outcome, &solve) {
             (Some(o), _) => (o.nodes, o.optimal, o.lower_bound),
             (None, Some(s)) => (s.nodes, s.optimal, s.lower_bound),
@@ -691,6 +751,7 @@ impl Planner {
         &self,
         points: &[SweepPoint],
         per_aspect: &[SweepPoint],
+        deadline: Deadline,
     ) -> Result<SweepPoint, PlanError> {
         match self.request.objective {
             Objective::MinArea => {
@@ -716,7 +777,12 @@ impl Planner {
                 };
                 let mut best: Option<(f64, &SweepPoint)> = None;
                 for p in candidates {
-                    let packing = self.pack(p.tile)?.packing;
+                    if deadline.is_set() && deadline.expired() {
+                        return Err(PlanError::deadline(
+                            "the wall-clock budget expired while ranking throughput candidates",
+                        ));
+                    }
+                    let packing = self.pack_with_hint(p.tile, None, deadline)?.packing;
                     let rep = sim::simulate(&self.net, &packing, &sim_cfg, SIM_INFERENCES);
                     let better = match &best {
                         None => true,
@@ -1050,6 +1116,23 @@ mod tests {
         assert!(plan.provenance.lower_bound >= 1);
         // capacity monotonicity: the 3-point column confirms some hints
         assert!(plan.provenance.warm_hits <= 2);
+    }
+
+    #[test]
+    fn expired_deadline_yields_typed_plan_error() {
+        let planner = MapRequest::zoo("lenet").build().unwrap();
+        let e = planner
+            .plan_with_deadline(Deadline::after(std::time::Duration::ZERO))
+            .unwrap_err();
+        assert!(e.is_deadline(), "{e}");
+        assert!(e.0.starts_with(DEADLINE_ERROR_PREFIX));
+        // non-deadline errors are not misclassified
+        assert!(!MapRequest::zoo("nope").build().unwrap_err().is_deadline());
+        // an unset deadline is plan() exactly
+        let a = planner.plan().unwrap();
+        let b = planner.plan_with_deadline(Deadline::NONE).unwrap();
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.points, b.points);
     }
 
     #[test]

@@ -557,6 +557,16 @@ pub enum RejectKind {
     /// the service is at its `--max-inflight` admission cap; transient —
     /// the connection stays open and the client may retry
     OverInflight,
+    /// the planner panicked while solving this request; the panic was
+    /// contained to the request, the worker survived, and the connection
+    /// stays open — retrying the *same* request will likely panic again,
+    /// but the service itself is healthy
+    Internal,
+    /// the solve exceeded the service's `--deadline-ms` wall-clock budget
+    /// and was cooperatively cancelled; transient in the sense that the
+    /// connection stays open, but the same request will time out again
+    /// unless the service is less loaded or reconfigured
+    Deadline,
 }
 
 impl RejectKind {
@@ -565,15 +575,18 @@ impl RejectKind {
         match self {
             RejectKind::OverQuota => "over-quota",
             RejectKind::OverInflight => "over-inflight",
+            RejectKind::Internal => "internal",
+            RejectKind::Deadline => "deadline",
         }
     }
 }
 
-/// A typed admission-control rejection: an [`error_frame`] (same `v`,
+/// A typed planning-service rejection: an [`error_frame`] (same `v`,
 /// `line`, `error` fields, so clients that only understand error frames
 /// degrade gracefully) extended with a machine-readable
-/// `"reject":"over-quota"|"over-inflight"` discriminator. Emitted only by
-/// the planning service — the file endpoint has no admission control.
+/// `"reject":"over-quota"|"over-inflight"|"internal"|"deadline"`
+/// discriminator. Emitted only by the planning service — the file
+/// endpoint has no admission control, panic containment, or deadlines.
 pub fn reject_frame(line: usize, kind: RejectKind, e: &PlanError) -> Json {
     let Json::Obj(mut o) = error_frame(line, e) else { unreachable!("error_frame is an object") };
     o.set("reject", kind.token());
@@ -592,6 +605,16 @@ pub struct StatsSnapshot {
     pub cache_hits: u64,
     /// connections accepted since startup
     pub connections: u64,
+    /// planner panics contained by the worker pool (each also counts as
+    /// an error and as an `internal` rejection)
+    pub panics: u64,
+    /// solves cancelled by the per-request `--deadline-ms` wall-clock
+    /// budget (each also counts as an error)
+    pub timeouts: u64,
+    /// requests refused with the `"reject":"internal"` frame (today
+    /// exactly the contained panics; kept as its own counter so the
+    /// reject taxonomy stays 1:1 with the wire tokens)
+    pub rejected_internal: u64,
     /// nearest-rank p50 of plan *solve* latency, seconds (cache hits and
     /// error frames don't contribute samples)
     pub plan_p50_s: f64,
@@ -610,6 +633,9 @@ fn counters_to_obj(s: &StatsSnapshot) -> JsonObj {
         .set("errors", s.errors)
         .set("cache_hits", s.cache_hits)
         .set("connections", s.connections)
+        .set("panics", s.panics)
+        .set("timeouts", s.timeouts)
+        .set("rejected_internal", s.rejected_internal)
         .set("plan_p50_s", s.plan_p50_s)
         .set("plan_p95_s", s.plan_p95_s);
     o
@@ -623,6 +649,9 @@ fn counters_from_obj(s: &JsonObj) -> Result<StatsSnapshot, PlanError> {
         errors: get_u64(s, "errors")?,
         cache_hits: get_u64(s, "cache_hits")?,
         connections: get_u64(s, "connections")?,
+        panics: get_u64(s, "panics")?,
+        timeouts: get_u64(s, "timeouts")?,
+        rejected_internal: get_u64(s, "rejected_internal")?,
         plan_p50_s: get_f64(s, "plan_p50_s")?,
         plan_p95_s: get_f64(s, "plan_p95_s")?,
     })
@@ -710,23 +739,31 @@ pub fn metrics_from_json(j: &Json) -> Result<MetricsSnapshot, PlanError> {
 
 /// Flatten a metrics snapshot into the `BENCH_*.json` medians schema
 /// (flat name → number object) — what `xbarmap serve --metrics-out FILE`
-/// writes. Only **gauges** are emitted (latency in ns, occupancy), never
-/// the monotonic counters, so two snapshots of the same service can be
-/// compared with `xbarmap bench-gate` without ever-growing counters
-/// reading as regressions; the counters ride the in-band `metrics` frame.
+/// writes. **Gauges** are emitted (latency in ns, occupancy) plus the
+/// three **fault counters** (`panics`, `timeouts`, `rejected_internal`);
+/// throughput counters (`served`, `errors`, …) are excluded so two
+/// snapshots of the same service can be compared with `xbarmap
+/// bench-gate` without ever-growing counters reading as regressions —
+/// those ride the in-band `metrics` frame. The fault counters are safe
+/// under the gate: `bench-gate` skips any key whose baseline is zero,
+/// which is what a healthy baseline records, and a *non*-zero fault
+/// baseline that grows is exactly the regression the gate should flag.
 pub fn metrics_medians(m: &MetricsSnapshot) -> Json {
     let mut o = JsonObj::new();
     o.set(
         "_schema",
-        "gauges only, BENCH_*.json-compatible (name -> number); monotonic counters \
-         ride the in-band {\"v\":1,\"cmd\":\"metrics\"} frame",
+        "gauges + fault counters, BENCH_*.json-compatible (name -> number); \
+         throughput counters ride the in-band {\"v\":1,\"cmd\":\"metrics\"} frame",
     )
     .set("serve/plan_p50_ns", m.stats.plan_p50_s * 1e9)
     .set("serve/plan_p95_ns", m.stats.plan_p95_s * 1e9)
     .set("serve/inflight", m.inflight)
     .set("serve/queue_depth", m.queue_depth)
     .set("serve/cache_entries", m.cache_entries)
-    .set("serve/cache_bytes", m.cache_bytes);
+    .set("serve/cache_bytes", m.cache_bytes)
+    .set("serve/panics", m.stats.panics)
+    .set("serve/timeouts", m.stats.timeouts)
+    .set("serve/rejected_internal", m.stats.rejected_internal);
     Json::Obj(o)
 }
 
@@ -886,6 +923,38 @@ mod tests {
     }
 
     #[test]
+    fn fault_reject_tokens_are_pinned() {
+        // the service's fault-containment frames: exact bytes, like the
+        // admission frames above, so clients can match on the token
+        let e = PlanError("planner panicked: boom".into());
+        let f = reject_frame(2, RejectKind::Internal, &e);
+        assert_eq!(
+            f.dumps(),
+            r#"{"v":1,"line":2,"error":"planner panicked: boom","reject":"internal"}"#
+        );
+        let e = PlanError("deadline exceeded: solve passed the 50ms budget".into());
+        let f = reject_frame(5, RejectKind::Deadline, &e);
+        assert_eq!(
+            f.dumps(),
+            r#"{"v":1,"line":5,"error":"deadline exceeded: solve passed the 50ms budget","reject":"deadline"}"#
+        );
+        // the four tokens stay distinct
+        let tokens: Vec<&str> = [
+            RejectKind::OverQuota,
+            RejectKind::OverInflight,
+            RejectKind::Internal,
+            RejectKind::Deadline,
+        ]
+        .iter()
+        .map(|k| k.token())
+        .collect();
+        let mut dedup = tokens.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), tokens.len());
+    }
+
+    #[test]
     fn metrics_frame_roundtrips_and_supersets_the_stats_frame() {
         let m = MetricsSnapshot {
             stats: StatsSnapshot {
@@ -893,6 +962,9 @@ mod tests {
                 errors: 2,
                 cache_hits: 17,
                 connections: 5,
+                panics: 1,
+                timeouts: 2,
+                rejected_internal: 1,
                 plan_p50_s: 0.0125,
                 plan_p95_s: 0.25,
             },
@@ -924,7 +996,14 @@ mod tests {
     #[test]
     fn metrics_medians_emit_gauges_in_the_bench_schema() {
         let m = MetricsSnapshot {
-            stats: StatsSnapshot { plan_p50_s: 0.002, plan_p95_s: 0.03, ..Default::default() },
+            stats: StatsSnapshot {
+                plan_p50_s: 0.002,
+                plan_p95_s: 0.03,
+                panics: 1,
+                timeouts: 2,
+                rejected_internal: 1,
+                ..Default::default()
+            },
             inflight: 1,
             queue_depth: 4,
             cache_entries: 9,
@@ -935,7 +1014,13 @@ mod tests {
         assert_eq!(j.get("serve/plan_p50_ns").and_then(Json::as_f64), Some(2e6));
         assert_eq!(j.get("serve/plan_p95_ns").and_then(Json::as_f64), Some(3e7));
         assert_eq!(j.get("serve/queue_depth").and_then(|v| v.as_usize()), Some(4));
-        // no monotonic counters: two snapshots must be bench-gate safe
+        // fault counters are snapshot rows: a healthy baseline records
+        // zero (which bench-gate skips), a non-zero one growing is a
+        // regression worth flagging
+        assert_eq!(j.get("serve/panics").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(j.get("serve/timeouts").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(j.get("serve/rejected_internal").and_then(|v| v.as_usize()), Some(1));
+        // no throughput counters: two snapshots must be bench-gate safe
         for absent in ["serve/served", "serve/errors", "serve/cache_hits", "serve/uptime_s"] {
             assert!(j.get(absent).is_none(), "{absent} must not be a medians row");
         }
@@ -950,6 +1035,9 @@ mod tests {
             errors: 2,
             cache_hits: 17,
             connections: 5,
+            panics: 3,
+            timeouts: 1,
+            rejected_internal: 3,
             plan_p50_s: 0.0125,
             plan_p95_s: 0.25,
         };

@@ -51,7 +51,7 @@ pub fn paper_demo_items() -> Vec<Block> {
 /// ILP budget used across the harness (reduced by `fast`).
 fn budget(fast: bool) -> ilp::Budget {
     if fast {
-        ilp::Budget { max_nodes: 20_000, max_items: 120 }
+        ilp::Budget { max_nodes: 20_000, max_items: 120, ..Default::default() }
     } else {
         ilp::Budget::default()
     }

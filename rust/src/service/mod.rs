@@ -19,9 +19,21 @@
 //! * a **canonical-request plan cache** ([`cache::PlanCache`]): identical
 //!   requests — across connections, with the correlation id ignored — are
 //!   answered from memory;
-//! * **graceful shutdown**: SIGINT/ctrl-C (or [`ServiceHandle::shutdown`])
-//!   stops accepting and reading, drains every request already read, and
-//!   closes each connection only after its last owed response;
+//! * **graceful shutdown**: SIGINT/ctrl-C or SIGTERM (or
+//!   [`ServiceHandle::shutdown`]) stops accepting and reading, drains
+//!   every request already read, and closes each connection only after
+//!   its last owed response;
+//! * **panic containment**: each solve runs under
+//!   [`std::panic::catch_unwind`], so a panicking planner answers its one
+//!   request with the typed [`wire::reject_frame`] `"reject":"internal"`
+//!   and the worker thread survives to take the next job — one poisoned
+//!   request can't take down the pool (or, via a poisoned stats lock,
+//!   wedge every later counter update: the stats mutex recovers from
+//!   poisoning, since its plain-integer state is valid at every step);
+//! * **per-request deadlines**: `--deadline-ms` arms a wall-clock
+//!   [`crate::util::deadline::Deadline`] per solve, threaded through the
+//!   sweep and kernel checkpoints, so a runaway request answers with the
+//!   typed `"reject":"deadline"` frame instead of pinning a worker;
 //! * an **in-band `{"v":1,"cmd":"stats"}` request** answered with the
 //!   [`wire::stats_frame`]: served/errored/cache-hit counts and
 //!   nearest-rank p50/p95 plan-solve latency;
@@ -48,6 +60,7 @@ mod conn;
 pub use cache::PlanCache;
 
 use crate::plan::{self, wire, PlanError};
+use crate::util::deadline::Deadline;
 use crate::util::json::Json;
 use crate::util::mpmc::Queue;
 use crate::util::stats::{percentile_nearest_rank, sort_samples};
@@ -113,8 +126,13 @@ pub struct ServiceConfig {
     /// how often the metrics file is rewritten (also written once at
     /// shutdown, so short-lived runs still leave a snapshot)
     pub metrics_interval: Duration,
-    /// also shut down on SIGINT/ctrl-C (the CLI sets this; tests drive
-    /// shutdown through [`ServiceHandle`] instead)
+    /// wall-clock budget for one plan solve; past it the request is
+    /// answered with the typed `deadline` reject frame and the worker
+    /// moves on (None = solves may run as long as the search budget
+    /// allows). Cache hits and in-band commands are not subject to it.
+    pub deadline: Option<Duration>,
+    /// also shut down on SIGINT/ctrl-C and SIGTERM (the CLI sets this;
+    /// tests drive shutdown through [`ServiceHandle`] instead)
     pub watch_sigint: bool,
 }
 
@@ -131,6 +149,7 @@ impl Default for ServiceConfig {
             max_inflight: 0,
             metrics_out: None,
             metrics_interval: Duration::from_secs(10),
+            deadline: None,
             watch_sigint: false,
         }
     }
@@ -152,6 +171,9 @@ struct StatsInner {
     errors: u64,
     cache_hits: u64,
     connections: u64,
+    panics: u64,
+    timeouts: u64,
+    rejected_internal: u64,
     rejected_over_quota: u64,
     rejected_over_inflight: u64,
     latencies: VecDeque<f64>,
@@ -172,6 +194,8 @@ struct Shared {
     max_inflight: usize,
     /// per-connection request quota copied out of the config (0 = none)
     per_conn_quota: usize,
+    /// wall-clock budget armed per solve (None = unbounded)
+    deadline: Option<Duration>,
     /// when the listener bound, for the uptime gauge
     started: Instant,
 }
@@ -182,8 +206,17 @@ impl Shared {
             || self.sigint.map(|f| f.load(Ordering::SeqCst)).unwrap_or(false)
     }
 
+    /// Lock the stats, recovering from poisoning: every update keeps the
+    /// plain-integer counters valid at every step, so a worker that
+    /// panicked while holding the lock left consistent state behind —
+    /// propagating the poison would instead wedge every later counter
+    /// update and stats/metrics response on an unwrap.
+    fn lock_stats(&self) -> std::sync::MutexGuard<'_, StatsInner> {
+        self.stats.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     fn snapshot(&self) -> wire::StatsSnapshot {
-        let s = self.stats.lock().unwrap();
+        let s = self.lock_stats();
         Self::stats_of(&s)
     }
 
@@ -195,6 +228,9 @@ impl Shared {
             errors: s.errors,
             cache_hits: s.cache_hits,
             connections: s.connections,
+            panics: s.panics,
+            timeouts: s.timeouts,
+            rejected_internal: s.rejected_internal,
             plan_p50_s: percentile_nearest_rank(&lat, 0.50),
             plan_p95_s: percentile_nearest_rank(&lat, 0.95),
         }
@@ -205,7 +241,7 @@ impl Shared {
     /// the `--metrics-out` writer).
     fn metrics(&self) -> wire::MetricsSnapshot {
         let (stats, rejected_over_quota, rejected_over_inflight) = {
-            let s = self.stats.lock().unwrap();
+            let s = self.lock_stats();
             (Self::stats_of(&s), s.rejected_over_quota, s.rejected_over_inflight)
         };
         wire::MetricsSnapshot {
@@ -221,15 +257,17 @@ impl Shared {
         }
     }
 
-    /// Count one admission rejection. Rejects are error frames on the
-    /// wire, so they bump `errors` too — a client watching only the
-    /// stats frame still sees the shedding — plus their own counter.
+    /// Count one typed rejection. Rejects are error frames on the wire,
+    /// so they bump `errors` too — a client watching only the stats
+    /// frame still sees the shedding — plus their own counter.
     fn note_reject(&self, kind: wire::RejectKind) {
-        let mut s = self.stats.lock().unwrap();
+        let mut s = self.lock_stats();
         s.errors += 1;
         match kind {
             wire::RejectKind::OverQuota => s.rejected_over_quota += 1,
             wire::RejectKind::OverInflight => s.rejected_over_inflight += 1,
+            wire::RejectKind::Internal => s.rejected_internal += 1,
+            wire::RejectKind::Deadline => s.timeouts += 1,
         }
     }
 }
@@ -299,6 +337,9 @@ impl Service {
                     errors: 0,
                     cache_hits: 0,
                     connections: 0,
+                    panics: 0,
+                    timeouts: 0,
+                    rejected_internal: 0,
                     rejected_over_quota: 0,
                     rejected_over_inflight: 0,
                     latencies: VecDeque::new(),
@@ -306,6 +347,7 @@ impl Service {
                 inflight: AtomicUsize::new(0),
                 max_inflight: cfg.max_inflight,
                 per_conn_quota: cfg.per_conn_quota,
+                deadline: cfg.deadline,
                 started: Instant::now(),
             }),
         })
@@ -332,7 +374,26 @@ impl Service {
             let sh = Arc::clone(&shared);
             workers.push(std::thread::spawn(move || {
                 while let Some(job) = sh.queue.pop() {
-                    let response = respond(&sh, &job);
+                    // Contain a panicking solve to the one request that
+                    // triggered it: the client gets the typed `internal`
+                    // reject frame and this worker survives to take the
+                    // next job. AssertUnwindSafe is sound here because
+                    // every shared structure the closure touches stays
+                    // consistent under unwind: the queue and cache update
+                    // under their own locks, and the stats mutex recovers
+                    // from poisoning ([`Shared::lock_stats`]).
+                    let response = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || respond(&sh, &job),
+                    ))
+                    .unwrap_or_else(|payload| {
+                        sh.lock_stats().panics += 1;
+                        sh.note_reject(wire::RejectKind::Internal);
+                        let e = PlanError(format!(
+                            "planner panicked: {}",
+                            panic_message(payload.as_ref())
+                        ));
+                        wire::reject_frame(job.line_no, wire::RejectKind::Internal, &e).dumps()
+                    });
                     job.conn.deliver(job.seq, response);
                     // admitted at read time; answered now
                     sh.inflight.fetch_sub(1, Ordering::SeqCst);
@@ -381,7 +442,7 @@ impl Service {
             }
             match self.listener.accept() {
                 Ok((stream, _peer)) => {
-                    shared.stats.lock().unwrap().connections += 1;
+                    shared.lock_stats().connections += 1;
                     let _ = stream.set_nodelay(true);
                     // try_clone fails under fd exhaustion (connection
                     // floods) — shed this connection, keep serving
@@ -503,7 +564,7 @@ fn read_conn(shared: &Shared, stream: TcpStream, conn: Arc<Conn>) {
             // answer in-order like any other response, then hang up — the
             // client is outside the protocol the bounded queue can pace
             line_no += 1;
-            shared.stats.lock().unwrap().errors += 1;
+            shared.lock_stats().errors += 1;
             let e = PlanError(format!("request line exceeds {MAX_LINE_BYTES} bytes"));
             conn.deliver(seq, wire::error_frame(line_no, &e).dumps());
             seq += 1;
@@ -580,23 +641,43 @@ fn read_conn(shared: &Shared, stream: TcpStream, conn: Arc<Conn>) {
     conn.finish_input(seq);
 }
 
+/// How much more a client may stream after a terminal reject before the
+/// service stops being polite and drops the socket: the same budget one
+/// well-formed line gets. The drain exists to let the peer's TCP stack
+/// deliver the owed responses before a reset, not to tail an unbounded
+/// stream for free.
+const DRAIN_MAX_BYTES: usize = MAX_LINE_BYTES;
+
+/// Wall-clock cap on the post-reject drain: a client that neither
+/// half-closes nor streams (just holds the socket open) parks the reader
+/// only this long.
+const DRAIN_MAX_WAIT: Duration = Duration::from_secs(5);
+
 /// Read and discard a connection's remaining input until the client
-/// half-closes (EOF), a read error, or service shutdown. Used after a
-/// terminal frame (over-quota, oversized line): dropping the socket
-/// while unread bytes sit in the receive buffer makes the kernel reset
-/// the connection, which can destroy the very responses — the typed
-/// reject included — the client is still owed. The parked thread costs
-/// no more than any idle connection's reader, and discarding into a
-/// fixed scratch keeps memory flat however much the client streams.
+/// half-closes (EOF), a read error, service shutdown, or the drain
+/// bounds trip. Used after a terminal frame (over-quota, oversized
+/// line): dropping the socket while unread bytes sit in the receive
+/// buffer makes the kernel reset the connection, which can destroy the
+/// very responses — the typed reject included — the client is still
+/// owed. Discarding into a fixed scratch keeps memory flat, and the
+/// [`DRAIN_MAX_BYTES`] / [`DRAIN_MAX_WAIT`] bounds keep a hostile
+/// client from parking the reader thread forever: past either bound
+/// the responses have had every reasonable chance to flush, and the
+/// socket drops.
 fn drain_discard(shared: &Shared, reader: &mut BufReader<TcpStream>) {
     let mut scratch = [0u8; 4096];
+    let mut discarded = 0usize;
+    let started = Instant::now();
     loop {
-        if shared.is_shutdown() {
+        if shared.is_shutdown()
+            || discarded >= DRAIN_MAX_BYTES
+            || started.elapsed() >= DRAIN_MAX_WAIT
+        {
             return;
         }
         match reader.read(&mut scratch) {
             Ok(0) => return, // EOF: nothing left to abandon
-            Ok(_) => {}
+            Ok(n) => discarded += n,
             Err(e)
                 if matches!(
                     e.kind(),
@@ -604,6 +685,29 @@ fn drain_discard(shared: &Shared, reader: &mut BufReader<TcpStream>) {
                 ) => {}
             Err(_) => return,
         }
+    }
+}
+
+/// Request id that makes the worker panic mid-solve, deliberately. The
+/// panic-containment path ([`Service::run`]'s `catch_unwind`) is the kind
+/// of code that only ever runs when something else is already wrong, so
+/// the integration suite live-fires it: a request carrying this id
+/// panics inside the worker exactly like a planner bug would, and the
+/// test asserts the typed `internal` reject frame comes back while the
+/// service keeps serving. The id is deliberately outside anything a
+/// well-behaved client would generate; a production client that does
+/// send it gets its one request rejected and nothing else.
+pub const PANIC_PROBE_ID: &str = "__xbarmap_panic_probe__";
+
+/// Best-effort text of a caught panic payload (`panic!("...")` carries
+/// `&str` or `String`; anything else is opaque).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
     }
 }
 
@@ -636,11 +740,17 @@ fn respond(shared: &Shared, job: &Job) -> String {
         Ok(req) => req,
         Err(e) => return error_response(shared, job.line_no, &e),
     };
+    // live-fire hook for the containment path — before the cache lookup,
+    // which anonymizes ids and could otherwise answer the probe from a
+    // previous solve of the same network
+    if req.id == PANIC_PROBE_ID {
+        panic!("panic probe: request id {PANIC_PROBE_ID}");
+    }
     // key computation clones + serializes the request, so skip it when
     // caching is off (--cache 0)
     let key = if shared.cache.enabled() { Some(PlanCache::key(&req)) } else { None };
     if let Some(cached) = key.as_deref().and_then(|k| shared.cache.get(k)) {
-        let mut stats = shared.stats.lock().unwrap();
+        let mut stats = shared.lock_stats();
         stats.cache_hits += 1;
         stats.served += 1;
         drop(stats);
@@ -648,11 +758,17 @@ fn respond(shared: &Shared, job: &Job) -> String {
         plan.id = req.id.clone();
         return plan.to_json().dumps();
     }
+    // the deadline arms when the solve starts, not when the request was
+    // read: queue wait under load is backpressure, not solver runaway
+    let deadline = match shared.deadline {
+        Some(budget) => Deadline::after(budget),
+        None => Deadline::NONE,
+    };
     let t0 = Instant::now();
-    match req.build().and_then(|p| p.plan()) {
+    match req.build().and_then(|p| p.plan_with_deadline(deadline)) {
         Ok(plan) => {
             let solve_s = t0.elapsed().as_secs_f64();
-            let mut stats = shared.stats.lock().unwrap();
+            let mut stats = shared.lock_stats();
             stats.served += 1;
             if stats.latencies.len() == LATENCY_WINDOW {
                 stats.latencies.pop_front();
@@ -673,6 +789,10 @@ fn respond(shared: &Shared, job: &Job) -> String {
                 }
             }
             plan.to_json().dumps()
+        }
+        Err(e) if e.is_deadline() => {
+            shared.note_reject(wire::RejectKind::Deadline);
+            wire::reject_frame(job.line_no, wire::RejectKind::Deadline, &e).dumps()
         }
         Err(e) => error_response(shared, job.line_no, &e),
     }
@@ -699,26 +819,30 @@ fn respond_cmd(shared: &Shared, j: &Json, line_no: usize) -> String {
 }
 
 fn error_response(shared: &Shared, line_no: usize, e: &PlanError) -> String {
-    shared.stats.lock().unwrap().errors += 1;
+    shared.lock_stats().errors += 1;
     wire::error_frame(line_no, e).dumps()
 }
 
-/// The process-wide SIGINT flag: installed once, tripped by ctrl-C.
-/// Std-only — on unix the handler registers through libc's `signal`
-/// (already linked by std; declared here rather than pulling in the libc
-/// crate), and the handler body is a single async-signal-safe store.
+/// The process-wide shutdown-signal flag: installed once, tripped by
+/// SIGINT (ctrl-C) or SIGTERM (what init systems and `kill` send by
+/// default — a supervised deployment must drain on it, not die mid-
+/// response). Std-only — on unix the handlers register through libc's
+/// `signal` (already linked by std; declared here rather than pulling in
+/// the libc crate), and the handler body is a single async-signal-safe
+/// store into the one flag both signals share.
 #[cfg(unix)]
 fn sigint_flag() -> &'static AtomicBool {
     static FLAG: AtomicBool = AtomicBool::new(false);
     static INSTALL: std::sync::Once = std::sync::Once::new();
-    extern "C" fn on_sigint(_signum: i32) {
+    extern "C" fn on_shutdown_signal(_signum: i32) {
         FLAG.store(true, Ordering::SeqCst);
     }
     extern "C" {
         fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
     }
     INSTALL.call_once(|| unsafe {
-        signal(2 /* SIGINT */, on_sigint);
+        signal(2 /* SIGINT */, on_shutdown_signal);
+        signal(15 /* SIGTERM */, on_shutdown_signal);
     });
     &FLAG
 }

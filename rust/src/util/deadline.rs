@@ -1,0 +1,86 @@
+//! Wall-clock deadlines for cooperative cancellation.
+//!
+//! The solver stack is budgeted in *nodes* ([`crate::ilp::Budget`]), which
+//! bounds work deterministically but not time: a pathological request can
+//! spend its whole node budget inside one sweep and pin a service worker
+//! for seconds. A [`Deadline`] is the wall-clock counterpart: a single
+//! `Option<Instant>` threaded by value through `opt::sweep`,
+//! `pack::counted` and `ilp::exact`, checked at the same cooperative
+//! checkpoints as the node budget. Expiry never corrupts state — solvers
+//! bail out exactly as they do on node exhaustion, and the caller (the
+//! planning front door) maps the expiry to a typed error.
+//!
+//! An unset deadline is free: [`Deadline::expired`] on [`Deadline::NONE`]
+//! never reads the clock, so batch/CLI paths that don't pass `--deadline-ms`
+//! are bit-identical to the pre-deadline code (the determinism suites pin
+//! this indirectly via the node-accounting equalities).
+
+use std::time::{Duration, Instant};
+
+/// A wall-clock deadline: either unset (never expires) or an [`Instant`]
+/// after which cooperative checkpoints report expiry.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Deadline(Option<Instant>);
+
+impl Deadline {
+    /// The unset deadline: never expires, never reads the clock.
+    pub const NONE: Deadline = Deadline(None);
+
+    /// A deadline `budget` from now.
+    pub fn after(budget: Duration) -> Deadline {
+        Deadline(Some(Instant::now() + budget))
+    }
+
+    /// A deadline at an explicit instant (lets one request's stages share
+    /// a single deadline instead of each stage re-adding the budget).
+    pub fn at(instant: Instant) -> Deadline {
+        Deadline(Some(instant))
+    }
+
+    /// Whether a deadline is set at all — checkpoints gate on this so the
+    /// unset case stays branch-cheap and clock-free.
+    pub fn is_set(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Whether the deadline has passed. Unset deadlines never expire and
+    /// never read the clock.
+    pub fn expired(&self) -> bool {
+        match self.0 {
+            Some(t) => Instant::now() >= t,
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unset_never_expires() {
+        assert!(!Deadline::NONE.expired());
+        assert!(!Deadline::NONE.is_set());
+        assert_eq!(Deadline::default(), Deadline::NONE);
+    }
+
+    #[test]
+    fn generous_budget_not_expired() {
+        let d = Deadline::after(Duration::from_secs(3600));
+        assert!(d.is_set());
+        assert!(!d.expired());
+    }
+
+    #[test]
+    fn past_instant_expired() {
+        let d = Deadline::at(Instant::now());
+        // an instant at-or-before now counts as expired
+        assert!(d.expired());
+    }
+
+    #[test]
+    fn zero_budget_expires_immediately() {
+        let d = Deadline::after(Duration::ZERO);
+        assert!(d.expired());
+    }
+}

@@ -1,0 +1,248 @@
+//! Deterministic fault injection for stream I/O.
+//!
+//! [`FaultyStream`] wraps any `Read + Write` transport (in the chaos
+//! suite: the client side of a TCP connection to the planning service)
+//! and perturbs the byte flow the way real networks and sick clients do —
+//! **short writes** (a line crosses many segments), **short reads**,
+//! **write stalls** (a slow sender that trickles mid-line), and a
+//! **mid-stream cut** (the peer vanishes with a partial line on the
+//! wire). Every perturbation is drawn from the seeded
+//! [`crate::util::prng::Rng`], so a failing seed replays bit-for-bit:
+//! the chaos harness (`tests/chaos_service.rs`) is a seed matrix, not a
+//! flake generator.
+//!
+//! The wrapper only *shapes* traffic; it never invents or reorders
+//! bytes. Everything forwarded reaches the inner stream unmodified and
+//! in order, so an un-cut faulty connection still carries a
+//! byte-identical request stream — which is exactly what lets the chaos
+//! suite assert oracle equality through arbitrary fragmentation.
+
+use crate::util::prng::Rng;
+use std::io::{ErrorKind, Read, Write};
+use std::time::Duration;
+
+/// What to inject, and how hard. The default plan injects nothing —
+/// enable each fault class explicitly so tests state what they exercise.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// cap on bytes forwarded per `write` call (0 = no cap): every write
+    /// of a longer buffer becomes a short write of 1..=cap bytes, length
+    /// drawn from the seed
+    pub max_write: usize,
+    /// cap on bytes requested per `read` call (0 = no cap): forces short
+    /// reads of 1..=cap bytes
+    pub max_read: usize,
+    /// probability (per `write` call) of sleeping [`FaultPlan::stall`]
+    /// before forwarding — a trickling sender that parks mid-line
+    pub stall_chance: f64,
+    /// how long a stalled write sleeps
+    pub stall: Duration,
+    /// total bytes after which the write side is cut: the forwarded
+    /// prefix stops at the boundary (possibly mid-line) and every later
+    /// write fails with [`ErrorKind::BrokenPipe`] so the caller drops the
+    /// transport (None = never cut)
+    pub cut_after: Option<usize>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            max_write: 0,
+            max_read: 0,
+            stall_chance: 0.0,
+            stall: Duration::from_millis(1),
+            cut_after: None,
+        }
+    }
+}
+
+/// A `Read + Write` transport with seed-deterministic fault injection
+/// (see the module docs).
+#[derive(Debug)]
+pub struct FaultyStream<S> {
+    inner: S,
+    rng: Rng,
+    plan: FaultPlan,
+    written: usize,
+    cut: bool,
+}
+
+impl<S> FaultyStream<S> {
+    /// Wrap `inner`, drawing every fault decision from `seed`.
+    pub fn new(inner: S, seed: u64, plan: FaultPlan) -> FaultyStream<S> {
+        FaultyStream { inner, rng: Rng::new(seed), plan, written: 0, cut: false }
+    }
+
+    /// Total bytes actually forwarded to the inner stream's write side.
+    pub fn written(&self) -> usize {
+        self.written
+    }
+
+    /// Whether the cut threshold has been crossed.
+    pub fn is_cut(&self) -> bool {
+        self.cut
+    }
+
+    /// The wrapped transport back (e.g. to half-close a socket cleanly
+    /// after the faulted write phase).
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+
+    /// Borrow the wrapped transport (e.g. to `shutdown` a socket without
+    /// giving up the wrapper).
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+}
+
+impl<S: Write> Write for FaultyStream<S> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if self.cut {
+            return Err(std::io::Error::new(ErrorKind::BrokenPipe, "fault: connection cut"));
+        }
+        if buf.is_empty() {
+            return self.inner.write(buf);
+        }
+        if self.plan.stall_chance > 0.0 && self.rng.chance(self.plan.stall_chance) {
+            std::thread::sleep(self.plan.stall);
+        }
+        let mut n = buf.len();
+        if self.plan.max_write > 0 && n > 1 {
+            n = self.rng.range(1, n.min(self.plan.max_write));
+        }
+        if let Some(cut) = self.plan.cut_after {
+            let room = cut.saturating_sub(self.written);
+            if room == 0 {
+                self.cut = true;
+                return Err(std::io::Error::new(ErrorKind::BrokenPipe, "fault: connection cut"));
+            }
+            n = n.min(room);
+        }
+        let n = self.inner.write(&buf[..n])?;
+        self.written += n;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+impl<S: Read> Read for FaultyStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if buf.is_empty() {
+            return self.inner.read(buf);
+        }
+        let mut n = buf.len();
+        if self.plan.max_read > 0 && n > 1 {
+            n = self.rng.range(1, n.min(self.plan.max_read));
+        }
+        self.inner.read(&mut buf[..n])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// In-memory transport: reads drain `input`, writes append to `sunk`.
+    #[derive(Debug, Default)]
+    struct Pipe {
+        input: Vec<u8>,
+        pos: usize,
+        sunk: Vec<u8>,
+    }
+
+    impl Read for Pipe {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            let n = buf.len().min(self.input.len() - self.pos);
+            buf[..n].copy_from_slice(&self.input[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    impl Write for Pipe {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.sunk.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn write_all_chunks(s: &mut FaultyStream<Pipe>, payload: &[u8]) -> std::io::Result<()> {
+        let mut off = 0;
+        while off < payload.len() {
+            off += s.write(&payload[off..])?;
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn short_writes_preserve_bytes_and_order() {
+        let payload: Vec<u8> = (0u8..=255).cycle().take(4096).collect();
+        let plan = FaultPlan { max_write: 7, ..FaultPlan::default() };
+        let mut s = FaultyStream::new(Pipe::default(), 42, plan);
+        write_all_chunks(&mut s, &payload).unwrap();
+        assert_eq!(s.written(), payload.len());
+        assert_eq!(s.into_inner().sunk, payload, "shaping must not corrupt the stream");
+    }
+
+    #[test]
+    fn short_reads_preserve_bytes_and_order() {
+        let payload: Vec<u8> = (0u8..=255).cycle().take(1024).collect();
+        let pipe = Pipe { input: payload.clone(), ..Pipe::default() };
+        let plan = FaultPlan { max_read: 5, ..FaultPlan::default() };
+        let mut s = FaultyStream::new(pipe, 7, plan);
+        let mut got = Vec::new();
+        s.read_to_end(&mut got).unwrap();
+        assert_eq!(got, payload);
+    }
+
+    #[test]
+    fn cut_stops_exactly_at_the_boundary() {
+        let payload = vec![9u8; 1000];
+        let plan = FaultPlan { max_write: 64, cut_after: Some(300), ..FaultPlan::default() };
+        let mut s = FaultyStream::new(Pipe::default(), 3, plan);
+        let err = write_all_chunks(&mut s, &payload).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::BrokenPipe);
+        assert!(s.is_cut());
+        assert_eq!(s.written(), 300, "forwarded prefix must stop at the cut");
+        assert_eq!(s.get_ref().sunk.len(), 300);
+        // and the cut is terminal
+        assert!(matches!(s.write(b"x"), Err(e) if e.kind() == ErrorKind::BrokenPipe));
+    }
+
+    #[test]
+    fn same_seed_same_fragmentation() {
+        let payload = vec![1u8; 512];
+        let plan = FaultPlan { max_write: 9, ..FaultPlan::default() };
+        let frag = |seed: u64| -> Vec<usize> {
+            let mut s = FaultyStream::new(Pipe::default(), seed, plan.clone());
+            let mut sizes = Vec::new();
+            let mut off = 0;
+            while off < payload.len() {
+                let n = s.write(&payload[off..]).unwrap();
+                sizes.push(n);
+                off += n;
+            }
+            sizes
+        };
+        assert_eq!(frag(11), frag(11), "fault schedule must replay from the seed");
+        assert_ne!(frag(11), frag(12), "different seeds should fragment differently");
+    }
+
+    #[test]
+    fn default_plan_is_transparent() {
+        let payload = vec![5u8; 256];
+        let mut s = FaultyStream::new(Pipe::default(), 1, FaultPlan::default());
+        assert_eq!(s.write(&payload).unwrap(), payload.len(), "no cap: one write, whole buffer");
+        let pipe = Pipe { input: payload.clone(), ..Pipe::default() };
+        let mut s = FaultyStream::new(pipe, 1, FaultPlan::default());
+        let mut buf = vec![0u8; 256];
+        assert_eq!(s.read(&mut buf).unwrap(), 256);
+    }
+}

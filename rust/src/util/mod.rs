@@ -3,6 +3,8 @@
 //! implemented here (see DESIGN.md §3 substitutions).
 pub mod benchkit;
 pub mod cli;
+pub mod deadline;
+pub mod fault;
 pub mod json;
 pub mod mpmc;
 pub mod par;

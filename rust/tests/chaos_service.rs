@@ -1,0 +1,212 @@
+//! Chaos: the planning service under deterministic fault injection
+//! ([`xbarmap::util::fault`]) — seeded short reads, short writes, write
+//! stalls and mid-line disconnects shape the client side of real
+//! loopback connections while healthy traffic runs alongside.
+//!
+//! Invariants proved per seed, under a watchdog so a regression shows up
+//! as a test failure and never as a hung suite:
+//!
+//! * the service never deadlocks: every scenario finishes inside the
+//!   watchdog budget, every connection reaches EOF;
+//! * no response owed to a healthy connection is lost: un-faulted
+//!   connections stay **byte-identical** to the [`plan::serve_jsonl`]
+//!   oracle while the chaos runs next to them;
+//! * the fault layer only shapes traffic, so even a *faulted* (but
+//!   uncut) connection's responses match the oracle exactly, and a *cut*
+//!   connection's responses match the oracle applied to precisely the
+//!   byte prefix that made it out before the cut.
+//!
+//! The seed matrix is fixed (deterministic PRNG ⇒ bit-identical
+//! fragmentation per seed); CI runs it at `XBARMAP_SWEEP_THREADS=1` and
+//! `=8` so both the serial and the parallel sweep paths sit under it.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+use xbarmap::plan::{self, wire};
+use xbarmap::service::{Service, ServiceConfig, ServiceHandle};
+use xbarmap::util::fault::{FaultPlan, FaultyStream};
+
+/// Fixed fault-seed matrix — every seed yields a distinct, reproducible
+/// fragmentation/stall/cut pattern.
+const SEEDS: &[u64] = &[1, 2, 3, 5, 8, 13, 21, 34];
+
+/// A scenario that hasn't finished by now has deadlocked or lost a
+/// response (the whole stream is a handful of sub-second solves).
+const SCENARIO_TIMEOUT: Duration = Duration::from_secs(120);
+
+fn start() -> (ServiceHandle, SocketAddr, thread::JoinHandle<wire::StatsSnapshot>) {
+    let svc = Service::bind(&ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        queue_capacity: 4,
+        cache_capacity: 16,
+        ..ServiceConfig::default()
+    })
+    .unwrap();
+    let addr = svc.local_addr().unwrap();
+    let handle = svc.handle();
+    let join = thread::spawn(move || svc.run().unwrap());
+    (handle, addr, join)
+}
+
+/// What `xbarmap plan` would answer for the same byte stream.
+fn oracle(input: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    plan::serve_jsonl(input.as_bytes(), &mut out).unwrap();
+    String::from_utf8(out).unwrap().lines().map(str::to_string).collect()
+}
+
+/// One client's request stream (ASCII only, so byte offsets are char
+/// offsets and a cut prefix is always valid UTF-8): two cheap fixed-tile
+/// solves, a blank line, a malformed line, a tiny grid sweep.
+fn request_stream(c: u64) -> String {
+    format!(
+        concat!(
+            "{{\"v\":1,\"id\":\"s{c}-a\",\"net\":{{\"zoo\":\"lenet\"}},\"tiles\":{{\"fixed\":[64,64]}}}}\n",
+            "\n",
+            "{{\"v\":1,\"id\":\"s{c}-b\",\"net\":{{\"zoo\":\"lenet\"}},\"tiles\":{{\"fixed\":[128,128]}},\"discipline\":\"pipeline\"}}\n",
+            "chaos, not json {c}\n",
+            "{{\"v\":1,\"id\":\"s{c}-g\",\"net\":{{\"zoo\":\"lenet\"}},\"tiles\":{{\"grid\":{{\"row_exp\":[6,8],\"aspects\":[1,2]}}}}}}\n",
+        ),
+        c = c
+    )
+}
+
+/// Drive `input` through a connection whose **write side** is shaped by
+/// `plan` (seeded). Returns the bytes that actually went out before any
+/// cut, and every response line read back (read side also shaped, with
+/// short reads, but never cut — responses owed for delivered bytes must
+/// all arrive).
+fn drive_faulty(addr: SocketAddr, input: &str, seed: u64, plan: FaultPlan) -> (usize, Vec<String>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    let read_half = stream.try_clone().unwrap();
+    let mut writer = FaultyStream::new(stream, seed, plan);
+    match writer.write_all(input.as_bytes()) {
+        Ok(()) => {}
+        Err(e) => assert!(writer.is_cut(), "only the injected cut may fail the write: {e}"),
+    }
+    let written = writer.written();
+    // half-close so the service sees EOF exactly where the stream ended
+    writer.get_ref().shutdown(std::net::Shutdown::Write).unwrap();
+    let read_faults = FaultPlan { max_read: 5, ..FaultPlan::default() };
+    let reader = BufReader::new(FaultyStream::new(read_half, seed.wrapping_mul(2654435761), read_faults));
+    let got: Vec<String> = reader.lines().collect::<Result<_, _>>().unwrap();
+    (written, got)
+}
+
+/// Plain, un-faulted client — the tenant whose bytes must never change.
+fn drive_healthy(addr: SocketAddr, input: &str) -> Vec<String> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(input.as_bytes()).unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    BufReader::new(stream).lines().collect::<Result<_, _>>().unwrap()
+}
+
+/// Run `f` to completion or fail loudly: a deadlock anywhere in the
+/// service (lost wakeup, worker wedged, reader parked forever) would
+/// otherwise hang the suite instead of failing it. std has no
+/// join-with-timeout, so completion is signalled over a channel.
+fn with_watchdog(name: String, f: impl FnOnce() + Send + 'static) {
+    let (tx, rx) = mpsc::channel();
+    let t = thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(SCENARIO_TIMEOUT) {
+        // finished or panicked (sender dropped) — join propagates either
+        Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => t.join().unwrap(),
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("{name}: not finished after {SCENARIO_TIMEOUT:?} — deadlock or lost response")
+        }
+    }
+}
+
+/// One seed's worth of chaos: a healthy tenant, a fragmenting tenant and
+/// a mid-line-cut tenant share the service concurrently; every
+/// connection's responses are pinned to the oracle of exactly the bytes
+/// it delivered.
+fn scenario(seed: u64) {
+    let (handle, addr, join) = start();
+
+    let frag_plan = FaultPlan {
+        max_write: 3,
+        max_read: 5,
+        stall_chance: 0.05,
+        stall: Duration::from_millis(1),
+        ..FaultPlan::default()
+    };
+    let cut_input = request_stream(100 + seed);
+    // a different prefix each seed, never the whole stream
+    let cut_at = (seed as usize).wrapping_mul(37) % cut_input.len();
+    let cut_plan = FaultPlan { max_write: 7, cut_after: Some(cut_at), ..FaultPlan::default() };
+
+    let healthy = thread::spawn(move || {
+        let input = request_stream(seed);
+        let got = drive_healthy(addr, &input);
+        assert_eq!(got, oracle(&input), "seed {seed}: healthy connection diverged from oracle");
+    });
+    let fragged = thread::spawn(move || {
+        let input = request_stream(10 + seed);
+        let (written, got) = drive_faulty(addr, &input, seed, frag_plan);
+        assert_eq!(written, input.len(), "uncut writer must deliver everything");
+        assert_eq!(got, oracle(&input), "seed {seed}: faulted-uncut connection diverged");
+    });
+    let cut = thread::spawn(move || {
+        let (written, got) = drive_faulty(addr, &cut_input, seed, cut_plan);
+        assert_eq!(written, cut_at, "cut must land exactly at the configured byte");
+        // the service saw precisely this prefix (possibly ending mid-
+        // line, served like any unterminated final line)
+        let delivered = &cut_input[..written];
+        assert_eq!(got, oracle(delivered), "seed {seed}: cut connection owed the prefix's responses");
+    });
+    healthy.join().unwrap();
+    fragged.join().unwrap();
+    cut.join().unwrap();
+
+    handle.shutdown();
+    let stats = join.join().unwrap();
+    assert_eq!(stats.connections, 3);
+    assert_eq!(stats.panics, 0);
+    assert_eq!(stats.timeouts, 0);
+}
+
+#[test]
+fn chaos_seed_matrix_never_hangs_and_never_loses_healthy_responses() {
+    for &seed in SEEDS {
+        with_watchdog(format!("chaos seed {seed}"), move || scenario(seed));
+    }
+}
+
+#[test]
+fn storm_of_cut_connections_leaves_the_service_serving() {
+    with_watchdog("cut storm".into(), || {
+        let (handle, addr, join) = start();
+        // a wave of connections that all disconnect mid-line, concurrently
+        let wave: Vec<_> = (0..8u64)
+            .map(|i| {
+                thread::spawn(move || {
+                    let input = request_stream(i);
+                    let cut_at = (i as usize + 1) * input.len() / 10;
+                    let plan =
+                        FaultPlan { max_write: 4, cut_after: Some(cut_at), ..FaultPlan::default() };
+                    let (written, got) = drive_faulty(addr, &input, i, plan);
+                    assert_eq!(got, oracle(&input[..written]));
+                })
+            })
+            .collect();
+        for t in wave {
+            t.join().unwrap();
+        }
+        // after the storm: a fresh healthy connection is served exactly
+        let input = request_stream(99);
+        assert_eq!(drive_healthy(addr, &input), oracle(&input), "service degraded after storm");
+        handle.shutdown();
+        let stats = join.join().unwrap();
+        assert_eq!(stats.connections, 9);
+        assert_eq!(stats.panics, 0);
+    });
+}

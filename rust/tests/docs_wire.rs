@@ -80,7 +80,7 @@ fn every_wire_md_jsonl_example_parses_against_the_reference_codec() {
             if let Some(token) = j.get("reject") {
                 let token = token.as_str().expect("reject token must be a string");
                 assert!(
-                    matches!(token, "over-quota" | "over-inflight"),
+                    matches!(token, "over-quota" | "over-inflight" | "internal" | "deadline"),
                     "unspecified reject token '{token}': {line}"
                 );
                 rejects += 1;
@@ -100,7 +100,7 @@ fn every_wire_md_jsonl_example_parses_against_the_reference_codec() {
     assert!(requests >= 5, "expected >= 5 request examples, found {requests}");
     assert!(plans >= 1, "expected a plan example, found {plans}");
     assert!(errors >= 2, "expected >= 2 plain error examples, found {errors}");
-    assert!(rejects >= 2, "expected both typed reject examples, found {rejects}");
+    assert!(rejects >= 4, "expected all four typed reject examples, found {rejects}");
     assert_eq!(stats, 1, "expected exactly one stats frame example");
     assert_eq!(metrics, 1, "expected exactly one metrics frame example");
     assert!(cmds >= 2, "expected the stats and metrics command examples, found {cmds}");

@@ -168,7 +168,7 @@ fn max_items_guard_falls_back_to_greedy() {
         &blocks,
         tile,
         Discipline::Dense,
-        Budget { max_nodes: 1_000_000, max_items: 10 },
+        Budget { max_nodes: 1_000_000, max_items: 10, ..Default::default() },
     );
     assert_eq!(r.nodes, 0, "search must be skipped above max_items");
     placement::validate(&r.packing).unwrap();

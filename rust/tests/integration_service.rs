@@ -4,7 +4,10 @@
 //! `metrics` commands answer in stream order, over-quota and
 //! over-inflight requests get the typed reject frames without disturbing
 //! in-quota connections, the `--metrics-out` writer leaves a
-//! bench-schema snapshot, and shutdown drains cleanly.
+//! bench-schema snapshot, shutdown drains cleanly, a panicking solve is
+//! contained to its one request (typed `internal` reject, worker
+//! survives), and a deadline-exceeding solve gets the typed `deadline`
+//! reject while light requests keep completing oracle-identically.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -346,11 +349,97 @@ fn metrics_out_writes_a_bench_schema_snapshot_on_shutdown() {
     assert_eq!(j.get("serve/cache_entries").and_then(|v| v.as_usize()), Some(1));
     assert_eq!(j.get("serve/inflight").and_then(|v| v.as_usize()), Some(0));
     assert_eq!(j.get("serve/queue_depth").and_then(|v| v.as_usize()), Some(0));
-    // gauges only — monotonic counters would read as regressions when two
-    // snapshots are compared through `xbarmap bench-gate`
+    // fault counters appear (all zero on a healthy run — which is what
+    // makes them bench-gate safe: zero baselines never gate)
+    assert_eq!(j.get("serve/panics").and_then(|v| v.as_usize()), Some(0));
+    assert_eq!(j.get("serve/timeouts").and_then(|v| v.as_usize()), Some(0));
+    assert_eq!(j.get("serve/rejected_internal").and_then(|v| v.as_usize()), Some(0));
+    // but no throughput counters — those would read as regressions when
+    // two snapshots are compared through `xbarmap bench-gate`
     assert!(j.get("serve/served").is_none());
     assert!(j.get("serve/errors").is_none());
     let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn panic_probe_is_contained_to_its_request() {
+    // ONE worker: the same thread that panicked must answer the rest of
+    // the stream, or the test deadlocks — the strongest possible form of
+    // "the worker survives"
+    let (handle, addr, join) = start(1, 8, 0);
+    let probe = format!(
+        "{{\"v\":1,\"id\":\"{}\",\"net\":{{\"zoo\":\"lenet\"}},\"tiles\":{{\"fixed\":[64,64]}}}}",
+        xbarmap::service::PANIC_PROBE_ID
+    );
+    let follow = r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"fixed":[64,64]}}"#;
+    let input = format!("{probe}\n{follow}\n{}\n", r#"{"v":1,"cmd":"stats"}"#);
+    let got = drive(addr, &input);
+    assert_eq!(got.len(), 3, "panic must cost exactly one response: {got:?}");
+    let reject = json::parse(&got[0]).unwrap();
+    assert_eq!(reject.get("v").and_then(|v| v.as_usize()), Some(1));
+    assert_eq!(reject.get("line").and_then(|v| v.as_usize()), Some(1));
+    assert_eq!(reject.get("reject").and_then(|r| r.as_str()), Some("internal"));
+    assert!(
+        reject.get("error").and_then(|e| e.as_str()).unwrap().starts_with("planner panicked: "),
+        "{reject:?}"
+    );
+    // the follow-up on the SAME connection, solved by the surviving
+    // worker, is byte-identical to the file endpoint
+    assert_eq!(got[1], oracle(&format!("{follow}\n"))[0]);
+    let snap = wire::stats_from_json(&json::parse(&got[2]).unwrap()).unwrap();
+    assert_eq!(snap.panics, 1);
+    assert_eq!(snap.rejected_internal, 1);
+    assert_eq!(snap.timeouts, 0);
+    assert_eq!(snap.errors, 1);
+    assert_eq!(snap.served, 1);
+    // a later connection is equally untouched
+    let input2 = three_line_stream(9);
+    assert_eq!(drive(addr, &input2), oracle(&input2));
+    handle.shutdown();
+    let stats = join.join().unwrap();
+    assert_eq!(stats.panics, 1);
+    assert_eq!(stats.rejected_internal, 1);
+}
+
+#[test]
+fn deadline_exceeding_solve_gets_the_typed_frame_while_light_requests_complete() {
+    // 25 ms is orders of magnitude above a lenet fixed-tile solve and
+    // orders of magnitude below the full resnet18 LPS grid sweep, so
+    // both outcomes are deterministic despite the wall clock
+    let (handle, addr, join) = start_with(ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_capacity: 8,
+        cache_capacity: 0,
+        deadline: Some(std::time::Duration::from_millis(25)),
+        ..ServiceConfig::default()
+    });
+    let heavy = r#"{"v":1,"net":{"zoo":"resnet18"},"engine":"lps","ilp_nodes":2000000,"discipline":"pipeline","tiles":{"grid":{"row_exp":[6,13],"aspects":[1,2,3,4,5,6,7,8]}}}"#;
+    let light = r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"fixed":[64,64]}}"#;
+    let input = format!("{heavy}\n{light}\n{}\n", r#"{"v":1,"cmd":"stats"}"#);
+    let got = drive(addr, &input);
+    assert_eq!(got.len(), 3);
+    let reject = json::parse(&got[0]).unwrap();
+    assert_eq!(reject.get("reject").and_then(|r| r.as_str()), Some("deadline"));
+    assert_eq!(reject.get("line").and_then(|v| v.as_usize()), Some(1));
+    assert!(
+        reject.get("error").and_then(|e| e.as_str()).unwrap().starts_with("deadline exceeded"),
+        "{reject:?}"
+    );
+    // the light follow-up on the same connection finishes well inside the
+    // budget and matches the (deadline-free) file endpoint byte for byte
+    assert_eq!(got[1], oracle(&format!("{light}\n"))[0]);
+    let snap = wire::stats_from_json(&json::parse(&got[2]).unwrap()).unwrap();
+    assert_eq!(snap.timeouts, 1);
+    assert_eq!(snap.panics, 0);
+    assert_eq!(snap.errors, 1);
+    assert_eq!(snap.served, 1);
+    // other connections with light work are unaffected
+    let input2 = format!("{light}\n");
+    assert_eq!(drive(addr, &input2), oracle(&input2));
+    handle.shutdown();
+    let stats = join.join().unwrap();
+    assert_eq!(stats.timeouts, 1);
 }
 
 #[test]
