@@ -11,7 +11,13 @@
 //!   warmed, so iterations measure the admission/queue/cache/re-stamp
 //!   path the multi-tenant steady state lives on;
 //! * `serve/roundtrip/cmd-stats` — the in-band stats command, the floor
-//!   the wire + queue machinery sets under any response.
+//!   the wire + queue machinery sets under any response;
+//! * `serve/roundtrip/lenet-fixed256/warehouse-hit` — LRU off, plan
+//!   persisted by a *previous* service lifetime: every iteration pays the
+//!   warm-boot disk tier (index lookup + segment read + CRC re-verify);
+//! * `serve/roundtrip/lenet-grid68/coalesced-herd` — four clients fire
+//!   the same canonical request concurrently with caching off, so each
+//!   iteration is one solve plus three single-flight coalesced copies.
 //!
 //! Round trips go through the crate's retrying client
 //! ([`xbarmap::plan::client`]) — the same transport a tenant fleet and
@@ -24,19 +30,24 @@ use xbarmap::plan::wire;
 use xbarmap::service::{Service, ServiceConfig, ServiceHandle};
 use xbarmap::util::benchkit::Bench;
 
+fn start_with(
+    cfg: ServiceConfig,
+) -> (ServiceHandle, SocketAddr, std::thread::JoinHandle<wire::StatsSnapshot>) {
+    let svc = Service::bind(&cfg).expect("bind ephemeral service");
+    let addr = svc.local_addr().unwrap();
+    let handle = svc.handle();
+    let join = std::thread::spawn(move || svc.run().unwrap());
+    (handle, addr, join)
+}
+
 fn start(cache: usize) -> (ServiceHandle, SocketAddr, std::thread::JoinHandle<wire::StatsSnapshot>) {
-    let svc = Service::bind(&ServiceConfig {
+    start_with(ServiceConfig {
         addr: "127.0.0.1:0".into(),
         workers: 2,
         queue_capacity: 16,
         cache_capacity: cache,
         ..ServiceConfig::default()
     })
-    .expect("bind ephemeral service");
-    let addr = svc.local_addr().unwrap();
-    let handle = svc.handle();
-    let join = std::thread::spawn(move || svc.run().unwrap());
-    (handle, addr, join)
 }
 
 fn connect(addr: SocketAddr) -> Client {
@@ -86,6 +97,66 @@ fn main() {
         handle.shutdown();
         let stats = join.join().unwrap();
         assert!(stats.cache_hits > 0, "cache-hit row never hit the cache");
+    }
+
+    // warm boot: a prior service lifetime solved and persisted the plan;
+    // this lifetime has no LRU, so every round trip reads the warehouse
+    // (index lookup + segment read + CRC re-verify + verbatim respond)
+    {
+        let dir = std::env::temp_dir().join(format!("xbarmap-bench-wh-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let warehoused = || ServiceConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 2,
+            queue_capacity: 16,
+            cache_capacity: 0,
+            warehouse: Some(dir.clone()),
+            ..ServiceConfig::default()
+        };
+        {
+            let (handle, addr, join) = start_with(warehoused());
+            let mut client = connect(addr);
+            roundtrip(&mut client, plan_req, &mut line); // solve + persist
+            drop(client);
+            handle.shutdown();
+            let stats = join.join().unwrap();
+            assert_eq!(stats.warehouse_writes, 1, "the solve must persist before the reboot");
+        }
+        let (handle, addr, join) = start_with(warehoused());
+        let mut client = connect(addr);
+        b.run("serve/roundtrip/lenet-fixed256/warehouse-hit", || {
+            roundtrip(&mut client, plan_req, &mut line)
+        });
+        assert!(line.contains("\"best\""), "expected a plan, got: {line}");
+        drop(client);
+        handle.shutdown();
+        let stats = join.join().unwrap();
+        assert!(stats.warehouse_hits > 0, "warehouse-hit row never read the store");
+        assert_eq!(stats.warehouse_writes, 0, "warm boot must not re-solve");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // thundering herd: four clients fire the same canonical request at
+    // once with no cache and no warehouse — one solve, three coalesced
+    {
+        let (handle, addr, join) = start(0);
+        let mut clients: Vec<Client> = (0..4).map(|_| connect(addr)).collect();
+        let herd_req =
+            r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"grid":{"row_exp":[6,8],"aspects":[1,2]}}}"#;
+        b.run("serve/roundtrip/lenet-grid68/coalesced-herd", || {
+            std::thread::scope(|s| {
+                let waves: Vec<_> = clients
+                    .iter_mut()
+                    .map(|c| s.spawn(move || c.roundtrip_line(herd_req).expect("herd trip").len()))
+                    .collect();
+                waves.into_iter().map(|w| w.join().expect("herd client")).sum::<usize>()
+            })
+        });
+        drop(clients);
+        handle.shutdown();
+        let stats = join.join().unwrap();
+        assert!(stats.coalesced > 0, "herd row never coalesced");
+        assert_eq!(stats.cache_hits, 0);
     }
 
     b.emit_jsonl();

@@ -67,7 +67,12 @@
 //! (`"reject":"internal"`, worker survives), and `--deadline-ms` arms a
 //! per-solve wall-clock [`util::deadline::Deadline`] threaded through the
 //! sweep and kernel checkpoints (`"reject":"deadline"`). [`plan::client`]
-//! is the matching retrying client. Per connection, responses are
+//! is the matching retrying client. Behind the LRU, [`store`] adds a
+//! persistent second cache tier — an append-only on-disk plan warehouse
+//! (`--warehouse DIR`) with torn-tail-tolerant boot, offline precompute
+//! (`xbarmap warehouse precompute`) and compaction — and concurrent
+//! misses on one canonical key are single-flight coalesced so a
+//! thundering herd costs one solve. Per connection, responses are
 //! byte-identical to piping the same stream through
 //! [`plan::serve_jsonl`]. The wire protocol is specified normatively in
 //! `docs/WIRE.md`; `docs/ARCHITECTURE.md` maps the paper's equations to
@@ -123,6 +128,7 @@ pub mod perf;
 pub mod opt;
 pub mod plan;
 pub mod service;
+pub mod store;
 #[allow(missing_docs)]
 pub mod sim;
 #[allow(missing_docs)]

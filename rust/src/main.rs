@@ -9,6 +9,10 @@
 //! * `info`       — show a network's layers, WM shapes and reuse factors;
 //! * `serve`      — end-to-end serving through the AOT crossbar artifact, or
 //!   with `--plans` the long-running TCP/JSONL planning service;
+//! * `warehouse`  — manage the persistent plan store: `precompute` prices
+//!   the zoo × common-grid cross-product offline into a warehouse
+//!   directory, `compact` rewrites live records into fresh segments,
+//!   `stat` reports what a boot would load;
 //! * `bench-gate` — compare BENCH_*.json medians against a baseline.
 //!
 //! `sweep` and `pack` are thin shims over the [`xbarmap::plan`] front door;
@@ -23,7 +27,8 @@ use xbarmap::opt::Engine;
 use xbarmap::pack::Discipline;
 use xbarmap::plan::{self, MapRequest, Replication};
 use xbarmap::report;
-use xbarmap::service::{Service, ServiceConfig};
+use xbarmap::service::{PlanCache, Service, ServiceConfig};
+use xbarmap::store::{Warehouse, WarehouseConfig};
 use xbarmap::util::benchkit;
 use xbarmap::util::cli::{usage, Args, OptSpec};
 use xbarmap::util::json;
@@ -37,6 +42,7 @@ const SUBCOMMANDS: &[(&str, &str)] = &[
     ("plan", "stream JSONL mapping requests -> JSONL plans (v1 wire format)"),
     ("info", "describe a zoo network"),
     ("serve", "serve inference (--plans: long-running TCP/JSONL planning service)"),
+    ("warehouse", "manage the persistent plan store (precompute | compact | stat)"),
     ("bench-gate", "fail when bench medians regress past a baseline"),
 ];
 
@@ -65,6 +71,7 @@ fn run(argv: &[String]) -> Result<()> {
         "plan" => cmd_plan(rest),
         "info" => cmd_info(rest),
         "serve" => cmd_serve(rest),
+        "warehouse" => cmd_warehouse(rest),
         "bench-gate" => cmd_bench_gate(rest),
         "--help" | "help" | "-h" => {
             print!("{}", usage("xbarmap", "ANN-to-crossbar mapping optimizer", SUBCOMMANDS, &[]));
@@ -370,6 +377,7 @@ fn cmd_serve_plans(argv: &[String]) -> Result<()> {
         OptSpec { name: "deadline-ms", help: "wall-clock budget per solve in milliseconds before a typed deadline reject (0 = unbounded)", value: Some("MS"), default: Some("0") },
         OptSpec { name: "metrics-out", help: "periodically write the gauge snapshot (BENCH_*.json schema) to FILE", value: Some("FILE"), default: None },
         OptSpec { name: "metrics-interval", help: "seconds between metrics-file rewrites", value: Some("SECS"), default: Some("10") },
+        OptSpec { name: "warehouse", help: "persistent plan store directory (second cache tier behind the LRU)", value: Some("DIR"), default: None },
     ];
     let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
     // upper bound keeps Duration::from_secs_f64 panic-free (it aborts past
@@ -398,9 +406,16 @@ fn cmd_serve_plans(argv: &[String]) -> Result<()> {
             let ms = a.req_usize("deadline-ms").map_err(|e| anyhow!(e))?;
             (ms > 0).then(|| std::time::Duration::from_millis(ms as u64))
         },
+        warehouse: a.get("warehouse").map(std::path::PathBuf::from),
         watch_sigint: true,
     };
     let service = Service::bind(&cfg).map_err(|e| anyhow!("bind {}: {e}", cfg.addr))?;
+    if let Some(r) = service.warehouse_report() {
+        eprintln!(
+            "warehouse: {} plan(s) across {} segment(s) ({} bytes), {} superseded, {} corrupt line(s) skipped, {} torn tail(s) truncated ({} bytes)",
+            r.records, r.segments, r.bytes, r.superseded, r.corrupt, r.truncated_tails, r.truncated_bytes,
+        );
+    }
     eprintln!(
         "xbarmap planning service listening on {} (queue {}, cache {}{}, quota {}, inflight cap {}, deadline {}, SIGINT/SIGTERM drain and exit)",
         service.local_addr()?,
@@ -426,6 +441,151 @@ fn cmd_serve_plans(argv: &[String]) -> Result<()> {
         stats.connections,
         stats.plan_p50_s * 1e3,
         stats.plan_p95_s * 1e3,
+    );
+    Ok(())
+}
+
+/// Offline management of the persistent plan store (`serve --plans
+/// --warehouse DIR`): `precompute` prices a zoo × grid cross-product and
+/// appends each plan under its canonical request key, `compact` rewrites
+/// live records into fresh segments, `stat` reports what a boot would
+/// load without touching the files.
+fn cmd_warehouse(argv: &[String]) -> Result<()> {
+    match argv.first().map(String::as_str) {
+        Some("precompute") => cmd_warehouse_precompute(&argv[1..]),
+        Some("compact") => cmd_warehouse_compact(&argv[1..]),
+        Some("stat") => cmd_warehouse_stat(&argv[1..]),
+        _ => Err(anyhow!(
+            "usage: xbarmap warehouse <precompute|compact|stat> --dir DIR [options]"
+        )),
+    }
+}
+
+fn cmd_warehouse_precompute(argv: &[String]) -> Result<()> {
+    let specs = [
+        OptSpec { name: "dir", help: "warehouse directory (created if absent)", value: Some("DIR"), default: None },
+        OptSpec { name: "nets", help: "comma-separated zoo networks (default: the whole zoo)", value: Some("CSV"), default: None },
+        OptSpec { name: "disciplines", help: "comma-separated packing disciplines", value: Some("CSV"), default: Some("dense,pipeline") },
+        OptSpec { name: "row-exp", help: "grid base-dimension exponents LO,HI (2^LO..2^HI)", value: Some("LO,HI"), default: Some("6,13") },
+        OptSpec { name: "aspects", help: "max aspect ratio (1..=8)", value: Some("N"), default: Some("8") },
+        OptSpec { name: "threads", help: "solver threads across requests (0 = auto)", value: Some("N"), default: Some("0") },
+    ];
+    let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
+    let dir = a.req("dir").map_err(|e| anyhow!(e))?;
+
+    let nets: Vec<String> = match a.get("nets") {
+        Some(csv) => csv.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+        None => zoo::NAMES.iter().map(|s| s.to_string()).collect(),
+    };
+    for net in &nets {
+        if zoo::by_name(net).is_none() {
+            return Err(anyhow!("unknown network '{net}' (try {})", zoo::NAMES.join("|")));
+        }
+    }
+    let disciplines: Vec<Discipline> = a
+        .req("disciplines")
+        .map_err(|e| anyhow!(e))?
+        .split(',')
+        .map(|s| s.trim().parse().map_err(|e: String| anyhow!(e)))
+        .collect::<Result<_>>()?;
+    let row_exp = {
+        let spec = a.req("row-exp").map_err(|e| anyhow!(e))?;
+        let parts: Vec<&str> = spec.split(',').collect();
+        let parse = |s: &str| s.trim().parse::<u32>().map_err(|_| anyhow!("--row-exp expects LO,HI — got '{spec}'"));
+        match parts.as_slice() {
+            [lo, hi] => (parse(lo)?, parse(hi)?),
+            _ => return Err(anyhow!("--row-exp expects LO,HI — got '{spec}'")),
+        }
+    };
+    let max_aspect = a.req_usize("aspects").map_err(|e| anyhow!(e))?.clamp(1, 8);
+    let threads = a.req_usize("threads").map_err(|e| anyhow!(e))?;
+
+    // `threads(1)` is pinned, not defaulted: provenance.threads is part of
+    // the serialized plan, and `threads:0` resolves against the solving
+    // host's environment. Pinning makes every stored plan a pure function
+    // of its canonical key, so a warm boot serves bytes identical to a
+    // fresh solve of the same (threads:1) request on any machine.
+    // Parallelism still comes from serve_batch fanning across requests.
+    let requests: Vec<MapRequest> = nets
+        .iter()
+        .flat_map(|net| {
+            disciplines.iter().map(move |d| {
+                MapRequest::zoo(net)
+                    .discipline(*d)
+                    .grid(row_exp, (1..=max_aspect).collect())
+                    .threads(1)
+            })
+        })
+        .collect();
+
+    let (wh, _) = Warehouse::open(&WarehouseConfig::at(dir))
+        .map_err(|e| anyhow!("open warehouse {dir}: {e}"))?;
+    let mut missing: Vec<(String, MapRequest)> = Vec::new();
+    let mut skipped = 0usize;
+    for req in requests {
+        let key = PlanCache::key(&req);
+        if wh.contains(&key) {
+            skipped += 1;
+        } else {
+            missing.push((key, req));
+        }
+    }
+
+    let to_solve: Vec<MapRequest> = missing.iter().map(|(_, r)| r.clone()).collect();
+    let results = plan::serve_batch_with_threads(&to_solve, threads);
+    let (mut priced, mut failed) = (0usize, 0usize);
+    for ((key, req), result) in missing.into_iter().zip(results) {
+        match result {
+            Ok(mut plan) => {
+                plan.id.clear();
+                wh.append(&key, &plan.to_json().dumps())
+                    .map_err(|e| anyhow!("append to warehouse {dir}: {e}"))?;
+                priced += 1;
+            }
+            Err(e) => {
+                failed += 1;
+                let net = match &req.network {
+                    plan::NetworkSpec::Zoo(name) => name.clone(),
+                    plan::NetworkSpec::Inline(_) => "<inline>".to_string(),
+                };
+                eprintln!("precompute {net}: {e}");
+            }
+        }
+    }
+    println!(
+        "precomputed {priced} plan(s) ({skipped} already present, {failed} failed) -> {} live across {} segment(s), {} bytes",
+        wh.len(),
+        wh.segments(),
+        wh.bytes(),
+    );
+    if failed > 0 {
+        return Err(anyhow!("{failed} request(s) failed to price"));
+    }
+    Ok(())
+}
+
+fn cmd_warehouse_compact(argv: &[String]) -> Result<()> {
+    let specs = [OptSpec { name: "dir", help: "warehouse directory", value: Some("DIR"), default: None }];
+    let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
+    let dir = a.req("dir").map_err(|e| anyhow!(e))?;
+    let (wh, _) = Warehouse::open(&WarehouseConfig::at(dir))
+        .map_err(|e| anyhow!("open warehouse {dir}: {e}"))?;
+    let r = wh.compact().map_err(|e| anyhow!("compact warehouse {dir}: {e}"))?;
+    println!(
+        "compacted {dir}: {} live record(s), {} superseded dropped | {} -> {} bytes | {} -> {} segment(s)",
+        r.live, r.dropped, r.bytes_before, r.bytes_after, r.segments_before, r.segments_after,
+    );
+    Ok(())
+}
+
+fn cmd_warehouse_stat(argv: &[String]) -> Result<()> {
+    let specs = [OptSpec { name: "dir", help: "warehouse directory", value: Some("DIR"), default: None }];
+    let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
+    let dir = a.req("dir").map_err(|e| anyhow!(e))?;
+    let r = Warehouse::stat(Path::new(dir)).map_err(|e| anyhow!("stat warehouse {dir}: {e}"))?;
+    println!(
+        "{dir}: {} live plan(s) across {} segment(s) ({} bytes), {} superseded, {} corrupt line(s), {} torn tail(s) ({} bytes) pending truncation",
+        r.records, r.segments, r.bytes, r.superseded, r.corrupt, r.truncated_tails, r.truncated_bytes,
     );
     Ok(())
 }

@@ -611,10 +611,21 @@ pub struct StatsSnapshot {
     /// solves cancelled by the per-request `--deadline-ms` wall-clock
     /// budget (each also counts as an error)
     pub timeouts: u64,
-    /// requests refused with the `"reject":"internal"` frame (today
-    /// exactly the contained panics; kept as its own counter so the
-    /// reject taxonomy stays 1:1 with the wire tokens)
+    /// requests refused with the `"reject":"internal"` frame (contained
+    /// panics plus coalesced followers of a panicking leader; kept as its
+    /// own counter so the reject taxonomy stays 1:1 with the wire tokens)
     pub rejected_internal: u64,
+    /// plan responses answered from the on-disk warehouse (the cache tier
+    /// behind the LRU; each also counts as served, not as a cache hit)
+    pub warehouse_hits: u64,
+    /// solved plans durably appended to the warehouse by the background
+    /// writer (admission never blocks on disk; a full writer queue sheds
+    /// the append, so this can lag served misses)
+    pub warehouse_writes: u64,
+    /// responses delivered to single-flight followers — requests that
+    /// arrived while an identical canonical request was already solving
+    /// and were answered by the leader's outcome without a second solve
+    pub coalesced: u64,
     /// nearest-rank p50 of plan *solve* latency, seconds (cache hits and
     /// error frames don't contribute samples)
     pub plan_p50_s: f64,
@@ -636,6 +647,9 @@ fn counters_to_obj(s: &StatsSnapshot) -> JsonObj {
         .set("panics", s.panics)
         .set("timeouts", s.timeouts)
         .set("rejected_internal", s.rejected_internal)
+        .set("warehouse_hits", s.warehouse_hits)
+        .set("warehouse_writes", s.warehouse_writes)
+        .set("coalesced", s.coalesced)
         .set("plan_p50_s", s.plan_p50_s)
         .set("plan_p95_s", s.plan_p95_s);
     o
@@ -652,6 +666,9 @@ fn counters_from_obj(s: &JsonObj) -> Result<StatsSnapshot, PlanError> {
         panics: get_u64(s, "panics")?,
         timeouts: get_u64(s, "timeouts")?,
         rejected_internal: get_u64(s, "rejected_internal")?,
+        warehouse_hits: get_u64(s, "warehouse_hits")?,
+        warehouse_writes: get_u64(s, "warehouse_writes")?,
+        coalesced: get_u64(s, "coalesced")?,
         plan_p50_s: get_f64(s, "plan_p50_s")?,
         plan_p95_s: get_f64(s, "plan_p95_s")?,
     })
@@ -695,6 +712,9 @@ pub struct MetricsSnapshot {
     pub cache_bytes: u64,
     /// cache entries dropped by TTL expiry since startup
     pub cache_expired: u64,
+    /// bytes held on disk by the plan warehouse across its segments
+    /// (0 when no warehouse is configured)
+    pub warehouse_bytes: u64,
     /// seconds since the service bound its listener
     pub uptime_s: f64,
 }
@@ -712,6 +732,7 @@ pub fn metrics_frame(m: &MetricsSnapshot) -> Json {
         .set("cache_entries", m.cache_entries)
         .set("cache_bytes", m.cache_bytes)
         .set("cache_expired", m.cache_expired)
+        .set("warehouse_bytes", m.warehouse_bytes)
         .set("uptime_s", m.uptime_s);
     let mut o = JsonObj::new();
     o.set("v", WIRE_VERSION).set("metrics", inner);
@@ -733,6 +754,7 @@ pub fn metrics_from_json(j: &Json) -> Result<MetricsSnapshot, PlanError> {
         cache_entries: get_u64(m, "cache_entries")?,
         cache_bytes: get_u64(m, "cache_bytes")?,
         cache_expired: get_u64(m, "cache_expired")?,
+        warehouse_bytes: get_u64(m, "warehouse_bytes")?,
         uptime_s: get_f64(m, "uptime_s")?,
     })
 }
@@ -761,6 +783,7 @@ pub fn metrics_medians(m: &MetricsSnapshot) -> Json {
     .set("serve/queue_depth", m.queue_depth)
     .set("serve/cache_entries", m.cache_entries)
     .set("serve/cache_bytes", m.cache_bytes)
+    .set("serve/warehouse_bytes", m.warehouse_bytes)
     .set("serve/panics", m.stats.panics)
     .set("serve/timeouts", m.stats.timeouts)
     .set("serve/rejected_internal", m.stats.rejected_internal);
@@ -965,6 +988,9 @@ mod tests {
                 panics: 1,
                 timeouts: 2,
                 rejected_internal: 1,
+                warehouse_hits: 9,
+                warehouse_writes: 22,
+                coalesced: 6,
                 plan_p50_s: 0.0125,
                 plan_p95_s: 0.25,
             },
@@ -975,6 +1001,7 @@ mod tests {
             cache_entries: 12,
             cache_bytes: 51_234,
             cache_expired: 4,
+            warehouse_bytes: 204_800,
             uptime_s: 86.5,
         };
         let j = metrics_frame(&m);
@@ -1008,6 +1035,7 @@ mod tests {
             queue_depth: 4,
             cache_entries: 9,
             cache_bytes: 1000,
+            warehouse_bytes: 4096,
             ..Default::default()
         };
         let j = metrics_medians(&m);
@@ -1020,8 +1048,19 @@ mod tests {
         assert_eq!(j.get("serve/panics").and_then(|v| v.as_usize()), Some(1));
         assert_eq!(j.get("serve/timeouts").and_then(|v| v.as_usize()), Some(2));
         assert_eq!(j.get("serve/rejected_internal").and_then(|v| v.as_usize()), Some(1));
+        // warehouse_bytes is a gauge (live bytes on disk), so it's safe
+        // under the gate like cache_bytes
+        assert_eq!(j.get("serve/warehouse_bytes").and_then(|v| v.as_usize()), Some(4096));
         // no throughput counters: two snapshots must be bench-gate safe
-        for absent in ["serve/served", "serve/errors", "serve/cache_hits", "serve/uptime_s"] {
+        for absent in [
+            "serve/served",
+            "serve/errors",
+            "serve/cache_hits",
+            "serve/uptime_s",
+            "serve/warehouse_hits",
+            "serve/warehouse_writes",
+            "serve/coalesced",
+        ] {
             assert!(j.get(absent).is_none(), "{absent} must not be a medians row");
         }
         // string rows (the _schema marker) never gate (benchkit contract)
@@ -1038,6 +1077,9 @@ mod tests {
             panics: 3,
             timeouts: 1,
             rejected_internal: 3,
+            warehouse_hits: 8,
+            warehouse_writes: 19,
+            coalesced: 2,
             plan_p50_s: 0.0125,
             plan_p95_s: 0.25,
         };

@@ -27,7 +27,7 @@
 //!   a LeNet fixed-tile plan.
 
 use crate::plan::{MapPlan, MapRequest};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -44,12 +44,29 @@ struct Entry {
 
 struct Inner {
     map: HashMap<String, Entry>,
+    /// recency order: `last_used` tick → key, kept in lockstep with
+    /// `map` (ticks are unique, so this is a total order and the first
+    /// entry is always the LRU victim — eviction is O(log n) instead of
+    /// the O(entries) scan it replaced)
+    by_tick: BTreeMap<u64, String>,
     /// logical clock: bumped on every insert and hit
     tick: u64,
     /// total bytes charged across live entries
     bytes: usize,
     /// entries dropped because their TTL elapsed (cumulative)
     expired: u64,
+}
+
+impl Inner {
+    /// Remove `key` from both sides of the lockstep pair, adjusting the
+    /// byte charge. Every removal path (expiry, eviction, replacement)
+    /// funnels through here so the pair cannot drift.
+    fn remove_entry(&mut self, key: &str) -> Option<Entry> {
+        let e = self.map.remove(key)?;
+        self.by_tick.remove(&e.last_used);
+        self.bytes -= e.bytes;
+        Some(e)
+    }
 }
 
 /// Bounded memoization of canonical request → plan. Capacity 0 disables
@@ -78,7 +95,13 @@ impl PlanCache {
             capacity,
             ttl,
             max_bytes,
-            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0, bytes: 0, expired: 0 }),
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                by_tick: BTreeMap::new(),
+                tick: 0,
+                bytes: 0,
+                expired: 0,
+            }),
         }
     }
 
@@ -126,14 +149,19 @@ impl PlanCache {
             _ => false,
         };
         if expired {
-            let e = inner.map.remove(key).expect("checked above");
-            inner.bytes -= e.bytes;
+            inner.remove_entry(key).expect("checked above");
             inner.expired += 1;
             return None;
         }
         inner.tick += 1;
         let tick = inner.tick;
-        inner.map.get_mut(key).map(|e| {
+        let Inner { map, by_tick, .. } = &mut *inner;
+        map.get_mut(key).map(|e| {
+            // re-file under the fresh tick so the ordered index tracks
+            // recency (the hit pays one BTreeMap move + key clone; the
+            // eviction it buys is O(log n) instead of a full scan)
+            by_tick.remove(&e.last_used);
+            by_tick.insert(tick, key.to_string());
             e.last_used = tick;
             Arc::clone(&e.plan)
         })
@@ -160,6 +188,23 @@ impl PlanCache {
         self.insert_at(key, plan, plan_len, Instant::now())
     }
 
+    /// Insert a plan recovered from the **warehouse** (the service's
+    /// on-disk second tier) into the LRU. Promotion must be
+    /// indistinguishable from a solved insert: it charges `key + plan`
+    /// bytes against the budget and stamps a fresh tick and TTL epoch —
+    /// the entry's lifetime runs from the promotion, not from whenever
+    /// the plan was originally solved — so it goes through the exact
+    /// insert path rather than touching the maps directly.
+    pub fn promote_serialized(&self, key: String, plan: Arc<MapPlan>, plan_len: usize) {
+        self.promote_at(key, plan, plan_len, Instant::now())
+    }
+
+    /// Clock-injection point for [`PlanCache::promote_serialized`] — the
+    /// TTL-schedule unit test drives this with explicit instants.
+    fn promote_at(&self, key: String, plan: Arc<MapPlan>, plan_len: usize, now: Instant) {
+        self.insert_at(key, plan, plan_len, now)
+    }
+
     fn insert_at(&self, key: String, plan: Arc<MapPlan>, plan_len: usize, now: Instant) {
         if self.capacity == 0 {
             return;
@@ -172,43 +217,45 @@ impl PlanCache {
         // never-requested-again entry hold memory (and inflate the
         // cache_bytes gauge) forever
         if let Some(ttl) = self.ttl {
-            let (mut freed, mut dropped) = (0usize, 0u64);
-            inner.map.retain(|_, e| {
-                let live = now.saturating_duration_since(e.inserted) < ttl;
-                if !live {
-                    freed += e.bytes;
-                    dropped += 1;
-                }
-                live
-            });
-            inner.bytes -= freed;
-            inner.expired += dropped;
+            let dead: Vec<String> = inner
+                .map
+                .iter()
+                .filter(|(_, e)| now.saturating_duration_since(e.inserted) >= ttl)
+                .map(|(k, _)| k.clone())
+                .collect();
+            for k in dead {
+                inner.remove_entry(&k).expect("collected from the map above");
+                inner.expired += 1;
+            }
         }
         inner.tick += 1;
-        let entry = Entry { plan, bytes, inserted: now, last_used: inner.tick };
+        let tick = inner.tick;
+        let entry = Entry { plan, bytes, inserted: now, last_used: tick };
+        inner.by_tick.insert(tick, key.clone());
         if let Some(old) = inner.map.insert(key, entry) {
+            inner.by_tick.remove(&old.last_used);
             inner.bytes -= old.bytes;
         }
         inner.bytes += bytes;
-        // victim selection is a full O(entries) scan per eviction — a
-        // deliberate trade: hits stay O(1) and allocation-free (a
-        // tick->key index would charge every hit a BTreeMap update plus a
-        // String), and evictions only run on miss-inserts at capacity,
-        // where the preceding solve dwarfs a few-hundred-entry walk.
-        // Revisit with an ordered index if caches grow to 10^5 entries.
+        // the ordered tick index makes the victim lookup O(log n): ticks
+        // are unique and refreshed on every hit, so the index's smallest
+        // tick always names the least-recently-used entry
         while (inner.map.len() > self.capacity
             || (self.max_bytes > 0 && inner.bytes > self.max_bytes))
             && !inner.map.is_empty()
         {
-            let victim = inner
-                .map
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone())
-                .expect("non-empty map has a minimum");
-            let e = inner.map.remove(&victim).expect("victim came from the map");
+            let victim_tick =
+                *inner.by_tick.keys().next().expect("tick index in lockstep with the map");
+            let victim =
+                inner.by_tick.remove(&victim_tick).expect("key was just observed");
+            let e = inner.map.remove(&victim).expect("tick index in lockstep with the map");
             inner.bytes -= e.bytes;
         }
+        debug_assert_eq!(
+            inner.map.len(),
+            inner.by_tick.len(),
+            "tick index out of lockstep with the entry map"
+        );
     }
 
     /// Entries currently cached.
@@ -371,6 +418,120 @@ mod tests {
         let two = cache.bytes();
         cache.insert(PlanCache::key(&a), plan_for(&a));
         assert_eq!(cache.bytes(), two);
+    }
+
+    /// Reference LRU: the O(entries) eviction scan the ordered tick index
+    /// replaced, kept here as the parity oracle for the randomized test.
+    struct ScanModel {
+        capacity: usize,
+        entries: Vec<(String, u64, usize)>, // (key, last_used, bytes)
+        tick: u64,
+    }
+
+    impl ScanModel {
+        fn get(&mut self, key: &str) -> bool {
+            self.tick += 1;
+            let tick = self.tick;
+            match self.entries.iter_mut().find(|(k, _, _)| k == key) {
+                Some(e) => {
+                    e.1 = tick;
+                    true
+                }
+                None => false,
+            }
+        }
+
+        fn insert(&mut self, key: &str, bytes: usize) {
+            self.tick += 1;
+            let tick = self.tick;
+            match self.entries.iter_mut().find(|(k, _, _)| k == key) {
+                Some(e) => {
+                    e.1 = tick;
+                    e.2 = bytes;
+                }
+                None => self.entries.push((key.to_string(), tick, bytes)),
+            }
+            while self.entries.len() > self.capacity {
+                let victim = self
+                    .entries
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, (_, used, _))| *used)
+                    .map(|(i, _)| i)
+                    .expect("non-empty");
+                self.entries.remove(victim);
+            }
+        }
+
+        fn bytes(&self) -> usize {
+            self.entries.iter().map(|(k, _, b)| k.len() + b).sum()
+        }
+    }
+
+    #[test]
+    fn ordered_index_eviction_matches_the_scan_model_on_random_ops() {
+        // drive the real cache and the reference scan implementation with
+        // one randomized op sequence; every hit/miss outcome and the full
+        // resident set must agree at each step
+        let mut rng = crate::util::prng::Rng::new(0x5eed_cac4e);
+        for capacity in [1usize, 3, 8] {
+            let cache = PlanCache::new(capacity);
+            let mut model = ScanModel { capacity, entries: Vec::new(), tick: 0 };
+            let plan = plan_for(&req(64));
+            let t0 = Instant::now();
+            for step in 0..600 {
+                let key = format!("k{}", rng.below(12));
+                if rng.chance(0.5) {
+                    let bytes = 50 + rng.below(50) as usize;
+                    cache.insert_at(key.clone(), Arc::clone(&plan), bytes, t0);
+                    model.insert(&key, bytes);
+                } else {
+                    let got = cache.get_at(&key, t0).is_some();
+                    let want = model.get(&key);
+                    assert_eq!(got, want, "cap {capacity} step {step}: hit/miss diverged on {key}");
+                }
+                assert_eq!(cache.len(), model.entries.len(), "cap {capacity} step {step}");
+                assert_eq!(cache.bytes(), model.bytes(), "cap {capacity} step {step}");
+                let resident: Vec<String> =
+                    model.entries.iter().map(|(k, _, _)| k.clone()).collect();
+                for k in resident {
+                    // probe residency by getting on both sides, which
+                    // bumps recency identically and keeps them in lockstep
+                    assert_eq!(cache.get_at(&k, t0).is_some(), model.get(&k), "cap {capacity}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn warehouse_promotion_charges_bytes_and_expires_on_the_solved_schedule() {
+        // a plan recovered from the on-disk warehouse must be a
+        // first-class citizen of the LRU: same byte charge as a solved
+        // insert, and a TTL running from the *promotion* instant
+        let ttl = Duration::from_secs(60);
+        let cache = PlanCache::with_policy(8, Some(ttl), 0);
+        let a = req(64);
+        let key = PlanCache::key(&a);
+        let (plan, len) = sized_plan(&a);
+        let t0 = Instant::now();
+
+        // solved insert: record its byte charge, then clear the cache by
+        // letting it expire
+        cache.insert_at(key.clone(), Arc::clone(&plan), len, t0);
+        let solved_bytes = cache.bytes();
+        assert!(cache.get_at(&key, t0 + ttl).is_none());
+        assert_eq!(cache.len(), 0);
+
+        // warehouse promotion at t1: identical charge, fresh TTL epoch
+        let t1 = t0 + ttl + ttl;
+        cache.promote_at(key.clone(), plan, len, t1);
+        assert_eq!(cache.bytes(), solved_bytes, "promotion must charge key+plan bytes");
+        assert!(cache.get_at(&key, t1 + ttl / 2).is_some(), "young promoted entry must hit");
+        assert!(
+            cache.get_at(&key, t1 + ttl).is_none(),
+            "promoted entry must expire one TTL after promotion, not live forever"
+        );
+        assert_eq!(cache.expired_total(), 2);
     }
 
     #[test]

@@ -18,7 +18,20 @@
 //!   pushing, TCP windows fill) instead of buffering without limit;
 //! * a **canonical-request plan cache** ([`cache::PlanCache`]): identical
 //!   requests — across connections, with the correlation id ignored — are
-//!   answered from memory;
+//!   answered from memory (eviction walks an ordered tick index, so it's
+//!   O(log entries), not a scan);
+//! * a persistent **plan warehouse** ([`crate::store`], `--warehouse
+//!   DIR`): a second cache tier behind the LRU. An LRU miss that hits
+//!   the on-disk store is answered without a solve (counted as
+//!   `warehouse_hits`) and promoted into the LRU; every fresh solve is
+//!   appended *behind* the response by a dedicated writer thread fed
+//!   from a bounded channel, so the request path never blocks on disk —
+//!   a full writer queue sheds the append, never the reply;
+//! * **single-flight coalescing** ([`singleflight::SingleFlight`]):
+//!   concurrent misses on one canonical key park on the leader's solve.
+//!   Followers hold their admission slot but no queue slot or worker,
+//!   and all receive id-restamped copies of the same outcome — one
+//!   solve, N responses, counted by `coalesced`;
 //! * **graceful shutdown**: SIGINT/ctrl-C or SIGTERM (or
 //!   [`ServiceHandle::shutdown`]) stops accepting and reading, drains
 //!   every request already read, and closes each connection only after
@@ -56,10 +69,13 @@
 
 mod cache;
 mod conn;
+mod singleflight;
 
 pub use cache::PlanCache;
+pub use singleflight::{Role, SingleFlight};
 
 use crate::plan::{self, wire, PlanError};
+use crate::store::{LoadReport, Warehouse, WarehouseConfig};
 use crate::util::deadline::Deadline;
 use crate::util::json::Json;
 use crate::util::mpmc::Queue;
@@ -92,6 +108,12 @@ const LATENCY_WINDOW: usize = 4096;
 /// protocol, answered with an error frame and disconnected so a
 /// never-newlining stream can't grow the line buffer without limit.
 const MAX_LINE_BYTES: usize = 8 << 20;
+
+/// Capacity of the bounded channel feeding the warehouse writer thread.
+/// Workers `try_push` solved plans and shed the append when the writer
+/// can't keep up — durability lags under sustained disk slowness, but
+/// the response path never blocks on it.
+const WAREHOUSE_QUEUE: usize = 256;
 
 /// Configuration for [`Service::bind`].
 #[derive(Debug, Clone)]
@@ -131,6 +153,10 @@ pub struct ServiceConfig {
     /// moves on (None = solves may run as long as the search budget
     /// allows). Cache hits and in-band commands are not subject to it.
     pub deadline: Option<Duration>,
+    /// directory of the persistent plan warehouse (None = memory-only).
+    /// Opened — torn tails repaired — at bind time; LRU misses consult it
+    /// before solving, and fresh solves are appended behind the response
+    pub warehouse: Option<PathBuf>,
     /// also shut down on SIGINT/ctrl-C and SIGTERM (the CLI sets this;
     /// tests drive shutdown through [`ServiceHandle`] instead)
     pub watch_sigint: bool,
@@ -150,6 +176,7 @@ impl Default for ServiceConfig {
             metrics_out: None,
             metrics_interval: Duration::from_secs(10),
             deadline: None,
+            warehouse: None,
             watch_sigint: false,
         }
     }
@@ -164,6 +191,41 @@ struct Job {
     /// count), echoed into error frames
     line_no: usize,
     text: String,
+    /// the reader's decode of `text`, when it succeeded: the flight this
+    /// job leads is keyed by `parsed.key`, and the worker reuses the
+    /// decoded request instead of re-parsing. None for in-band commands
+    /// and undecodable lines (the worker re-parses those and answers with
+    /// the same error frames serve_jsonl would).
+    parsed: Option<ParsedReq>,
+}
+
+/// A request the connection reader already decoded — every decodable
+/// request is, so identical canonical requests can coalesce before they
+/// cost a queue slot.
+struct ParsedReq {
+    req: plan::MapRequest,
+    /// the canonical cache key ([`PlanCache::key`]); also the flight key
+    key: String,
+}
+
+/// A single-flight follower: a request parked on an open flight, holding
+/// its admission slot and response sequence number but no queue slot and
+/// no worker. The leader's worker delivers its response.
+struct Waiter {
+    conn: Arc<Conn>,
+    seq: usize,
+    /// the follower's own physical line number — error frames echo it
+    line_no: usize,
+    /// the follower's correlation id, restamped onto the shared plan
+    id: String,
+}
+
+/// One solved plan bound for the warehouse writer thread.
+struct WhWrite {
+    /// canonical request key
+    key: String,
+    /// anonymized serialized plan line
+    line: String,
 }
 
 struct StatsInner {
@@ -176,6 +238,9 @@ struct StatsInner {
     rejected_internal: u64,
     rejected_over_quota: u64,
     rejected_over_inflight: u64,
+    warehouse_hits: u64,
+    warehouse_writes: u64,
+    coalesced: u64,
     latencies: VecDeque<f64>,
 }
 
@@ -196,6 +261,14 @@ struct Shared {
     per_conn_quota: usize,
     /// wall-clock budget armed per solve (None = unbounded)
     deadline: Option<Duration>,
+    /// the persistent second cache tier (None = memory-only service)
+    warehouse: Option<Warehouse>,
+    /// open single-flights: canonical key → followers parked on the
+    /// leader's solve
+    flights: SingleFlight<Waiter>,
+    /// bounded channel feeding the warehouse writer thread (None exactly
+    /// when `warehouse` is None); workers `try_push`, never block
+    wh_queue: Option<Queue<WhWrite>>,
     /// when the listener bound, for the uptime gauge
     started: Instant,
 }
@@ -231,6 +304,9 @@ impl Shared {
             panics: s.panics,
             timeouts: s.timeouts,
             rejected_internal: s.rejected_internal,
+            warehouse_hits: s.warehouse_hits,
+            warehouse_writes: s.warehouse_writes,
+            coalesced: s.coalesced,
             plan_p50_s: percentile_nearest_rank(&lat, 0.50),
             plan_p95_s: percentile_nearest_rank(&lat, 0.95),
         }
@@ -253,6 +329,7 @@ impl Shared {
             cache_entries: self.cache.len() as u64,
             cache_bytes: self.cache.bytes() as u64,
             cache_expired: self.cache.expired_total(),
+            warehouse_bytes: self.warehouse.as_ref().map(Warehouse::bytes).unwrap_or(0),
             uptime_s: self.started.elapsed().as_secs_f64(),
         }
     }
@@ -278,6 +355,8 @@ pub struct Service {
     workers: usize,
     metrics_out: Option<PathBuf>,
     metrics_interval: Duration,
+    /// the warehouse boot report, kept for [`Service::warehouse_report`]
+    warehouse_report: Option<LoadReport>,
     shared: Arc<Shared>,
 }
 
@@ -318,11 +397,22 @@ impl Service {
         } else {
             cfg.workers
         };
+        // open (and repair) the warehouse before accepting: a torn tail
+        // from a previous crash is truncated here, and every intact
+        // record is indexed — the report says what boot found
+        let (warehouse, warehouse_report) = match &cfg.warehouse {
+            Some(dir) => {
+                let (wh, report) = Warehouse::open(&WarehouseConfig::at(dir))?;
+                (Some(wh), Some(report))
+            }
+            None => (None, None),
+        };
         Ok(Service {
             listener,
             workers,
             metrics_out: cfg.metrics_out.clone(),
             metrics_interval: cfg.metrics_interval,
+            warehouse_report,
             shared: Arc::new(Shared {
                 shutdown: AtomicBool::new(false),
                 sigint: if cfg.watch_sigint { Some(sigint_flag()) } else { None },
@@ -342,12 +432,18 @@ impl Service {
                     rejected_internal: 0,
                     rejected_over_quota: 0,
                     rejected_over_inflight: 0,
+                    warehouse_hits: 0,
+                    warehouse_writes: 0,
+                    coalesced: 0,
                     latencies: VecDeque::new(),
                 }),
                 inflight: AtomicUsize::new(0),
                 max_inflight: cfg.max_inflight,
                 per_conn_quota: cfg.per_conn_quota,
                 deadline: cfg.deadline,
+                wh_queue: warehouse.as_ref().map(|_| Queue::bounded(WAREHOUSE_QUEUE)),
+                warehouse,
+                flights: SingleFlight::new(),
                 started: Instant::now(),
             }),
         })
@@ -362,6 +458,13 @@ impl Service {
     /// while [`Service::run`] blocks another thread.
     pub fn handle(&self) -> ServiceHandle {
         ServiceHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// What the warehouse loader found at bind time (records indexed,
+    /// torn tails truncated, corrupt lines skipped) — None when the
+    /// service runs memory-only. The CLI prints this at startup.
+    pub fn warehouse_report(&self) -> Option<LoadReport> {
+        self.warehouse_report
     }
 
     /// Serve until shutdown (signal or handle), then drain and return the
@@ -392,6 +495,16 @@ impl Service {
                             "planner panicked: {}",
                             panic_message(payload.as_ref())
                         ));
+                        // a panicking leader still owes its parked
+                        // followers: each gets the same typed reject with
+                        // its own line number (counted like any internal
+                        // reject — `panics` counts the one real panic)
+                        settle_flight_error(
+                            &sh,
+                            job.parsed.as_ref().map(|p| p.key.as_str()),
+                            Some(wire::RejectKind::Internal),
+                            &e,
+                        );
                         wire::reject_frame(job.line_no, wire::RejectKind::Internal, &e).dumps()
                     });
                     job.conn.deliver(job.seq, response);
@@ -400,6 +513,24 @@ impl Service {
                 }
             }));
         }
+
+        // the warehouse writer: the one thread that touches disk on the
+        // request path's behalf. Workers try_push solved plans onto the
+        // bounded channel; this thread appends them behind the responses.
+        // Closed — and joined — only after the worker pool drains, so
+        // every solve that queued an append gets it written before run()
+        // returns.
+        let wh_writer = shared.wh_queue.as_ref().map(|_| {
+            let sh = Arc::clone(&shared);
+            std::thread::spawn(move || {
+                let (Some(q), Some(wh)) = (&sh.wh_queue, &sh.warehouse) else { return };
+                while let Some(w) = q.pop() {
+                    if wh.append(&w.key, &w.line).is_ok() {
+                        sh.lock_stats().warehouse_writes += 1;
+                    }
+                }
+            })
+        });
 
         // periodic metrics snapshots: overwrite the file every interval
         // while running, and once more after the final drain below so
@@ -422,9 +553,13 @@ impl Service {
         if let Err(e) = self.listener.set_nonblocking(true) {
             // same discipline as the fatal accept arm: never leave the
             // already-spawned workers parked on the queue (or the metrics
-            // writer polling a flag) forever
+            // writer polling a flag, or the warehouse writer parked on
+            // its channel) forever
             shared.shutdown.store(true, Ordering::SeqCst);
             shared.queue.close();
+            if let Some(q) = &shared.wh_queue {
+                q.close();
+            }
             return Err(e);
         }
         let mut readers: Vec<std::thread::JoinHandle<()>> = Vec::new();
@@ -461,6 +596,9 @@ impl Service {
                     // rather than leaving them parked on the queue forever
                     shared.shutdown.store(true, Ordering::SeqCst);
                     shared.queue.close();
+                    if let Some(q) = &shared.wh_queue {
+                        q.close();
+                    }
                     return Err(e);
                 }
             }
@@ -473,6 +611,15 @@ impl Service {
         }
         shared.queue.close();
         for w in workers {
+            let _ = w.join();
+        }
+        // the workers are done, so nothing can queue another append:
+        // close the writer channel and wait for the backlog to land on
+        // disk before reporting the final stats
+        if let Some(q) = &shared.wh_queue {
+            q.close();
+        }
+        if let Some(w) = wh_writer {
             let _ = w.join();
         }
         if let Some(w) = metrics_writer {
@@ -625,7 +772,41 @@ fn read_conn(shared: &Shared, stream: TcpStream, conn: Arc<Conn>) {
             seq += 1;
             continue;
         }
-        let job = Job { conn: Arc::clone(&conn), seq, line_no, text: text.to_string() };
+        // Decode the request here in the reader — the worker reuses the
+        // decoded form — so identical canonical requests can coalesce
+        // before they cost a queue slot. The first request for a key
+        // leads (it proceeds to the worker pool); every later one
+        // arriving while that flight is open parks as a passive delivery
+        // record: it keeps the admission slot just reserved (it is real
+        // in-flight work) but never enqueues, so a thundering herd costs
+        // one solve even on a one-worker service, and the leader's
+        // completion answers everyone. Lines that fail to decode never
+        // join a flight — the worker re-parses them and answers with the
+        // same error frames serve_jsonl would. Coalescing happens after
+        // admission, so quota/inflight behavior is byte-unchanged.
+        let mut parsed = None;
+        if !looks_like_cmd {
+            if let Ok(j) = crate::util::json::parse(text) {
+                if !(j.get("cmd").is_some() && j.get("net").is_none()) {
+                    if let Ok(req) = plan::MapRequest::from_json(&j) {
+                        let key = PlanCache::key(&req);
+                        let role = shared.flights.join(&key, || Waiter {
+                            conn: Arc::clone(&conn),
+                            seq,
+                            line_no,
+                            id: req.id.clone(),
+                        });
+                        if role == Role::Coalesced {
+                            seq += 1;
+                            continue;
+                        }
+                        parsed = Some(ParsedReq { req, key });
+                    }
+                }
+            }
+        }
+        let flight_key = parsed.as_ref().map(|p| p.key.clone());
+        let job = Job { conn: Arc::clone(&conn), seq, line_no, text: text.to_string(), parsed };
         seq += 1;
         // blocks while the queue is full — this is the backpressure path
         // (the socket stops being read, so the client's TCP window fills)
@@ -635,6 +816,17 @@ fn read_conn(shared: &Shared, stream: TcpStream, conn: Arc<Conn>) {
             // back
             shared.inflight.fetch_sub(1, Ordering::SeqCst);
             seq -= 1;
+            // a would-be leader refused by the closing queue still owes
+            // its followers: fail them explicitly rather than stranding
+            // their reserved slots and owed responses
+            if let Some(key) = flight_key {
+                settle_flight_error(
+                    shared,
+                    Some(&key),
+                    None,
+                    &PlanError("service shutting down".into()),
+                );
+            }
             break;
         }
     }
@@ -714,6 +906,11 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
 /// Produce the response line for one job (no trailing newline), updating
 /// the service counters.
 fn respond(shared: &Shared, job: &Job) -> String {
+    if let Some(p) = &job.parsed {
+        // the reader already decoded this request (to coalesce identical
+        // in-flight requests); this job leads its flight
+        return respond_planned(shared, job, &p.req);
+    }
     let j = match crate::util::json::parse(&job.text) {
         Ok(j) => j,
         // same message plan::parse_request_line produces, so error frames
@@ -740,15 +937,30 @@ fn respond(shared: &Shared, job: &Job) -> String {
         Ok(req) => req,
         Err(e) => return error_response(shared, job.line_no, &e),
     };
+    respond_planned(shared, job, &req)
+}
+
+/// Produce the response for a decoded plan request: LRU, then warehouse,
+/// then solve. When the job leads a single-flight (the reader parked
+/// followers on its canonical key), the same outcome — plan, error or
+/// typed reject — is delivered to every follower before this returns.
+fn respond_planned(shared: &Shared, job: &Job, req: &plan::MapRequest) -> String {
+    let flight_key = job.parsed.as_ref().map(|p| p.key.as_str());
     // live-fire hook for the containment path — before the cache lookup,
     // which anonymizes ids and could otherwise answer the probe from a
-    // previous solve of the same network
+    // previous solve of the same network. The panic handler in
+    // [`Service::run`] settles this job's flight.
     if req.id == PANIC_PROBE_ID {
         panic!("panic probe: request id {PANIC_PROBE_ID}");
     }
-    // key computation clones + serializes the request, so skip it when
-    // caching is off (--cache 0)
-    let key = if shared.cache.enabled() { Some(PlanCache::key(&req)) } else { None };
+    // the canonical key has three consumers (LRU, warehouse, flight);
+    // the reader computed it once for every decodable request, so the
+    // fallback clone+serialize below never runs in practice
+    let key: Option<String> = match &job.parsed {
+        Some(p) => Some(p.key.clone()),
+        None => (shared.cache.enabled() || shared.warehouse.is_some())
+            .then(|| PlanCache::key(req)),
+    };
     if let Some(cached) = key.as_deref().and_then(|k| shared.cache.get(k)) {
         let mut stats = shared.lock_stats();
         stats.cache_hits += 1;
@@ -756,7 +968,46 @@ fn respond(shared: &Shared, job: &Job) -> String {
         drop(stats);
         let mut plan = (*cached).clone();
         plan.id = req.id.clone();
+        settle_flight_plan(shared, flight_key, &cached, None);
         return plan.to_json().dumps();
+    }
+    // second tier: the on-disk warehouse. A hit is answered without a
+    // solve — counted separately from memory hits, and contributing no
+    // latency sample (nothing was solved) — and promoted into the LRU,
+    // charging bytes and starting a fresh TTL epoch, so the next
+    // identical request is a memory hit.
+    if let (Some(wh), Some(k)) = (shared.warehouse.as_ref(), key.as_deref()) {
+        if let Some(stored) = wh.get(k) {
+            // records re-verify their crc on read, so a decode failure
+            // here means schema drift (a record written by an older
+            // build), not corruption — fall through to a fresh solve,
+            // whose append supersedes the stale record
+            let decoded = crate::util::json::parse(&stored)
+                .ok()
+                .and_then(|j| plan::MapPlan::from_json(&j).ok());
+            if let Some(anon) = decoded {
+                let mut stats = shared.lock_stats();
+                stats.warehouse_hits += 1;
+                stats.served += 1;
+                drop(stats);
+                shared.cache.promote_serialized(
+                    k.to_string(),
+                    Arc::new(anon.clone()),
+                    stored.len(),
+                );
+                let response = if req.id.is_empty() {
+                    // the stored line IS the anonymized serialization —
+                    // serve it verbatim
+                    stored.clone()
+                } else {
+                    let mut plan = anon.clone();
+                    plan.id = req.id.clone();
+                    plan.to_json().dumps()
+                };
+                settle_flight_plan(shared, flight_key, &anon, Some(&stored));
+                return response;
+            }
+        }
     }
     // the deadline arms when the solve starts, not when the request was
     // read: queue wait under load is backpressure, not solver runaway
@@ -765,7 +1016,7 @@ fn respond(shared: &Shared, job: &Job) -> String {
         None => Deadline::NONE,
     };
     let t0 = Instant::now();
-    match req.build().and_then(|p| p.plan_with_deadline(deadline)) {
+    match req.clone().build().and_then(|p| p.plan_with_deadline(deadline)) {
         Ok(plan) => {
             let solve_s = t0.elapsed().as_secs_f64();
             let mut stats = shared.lock_stats();
@@ -776,14 +1027,25 @@ fn respond(shared: &Shared, job: &Job) -> String {
             stats.latencies.push_back(solve_s);
             drop(stats);
             if let Some(key) = key {
-                // one serialization of the anonymized plan covers both the
-                // cache's byte accounting and — for the common id-less
+                // one serialization of the anonymized plan covers the
+                // cache's byte accounting, the warehouse append, the
+                // follower deliveries and — for the common id-less
                 // request, where anonymized == response — the wire bytes
                 let mut anon = plan.clone();
                 anon.id.clear();
                 let anon_line = anon.to_json().dumps();
                 let anon_len = anon_line.len();
-                shared.cache.insert_serialized(key, Arc::new(anon), anon_len);
+                let anon = Arc::new(anon);
+                shared.cache.insert_serialized(key.clone(), Arc::clone(&anon), anon_len);
+                // durability rides the bounded writer channel *behind*
+                // the response; when the writer can't keep up the append
+                // is shed, never the reply. The append is unconditional
+                // on solve — re-appending a key whose stored record went
+                // stale or undecodable supersedes it (self-healing).
+                if let Some(q) = &shared.wh_queue {
+                    let _ = q.try_push(WhWrite { key, line: anon_line.clone() });
+                }
+                settle_flight_plan(shared, flight_key, &anon, Some(&anon_line));
                 if plan.id.is_empty() {
                     return anon_line;
                 }
@@ -792,9 +1054,82 @@ fn respond(shared: &Shared, job: &Job) -> String {
         }
         Err(e) if e.is_deadline() => {
             shared.note_reject(wire::RejectKind::Deadline);
+            settle_flight_error(shared, flight_key, Some(wire::RejectKind::Deadline), &e);
             wire::reject_frame(job.line_no, wire::RejectKind::Deadline, &e).dumps()
         }
-        Err(e) => error_response(shared, job.line_no, &e),
+        Err(e) => {
+            settle_flight_error(shared, flight_key, None, &e);
+            error_response(shared, job.line_no, &e)
+        }
+    }
+}
+
+/// Deliver a solved (or recovered) plan to every follower parked on this
+/// job's flight — a no-op for jobs that lead no flight or have no
+/// followers. Each follower gets the same plan with its own correlation
+/// id restamped, byte-identical to solving its line independently (plans
+/// are deterministic functions of the canonical request). Followers
+/// count as `served` and `coalesced` — not as cache hits, and they add
+/// no latency sample, since no solve ran for them — and each releases
+/// the admission slot it has held since the reader parked it.
+fn settle_flight_plan(
+    shared: &Shared,
+    key: Option<&str>,
+    anon: &plan::MapPlan,
+    anon_line: Option<&str>,
+) {
+    let Some(key) = key else { return };
+    let followers = shared.flights.complete(key);
+    if followers.is_empty() {
+        return;
+    }
+    // the anonymized line answers id-less followers verbatim; serialize
+    // it at most once, and only if such a follower exists
+    let mut anon_cache: Option<String> = anon_line.map(str::to_string);
+    for w in followers {
+        let line = if w.id.is_empty() {
+            anon_cache.get_or_insert_with(|| anon.to_json().dumps()).clone()
+        } else {
+            let mut plan = anon.clone();
+            plan.id = w.id;
+            plan.to_json().dumps()
+        };
+        let mut stats = shared.lock_stats();
+        stats.served += 1;
+        stats.coalesced += 1;
+        drop(stats);
+        w.conn.deliver(w.seq, line);
+        shared.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Deliver a failed leader's outcome to its followers: the same error —
+/// or typed reject — rebuilt with each follower's own line number, so a
+/// follower's frame is byte-identical to failing its line independently.
+/// Followers bump the same counters the leader's frame did (`errors`,
+/// plus the reject-kind counter), except `panics`, which counts actual
+/// contained panics: one per panic, not one per delivery.
+fn settle_flight_error(
+    shared: &Shared,
+    key: Option<&str>,
+    kind: Option<wire::RejectKind>,
+    e: &PlanError,
+) {
+    let Some(key) = key else { return };
+    for w in shared.flights.complete(key) {
+        let line = match kind {
+            Some(k) => {
+                shared.note_reject(k);
+                wire::reject_frame(w.line_no, k, e).dumps()
+            }
+            None => {
+                shared.lock_stats().errors += 1;
+                wire::error_frame(w.line_no, e).dumps()
+            }
+        };
+        shared.lock_stats().coalesced += 1;
+        w.conn.deliver(w.seq, line);
+        shared.inflight.fetch_sub(1, Ordering::SeqCst);
     }
 }
 

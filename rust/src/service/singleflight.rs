@@ -1,0 +1,136 @@
+//! Single-flight coalescing: concurrent misses on one canonical key cost
+//! one solve.
+//!
+//! A thundering herd — N connections asking the same design question at
+//! once — used to pay one full solve per request that arrived before the
+//! first finished. The registry here dedupes them at admission: the first
+//! request for a key becomes the **leader** (it proceeds to the worker
+//! pool and solves), every later request arriving while that flight is
+//! open becomes a **follower** — a passive delivery record parked in the
+//! registry, holding no queue slot and no thread. When the leader's
+//! worker finishes it [`SingleFlight::complete`]s the flight, takes the
+//! followers, and delivers each an id-restamped copy of the same outcome.
+//!
+//! No thread ever blocks on a flight: followers are plain values (the
+//! service parks `(connection, seq, line number, id)` tuples), so the
+//! design needs no condvars and cannot deadlock on shutdown — a flight
+//! whose leader can't run anymore (queue closed mid-push) is completed by
+//! the would-be leader itself, which fails the followers explicitly.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// What [`SingleFlight::join`] decided for a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// first in: proceed to solve, then [`SingleFlight::complete`]
+    Leader,
+    /// parked on an open flight: the leader's completion delivers
+    Coalesced,
+}
+
+/// Registry of open flights keyed by canonical request key, each holding
+/// the followers parked on it. `F` is the follower record type (the
+/// service uses a connection/sequence tuple; tests use plain values).
+#[derive(Debug, Default)]
+pub struct SingleFlight<F> {
+    inner: Mutex<HashMap<String, Vec<F>>>,
+}
+
+impl<F> SingleFlight<F> {
+    /// An empty registry.
+    pub fn new() -> SingleFlight<F> {
+        SingleFlight { inner: Mutex::new(HashMap::new()) }
+    }
+
+    /// Join the flight for `key`: if none is open this caller opens it
+    /// and leads (the closure is not called); otherwise the closure's
+    /// follower record is parked on the open flight. The check and the
+    /// park are one critical section, so a follower can never be parked
+    /// on a flight that already completed.
+    pub fn join(&self, key: &str, follower: impl FnOnce() -> F) -> Role {
+        let mut inner = self.lock();
+        match inner.get_mut(key) {
+            Some(parked) => {
+                parked.push(follower());
+                Role::Coalesced
+            }
+            None => {
+                inner.insert(key.to_string(), Vec::new());
+                Role::Leader
+            }
+        }
+    }
+
+    /// Close the flight for `key`, returning its parked followers (empty
+    /// if none parked, or if no flight was open). The leader calls this
+    /// with its outcome in hand and delivers to every follower; a later
+    /// request for the same key starts a fresh flight.
+    pub fn complete(&self, key: &str) -> Vec<F> {
+        self.lock().remove(key).unwrap_or_default()
+    }
+
+    /// Open flights right now (a gauge, used by tests).
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    /// Whether no flight is open.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<String, Vec<F>>> {
+        // the map is valid at every step; recover from poisoning like the
+        // service stats lock rather than wedging the request path
+        self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn first_joiner_leads_and_later_joiners_park_in_order() {
+        let sf: SingleFlight<u32> = SingleFlight::new();
+        assert_eq!(sf.join("k", || unreachable!("leader must not build a follower")), Role::Leader);
+        assert_eq!(sf.join("k", || 1), Role::Coalesced);
+        assert_eq!(sf.join("k", || 2), Role::Coalesced);
+        // a different key is its own flight
+        assert_eq!(sf.join("other", || unreachable!()), Role::Leader);
+        assert_eq!(sf.len(), 2);
+        assert_eq!(sf.complete("k"), vec![1, 2]);
+        // completion closes the flight: the next joiner leads a fresh one
+        assert_eq!(sf.join("k", || unreachable!()), Role::Leader);
+        assert_eq!(sf.complete("k"), Vec::<u32>::new());
+        assert_eq!(sf.complete("never-opened"), Vec::<u32>::new());
+        assert_eq!(sf.complete("other"), Vec::<u32>::new());
+        assert!(sf.is_empty());
+    }
+
+    #[test]
+    fn concurrent_joiners_elect_exactly_one_leader() {
+        let sf: Arc<SingleFlight<usize>> = Arc::new(SingleFlight::new());
+        let leaders = Arc::new(AtomicUsize::new(0));
+        let threads: Vec<_> = (0..16)
+            .map(|i| {
+                let (sf, leaders) = (Arc::clone(&sf), Arc::clone(&leaders));
+                std::thread::spawn(move || {
+                    if sf.join("hot-key", || i) == Role::Leader {
+                        leaders.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(leaders.load(Ordering::SeqCst), 1, "exactly one leader per flight");
+        let followers = sf.complete("hot-key");
+        assert_eq!(followers.len(), 15, "everyone else parked");
+        assert!(sf.is_empty());
+    }
+}

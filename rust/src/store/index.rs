@@ -1,0 +1,106 @@
+//! The warehouse index: canonical request key → newest on-disk record.
+//!
+//! Built by replaying segments in numeric order at boot. The warehouse is
+//! append-only, so one key can appear in many records; replay order is
+//! append order and **last wins** — which is also what makes compaction
+//! crash-safe (compacted copies land in higher-numbered segments, so a
+//! crash that leaves both old and new on disk replays to the same index).
+
+use std::collections::HashMap;
+
+/// Where a record's line lives on disk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecordLoc {
+    /// segment id (`seg-{id:06}.jsonl`)
+    pub segment: u64,
+    /// byte offset of the record line within the segment file
+    pub offset: u64,
+    /// line length in bytes, excluding the newline
+    pub len: u64,
+    /// the record's logical append stamp
+    pub stamp: u64,
+}
+
+/// In-memory map from canonical request key to the newest record holding
+/// its plan. Keys are resident (they're small); plan bytes stay on disk.
+#[derive(Debug, Default)]
+pub struct Index {
+    map: HashMap<String, RecordLoc>,
+    /// records replayed over by a newer one for the same key (cumulative
+    /// since load — the bytes compaction will reclaim)
+    superseded: u64,
+}
+
+impl Index {
+    /// An empty index.
+    pub fn new() -> Index {
+        Index::default()
+    }
+
+    /// Record `key` at `loc`, superseding any earlier record.
+    pub fn insert(&mut self, key: String, loc: RecordLoc) {
+        if self.map.insert(key, loc).is_some() {
+            self.superseded += 1;
+        }
+    }
+
+    /// The newest location for `key`.
+    pub fn get(&self, key: &str) -> Option<RecordLoc> {
+        self.map.get(key).copied()
+    }
+
+    /// Whether `key` has a live record.
+    pub fn contains(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Live (newest-per-key) record count.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Whether no key has a live record.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Records superseded by a newer same-key append since load.
+    pub fn superseded(&self) -> u64 {
+        self.superseded
+    }
+
+    /// Live keys in sorted order — compaction iterates this so rewritten
+    /// segments are deterministic for a given live set.
+    pub fn sorted_keys(&self) -> Vec<String> {
+        let mut keys: Vec<String> = self.map.keys().cloned().collect();
+        keys.sort_unstable();
+        keys
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loc(segment: u64, offset: u64) -> RecordLoc {
+        RecordLoc { segment, offset, len: 10, stamp: segment }
+    }
+
+    #[test]
+    fn last_write_wins_and_supersession_is_counted() {
+        let mut ix = Index::new();
+        assert!(ix.is_empty());
+        ix.insert("a".into(), loc(1, 0));
+        ix.insert("b".into(), loc(1, 11));
+        assert_eq!(ix.len(), 2);
+        assert_eq!(ix.superseded(), 0);
+        // replay of a newer record for "a" replaces the old location
+        ix.insert("a".into(), loc(2, 0));
+        assert_eq!(ix.len(), 2);
+        assert_eq!(ix.superseded(), 1);
+        assert_eq!(ix.get("a"), Some(loc(2, 0)));
+        assert!(ix.contains("b"));
+        assert!(!ix.contains("c"));
+        assert_eq!(ix.sorted_keys(), vec!["a".to_string(), "b".to_string()]);
+    }
+}

@@ -1,0 +1,279 @@
+//! Append-only JSONL segment files: the warehouse's on-disk unit.
+//!
+//! One record per line, `{"v":1,"stamp":S,"crc":C,"key":"...","plan":"..."}`
+//! with a fixed field order. `key` is the request's canonical v1
+//! serialization (id cleared — [`crate::service::PlanCache::key`]) and
+//! `plan` the anonymized serialized plan line; `crc` is an IEEE CRC-32
+//! over the raw key bytes followed by the raw plan bytes, so a record
+//! that parses but was corrupted in either payload is still caught.
+//!
+//! The scanner is where crash tolerance lives: a process killed mid-append
+//! leaves the final record torn — an unterminated chunk, or a terminated
+//! line that no longer parses or checksums. [`scan_segment`] classifies a
+//! maximal all-bad *suffix* as the torn tail (reported via
+//! [`SegmentScan::good_bytes`], which the warehouse truncates the file to
+//! before its next append), while a bad line *followed by good ones* —
+//! external corruption, not a crash — is skipped and counted so boot
+//! never aborts and compaction can drop it.
+
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+/// IEEE CRC-32 lookup table, built at compile time.
+const CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// IEEE CRC-32 over a sequence of byte slices (equivalent to hashing
+/// their concatenation, without materializing it).
+pub fn crc32(parts: &[&[u8]]) -> u32 {
+    let mut c = !0u32;
+    for part in parts {
+        for &b in *part {
+            c = CRC_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+        }
+    }
+    !c
+}
+
+/// One decoded warehouse record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Record {
+    /// logical append stamp (monotonic per warehouse, recency diagnostic)
+    pub stamp: u64,
+    /// canonical request serialization, correlation id cleared
+    pub key: String,
+    /// anonymized serialized plan line (what the service responds with
+    /// for an id-less request; id-carrying requests restamp a copy)
+    pub plan: String,
+}
+
+/// Encode one record as a JSONL line **without** the trailing newline.
+pub fn encode_record(stamp: u64, key: &str, plan: &str) -> String {
+    let mut o = crate::util::json::JsonObj::new();
+    o.set("v", crate::plan::WIRE_VERSION)
+        .set("stamp", stamp)
+        .set("crc", crc32(&[key.as_bytes(), plan.as_bytes()]))
+        .set("key", key)
+        .set("plan", plan);
+    crate::util::json::Json::Obj(o).dumps()
+}
+
+/// Decode and verify one record line. Errors are strings (not
+/// [`std::io::Error`]) because the caller's reaction is positional —
+/// torn tail versus mid-file corruption — not error-kind based.
+pub fn decode_record(line: &str) -> Result<Record, String> {
+    let j = crate::util::json::parse(line).map_err(|e| format!("parse record: {e}"))?;
+    let o = j.as_obj().ok_or("record must be a JSON object")?;
+    crate::plan::wire::check_version(o, "warehouse record").map_err(|e| e.0)?;
+    let field = |name: &str| -> Result<&str, String> {
+        o.get(name)
+            .and_then(crate::util::json::Json::as_str)
+            .ok_or_else(|| format!("record missing string '{name}'"))
+    };
+    let int = |name: &str| -> Result<u64, String> {
+        match o.get(name).and_then(crate::util::json::Json::as_f64) {
+            Some(v) if v >= 0.0 && v == v.trunc() && v < 9.0e15 => Ok(v as u64),
+            _ => Err(format!("record missing integer '{name}'")),
+        }
+    };
+    let key = field("key")?;
+    let plan = field("plan")?;
+    let crc = int("crc")? as u32;
+    let want = crc32(&[key.as_bytes(), plan.as_bytes()]);
+    if crc != want {
+        return Err(format!("crc mismatch (stored {crc}, computed {want})"));
+    }
+    Ok(Record { stamp: int("stamp")?, key: key.to_string(), plan: plan.to_string() })
+}
+
+/// Segment file names: `seg-000001.jsonl`, numbered from 1, zero-padded
+/// so lexical order is numeric order.
+pub fn segment_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("seg-{id:06}.jsonl"))
+}
+
+/// Parse a segment id back out of a file name; `None` for anything that
+/// is not a `seg-NNNNNN.jsonl` (the loader ignores foreign files).
+pub fn segment_id(name: &str) -> Option<u64> {
+    let digits = name.strip_prefix("seg-")?.strip_suffix(".jsonl")?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// One record's location within a scanned segment.
+#[derive(Debug, Clone, Copy)]
+pub struct ScannedRecord {
+    /// byte offset of the record line within the segment file
+    pub offset: u64,
+    /// line length in bytes, excluding the newline
+    pub len: u64,
+}
+
+/// Result of scanning one segment file.
+#[derive(Debug)]
+pub struct SegmentScan {
+    /// decoded records in file order, with their byte spans
+    pub records: Vec<(ScannedRecord, Record)>,
+    /// byte length of the intact prefix: everything up to and including
+    /// the last good record's newline (the truncation point when torn)
+    pub good_bytes: u64,
+    /// bad lines *inside* the intact prefix (skipped, not indexed)
+    pub corrupt: usize,
+    /// whether the file ends in a torn tail (bytes past `good_bytes`)
+    pub torn: bool,
+}
+
+/// Scan a segment file: decode every line, classify the torn tail, and
+/// report the intact-prefix length. Never errors on content — only on
+/// I/O.
+pub fn scan_segment(path: &Path) -> std::io::Result<SegmentScan> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+    // split into newline-terminated lines; a trailing chunk without a
+    // newline is by definition part of the torn tail
+    let mut lines: Vec<(u64, u64, bool)> = Vec::new(); // (offset, len, terminated)
+    let mut start = 0usize;
+    for (i, &b) in bytes.iter().enumerate() {
+        if b == b'\n' {
+            lines.push((start as u64, (i - start) as u64, true));
+            start = i + 1;
+        }
+    }
+    if start < bytes.len() {
+        lines.push((start as u64, (bytes.len() - start) as u64, false));
+    }
+    let decoded: Vec<Option<Record>> = lines
+        .iter()
+        .map(|&(off, len, terminated)| {
+            if !terminated {
+                return None;
+            }
+            let raw = &bytes[off as usize..(off + len) as usize];
+            std::str::from_utf8(raw).ok().and_then(|s| decode_record(s.trim_end()).ok())
+        })
+        .collect();
+    // the torn tail is the maximal all-bad suffix; bad lines before the
+    // last good one are mid-file corruption, skipped but kept
+    let last_good = decoded.iter().rposition(Option::is_some);
+    let (prefix_end, good_bytes) = match last_good {
+        Some(i) => (i + 1, lines[i].0 + lines[i].1 + 1), // +1: the newline
+        None => (0, 0),
+    };
+    let mut records = Vec::new();
+    let mut corrupt = 0usize;
+    for (i, rec) in decoded.into_iter().take(prefix_end).enumerate() {
+        match rec {
+            Some(r) => {
+                records.push((ScannedRecord { offset: lines[i].0, len: lines[i].1 }, r))
+            }
+            None => corrupt += 1,
+        }
+    }
+    Ok(SegmentScan { records, good_bytes, corrupt, torn: good_bytes < bytes.len() as u64 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_the_ieee_reference_vector() {
+        // the classic check value for IEEE CRC-32
+        assert_eq!(crc32(&[b"123456789"]), 0xCBF4_3926);
+        // split points don't change the digest
+        assert_eq!(crc32(&[b"1234", b"56789"]), 0xCBF4_3926);
+        assert_eq!(crc32(&[b""]), 0);
+    }
+
+    #[test]
+    fn records_roundtrip_and_crc_guards_both_payloads() {
+        let line = encode_record(7, r#"{"v":1,"net":{"zoo":"lenet"}}"#, r#"{"v":1,"best":1}"#);
+        let rec = decode_record(&line).unwrap();
+        assert_eq!(rec.stamp, 7);
+        assert_eq!(rec.key, r#"{"v":1,"net":{"zoo":"lenet"}}"#);
+        assert_eq!(rec.plan, r#"{"v":1,"best":1}"#);
+        // flip one payload byte: the JSON still parses, the crc catches it
+        let tampered = line.replace("lenet", "lenex");
+        assert!(decode_record(&tampered).unwrap_err().contains("crc mismatch"));
+        assert!(decode_record("not json").is_err());
+        assert!(decode_record(r#"{"v":2,"stamp":1,"crc":0,"key":"k","plan":"p"}"#).is_err());
+    }
+
+    #[test]
+    fn segment_names_roundtrip_and_reject_foreign_files() {
+        let p = segment_path(Path::new("/w"), 42);
+        assert_eq!(p.file_name().unwrap().to_str().unwrap(), "seg-000042.jsonl");
+        assert_eq!(segment_id("seg-000042.jsonl"), Some(42));
+        assert_eq!(segment_id("seg-1000000.jsonl"), Some(1_000_000)); // wider than the pad
+        assert_eq!(segment_id("seg-.jsonl"), None);
+        assert_eq!(segment_id("seg-12.jsonl.tmp"), None);
+        assert_eq!(segment_id("metrics.json"), None);
+    }
+
+    fn temp_file(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("xbarmap-seg-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn scan_truncates_a_torn_tail_but_skips_mid_file_corruption() {
+        let good1 = encode_record(1, "k1", "p1");
+        let good2 = encode_record(2, "k2", "p2");
+        let path = temp_file("torn");
+
+        // torn tail: unterminated half-record after two good ones
+        let torn = format!("{good1}\n{good2}\n{{\"v\":1,\"stamp\":3,\"crc");
+        std::fs::write(&path, &torn).unwrap();
+        let scan = scan_segment(&path).unwrap();
+        assert_eq!(scan.records.len(), 2);
+        assert_eq!(scan.good_bytes, (good1.len() + good2.len() + 2) as u64);
+        assert!(scan.torn);
+        assert_eq!(scan.corrupt, 0);
+
+        // a terminated-but-corrupt FINAL line is also a torn tail (the
+        // crash landed after the newline of the previous record)
+        let torn2 = format!("{good1}\ngarbage\n");
+        std::fs::write(&path, &torn2).unwrap();
+        let scan = scan_segment(&path).unwrap();
+        assert_eq!(scan.records.len(), 1);
+        assert_eq!(scan.good_bytes, (good1.len() + 1) as u64);
+        assert!(scan.torn);
+
+        // mid-file corruption followed by a good record: skipped, counted,
+        // and the good suffix still loads (no truncation)
+        let mid = format!("{good1}\ngarbage\n{good2}\n");
+        std::fs::write(&path, &mid).unwrap();
+        let scan = scan_segment(&path).unwrap();
+        assert_eq!(scan.records.len(), 2);
+        assert_eq!(scan.corrupt, 1);
+        assert!(!scan.torn);
+        assert_eq!(scan.good_bytes, mid.len() as u64);
+
+        // wholly-garbage file: nothing loads, everything is tail
+        std::fs::write(&path, "junk with no newline").unwrap();
+        let scan = scan_segment(&path).unwrap();
+        assert!(scan.records.is_empty());
+        assert_eq!(scan.good_bytes, 0);
+        assert!(scan.torn);
+
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -14,7 +14,11 @@
 //! * the fault layer only shapes traffic, so even a *faulted* (but
 //!   uncut) connection's responses match the oracle exactly, and a *cut*
 //!   connection's responses match the oracle applied to precisely the
-//!   byte prefix that made it out before the cut.
+//!   byte prefix that made it out before the cut;
+//! * the plan warehouse survives a seeded kill mid-append: a reboot over
+//!   a segment cut strictly inside its final record truncates the torn
+//!   tail, serves every intact record from disk byte-identically to the
+//!   oracle, and re-solves (re-persisting) only the torn key.
 //!
 //! The seed matrix is fixed (deterministic PRNG ⇒ bit-identical
 //! fragmentation per seed); CI runs it at `XBARMAP_SWEEP_THREADS=1` and
@@ -22,12 +26,15 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
 use std::sync::mpsc;
 use std::thread;
 use std::time::Duration;
 use xbarmap::plan::{self, wire};
 use xbarmap::service::{Service, ServiceConfig, ServiceHandle};
+use xbarmap::store::{Warehouse, WarehouseConfig};
 use xbarmap::util::fault::{FaultPlan, FaultyStream};
+use xbarmap::util::prng::Rng;
 
 /// Fixed fault-seed matrix — every seed yields a distinct, reproducible
 /// fragmentation/stall/cut pattern.
@@ -178,6 +185,101 @@ fn scenario(seed: u64) {
 fn chaos_seed_matrix_never_hangs_and_never_loses_healthy_responses() {
     for &seed in SEEDS {
         with_watchdog(format!("chaos seed {seed}"), move || scenario(seed));
+    }
+}
+
+/// Start a service whose only plan store is a warehouse at `dir` (LRU
+/// off, one worker so append order is the stream order).
+fn start_warehoused(
+    dir: &PathBuf,
+) -> (ServiceHandle, SocketAddr, thread::JoinHandle<wire::StatsSnapshot>) {
+    let svc = Service::bind(&ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_capacity: 4,
+        cache_capacity: 0,
+        warehouse: Some(dir.clone()),
+        ..ServiceConfig::default()
+    })
+    .unwrap();
+    let addr = svc.local_addr().unwrap();
+    let handle = svc.handle();
+    let join = thread::spawn(move || svc.run().unwrap());
+    (handle, addr, join)
+}
+
+/// One seed's worth of warehouse chaos: serve and persist a stream, kill
+/// the store "mid-append" by cutting a seeded number of bytes strictly
+/// inside the newest segment's final record, then reboot over the
+/// mutilated directory — boot must truncate the torn tail, serve every
+/// intact record from disk byte-identically to the oracle, and re-solve
+/// (and re-persist) only the torn key.
+fn warehouse_scenario(seed: u64) {
+    let dir = std::env::temp_dir()
+        .join(format!("xbarmap-chaos-wh-{}-{seed}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let input = request_stream(1000 + seed);
+    let want = oracle(&input);
+
+    // phase 1: healthy traffic populates the store (3 distinct keys), the
+    // drain guarantees every queued append landed before run() returned
+    {
+        let (handle, addr, join) = start_warehoused(&dir);
+        assert_eq!(drive_healthy(addr, &input), want, "seed {seed}: phase-1 diverged");
+        handle.shutdown();
+        let stats = join.join().unwrap();
+        assert_eq!(stats.warehouse_writes, 3, "every solve must persist");
+        assert_eq!(stats.warehouse_hits, 0);
+    }
+
+    // the "crash": cut 2..len-1 bytes off the final record (newline
+    // included), leaving a partial line — exactly what a process killed
+    // mid-append leaves behind
+    let seg = {
+        let mut segs: Vec<PathBuf> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .collect();
+        segs.sort();
+        segs.pop().expect("phase 1 must have written a segment")
+    };
+    let text = std::fs::read_to_string(&seg).unwrap();
+    let last_line_len = text.trim_end_matches('\n').rsplit('\n').next().unwrap().len() + 1;
+    let mut rng = Rng::new(0xc0ffee ^ seed);
+    let cut = rng.range(2, last_line_len - 1) as u64;
+    let file = std::fs::OpenOptions::new().write(true).open(&seg).unwrap();
+    file.set_len(text.len() as u64 - cut).unwrap();
+    drop(file);
+
+    // phase 2: reboot over the torn directory — boot truncates the tail,
+    // the two intact records serve from disk, the torn key re-solves, and
+    // the whole stream is still byte-identical to serve_jsonl
+    {
+        let (handle, addr, join) = start_warehoused(&dir);
+        assert_eq!(drive_healthy(addr, &input), want, "seed {seed}: post-crash reboot diverged");
+        handle.shutdown();
+        let stats = join.join().unwrap();
+        assert_eq!(stats.warehouse_hits, 2, "seed {seed}: both intact records must serve");
+        assert_eq!(stats.warehouse_writes, 1, "seed {seed}: only the torn key re-solves");
+        assert_eq!(stats.errors, 1, "the malformed line, nothing else");
+        assert_eq!(stats.panics, 0);
+    }
+
+    // the re-solve healed the store: a fresh replay sees 3 live records
+    // and no torn tail left to truncate
+    let (wh, report) = Warehouse::open(&WarehouseConfig::at(&dir)).unwrap();
+    assert_eq!(report.records, 3, "seed {seed}: healed store must hold every key");
+    assert_eq!(report.truncated_tails, 0, "seed {seed}: phase-2 boot already truncated");
+    assert_eq!(report.corrupt, 0);
+    assert_eq!(wh.len(), 3);
+    drop(wh);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_warehouse_tails_are_truncated_and_reboots_stay_oracle_identical() {
+    for &seed in SEEDS {
+        with_watchdog(format!("warehouse chaos seed {seed}"), move || warehouse_scenario(seed));
     }
 }
 

@@ -6,14 +6,19 @@
 //! in-quota connections, the `--metrics-out` writer leaves a
 //! bench-schema snapshot, shutdown drains cleanly, a panicking solve is
 //! contained to its one request (typed `internal` reject, worker
-//! survives), and a deadline-exceeding solve gets the typed `deadline`
-//! reject while light requests keep completing oracle-identically.
+//! survives), a deadline-exceeding solve gets the typed `deadline`
+//! reject while light requests keep completing oracle-identically, a
+//! cold boot over a precomputed plan warehouse serves byte-identically
+//! from disk, a torn warehouse tail never aborts boot, and concurrent
+//! identical misses single-flight coalesce onto one solve.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
 use std::thread;
-use xbarmap::plan::{self, wire};
-use xbarmap::service::{Service, ServiceConfig, ServiceHandle};
+use xbarmap::plan::{self, wire, MapRequest};
+use xbarmap::service::{PlanCache, Service, ServiceConfig, ServiceHandle};
+use xbarmap::store::{Warehouse, WarehouseConfig};
 use xbarmap::util::json;
 
 fn start_with(
@@ -483,4 +488,181 @@ fn shutdown_drains_open_connections_without_losing_responses() {
     assert_eq!(stats.errors, 0);
     assert_eq!(stats.cache_hits, 0);
     assert!(stats.plan_p50_s > 0.0);
+}
+
+/// Fresh per-test warehouse directory (std-only; no tempfile crate).
+fn warehouse_dir(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("xbarmap-it-wh-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn cold_boot_over_a_precomputed_warehouse_is_byte_identical_to_serve_jsonl() {
+    let dir = warehouse_dir("warmboot");
+    // every request pins "threads":1 — provenance.threads is wire-visible
+    // and environment-dependent for threads:0, so precomputed plans are
+    // pure functions of the canonical key only when pinned (exactly what
+    // `xbarmap warehouse precompute` does)
+    let fixed = r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"fixed":[128,128]},"threads":1}"#;
+    let grid = r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"grid":{"row_exp":[6,8],"aspects":[1,2]}},"discipline":"pipeline","threads":1}"#;
+    // precompute phase: solve offline, store anonymized plans under their
+    // canonical keys, drop everything but the directory
+    {
+        let (wh, _) = Warehouse::open(&WarehouseConfig::at(&dir)).unwrap();
+        for line in [fixed, grid] {
+            let req = MapRequest::from_json(&json::parse(line).unwrap()).unwrap();
+            let key = PlanCache::key(&req);
+            let mut plan = req.build().unwrap().plan().unwrap();
+            plan.id.clear();
+            wh.append(&key, &plan.to_json().dumps()).unwrap();
+        }
+        assert_eq!(wh.len(), 2);
+    }
+
+    let (handle, addr, join) = start_with(ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        queue_capacity: 4,
+        cache_capacity: 64,
+        warehouse: Some(dir.clone()),
+        ..ServiceConfig::default()
+    });
+    // distinct keys plus an error line: both plans must come off disk,
+    // byte-identical to a fresh serve_jsonl solve of the same stream
+    let input = format!("{fixed}\nnot json\n{grid}\n");
+    let got = drive(addr, &input);
+    assert_eq!(got, oracle(&input), "warm-boot responses diverge from serve_jsonl");
+
+    // lock-step follow-ups on a fresh connection: each round-trip
+    // completes before the next is admitted, so the promoted LRU entry
+    // answers deterministically (no single-flight window to race)
+    let with_id = r#"{"v":1,"id":"w1","net":{"zoo":"lenet"},"tiles":{"fixed":[128,128]},"threads":1}"#;
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut roundtrip = |line: &str| -> String {
+        stream.write_all(line.as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut response = String::new();
+        assert!(reader.read_line(&mut response).unwrap() > 0, "response lost");
+        response.trim_end().to_string()
+    };
+    assert_eq!(roundtrip(fixed), got[0], "LRU-promoted repeat must serve identical bytes");
+    let restamped = roundtrip(with_id);
+    assert_eq!(restamped, oracle(&format!("{with_id}\n"))[0], "id restamp diverges");
+    assert_eq!(
+        json::parse(&restamped).unwrap().get("id").and_then(|v| v.as_str()),
+        Some("w1")
+    );
+    drop(reader);
+    drop(stream);
+
+    handle.shutdown();
+    let stats = join.join().unwrap();
+    // first touch of each distinct key reads the store; the lock-step
+    // repeats hit the promoted LRU entry; nothing was solved, so nothing
+    // was written back
+    assert_eq!(stats.served, 4);
+    assert_eq!(stats.errors, 1);
+    assert_eq!(stats.warehouse_hits, 2);
+    assert_eq!(stats.cache_hits, 2);
+    assert_eq!(stats.warehouse_writes, 0, "no solve may have happened");
+    assert_eq!(stats.coalesced, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn a_torn_warehouse_never_aborts_boot_and_solves_repopulate_it() {
+    let dir = warehouse_dir("tornboot");
+    std::fs::create_dir_all(&dir).unwrap();
+    // a crash mid-append left half a record and no newline
+    std::fs::write(
+        dir.join("seg-000001.jsonl"),
+        br#"{"v":1,"stamp":7,"crc":123,"key":"k","pl"#,
+    )
+    .unwrap();
+    let config = ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_capacity: 4,
+        cache_capacity: 0, // LRU off: the second boot must answer from disk
+        warehouse: Some(dir.clone()),
+        ..ServiceConfig::default()
+    };
+    let (handle, addr, join) = start_with(config.clone());
+    let req = r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"fixed":[64,64]},"threads":1}"#;
+    let input = format!("{req}\n");
+    let got = drive(addr, &input);
+    assert_eq!(got, oracle(&input));
+    handle.shutdown();
+    let stats = join.join().unwrap();
+    assert_eq!(stats.warehouse_hits, 0, "the torn record must not have survived");
+    assert_eq!(stats.warehouse_writes, 1, "the fresh solve must persist before drain");
+
+    // second boot over the repopulated directory serves the same bytes
+    // straight from the store
+    let (handle2, addr2, join2) = start_with(config);
+    assert_eq!(drive(addr2, &input), got);
+    handle2.shutdown();
+    let stats2 = join2.join().unwrap();
+    assert_eq!(stats2.warehouse_hits, 1);
+    assert_eq!(stats2.warehouse_writes, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_identical_misses_coalesce_onto_one_solve() {
+    // ONE worker, occupied by a slow sweep: the herd's requests are all
+    // admitted (and their flights joined) while the worker is busy, so
+    // exactly one becomes the leader and the rest park on its solve —
+    // with a single worker there is no second thread that could solve a
+    // duplicate, making `cache_hits == 0 && coalesced == N-1` the proof
+    // of exactly one solve
+    let (handle, addr, join) = start_with(ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_capacity: 8,
+        cache_capacity: 64,
+        ..ServiceConfig::default()
+    });
+    let slow = r#"{"v":1,"net":{"zoo":"resnet18"},"tiles":{"grid":{"row_exp":[6,10],"aspects":[1,2,3]}}}"#;
+    let herd_line = |i: usize| {
+        format!(
+            "{{\"v\":1,\"id\":\"h{i}\",\"net\":{{\"zoo\":\"resnet18\"}},\"tiles\":{{\"grid\":{{\"row_exp\":[6,9],\"aspects\":[1,2]}}}}}}\n"
+        )
+    };
+    let occupier = thread::spawn(move || drive(addr, &format!("{slow}\n")));
+    // give the worker time to dequeue the occupier; the herd then has the
+    // whole remaining solve (plus the leader's own slow solve) to gather
+    thread::sleep(std::time::Duration::from_millis(30));
+    let herd: Vec<thread::JoinHandle<(String, Vec<String>)>> = (0..6)
+        .map(|i| {
+            thread::spawn(move || {
+                let input = herd_line(i);
+                let got = drive(addr, &input);
+                (input, got)
+            })
+        })
+        .collect();
+    let mut bodies = Vec::new();
+    for client in herd {
+        let (input, got) = client.join().unwrap();
+        assert_eq!(got, oracle(&input), "coalesced response diverges from a fresh solve");
+        // normalize the per-client id: every member must carry identical
+        // plan bytes around it
+        let mut j = json::parse(&got[0]).unwrap();
+        if let json::Json::Obj(obj) = &mut j {
+            obj.set("id", json::Json::Str(String::new()));
+        }
+        bodies.push(j.dumps());
+    }
+    assert!(bodies.windows(2).all(|w| w[0] == w[1]), "herd plans must be identical");
+    assert_eq!(occupier.join().unwrap().len(), 1);
+    handle.shutdown();
+    let stats = join.join().unwrap();
+    assert_eq!(stats.served, 7, "occupier + six herd members");
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.coalesced, 5, "six identical misses, one leader");
+    assert_eq!(stats.cache_hits, 0, "nobody raced past the flight to a cache hit");
 }
