@@ -17,7 +17,11 @@
 //!   warm-boot disk tier (index lookup + segment read + CRC re-verify);
 //! * `serve/roundtrip/lenet-grid68/coalesced-herd` — four clients fire
 //!   the same canonical request concurrently with caching off, so each
-//!   iteration is one solve plus three single-flight coalesced copies.
+//!   iteration is one solve plus three single-flight coalesced copies;
+//! * `serve/roundtrip/lenet-fixed256/cluster-hit` — the same warmed
+//!   cache-hit round trip through a two-shard cluster router, so the
+//!   delta against `cache-hit` prices the routing hop (ring lookup +
+//!   forwarder lane + worker socket round trip + re-sequencing).
 //!
 //! Round trips go through the crate's retrying client
 //! ([`xbarmap::plan::client`]) — the same transport a tenant fleet and
@@ -25,6 +29,8 @@
 //! connection setup is not the thing being measured.
 
 use std::net::SocketAddr;
+use std::path::PathBuf;
+use xbarmap::cluster::{Cluster, ClusterConfig};
 use xbarmap::plan::client::{Client, ClientConfig};
 use xbarmap::plan::wire;
 use xbarmap::service::{Service, ServiceConfig, ServiceHandle};
@@ -157,6 +163,35 @@ fn main() {
         let stats = join.join().unwrap();
         assert!(stats.coalesced > 0, "herd row never coalesced");
         assert_eq!(stats.cache_hits, 0);
+    }
+
+    // routed: the identical warmed cache hit, but through the cluster
+    // router and a real worker process — the delta vs cache-hit is the
+    // price of the routing hop
+    {
+        let cluster = Cluster::bind(ClusterConfig {
+            addr: "127.0.0.1:0".into(),
+            shards: 2,
+            exe: Some(PathBuf::from(env!("CARGO_BIN_EXE_xbarmap"))),
+            worker_args: vec!["--workers".into(), "2".into(), "--queue".into(), "16".into()],
+            ..ClusterConfig::default()
+        })
+        .expect("bind ephemeral cluster");
+        let addr = cluster.local_addr().unwrap();
+        let handle = cluster.handle();
+        let join = std::thread::spawn(move || cluster.run().unwrap());
+        let mut client = connect(addr);
+        roundtrip(&mut client, plan_req, &mut line); // warm the owner's cache
+        b.run("serve/roundtrip/lenet-fixed256/cluster-hit", || {
+            roundtrip(&mut client, plan_req, &mut line)
+        });
+        assert!(line.contains("\"best\""), "expected a plan, got: {line}");
+        drop(client);
+        handle.shutdown();
+        let stats = join.join().unwrap();
+        assert!(stats.cache_hits > 0, "cluster-hit row never hit the owner's cache");
+        assert_eq!(stats.shard_respawns, 0, "a shard died during the bench");
+        assert_eq!(stats.degraded, 0, "the router fell back to degraded mode");
     }
 
     b.emit_jsonl();

@@ -21,6 +21,8 @@ pub struct YieldModel {
 }
 
 impl YieldModel {
+    /// A model with `defect_density` killer defects per mm² (0 = perfect
+    /// yield; panics on negative densities).
     pub fn new(defect_density: f64) -> YieldModel {
         assert!(defect_density >= 0.0, "defect density must be non-negative");
         YieldModel { defect_density }

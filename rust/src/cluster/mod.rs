@@ -1,0 +1,824 @@
+//! Self-healing sharded planning cluster: one front **router** process
+//! that consistent-hashes requests across N supervised `serve --plans`
+//! **worker** processes (`xbarmap serve --plans --cluster N`).
+//!
+//! The single-process service ([`crate::service`]) already contains a
+//! panicking solve, but a worker that segfaults, leaks until the OOM
+//! killer arrives, or wedges in a runaway allocation takes the whole
+//! process with it. The cluster puts that blast radius behind a process
+//! boundary: each shard is a child process on a loopback port negotiated
+//! at spawn (the worker binds `:0` and announces the port on stdout), a
+//! per-shard supervisor ([`supervisor`]) respawns the dead, and the
+//! router replays the requests a dead shard still owed.
+//!
+//! **The contract is byte-identity.** For every client connection the
+//! routed response stream is byte-for-byte what a single-process
+//! [`crate::plan::serve_jsonl`] would have produced, faults included:
+//!
+//! * framing is shared code — the router reads lines through the same
+//!   [`crate::service::LineReader`] the service uses, applies the same
+//!   per-connection quota and in-flight admission (same frames, same
+//!   wording), and delivers responses through the same re-sequencing
+//!   [`Conn`] so out-of-order shard completions merge back into request
+//!   order;
+//! * plan frames returned by a shard are forwarded **verbatim** — never
+//!   re-serialized, so float formatting cannot drift;
+//! * shard error/reject frames are rebuilt with the client's own line
+//!   number through the same [`wire`] constructors the service uses (a
+//!   forwarder connection has its own line numbering; the client must
+//!   see its own);
+//! * replay is safe because planning is pure: a request re-sent to a
+//!   fresh incarnation (counted in `replayed`) or solved by the router's
+//!   embedded planner (degraded mode, counted in `degraded`) produces
+//!   the same bytes the dead shard would have sent.
+//!
+//! Failover is replay-first, degrade-second: a forwarder that loses its
+//! shard waits for the supervisor's respawn (bounded by
+//! [`ClusterConfig::route_wait`]) and re-sends, up to
+//! [`ClusterConfig::replay_budget`] attempts; past the budget — or
+//! immediately while the shard's circuit breaker is open — the router
+//! answers from its own in-process planner. Degraded answers skip the
+//! dead shard's cache and warehouse, so they may be slower; they are
+//! never different.
+//!
+//! Observability: in-band `stats`/`metrics` commands are answered by the
+//! router with a **cluster snapshot** — live-probed per-shard counters,
+//! the history of dead incarnations (so counters stay monotone across
+//! respawns), and the router's own `shard_respawns` / `replayed` /
+//! `degraded` counters (WIRE.md §6 defines the merge rules).
+
+mod ring;
+pub(crate) mod supervisor;
+
+pub use ring::HashRing;
+
+use crate::plan::{self, PlanError};
+use crate::plan::client::{Client, ClientConfig};
+use crate::plan::wire;
+use crate::service::{self, conn::Conn, PlanCache};
+use crate::util::json::{self, Json};
+use crate::util::mpmc::Queue;
+use supervisor::Shard;
+
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Capacity of one connection's per-shard forwarding lane. Small on
+/// purpose: a full lane blocks the connection's reader, which is the
+/// same TCP-window backpressure the single service applies via its
+/// bounded queue.
+const FORWARD_QUEUE: usize = 64;
+
+/// Everything a router needs to run one cluster. Construct with
+/// [`ClusterConfig::default`] and override; the supervision knobs exist
+/// mostly so the chaos suites can compress minutes of failure handling
+/// into milliseconds.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// router bind address, e.g. `127.0.0.1:0`
+    pub addr: String,
+    /// worker process count (clamped to ≥ 1)
+    pub shards: usize,
+    /// worker binary; `None` spawns [`std::env::current_exe`] — the
+    /// router and its workers are the same binary in different roles
+    pub exe: Option<PathBuf>,
+    /// extra CLI flags passed through to every worker's `serve --plans`
+    /// (workers/queue/cache sizing, deadline). Admission flags stay at
+    /// the router: a worker quota would throttle the long-lived
+    /// forwarder connections, not clients.
+    pub worker_args: Vec<String>,
+    /// warehouse **root**: shard `i` opens `root/shard-NN` (its own
+    /// single-writer lock). Pre-shard with `warehouse precompute
+    /// --cluster N`, which partitions by the same [`HashRing`].
+    pub warehouse: Option<PathBuf>,
+    /// per-connection request quota, enforced at the router (0 = off)
+    pub per_conn_quota: usize,
+    /// cluster-wide in-flight admission cap at the router (0 = off)
+    pub max_inflight: usize,
+    /// solve budget for **degraded** local solves; forwarded requests
+    /// use the deadline the workers were configured with
+    pub deadline: Option<Duration>,
+    /// overwrite this file with the aggregated metrics snapshot
+    pub metrics_out: Option<PathBuf>,
+    /// how often to overwrite `metrics_out`
+    pub metrics_interval: Duration,
+    /// how long a spawned worker gets to announce its port
+    pub spawn_timeout: Duration,
+    /// gap between liveness probes of each worker
+    pub probe_interval: Duration,
+    /// per-probe connect/read budget
+    pub probe_timeout: Duration,
+    /// consecutive missed probes before a worker is declared hung and
+    /// killed — generous by default, because probes share the worker's
+    /// request queue and a long legitimate solve answers late
+    pub probe_misses: u32,
+    /// base of the capped exponential respawn backoff
+    pub respawn_backoff_base: Duration,
+    /// backoff ceiling
+    pub respawn_backoff_cap: Duration,
+    /// consecutive stillborn incarnations (died before a healthy probe)
+    /// that open the shard's circuit breaker
+    pub breaker_threshold: u32,
+    /// how long an open breaker parks before a half-open spawn attempt
+    pub breaker_cooldown: Duration,
+    /// failed forward attempts per request before degrading to the
+    /// router's embedded planner
+    pub replay_budget: u32,
+    /// per-attempt wait for the owning shard to come (back) up
+    pub route_wait: Duration,
+    /// forwarder read budget per roundtrip — effectively the longest
+    /// solve the cluster tolerates before treating the shard as lost
+    pub forward_read_timeout: Duration,
+    /// polite-exit budget per worker at shutdown before SIGKILL
+    pub drain_timeout: Duration,
+    /// trip shutdown on SIGINT/SIGTERM (the CLI sets this; tests don't)
+    pub watch_sigint: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> ClusterConfig {
+        ClusterConfig {
+            addr: "127.0.0.1:7878".into(),
+            shards: 2,
+            exe: None,
+            worker_args: Vec::new(),
+            warehouse: None,
+            per_conn_quota: 0,
+            max_inflight: 0,
+            deadline: None,
+            metrics_out: None,
+            metrics_interval: Duration::from_secs(10),
+            spawn_timeout: Duration::from_secs(10),
+            probe_interval: Duration::from_secs(1),
+            probe_timeout: Duration::from_secs(3),
+            probe_misses: 4,
+            respawn_backoff_base: Duration::from_millis(50),
+            respawn_backoff_cap: Duration::from_secs(5),
+            breaker_threshold: 5,
+            breaker_cooldown: Duration::from_secs(10),
+            replay_budget: 3,
+            route_wait: Duration::from_secs(5),
+            forward_read_timeout: Duration::from_secs(600),
+            drain_timeout: Duration::from_secs(10),
+            watch_sigint: false,
+        }
+    }
+}
+
+/// The shard subdirectory a cluster of any size agrees on: shard `i` of
+/// warehouse root `root` lives at `root/shard-NN`. Shared with
+/// `warehouse precompute --cluster` so pre-sharded stores land where the
+/// workers will look.
+pub fn shard_warehouse_dir(root: &Path, shard: usize) -> PathBuf {
+    root.join(format!("shard-{shard:02}"))
+}
+
+/// The router's own counters — everything not observable from a shard.
+#[derive(Default)]
+pub(crate) struct RouterStats {
+    connections: u64,
+    /// plan responses produced by the embedded planner (degraded mode)
+    local_served: u64,
+    /// error frames the router emitted itself (parse errors, command
+    /// errors, rejects, degraded failures)
+    local_errors: u64,
+    /// degraded solves that hit the local deadline
+    local_timeouts: u64,
+    /// degraded solves that panicked (contained, like a worker's)
+    local_panics: u64,
+    rejected_internal: u64,
+    rejected_over_quota: u64,
+    rejected_over_inflight: u64,
+    shard_respawns: u64,
+    replayed: u64,
+    degraded: u64,
+}
+
+/// State shared by the accept loop, connection readers, forwarders,
+/// supervisors and the metrics writer.
+pub(crate) struct ClusterShared {
+    pub(crate) cfg: ClusterConfig,
+    ring: HashRing,
+    pub(crate) shards: Vec<Shard>,
+    shutdown: AtomicBool,
+    /// set only after every owed response has gone out: supervisors keep
+    /// workers alive through the drain because replay needs them
+    stop_workers: AtomicBool,
+    sigint: Option<&'static AtomicBool>,
+    stats: Mutex<RouterStats>,
+    /// requests admitted by the router and not yet answered
+    inflight: AtomicUsize,
+    started: Instant,
+}
+
+impl ClusterShared {
+    fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+            || self.sigint.map(|f| f.load(Ordering::SeqCst)).unwrap_or(false)
+    }
+
+    pub(crate) fn workers_stopped(&self) -> bool {
+        self.stop_workers.load(Ordering::SeqCst)
+    }
+
+    pub(crate) fn lock_stats(&self) -> MutexGuard<'_, RouterStats> {
+        self.stats.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn note_reject(&self, kind: wire::RejectKind) {
+        let mut r = self.lock_stats();
+        r.local_errors += 1;
+        match kind {
+            wire::RejectKind::OverQuota => r.rejected_over_quota += 1,
+            wire::RejectKind::OverInflight => r.rejected_over_inflight += 1,
+            wire::RejectKind::Internal => r.rejected_internal += 1,
+            wire::RejectKind::Deadline => r.local_timeouts += 1,
+        }
+    }
+
+    /// The cluster-wide snapshot: every shard live-probed (falling back
+    /// to its folded history when dead), summed per WIRE.md §6's merge
+    /// rules, plus the router's own counters.
+    fn aggregate_metrics(&self) -> wire::MetricsSnapshot {
+        let mut agg = wire::MetricsSnapshot::default();
+        for shard in &self.shards {
+            let m = shard.fresh(self.cfg.probe_timeout);
+            supervisor::fold_counters(&mut agg, &m);
+            supervisor::fold_gauges(&mut agg, &m);
+        }
+        let r = self.lock_stats();
+        let s = &mut agg.stats;
+        // client-facing connections only: the folded shard figure counts
+        // forwarder and probe sockets, which are plumbing, so it is
+        // replaced rather than added to
+        s.connections = r.connections;
+        s.served += r.local_served;
+        s.errors += r.local_errors;
+        s.timeouts += r.local_timeouts;
+        s.panics += r.local_panics;
+        s.rejected_internal += r.rejected_internal;
+        s.shard_respawns = r.shard_respawns;
+        s.replayed = r.replayed;
+        s.degraded = r.degraded;
+        agg.rejected_over_quota += r.rejected_over_quota;
+        agg.rejected_over_inflight += r.rejected_over_inflight;
+        drop(r);
+        // a forwarded request is in flight at the router *and* inside its
+        // shard; report the router's view (admitted, unanswered) instead
+        // of double counting
+        agg.inflight = self.inflight.load(Ordering::SeqCst) as u64;
+        agg.uptime_s = self.started.elapsed().as_secs_f64();
+        agg
+    }
+
+    fn aggregate_stats(&self) -> wire::StatsSnapshot {
+        self.aggregate_metrics().stats
+    }
+}
+
+/// One admitted, decoded request travelling a connection's per-shard
+/// forwarding lane.
+struct FwdJob {
+    /// response slot in the connection's ordering
+    seq: usize,
+    /// the client's physical line number, restamped onto error frames
+    line_no: usize,
+    /// the raw request line, forwarded verbatim
+    text: String,
+    /// the decoded request — already parsed for routing, reused by the
+    /// degraded local solve
+    req: plan::MapRequest,
+}
+
+/// A sharded planning router. Lifecycle mirrors [`crate::service::Service`]:
+/// [`Cluster::bind`], then [`Cluster::run`] on a thread of its own, with a
+/// [`ClusterHandle`] for control.
+pub struct Cluster {
+    listener: TcpListener,
+    shared: Arc<ClusterShared>,
+}
+
+/// Remote control for a running [`Cluster`]: trip shutdown, read the
+/// aggregated snapshots, inject faults.
+#[derive(Clone)]
+pub struct ClusterHandle {
+    shared: Arc<ClusterShared>,
+}
+
+impl ClusterHandle {
+    /// Begin graceful shutdown: stop accepting, drain every owed
+    /// response (replaying or degrading as needed), then terminate the
+    /// workers.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// The aggregated cluster counters (same numbers as in-band `stats`).
+    pub fn stats(&self) -> wire::StatsSnapshot {
+        self.shared.aggregate_stats()
+    }
+
+    /// The aggregated observability snapshot (same as in-band `metrics`).
+    pub fn metrics(&self) -> wire::MetricsSnapshot {
+        self.shared.aggregate_metrics()
+    }
+
+    /// SIGKILL shard `shard`'s current worker — the chaos suites' fault
+    /// injector, exercising exactly the crash path production takes. A
+    /// no-op between incarnations.
+    pub fn kill_shard(&self, shard: usize) {
+        let pid = self.shared.shards[shard].pid();
+        if pid != 0 {
+            crate::util::proc::force_kill(pid);
+        }
+    }
+}
+
+impl Cluster {
+    /// Bind the router's listener. Workers are spawned by [`Cluster::run`].
+    pub fn bind(cfg: ClusterConfig) -> std::io::Result<Cluster> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let shards = cfg.shards.max(1);
+        Ok(Cluster {
+            listener,
+            shared: Arc::new(ClusterShared {
+                ring: HashRing::for_cluster(shards),
+                shards: (0..shards).map(|_| Shard::new()).collect(),
+                shutdown: AtomicBool::new(false),
+                stop_workers: AtomicBool::new(false),
+                sigint: if cfg.watch_sigint { Some(service::sigint_flag()) } else { None },
+                stats: Mutex::new(RouterStats::default()),
+                inflight: AtomicUsize::new(0),
+                started: Instant::now(),
+                cfg,
+            }),
+        })
+    }
+
+    /// The bound address — read this after binding to `:0`.
+    pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// A [`ClusterHandle`] for control while [`Cluster::run`] blocks.
+    pub fn handle(&self) -> ClusterHandle {
+        ClusterHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Serve until shutdown, then drain and return the final aggregated
+    /// stats. Blocks the calling thread; supervisors, connection readers
+    /// and forwarders run on their own threads.
+    pub fn run(self) -> std::io::Result<wire::StatsSnapshot> {
+        let shared = self.shared;
+        let mut sups = Vec::with_capacity(shared.shards.len());
+        for i in 0..shared.shards.len() {
+            let sh = Arc::clone(&shared);
+            sups.push(std::thread::spawn(move || supervisor::run(&sh, i)));
+        }
+        let metrics_writer = shared.cfg.metrics_out.clone().map(|path| {
+            let sh = Arc::clone(&shared);
+            std::thread::spawn(move || {
+                let mut last = Instant::now();
+                while !sh.is_shutdown() {
+                    std::thread::sleep(service::POLL);
+                    if last.elapsed() >= sh.cfg.metrics_interval {
+                        let _ = service::write_metrics_file(&path, &sh.aggregate_metrics());
+                        last = Instant::now();
+                    }
+                }
+            })
+        });
+        let fatal = |shared: &Arc<ClusterShared>, sups: Vec<std::thread::JoinHandle<()>>| {
+            // same discipline as the service's fatal accept arm: never
+            // leave supervisors (and their children) running behind a
+            // router that stopped serving
+            shared.shutdown.store(true, Ordering::SeqCst);
+            shared.stop_workers.store(true, Ordering::SeqCst);
+            for s in sups {
+                let _ = s.join();
+            }
+        };
+        if let Err(e) = self.listener.set_nonblocking(true) {
+            fatal(&shared, sups);
+            return Err(e);
+        }
+        let mut readers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !shared.is_shutdown() {
+            // reap finished readers each iteration (same rationale as the
+            // service: the busy path never reaches an idle branch)
+            let mut i = 0;
+            while i < readers.len() {
+                if readers[i].is_finished() {
+                    let _ = readers.swap_remove(i).join();
+                } else {
+                    i += 1;
+                }
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    shared.lock_stats().connections += 1;
+                    let _ = stream.set_nodelay(true);
+                    let Ok(writer) = stream.try_clone() else { continue };
+                    let _ = writer.set_write_timeout(Some(service::WRITE_TIMEOUT));
+                    let sh = Arc::clone(&shared);
+                    readers.push(std::thread::spawn(move || {
+                        read_client(&sh, stream, Arc::new(Conn::new(writer)));
+                    }));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(service::POLL);
+                }
+                Err(e) => {
+                    for r in readers {
+                        let _ = r.join();
+                    }
+                    fatal(&shared, sups);
+                    return Err(e);
+                }
+            }
+        }
+        // Drain. Readers stop feeding within one poll and join their
+        // forwarders, which finish every owed response — replaying onto
+        // respawned shards or degrading locally, so termination is
+        // bounded. Workers are stopped only after in-flight hits zero:
+        // stopping them earlier would turn replays into degrades.
+        for r in readers {
+            let _ = r.join();
+        }
+        while shared.inflight.load(Ordering::SeqCst) > 0 {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        shared.stop_workers.store(true, Ordering::SeqCst);
+        for s in sups {
+            let _ = s.join();
+        }
+        if let Some(w) = metrics_writer {
+            let _ = w.join();
+        }
+        if let Some(path) = &shared.cfg.metrics_out {
+            // final snapshot after the drain — the supervisors took a
+            // last probe of each worker before terminating it, so this
+            // reflects every response the cluster ever wrote
+            let _ = service::write_metrics_file(path, &shared.aggregate_metrics());
+        }
+        Ok(shared.aggregate_stats())
+    }
+}
+
+/// Read one client connection, mirroring the service's reader line for
+/// line: same [`service::LineReader`] framing, same quota/admission
+/// frames and wording, same sequencing through [`Conn`]. Commands and
+/// undecodable lines are answered by the router itself; decodable plan
+/// requests travel to their owning shard over a lazily created
+/// per-(connection, shard) forwarding lane, whose dedicated forwarder
+/// preserves that shard's FIFO order while [`Conn`] restores the global
+/// request order across shards.
+fn read_client(shared: &Arc<ClusterShared>, stream: TcpStream, conn: Arc<Conn>) {
+    let mut lines = service::LineReader::new(stream);
+    let mut seq = 0usize;
+    let mut line_no = 0usize;
+    let mut lanes: Vec<Option<Arc<Queue<FwdJob>>>> = (0..shared.shards.len()).map(|_| None).collect();
+    let mut forwarders: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    // answered with a terminal frame: drain the client's backlog so the
+    // kernel doesn't reset the socket under the owed responses
+    let mut terminal = false;
+    loop {
+        let text = match lines.next(|| shared.is_shutdown()) {
+            service::NextLine::End | service::NextLine::Abort => break,
+            service::NextLine::Oversized => {
+                line_no += 1;
+                shared.lock_stats().local_errors += 1;
+                let e = PlanError(format!(
+                    "request line exceeds {} bytes",
+                    service::MAX_LINE_BYTES
+                ));
+                conn.deliver(seq, wire::error_frame(line_no, &e).dumps());
+                seq += 1;
+                terminal = true;
+                break;
+            }
+            service::NextLine::Line(text) => text,
+        };
+        line_no += 1;
+        if text.is_empty() {
+            continue;
+        }
+        if shared.cfg.per_conn_quota > 0 && seq >= shared.cfg.per_conn_quota {
+            shared.note_reject(wire::RejectKind::OverQuota);
+            let e = PlanError(format!(
+                "connection exceeded its {}-request quota",
+                shared.cfg.per_conn_quota
+            ));
+            conn.deliver(seq, wire::reject_frame(line_no, wire::RejectKind::OverQuota, &e).dumps());
+            seq += 1;
+            terminal = true;
+            break;
+        }
+        // same admission rules — and command exemption — as the service
+        let looks_like_cmd = text.contains("\"cmd\"") && !text.contains("\"net\"");
+        let admitted = shared.inflight.fetch_add(1, Ordering::SeqCst);
+        if shared.cfg.max_inflight > 0 && admitted >= shared.cfg.max_inflight && !looks_like_cmd {
+            shared.inflight.fetch_sub(1, Ordering::SeqCst);
+            shared.note_reject(wire::RejectKind::OverInflight);
+            let e = PlanError(format!(
+                "service at its {}-request in-flight cap, retry later",
+                shared.cfg.max_inflight
+            ));
+            conn.deliver(
+                seq,
+                wire::reject_frame(line_no, wire::RejectKind::OverInflight, &e).dumps(),
+            );
+            seq += 1;
+            continue;
+        }
+        // the router answers commands and malformed lines itself — a
+        // shard's opinion would add nothing, and commands must aggregate
+        // the whole cluster anyway; only decodable plan requests travel
+        let local = match json::parse(&text) {
+            // same message plan::parse_request_line produces, so error
+            // frames stay byte-identical to serve_jsonl's
+            Err(e) => Some(error_local(shared, line_no, &PlanError(format!("parse request: {e}")))),
+            Ok(j) => {
+                if j.get("cmd").is_some() && j.get("net").is_none() {
+                    Some(respond_cmd(shared, &j, line_no))
+                } else {
+                    match plan::MapRequest::from_json(&j) {
+                        Err(e) => Some(error_local(shared, line_no, &e)),
+                        Ok(req) => {
+                            let owner = shared.ring.owner(&PlanCache::key(&req));
+                            if lanes[owner].is_none() {
+                                let q = Arc::new(Queue::bounded(FORWARD_QUEUE));
+                                let (sh, lane, cn) =
+                                    (Arc::clone(shared), Arc::clone(&q), Arc::clone(&conn));
+                                forwarders.push(std::thread::spawn(move || {
+                                    run_forwarder(&sh, owner, &lane, &cn);
+                                }));
+                                lanes[owner] = Some(q);
+                            }
+                            let lane = lanes[owner].as_ref().expect("lane just ensured");
+                            // blocks while the lane is full — this is the
+                            // backpressure path, same as the service's
+                            // bounded queue
+                            match lane.push(FwdJob { seq, line_no, text, req }) {
+                                Ok(()) => None,
+                                Err(_) => {
+                                    // lane closed: cannot happen while the
+                                    // reader holds it open, but mirror the
+                                    // service's give-back discipline
+                                    shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        };
+        if let Some(response) = local {
+            conn.deliver(seq, response);
+            shared.inflight.fetch_sub(1, Ordering::SeqCst);
+        }
+        seq += 1;
+    }
+    conn.finish_input(seq);
+    for lane in lanes.iter().flatten() {
+        lane.close();
+    }
+    for f in forwarders {
+        let _ = f.join();
+    }
+    if terminal {
+        service::drain_discard(&|| shared.is_shutdown(), lines.reader_mut());
+    }
+}
+
+/// Count and build a router-emitted error frame (the cluster counterpart
+/// of the service's `error_response`).
+fn error_local(shared: &ClusterShared, line_no: usize, e: &PlanError) -> String {
+    shared.lock_stats().local_errors += 1;
+    wire::error_frame(line_no, e).dumps()
+}
+
+/// Answer an in-band command with the **cluster** snapshot — same
+/// version rule, command set, and error wording as the service's
+/// `respond_cmd`, different numbers behind them.
+fn respond_cmd(shared: &ClusterShared, j: &Json, line_no: usize) -> String {
+    let frame = (|| {
+        let o = j.as_obj().ok_or_else(|| PlanError("command must be a JSON object".into()))?;
+        wire::check_version(o, "command")?;
+        match o.get("cmd").and_then(Json::as_str) {
+            Some("stats") => Ok(wire::stats_frame(&shared.aggregate_stats())),
+            Some("metrics") => Ok(wire::metrics_frame(&shared.aggregate_metrics())),
+            other => Err(PlanError(format!(
+                "unknown command '{}' (try \"stats\" or \"metrics\")",
+                other.unwrap_or("?")
+            ))),
+        }
+    })();
+    match frame {
+        Ok(f) => f.dumps(),
+        Err(e) => error_local(shared, line_no, &e),
+    }
+}
+
+/// Drain one connection's lane to one shard, delivering each response
+/// into the connection's sequence slot.
+fn run_forwarder(shared: &Arc<ClusterShared>, owner: usize, lane: &Queue<FwdJob>, conn: &Conn) {
+    // the persistent shard connection, pinned to the incarnation (epoch)
+    // it was dialed against so a respawn forces a fresh dial
+    let mut slot: Option<(u64, Client)> = None;
+    while let Some(job) = lane.pop() {
+        let seq = job.seq;
+        let response = forward_one(shared, owner, &mut slot, &job);
+        conn.deliver(seq, response);
+        shared.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Produce one job's response: forward to the owning shard, replaying
+/// onto fresh incarnations after a death, degrading to the embedded
+/// planner past the budget or while the breaker is open.
+fn forward_one(
+    shared: &ClusterShared,
+    owner: usize,
+    slot: &mut Option<(u64, Client)>,
+    job: &FwdJob,
+) -> String {
+    let shard = &shared.shards[owner];
+    let mut failures = 0u32;
+    // a failed attempt pins the epoch it failed against, so the next
+    // attempt waits for a *newer* incarnation instead of hammering the
+    // same dead socket until the budget burns out
+    let mut min_epoch = 0u64;
+    while failures < shared.cfg.replay_budget {
+        let Some((addr, epoch)) = shard.route(min_epoch, shared.cfg.route_wait) else {
+            break; // breaker open, stopping, or nothing came up in time
+        };
+        if slot.as_ref().map(|(e, _)| *e) != Some(epoch) {
+            *slot = Some((epoch, forwarder_client(&shared.cfg, addr, owner)));
+        }
+        let client = &mut slot.as_mut().expect("slot populated above").1;
+        match client.roundtrip_line(&job.text) {
+            Ok(response) => {
+                if failures > 0 {
+                    // the incarnation that owed this response died; a
+                    // fresh one has now answered it
+                    shared.lock_stats().replayed += 1;
+                }
+                return restamp(&response, job.line_no);
+            }
+            Err(_) => {
+                *slot = None;
+                failures += 1;
+                min_epoch = epoch + 1;
+            }
+        }
+    }
+    shared.lock_stats().degraded += 1;
+    solve_degraded(shared, job)
+}
+
+/// The forwarder's client to one shard incarnation. One internal retry
+/// absorbs transient dial blips against a live shard; real failover
+/// (fresh incarnations, degradation) belongs to [`forward_one`]'s loop.
+/// The read budget is long on purpose: a slow solve is not a dead shard,
+/// and hang detection is the supervisor's job — its kill resets the TCP
+/// connection, which wakes this client with an error.
+fn forwarder_client(cfg: &ClusterConfig, addr: SocketAddr, owner: usize) -> Client {
+    Client::with_config(
+        addr,
+        ClientConfig {
+            connect_timeout: Duration::from_secs(2),
+            read_timeout: cfg.forward_read_timeout,
+            retries: 1,
+            backoff_base: Duration::from_millis(5),
+            backoff_cap: Duration::from_millis(100),
+            seed: 0xf0_5eed ^ owner as u64,
+        },
+    )
+}
+
+/// Map a shard's response to what the client must see. Plan frames pass
+/// **verbatim** — re-serializing risks float round-trip drift, and byte
+/// identity is the contract. Error and reject frames are rebuilt through
+/// the same [`wire`] constructors the service uses, carrying the
+/// client's own physical line number instead of the forwarder
+/// connection's.
+fn restamp(response: &str, line_no: usize) -> String {
+    let Ok(j) = json::parse(response) else {
+        return response.to_string();
+    };
+    let Some(msg) = j.get("error").and_then(Json::as_str) else {
+        return response.to_string();
+    };
+    let e = PlanError(msg.to_string());
+    match j.get("reject").and_then(Json::as_str) {
+        None => wire::error_frame(line_no, &e).dumps(),
+        Some(token) => match reject_kind(token) {
+            Some(kind) => wire::reject_frame(line_no, kind, &e).dumps(),
+            // a token this build doesn't know: forward untouched rather
+            // than guess (wrong line number beats a dropped reject type)
+            None => response.to_string(),
+        },
+    }
+}
+
+/// The inverse of [`wire::RejectKind::token`].
+fn reject_kind(token: &str) -> Option<wire::RejectKind> {
+    Some(match token {
+        "over-quota" => wire::RejectKind::OverQuota,
+        "over-inflight" => wire::RejectKind::OverInflight,
+        "internal" => wire::RejectKind::Internal,
+        "deadline" => wire::RejectKind::Deadline,
+        _ => return None,
+    })
+}
+
+/// Answer a request from the router's own embedded planner — the
+/// degraded path. Byte-identical to a shard's answer because planning is
+/// a pure function of the canonical request; slower, because the dead
+/// shard's cache and warehouse don't participate. Mirrors the worker's
+/// solve exactly: same deadline arming, same panic probe, same panic
+/// containment and frame wording.
+fn solve_degraded(shared: &ClusterShared, job: &FwdJob) -> String {
+    use crate::util::deadline::Deadline;
+    let budget = shared.cfg.deadline;
+    let req = job.req.clone();
+    let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+        if req.id == service::PANIC_PROBE_ID {
+            // the worker-side live-fire hook, mirrored so degraded mode
+            // answers it with the same typed internal reject
+            panic!("panic probe: request id {}", service::PANIC_PROBE_ID);
+        }
+        let deadline = match budget {
+            Some(budget) => Deadline::after(budget),
+            None => Deadline::NONE,
+        };
+        req.build().and_then(|p| p.plan_with_deadline(deadline))
+    }));
+    match solved {
+        Ok(Ok(plan)) => {
+            shared.lock_stats().local_served += 1;
+            plan.to_json().dumps()
+        }
+        Ok(Err(e)) if e.is_deadline() => {
+            shared.note_reject(wire::RejectKind::Deadline);
+            wire::reject_frame(job.line_no, wire::RejectKind::Deadline, &e).dumps()
+        }
+        Ok(Err(e)) => error_local(shared, job.line_no, &e),
+        Err(payload) => {
+            shared.lock_stats().local_panics += 1;
+            shared.note_reject(wire::RejectKind::Internal);
+            let e = PlanError(format!(
+                "planner panicked: {}",
+                service::panic_message(payload.as_ref())
+            ));
+            wire::reject_frame(job.line_no, wire::RejectKind::Internal, &e).dumps()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn restamp_leaves_plan_frames_untouched() {
+        let plan = r#"{"v":1,"id":"x","bins":[{"rows":64,"cols":64}],"weird":1.000000000000001}"#;
+        assert_eq!(restamp(plan, 42), plan);
+    }
+
+    #[test]
+    fn restamp_rewrites_the_line_number_of_error_frames() {
+        let shard_frame = wire::error_frame(1, &PlanError("parse request: boom".into())).dumps();
+        let restamped = restamp(&shard_frame, 7);
+        let expect = wire::error_frame(7, &PlanError("parse request: boom".into())).dumps();
+        assert_eq!(restamped, expect);
+    }
+
+    #[test]
+    fn restamp_preserves_typed_reject_tokens() {
+        for kind in [
+            wire::RejectKind::OverQuota,
+            wire::RejectKind::OverInflight,
+            wire::RejectKind::Internal,
+            wire::RejectKind::Deadline,
+        ] {
+            let shard_frame = wire::reject_frame(3, kind, &PlanError("why".into())).dumps();
+            let expect = wire::reject_frame(9, kind, &PlanError("why".into())).dumps();
+            assert_eq!(restamp(&shard_frame, 9), expect, "token {:?}", kind.token());
+        }
+    }
+
+    #[test]
+    fn shard_warehouse_dirs_are_stable_and_distinct() {
+        let root = Path::new("/tmp/wh");
+        assert_eq!(shard_warehouse_dir(root, 0), Path::new("/tmp/wh/shard-00"));
+        assert_eq!(shard_warehouse_dir(root, 7), Path::new("/tmp/wh/shard-07"));
+        assert_eq!(shard_warehouse_dir(root, 12), Path::new("/tmp/wh/shard-12"));
+    }
+}

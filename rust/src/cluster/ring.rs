@@ -1,0 +1,142 @@
+//! Consistent-hash ring over shard indices.
+//!
+//! The router keys every decodable request by its canonical form
+//! ([`crate::service::PlanCache::key`]) and must send identical requests
+//! to the same shard: that is what keeps each shard's plan cache and
+//! warehouse tier effective, and what keeps single-flight coalescing
+//! intact — a herd of identical requests lands on one shard and collapses
+//! to one solve there. A plain `hash % N` would satisfy that, but
+//! re-sharding (N → N+1) would move nearly every key to a new owner and
+//! cold-start every warehouse at once. The classic fix is a ring of
+//! virtual nodes: each shard owns [`VNODES`] points on a 64-bit circle
+//! and a key belongs to the first point clockwise from its hash, so
+//! growing the cluster moves only about 1/(N+1) of the keyspace and the
+//! rest of the warm warehouses stay warm.
+//!
+//! The ring layout is a *wire-adjacent* contract: `xbarmap warehouse
+//! precompute --cluster N` pre-shards a warehouse directory with the same
+//! ring a router later routes with, so the hash must be stable across
+//! builds and platforms — hence hand-rolled FNV-1a rather than
+//! [`std::collections::hash_map::DefaultHasher`], whose output is
+//! deliberately unstable.
+
+/// Virtual nodes per shard: enough that each shard's keyspace share
+/// concentrates near 1/N (with 64 points per shard the max/min owner
+/// imbalance stays modest) while the whole ring remains a few KB and a
+/// lookup one binary search.
+const VNODES: usize = 64;
+
+/// FNV-1a, 64-bit: tiny, allocation-free, and stable everywhere.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// A consistent-hash ring mapping canonical request keys to shard
+/// indices `0..shards`.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// `(point, shard)` sorted by point; [`HashRing::owner`] binary-
+    /// searches it and wraps at the top of the circle
+    points: Vec<(u64, usize)>,
+}
+
+impl HashRing {
+    /// A ring over `shards` shard indices with `vnodes` points each.
+    /// Exposed for tests that study balance at other densities; cluster
+    /// components use [`HashRing::for_cluster`] so they agree on one
+    /// layout.
+    pub fn new(shards: usize, vnodes: usize) -> HashRing {
+        let shards = shards.max(1);
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(shards * vnodes);
+        for s in 0..shards {
+            for v in 0..vnodes {
+                points.push((fnv1a(format!("shard-{s}-vnode-{v}").as_bytes()), s));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points }
+    }
+
+    /// The one ring layout every cluster component agrees on for a given
+    /// shard count — the router and `warehouse precompute --cluster` must
+    /// both construct their ring here or pre-sharded stores would land on
+    /// the wrong workers.
+    pub fn for_cluster(shards: usize) -> HashRing {
+        HashRing::new(shards, VNODES)
+    }
+
+    /// The shard that owns `key`: the first ring point at or clockwise
+    /// past the key's hash, wrapping at the top of the circle.
+    pub fn owner(&self, key: &str) -> usize {
+        let h = fnv1a(key.as_bytes());
+        let i = self.points.partition_point(|&(p, _)| p < h);
+        self.points[i % self.points.len()].1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("canonical-request-key-{i}")).collect()
+    }
+
+    #[test]
+    fn every_shard_owns_a_reasonable_share() {
+        let ring = HashRing::for_cluster(4);
+        let mut counts = [0usize; 4];
+        for k in keys(4000) {
+            counts[ring.owner(&k)] += 1;
+        }
+        for (s, &c) in counts.iter().enumerate() {
+            // perfect balance is 1000; vnode placement is hash-random, so
+            // accept a wide band — the failure mode this guards against
+            // is a shard owning (almost) nothing or (almost) everything
+            assert!(
+                (400..=1800).contains(&c),
+                "shard {s} owns {c} of 4000 keys — ring badly imbalanced"
+            );
+        }
+    }
+
+    #[test]
+    fn growing_the_ring_moves_only_a_minority_of_keys() {
+        let before = HashRing::for_cluster(3);
+        let after = HashRing::for_cluster(4);
+        let ks = keys(4000);
+        let moved = ks.iter().filter(|k| before.owner(k) != after.owner(k)).count();
+        // consistent hashing's whole point: ~1/4 of keys move to the new
+        // shard, the rest keep their owner (mod-N would move ~3/4)
+        assert!(
+            moved < 2000,
+            "{moved} of 4000 keys changed owner going 3 → 4 shards"
+        );
+        assert!(moved > 0, "a new shard must take over some keys");
+    }
+
+    #[test]
+    fn ownership_is_deterministic_and_in_range() {
+        let a = HashRing::for_cluster(5);
+        let b = HashRing::for_cluster(5);
+        for k in keys(500) {
+            let owner = a.owner(&k);
+            assert_eq!(owner, b.owner(&k), "two rings over 5 shards must agree");
+            assert!(owner < 5);
+        }
+    }
+
+    #[test]
+    fn a_single_shard_ring_owns_everything() {
+        let ring = HashRing::for_cluster(1);
+        for k in keys(64) {
+            assert_eq!(ring.owner(&k), 0);
+        }
+    }
+}

@@ -1,0 +1,398 @@
+//! Per-shard worker supervision: spawn, probe, respawn, circuit-break.
+//!
+//! Each shard gets one supervisor thread that owns its worker process for
+//! the shard's whole life. The supervisor spawns `serve --plans
+//! --announce` via [`proc::spawn_announced`] (the worker binds `:0` and
+//! announces the port it got), publishes the address to the routing state
+//! the forwarders wait on, then watches two signals:
+//!
+//! * **exit** — [`std::process::Child::try_wait`] polled every
+//!   [`MONITOR_POLL`]: a crashed worker is detected within ~10 ms, which
+//!   bounds how long replayed requests wait for a fresh incarnation;
+//! * **liveness** — a periodic in-band `metrics` command. A worker that
+//!   still holds its pid but stops answering for
+//!   [`super::ClusterConfig::probe_misses`] consecutive probes is treated
+//!   exactly like a crash: killed, reaped, respawned. The threshold is
+//!   deliberately generous because probes share the worker's request
+//!   queue — a worker deep in one long legitimate solve answers late,
+//!   and late must not read as dead.
+//!
+//! The probe doubles as the metrics feed: every successful probe caches
+//! the worker's [`wire::MetricsSnapshot`], and when an incarnation dies
+//! its last snapshot is folded into a per-shard *retired* accumulator so
+//! the cluster-wide counters stay monotone across respawns (a fresh
+//! worker restarts its counters at zero; the history lives here).
+//!
+//! Respawns back off exponentially ([`respawn_backoff`]) while the shard
+//! keeps dying before its first healthy probe, and after
+//! [`super::ClusterConfig::breaker_threshold`] consecutive stillborn
+//! incarnations the shard's circuit breaker opens: routing reports the
+//! shard down without waiting, the router answers its keys from the
+//! embedded planner (degraded mode), and the supervisor retries one
+//! spawn per [`super::ClusterConfig::breaker_cooldown`] (half-open) until
+//! one survives.
+
+use super::{ClusterConfig, ClusterShared};
+use crate::plan::client::{Client, ClientConfig};
+use crate::plan::wire;
+use crate::util::proc;
+use std::net::SocketAddr;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// How often the monitor loop re-checks child exit and the stop flag.
+const MONITOR_POLL: Duration = Duration::from_millis(10);
+
+/// Where a shard's traffic should go right now.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Status {
+    /// no live incarnation, but a spawn is pending — worth waiting for
+    Starting,
+    /// a live incarnation listens here
+    Up(SocketAddr),
+    /// breaker open or cluster stopping: don't wait, degrade now
+    Broken,
+}
+
+struct RouteState {
+    status: Status,
+    /// bumped every time a fresh incarnation comes up; forwarders that
+    /// failed against epoch E wait for an epoch past E instead of
+    /// hammering the same dead socket
+    epoch: u64,
+}
+
+/// The folded metrics history of one shard.
+#[derive(Default)]
+struct Acc {
+    /// monotone counters of every finished incarnation, folded together
+    /// (gauges stay zero here — a dead worker has no queue depth)
+    retired: wire::MetricsSnapshot,
+    /// the most recent probe snapshot of the current incarnation
+    last: Option<wire::MetricsSnapshot>,
+}
+
+/// One shard's routing state, metrics history, and kill handle — shared
+/// between its supervisor thread, the forwarders, and aggregation.
+pub(crate) struct Shard {
+    state: Mutex<RouteState>,
+    wake: Condvar,
+    acc: Mutex<Acc>,
+    /// pid of the current incarnation (0 between incarnations); exists
+    /// for [`super::ClusterHandle::kill_shard`], the chaos fault injector
+    pid: AtomicU32,
+}
+
+impl Shard {
+    pub fn new() -> Shard {
+        Shard {
+            state: Mutex::new(RouteState { status: Status::Starting, epoch: 0 }),
+            wake: Condvar::new(),
+            acc: Mutex::new(Acc::default()),
+            pid: AtomicU32::new(0),
+        }
+    }
+
+    /// Wait up to `wait` for an incarnation with epoch ≥ `min_epoch` and
+    /// return its address and epoch. `None` means degrade now: the
+    /// breaker is open, the cluster is stopping, or no fresh incarnation
+    /// appeared within the wait.
+    pub fn route(&self, min_epoch: u64, wait: Duration) -> Option<(SocketAddr, u64)> {
+        let deadline = Instant::now() + wait;
+        let mut s = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            match s.status {
+                Status::Up(addr) if s.epoch >= min_epoch => return Some((addr, s.epoch)),
+                Status::Broken => return None,
+                _ => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self
+                .wake
+                .wait_timeout(s, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
+            s = guard;
+        }
+    }
+
+    /// The current incarnation's pid, 0 between incarnations.
+    pub fn pid(&self) -> u32 {
+        self.pid.load(Ordering::SeqCst)
+    }
+
+    /// History + cached live counters (see [`fold_counters`]); gauges
+    /// come from the live snapshot alone — a dead shard reports zeros.
+    pub fn current(&self) -> wire::MetricsSnapshot {
+        let acc = self.acc.lock().unwrap_or_else(|p| p.into_inner());
+        let mut m = acc.retired;
+        if let Some(live) = &acc.last {
+            fold_counters(&mut m, live);
+            fold_gauges(&mut m, live);
+        }
+        m
+    }
+
+    /// Like [`Shard::current`], but probe the live incarnation first so
+    /// an in-band `stats`/`metrics` command reports up-to-the-request
+    /// numbers rather than the last periodic probe's.
+    pub fn fresh(&self, timeout: Duration) -> wire::MetricsSnapshot {
+        let addr = {
+            let s = self.state.lock().unwrap_or_else(|p| p.into_inner());
+            match s.status {
+                Status::Up(addr) => Some(addr),
+                _ => None,
+            }
+        };
+        if let Some(addr) = addr {
+            if let Ok(m) = probe(addr, timeout) {
+                self.acc.lock().unwrap_or_else(|p| p.into_inner()).last = Some(m);
+            }
+        }
+        self.current()
+    }
+
+    fn set_status(&self, status: Status) {
+        let mut s = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        s.status = status;
+        self.wake.notify_all();
+    }
+
+    fn set_up(&self, addr: SocketAddr) {
+        let mut s = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        s.epoch += 1;
+        s.status = Status::Up(addr);
+        self.wake.notify_all();
+    }
+
+    fn retire(&self) {
+        let mut acc = self.acc.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(last) = acc.last.take() {
+            fold_counters(&mut acc.retired, &last);
+        }
+    }
+}
+
+/// Fold the monotone counters (and latency-percentile maxima) of `from`
+/// into `into`, leaving gauges untouched. Used both to retire a dead
+/// incarnation into its shard's history and to sum shards into the
+/// cluster snapshot. Percentiles take the elementwise max — there is no
+/// way to merge two nearest-rank percentiles exactly without the raw
+/// windows, and "the slowest shard's view" is the honest conservative
+/// summary (documented in WIRE.md §6).
+pub(crate) fn fold_counters(into: &mut wire::MetricsSnapshot, from: &wire::MetricsSnapshot) {
+    let (s, t) = (&mut into.stats, &from.stats);
+    s.served += t.served;
+    s.errors += t.errors;
+    s.cache_hits += t.cache_hits;
+    s.connections += t.connections;
+    s.panics += t.panics;
+    s.timeouts += t.timeouts;
+    s.rejected_internal += t.rejected_internal;
+    s.warehouse_hits += t.warehouse_hits;
+    s.warehouse_writes += t.warehouse_writes;
+    s.coalesced += t.coalesced;
+    s.shard_respawns += t.shard_respawns;
+    s.replayed += t.replayed;
+    s.degraded += t.degraded;
+    s.plan_p50_s = s.plan_p50_s.max(t.plan_p50_s);
+    s.plan_p95_s = s.plan_p95_s.max(t.plan_p95_s);
+    into.rejected_over_quota += from.rejected_over_quota;
+    into.rejected_over_inflight += from.rejected_over_inflight;
+    into.cache_expired += from.cache_expired;
+}
+
+/// Fold the point-in-time gauges of `from` into `into` (sums; uptime
+/// takes the max). Split from [`fold_counters`] because retiring a dead
+/// incarnation must keep its counters and drop its gauges.
+pub(crate) fn fold_gauges(into: &mut wire::MetricsSnapshot, from: &wire::MetricsSnapshot) {
+    into.inflight += from.inflight;
+    into.queue_depth += from.queue_depth;
+    into.cache_entries += from.cache_entries;
+    into.cache_bytes += from.cache_bytes;
+    into.warehouse_bytes += from.warehouse_bytes;
+    into.uptime_s = into.uptime_s.max(from.uptime_s);
+}
+
+/// One in-band `metrics` roundtrip against a worker — the liveness probe
+/// and the metrics feed in a single request.
+fn probe(addr: SocketAddr, timeout: Duration) -> Result<wire::MetricsSnapshot, crate::plan::PlanError> {
+    let mut c = Client::with_config(
+        addr,
+        ClientConfig {
+            connect_timeout: timeout,
+            read_timeout: timeout,
+            retries: 0,
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(1),
+            seed: 0x5b0b,
+        },
+    );
+    let j = c.command("metrics")?;
+    wire::metrics_from_json(&j)
+}
+
+/// The respawn delay after `strikes` consecutive incarnations died (or
+/// failed to spawn) before their first healthy probe: capped exponential
+/// backoff, zero after a death that followed a healthy period — a
+/// one-off crash should restore capacity as fast as the spawn itself.
+fn respawn_backoff(cfg: &ClusterConfig, strikes: u32) -> Duration {
+    if strikes == 0 {
+        return Duration::ZERO;
+    }
+    let factor = 1u32 << (strikes - 1).min(10);
+    cfg.respawn_backoff_base.saturating_mul(factor).min(cfg.respawn_backoff_cap)
+}
+
+/// Sleep up to `total`, polling the stop flag; true means stop observed.
+fn stopped_within(shared: &ClusterShared, total: Duration) -> bool {
+    let deadline = Instant::now() + total;
+    loop {
+        if shared.workers_stopped() {
+            return true;
+        }
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            return false;
+        }
+        std::thread::sleep(MONITOR_POLL.min(left));
+    }
+}
+
+/// Spawn shard `index`'s worker: the same binary, `serve --plans` on an
+/// ephemeral port, `--announce` so the port comes back on stdout, plus
+/// the caller's pass-through worker flags and the shard's own warehouse
+/// subdirectory (each shard must hold its own single-writer lock).
+fn spawn_worker(shared: &ClusterShared, index: usize) -> std::io::Result<(Child, SocketAddr)> {
+    let cfg = &shared.cfg;
+    let exe = match &cfg.exe {
+        Some(path) => path.clone(),
+        None => std::env::current_exe()?,
+    };
+    let mut cmd = Command::new(exe);
+    cmd.args(["serve", "--plans", "--addr", "127.0.0.1:0", "--announce", "--no-sigint"]);
+    cmd.args(&cfg.worker_args);
+    if let Some(root) = &cfg.warehouse {
+        cmd.arg("--warehouse");
+        cmd.arg(super::shard_warehouse_dir(root, index));
+    }
+    cmd.stdin(Stdio::null());
+    let (mut child, announced) = proc::spawn_announced(cmd, "announce", cfg.spawn_timeout)?;
+    match announced.parse::<SocketAddr>() {
+        Ok(addr) => Ok((child, addr)),
+        Err(_) => {
+            let _ = child.kill();
+            let _ = child.wait();
+            Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("shard {index} announced an unparsable address {announced:?}"),
+            ))
+        }
+    }
+}
+
+/// Supervise shard `index` until [`ClusterShared::workers_stopped`]:
+/// spawn → publish → monitor → retire → (backoff/breaker) → respawn.
+pub(crate) fn run(shared: &ClusterShared, index: usize) {
+    let shard = &shared.shards[index];
+    // consecutive incarnations that died before a healthy probe
+    let mut strikes: u32 = 0;
+    let mut first = true;
+    while !shared.workers_stopped() {
+        if !first && stopped_within(shared, respawn_backoff(&shared.cfg, strikes)) {
+            break;
+        }
+        if strikes >= shared.cfg.breaker_threshold {
+            // breaker open: stop hammering respawn; forwarders degrade
+            // without waiting until the cooldown elapses, then one
+            // half-open spawn attempt below probes whether the fault
+            // (missing binary, bad flag, poisoned warehouse) cleared
+            shard.set_status(Status::Broken);
+            if stopped_within(shared, shared.cfg.breaker_cooldown) {
+                break;
+            }
+        }
+        shard.set_status(Status::Starting);
+        let (mut child, addr) = match spawn_worker(shared, index) {
+            Ok(pair) => pair,
+            Err(_) => {
+                strikes = strikes.saturating_add(1);
+                first = false;
+                continue;
+            }
+        };
+        shard.pid.store(child.id(), Ordering::SeqCst);
+        if !first {
+            // counted per successful takeover, not per attempt: the wire
+            // counter answers "how many times did a worker have to be
+            // replaced", not "how hard was it"
+            shared.lock_stats().shard_respawns += 1;
+        }
+        first = false;
+        shard.set_up(addr);
+        let mut last_probe = Instant::now();
+        let mut missed = 0u32;
+        let died = loop {
+            if shared.workers_stopped() {
+                break false;
+            }
+            match child.try_wait() {
+                Ok(None) => {}
+                Ok(Some(_)) | Err(_) => break true,
+            }
+            if last_probe.elapsed() >= shared.cfg.probe_interval {
+                last_probe = Instant::now();
+                match probe(addr, shared.cfg.probe_timeout) {
+                    Ok(m) => {
+                        missed = 0;
+                        strikes = 0; // proven healthy: backoff resets
+                        shard.acc.lock().unwrap_or_else(|p| p.into_inner()).last = Some(m);
+                    }
+                    Err(_) => {
+                        missed += 1;
+                        if missed >= shared.cfg.probe_misses {
+                            // unresponsive far past its budget: a hang is
+                            // handled exactly like a crash
+                            let _ = child.kill();
+                            let _ = child.wait();
+                            break true;
+                        }
+                    }
+                }
+            }
+            std::thread::sleep(MONITOR_POLL);
+        };
+        shard.pid.store(0, Ordering::SeqCst);
+        if died {
+            let _ = child.wait(); // reap (idempotent if already reaped)
+            shard.set_status(Status::Starting);
+            shard.retire();
+            strikes = strikes.saturating_add(1);
+            continue;
+        }
+        // cluster shutdown: the router set the stop flag only after every
+        // owed response went out, so the worker just needs a polite exit.
+        // One last probe first — counters accrued since the previous
+        // periodic probe would otherwise vanish from the final snapshot.
+        shard.set_status(Status::Broken);
+        if let Ok(m) = probe(addr, shared.cfg.probe_timeout) {
+            shard.acc.lock().unwrap_or_else(|p| p.into_inner()).last = Some(m);
+        }
+        proc::terminate(&mut child);
+        if proc::wait_timeout(&mut child, shared.cfg.drain_timeout)
+            .ok()
+            .flatten()
+            .is_none()
+        {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        shard.retire();
+        return;
+    }
+    shard.set_status(Status::Broken);
+}

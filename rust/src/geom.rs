@@ -18,6 +18,7 @@ pub struct Tile {
 }
 
 impl Tile {
+    /// A tile with `n_row` word lines and `n_col` bit lines.
     pub const fn new(n_row: usize, n_col: usize) -> Self {
         Tile { n_row, n_col }
     }
@@ -43,10 +44,13 @@ impl Tile {
         }
     }
 
+    /// Whether the tile is square (aspect factor 1, the sweep's anchor
+    /// column).
     pub fn is_square(&self) -> bool {
         self.n_row == self.n_col
     }
 
+    /// Whether a `rows x cols` block fits this tile in both dimensions.
     pub fn fits(&self, rows: usize, cols: usize) -> bool {
         rows <= self.n_row && cols <= self.n_col
     }
@@ -87,6 +91,7 @@ pub struct Block {
     pub replica: usize,
     /// position of this fragment in the layer's fragmentation grid
     pub grid: (usize, usize),
+    /// which of the four §2.1 fragment kinds this block is
     pub kind: BlockKind,
 }
 
@@ -101,7 +106,9 @@ impl Block {
 /// word line `y`, bit line `x` (paper Fig. 5/6 layout coordinates).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Placement {
+    /// index of the placed block in the packing's block list
     pub block: usize,
+    /// index of the bin (physical tile) hosting the block
     pub bin: usize,
     /// bit-line (column) offset
     pub x: usize,
@@ -112,23 +119,29 @@ pub struct Placement {
 /// Axis-aligned interval arithmetic used by the placement validator.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Span {
+    /// inclusive lower bound
     pub lo: usize,
-    pub hi: usize, // exclusive
+    /// exclusive upper bound
+    pub hi: usize,
 }
 
 impl Span {
+    /// The half-open interval `[lo, lo + len)`.
     pub fn new(lo: usize, len: usize) -> Self {
         Span { lo, hi: lo + len }
     }
 
+    /// Whether two half-open intervals share at least one point.
     pub fn overlaps(&self, other: &Span) -> bool {
         self.lo < other.hi && other.lo < self.hi
     }
 
+    /// Number of points covered.
     pub fn len(&self) -> usize {
         self.hi - self.lo
     }
 
+    /// Whether the interval covers nothing.
     pub fn is_empty(&self) -> bool {
         self.hi == self.lo
     }

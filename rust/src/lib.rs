@@ -74,9 +74,16 @@
 //! misses on one canonical key are single-flight coalesced so a
 //! thundering herd costs one solve. Per connection, responses are
 //! byte-identical to piping the same stream through
-//! [`plan::serve_jsonl`]. The wire protocol is specified normatively in
-//! `docs/WIRE.md`; `docs/ARCHITECTURE.md` maps the paper's equations to
-//! the modules below.
+//! [`plan::serve_jsonl`]. For fault isolation beyond one process,
+//! [`cluster`] shards the same wire across N supervised `serve --plans`
+//! worker processes (`--cluster N`): consistent-hash routing on the
+//! canonical request key, automatic respawn of crashed or hung workers,
+//! replay of the responses a dead worker still owed, and a degraded mode
+//! that answers from the router's embedded planner when a shard stays
+//! down — all without breaking per-connection byte-identity. The wire
+//! protocol is specified normatively in `docs/WIRE.md`;
+//! `docs/ARCHITECTURE.md` maps the paper's equations to the modules
+//! below.
 //!
 //! ## Under the hood
 //!
@@ -106,13 +113,13 @@
 //!   ([`runtime`], behind the `pjrt` cargo feature) — Python never runs at
 //!   request time — with the deployment mapped and priced by the planner.
 // Public items must be documented. The serving surface (`plan`,
-// `service`, `util`) and the packing/optimization core (`pack`, `opt`)
-// are fully audited; the modules below still carry per-module allows —
+// `service`, `cluster`, `store`, `util`), the packing/optimization core
+// (`pack`, `opt`) and the geometry/area substrate (`geom`, `area`) are
+// fully audited; the modules below still carry per-module allows —
 // remove one, fix what `cargo doc` flags (CI runs the doc build with
 // warnings denied), repeat.
 #![warn(missing_docs)]
 
-#[allow(missing_docs)]
 pub mod geom;
 #[allow(missing_docs)]
 pub mod nets;
@@ -121,13 +128,13 @@ pub mod frag;
 pub mod pack;
 #[allow(missing_docs)]
 pub mod ilp;
-#[allow(missing_docs)]
 pub mod area;
 #[allow(missing_docs)]
 pub mod perf;
 pub mod opt;
 pub mod plan;
 pub mod service;
+pub mod cluster;
 pub mod store;
 #[allow(missing_docs)]
 pub mod sim;

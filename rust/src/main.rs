@@ -21,6 +21,7 @@
 use anyhow::{anyhow, Result};
 use std::io::Write as _;
 use std::path::Path;
+use xbarmap::cluster;
 use xbarmap::coordinator::{digits, Coordinator, CoordinatorConfig};
 use xbarmap::nets::zoo;
 use xbarmap::opt::Engine;
@@ -378,6 +379,9 @@ fn cmd_serve_plans(argv: &[String]) -> Result<()> {
         OptSpec { name: "metrics-out", help: "periodically write the gauge snapshot (BENCH_*.json schema) to FILE", value: Some("FILE"), default: None },
         OptSpec { name: "metrics-interval", help: "seconds between metrics-file rewrites", value: Some("SECS"), default: Some("10") },
         OptSpec { name: "warehouse", help: "persistent plan store directory (second cache tier behind the LRU)", value: Some("DIR"), default: None },
+        OptSpec { name: "cluster", help: "shard across N supervised worker processes with replay-based failover (0 = single process)", value: Some("N"), default: Some("0") },
+        OptSpec { name: "announce", help: "print one {\"v\":1,\"announce\":\"HOST:PORT\"} line on stdout once listening (cluster workers use this to report their ephemeral port)", value: None, default: None },
+        OptSpec { name: "no-sigint", help: "ignore SIGINT/SIGTERM (cluster workers drain when the router asks, not on terminal signals)", value: None, default: None },
     ];
     let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
     // upper bound keeps Duration::from_secs_f64 panic-free (it aborts past
@@ -407,8 +411,12 @@ fn cmd_serve_plans(argv: &[String]) -> Result<()> {
             (ms > 0).then(|| std::time::Duration::from_millis(ms as u64))
         },
         warehouse: a.get("warehouse").map(std::path::PathBuf::from),
-        watch_sigint: true,
+        watch_sigint: !a.flag("no-sigint"),
     };
+    let shards = a.req_usize("cluster").map_err(|e| anyhow!(e))?;
+    if shards > 0 {
+        return cmd_serve_cluster(&a, &cfg, shards);
+    }
     let service = Service::bind(&cfg).map_err(|e| anyhow!("bind {}: {e}", cfg.addr))?;
     if let Some(r) = service.warehouse_report() {
         eprintln!(
@@ -432,6 +440,12 @@ fn cmd_serve_plans(argv: &[String]) -> Result<()> {
             None => "off".to_string(),
         },
     );
+    if a.flag("announce") {
+        // one machine-readable line on stdout (the human banner above goes
+        // to stderr) — the cluster supervisor parses this to learn the port
+        println!("{{\"v\":{},\"announce\":\"{}\"}}", plan::WIRE_VERSION, service.local_addr()?);
+        std::io::stdout().flush()?;
+    }
     let stats = service.run()?;
     eprintln!(
         "served {} plan(s) ({} cache hit(s)), {} error(s) over {} connection(s) | plan p50 {:.3} ms p95 {:.3} ms",
@@ -441,6 +455,59 @@ fn cmd_serve_plans(argv: &[String]) -> Result<()> {
         stats.connections,
         stats.plan_p50_s * 1e3,
         stats.plan_p95_s * 1e3,
+    );
+    Ok(())
+}
+
+/// `serve --plans --cluster N`: the self-healing sharded deployment. The
+/// router re-execs this same binary N times as `serve --plans --addr
+/// 127.0.0.1:0 --announce --no-sigint` workers, consistent-hashes each
+/// request's canonical key to a shard, supervises the children (liveness
+/// probes, capped-backoff respawn, per-shard circuit breaker), replays
+/// the responses a dead shard still owed, and degrades to its embedded
+/// planner when a shard stays down — per connection the merged stream is
+/// byte-identical to a single process serving the same lines.
+fn cmd_serve_cluster(a: &Args, cfg: &ServiceConfig, shards: usize) -> Result<()> {
+    // solver-side flags travel to the workers verbatim; admission
+    // (quota / in-flight cap) and metrics aggregation stay at the router
+    let mut worker_args: Vec<String> = Vec::new();
+    for flag in ["workers", "queue", "cache", "cache-ttl", "cache-max-bytes", "deadline-ms"] {
+        worker_args.push(format!("--{flag}"));
+        worker_args.push(a.req(flag).map_err(|e| anyhow!(e))?.to_string());
+    }
+    let ccfg = cluster::ClusterConfig {
+        addr: cfg.addr.clone(),
+        shards,
+        exe: None,
+        worker_args,
+        warehouse: cfg.warehouse.clone(),
+        per_conn_quota: cfg.per_conn_quota,
+        max_inflight: cfg.max_inflight,
+        deadline: cfg.deadline,
+        metrics_out: cfg.metrics_out.clone(),
+        metrics_interval: cfg.metrics_interval,
+        watch_sigint: cfg.watch_sigint,
+        ..cluster::ClusterConfig::default()
+    };
+    let addr = ccfg.addr.clone();
+    let cluster = cluster::Cluster::bind(ccfg).map_err(|e| anyhow!("bind {addr}: {e}"))?;
+    eprintln!(
+        "xbarmap planning cluster listening on {} ({} shard(s), quota {}, inflight cap {}, SIGINT/SIGTERM drain and exit)",
+        cluster.local_addr()?,
+        shards,
+        if cfg.per_conn_quota == 0 { "off".to_string() } else { cfg.per_conn_quota.to_string() },
+        if cfg.max_inflight == 0 { "off".to_string() } else { cfg.max_inflight.to_string() },
+    );
+    let stats = cluster.run()?;
+    eprintln!(
+        "cluster served {} plan(s) ({} cache hit(s)), {} error(s) over {} connection(s) | {} respawn(s), {} replayed, {} degraded",
+        stats.served,
+        stats.cache_hits,
+        stats.errors,
+        stats.connections,
+        stats.shard_respawns,
+        stats.replayed,
+        stats.degraded,
     );
     Ok(())
 }
@@ -469,9 +536,11 @@ fn cmd_warehouse_precompute(argv: &[String]) -> Result<()> {
         OptSpec { name: "row-exp", help: "grid base-dimension exponents LO,HI (2^LO..2^HI)", value: Some("LO,HI"), default: Some("6,13") },
         OptSpec { name: "aspects", help: "max aspect ratio (1..=8)", value: Some("N"), default: Some("8") },
         OptSpec { name: "threads", help: "solver threads across requests (0 = auto)", value: Some("N"), default: Some("0") },
+        OptSpec { name: "cluster", help: "partition plans into the shard-NN subdirectories a `serve --plans --cluster N` deployment reads (0 = one flat warehouse)", value: Some("N"), default: Some("0") },
     ];
     let a = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
     let dir = a.req("dir").map_err(|e| anyhow!(e))?;
+    let cluster_n = a.req_usize("cluster").map_err(|e| anyhow!(e))?;
 
     let nets: Vec<String> = match a.get("nets") {
         Some(csv) => csv.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
@@ -518,13 +587,32 @@ fn cmd_warehouse_precompute(argv: &[String]) -> Result<()> {
         })
         .collect();
 
-    let (wh, _) = Warehouse::open(&WarehouseConfig::at(dir))
-        .map_err(|e| anyhow!("open warehouse {dir}: {e}"))?;
+    // `--cluster 0` fills one flat warehouse at --dir; `--cluster N`
+    // opens the same shard-NN subdirectories a `serve --plans --cluster N`
+    // router's workers will open, and routes each key through the same
+    // consistent-hash ring, so every shard boots warm with exactly the
+    // plans it will be asked for
+    let warehouses: Vec<Warehouse> = if cluster_n == 0 {
+        let (wh, _) = Warehouse::open(&WarehouseConfig::at(dir))
+            .map_err(|e| anyhow!("open warehouse {dir}: {e}"))?;
+        vec![wh]
+    } else {
+        (0..cluster_n)
+            .map(|i| {
+                let sub = cluster::shard_warehouse_dir(Path::new(dir), i);
+                Warehouse::open(&WarehouseConfig::at(&sub))
+                    .map(|(wh, _)| wh)
+                    .map_err(|e| anyhow!("open warehouse {}: {e}", sub.display()))
+            })
+            .collect::<Result<_>>()?
+    };
+    let ring = cluster::HashRing::for_cluster(cluster_n.max(1));
+    let owner_of = |key: &str| if cluster_n == 0 { 0 } else { ring.owner(key) };
     let mut missing: Vec<(String, MapRequest)> = Vec::new();
     let mut skipped = 0usize;
     for req in requests {
         let key = PlanCache::key(&req);
-        if wh.contains(&key) {
+        if warehouses[owner_of(&key)].contains(&key) {
             skipped += 1;
         } else {
             missing.push((key, req));
@@ -538,7 +626,8 @@ fn cmd_warehouse_precompute(argv: &[String]) -> Result<()> {
         match result {
             Ok(mut plan) => {
                 plan.id.clear();
-                wh.append(&key, &plan.to_json().dumps())
+                warehouses[owner_of(&key)]
+                    .append(&key, &plan.to_json().dumps())
                     .map_err(|e| anyhow!("append to warehouse {dir}: {e}"))?;
                 priced += 1;
             }
@@ -552,11 +641,12 @@ fn cmd_warehouse_precompute(argv: &[String]) -> Result<()> {
             }
         }
     }
+    let (live, segments, bytes) = warehouses
+        .iter()
+        .fold((0usize, 0usize, 0u64), |(l, s, b), wh| (l + wh.len(), s + wh.segments(), b + wh.bytes()));
     println!(
-        "precomputed {priced} plan(s) ({skipped} already present, {failed} failed) -> {} live across {} segment(s), {} bytes",
-        wh.len(),
-        wh.segments(),
-        wh.bytes(),
+        "precomputed {priced} plan(s) ({skipped} already present, {failed} failed) -> {live} live across {segments} segment(s), {bytes} bytes{}",
+        if cluster_n > 0 { format!(" in {cluster_n} shard warehouse(s)") } else { String::new() },
     );
     if failed > 0 {
         return Err(anyhow!("{failed} request(s) failed to price"));

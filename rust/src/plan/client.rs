@@ -73,6 +73,11 @@ fn backoff_delay(cfg: &ClientConfig, attempt: u32, rng: &mut Rng) -> Duration {
     backoff_raw(cfg, attempt).mul_f64(0.5 + 0.5 * rng.f64())
 }
 
+/// Ceiling on the persistent backoff level: [`backoff_raw`] saturates at
+/// the configured cap long before 2^32, so the level only needs enough
+/// headroom to stay pinned at the cap while a peer flaps.
+const LEVEL_CAP: u32 = 32;
+
 /// A reusable connection to one service address with retry-on-failure
 /// round-trips. Cheap to construct — no I/O happens until the first call.
 #[derive(Debug)]
@@ -81,6 +86,11 @@ pub struct Client {
     cfg: ClientConfig,
     rng: Rng,
     conn: Option<Conn>,
+    /// persistent backoff level, carried **across** round-trip calls: a
+    /// peer that accepts the reconnect and then dies mid-stream must not
+    /// reset the schedule to the floor interval (see
+    /// [`Client::roundtrip_line`]).
+    level: u32,
 }
 
 #[derive(Debug)]
@@ -98,12 +108,21 @@ impl Client {
     /// A client for `addr` with an explicit config.
     pub fn with_config(addr: SocketAddr, cfg: ClientConfig) -> Client {
         let rng = Rng::new(cfg.seed);
-        Client { addr, cfg, rng, conn: None }
+        Client { addr, cfg, rng, conn: None, level: 0 }
     }
 
     /// The address this client talks to.
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The current persistent backoff level: 0 after a response proved the
+    /// connection stable, raised by one per failed attempt (and only
+    /// halved by a response on a *freshly dialed* connection — a
+    /// successful reconnect is not yet evidence of stability). Exposed so
+    /// supervisors can see how unhealthy a link looks to its client.
+    pub fn backoff_level(&self) -> u32 {
+        self.level
     }
 
     fn dial(&self) -> std::io::Result<Conn> {
@@ -144,17 +163,40 @@ impl Client {
     /// connection, back off, and replay the line on a fresh one — safe
     /// because planning has no side effects — up to `retries` extra
     /// attempts, then the last I/O error surfaces as a [`PlanError`].
+    ///
+    /// The backoff schedule is driven by a **persistent** level rather
+    /// than a per-call attempt counter. A flapping server — one that
+    /// accepts every reconnect and then dies mid-stream — used to reset
+    /// the schedule to the floor interval on each call, hammering the
+    /// peer at `backoff_base` forever. Now each failed attempt raises the
+    /// level (wherever it failed in whichever call), a response on a
+    /// freshly dialed connection only *halves* it (one reconnect is not
+    /// yet stability), and only a response on an already-established
+    /// connection resets it to zero.
     pub fn roundtrip_line(&mut self, line: &str) -> Result<String, PlanError> {
         let mut last: Option<std::io::Error> = None;
         for attempt in 0..=self.cfg.retries {
-            if attempt > 0 {
-                let delay = backoff_delay(&self.cfg, attempt - 1, &mut self.rng);
+            // an elevated level also delays the *first* attempt of a new
+            // call: that is exactly the state a flapping peer leaves
+            // behind, and per-call-only sleeping is what let retries:0
+            // callers hammer the floor interval
+            if attempt > 0 || self.level > 0 {
+                let delay = backoff_delay(&self.cfg, self.level.saturating_sub(1), &mut self.rng);
                 std::thread::sleep(delay);
             }
+            let established = self.conn.is_some();
             match self.attempt(line) {
-                Ok(response) => return Ok(response),
+                Ok(response) => {
+                    if established {
+                        self.level = 0;
+                    } else {
+                        self.level /= 2;
+                    }
+                    return Ok(response);
+                }
                 Err(e) => {
                     self.conn = None; // the transport is suspect: redial
+                    self.level = (self.level + 1).min(LEVEL_CAP);
                     last = Some(e);
                 }
             }
@@ -281,6 +323,68 @@ mod tests {
         let mut c = Client::with_config(addr, cfg_fast());
         assert_eq!(c.roundtrip_line("{\"once\":1}").unwrap(), "{\"once\":1}");
         server.join().unwrap();
+    }
+
+    #[test]
+    fn flapping_peer_keeps_the_backoff_level_raised_across_calls() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            // two connections that accept, read the request, then slam the
+            // door — the flap pattern that used to reset the schedule to
+            // the floor interval on every roundtrip call
+            for _ in 0..2 {
+                let (stream, _) = listener.accept().unwrap();
+                let mut reader = BufReader::new(stream);
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+            }
+            // third connection: behave, twice
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            for _ in 0..2 {
+                line.clear();
+                reader.read_line(&mut line).unwrap();
+                let mut w = &stream;
+                w.write_all(line.as_bytes()).unwrap();
+            }
+        });
+        let mut c = Client::with_config(addr, ClientConfig { retries: 1, ..cfg_fast() });
+        // call 1: both attempts die mid-stream — the failures must
+        // accumulate into the persistent level, not a per-call counter
+        assert!(c.roundtrip_line("{\"a\":1}").is_err());
+        assert_eq!(c.backoff_level(), 2);
+        // call 2: the reconnect succeeds, but one response on a freshly
+        // dialed connection only halves the level — a server that accepts
+        // reconnects readily is exactly the flapping case
+        assert_eq!(c.roundtrip_line("{\"b\":2}").unwrap(), "{\"b\":2}");
+        assert_eq!(c.backoff_level(), 1);
+        // call 3: a response on the already-established connection is
+        // proof of stability — only now does the schedule reset
+        assert_eq!(c.roundtrip_line("{\"c\":3}").unwrap(), "{\"c\":3}");
+        assert_eq!(c.backoff_level(), 0);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn backoff_schedule_replays_bit_for_bit_from_the_seed() {
+        // the delays a flapping client sleeps are a pure function of the
+        // config seed: same seed, same jittered schedule, and every draw
+        // stays inside the 50-100 % jitter band of its level's raw value
+        let cfg = ClientConfig { seed: 0xfeed, ..ClientConfig::default() };
+        let mut a = Rng::new(cfg.seed);
+        let mut b = Rng::new(cfg.seed);
+        // the level trace a peer failing 6 straight attempts produces
+        // (level k-1 is what the k-th failed attempt sleeps on)
+        for level in 0..6u32 {
+            let d = backoff_delay(&cfg, level, &mut a);
+            assert_eq!(d, backoff_delay(&cfg, level, &mut b), "level {level} diverged");
+            let raw = backoff_raw(&cfg, level);
+            assert!(d >= raw.mul_f64(0.5) && d <= raw, "level {level} outside jitter band");
+        }
+        // the persistent level saturates instead of overflowing the shift
+        assert_eq!(backoff_raw(&cfg, LEVEL_CAP), cfg.backoff_cap);
     }
 
     #[test]

@@ -626,6 +626,19 @@ pub struct StatsSnapshot {
     /// arrived while an identical canonical request was already solving
     /// and were answered by the leader's outcome without a second solve
     pub coalesced: u64,
+    /// cluster worker processes respawned by the supervisor after a crash
+    /// or a missed liveness probe (always 0 on a single-process service
+    /// and on the shard workers themselves — only the cluster router
+    /// counts respawns)
+    pub shard_respawns: u64,
+    /// requests re-sent to a respawned shard after the shard that owed
+    /// them died mid-solve (planning is pure, so replay is safe; each
+    /// replayed request still counts served/errors exactly once)
+    pub replayed: u64,
+    /// requests answered by the cluster router's own embedded planner
+    /// because the owning shard's circuit breaker was open (byte-identical
+    /// to a shard answer — the degradation is visible only here)
+    pub degraded: u64,
     /// nearest-rank p50 of plan *solve* latency, seconds (cache hits and
     /// error frames don't contribute samples)
     pub plan_p50_s: f64,
@@ -650,6 +663,9 @@ fn counters_to_obj(s: &StatsSnapshot) -> JsonObj {
         .set("warehouse_hits", s.warehouse_hits)
         .set("warehouse_writes", s.warehouse_writes)
         .set("coalesced", s.coalesced)
+        .set("shard_respawns", s.shard_respawns)
+        .set("replayed", s.replayed)
+        .set("degraded", s.degraded)
         .set("plan_p50_s", s.plan_p50_s)
         .set("plan_p95_s", s.plan_p95_s);
     o
@@ -669,6 +685,9 @@ fn counters_from_obj(s: &JsonObj) -> Result<StatsSnapshot, PlanError> {
         warehouse_hits: get_u64(s, "warehouse_hits")?,
         warehouse_writes: get_u64(s, "warehouse_writes")?,
         coalesced: get_u64(s, "coalesced")?,
+        shard_respawns: get_u64(s, "shard_respawns")?,
+        replayed: get_u64(s, "replayed")?,
+        degraded: get_u64(s, "degraded")?,
         plan_p50_s: get_f64(s, "plan_p50_s")?,
         plan_p95_s: get_f64(s, "plan_p95_s")?,
     })
@@ -762,7 +781,9 @@ pub fn metrics_from_json(j: &Json) -> Result<MetricsSnapshot, PlanError> {
 /// Flatten a metrics snapshot into the `BENCH_*.json` medians schema
 /// (flat name → number object) — what `xbarmap serve --metrics-out FILE`
 /// writes. **Gauges** are emitted (latency in ns, occupancy) plus the
-/// three **fault counters** (`panics`, `timeouts`, `rejected_internal`);
+/// **fault counters** (`panics`, `timeouts`, `rejected_internal`) and the
+/// cluster **failover counters** (`shard_respawns`, `replayed`,
+/// `degraded`);
 /// throughput counters (`served`, `errors`, …) are excluded so two
 /// snapshots of the same service can be compared with `xbarmap
 /// bench-gate` without ever-growing counters reading as regressions —
@@ -786,7 +807,10 @@ pub fn metrics_medians(m: &MetricsSnapshot) -> Json {
     .set("serve/warehouse_bytes", m.warehouse_bytes)
     .set("serve/panics", m.stats.panics)
     .set("serve/timeouts", m.stats.timeouts)
-    .set("serve/rejected_internal", m.stats.rejected_internal);
+    .set("serve/rejected_internal", m.stats.rejected_internal)
+    .set("serve/shard_respawns", m.stats.shard_respawns)
+    .set("serve/replayed", m.stats.replayed)
+    .set("serve/degraded", m.stats.degraded);
     Json::Obj(o)
 }
 
@@ -991,6 +1015,9 @@ mod tests {
                 warehouse_hits: 9,
                 warehouse_writes: 22,
                 coalesced: 6,
+                shard_respawns: 1,
+                replayed: 3,
+                degraded: 2,
                 plan_p50_s: 0.0125,
                 plan_p95_s: 0.25,
             },
@@ -1029,6 +1056,9 @@ mod tests {
                 panics: 1,
                 timeouts: 2,
                 rejected_internal: 1,
+                shard_respawns: 2,
+                replayed: 5,
+                degraded: 1,
                 ..Default::default()
             },
             inflight: 1,
@@ -1048,6 +1078,12 @@ mod tests {
         assert_eq!(j.get("serve/panics").and_then(|v| v.as_usize()), Some(1));
         assert_eq!(j.get("serve/timeouts").and_then(|v| v.as_usize()), Some(2));
         assert_eq!(j.get("serve/rejected_internal").and_then(|v| v.as_usize()), Some(1));
+        // cluster failover counters are snapshot rows on the same terms:
+        // zero on a healthy (or single-process) baseline, growth under a
+        // non-zero baseline flags a flapping shard
+        assert_eq!(j.get("serve/shard_respawns").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(j.get("serve/replayed").and_then(|v| v.as_usize()), Some(5));
+        assert_eq!(j.get("serve/degraded").and_then(|v| v.as_usize()), Some(1));
         // warehouse_bytes is a gauge (live bytes on disk), so it's safe
         // under the gate like cache_bytes
         assert_eq!(j.get("serve/warehouse_bytes").and_then(|v| v.as_usize()), Some(4096));
@@ -1080,6 +1116,9 @@ mod tests {
             warehouse_hits: 8,
             warehouse_writes: 19,
             coalesced: 2,
+            shard_respawns: 1,
+            replayed: 4,
+            degraded: 2,
             plan_p50_s: 0.0125,
             plan_p95_s: 0.25,
         };

@@ -68,7 +68,7 @@
 //!   `BENCH_*.json` schema so serve latency joins the bench trajectory.
 
 mod cache;
-mod conn;
+pub(crate) mod conn;
 mod singleflight;
 
 pub use cache::PlanCache;
@@ -90,13 +90,13 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// How often blocked reads and the accept loop re-check the shutdown flag.
-const POLL: Duration = Duration::from_millis(50);
+pub(crate) const POLL: Duration = Duration::from_millis(50);
 
 /// Cap on how long one response write may stall on a client that stopped
 /// reading. The per-connection writer holds that connection's lock while
 /// writing, so without a cap one dead-slow client could pin workers;
 /// on timeout the write errors and the connection degrades to discarding.
-const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
+pub(crate) const WRITE_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Plan-solve latency samples kept for the percentile report (a bounded
 /// window so an always-on service's memory stays flat; the `stats` frame
@@ -107,7 +107,7 @@ const LATENCY_WINDOW: usize = 4096;
 /// ones (a few KB per layer); anything past this is a client outside the
 /// protocol, answered with an error frame and disconnected so a
 /// never-newlining stream can't grow the line buffer without limit.
-const MAX_LINE_BYTES: usize = 8 << 20;
+pub(crate) const MAX_LINE_BYTES: usize = 8 << 20;
 
 /// Capacity of the bounded channel feeding the warehouse writer thread.
 /// Workers `try_push` solved plans and shed the append when the writer
@@ -244,6 +244,26 @@ struct StatsInner {
     latencies: VecDeque<f64>,
 }
 
+impl StatsInner {
+    fn new() -> StatsInner {
+        StatsInner {
+            served: 0,
+            errors: 0,
+            cache_hits: 0,
+            connections: 0,
+            panics: 0,
+            timeouts: 0,
+            rejected_internal: 0,
+            rejected_over_quota: 0,
+            rejected_over_inflight: 0,
+            warehouse_hits: 0,
+            warehouse_writes: 0,
+            coalesced: 0,
+            latencies: VecDeque::new(),
+        }
+    }
+}
+
 /// State shared by the accept loop, connection readers and workers.
 struct Shared {
     shutdown: AtomicBool,
@@ -307,6 +327,12 @@ impl Shared {
             warehouse_hits: s.warehouse_hits,
             warehouse_writes: s.warehouse_writes,
             coalesced: s.coalesced,
+            // cluster failover counters: always zero on a single-process
+            // service (and on the shard workers a cluster spawns) — only
+            // the cluster router ([`crate::cluster`]) counts failovers
+            shard_respawns: 0,
+            replayed: 0,
+            degraded: 0,
             plan_p50_s: percentile_nearest_rank(&lat, 0.50),
             plan_p95_s: percentile_nearest_rank(&lat, 0.95),
         }
@@ -422,21 +448,7 @@ impl Service {
                     cfg.cache_ttl,
                     cfg.cache_max_bytes,
                 ),
-                stats: Mutex::new(StatsInner {
-                    served: 0,
-                    errors: 0,
-                    cache_hits: 0,
-                    connections: 0,
-                    panics: 0,
-                    timeouts: 0,
-                    rejected_internal: 0,
-                    rejected_over_quota: 0,
-                    rejected_over_inflight: 0,
-                    warehouse_hits: 0,
-                    warehouse_writes: 0,
-                    coalesced: 0,
-                    latencies: VecDeque::new(),
-                }),
+                stats: Mutex::new(StatsInner::new()),
                 inflight: AtomicUsize::new(0),
                 max_inflight: cfg.max_inflight,
                 per_conn_quota: cfg.per_conn_quota,
@@ -639,7 +651,7 @@ impl Service {
 /// reads a half-written document. On platforms where rename refuses to
 /// replace an existing file (Windows), fall back to removing the
 /// destination first — a brief gap beats a frozen first snapshot.
-fn write_metrics_file(path: &Path, m: &wire::MetricsSnapshot) -> std::io::Result<()> {
+pub(crate) fn write_metrics_file(path: &Path, m: &wire::MetricsSnapshot) -> std::io::Result<()> {
     let mut tmp = path.as_os_str().to_owned();
     tmp.push(".tmp");
     let tmp = PathBuf::from(tmp);
@@ -650,50 +662,85 @@ fn write_metrics_file(path: &Path, m: &wire::MetricsSnapshot) -> std::io::Result
     })
 }
 
-/// Read one connection's request lines into the shared queue. Every
-/// non-blank line claims the next response sequence number; on EOF, error
-/// or shutdown the connection is owed exactly the responses claimed so
-/// far, and [`Conn::finish_input`] arranges the close after the last one.
+/// One connection's line assembler, shared by the single-process reader
+/// ([`read_conn`]) and the cluster router ([`crate::cluster`]) so their
+/// byte-level framing cannot diverge — the router's merged stream is
+/// specified as byte-identical to a single service, and that identity
+/// starts with both sides cutting the input into the same lines.
 ///
 /// Lines are assembled from **raw bytes** (`read_until`, not `read_line`:
 /// the latter's UTF-8 guard discards a call's appended bytes when a poll
 /// timeout lands mid multi-byte character — bytes already consumed from
 /// the socket would be silently lost), capped at [`MAX_LINE_BYTES`] per
 /// line via `Take` so one never-newlining client can't grow memory past
-/// the cap: an oversized line answers with an error frame and drops the
-/// connection. Invalid UTF-8 flows (lossily decoded) into the normal
-/// parse-error frame instead of killing the stream.
-fn read_conn(shared: &Shared, stream: TcpStream, conn: Arc<Conn>) {
-    // a read timeout turns the blocking read into a poll so shutdown is
-    // observed even on idle connections
-    let _ = stream.set_read_timeout(Some(POLL));
-    let mut reader = BufReader::new(stream);
-    let mut seq = 0usize;
-    let mut line_no = 0usize;
-    let mut buf: Vec<u8> = Vec::new();
-    let mut eof = false;
-    'conn: while !eof {
-        buf.clear();
-        let mut oversized = false;
-        // assemble one line across poll ticks (a timeout mid-line leaves
-        // the partial bytes in buf and the next read appends to them)
+/// the cap. Invalid UTF-8 flows (lossily decoded) into the normal
+/// parse-error frame instead of killing the stream, and a final line
+/// without a trailing newline is honored at EOF.
+pub(crate) struct LineReader {
+    reader: BufReader<TcpStream>,
+    buf: Vec<u8>,
+    eof: bool,
+}
+
+/// What [`LineReader::next`] assembled.
+pub(crate) enum NextLine {
+    /// A complete line, lossily decoded and trimmed. May be empty: blank
+    /// lines claim a physical line number but no response, so the caller
+    /// must still count them.
+    Line(String),
+    /// The line exceeded [`MAX_LINE_BYTES`]: a terminal protocol
+    /// violation. The caller answers with an error frame (counting the
+    /// line) and hangs up.
+    Oversized,
+    /// Clean end of input: EOF with nothing (or only whitespace) pending.
+    End,
+    /// Shutdown observed or the read failed: stop without another frame.
+    Abort,
+}
+
+impl LineReader {
+    /// Wrap `stream`, switching it to polled reads so `is_shutdown` is
+    /// observed even on idle connections.
+    pub fn new(stream: TcpStream) -> LineReader {
+        // a read timeout turns the blocking read into a poll so shutdown
+        // is observed even on idle connections
+        let _ = stream.set_read_timeout(Some(POLL));
+        LineReader { reader: BufReader::new(stream), buf: Vec::new(), eof: false }
+    }
+
+    /// The underlying reader, for handing to [`drain_discard`] after a
+    /// terminal frame.
+    pub fn reader_mut(&mut self) -> &mut BufReader<TcpStream> {
+        &mut self.reader
+    }
+
+    /// Assemble the next line across poll ticks (a timeout mid-line
+    /// leaves the partial bytes buffered and the next read appends to
+    /// them), re-checking `is_shutdown` on every tick.
+    pub fn next(&mut self, is_shutdown: impl Fn() -> bool) -> NextLine {
+        if self.eof {
+            return NextLine::End;
+        }
+        self.buf.clear();
         loop {
-            if shared.is_shutdown() {
-                break 'conn;
+            if is_shutdown() {
+                return NextLine::Abort;
             }
-            let room = (MAX_LINE_BYTES + 1).saturating_sub(buf.len()) as u64;
-            match reader.by_ref().take(room).read_until(b'\n', &mut buf) {
+            let room = (MAX_LINE_BYTES + 1).saturating_sub(self.buf.len()) as u64;
+            match self.reader.by_ref().take(room).read_until(b'\n', &mut self.buf) {
                 Ok(_) => {
-                    if buf.last() == Some(&b'\n') {
+                    if self.buf.last() == Some(&b'\n') {
                         break; // complete line
                     }
-                    if buf.len() > MAX_LINE_BYTES {
-                        oversized = true;
-                        break;
+                    if self.buf.len() > MAX_LINE_BYTES {
+                        return NextLine::Oversized;
                     }
                     // no newline, under the cap: EOF — a final line
                     // without a trailing newline may still be in buf
-                    eof = true;
+                    self.eof = true;
+                    if self.buf.iter().all(u8::is_ascii_whitespace) {
+                        return NextLine::End;
+                    }
                     break;
                 }
                 Err(e)
@@ -704,27 +751,43 @@ fn read_conn(shared: &Shared, stream: TcpStream, conn: Arc<Conn>) {
                 {
                     continue; // poll tick; bytes read so far stay in buf
                 }
-                Err(_) => break 'conn,
+                Err(_) => return NextLine::Abort,
             }
         }
-        if oversized {
-            // answer in-order like any other response, then hang up — the
-            // client is outside the protocol the bounded queue can pace
-            line_no += 1;
-            shared.lock_stats().errors += 1;
-            let e = PlanError(format!("request line exceeds {MAX_LINE_BYTES} bytes"));
-            conn.deliver(seq, wire::error_frame(line_no, &e).dumps());
-            seq += 1;
-            conn.finish_input(seq);
-            drain_discard(shared, &mut reader);
-            return;
-        }
-        if eof && buf.iter().all(u8::is_ascii_whitespace) {
-            break;
-        }
+        NextLine::Line(String::from_utf8_lossy(&self.buf).trim().to_string())
+    }
+}
+
+/// Read one connection's request lines into the shared queue. Every
+/// non-blank line claims the next response sequence number; on EOF, error
+/// or shutdown the connection is owed exactly the responses claimed so
+/// far, and [`Conn::finish_input`] arranges the close after the last one.
+/// Byte-level framing (poll-tick assembly, the [`MAX_LINE_BYTES`] cap,
+/// lossy UTF-8, EOF handling) lives in [`LineReader`].
+fn read_conn(shared: &Shared, stream: TcpStream, conn: Arc<Conn>) {
+    let mut lines = LineReader::new(stream);
+    let mut seq = 0usize;
+    let mut line_no = 0usize;
+    loop {
+        let text = match lines.next(|| shared.is_shutdown()) {
+            NextLine::End | NextLine::Abort => break,
+            NextLine::Oversized => {
+                // answer in-order like any other response, then hang up —
+                // the client is outside the protocol the bounded queue
+                // can pace
+                line_no += 1;
+                shared.lock_stats().errors += 1;
+                let e = PlanError(format!("request line exceeds {MAX_LINE_BYTES} bytes"));
+                conn.deliver(seq, wire::error_frame(line_no, &e).dumps());
+                seq += 1;
+                conn.finish_input(seq);
+                drain_discard(&|| shared.is_shutdown(), lines.reader_mut());
+                return;
+            }
+            NextLine::Line(text) => text,
+        };
         line_no += 1;
-        let text = String::from_utf8_lossy(&buf);
-        let text = text.trim();
+        let text = text.as_str();
         if text.is_empty() {
             continue;
         }
@@ -742,7 +805,7 @@ fn read_conn(shared: &Shared, stream: TcpStream, conn: Arc<Conn>) {
             conn.deliver(seq, wire::reject_frame(line_no, wire::RejectKind::OverQuota, &e).dumps());
             seq += 1;
             conn.finish_input(seq);
-            drain_discard(shared, &mut reader);
+            drain_discard(&|| shared.is_shutdown(), lines.reader_mut());
             return;
         }
         // service-wide admission: reserve an in-flight slot before
@@ -855,16 +918,14 @@ const DRAIN_MAX_WAIT: Duration = Duration::from_secs(5);
 /// [`DRAIN_MAX_BYTES`] / [`DRAIN_MAX_WAIT`] bounds keep a hostile
 /// client from parking the reader thread forever: past either bound
 /// the responses have had every reasonable chance to flush, and the
-/// socket drops.
-fn drain_discard(shared: &Shared, reader: &mut BufReader<TcpStream>) {
+/// socket drops. Takes its shutdown check as a closure so the cluster
+/// router (whose shared state is its own type) drains identically.
+pub(crate) fn drain_discard(is_shutdown: &dyn Fn() -> bool, reader: &mut BufReader<TcpStream>) {
     let mut scratch = [0u8; 4096];
     let mut discarded = 0usize;
     let started = Instant::now();
     loop {
-        if shared.is_shutdown()
-            || discarded >= DRAIN_MAX_BYTES
-            || started.elapsed() >= DRAIN_MAX_WAIT
-        {
+        if is_shutdown() || discarded >= DRAIN_MAX_BYTES || started.elapsed() >= DRAIN_MAX_WAIT {
             return;
         }
         match reader.read(&mut scratch) {
@@ -893,7 +954,7 @@ pub const PANIC_PROBE_ID: &str = "__xbarmap_panic_probe__";
 
 /// Best-effort text of a caught panic payload (`panic!("...")` carries
 /// `&str` or `String`; anything else is opaque).
-fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
     if let Some(s) = payload.downcast_ref::<&str>() {
         s
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -1166,7 +1227,7 @@ fn error_response(shared: &Shared, line_no: usize, e: &PlanError) -> String {
 /// the libc crate), and the handler body is a single async-signal-safe
 /// store into the one flag both signals share.
 #[cfg(unix)]
-fn sigint_flag() -> &'static AtomicBool {
+pub(crate) fn sigint_flag() -> &'static AtomicBool {
     static FLAG: AtomicBool = AtomicBool::new(false);
     static INSTALL: std::sync::Once = std::sync::Once::new();
     extern "C" fn on_shutdown_signal(_signum: i32) {
@@ -1184,7 +1245,7 @@ fn sigint_flag() -> &'static AtomicBool {
 
 /// Non-unix fallback: no signal hookup; shutdown comes from the handle.
 #[cfg(not(unix))]
-fn sigint_flag() -> &'static AtomicBool {
+pub(crate) fn sigint_flag() -> &'static AtomicBool {
     static FLAG: AtomicBool = AtomicBool::new(false);
     &FLAG
 }

@@ -30,6 +30,16 @@
 //!
 //! Appends go through the OS page cache without fsync — the torn-tail
 //! loader is the recovery story, and a lost suffix only costs re-solves.
+//!
+//! **Single-writer exclusion**: two processes appending into one segment
+//! would interleave half-records and corrupt each other's tails, so
+//! [`Warehouse::open`] takes a [`LOCK_FILE`] (`O_EXCL` create holding the
+//! owner's pid) and holds it until drop. A lock whose pid is dead —
+//! `kill -9` skips destructors — is stale and taken over; a live holder
+//! refuses the open with a descriptive error. Cluster shards
+//! ([`crate::cluster`]) therefore each get their own subdirectory under
+//! the shared `--warehouse` root rather than sharing one segment stream.
+//! The read-only [`Warehouse::stat`] does not take the lock.
 
 pub mod index;
 pub mod segment;
@@ -46,6 +56,70 @@ use std::sync::Mutex;
 /// tile, LeNet) to a few hundred KB (BERT grid), so 4 MiB keeps segment
 /// count and per-file blast radius both small.
 pub const DEFAULT_SEGMENT_BYTES: u64 = 4 << 20;
+
+/// Name of the single-writer exclusion lock inside a warehouse directory.
+/// Not a segment file ([`segment::segment_id`] ignores it), so replay and
+/// `stat` never see it as content.
+pub const LOCK_FILE: &str = "warehouse.lock";
+
+/// Held lock on a warehouse directory; dropping it removes the file. Kept
+/// as a field on [`Warehouse`] so the exclusion lives exactly as long as
+/// the append handle can.
+#[derive(Debug)]
+struct LockGuard {
+    path: PathBuf,
+}
+
+impl Drop for LockGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Take `dir`'s [`LOCK_FILE`] with an `O_EXCL` create, writing our pid.
+/// On contention the holder pid is probed ([`crate::util::proc::pid_alive`]):
+/// a dead or unreadable holder is stale (its destructor never ran — e.g.
+/// `kill -9`) and its lock is removed and retaken once; a live holder —
+/// including this very process, which is what a double `open` of one
+/// directory looks like — refuses with [`std::io::ErrorKind::WouldBlock`].
+fn acquire_lock(dir: &Path) -> std::io::Result<LockGuard> {
+    let path = dir.join(LOCK_FILE);
+    for takeover in [false, true] {
+        match OpenOptions::new().write(true).create_new(true).open(&path) {
+            Ok(mut file) => {
+                file.write_all(std::process::id().to_string().as_bytes())?;
+                return Ok(LockGuard { path });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                if takeover {
+                    break; // raced another stale-takeover: give up below
+                }
+                let holder = std::fs::read_to_string(&path).unwrap_or_default();
+                if let Ok(pid) = holder.trim().parse::<u32>() {
+                    if crate::util::proc::pid_alive(pid) {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::WouldBlock,
+                            format!(
+                                "warehouse {} is locked by live process {pid} \
+                                 (remove {LOCK_FILE} only if that process is gone)",
+                                dir.display()
+                            ),
+                        ));
+                    }
+                }
+                // dead pid or garbage content: stale — take it over
+                let _ = std::fs::remove_file(&path);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    // two stale-takeover racers removed each other's create; one more
+    // O_EXCL attempt already happened above, so surface the contention
+    Err(std::io::Error::new(
+        std::io::ErrorKind::WouldBlock,
+        format!("warehouse {} lock contended during stale takeover", dir.display()),
+    ))
+}
 
 /// Configuration for [`Warehouse::open`].
 #[derive(Debug, Clone)]
@@ -126,15 +200,21 @@ pub struct Warehouse {
     dir: PathBuf,
     segment_bytes: u64,
     inner: Mutex<Inner>,
+    /// single-writer exclusion on `dir`; removed on drop
+    _lock: LockGuard,
 }
 
 impl Warehouse {
     /// Open (creating the directory if needed) and replay every segment:
     /// index intact records last-wins, truncate torn tails back to a
     /// record boundary. Content problems never abort the open — only I/O
-    /// errors do.
+    /// errors do, plus one policy refusal: a [`LOCK_FILE`] held by a live
+    /// process (stale locks from dead pids are taken over silently).
     pub fn open(cfg: &WarehouseConfig) -> std::io::Result<(Warehouse, LoadReport)> {
         std::fs::create_dir_all(&cfg.dir)?;
+        // exclusion before replay: a second writer interleaving appends
+        // into the active segment would tear both writers' records
+        let lock = acquire_lock(&cfg.dir)?;
         let mut report = LoadReport::default();
         let mut inner = Inner {
             index: Index::new(),
@@ -179,7 +259,12 @@ impl Warehouse {
         inner.total_bytes = report.bytes;
         report.records = inner.index.len();
         report.superseded = inner.index.superseded();
-        let wh = Warehouse { dir: cfg.dir.clone(), segment_bytes: cfg.segment_bytes, inner: Mutex::new(inner) };
+        let wh = Warehouse {
+            dir: cfg.dir.clone(),
+            segment_bytes: cfg.segment_bytes,
+            inner: Mutex::new(inner),
+            _lock: lock,
+        };
         Ok((wh, report))
     }
 
@@ -533,6 +618,59 @@ mod tests {
         assert_eq!(report.records, 7);
         assert_eq!(report.superseded, 0, "compaction must have dropped every duplicate");
         assert_eq!(wh.get("post").as_deref(), Some("after-compaction"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn a_live_lock_refuses_a_second_open_and_drop_releases_it() {
+        let dir = temp_dir("lock");
+        let cfg = WarehouseConfig::at(&dir);
+        let (wh, _) = Warehouse::open(&cfg).unwrap();
+        // our own pid is alive, so a second open of the same directory —
+        // the latent single-process double-open — is refused, not raced
+        let err = Warehouse::open(&cfg).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::WouldBlock);
+        assert!(err.to_string().contains("locked by live process"), "{err}");
+        assert!(dir.join(LOCK_FILE).exists());
+        // stat stays lock-free: read-only tooling works beside a writer
+        assert_eq!(Warehouse::stat(&dir).unwrap().records, 0);
+        drop(wh);
+        assert!(!dir.join(LOCK_FILE).exists(), "drop must release the lock");
+        let (_wh, _) = Warehouse::open(&cfg).expect("released lock must be retakable");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn a_stale_lock_from_a_dead_pid_is_taken_over() {
+        let dir = temp_dir("stale-lock");
+        std::fs::create_dir_all(&dir).unwrap();
+        // a real pid that is certainly dead: a reaped child's
+        let mut child = std::process::Command::new("true").spawn().unwrap();
+        let dead_pid = child.id();
+        child.wait().unwrap();
+        std::fs::write(dir.join(LOCK_FILE), dead_pid.to_string()).unwrap();
+        let (wh, _) = Warehouse::open(&WarehouseConfig::at(&dir))
+            .expect("a dead holder's lock is stale and must be taken over");
+        wh.append("k", "p").unwrap();
+        assert_eq!(
+            std::fs::read_to_string(dir.join(LOCK_FILE)).unwrap().trim(),
+            std::process::id().to_string(),
+            "the lock must now record the new owner"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn a_garbage_lock_file_is_taken_over() {
+        let dir = temp_dir("garbage-lock");
+        std::fs::create_dir_all(&dir).unwrap();
+        // kill -9 between create and the pid write leaves an empty file;
+        // external tampering leaves arbitrary bytes — both are stale
+        std::fs::write(dir.join(LOCK_FILE), "not a pid").unwrap();
+        let (_wh, report) = Warehouse::open(&WarehouseConfig::at(&dir))
+            .expect("an unreadable holder must be treated as stale");
+        assert_eq!(report.segments, 0, "the lock file must not count as a segment");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -9,6 +9,7 @@ pub mod json;
 pub mod mpmc;
 pub mod par;
 pub mod prng;
+pub mod proc;
 pub mod prop;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,207 @@
+//! Child-process supervision helpers, std-only.
+//!
+//! The cluster router ([`crate::cluster`]) spawns `serve --plans` workers
+//! and must detect their death, kill hung ones, and drain their pipes
+//! without blocking. `std::process` covers spawn/wait but not
+//! signal-level control or bounded waits; the missing pieces live here on
+//! the same raw-libc pattern the service already uses for SIGINT
+//! (`extern "C"` declarations, no crate dependency):
+//!
+//! * [`pid_alive`] — probe a pid with `kill(pid, 0)`, the standard
+//!   liveness check (also how a stale warehouse lock is recognized,
+//!   [`crate::store`]);
+//! * [`terminate`] — polite SIGTERM so a child can drain connections,
+//!   where [`std::process::Child::kill`] would SIGKILL it mid-write;
+//! * [`wait_timeout`] — bounded reap by polling
+//!   [`std::process::Child::try_wait`], so "gave it 2 s to exit" never
+//!   becomes "wedged forever";
+//! * [`spawn_announced`] — spawn with stdout piped and wait (bounded) for
+//!   the child's one-line JSON announcement, then keep the pipe drained
+//!   in the background: a child blocked on a full stdout pipe is
+//!   indistinguishable from a hang to its supervisor.
+
+use crate::util::json;
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, ExitStatus, Stdio};
+use std::time::{Duration, Instant};
+
+#[cfg(unix)]
+extern "C" {
+    /// POSIX `kill(2)`; with signal 0 it only checks deliverability.
+    fn kill(pid: i32, sig: i32) -> i32;
+}
+
+/// Whether `pid` names a live process (unix: `kill(pid, 0)` succeeds).
+/// On non-unix targets this conservatively returns `true` — callers use
+/// it to decide whether a lock holder or child is *safe to declare dead*,
+/// and "alive" is the safe answer when we cannot probe.
+pub fn pid_alive(pid: u32) -> bool {
+    #[cfg(unix)]
+    {
+        // SAFETY: kill with signal 0 performs no action, only an
+        // existence/permission check on the target pid.
+        unsafe { kill(pid as i32, 0) == 0 }
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = pid;
+        true
+    }
+}
+
+/// SIGKILL `pid` outright (unix; a no-op elsewhere). This is the fault
+/// *injection* used by the chaos suites — production shutdown goes
+/// through [`terminate`] so children get to drain. Errors are ignored:
+/// an already-dead target is the goal state.
+pub fn force_kill(pid: u32) {
+    #[cfg(unix)]
+    {
+        const SIGKILL: i32 = 9;
+        // SAFETY: sending a signal to a pid the caller owns.
+        unsafe {
+            kill(pid as i32, SIGKILL);
+        }
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = pid;
+    }
+}
+
+/// Ask `child` to exit: SIGTERM on unix (so the service's signal handler
+/// can drain connections and write a final metrics snapshot), a hard
+/// [`std::process::Child::kill`] elsewhere. Errors are ignored — the
+/// child may already have exited, which is the goal state.
+pub fn terminate(child: &mut Child) {
+    #[cfg(unix)]
+    {
+        const SIGTERM: i32 = 15;
+        // SAFETY: sending a signal to a pid we spawned and still own.
+        unsafe {
+            kill(child.id() as i32, SIGTERM);
+        }
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = child.kill();
+    }
+}
+
+/// Reap `child` if it exits within `timeout`, polling
+/// [`std::process::Child::try_wait`]. `Ok(None)` means it is still
+/// running when the budget runs out — the caller escalates (typically
+/// [`std::process::Child::kill`] then a blocking wait).
+pub fn wait_timeout(child: &mut Child, timeout: Duration) -> std::io::Result<Option<ExitStatus>> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if let Some(status) = child.try_wait()? {
+            return Ok(Some(status));
+        }
+        if Instant::now() >= deadline {
+            return Ok(None);
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Spawn `cmd` with stdout piped and wait up to `timeout` for a line of
+/// JSON carrying string field `key` (the child's announcement, e.g.
+/// `{"v":1,"announce":"127.0.0.1:45123"}`). Returns the child and the
+/// announced value; lines before the announcement and everything after it
+/// are discarded by a background drainer thread so the child can never
+/// block on a full stdout pipe. A child that exits or stays silent past
+/// the budget is killed, reaped, and reported as an error.
+pub fn spawn_announced(
+    mut cmd: Command,
+    key: &'static str,
+    timeout: Duration,
+) -> std::io::Result<(Child, String)> {
+    cmd.stdout(Stdio::piped());
+    let mut child = cmd.spawn()?;
+    let stdout = child.stdout.take().expect("stdout was piped above");
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let mut reader = BufReader::new(stdout);
+        let mut line = String::new();
+        let mut announced = false;
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {
+                    if !announced {
+                        if let Some(v) =
+                            json::parse(line.trim_end()).ok().as_ref().and_then(|j| {
+                                j.get(key).and_then(|v| v.as_str()).map(str::to_string)
+                            })
+                        {
+                            announced = true;
+                            let _ = tx.send(v);
+                        }
+                    }
+                    // keep draining: discarded output is the price of a
+                    // supervisor that can never deadlock on its child
+                }
+            }
+        }
+    });
+    match rx.recv_timeout(timeout) {
+        Ok(value) => Ok((child, value)),
+        Err(_) => {
+            let _ = child.kill();
+            let _ = child.wait();
+            Err(std::io::Error::new(
+                std::io::ErrorKind::TimedOut,
+                format!("child announced no {key:?} line within {timeout:?}"),
+            ))
+        }
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn own_pid_is_alive_and_a_reaped_child_is_not() {
+        assert!(pid_alive(std::process::id()));
+        let mut child = Command::new("true").spawn().expect("spawn true");
+        let pid = child.id();
+        child.wait().unwrap();
+        // reaped: the pid no longer names a process we can signal (pid
+        // reuse within one test is not a realistic race)
+        assert!(!pid_alive(pid));
+    }
+
+    #[test]
+    fn wait_timeout_reports_running_then_reaps() {
+        let mut child = Command::new("sleep").arg("5").spawn().expect("spawn sleep");
+        let waited = wait_timeout(&mut child, Duration::from_millis(50)).unwrap();
+        assert!(waited.is_none(), "sleep 5 cannot have exited in 50 ms");
+        terminate(&mut child);
+        let status = wait_timeout(&mut child, Duration::from_secs(5))
+            .unwrap()
+            .expect("SIGTERM must end sleep well within 5 s");
+        assert!(!status.success(), "a signaled exit is not success");
+    }
+
+    #[test]
+    fn spawn_announced_returns_the_announced_value_and_drains() {
+        let mut cmd = Command::new("sh");
+        cmd.arg("-c").arg(
+            "echo warming up; echo '{\"v\":1,\"announce\":\"127.0.0.1:9\"}'; echo trailing noise",
+        );
+        let (mut child, value) =
+            spawn_announced(cmd, "announce", Duration::from_secs(10)).expect("announce arrives");
+        assert_eq!(value, "127.0.0.1:9");
+        assert!(child.wait().unwrap().success());
+    }
+
+    #[test]
+    fn a_silent_child_times_out_and_is_reaped() {
+        let mut cmd = Command::new("sleep");
+        cmd.arg("5");
+        let err = spawn_announced(cmd, "announce", Duration::from_millis(100)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut);
+    }
+}

@@ -30,10 +30,12 @@ use std::path::PathBuf;
 use std::sync::mpsc;
 use std::thread;
 use std::time::Duration;
+use xbarmap::cluster::{Cluster, ClusterConfig, HashRing};
 use xbarmap::plan::{self, wire};
-use xbarmap::service::{Service, ServiceConfig, ServiceHandle};
+use xbarmap::service::{PlanCache, Service, ServiceConfig, ServiceHandle};
 use xbarmap::store::{Warehouse, WarehouseConfig};
 use xbarmap::util::fault::{FaultPlan, FaultyStream};
+use xbarmap::util::json;
 use xbarmap::util::prng::Rng;
 
 /// Fixed fault-seed matrix — every seed yields a distinct, reproducible
@@ -280,6 +282,119 @@ fn warehouse_scenario(seed: u64) {
 fn torn_warehouse_tails_are_truncated_and_reboots_stay_oracle_identical() {
     for &seed in SEEDS {
         with_watchdog(format!("warehouse chaos seed {seed}"), move || warehouse_scenario(seed));
+    }
+}
+
+/// A 2-shard cluster with supervision compressed to test speed: crash
+/// detection within ~10 ms, respawn backoff in the tens of milliseconds,
+/// and a hang threshold far past any debug-profile solve so slow never
+/// reads as dead.
+fn cluster_cfg() -> ClusterConfig {
+    ClusterConfig {
+        addr: "127.0.0.1:0".into(),
+        shards: 2,
+        exe: Some(PathBuf::from(env!("CARGO_BIN_EXE_xbarmap"))),
+        worker_args: vec!["--workers".into(), "2".into(), "--queue".into(), "8".into()],
+        spawn_timeout: Duration::from_secs(30),
+        probe_interval: Duration::from_millis(100),
+        probe_timeout: Duration::from_secs(5),
+        probe_misses: 1000,
+        respawn_backoff_base: Duration::from_millis(10),
+        respawn_backoff_cap: Duration::from_millis(200),
+        route_wait: Duration::from_secs(60),
+        forward_read_timeout: Duration::from_secs(120),
+        ..ClusterConfig::default()
+    }
+}
+
+/// Which of the 2 shards the router will send this request line to.
+fn shard_owner(line: &str) -> usize {
+    let req = plan::MapRequest::from_json(&json::parse(line).unwrap()).unwrap();
+    HashRing::for_cluster(2).owner(&PlanCache::key(&req))
+}
+
+/// One seed's worth of cluster chaos: `kill -9` one shard's worker while
+/// it owes responses, with a healthy tenant running through the outage.
+/// The kill is aimed — the victim is whichever shard owns a known key, so
+/// the replay path *must* fire — and every connection's stream still has
+/// to match the single-process oracle byte for byte: nothing lost,
+/// nothing duplicated, nothing reordered.
+fn cluster_scenario(seed: u64) {
+    // 16 single-request lines with distinct canonical keys; the ring is a
+    // fixed hash, so the shard split is deterministic per candidate set
+    let candidates: Vec<String> = (2..=17u64)
+        .map(|k| {
+            format!(
+                "{{\"v\":1,\"id\":\"x{seed}-{k}\",\"net\":{{\"zoo\":\"lenet\"}},\"tiles\":{{\"fixed\":[{d},{d}]}}}}",
+                d = 16 * k
+            )
+        })
+        .collect();
+    let victim = shard_owner(&candidates[0]);
+    let owned: Vec<&String> = candidates.iter().filter(|l| shard_owner(l) == victim).collect();
+    let other: Vec<&String> = candidates.iter().filter(|l| shard_owner(l) != victim).collect();
+    assert!(owned.len() >= 2 && !other.is_empty(), "candidate set must cover both shards");
+
+    let cl = Cluster::bind(cluster_cfg()).unwrap();
+    let addr = cl.local_addr().unwrap();
+    let handle = cl.handle();
+    let join = thread::spawn(move || cl.run().unwrap());
+
+    // phase 1: a request owned by the victim, driven to its response —
+    // proving the shard is up and pinning this connection's forwarder to
+    // the incarnation about to die
+    let (a, b) = (owned[0], owned[1]);
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream.write_all(format!("{a}\n").as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut resp_a = String::new();
+    reader.read_line(&mut resp_a).unwrap();
+    assert_eq!(resp_a.trim_end(), oracle(&format!("{a}\n"))[0], "seed {seed}: pre-kill diverged");
+
+    // the herd: a healthy tenant whose mixed stream runs through the kill
+    let herd_input = request_stream(3000 + seed);
+    let herd = {
+        let input = herd_input.clone();
+        thread::spawn(move || {
+            assert_eq!(
+                drive_healthy(addr, &input),
+                oracle(&input),
+                "seed {seed}: herd tenant diverged during the outage"
+            );
+        })
+    };
+
+    handle.kill_shard(victim);
+
+    // phase 2: the dead incarnation owes these — the forwarder must see
+    // the corpse's socket fail, wait for the supervisor's respawn, and
+    // replay onto the fresh incarnation
+    stream.write_all(format!("{b}\n").as_bytes()).unwrap();
+    stream.write_all(format!("{}\n", other[0]).as_bytes()).unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let rest: Vec<String> = reader.lines().collect::<Result<_, _>>().unwrap();
+    assert_eq!(
+        rest,
+        oracle(&format!("{b}\n{}\n", other[0])),
+        "seed {seed}: post-kill responses diverged (lost, duplicated or reordered)"
+    );
+
+    herd.join().unwrap();
+    handle.shutdown();
+    let stats = join.join().unwrap();
+    assert!(stats.shard_respawns >= 1, "seed {seed}: the killed worker must be replaced");
+    assert!(stats.replayed >= 1, "seed {seed}: the owed response must be replayed, not lost");
+    assert_eq!(stats.degraded, 0, "seed {seed}: a successful replay must not degrade");
+    assert_eq!(stats.errors, 1, "seed {seed}: the herd's malformed line, nothing else");
+    assert_eq!(stats.connections, 2);
+    assert_eq!(stats.panics, 0);
+}
+
+#[test]
+fn killing_a_shard_mid_herd_replays_its_owed_responses_byte_identically() {
+    for &seed in SEEDS {
+        with_watchdog(format!("cluster chaos seed {seed}"), move || cluster_scenario(seed));
     }
 }
 

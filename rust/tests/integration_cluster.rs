@@ -1,0 +1,301 @@
+//! Cluster integration: the sharded router (`serve --plans --cluster N`)
+//! against the single-process [`plan::serve_jsonl`] oracle.
+//!
+//! Every test pins the tentpole contract — for each client connection the
+//! routed, re-sequenced response stream is **byte-identical** to what one
+//! process would have produced for the same lines — across the healthy
+//! path, the admission frames, in-band commands, degraded mode (no worker
+//! can spawn), and warm boots over pre-sharded warehouses. Workers are
+//! real child processes of the test binary's `xbarmap` build
+//! (`CARGO_BIN_EXE_xbarmap`), so the spawn/announce/probe plumbing is
+//! exercised for real, not mocked.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+use xbarmap::cluster::{shard_warehouse_dir, Cluster, ClusterConfig, ClusterHandle, HashRing};
+use xbarmap::plan::{self, wire, MapRequest, PlanError};
+use xbarmap::service::PlanCache;
+use xbarmap::util::json;
+
+/// Process spawning, worker boots and debug-profile solves all sit under
+/// this; a scenario that blows it has deadlocked.
+const SCENARIO_TIMEOUT: Duration = Duration::from_secs(180);
+
+/// Supervision knobs compressed from production seconds to test
+/// milliseconds; probe_misses stays huge because a debug-profile solve
+/// can easily outlast several probe intervals and slow must not read as
+/// dead.
+fn fast_cfg(shards: usize) -> ClusterConfig {
+    ClusterConfig {
+        addr: "127.0.0.1:0".into(),
+        shards,
+        exe: Some(PathBuf::from(env!("CARGO_BIN_EXE_xbarmap"))),
+        worker_args: vec!["--workers".into(), "2".into(), "--queue".into(), "8".into()],
+        spawn_timeout: Duration::from_secs(30),
+        probe_interval: Duration::from_millis(100),
+        probe_timeout: Duration::from_secs(5),
+        probe_misses: 1000,
+        respawn_backoff_base: Duration::from_millis(10),
+        respawn_backoff_cap: Duration::from_millis(200),
+        route_wait: Duration::from_secs(60),
+        forward_read_timeout: Duration::from_secs(120),
+        ..ClusterConfig::default()
+    }
+}
+
+fn start(cfg: ClusterConfig) -> (ClusterHandle, SocketAddr, thread::JoinHandle<wire::StatsSnapshot>) {
+    let cl = Cluster::bind(cfg).unwrap();
+    let addr = cl.local_addr().unwrap();
+    let handle = cl.handle();
+    let join = thread::spawn(move || cl.run().unwrap());
+    (handle, addr, join)
+}
+
+/// What `xbarmap plan` would answer for the same byte stream.
+fn oracle(input: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    plan::serve_jsonl(input.as_bytes(), &mut out).unwrap();
+    String::from_utf8(out).unwrap().lines().map(str::to_string).collect()
+}
+
+/// Plain client: write everything, half-close, read every response line.
+fn drive(addr: SocketAddr, input: &str) -> Vec<String> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream.write_all(input.as_bytes()).unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    BufReader::new(stream).lines().collect::<Result<_, _>>().unwrap()
+}
+
+/// A mixed stream: two cheap fixed-tile solves, a blank line, a malformed
+/// line, a tiny grid sweep — same shape the service chaos suite uses.
+fn request_stream(c: u64) -> String {
+    format!(
+        concat!(
+            "{{\"v\":1,\"id\":\"c{c}-a\",\"net\":{{\"zoo\":\"lenet\"}},\"tiles\":{{\"fixed\":[64,64]}}}}\n",
+            "\n",
+            "{{\"v\":1,\"id\":\"c{c}-b\",\"net\":{{\"zoo\":\"lenet\"}},\"tiles\":{{\"fixed\":[128,128]}},\"discipline\":\"pipeline\"}}\n",
+            "not json at all {c}\n",
+            "{{\"v\":1,\"id\":\"c{c}-g\",\"net\":{{\"zoo\":\"lenet\"}},\"tiles\":{{\"grid\":{{\"row_exp\":[6,8],\"aspects\":[1,2]}}}}}}\n",
+        ),
+        c = c
+    )
+}
+
+/// Which shard of an N-shard cluster owns this request line — computed
+/// through the same canonical key and ring the router uses.
+fn owner_of(line: &str, shards: usize) -> usize {
+    let req = MapRequest::from_json(&json::parse(line).unwrap()).unwrap();
+    HashRing::for_cluster(shards).owner(&PlanCache::key(&req))
+}
+
+/// Run `f` to completion or fail loudly instead of hanging the suite.
+fn with_watchdog(name: &str, f: impl FnOnce() + Send + 'static) {
+    let (tx, rx) = mpsc::channel();
+    let t = thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(SCENARIO_TIMEOUT) {
+        Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => t.join().unwrap(),
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("{name}: not finished after {SCENARIO_TIMEOUT:?} — deadlock or lost response")
+        }
+    }
+}
+
+#[test]
+fn cluster_stream_is_byte_identical_to_the_single_process_oracle() {
+    with_watchdog("healthy 3-shard cluster", || {
+        let (handle, addr, join) = start(fast_cfg(3));
+        let clients: Vec<_> = (0..3u64)
+            .map(|c| {
+                thread::spawn(move || {
+                    let input = request_stream(c);
+                    assert_eq!(
+                        drive(addr, &input),
+                        oracle(&input),
+                        "client {c} diverged from the single-process oracle"
+                    );
+                })
+            })
+            .collect();
+        for t in clients {
+            t.join().unwrap();
+        }
+        handle.shutdown();
+        let stats = join.join().unwrap();
+        assert_eq!(stats.connections, 3, "client connections only, not forwarder plumbing");
+        assert_eq!(stats.shard_respawns, 0);
+        assert_eq!(stats.replayed, 0);
+        assert_eq!(stats.degraded, 0);
+        assert_eq!(stats.panics, 0);
+        // 3 malformed lines, one per client; nothing else may have failed
+        assert_eq!(stats.errors, 3);
+        assert!(stats.served >= 9, "9 solves were answered, got {}", stats.served);
+    });
+}
+
+#[test]
+fn admission_frames_match_the_service_wording_and_line_numbers() {
+    with_watchdog("router admission", || {
+        let mut cfg = fast_cfg(2);
+        cfg.per_conn_quota = 2;
+        let (handle, addr, join) = start(cfg);
+        // 2 requests inside the quota, a blank line (counts a physical
+        // line, no response), then the over-quota third
+        let input = concat!(
+            "{\"v\":1,\"id\":\"q-a\",\"net\":{\"zoo\":\"lenet\"},\"tiles\":{\"fixed\":[64,64]}}\n",
+            "{\"v\":1,\"id\":\"q-b\",\"net\":{\"zoo\":\"lenet\"},\"tiles\":{\"fixed\":[128,128]}}\n",
+            "\n",
+            "{\"v\":1,\"id\":\"q-c\",\"net\":{\"zoo\":\"lenet\"},\"tiles\":{\"fixed\":[96,96]}}\n",
+        );
+        let got = drive(addr, input);
+        assert_eq!(got.len(), 3);
+        let first_two = input.lines().take(2).map(|l| format!("{l}\n")).collect::<String>();
+        assert_eq!(got[..2], oracle(&first_two)[..], "in-quota responses must stay oracle bytes");
+        // the reject frame carries the *client's* physical line number (4)
+        // and the exact single-service wording
+        let expect = wire::reject_frame(
+            4,
+            wire::RejectKind::OverQuota,
+            &PlanError("connection exceeded its 2-request quota".into()),
+        )
+        .dumps();
+        assert_eq!(got[2], expect);
+        handle.shutdown();
+        let stats = join.join().unwrap();
+        assert_eq!(stats.errors, 1, "the reject, nothing else");
+        assert_eq!(stats.degraded, 0);
+    });
+}
+
+#[test]
+fn commands_report_the_aggregated_cluster_snapshot() {
+    with_watchdog("in-band cluster commands", || {
+        let (handle, addr, join) = start(fast_cfg(2));
+        // connection 1: a solve, driven to EOF so its counters have
+        // landed on the worker before the command connection asks
+        let solve = "{\"v\":1,\"id\":\"m-a\",\"net\":{\"zoo\":\"lenet\"},\"tiles\":{\"fixed\":[64,64]}}\n";
+        assert_eq!(drive(addr, solve), oracle(solve));
+        // connection 2: the in-band command set, answered by the router
+        // with the live-probed cluster aggregate
+        let cmds = concat!(
+            "{\"v\":1,\"cmd\":\"stats\"}\n",
+            "{\"v\":1,\"cmd\":\"metrics\"}\n",
+            "{\"v\":1,\"cmd\":\"bogus\"}\n",
+        );
+        let got = drive(addr, cmds);
+        assert_eq!(got.len(), 3);
+        let stats = wire::stats_from_json(&json::parse(&got[0]).unwrap()).unwrap();
+        assert!(stats.served >= 1, "connection 1's solve must be visible in the aggregate");
+        assert_eq!(stats.connections, 2, "forwarder/probe sockets must not count");
+        let metrics = wire::metrics_from_json(&json::parse(&got[1]).unwrap()).unwrap();
+        assert!(metrics.uptime_s > 0.0);
+        assert_eq!(metrics.stats.degraded, 0);
+        // unknown commands keep the single-service wording and the
+        // client's own line number
+        let expect = wire::error_frame(
+            3,
+            &PlanError("unknown command 'bogus' (try \"stats\" or \"metrics\")".into()),
+        )
+        .dumps();
+        assert_eq!(got[2], expect);
+        handle.shutdown();
+        join.join().unwrap();
+    });
+}
+
+#[test]
+fn degraded_mode_answers_byte_identically_when_no_worker_can_spawn() {
+    with_watchdog("degraded cluster", || {
+        let mut cfg = fast_cfg(2);
+        // a binary that cannot exist: every spawn fails, the breaker
+        // opens after one strike, and the router must answer everything
+        // from its embedded planner
+        cfg.exe = Some(PathBuf::from("/nonexistent/xbarmap-no-such-binary"));
+        cfg.breaker_threshold = 1;
+        cfg.breaker_cooldown = Duration::from_secs(60);
+        cfg.respawn_backoff_base = Duration::from_millis(1);
+        let (handle, addr, join) = start(cfg);
+        let input = request_stream(7);
+        assert_eq!(
+            drive(addr, &input),
+            oracle(&input),
+            "degraded answers must be the same bytes a worker would have sent"
+        );
+        handle.shutdown();
+        let stats = join.join().unwrap();
+        assert_eq!(stats.degraded, 3, "every valid request degraded to the local planner");
+        assert_eq!(stats.served, 3, "all three answered locally");
+        assert_eq!(stats.errors, 1, "the malformed line, nothing else");
+        assert_eq!(stats.shard_respawns, 0, "no worker ever came up, so none was replaced");
+        assert_eq!(stats.panics, 0);
+    });
+}
+
+#[test]
+fn shard_warehouses_persist_and_boot_warm() {
+    with_watchdog("pre-sharded warehouse boot", || {
+        let root = std::env::temp_dir()
+            .join(format!("xbarmap-cluster-wh-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let mut cfg = fast_cfg(2);
+        // LRU off so the second boot can only answer from disk
+        cfg.worker_args = vec!["--workers".into(), "1".into(), "--cache".into(), "0".into()];
+        cfg.warehouse = Some(root.clone());
+        let input = request_stream(11);
+        let want = oracle(&input);
+
+        // boot 1: cold — every solve must persist into its shard's own
+        // warehouse subdirectory
+        {
+            let (handle, addr, join) = start(cfg.clone());
+            assert_eq!(drive(addr, &input), want, "cold boot diverged");
+            handle.shutdown();
+            let stats = join.join().unwrap();
+            assert_eq!(stats.warehouse_writes, 3, "every solve must persist");
+            assert_eq!(stats.warehouse_hits, 0);
+        }
+        // the router created only shard-NN subdirectories under the root,
+        // exactly where `warehouse precompute --cluster 2` would write
+        let mut dirs: Vec<PathBuf> = std::fs::read_dir(&root)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .collect();
+        dirs.sort();
+        assert!(!dirs.is_empty());
+        for (i, d) in dirs.iter().enumerate() {
+            assert!(
+                *d == shard_warehouse_dir(&root, 0) || *d == shard_warehouse_dir(&root, 1),
+                "unexpected entry {i} under the warehouse root: {}",
+                d.display()
+            );
+        }
+
+        // boot 2: warm — all three keys answer from disk, byte-identical
+        {
+            let (handle, addr, join) = start(cfg);
+            assert_eq!(drive(addr, &input), want, "warm boot diverged");
+            handle.shutdown();
+            let stats = join.join().unwrap();
+            assert_eq!(stats.warehouse_hits, 3, "every key must serve from its shard's store");
+            assert_eq!(stats.warehouse_writes, 0, "a warm boot solves nothing");
+        }
+        let _ = std::fs::remove_dir_all(&root);
+    });
+}
+
+#[test]
+fn the_ring_in_tests_matches_the_router_with_a_single_shard() {
+    // `owner_of` must agree with the router's routing for the degenerate
+    // cluster, whatever the key: this is the helper the chaos suite
+    // trusts to aim its kills
+    for line in request_stream(3).lines().filter(|l| l.contains("\"net\"")) {
+        assert_eq!(owner_of(line, 1), 0);
+    }
+}

@@ -599,6 +599,9 @@ fn a_torn_warehouse_never_aborts_boot_and_solves_repopulate_it() {
     let stats = join.join().unwrap();
     assert_eq!(stats.warehouse_hits, 0, "the torn record must not have survived");
     assert_eq!(stats.warehouse_writes, 1, "the fresh solve must persist before drain");
+    // the handle keeps the warehouse (and its writer lock) alive; release
+    // it so the second boot is a clean single-writer open
+    drop(handle);
 
     // second boot over the repopulated directory serves the same bytes
     // straight from the store
