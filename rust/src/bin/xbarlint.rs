@@ -1,0 +1,116 @@
+//! `xbarlint` — repo-native static analysis for the service's
+//! correctness invariants.
+//!
+//! Runs every rule in [`xbarmap::lint`] over the source tree and exits
+//! non-zero on any finding, so CI can gate on it:
+//!
+//! ```text
+//! cargo run --release --bin xbarlint -- --json ../BENCH_lint.json \
+//!     --baseline ../BENCH_lint.json
+//! ```
+//!
+//! Exit codes: `0` clean, `1` findings (or an allowlist that grew past
+//! the `--baseline` counts), `2` usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+use xbarmap::lint;
+use xbarmap::util::cli::{usage, Args, OptSpec};
+use xbarmap::util::json;
+
+const ABOUT: &str = "static analysis for the xbarmap serving invariants (docs/STATIC_ANALYSIS.md)";
+
+fn specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec {
+            name: "root",
+            help: "repo root holding rust/ and docs/ (default: this checkout)",
+            value: Some("DIR"),
+            default: None,
+        },
+        OptSpec {
+            name: "json",
+            help: "write the BENCH-schema count report to this file",
+            value: Some("FILE"),
+            default: None,
+        },
+        OptSpec {
+            name: "baseline",
+            help: "fail if any lint/allow_* count exceeds this report's",
+            value: Some("FILE"),
+            default: None,
+        },
+        OptSpec { name: "quiet", help: "suppress the summary line", value: None, default: None },
+    ]
+}
+
+fn main() -> ExitCode {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.iter().any(|a| a == "--help" || a == "-h") {
+        print!("{}", usage("xbarlint", ABOUT, &[], &specs()));
+        return ExitCode::SUCCESS;
+    }
+    match run(&raw) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("xbarlint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run(raw: &[String]) -> Result<ExitCode, String> {
+    let args = Args::parse(raw, &specs())?;
+    let root = match args.get("root") {
+        Some(r) => PathBuf::from(r),
+        // CARGO_MANIFEST_DIR is rust/; the repo root is one up
+        None => PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(".."),
+    };
+    let report =
+        lint::run(&root).map_err(|e| format!("scanning {}: {e}", root.display()))?;
+
+    for finding in &report.findings {
+        println!("{finding}");
+    }
+
+    let mut allow_regressions = 0usize;
+    if let Some(path) = args.get("baseline") {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("reading baseline {path}: {e}"))?;
+        let base = json::parse(&text).map_err(|e| format!("parsing baseline {path}: {e}"))?;
+        for rule in lint::RULES {
+            let now = report.allowed.get(rule).copied().unwrap_or(0);
+            let was = base
+                .get(&format!("lint/allow_{rule}"))
+                .and_then(json::Json::as_f64)
+                .unwrap_or(0.0) as u64;
+            if now > was {
+                allow_regressions += 1;
+                println!(
+                    "{rule:8} (allowlist)  lint: allow({rule}) sites grew {was} -> {now}; \
+                     fix the new site or lower the baseline deliberately"
+                );
+            }
+        }
+    }
+
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.to_json().pretty() + "\n")
+            .map_err(|e| format!("writing {path}: {e}"))?;
+    }
+
+    if !args.flag("quiet") {
+        let allows: u64 = report.allowed.values().sum();
+        println!(
+            "xbarlint: {} finding(s), {} allowlisted site(s), {} rule(s)",
+            report.findings.len(),
+            allows,
+            lint::RULES.len()
+        );
+    }
+    if report.findings.is_empty() && allow_regressions == 0 {
+        Ok(ExitCode::SUCCESS)
+    } else {
+        Ok(ExitCode::from(1))
+    }
+}

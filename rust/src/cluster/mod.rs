@@ -550,16 +550,15 @@ fn read_client(shared: &Arc<ClusterShared>, stream: TcpStream, conn: Arc<Conn>) 
                         Err(e) => Some(error_local(shared, line_no, &e)),
                         Ok(req) => {
                             let owner = shared.ring.owner(&PlanCache::key(&req));
-                            if lanes[owner].is_none() {
+                            let lane = lanes[owner].get_or_insert_with(|| {
                                 let q = Arc::new(Queue::bounded(FORWARD_QUEUE));
                                 let (sh, lane, cn) =
                                     (Arc::clone(shared), Arc::clone(&q), Arc::clone(&conn));
                                 forwarders.push(std::thread::spawn(move || {
                                     run_forwarder(&sh, owner, &lane, &cn);
                                 }));
-                                lanes[owner] = Some(q);
-                            }
-                            let lane = lanes[owner].as_ref().expect("lane just ensured");
+                                q
+                            });
                             // blocks while the lane is full — this is the
                             // backpressure path, same as the service's
                             // bounded queue
@@ -661,7 +660,13 @@ fn forward_one(
         if slot.as_ref().map(|(e, _)| *e) != Some(epoch) {
             *slot = Some((epoch, forwarder_client(&shared.cfg, addr, owner)));
         }
-        let client = &mut slot.as_mut().expect("slot populated above").1;
+        let Some((_, client)) = slot.as_mut() else {
+            // defensive: the slot was populated above — treat a miss as
+            // one failed attempt against this epoch rather than panicking
+            failures += 1;
+            min_epoch = epoch + 1;
+            continue;
+        };
         match client.roundtrip_line(&job.text) {
             Ok(response) => {
                 if failures > 0 {
@@ -752,6 +757,8 @@ fn solve_degraded(shared: &ClusterShared, job: &FwdJob) -> String {
         if req.id == service::PANIC_PROBE_ID {
             // the worker-side live-fire hook, mirrored so degraded mode
             // answers it with the same typed internal reject
+            // lint: allow(panic) deliberate live-fire probe; contained by
+            // the catch_unwind wrapping this closure
             panic!("panic probe: request id {}", service::PANIC_PROBE_ID);
         }
         let deadline = match budget {

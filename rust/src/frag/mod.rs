@@ -12,14 +12,20 @@ use crate::nets::Network;
 /// Census of block kinds produced by a fragmentation (paper Fig. 4 series).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct Census {
+    /// all blocks produced by the fragmentation
     pub total: usize,
+    /// blocks filling the tile on both axes
     pub full: usize,
+    /// blocks filling the tile's rows but not its columns
     pub row_full: usize,
+    /// blocks filling the tile's columns but not its rows
     pub col_full: usize,
+    /// blocks filling neither axis
     pub sparse: usize,
 }
 
 impl Census {
+    /// Count each block kind across `blocks`.
     pub fn of(blocks: &[Block]) -> Census {
         let mut c = Census { total: blocks.len(), ..Census::default() };
         for b in blocks {

@@ -114,22 +114,23 @@
 //!   request time — with the deployment mapped and priced by the planner.
 // Public items must be documented. The serving surface (`plan`,
 // `service`, `cluster`, `store`, `util`), the packing/optimization core
-// (`pack`, `opt`) and the geometry/area substrate (`geom`, `area`) are
-// fully audited; the modules below still carry per-module allows —
-// remove one, fix what `cargo doc` flags (CI runs the doc build with
-// warnings denied), repeat.
+// (`pack`, `opt`, `lint`), the model zoo (`nets`, `frag`, `perf`,
+// `report`) and the geometry/area substrate (`geom`, `area`) are fully
+// audited; the modules below still carry per-module allows — remove
+// one, fix what `cargo doc` flags (CI runs the doc build with warnings
+// denied), repeat. `xbarlint`'s ledger-sync rule fails CI both on a new
+// undocumented item in an audited module and on an allow that outlived
+// its last undocumented item.
 #![warn(missing_docs)]
 
 pub mod geom;
-#[allow(missing_docs)]
+pub mod lint;
 pub mod nets;
-#[allow(missing_docs)]
 pub mod frag;
 pub mod pack;
 #[allow(missing_docs)]
 pub mod ilp;
 pub mod area;
-#[allow(missing_docs)]
 pub mod perf;
 pub mod opt;
 pub mod plan;
@@ -142,6 +143,5 @@ pub mod sim;
 pub mod runtime;
 #[allow(missing_docs)]
 pub mod coordinator;
-#[allow(missing_docs)]
 pub mod report;
 pub mod util;

@@ -1,0 +1,44 @@
+//! Rule `deadline`: cancellation coverage in the solver loops.
+//!
+//! The service's per-request deadline
+//! ([`crate::util::deadline::Deadline`]) only works if every solver
+//! hot loop polls it — a kernel that never checks `.expired()` is
+//! unkillable, and one slow request then holds a worker past its
+//! budget (the supervisor's only remedy is killing the whole shard).
+//! Each file listed in [`SOLVER_FILES`] must mention `Deadline` and
+//! contain at least one `.expired()` checkpoint in non-test code;
+//! token scan, by design — reachability from the public entry points
+//! is what the deadline integration tests pin, this rule just stops a
+//! new kernel module from silently shipping without the check.
+
+use super::scan::Source;
+use super::{Finding, RULE_DEADLINE};
+
+/// Solver-loop files that must poll the deadline (relative to
+/// `rust/src`). A new solver family joins this list when it lands.
+pub const SOLVER_FILES: &[&str] = &["opt/mod.rs", "pack/counted.rs", "ilp/exact.rs"];
+
+/// Check one solver file's text; `label` names it in findings.
+pub fn check_text(label: &str, text: &str) -> Vec<Finding> {
+    let src = Source::parse(text);
+    let blob: String = src
+        .lines
+        .iter()
+        .filter(|ln| !ln.in_test)
+        .map(|ln| ln.code.as_str())
+        .collect::<Vec<_>>()
+        .join("\n");
+    let message = if !blob.contains("Deadline") {
+        "solver module never mentions Deadline — kernels here cannot be cancelled"
+    } else if !blob.contains(".expired()") {
+        "solver module imports Deadline but has no .expired() checkpoint"
+    } else {
+        return Vec::new();
+    };
+    vec![Finding {
+        rule: RULE_DEADLINE,
+        path: label.to_string(),
+        line: 1,
+        message: message.to_string(),
+    }]
+}

@@ -1,0 +1,418 @@
+//! Rule `docs`: the `#[allow(missing_docs)]` ledger in `lib.rs` must
+//! exactly match reality.
+//!
+//! `lib.rs` carries `#![warn(missing_docs)]` plus a shrinking list of
+//! per-module allows. Two drift modes, both findings:
+//!
+//! * **regression** — an audited module (no allow) gains an
+//!   undocumented pub item; CI's doc build catches this too, but only
+//!   on a toolchain with rustdoc, and this rule names the item;
+//! * **stale allow** — a listed module no longer has any undocumented
+//!   pub item, so the allow hides future regressions for free. The
+//!   rule forces the allow to be removed the moment the module is
+//!   clean, which is what keeps the ledger a burn-down list instead
+//!   of a fossil.
+//!
+//! The detector mirrors rustc's `missing_docs` reachability rules on
+//! the subset of Rust this tree uses: fully-`pub` items only (not
+//! `pub(crate)`), `pub use` exempt, trait impls exempt, `#[doc(hidden)]`
+//! exempt, struct fields / enum variants / variant fields / trait items
+//! included, and an out-of-line `pub mod x;` is documented by its
+//! file's leading `//!` docs.
+
+use super::scan::Source;
+
+/// The `lib.rs` allow ledger: `(module, allowed)` in declaration order.
+pub struct Ledger {
+    /// one entry per `pub mod name;` in `lib.rs`
+    pub modules: Vec<(String, bool)>,
+}
+
+/// Parse the `#[allow(missing_docs)]` / `pub mod name;` sequence out of
+/// `lib.rs`.
+pub fn parse_ledger(lib_rs: &str) -> Ledger {
+    let src = Source::parse(lib_rs);
+    let mut modules = Vec::new();
+    let mut pending_allow = false;
+    for ln in &src.lines {
+        let flat: String = ln.code.chars().filter(|c| !c.is_whitespace()).collect();
+        if flat.starts_with("#[allow(missing_docs)") {
+            pending_allow = true;
+            continue;
+        }
+        let stripped = ln.code.trim();
+        if let Some(rest) = stripped.strip_prefix("pub mod ") {
+            if let Some(name) = rest.strip_suffix(';') {
+                modules.push((name.trim().to_string(), pending_allow));
+                pending_allow = false;
+                continue;
+            }
+        }
+        if !stripped.is_empty() {
+            pending_allow = false;
+        }
+    }
+    Ledger { modules }
+}
+
+/// Undocumented fully-pub items in one file's text as
+/// `(line, description)` pairs. `mod_has_docs` answers whether an
+/// out-of-line `mod name;` declaration's target file opens with `//!`
+/// docs (the caller resolves the filesystem; fixtures stub it).
+pub fn undocumented(text: &str, mod_has_docs: &dyn Fn(&str) -> bool) -> Vec<(usize, String)> {
+    let src = Source::parse(text);
+    let type_vis = local_type_visibility(&src);
+
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut scopes: Vec<(usize, Kind)> = Vec::new();
+    let mut pending_doc = false;
+    let mut pending_hidden = false;
+    let mut pending_allow = false;
+    let mut head: Option<Kind> = None;
+
+    for (idx, ln) in src.lines.iter().enumerate() {
+        if ln.in_test {
+            continue;
+        }
+        let stripped = ln.code.trim();
+        let comment = ln.comment.trim();
+        // `///` reaches the scanner as a comment starting with `/` on a
+        // line whose code channel is empty
+        if stripped.is_empty() && comment.starts_with('/') {
+            pending_doc = true;
+        }
+        if stripped.starts_with("#[") {
+            let flat: String = stripped.chars().filter(|c| !c.is_whitespace()).collect();
+            if flat.starts_with("#[doc(hidden)") {
+                pending_hidden = true;
+            } else if flat.starts_with("#[doc") {
+                pending_doc = true;
+            }
+            if flat.starts_with("#[allow(missing_docs)") {
+                pending_allow = true;
+            }
+            // attributes keep the pending flags alive for the item below
+        } else if !stripped.is_empty() {
+            let inner = scopes.last().map(|s| s.1);
+            let documented = pending_doc || pending_hidden || pending_allow;
+            let exported = is_exported(&scopes);
+            let suppressed =
+                matches!(inner, Some(Kind::Fn) | Some(Kind::Block) | Some(Kind::Hidden));
+            head = Some(Kind::Block);
+            if !suppressed {
+                if let Some((fully_pub, kw, name)) = item_head(stripped) {
+                    let mut item_documented = documented;
+                    if kw == "mod" && stripped.ends_with(';') && !item_documented {
+                        item_documented = mod_has_docs(&name);
+                    }
+                    let exempt = kw == "use" || kw == "macro_rules";
+                    if fully_pub && exported && !exempt && !item_documented {
+                        out.push((idx + 1, format!("{kw} {name}")));
+                    }
+                    head = Some(match kw {
+                        "mod" => {
+                            if fully_pub {
+                                Kind::ModPub
+                            } else {
+                                Kind::ModPriv
+                            }
+                        }
+                        "struct" | "union" => {
+                            if fully_pub && exported {
+                                Kind::StructPub
+                            } else {
+                                Kind::StructPriv
+                            }
+                        }
+                        "enum" => {
+                            if fully_pub && exported {
+                                Kind::EnumPub
+                            } else {
+                                Kind::EnumPriv
+                            }
+                        }
+                        "trait" => {
+                            if fully_pub && exported {
+                                Kind::TraitPub
+                            } else {
+                                Kind::TraitPriv
+                            }
+                        }
+                        "fn" => Kind::Fn,
+                        _ => Kind::Block,
+                    });
+                    if pending_hidden {
+                        head = Some(Kind::Hidden);
+                    }
+                } else if stripped == "impl"
+                    || stripped.starts_with("impl ")
+                    || stripped.starts_with("impl<")
+                {
+                    head = Some(impl_kind(stripped, &type_vis, exported));
+                    if pending_hidden {
+                        head = Some(Kind::Hidden);
+                    }
+                } else {
+                    match inner {
+                        Some(Kind::StructPub) => {
+                            if let Some(field) = pub_field_name(stripped) {
+                                if exported && !documented {
+                                    out.push((idx + 1, format!("field {field}")));
+                                }
+                            }
+                        }
+                        Some(Kind::EnumPub) => {
+                            if let Some(variant) = variant_name(stripped) {
+                                if exported && !documented {
+                                    out.push((idx + 1, format!("variant {variant}")));
+                                }
+                                if stripped.contains('{') {
+                                    head = Some(Kind::Variant);
+                                }
+                            }
+                        }
+                        Some(Kind::Variant) => {
+                            if let Some(field) = plain_field_name(stripped) {
+                                if exported && !documented {
+                                    out.push((idx + 1, format!("variant field {field}")));
+                                }
+                            }
+                        }
+                        Some(Kind::TraitPub) => {
+                            if let Some(item) = trait_item_name(stripped) {
+                                if exported && !documented {
+                                    out.push((idx + 1, format!("trait item {item}")));
+                                }
+                                if stripped.starts_with("fn ") {
+                                    head = Some(Kind::Fn);
+                                }
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            pending_doc = false;
+            pending_hidden = false;
+            pending_allow = false;
+        }
+        for c in ln.code.chars() {
+            if c == '{' {
+                depth += 1;
+                scopes.push((depth, head.take().unwrap_or(Kind::Block)));
+            } else if c == '}' {
+                if scopes.last().map(|s| s.0) == Some(depth) {
+                    scopes.pop();
+                }
+                depth = depth.saturating_sub(1);
+            }
+        }
+    }
+    out
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    ModPub,
+    ModPriv,
+    ImplPub,
+    ImplPriv,
+    TraitImpl,
+    StructPub,
+    StructPriv,
+    EnumPub,
+    EnumPriv,
+    Variant,
+    TraitPub,
+    TraitPriv,
+    Fn,
+    Hidden,
+    Block,
+}
+
+/// An item inside any of these scopes is unreachable from the crate's
+/// public docs, so `missing_docs` would not fire on it.
+fn is_exported(scopes: &[(usize, Kind)]) -> bool {
+    !scopes.iter().any(|(_, k)| {
+        matches!(
+            k,
+            Kind::ModPriv
+                | Kind::Fn
+                | Kind::Hidden
+                | Kind::Block
+                | Kind::ImplPriv
+                | Kind::TraitImpl
+                | Kind::StructPriv
+                | Kind::EnumPriv
+                | Kind::TraitPriv
+        )
+    })
+}
+
+/// Visibility of `struct`/`enum`/`union` types declared in this file,
+/// so inherent-impl methods can be skipped when the type is private.
+/// Types not in the map (cross-file impls) are assumed public.
+fn local_type_visibility(src: &Source) -> std::collections::BTreeMap<String, bool> {
+    let mut vis = std::collections::BTreeMap::new();
+    for ln in &src.lines {
+        let stripped = ln.code.trim();
+        if let Some((fully_pub, kw, name)) = item_head(stripped) {
+            if matches!(kw, "struct" | "enum" | "union") {
+                vis.insert(name, fully_pub);
+            }
+        }
+    }
+    vis
+}
+
+/// Classify an `impl` line: trait impls are exempt from `missing_docs`;
+/// inherent impls inherit the target type's visibility.
+fn impl_kind(
+    stripped: &str,
+    type_vis: &std::collections::BTreeMap<String, bool>,
+    exported: bool,
+) -> Kind {
+    let rest = &stripped["impl".len()..];
+    // skip generics: `impl<T: Ord> Foo<T>` — find the matching `>`
+    let rest = if let Some(r) = rest.strip_prefix('<') {
+        let mut depth = 1usize;
+        let mut cut = r.len();
+        for (i, c) in r.char_indices() {
+            match c {
+                '<' => depth += 1,
+                '>' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        cut = i + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        &r[cut..]
+    } else {
+        rest
+    };
+    if rest.contains(" for ") {
+        return Kind::TraitImpl;
+    }
+    let tname: String =
+        rest.trim_start().chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+    let type_pub = type_vis.get(&tname).copied().unwrap_or(true);
+    if type_pub && exported {
+        Kind::ImplPub
+    } else {
+        Kind::ImplPriv
+    }
+}
+
+/// Parse an item head: optional visibility, modifiers, then an item
+/// keyword and name. Returns `(fully_pub, keyword, name)`.
+fn item_head(stripped: &str) -> Option<(bool, &'static str, String)> {
+    const KEYWORDS: &[&str] =
+        &["fn", "struct", "enum", "trait", "type", "const", "static", "mod", "union", "use"];
+    let mut rest = stripped;
+    let mut fully_pub = false;
+    let first = word(rest);
+    if first == "pub" {
+        let after = &rest[3..];
+        if let Some(r) = after.trim_start().strip_prefix('(') {
+            // pub(crate) / pub(super) / pub(in …): not fully public
+            let close = r.find(')')?;
+            rest = r[close + 1..].trim_start();
+        } else {
+            fully_pub = true;
+            rest = after.trim_start();
+        }
+    }
+    loop {
+        let w = word(rest);
+        if w.is_empty() {
+            return None;
+        }
+        if w == "macro_rules" && rest[w.len()..].starts_with('!') {
+            let name = word(rest[w.len() + 1..].trim_start());
+            return Some((fully_pub, "macro_rules", name.to_string()));
+        }
+        if KEYWORDS.contains(&w) {
+            // `const fn`, `const unsafe fn`: const as modifier
+            if w == "const" {
+                let after = rest[w.len()..].trim_start();
+                let next = word(after);
+                if next == "fn" || next == "unsafe" || next == "extern" {
+                    rest = after;
+                    continue;
+                }
+            }
+            let keyword = KEYWORDS.iter().copied().find(|k| *k == w)?;
+            let name = word(rest[w.len()..].trim_start());
+            return Some((fully_pub, keyword, name.to_string()));
+        }
+        match w {
+            "default" | "async" | "unsafe" => rest = rest[w.len()..].trim_start(),
+            "extern" => {
+                // `extern "" fn` (the scanner emptied the ABI string)
+                let after = rest[w.len()..].trim_start();
+                rest = after.strip_prefix("\"\"").unwrap_or(after).trim_start();
+            }
+            _ => return None,
+        }
+    }
+}
+
+/// Leading identifier characters of `s`.
+fn word(s: &str) -> &str {
+    let end = s.find(|c: char| !c.is_alphanumeric() && c != '_').unwrap_or(s.len());
+    &s[..end]
+}
+
+/// `pub name:` — a public struct field line.
+fn pub_field_name(stripped: &str) -> Option<String> {
+    let rest = stripped.strip_prefix("pub ")?;
+    let name = word(rest.trim_start());
+    if !name.is_empty() && rest.trim_start()[name.len()..].trim_start().starts_with(':') {
+        Some(name.to_string())
+    } else {
+        None
+    }
+}
+
+/// `Name`, `Name(…)`, `Name {` or `Name,` — an enum variant line.
+fn variant_name(stripped: &str) -> Option<String> {
+    let name = word(stripped);
+    if name.is_empty() || !name.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+        return None;
+    }
+    let rest = stripped[name.len()..].trim_start();
+    if rest.is_empty() || rest.starts_with('(') || rest.starts_with('{') || rest.starts_with(',') {
+        Some(name.to_string())
+    } else {
+        None
+    }
+}
+
+/// `name:` — a struct-variant field line (no `pub`; variant fields
+/// share the variant's visibility).
+fn plain_field_name(stripped: &str) -> Option<String> {
+    let name = word(stripped);
+    if !name.is_empty() && stripped[name.len()..].trim_start().starts_with(':') {
+        Some(name.to_string())
+    } else {
+        None
+    }
+}
+
+/// `fn`/`type`/`const` items inside a pub trait body.
+fn trait_item_name(stripped: &str) -> Option<String> {
+    for kw in ["fn ", "type ", "const "] {
+        if let Some(rest) = stripped.strip_prefix(kw) {
+            let name = word(rest.trim_start());
+            if !name.is_empty() {
+                return Some(name.to_string());
+            }
+        }
+    }
+    None
+}

@@ -1,0 +1,13 @@
+// Seeded violation for the `deadline` rule: a solver loop that never
+// polls any deadline — this kernel cannot be cancelled.
+
+pub fn solve(sizes: &[u64]) -> u64 {
+    let mut best = u64::MAX;
+    for window in 1..=sizes.len() {
+        let cost: u64 = sizes.iter().take(window).sum();
+        if cost < best {
+            best = cost;
+        }
+    }
+    best
+}

@@ -1,0 +1,18 @@
+// Known-good corpus for the `deadline` rule: the solver loop polls a
+// Deadline checkpoint, so the service's budget can cancel it.
+
+use crate::util::deadline::Deadline;
+
+pub fn solve(sizes: &[u64], deadline: Deadline) -> Option<u64> {
+    let mut best = u64::MAX;
+    for window in 1..=sizes.len() {
+        if deadline.is_set() && deadline.expired() {
+            return None;
+        }
+        let cost: u64 = sizes.iter().take(window).sum();
+        if cost < best {
+            best = cost;
+        }
+    }
+    Some(best)
+}

@@ -1,0 +1,19 @@
+//! Fixture module with seeded missing-docs violations.
+
+/// Documented struct with one undocumented field.
+pub struct Mixed {
+    /// documented field
+    pub fine: u32,
+    pub missing: u32,
+}
+
+pub fn undocumented_fn() -> u32 {
+    0
+}
+
+/// Documented enum with an undocumented variant.
+pub enum Partial {
+    /// documented variant
+    Fine,
+    Missing,
+}

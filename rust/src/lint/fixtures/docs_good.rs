@@ -1,0 +1,29 @@
+//! Fixture module with every exported item documented.
+
+/// Fully documented struct.
+pub struct Clean {
+    /// documented field
+    pub fine: u32,
+    // private field needs no docs
+    hidden: u32,
+}
+
+impl Clean {
+    /// Documented constructor.
+    pub fn new() -> Self {
+        Self { fine: 0, hidden: 0 }
+    }
+
+    fn private_helper(&self) -> u32 {
+        self.hidden
+    }
+}
+
+/// Documented function.
+pub fn documented_fn() -> u32 {
+    0
+}
+
+pub(crate) fn crate_only_needs_no_docs() -> u32 {
+    1
+}

@@ -1,0 +1,20 @@
+// Seeded violations for the `lock` rule: raw unwrap on a Mutex guard,
+// and no poison-recovering helper anywhere in the file.
+
+use std::sync::Mutex;
+
+pub struct Counter {
+    inner: Mutex<u64>,
+}
+
+impl Counter {
+    pub fn bump(&self) -> u64 {
+        let mut v = self.inner.lock().unwrap();
+        *v += 1;
+        *v
+    }
+
+    pub fn read(&self) -> u64 {
+        *self.inner.lock().expect("poisoned")
+    }
+}

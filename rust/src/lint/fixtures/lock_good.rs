@@ -1,0 +1,24 @@
+// Known-good corpus for the `lock` rule: the house poison-recovering
+// helper pattern, with every call site funneling through it.
+
+use std::sync::{Mutex, MutexGuard};
+
+pub struct Counter {
+    inner: Mutex<u64>,
+}
+
+impl Counter {
+    fn lock(&self) -> MutexGuard<'_, u64> {
+        self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    pub fn bump(&self) -> u64 {
+        let mut v = self.lock();
+        *v += 1;
+        *v
+    }
+
+    pub fn read(&self) -> u64 {
+        *self.lock()
+    }
+}

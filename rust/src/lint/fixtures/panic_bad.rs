@@ -1,0 +1,32 @@
+// Seeded violations for the `panic` rule: every non-test site below
+// must be reported (the annotated one is allowlisted, not a finding).
+
+pub fn first(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn second(v: Option<u32>) -> u32 {
+    v.expect("bad: panics on request path")
+}
+
+pub fn third() {
+    panic!("boom");
+}
+
+pub fn fourth(d: &[u32]) -> u32 {
+    d[0] + d[1]
+}
+
+pub fn allowed(d: &[u32]) -> u32 {
+    // lint: allow(panic) length checked by the caller
+    d[2]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

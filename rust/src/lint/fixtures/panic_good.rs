@@ -1,0 +1,29 @@
+// Known-good corpus for the `panic` rule: typed errors, combinators,
+// and panic tokens that only appear in comments, strings or test code.
+
+/// "call .unwrap() here" — token inside a string literal, not code.
+pub fn typed(v: Option<u32>) -> Result<u32, String> {
+    v.ok_or_else(|| "empty .unwrap() story: panic!(no)".to_string())
+}
+
+// .expect( in a comment is not a finding, and neither is d[0] here.
+pub fn combinators(v: Option<u32>) -> u32 {
+    v.unwrap_or_default().max(v.unwrap_or(3))
+}
+
+pub fn non_literal_index(d: &[u32], i: usize) -> Option<u32> {
+    d.get(i).copied()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_panic() {
+        let d = [1u32, 2];
+        assert_eq!(d[0], 1);
+        Some(5u32).unwrap();
+        if false {
+            panic!("tests are out of scope");
+        }
+    }
+}

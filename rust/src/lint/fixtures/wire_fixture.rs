@@ -1,0 +1,39 @@
+// Miniature wire module for the `wire` drift rule: two stats counters
+// and one metrics gauge, serializers and decoders in lockstep.
+
+fn counters_to_obj(s: &StatsSnapshot) -> JsonObj {
+    let mut o = JsonObj::new();
+    o.set("served", s.served as f64);
+    o.set("errors", s.errors as f64);
+    o
+}
+
+fn counters_from_obj(s: &Json) -> StatsSnapshot {
+    StatsSnapshot {
+        served: get_u64(s, "served"),
+        errors: get_u64(s, "errors"),
+    }
+}
+
+pub fn metrics_frame(m: &MetricsSnapshot) -> Json {
+    let mut inner = counters_to_obj(&m.stats);
+    inner.set("inflight", m.inflight as f64);
+    let mut o = JsonObj::new();
+    o.set("v", 1.0).set("metrics", inner);
+    Json::Obj(o)
+}
+
+pub fn metrics_from_json(m: &Json) -> MetricsSnapshot {
+    MetricsSnapshot {
+        stats: counters_from_obj(m),
+        inflight: get_u64(m, "inflight"),
+    }
+}
+
+pub fn metrics_medians(m: &MetricsSnapshot) -> Json {
+    let mut o = JsonObj::new();
+    o.set("_schema", "fixture");
+    o.set("serve/served", m.stats.served as f64);
+    o.set("serve/inflight", m.inflight as f64);
+    Json::Obj(o)
+}

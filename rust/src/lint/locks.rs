@@ -1,0 +1,84 @@
+//! Rule `lock`: poison discipline in `service/` and `cluster/`.
+//!
+//! Every `.lock()` in non-test code must flow through a
+//! poison-recovering helper — the house pattern
+//! `lock().unwrap_or_else(PoisonError::into_inner)` wrapped in a
+//! per-struct `fn lock(…)`/`fn lock_stats(…)` — never a raw
+//! `.unwrap()`/`.expect(…)`. A panicking lock holder (contained by the
+//! worker's `catch_unwind`) otherwise poisons the mutex and wedges
+//! every later request on that path, turning one bad request into a
+//! full outage.
+//!
+//! Two checks per file:
+//! 1. any `.lock()` whose statement also unwraps/expects is a finding
+//!    (annotatable with `// lint: allow(lock) reason`);
+//! 2. a file that owns a `Mutex` and locks it must define the
+//!    recovering helper somewhere (`unwrap_or_else` + `into_inner` in
+//!    the same statement as a `.lock()`), so call sites have something
+//!    to funnel through.
+
+use super::scan::Source;
+use super::{Finding, Report, RULE_LOCK};
+
+/// Modules the rule walks (relative to `rust/src`).
+pub const SCOPE: &[&str] = &["service", "cluster"];
+
+/// Check one file's text; `label` names it in findings.
+pub fn check_file(label: &str, text: &str, report: &mut Report) {
+    let src = Source::parse(text);
+    let has_mutex =
+        src.lines.iter().any(|ln| !ln.in_test && ln.code.contains("Mutex"));
+    let mut locks = false;
+    let mut has_helper = false;
+    for (idx, ln) in src.lines.iter().enumerate() {
+        if ln.in_test {
+            continue;
+        }
+        let mut pos = 0usize;
+        while let Some(p) = ln.code[pos..].find(".lock()") {
+            let at = pos + p;
+            locks = true;
+            let window = statement_window(&src, idx, at);
+            if window.contains(".unwrap()") || window.contains(".expect(") {
+                if src.allowed(idx, RULE_LOCK) {
+                    report.allow(RULE_LOCK, 1);
+                } else {
+                    report.findings.push(Finding {
+                        rule: RULE_LOCK,
+                        path: label.to_string(),
+                        line: idx + 1,
+                        message: ".lock() consumed by unwrap/expect — poison panics the holder"
+                            .to_string(),
+                    });
+                }
+            }
+            if window.contains("unwrap_or_else") && window.contains("into_inner") {
+                has_helper = true;
+            }
+            pos = at + ".lock()".len();
+        }
+    }
+    if has_mutex && locks && !has_helper {
+        report.findings.push(Finding {
+            rule: RULE_LOCK,
+            path: label.to_string(),
+            line: 1,
+            message: "file locks a Mutex but defines no poison-recovering helper \
+                      (unwrap_or_else + into_inner)"
+                .to_string(),
+        });
+    }
+}
+
+/// The statement around a `.lock()` occurrence: the rest of its line
+/// plus up to two continuation lines or until a `;` — enough to see a
+/// chained `.unwrap()`/`.unwrap_or_else(…)` that rustfmt wrapped.
+fn statement_window(src: &Source, idx: usize, at: usize) -> String {
+    let mut window = src.lines[idx].code[at..].to_string();
+    let mut j = idx + 1;
+    while !window.contains(';') && j < src.lines.len() && j <= idx + 2 {
+        window.push_str(&src.lines[j].code);
+        j += 1;
+    }
+    window
+}

@@ -1,0 +1,267 @@
+//! `xbarlint`: repo-native static analysis for the service's
+//! correctness invariants.
+//!
+//! Five rules, each a token-level scan over the source tree (no `syn`,
+//! no dependencies — the same zero-dependency discipline as the rest
+//! of the crate; see docs/STATIC_ANALYSIS.md for the rule catalog,
+//! the allow-comment grammar and how to add a rule):
+//!
+//! * [`panics`] — panic-freedom on request paths (`service`,
+//!   `cluster`, `store`, `plan`);
+//! * [`locks`] — `.lock()` must flow through poison-recovering
+//!   helpers in `service`/`cluster`;
+//! * [`deadline`] — solver loop modules must poll
+//!   [`crate::util::deadline::Deadline`];
+//! * [`wire_drift`] — counter/gauge name sets in `plan/wire.rs` and
+//!   `docs/WIRE.md` must match exactly;
+//! * [`docs_ledger`] — the `#[allow(missing_docs)]` list in `lib.rs`
+//!   must equal the set of modules with undocumented pub items.
+//!
+//! Sites that are provably fine carry `// lint: allow(rule) reason`
+//! annotations; everything else is a finding, and the `xbarlint`
+//! binary exits non-zero on any finding. Allowlisted counts are
+//! reported to `BENCH_lint.json` so their trajectory is gate-able
+//! ("allows never increase") like a perf number.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+pub mod deadline;
+pub mod docs_ledger;
+pub mod locks;
+pub mod panics;
+pub mod scan;
+pub mod wire_drift;
+
+/// Rule id of [`panics`].
+pub const RULE_PANIC: &str = "panic";
+/// Rule id of [`locks`].
+pub const RULE_LOCK: &str = "lock";
+/// Rule id of [`deadline`].
+pub const RULE_DEADLINE: &str = "deadline";
+/// Rule id of [`wire_drift`].
+pub const RULE_WIRE: &str = "wire";
+/// Rule id of [`docs_ledger`].
+pub const RULE_DOCS: &str = "docs";
+
+/// Every rule id, in report order.
+pub const RULES: &[&str] = &[RULE_PANIC, RULE_LOCK, RULE_DEADLINE, RULE_WIRE, RULE_DOCS];
+
+/// One non-allowlisted violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// rule id (one of [`RULES`])
+    pub rule: &'static str,
+    /// repo-relative path of the offending file
+    pub path: String,
+    /// 1-based line number (1 when the finding is file-scoped)
+    pub line: usize,
+    /// what drifted and why it matters
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:8} {}:{}  {}", self.rule, self.path, self.line, self.message)
+    }
+}
+
+/// Aggregated lint outcome: findings (gate: must be empty) plus the
+/// per-rule count of allowlisted sites (gate: must never grow).
+#[derive(Debug, Default)]
+pub struct Report {
+    /// non-allowlisted violations across every rule
+    pub findings: Vec<Finding>,
+    /// rule id → `// lint: allow(rule)`-annotated site count
+    pub allowed: BTreeMap<&'static str, u64>,
+}
+
+impl Report {
+    /// Record `n` allowlisted sites for `rule`.
+    pub fn allow(&mut self, rule: &'static str, n: u64) {
+        *self.allowed.entry(rule).or_insert(0) += n;
+    }
+
+    /// Findings for one rule.
+    pub fn findings_for(&self, rule: &str) -> usize {
+        self.findings.iter().filter(|f| f.rule == rule).count()
+    }
+
+    /// The BENCH-schema report object: flat name → count, with a
+    /// `_schema` marker. `lint/findings*` rows gate at zero (the binary
+    /// exits non-zero on any finding anyway); `lint/allow_*` rows are
+    /// the burn-down trajectory and must never increase.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{Json, JsonObj};
+        let mut o = JsonObj::new();
+        o.set(
+            "_schema",
+            "xbarlint counts: lint/findings_<rule> must stay 0; lint/allow_<rule> \
+             is the annotated-allowlist burn-down and must never increase \
+             (see docs/STATIC_ANALYSIS.md)",
+        );
+        o.set("lint/findings", self.findings.len() as f64);
+        for rule in RULES {
+            o.set(&format!("lint/findings_{rule}"), self.findings_for(rule) as f64);
+        }
+        for rule in RULES {
+            o.set(
+                &format!("lint/allow_{rule}"),
+                self.allowed.get(rule).copied().unwrap_or(0) as f64,
+            );
+        }
+        Json::Obj(o)
+    }
+}
+
+/// Run every rule against the repo rooted at `root` (the directory
+/// holding `rust/` and `docs/`).
+pub fn run(root: &Path) -> std::io::Result<Report> {
+    let src = root.join("rust").join("src");
+    let mut report = Report::default();
+
+    for module in panics::SCOPE {
+        for path in walk_rs(&src.join(module))? {
+            let text = std::fs::read_to_string(&path)?;
+            panics::check_file(&rel(root, &path), &text, &mut report);
+        }
+    }
+    for module in locks::SCOPE {
+        for path in walk_rs(&src.join(module))? {
+            let text = std::fs::read_to_string(&path)?;
+            locks::check_file(&rel(root, &path), &text, &mut report);
+        }
+    }
+    for file in deadline::SOLVER_FILES {
+        let path = src.join(file);
+        if !path.exists() {
+            report.findings.push(Finding {
+                rule: RULE_DEADLINE,
+                path: format!("rust/src/{file}"),
+                line: 1,
+                message: "solver module listed in deadline::SOLVER_FILES is missing".to_string(),
+            });
+            continue;
+        }
+        let text = std::fs::read_to_string(&path)?;
+        report.findings.extend(deadline::check_text(&rel(root, &path), &text));
+    }
+    let wire_rs = std::fs::read_to_string(src.join("plan").join("wire.rs"))?;
+    let wire_md = std::fs::read_to_string(root.join("docs").join("WIRE.md"))?;
+    report.findings.extend(wire_drift::check_texts(&wire_rs, &wire_md));
+
+    check_docs_ledger(root, &src, &mut report)?;
+    Ok(report)
+}
+
+/// The docs-ledger rule over the real tree: parse `lib.rs`, scan every
+/// module's files, and reconcile against the allow list.
+fn check_docs_ledger(root: &Path, src: &Path, report: &mut Report) -> std::io::Result<()> {
+    let lib_rs = std::fs::read_to_string(src.join("lib.rs"))?;
+    let ledger = docs_ledger::parse_ledger(&lib_rs);
+    for (module, allowed) in &ledger.modules {
+        let mut items: Vec<(String, usize, String)> = Vec::new();
+        for path in module_files(src, module)? {
+            let text = std::fs::read_to_string(&path)?;
+            let dir = path.parent().map(Path::to_path_buf).unwrap_or_default();
+            let resolver = |name: &str| mod_file_has_inner_docs(&dir, name);
+            for (line, desc) in docs_ledger::undocumented(&text, &resolver) {
+                items.push((rel(root, &path), line, desc));
+            }
+        }
+        if *allowed && items.is_empty() {
+            report.findings.push(Finding {
+                rule: RULE_DOCS,
+                path: "rust/src/lib.rs".to_string(),
+                line: 1,
+                message: format!(
+                    "stale #[allow(missing_docs)]: module '{module}' is fully documented"
+                ),
+            });
+        }
+        if !*allowed {
+            for (path, line, desc) in items {
+                report.findings.push(Finding {
+                    rule: RULE_DOCS,
+                    path,
+                    line,
+                    message: format!("undocumented pub item ({desc}) in audited module '{module}'"),
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Whether `dir/name.rs` or `dir/name/mod.rs` opens with `//!` inner
+/// docs (which document the `pub mod name;` declaration itself).
+fn mod_file_has_inner_docs(dir: &Path, name: &str) -> bool {
+    for cand in [dir.join(format!("{name}.rs")), dir.join(name).join("mod.rs")] {
+        let Ok(text) = std::fs::read_to_string(&cand) else {
+            continue;
+        };
+        for line in text.lines() {
+            let s = line.trim();
+            if s.is_empty() {
+                continue;
+            }
+            if s.starts_with("//!") {
+                return true;
+            }
+            if s.starts_with("//") {
+                continue;
+            }
+            return false;
+        }
+    }
+    false
+}
+
+/// The file set of module `name`: `src/name.rs`, or every `.rs` file
+/// under `src/name/` (fixture corpora excluded).
+fn module_files(src: &Path, name: &str) -> std::io::Result<Vec<PathBuf>> {
+    let single = src.join(format!("{name}.rs"));
+    if single.exists() {
+        return Ok(vec![single]);
+    }
+    walk_rs(&src.join(name))
+}
+
+/// Every `.rs` file under `dir`, recursively, sorted, skipping any
+/// `fixtures` directory (fixture snippets contain seeded violations).
+pub fn walk_rs(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        if d.file_name().is_some_and(|n| n == "fixtures") {
+            continue;
+        }
+        let entries = match std::fs::read_dir(&d) {
+            Ok(e) => e,
+            Err(_) => continue, // module dir absent: nothing to walk
+        };
+        for entry in entries {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// `path` relative to `root`, with `/` separators.
+fn rel(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,63 @@
+//! Rule `panic`: panic-freedom on request paths.
+//!
+//! Non-test code under `service/`, `cluster/`, `store/` and `plan/`
+//! must not contain panic-capable tokens — `.unwrap()`, `.expect(`,
+//! `panic!(`, `unreachable!(`, `unimplemented!(`, `todo!(` — or
+//! numeric-literal indexing (`d[0]`-style slicing suspects). A request
+//! that trips one of these takes down a worker (the service contains
+//! the panic, but the counted panic is still an availability event);
+//! the rule forces each site to either restructure into a typed error
+//! or carry an explicit `// lint: allow(panic) reason` annotation.
+//!
+//! Deliberately *not* flagged: `assert!`/`debug_assert!` families
+//! (invariant contracts, audited separately), non-literal indexing
+//! (`xs[i]` — too common in kernels to annotate usefully), and
+//! `.unwrap_or…` combinators (infallible by construction).
+
+use super::scan::Source;
+use super::{Finding, Report, RULE_PANIC};
+
+const TOKENS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "unimplemented!(", "todo!("];
+
+/// Modules whose request paths the rule walks (relative to `rust/src`).
+pub const SCOPE: &[&str] = &["service", "cluster", "store", "plan"];
+
+/// Check one file's text; `label` names it in findings.
+pub fn check_file(label: &str, text: &str, report: &mut Report) {
+    let src = Source::parse(text);
+    for (idx, ln) in src.lines.iter().enumerate() {
+        if ln.in_test {
+            continue;
+        }
+        let mut hits: Vec<&str> = TOKENS.iter().copied().filter(|t| ln.code.contains(t)).collect();
+        if has_literal_index(&ln.code) {
+            hits.push("literal-index");
+        }
+        if hits.is_empty() {
+            continue;
+        }
+        if src.allowed(idx, RULE_PANIC) {
+            report.allow(RULE_PANIC, hits.len() as u64);
+            continue;
+        }
+        report.findings.push(Finding {
+            rule: RULE_PANIC,
+            path: label.to_string(),
+            line: idx + 1,
+            message: format!("panic-capable token(s) {} on a request path", hits.join(", ")),
+        });
+    }
+}
+
+/// `ident[<digit>` — indexing/slicing with a numeric literal, the
+/// out-of-bounds suspect shape (`d[0]` after a length check is the
+/// annotated idiom; `xs[i]` is out of scope).
+fn has_literal_index(code: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    chars.windows(3).any(|w| {
+        (w[0].is_alphanumeric() || w[0] == '_' || w[0] == ']')
+            && w[1] == '['
+            && w[2].is_ascii_digit()
+    })
+}

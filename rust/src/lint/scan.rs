@@ -1,0 +1,260 @@
+//! Line/token scanner behind every `xbarlint` rule.
+//!
+//! Not a parser: a character state machine that splits each source line
+//! into **code** (with comments removed and every string/char literal
+//! body replaced by an empty one, so token rules never match inside
+//! text), the line's **comment** text (where `lint: allow(...)`
+//! annotations live), and the ordered **string literals** the line
+//! carried (the wire-drift rule reads counter names out of these). It
+//! also brace-matches `#[cfg(test)]` regions so rules can skip test
+//! code, which is allowed to `unwrap()` freely.
+//!
+//! Handled Rust surface: line comments, nested block comments, string
+//! and byte-string literals with escapes, raw strings (`r"…"`,
+//! `r#"…"#`, any hash depth), char literals vs. lifetimes. That is the
+//! whole grammar a token scan needs; anything deeper (macros, type
+//! syntax) deliberately stays out of scope — see docs/STATIC_ANALYSIS.md
+//! for the design bet.
+
+/// One scanned source line.
+#[derive(Debug, Clone, Default)]
+pub struct Line {
+    /// code with comments stripped and literal bodies emptied (`""`)
+    pub code: String,
+    /// the line-comment text (text after `//`, including doc comments)
+    pub comment: String,
+    /// string-literal bodies on this line, in source order
+    pub strings: Vec<String>,
+    /// inside a `#[cfg(test)]` brace block
+    pub in_test: bool,
+}
+
+/// A scanned source file.
+#[derive(Debug, Clone, Default)]
+pub struct Source {
+    /// scanned lines, index 0 = line 1
+    pub lines: Vec<Line>,
+}
+
+enum State {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(usize),
+}
+
+impl Source {
+    /// Scan `text` into per-line code/comment/string channels and mark
+    /// `#[cfg(test)]` regions.
+    pub fn parse(text: &str) -> Source {
+        let chars: Vec<char> = text.chars().collect();
+        let n = chars.len();
+        let mut lines: Vec<Line> = Vec::new();
+        let mut cur = Line::default();
+        let mut cur_str = String::new();
+        let mut state = State::Code;
+        let mut i = 0usize;
+        let at = |i: usize, pat: &str| -> bool {
+            chars[i..].iter().take(pat.chars().count()).copied().eq(pat.chars())
+        };
+        while i < n {
+            let c = chars[i];
+            if c == '\n' {
+                match state {
+                    State::LineComment => state = State::Code,
+                    State::Str => cur_str.push('\n'),
+                    _ => {}
+                }
+                lines.push(std::mem::take(&mut cur));
+                i += 1;
+                continue;
+            }
+            match state {
+                State::LineComment => {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+                State::BlockComment(depth) => {
+                    if at(i, "/*") {
+                        state = State::BlockComment(depth + 1);
+                        i += 2;
+                    } else if at(i, "*/") {
+                        state =
+                            if depth == 1 { State::Code } else { State::BlockComment(depth - 1) };
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                State::Str => {
+                    if c == '\\' && i + 1 < n {
+                        cur_str.push(c);
+                        cur_str.push(chars[i + 1]);
+                        i += 2;
+                    } else if c == '"' {
+                        cur.strings.push(std::mem::take(&mut cur_str));
+                        cur.code.push_str("\"\"");
+                        state = State::Code;
+                        i += 1;
+                    } else {
+                        cur_str.push(c);
+                        i += 1;
+                    }
+                }
+                State::RawStr(hashes) => {
+                    let close = "\"".to_string() + &"#".repeat(hashes);
+                    if at(i, &close) {
+                        cur.strings.push(std::mem::take(&mut cur_str));
+                        cur.code.push_str("\"\"");
+                        state = State::Code;
+                        i += 1 + hashes;
+                    } else {
+                        cur_str.push(c);
+                        i += 1;
+                    }
+                }
+                State::Code => {
+                    if at(i, "//") {
+                        state = State::LineComment;
+                        i += 2;
+                    } else if at(i, "/*") {
+                        state = State::BlockComment(1);
+                        i += 2;
+                    } else if c == '"' {
+                        state = State::Str;
+                        i += 1;
+                    } else if (c == 'r' || c == 'b')
+                        && (i == 0 || !ident_char(chars[i - 1]))
+                        && raw_str_open(&chars, i).is_some()
+                    {
+                        let (hashes, skip) = match raw_str_open(&chars, i) {
+                            Some(v) => v,
+                            None => (0, 1), // unreachable: guarded above
+                        };
+                        state = State::RawStr(hashes);
+                        i += skip;
+                    } else if c == '\'' {
+                        // char literal vs lifetime
+                        if i + 1 < n && chars[i + 1] == '\\' {
+                            let mut j = i + 2;
+                            while j < n && chars[j] != '\'' {
+                                j += 1;
+                            }
+                            cur.code.push_str("' '");
+                            i = j + 1;
+                        } else if i + 2 < n && chars[i + 2] == '\'' {
+                            cur.code.push_str("' '");
+                            i += 3;
+                        } else {
+                            cur.code.push(c); // lifetime
+                            i += 1;
+                        }
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        lines.push(cur);
+        mark_test_regions(&mut lines);
+        Source { lines }
+    }
+
+    /// Whether a `// lint: allow(rule) reason` annotation covers line
+    /// `idx` — on the line itself or on a directly preceding block of
+    /// comment-only lines. The reason is mandatory: a bare
+    /// `lint: allow(panic)` does not count.
+    pub fn allowed(&self, idx: usize, rule: &str) -> bool {
+        if allow_matches(&self.lines[idx].comment, rule) {
+            return true;
+        }
+        let mut j = idx;
+        while j > 0 {
+            j -= 1;
+            let ln = &self.lines[j];
+            if !ln.code.trim().is_empty() || ln.comment.is_empty() {
+                return false;
+            }
+            if allow_matches(&ln.comment, rule) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// `true` when `comment` carries `lint: allow(rule) <reason>` for this
+/// rule, with a non-empty reason.
+fn allow_matches(comment: &str, rule: &str) -> bool {
+    let Some(p) = comment.find("lint: allow(") else {
+        return false;
+    };
+    let rest = &comment[p + "lint: allow(".len()..];
+    let Some(close) = rest.find(')') else {
+        return false;
+    };
+    &rest[..close] == rule && !rest[close + 1..].trim().is_empty()
+}
+
+fn ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// At a `r`/`b` position, detect `r"`, `r#"`, `br"`, … Returns
+/// `(hash_count, chars_to_skip_past_opening_quote)`.
+fn raw_str_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+        if j >= chars.len() || chars[j] != 'r' {
+            return None;
+        }
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+/// Brace-match every `#[cfg(test)]` attribute's following block and set
+/// `in_test` on the lines inside it.
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth = 0usize;
+    let mut test_depths: Vec<usize> = Vec::new();
+    let mut pending = false;
+    for ln in lines.iter_mut() {
+        let flat: String = ln.code.chars().filter(|c| !c.is_whitespace()).collect();
+        if flat.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        for c in ln.code.chars() {
+            if c == '{' {
+                depth += 1;
+                if pending {
+                    test_depths.push(depth);
+                    pending = false;
+                }
+            } else if c == '}' {
+                if test_depths.last() == Some(&depth) {
+                    test_depths.pop();
+                }
+                depth = depth.saturating_sub(1);
+            }
+        }
+        if !test_depths.is_empty() {
+            ln.in_test = true;
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Every rule against its seeded-violation and known-good fixture
+//! corpus (`fixtures/`), plus scanner and allow-grammar edge cases.
+
+use super::scan::Source;
+use super::{deadline, docs_ledger, locks, panics, wire_drift};
+use super::{Report, RULE_LOCK, RULE_PANIC};
+
+const PANIC_BAD: &str = include_str!("fixtures/panic_bad.rs");
+const PANIC_GOOD: &str = include_str!("fixtures/panic_good.rs");
+const LOCK_BAD: &str = include_str!("fixtures/lock_bad.rs");
+const LOCK_GOOD: &str = include_str!("fixtures/lock_good.rs");
+const DEADLINE_BAD: &str = include_str!("fixtures/deadline_bad.rs");
+const DEADLINE_GOOD: &str = include_str!("fixtures/deadline_good.rs");
+const WIRE_RS: &str = include_str!("fixtures/wire_fixture.rs");
+const WIRE_GOOD_MD: &str = include_str!("fixtures/wire_good.md");
+const WIRE_BAD_MD: &str = include_str!("fixtures/wire_bad.md");
+const DOCS_BAD: &str = include_str!("fixtures/docs_bad.rs");
+const DOCS_GOOD: &str = include_str!("fixtures/docs_good.rs");
+
+// ---- scanner ----
+
+#[test]
+fn scanner_empties_strings_and_strips_comments() {
+    let src = Source::parse("let s = \"a.unwrap()b\"; // panic!(no)\n");
+    let ln = &src.lines[0];
+    assert_eq!(ln.code, "let s = \"\"; ");
+    assert_eq!(ln.strings, vec!["a.unwrap()b".to_string()]);
+    assert!(ln.comment.contains("panic!(no)"));
+}
+
+#[test]
+fn scanner_handles_raw_strings_with_hashes() {
+    let src = Source::parse("let s = r#\"x.unwrap() \"quoted\" end\"#;\n");
+    let ln = &src.lines[0];
+    assert!(!ln.code.contains(".unwrap()"), "token leaked out of raw string: {:?}", ln.code);
+    assert_eq!(ln.strings, vec!["x.unwrap() \"quoted\" end".to_string()]);
+}
+
+#[test]
+fn scanner_distinguishes_char_literals_from_lifetimes() {
+    let src = Source::parse("fn f<'a>(x: &'a str) -> char { '\\n' }\n");
+    let code = &src.lines[0].code;
+    assert!(code.contains("<'a>"), "lifetime mangled: {code:?}");
+    assert!(!code.contains("\\n"), "char literal body kept: {code:?}");
+}
+
+#[test]
+fn scanner_marks_cfg_test_regions() {
+    let text = "fn a() { x.unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn b() { y.unwrap(); }\n}\n";
+    let src = Source::parse(text);
+    assert!(!src.lines[0].in_test);
+    assert!(src.lines[3].in_test);
+}
+
+#[test]
+fn allow_requires_rule_match_and_reason() {
+    let src = Source::parse("x.unwrap(); // lint: allow(panic)\n");
+    assert!(!src.allowed(0, "panic"), "reason-less allow must not count");
+    let src = Source::parse("x.unwrap(); // lint: allow(panic) caller checked\n");
+    assert!(src.allowed(0, "panic"));
+    assert!(!src.allowed(0, "lock"), "allow is per-rule");
+}
+
+#[test]
+fn allow_covers_from_preceding_comment_block() {
+    let text = "// lint: allow(panic) two-line\n// explanation\nx.unwrap();\n";
+    let src = Source::parse(text);
+    assert!(src.allowed(2, "panic"));
+    let text = "// lint: allow(panic) stale\nlet y = 1;\nx.unwrap();\n";
+    let src = Source::parse(text);
+    assert!(!src.allowed(2, "panic"), "code between comment and site breaks coverage");
+}
+
+// ---- rule: panic ----
+
+#[test]
+fn panic_rule_flags_seeded_violations() {
+    let mut report = Report::default();
+    panics::check_file("fixtures/panic_bad.rs", PANIC_BAD, &mut report);
+    assert_eq!(report.findings.len(), 4, "{:#?}", report.findings);
+    let joined: String =
+        report.findings.iter().map(|f| f.message.as_str()).collect::<Vec<_>>().join("; ");
+    for token in [".unwrap()", ".expect(", "panic!(", "literal-index"] {
+        assert!(joined.contains(token), "missing {token} in: {joined}");
+    }
+    assert_eq!(report.allowed.get(RULE_PANIC), Some(&1), "annotated d[2] site");
+}
+
+#[test]
+fn panic_rule_passes_known_good_corpus() {
+    let mut report = Report::default();
+    panics::check_file("fixtures/panic_good.rs", PANIC_GOOD, &mut report);
+    assert!(report.findings.is_empty(), "{:#?}", report.findings);
+    assert!(report.allowed.is_empty());
+}
+
+// ---- rule: lock ----
+
+#[test]
+fn lock_rule_flags_raw_unwrap_and_missing_helper() {
+    let mut report = Report::default();
+    locks::check_file("fixtures/lock_bad.rs", LOCK_BAD, &mut report);
+    assert_eq!(report.findings.len(), 3, "{:#?}", report.findings);
+    assert_eq!(report.findings.iter().filter(|f| f.message.contains("unwrap/expect")).count(), 2);
+    assert!(report
+        .findings
+        .iter()
+        .any(|f| f.line == 1 && f.message.contains("poison-recovering helper")));
+}
+
+#[test]
+fn lock_rule_passes_helper_pattern() {
+    let mut report = Report::default();
+    locks::check_file("fixtures/lock_good.rs", LOCK_GOOD, &mut report);
+    assert!(report.findings.is_empty(), "{:#?}", report.findings);
+    assert_eq!(report.allowed.get(RULE_LOCK), None);
+}
+
+// ---- rule: deadline ----
+
+#[test]
+fn deadline_rule_flags_unpollable_solver() {
+    let findings = deadline::check_text("fixtures/deadline_bad.rs", DEADLINE_BAD);
+    assert_eq!(findings.len(), 1, "{findings:#?}");
+    assert!(findings[0].message.contains("never mentions Deadline"));
+}
+
+#[test]
+fn deadline_rule_flags_import_without_checkpoint() {
+    let text = "use crate::util::deadline::Deadline;\npub fn solve(d: Deadline) {}\n";
+    let findings = deadline::check_text("inline", text);
+    assert_eq!(findings.len(), 1, "{findings:#?}");
+    assert!(findings[0].message.contains("no .expired() checkpoint"));
+}
+
+#[test]
+fn deadline_rule_passes_polling_solver() {
+    let findings = deadline::check_text("fixtures/deadline_good.rs", DEADLINE_GOOD);
+    assert!(findings.is_empty(), "{findings:#?}");
+}
+
+// ---- rule: wire ----
+
+#[test]
+fn wire_rule_passes_lockstep_spec() {
+    let findings = wire_drift::check_texts(WIRE_RS, WIRE_GOOD_MD);
+    assert!(findings.is_empty(), "{findings:#?}");
+}
+
+#[test]
+fn wire_rule_flags_seeded_drift_on_both_sides() {
+    let findings = wire_drift::check_texts(WIRE_RS, WIRE_BAD_MD);
+    assert_eq!(findings.len(), 2, "{findings:#?}");
+    // spec documents a counter the code never emits…
+    assert!(findings.iter().any(|f| f.message.contains("cache_hits")));
+    // …and omits one it does
+    assert!(findings.iter().any(|f| f.message.contains("errors")));
+    // snapshot schema drifted independently
+    assert!(findings.iter().any(|f| f.message.contains("serve/queue_depth")));
+}
+
+// ---- rule: docs ----
+
+#[test]
+fn docs_rule_flags_undocumented_items() {
+    let items = docs_ledger::undocumented(DOCS_BAD, &|_| false);
+    let descs: Vec<&str> = items.iter().map(|(_, d)| d.as_str()).collect();
+    assert_eq!(
+        descs,
+        vec!["field missing", "fn undocumented_fn", "variant Missing"],
+        "{items:#?}"
+    );
+}
+
+#[test]
+fn docs_rule_passes_documented_module() {
+    let items = docs_ledger::undocumented(DOCS_GOOD, &|_| false);
+    assert!(items.is_empty(), "{items:#?}");
+}
+
+#[test]
+fn docs_rule_accepts_mod_decl_documented_by_target_file() {
+    let text = "pub mod child;\n";
+    let flagged = docs_ledger::undocumented(text, &|_| false);
+    assert_eq!(flagged.len(), 1, "{flagged:#?}");
+    let resolved = docs_ledger::undocumented(text, &|name| name == "child");
+    assert!(resolved.is_empty(), "{resolved:#?}");
+}
+
+#[test]
+fn ledger_parses_allow_annotations_in_order() {
+    let lib = "#![warn(missing_docs)]\n\npub mod a;\n#[allow(missing_docs)] // queued\n\
+               pub mod b;\npub mod c;\n";
+    let ledger = docs_ledger::parse_ledger(lib);
+    assert_eq!(
+        ledger.modules,
+        vec![
+            ("a".to_string(), false),
+            ("b".to_string(), true),
+            ("c".to_string(), false),
+        ]
+    );
+}
+
+// ---- report ----
+
+#[test]
+fn report_json_carries_schema_and_per_rule_counts() {
+    let mut report = Report::default();
+    report.allow(RULE_PANIC, 9);
+    report.findings.push(super::Finding {
+        rule: RULE_LOCK,
+        path: "rust/src/service/x.rs".to_string(),
+        line: 7,
+        message: "demo".to_string(),
+    });
+    let json = report.to_json().dumps();
+    for key in ["_schema", "lint/findings", "lint/findings_lock", "lint/allow_panic"] {
+        assert!(json.contains(key), "missing {key} in {json}");
+    }
+    assert_eq!(report.findings_for(RULE_LOCK), 1);
+    assert_eq!(report.findings_for(RULE_PANIC), 0);
+}

@@ -1,0 +1,271 @@
+//! Rule `wire`: counter/gauge name sets cannot drift.
+//!
+//! The stats/metrics wire surface has four coupled name sets: the
+//! serializers in `plan/wire.rs` (`counters_to_obj`, `metrics_frame`,
+//! `metrics_medians`), their decoders (`counters_from_obj`,
+//! `metrics_from_json`), the normative example frames in
+//! `docs/WIRE.md` §6, and the metrics-snapshot schema in §8. A counter
+//! added to one and not the others silently ships a gauge nobody can
+//! read (or documents one nobody emits) — today only the pinned
+//! example frames in `tests/docs_wire.rs` catch a subset of that. This
+//! rule extracts each set by token scan and fails on any asymmetric
+//! difference, naming the keys on each side.
+
+use super::scan::Source;
+use super::{Finding, RULE_WIRE};
+use std::collections::BTreeSet;
+
+/// Compare the serializer/decoder/spec name sets extracted from
+/// `plan/wire.rs` (`wire_rs`) and `docs/WIRE.md` (`wire_md`).
+pub fn check_texts(wire_rs: &str, wire_md: &str) -> Vec<Finding> {
+    let src = Source::parse(wire_rs);
+    let stats_ser = set_arg_keys(&fn_body(&src, "counters_to_obj"));
+    let stats_dec = get_arg_keys(&fn_body(&src, "counters_from_obj"));
+    let mut metrics_ser = set_arg_keys(&fn_body(&src, "metrics_frame"));
+    metrics_ser.remove("v");
+    metrics_ser.remove("metrics");
+    let metrics_dec: BTreeSet<String> = get_arg_keys(&fn_body(&src, "metrics_from_json"))
+        .difference(&stats_ser)
+        .cloned()
+        .collect();
+    let mut medians = set_arg_keys(&fn_body(&src, "metrics_medians"));
+    medians.remove("_schema");
+
+    let mut findings = Vec::new();
+    let out = &mut findings;
+    diff(out, "rust/src/plan/wire.rs", &stats_ser, &stats_dec, "stats-serializer", "stats-decoder");
+    diff(
+        out,
+        "rust/src/plan/wire.rs",
+        &metrics_ser,
+        &metrics_dec,
+        "metrics-serializer",
+        "metrics-decoder",
+    );
+
+    match doc_frame_keys(wire_md, "## 6.", "jsonl", "\"stats\":{") {
+        None => out.push(missing_doc("no stats example frame in WIRE.md section 6")),
+        Some(doc) => diff(out, "docs/WIRE.md", &stats_ser, &doc, "code-stats", "spec-stats"),
+    }
+    let all_metrics: BTreeSet<String> = stats_ser.union(&metrics_ser).cloned().collect();
+    match doc_frame_keys(wire_md, "## 6.", "jsonl", "\"metrics\":{") {
+        None => out.push(missing_doc("no metrics example frame in WIRE.md section 6")),
+        Some(doc) => diff(out, "docs/WIRE.md", &all_metrics, &doc, "code-metrics", "spec-metrics"),
+    }
+    match doc_medians_keys(wire_md) {
+        None => out.push(missing_doc("no metrics-snapshot example in WIRE.md section 8")),
+        Some(doc) => diff(out, "docs/WIRE.md", &medians, &doc, "code-snapshot", "spec-snapshot"),
+    }
+    findings
+}
+
+/// Push a drift finding when `a` and `b` differ, naming the keys only
+/// on each side.
+fn diff(
+    findings: &mut Vec<Finding>,
+    path: &str,
+    a: &BTreeSet<String>,
+    b: &BTreeSet<String>,
+    la: &str,
+    lb: &str,
+) {
+    if a != b {
+        let only_a: Vec<&str> = a.difference(b).map(String::as_str).collect();
+        let only_b: Vec<&str> = b.difference(a).map(String::as_str).collect();
+        findings.push(Finding {
+            rule: RULE_WIRE,
+            path: path.to_string(),
+            line: 1,
+            message: format!(
+                "counter drift: {la}-only [{}]; {lb}-only [{}]",
+                only_a.join(", "),
+                only_b.join(", ")
+            ),
+        });
+    }
+}
+
+fn missing_doc(message: &str) -> Finding {
+    Finding {
+        rule: RULE_WIRE,
+        path: "docs/WIRE.md".to_string(),
+        line: 1,
+        message: message.to_string(),
+    }
+}
+
+/// The scanned lines of `fn name`'s brace-matched body.
+fn fn_body<'a>(src: &'a Source, name: &str) -> Vec<&'a super::scan::Line> {
+    let needle = format!("fn {name}");
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut target: Option<usize> = None;
+    let mut seen = false;
+    for ln in &src.lines {
+        if !seen && ln.code.contains(&needle) {
+            seen = true;
+        }
+        for c in ln.code.chars() {
+            if c == '{' {
+                depth += 1;
+                if seen && target.is_none() {
+                    target = Some(depth);
+                }
+            } else if c == '}' {
+                if target == Some(depth) {
+                    return out;
+                }
+                depth = depth.saturating_sub(1);
+            }
+        }
+        if seen && target.is_some() {
+            out.push(ln);
+        }
+    }
+    out
+}
+
+/// String literals passed as the first argument of `.set(` calls in
+/// `body` — the serializer-side key set. Handles the key literal
+/// landing on the line after a rustfmt-wrapped `.set(`.
+fn set_arg_keys(body: &[&super::scan::Line]) -> BTreeSet<String> {
+    let mut keys = BTreeSet::new();
+    let mut pending = false;
+    for ln in body {
+        let code = &ln.code;
+        let mut si = 0usize;
+        let mut pos = 0usize;
+        while let Some(p) = code[pos..].find("\"\"") {
+            let at = pos + p;
+            let head = code[..at].trim_end();
+            let is_key = head.ends_with(".set(") || (pending && head.is_empty());
+            pending = false;
+            if is_key {
+                if let Some(s) = ln.strings.get(si) {
+                    keys.insert(s.clone());
+                }
+            }
+            si += 1;
+            pos = at + 2;
+        }
+        if code.trim_end().ends_with(".set(") {
+            pending = true;
+        }
+    }
+    keys
+}
+
+/// String literals passed as the key argument of `get_u64(…, "…")` /
+/// `get_f64(…, "…")` calls in `body` — the decoder-side key set.
+fn get_arg_keys(body: &[&super::scan::Line]) -> BTreeSet<String> {
+    let mut keys = BTreeSet::new();
+    for ln in body {
+        let code = &ln.code;
+        for getter in ["get_u64(", "get_f64("] {
+            let mut pos = 0usize;
+            while let Some(p) = code[pos..].find(getter) {
+                let after = pos + p + getter.len();
+                // expect `ident, ""` (any whitespace) before the literal
+                if let Some(q) = code[after..].find("\"\"") {
+                    let between = &code[after..after + q];
+                    let arg_shape = |c: char| {
+                        c.is_alphanumeric() || c == '_' || c == ',' || c.is_whitespace()
+                    };
+                    if between.chars().all(arg_shape) && between.contains(',') {
+                        let idx = code[..after + q].matches("\"\"").count();
+                        if let Some(s) = ln.strings.get(idx) {
+                            keys.insert(s.clone());
+                        }
+                    }
+                }
+                pos = after;
+            }
+        }
+    }
+    keys
+}
+
+/// Keys of the flat JSON object following `anchor` inside the first
+/// fenced `lang` block after the heading starting with `section` —
+/// e.g. the `"stats":{…}` frame in WIRE.md §6.
+fn doc_frame_keys(md: &str, section: &str, lang: &str, anchor: &str) -> Option<BTreeSet<String>> {
+    for line in md_block(md, section, lang) {
+        if let Some(p) = line.find(anchor) {
+            let rest = &line[p + anchor.len()..];
+            let body = match rest.find('}') {
+                Some(end) => &rest[..end],
+                None => rest,
+            };
+            return Some(quoted_keys(body));
+        }
+    }
+    None
+}
+
+/// The `"serve/…"` keys of the §8 metrics-snapshot example block.
+fn doc_medians_keys(md: &str) -> Option<BTreeSet<String>> {
+    let block = md_block(md, "## 8.", "json");
+    if block.is_empty() {
+        return None;
+    }
+    let mut keys = BTreeSet::new();
+    for line in block {
+        for key in quoted_keys(line) {
+            if key.starts_with("serve/") {
+                keys.insert(key);
+            }
+        }
+    }
+    Some(keys)
+}
+
+/// Lines of the first ``` `lang` fence after the heading prefix.
+fn md_block<'a>(md: &'a str, section: &str, lang: &str) -> Vec<&'a str> {
+    let mut out = Vec::new();
+    let mut seen = false;
+    let mut active = false;
+    let fence = format!("```{lang}");
+    for line in md.lines() {
+        if line.starts_with(section) {
+            seen = true;
+        } else if seen && !active && line.starts_with(&fence) {
+            active = true;
+        } else if active && line.starts_with("```") {
+            return out;
+        } else if active {
+            out.push(line);
+        } else if seen && line.starts_with("## ") {
+            seen = false;
+        }
+    }
+    out
+}
+
+/// `"key":` occurrences in a JSON fragment.
+fn quoted_keys(fragment: &str) -> BTreeSet<String> {
+    let mut keys = BTreeSet::new();
+    let bytes: Vec<char> = fragment.chars().collect();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if bytes[i] == '"' {
+            let start = i + 1;
+            let mut j = start;
+            while j < bytes.len() && bytes[j] != '"' {
+                j += 1;
+            }
+            if j < bytes.len() {
+                let mut k = j + 1;
+                while k < bytes.len() && bytes[k].is_whitespace() {
+                    k += 1;
+                }
+                if bytes.get(k) == Some(&':') {
+                    keys.insert(bytes[start..j].iter().collect());
+                }
+                i = j + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    keys
+}

@@ -19,6 +19,7 @@ pub struct BitSlice {
 }
 
 impl BitSlice {
+    /// A bit-slicing scheme; both operands must be at least 1 bit.
     pub fn new(weight_bits: u32, bits_per_cell: u32) -> BitSlice {
         assert!(weight_bits >= 1 && bits_per_cell >= 1, "bits must be positive");
         BitSlice { weight_bits, bits_per_cell }

@@ -18,13 +18,23 @@ use std::fmt;
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum LayerKind {
     /// Fully connected fan_in -> fan_out.
-    Fc { fan_in: usize, fan_out: usize },
+    Fc {
+        /// input features
+        fan_in: usize,
+        /// output features
+        fan_out: usize,
+    },
     /// 2-D convolution on square inputs.
     Conv {
+        /// input channels
         in_ch: usize,
+        /// output channels (filters)
         out_ch: usize,
+        /// square kernel side k
         kernel: usize,
+        /// spatial stride
         stride: usize,
+        /// spatial zero-padding per side
         padding: usize,
         /// square spatial input size n_in
         in_size: usize,
@@ -35,13 +45,18 @@ pub enum LayerKind {
 /// (used for sequence models where every FC is reused per token).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Layer {
+    /// layer name as reported in tables and plans
     pub name: String,
+    /// geometry: FC or Conv with its shape parameters
     pub kind: LayerKind,
+    /// whether the WM carries a bias row (the paper's +1 row convention)
     pub bias: bool,
+    /// overrides the derived weight reuse (sequence models: reuse per token)
     pub reuse_override: Option<usize>,
 }
 
 impl Layer {
+    /// A fully connected layer with the default bias convention.
     pub fn fc(name: &str, fan_in: usize, fan_out: usize) -> Self {
         Layer {
             name: name.into(),
@@ -51,6 +66,8 @@ impl Layer {
         }
     }
 
+    /// A 2-D convolution layer on square inputs with the default bias
+    /// convention.
     pub fn conv(
         name: &str,
         in_ch: usize,
@@ -132,29 +149,36 @@ impl fmt::Display for Layer {
 /// A network: ordered layers plus workload metadata.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Network {
+    /// model name as reported in tables and plans
     pub name: String,
     /// dataset / input description (shape source only, see DESIGN.md)
     pub input_desc: String,
+    /// ordered mapped layers
     pub layers: Vec<Layer>,
 }
 
 impl Network {
+    /// A network from its name, input description and ordered layers.
     pub fn new(name: &str, input_desc: &str, layers: Vec<Layer>) -> Self {
         Network { name: name.into(), input_desc: input_desc.into(), layers }
     }
 
+    /// Number of mapped layers.
     pub fn n_layers(&self) -> usize {
         self.layers.len()
     }
 
+    /// Total weight count across layers (bias rows included).
     pub fn total_weights(&self) -> usize {
         self.layers.iter().map(Layer::weights).sum()
     }
 
+    /// Total multiply-accumulates for one inference.
     pub fn total_macs(&self) -> usize {
         self.layers.iter().map(Layer::macs).sum()
     }
 
+    /// Largest per-layer weight reuse (1 for a pure-FC feedforward net).
     pub fn max_reuse(&self) -> usize {
         self.layers.iter().map(Layer::reuse).max().unwrap_or(1)
     }

@@ -137,7 +137,12 @@ impl Client {
         if self.conn.is_none() {
             self.conn = Some(self.dial()?);
         }
-        Ok(self.conn.as_mut().expect("just connected"))
+        self.conn.as_mut().ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::NotConnected,
+                "connection slot empty after dial",
+            )
+        })
     }
 
     /// One attempt: ensure a connection, send `line`, read one response
@@ -201,9 +206,9 @@ impl Client {
                 }
             }
         }
-        let e = last.expect("at least one attempt ran");
+        let detail = last.map(|e| format!(": {e}")).unwrap_or_default();
         Err(PlanError(format!(
-            "service at {} unreachable after {} attempts: {e}",
+            "service at {} unreachable after {} attempts{detail}",
             self.addr,
             self.cfg.retries + 1
         )))

@@ -611,7 +611,9 @@ impl Planner {
             forced.request.include_placements = true;
             forced.plan_with_outcome(Deadline::NONE)?
         };
-        let outcome = outcome.expect("fixed-tile placement plans materialize a packing");
+        let Some(outcome) = outcome else {
+            return Err(err("internal: fixed-tile placement plan did not materialize a packing"));
+        };
         if !self.request.include_placements {
             plan.placements = None; // the packing carries them instead
         }
@@ -754,10 +756,9 @@ impl Planner {
         deadline: Deadline,
     ) -> Result<SweepPoint, PlanError> {
         match self.request.objective {
-            Objective::MinArea => {
-                Ok(opt::optimum(points).expect("validated tile space is non-empty"))
-            }
-            Objective::MinTiles => Ok(points
+            Objective::MinArea => opt::optimum(points)
+                .ok_or_else(|| err("internal: validated tile space swept to no points")),
+            Objective::MinTiles => points
                 .iter()
                 .min_by(|x, y| {
                     x.n_tiles
@@ -765,7 +766,7 @@ impl Planner {
                         .then(x.total_area_mm2.total_cmp(&y.total_area_mm2))
                 })
                 .cloned()
-                .expect("validated tile space is non-empty")),
+                .ok_or_else(|| err("internal: validated tile space swept to no points")),
             Objective::MaxThroughput => {
                 // area-prune to the per-aspect winners, then rank by the
                 // cycle-level simulator (deterministic)
@@ -796,7 +797,10 @@ impl Planner {
                         best = Some((rep.throughput_per_s, p));
                     }
                 }
-                Ok(best.expect("validated tile space is non-empty").1.clone())
+                match best {
+                    Some((_, p)) => Ok(p.clone()),
+                    None => Err(err("internal: validated tile space swept to no points")),
+                }
             }
         }
     }

@@ -293,12 +293,14 @@ fn layer_from_json(j: &Json) -> Result<Layer, PlanError> {
         if dims.len() != 2 {
             return Err(err("'fc' must be [fan_in, fan_out]"));
         }
+        // lint: allow(panic) length checked to be exactly 2 above
         Layer::fc(name, dims[0], dims[1])
     } else if let Some(conv) = o.get("conv") {
         let d = usize_arr(conv, "'conv'")?;
         if d.len() != 6 {
             return Err(err("'conv' must be [in_ch,out_ch,kernel,stride,padding,in_size]"));
         }
+        // lint: allow(panic) length checked to be exactly 6 above
         Layer::conv(name, d[0], d[1], d[2], d[3], d[4], d[5])
     } else {
         return Err(err(format!("layer '{name}' needs an 'fc' or 'conv' shape")));
@@ -336,6 +338,7 @@ fn tiles_from_json(j: &Json) -> Result<TileSpace, PlanError> {
         if d.len() != 2 {
             return Err(err("'tiles.fixed' must be [rows, cols]"));
         }
+        // lint: allow(panic) length checked to be exactly 2 above
         return Ok(TileSpace::Fixed(Tile::new(d[0], d[1])));
     }
     let g = obj(
@@ -354,6 +357,7 @@ fn tiles_from_json(j: &Json) -> Result<TileSpace, PlanError> {
         g.get("aspects").ok_or_else(|| err("'tiles.grid' missing 'aspects'"))?,
         "'aspects'",
     )?;
+    // lint: allow(panic) length checked to be exactly 2 above
     Ok(TileSpace::Grid { row_exp: (exp(re[0])?, exp(re[1])?), aspects })
 }
 
@@ -372,6 +376,7 @@ fn replication_from_json(j: &Json) -> Result<Replication, PlanError> {
         if d.len() != 2 {
             return Err(err("'geometric' must be [n0, factor]"));
         }
+        // lint: allow(panic) length checked to be exactly 2 above
         return Ok(Replication::Geometric(d[0], d[1]));
     }
     if let Some(u) = o.get("uniform") {
@@ -489,6 +494,7 @@ pub fn plan_from_json(j: &Json) -> Result<MapPlan, PlanError> {
                     if d.len() != 4 {
                         return Err(err("placement must be [block,bin,x,y]"));
                     }
+                    // lint: allow(panic) length checked to be exactly 4 above
                     Ok(Placement { block: d[0], bin: d[1], x: d[2], y: d[3] })
                 })
                 .collect::<Result<Vec<_>, _>>()?,
@@ -542,9 +548,15 @@ pub fn plan_from_json(j: &Json) -> Result<MapPlan, PlanError> {
 /// client actually sent (it is *not* the request ordinal; see
 /// [`super::ServeSummary`]).
 pub fn error_frame(line: usize, e: &PlanError) -> Json {
+    Json::Obj(error_obj(line, e))
+}
+
+/// Shared `v`/`line`/`error` body of [`error_frame`] and
+/// [`reject_frame`] — one builder, so the two frame shapes cannot drift.
+fn error_obj(line: usize, e: &PlanError) -> JsonObj {
     let mut o = JsonObj::new();
     o.set("v", WIRE_VERSION).set("line", line).set("error", e.0.as_str());
-    Json::Obj(o)
+    o
 }
 
 /// Why the planning service refused to plan a request it could have
@@ -588,7 +600,7 @@ impl RejectKind {
 /// discriminator. Emitted only by the planning service — the file
 /// endpoint has no admission control, panic containment, or deadlines.
 pub fn reject_frame(line: usize, kind: RejectKind, e: &PlanError) -> Json {
-    let Json::Obj(mut o) = error_frame(line, e) else { unreachable!("error_frame is an object") };
+    let mut o = error_obj(line, e);
     o.set("reject", kind.token());
     Json::Obj(o)
 }
@@ -835,6 +847,7 @@ fn point_from_json(j: &Json) -> Result<SweepPoint, PlanError> {
         return Err(err("'tile' must be [rows, cols]"));
     }
     Ok(SweepPoint {
+        // lint: allow(panic) length checked to be exactly 2 above
         tile: Tile::new(t[0], t[1]),
         aspect: get_usize(o, "aspect")?,
         n_blocks: get_usize(o, "blocks")?,

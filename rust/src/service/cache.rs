@@ -143,14 +143,15 @@ impl PlanCache {
         if self.capacity == 0 {
             return None;
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.lock();
         let expired = match (inner.map.get(key), self.ttl) {
             (Some(e), Some(ttl)) => now.saturating_duration_since(e.inserted) >= ttl,
             _ => false,
         };
         if expired {
-            inner.remove_entry(key).expect("checked above");
-            inner.expired += 1;
+            if inner.remove_entry(key).is_some() {
+                inner.expired += 1;
+            }
             return None;
         }
         inner.tick += 1;
@@ -211,7 +212,7 @@ impl PlanCache {
         }
         debug_assert!(plan.id.is_empty(), "cached plans must be anonymous");
         let bytes = key.len() + plan_len;
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.lock();
         // purge everything already past its TTL — expiry is otherwise only
         // discovered by a lookup of the same key, which would let a
         // never-requested-again entry hold memory (and inflate the
@@ -224,8 +225,9 @@ impl PlanCache {
                 .map(|(k, _)| k.clone())
                 .collect();
             for k in dead {
-                inner.remove_entry(&k).expect("collected from the map above");
-                inner.expired += 1;
+                if inner.remove_entry(&k).is_some() {
+                    inner.expired += 1;
+                }
             }
         }
         inner.tick += 1;
@@ -244,12 +246,12 @@ impl PlanCache {
             || (self.max_bytes > 0 && inner.bytes > self.max_bytes))
             && !inner.map.is_empty()
         {
-            let victim_tick =
-                *inner.by_tick.keys().next().expect("tick index in lockstep with the map");
-            let victim =
-                inner.by_tick.remove(&victim_tick).expect("key was just observed");
-            let e = inner.map.remove(&victim).expect("tick index in lockstep with the map");
-            inner.bytes -= e.bytes;
+            let Some((_, victim)) = inner.by_tick.pop_first() else {
+                break; // index drained: the lockstep debug_assert below reports drift
+            };
+            if let Some(e) = inner.map.remove(&victim) {
+                inner.bytes -= e.bytes;
+            }
         }
         debug_assert_eq!(
             inner.map.len(),
@@ -258,9 +260,18 @@ impl PlanCache {
         );
     }
 
+    /// Lock the cache state, recovering from poisoning: every removal
+    /// path funnels through [`Inner::remove_entry`] and every mutation
+    /// keeps the map/index lockstep valid at each step, so a panicking
+    /// holder leaves consistent state behind — recover like the
+    /// service's stats lock rather than wedging every later lookup.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// Entries currently cached.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        self.lock().map.len()
     }
 
     /// Whether the cache currently holds no entries.
@@ -271,12 +282,12 @@ impl PlanCache {
     /// Bytes currently charged across live entries (keys + serialized
     /// plans — the footprint the `metrics` frame reports).
     pub fn bytes(&self) -> usize {
-        self.inner.lock().unwrap().bytes
+        self.lock().bytes
     }
 
     /// Entries dropped by TTL expiry since construction.
     pub fn expired_total(&self) -> u64 {
-        self.inner.lock().unwrap().expired
+        self.lock().expired
     }
 }
 

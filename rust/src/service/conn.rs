@@ -55,16 +55,26 @@ impl Conn {
     /// disappeared mid-stream degrades to discarding: the write error
     /// closes the stream and later deliveries drain silently.
     pub fn deliver(&self, seq: usize, line: String) {
-        let mut w = self.writer.lock().unwrap();
+        let mut w = self.lock();
         w.parked.insert(seq, line);
         self.pump(w);
+    }
+
+    /// Lock the writer state, recovering from poisoning: the parked map,
+    /// sequence counter and flusher flag are valid at every step (socket
+    /// writes happen outside the lock on a moved-out stream), so a
+    /// panicking holder leaves consistent state — recover like the
+    /// service's stats lock rather than silently dropping every later
+    /// response on this connection.
+    fn lock(&self) -> MutexGuard<'_, Writer> {
+        self.writer.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
     }
 
     /// The reader side is done (EOF, shutdown, or a read error): exactly
     /// `total` responses are owed in all. Closes the write half once the
     /// last one is out — immediately, if everything was already delivered.
     pub fn finish_input(&self, total: usize) {
-        let mut w = self.writer.lock().unwrap();
+        let mut w = self.lock();
         w.total = Some(total);
         self.pump(w);
     }
@@ -104,7 +114,7 @@ impl Conn {
                 // draining sequence numbers, stop writing
                 stream = None;
             }
-            w = self.writer.lock().unwrap();
+            w = self.lock();
             w.stream = stream;
         }
         // lock held: no new lines can arrive between the last drain and

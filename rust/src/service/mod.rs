@@ -1012,6 +1012,8 @@ fn respond_planned(shared: &Shared, job: &Job, req: &plan::MapRequest) -> String
     // previous solve of the same network. The panic handler in
     // [`Service::run`] settles this job's flight.
     if req.id == PANIC_PROBE_ID {
+        // lint: allow(panic) deliberate live-fire probe; contained by the
+        // worker's catch_unwind in [`Service::run`]
         panic!("panic probe: request id {PANIC_PROBE_ID}");
     }
     // the canonical key has three consumers (LRU, warehouse, flight);

@@ -347,7 +347,14 @@ impl Warehouse {
         }
         let offset = inner.active_len;
         let seg = inner.active_id;
-        let file = inner.active.as_mut().expect("active segment opened above");
+        let Some(file) = inner.active.as_mut() else {
+            // both branches above populate the handle; surface a typed
+            // error instead of panicking with the warehouse lock held
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "warehouse append: no active segment after open",
+            ));
+        };
         file.write_all(line.as_bytes())?;
         file.write_all(b"\n")?;
         inner.active_len += line_len;
@@ -385,7 +392,9 @@ impl Warehouse {
         let mut out: Option<File> = None;
         let (mut out_len, mut total, mut segments_after) = (0u64, 0u64, 0usize);
         for key in &keys {
-            let loc = inner.index.get(key).expect("key came from the index");
+            let Some(loc) = inner.index.get(key) else {
+                continue; // key listed moments ago; nothing to copy if gone
+            };
             let line = read_span(&segment_path(&self.dir, loc.segment), loc.offset, loc.len)?;
             let line_len = loc.len + 1;
             if out.is_none() || (out_len > 0 && out_len + line_len > self.segment_bytes) {
@@ -396,7 +405,12 @@ impl Warehouse {
                 out_len = 0;
                 segments_after += 1;
             }
-            let file = out.as_mut().expect("fresh segment opened above");
+            let Some(file) = out.as_mut() else {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    "warehouse compact: no open output segment",
+                ));
+            };
             file.write_all(line.as_bytes())?;
             file.write_all(b"\n")?;
             new_index.insert(
