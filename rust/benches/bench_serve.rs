@@ -1,15 +1,21 @@
 //! Bench: planning-service round trips over a real loopback socket —
 //! the latency a tenant of `xbarmap serve --plans` actually observes.
 //!
-//! Three rows join the bench trajectory (`BENCH_serve.json`, gated in CI
-//! like the sweep/pack files):
+//! The rows joining the bench trajectory (`BENCH_serve.json`, gated in
+//! CI like the sweep/pack files):
 //!
 //! * `serve/roundtrip/lenet-fixed256/solve` — cache disabled, so every
 //!   iteration pays request decode + a real fixed-tile solve + response
 //!   serialization + two socket hops;
 //! * `serve/roundtrip/lenet-fixed256/cache-hit` — cache enabled and
 //!   warmed, so iterations measure the admission/queue/cache/re-stamp
-//!   path the multi-tenant steady state lives on;
+//!   path the multi-tenant steady state lives on (the request is
+//!   non-canonical, so each trip still pays a full JSON parse);
+//! * `serve/roundtrip/lenet-fixed256/scan-hit` — the same warmed hit
+//!   for a **canonical** id-carrying request, which the byte scanner
+//!   (`plan::wire::scan`) resolves to an LRU probe without building a
+//!   JSON tree — the delta against `cache-hit` is the parse work the
+//!   fast path saves;
 //! * `serve/roundtrip/cmd-stats` — the in-band stats command, the floor
 //!   the wire + queue machinery sets under any response;
 //! * `serve/roundtrip/lenet-fixed256/warehouse-hit` — LRU off, plan
@@ -95,6 +101,17 @@ fn main() {
         b.run("serve/roundtrip/lenet-fixed256/cache-hit", || {
             roundtrip(&mut client, plan_req, &mut line)
         });
+        // same tile point, but canonical bytes + a correlation id: the
+        // wire scanner's candidate key matches the LRU entry directly,
+        // so iterations skip the JSON tree entirely
+        let scan_req = r#"{"v":1,"id":"bench-tenant","net":{"zoo":"lenet"},"discipline":"dense","engine":"simple","tiles":{"fixed":[256,256]},"objective":"min-area"}"#;
+        // the canonical key already holds plan_req's plan (ids are
+        // cleared from cache keys), so this is fast-pathed from trip one
+        roundtrip(&mut client, scan_req, &mut line);
+        b.run("serve/roundtrip/lenet-fixed256/scan-hit", || {
+            roundtrip(&mut client, scan_req, &mut line)
+        });
+        assert!(line.contains("\"id\":\"bench-tenant\""), "expected a re-stamped id: {line}");
         b.run("serve/roundtrip/cmd-stats", || {
             roundtrip(&mut client, stats_req, &mut line)
         });
@@ -102,7 +119,7 @@ fn main() {
         drop(client);
         handle.shutdown();
         let stats = join.join().unwrap();
-        assert!(stats.cache_hits > 0, "cache-hit row never hit the cache");
+        assert!(stats.cache_hits > 1, "cache-hit/scan-hit rows never hit the cache");
     }
 
     // warm boot: a prior service lifetime solved and persisted the plan;

@@ -55,7 +55,7 @@ pub use ring::HashRing;
 use crate::plan::{self, PlanError};
 use crate::plan::client::{Client, ClientConfig};
 use crate::plan::wire;
-use crate::service::{self, conn::Conn, PlanCache};
+use crate::service::{self, conn::Conn, PlanCache, TenantLedger};
 use crate::util::json::{self, Json};
 use crate::util::mpmc::Queue;
 use supervisor::Shard;
@@ -97,6 +97,16 @@ pub struct ClusterConfig {
     pub warehouse: Option<PathBuf>,
     /// per-connection request quota, enforced at the router (0 = off)
     pub per_conn_quota: usize,
+    /// per-tenant request budget, enforced **only at the router** — the
+    /// one place that sees every connection of a tenant. Workers never
+    /// get a ledger of their own (forwarded requests would be double
+    /// metered), matching how the other admission flags stay router-side
+    pub tenant_quota: u64,
+    /// shared secret for the `recalibrate` admin verb. The router
+    /// authenticates the command, then fans the client's verbatim line
+    /// out to every live shard — so the same token is also handed to the
+    /// workers via `--admin-token` at spawn
+    pub admin_token: Option<String>,
     /// cluster-wide in-flight admission cap at the router (0 = off)
     pub max_inflight: usize,
     /// solve budget for **degraded** local solves; forwarded requests
@@ -148,6 +158,8 @@ impl Default for ClusterConfig {
             worker_args: Vec::new(),
             warehouse: None,
             per_conn_quota: 0,
+            tenant_quota: 0,
+            admin_token: None,
             max_inflight: 0,
             deadline: None,
             metrics_out: None,
@@ -196,6 +208,9 @@ pub(crate) struct RouterStats {
     shard_respawns: u64,
     replayed: u64,
     degraded: u64,
+    /// tenant-budget refusals plus unauthorized `recalibrate` attempts,
+    /// both policy refusals the router issues itself
+    tenant_rejects: u64,
 }
 
 /// State shared by the accept loop, connection readers, forwarders,
@@ -212,6 +227,8 @@ pub(crate) struct ClusterShared {
     stats: Mutex<RouterStats>,
     /// requests admitted by the router and not yet answered
     inflight: AtomicUsize,
+    /// per-tenant budgets, metered once at the router (workers get none)
+    tenants: TenantLedger,
     started: Instant,
 }
 
@@ -237,7 +254,17 @@ impl ClusterShared {
             wire::RejectKind::OverInflight => r.rejected_over_inflight += 1,
             wire::RejectKind::Internal => r.rejected_internal += 1,
             wire::RejectKind::Deadline => r.local_timeouts += 1,
+            wire::RejectKind::Unauthorized => r.tenant_rejects += 1,
         }
+    }
+
+    /// Count one tenant-budget refusal — same split as the service:
+    /// `over-quota` on the wire, `tenant_rejects` in the counters, so
+    /// re-dialing tenants and chatty sockets stay distinguishable.
+    fn note_tenant_reject(&self) {
+        let mut r = self.lock_stats();
+        r.local_errors += 1;
+        r.tenant_rejects += 1;
     }
 
     /// The cluster-wide snapshot: every shard live-probed (falling back
@@ -264,6 +291,9 @@ impl ClusterShared {
         s.shard_respawns = r.shard_respawns;
         s.replayed = r.replayed;
         s.degraded = r.degraded;
+        // metering is router-only, but the shards' (normally zero)
+        // counters still fold in so the merge rule has no special case
+        s.tenant_rejects += r.tenant_rejects;
         agg.rejected_over_quota += r.rejected_over_quota;
         agg.rejected_over_inflight += r.rejected_over_inflight;
         drop(r);
@@ -289,9 +319,11 @@ struct FwdJob {
     line_no: usize,
     /// the raw request line, forwarded verbatim
     text: String,
-    /// the decoded request — already parsed for routing, reused by the
-    /// degraded local solve
-    req: plan::MapRequest,
+    /// the decoded request when routing needed the JSON tree (the byte
+    /// scanner fell back); None when the scanner routed the line, in
+    /// which case the degraded local solve — the only consumer — parses
+    /// `text` on demand. The happy path never builds a tree either way.
+    req: Option<plan::MapRequest>,
 }
 
 /// A sharded planning router. Lifecycle mirrors [`crate::service::Service`]:
@@ -353,6 +385,7 @@ impl Cluster {
                 sigint: if cfg.watch_sigint { Some(service::sigint_flag()) } else { None },
                 stats: Mutex::new(RouterStats::default()),
                 inflight: AtomicUsize::new(0),
+                tenants: TenantLedger::new(cfg.tenant_quota),
                 started: Instant::now(),
                 cfg,
             }),
@@ -518,8 +551,16 @@ fn read_client(shared: &Arc<ClusterShared>, stream: TcpStream, conn: Arc<Conn>) 
             terminal = true;
             break;
         }
-        // same admission rules — and command exemption — as the service
-        let looks_like_cmd = text.contains("\"cmd\"") && !text.contains("\"net\"");
+        // same admission rules — and command exemption — as the service,
+        // decided by the same byte scanner with the same sniff fallback
+        let scanned = wire::scan::scan(&text);
+        let looks_like_cmd = match &scanned {
+            wire::scan::Scan::Command => true,
+            wire::scan::Scan::Request(_) => false,
+            wire::scan::Scan::Fallback => {
+                text.contains("\"cmd\"") && !text.contains("\"net\"")
+            }
+        };
         let admitted = shared.inflight.fetch_add(1, Ordering::SeqCst);
         if shared.cfg.max_inflight > 0 && admitted >= shared.cfg.max_inflight && !looks_like_cmd {
             shared.inflight.fetch_sub(1, Ordering::SeqCst);
@@ -535,49 +576,69 @@ fn read_client(shared: &Arc<ClusterShared>, stream: TcpStream, conn: Arc<Conn>) 
             seq += 1;
             continue;
         }
-        // the router answers commands and malformed lines itself — a
-        // shard's opinion would add nothing, and commands must aggregate
-        // the whole cluster anyway; only decodable plan requests travel
-        let local = match json::parse(&text) {
-            // same message plan::parse_request_line produces, so error
-            // frames stay byte-identical to serve_jsonl's
-            Err(e) => Some(error_local(shared, line_no, &PlanError(format!("parse request: {e}")))),
-            Ok(j) => {
-                if j.get("cmd").is_some() && j.get("net").is_none() {
-                    Some(respond_cmd(shared, &j, line_no))
+        // The router answers commands, malformed lines, and policy
+        // refusals itself — a shard's opinion would add nothing, and
+        // commands must aggregate the whole cluster anyway; only plan
+        // requests travel. A scanned request routes by the scanner's
+        // candidate key without building a JSON tree: for a canonical
+        // line it equals the canonical key, and a non-canonical line
+        // merely lands on a different shard — a cache-locality cost,
+        // never a correctness one, since every shard plans every request
+        // identically. Tenant metering happens here for both shapes,
+        // once, at the only tier that sees all of a tenant's connections.
+        let mut forward: Option<(usize, Option<plan::MapRequest>)> = None;
+        let local = match scanned {
+            wire::scan::Scan::Request(s) => {
+                if !shared.tenants.try_charge(&s.id) {
+                    Some(tenant_reject(shared, line_no, &s.id))
                 } else {
-                    match plan::MapRequest::from_json(&j) {
-                        Err(e) => Some(error_local(shared, line_no, &e)),
-                        Ok(req) => {
-                            let owner = shared.ring.owner(&PlanCache::key(&req));
-                            let lane = lanes[owner].get_or_insert_with(|| {
-                                let q = Arc::new(Queue::bounded(FORWARD_QUEUE));
-                                let (sh, lane, cn) =
-                                    (Arc::clone(shared), Arc::clone(&q), Arc::clone(&conn));
-                                forwarders.push(std::thread::spawn(move || {
-                                    run_forwarder(&sh, owner, &lane, &cn);
-                                }));
-                                q
-                            });
-                            // blocks while the lane is full — this is the
-                            // backpressure path, same as the service's
-                            // bounded queue
-                            match lane.push(FwdJob { seq, line_no, text, req }) {
-                                Ok(()) => None,
-                                Err(_) => {
-                                    // lane closed: cannot happen while the
-                                    // reader holds it open, but mirror the
-                                    // service's give-back discipline
-                                    shared.inflight.fetch_sub(1, Ordering::SeqCst);
-                                    break;
-                                }
+                    forward = Some((shared.ring.owner(&s.key), None));
+                    None
+                }
+            }
+            _ => match json::parse(&text) {
+                // same message plan::parse_request_line produces, so
+                // error frames stay byte-identical to serve_jsonl's
+                Err(e) => {
+                    Some(error_local(shared, line_no, &PlanError(format!("parse request: {e}"))))
+                }
+                Ok(j) => {
+                    if j.get("cmd").is_some() && j.get("net").is_none() {
+                        Some(respond_cmd(shared, &j, &text, line_no))
+                    } else {
+                        match plan::MapRequest::from_json(&j) {
+                            Err(e) => Some(error_local(shared, line_no, &e)),
+                            Ok(req) if !shared.tenants.try_charge(&req.id) => {
+                                Some(tenant_reject(shared, line_no, &req.id))
+                            }
+                            Ok(req) => {
+                                forward =
+                                    Some((shared.ring.owner(&PlanCache::key(&req)), Some(req)));
+                                None
                             }
                         }
                     }
                 }
-            }
+            },
         };
-        if let Some(response) = local {
+        if let Some((owner, req)) = forward {
+            let lane = lanes[owner].get_or_insert_with(|| {
+                let q = Arc::new(Queue::bounded(FORWARD_QUEUE));
+                let (sh, lane, cn) = (Arc::clone(shared), Arc::clone(&q), Arc::clone(&conn));
+                forwarders.push(std::thread::spawn(move || {
+                    run_forwarder(&sh, owner, &lane, &cn);
+                }));
+                q
+            });
+            // blocks while the lane is full — this is the backpressure
+            // path, same as the service's bounded queue
+            if lane.push(FwdJob { seq, line_no, text, req }).is_err() {
+                // lane closed: cannot happen while the reader holds it
+                // open, but mirror the service's give-back discipline
+                shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                break;
+            }
+        } else if let Some(response) = local {
             conn.deliver(seq, response);
             shared.inflight.fetch_sub(1, Ordering::SeqCst);
         }
@@ -602,26 +663,93 @@ fn error_local(shared: &ClusterShared, line_no: usize, e: &PlanError) -> String 
     wire::error_frame(line_no, e).dumps()
 }
 
+/// Count and build a tenant-budget refusal — identical wording to the
+/// service's, because a client must not be able to tell which tier
+/// refused it.
+fn tenant_reject(shared: &ClusterShared, line_no: usize, id: &str) -> String {
+    shared.note_tenant_reject();
+    let e = PlanError(format!(
+        "tenant '{id}' exceeded its {}-request quota",
+        shared.tenants.quota()
+    ));
+    wire::reject_frame(line_no, wire::RejectKind::OverQuota, &e).dumps()
+}
+
 /// Answer an in-band command with the **cluster** snapshot — same
 /// version rule, command set, and error wording as the service's
-/// `respond_cmd`, different numbers behind them.
-fn respond_cmd(shared: &ClusterShared, j: &Json, line_no: usize) -> String {
-    let frame = (|| {
-        let o = j.as_obj().ok_or_else(|| PlanError("command must be a JSON object".into()))?;
-        wire::check_version(o, "command")?;
-        match o.get("cmd").and_then(Json::as_str) {
-            Some("stats") => Ok(wire::stats_frame(&shared.aggregate_stats())),
-            Some("metrics") => Ok(wire::metrics_frame(&shared.aggregate_metrics())),
-            other => Err(PlanError(format!(
-                "unknown command '{}' (try \"stats\" or \"metrics\")",
-                other.unwrap_or("?")
-            ))),
+/// `respond_cmd`, different numbers behind them. `text` is the client's
+/// verbatim line, which `recalibrate` fans out to the shards unmodified
+/// so the workers authenticate the same token the router did.
+fn respond_cmd(shared: &ClusterShared, j: &Json, text: &str, line_no: usize) -> String {
+    let o = match j.as_obj() {
+        Some(o) => o,
+        None => {
+            return error_local(shared, line_no, &PlanError("command must be a JSON object".into()))
         }
-    })();
-    match frame {
-        Ok(f) => f.dumps(),
-        Err(e) => error_local(shared, line_no, &e),
+    };
+    if let Err(e) = wire::check_version(o, "command") {
+        return error_local(shared, line_no, &e);
     }
+    match o.get("cmd").and_then(Json::as_str) {
+        Some("stats") => wire::stats_frame(&shared.aggregate_stats()).dumps(),
+        Some("metrics") => wire::metrics_frame(&shared.aggregate_metrics()).dumps(),
+        Some("recalibrate") => {
+            let authorized = match &shared.cfg.admin_token {
+                Some(t) => o.get("token").and_then(Json::as_str) == Some(t.as_str()),
+                None => false,
+            };
+            if !authorized {
+                shared.note_reject(wire::RejectKind::Unauthorized);
+                let e = PlanError("recalibrate requires a valid admin token".into());
+                return wire::reject_frame(line_no, wire::RejectKind::Unauthorized, &e).dumps();
+            }
+            recalibrate_cluster(shared, text).dumps()
+        }
+        other => error_local(
+            shared,
+            line_no,
+            &PlanError(format!(
+                "unknown command '{}' (try \"stats\", \"metrics\" or \"recalibrate\")",
+                other.unwrap_or("?")
+            )),
+        ),
+    }
+}
+
+/// Fan an authenticated `recalibrate` out to every live shard — the
+/// client's line verbatim, so each worker re-authenticates the same
+/// shared secret it was spawned with — and aggregate the acks: the
+/// reported `cache_entries` is the sum of what every reachable shard
+/// flushed. A dead or unresponsive shard is skipped; its LRU dies with
+/// its process anyway, so there is nothing stale left to flush there.
+fn recalibrate_cluster(shared: &ClusterShared, text: &str) -> Json {
+    let mut flushed = 0u64;
+    for (i, shard) in shared.shards.iter().enumerate() {
+        let Some((addr, _epoch)) = shard.route(0, shared.cfg.probe_timeout) else {
+            continue;
+        };
+        let mut client = Client::with_config(
+            addr,
+            ClientConfig {
+                connect_timeout: shared.cfg.probe_timeout,
+                read_timeout: shared.cfg.probe_timeout,
+                retries: 1,
+                backoff_base: Duration::from_millis(5),
+                backoff_cap: Duration::from_millis(100),
+                seed: 0xca_11b ^ i as u64,
+            },
+        );
+        let Ok(ack) = client.roundtrip_line(text) else { continue };
+        flushed += json::parse(&ack)
+            .ok()
+            .and_then(|a| {
+                a.get("recalibrated")
+                    .and_then(|r| r.get("cache_entries"))
+                    .and_then(Json::as_f64)
+            })
+            .unwrap_or(0.0) as u64;
+    }
+    wire::recalibrate_frame(flushed)
 }
 
 /// Drain one connection's lane to one shard, delivering each response
@@ -739,6 +867,7 @@ fn reject_kind(token: &str) -> Option<wire::RejectKind> {
         "over-inflight" => wire::RejectKind::OverInflight,
         "internal" => wire::RejectKind::Internal,
         "deadline" => wire::RejectKind::Deadline,
+        "unauthorized" => wire::RejectKind::Unauthorized,
         _ => return None,
     })
 }
@@ -752,7 +881,15 @@ fn reject_kind(token: &str) -> Option<wire::RejectKind> {
 fn solve_degraded(shared: &ClusterShared, job: &FwdJob) -> String {
     use crate::util::deadline::Deadline;
     let budget = shared.cfg.deadline;
-    let req = job.req.clone();
+    // a scanned job carries no tree — decode on demand, producing the
+    // same error frame (and error count) a shard's full parse would have
+    let req = match &job.req {
+        Some(req) => req.clone(),
+        None => match plan::parse_request_line(&job.text) {
+            Ok(req) => req,
+            Err(e) => return error_local(shared, job.line_no, &e),
+        },
+    };
     let solved = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
         if req.id == service::PANIC_PROBE_ID {
             // the worker-side live-fire hook, mirrored so degraded mode
@@ -814,6 +951,7 @@ mod tests {
             wire::RejectKind::OverInflight,
             wire::RejectKind::Internal,
             wire::RejectKind::Deadline,
+            wire::RejectKind::Unauthorized,
         ] {
             let shard_frame = wire::reject_frame(3, kind, &PlanError("why".into())).dumps();
             let expect = wire::reject_frame(9, kind, &PlanError("why".into())).dumps();

@@ -199,6 +199,7 @@ pub(crate) fn fold_counters(into: &mut wire::MetricsSnapshot, from: &wire::Metri
     s.shard_respawns += t.shard_respawns;
     s.replayed += t.replayed;
     s.degraded += t.degraded;
+    s.tenant_rejects += t.tenant_rejects;
     s.plan_p50_s = s.plan_p50_s.max(t.plan_p50_s);
     s.plan_p95_s = s.plan_p95_s.max(t.plan_p95_s);
     into.rejected_over_quota += from.rejected_over_quota;

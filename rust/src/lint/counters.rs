@@ -1,0 +1,87 @@
+//! Rule `counter`: every counter the wire serializes must actually be
+//! incremented on a live path.
+//!
+//! [`wire_drift`](super::wire_drift) keeps the *name sets* of the
+//! serializers, decoders and spec in lockstep, but a counter can pass
+//! all four of those checks while being a zero forever: declared in
+//! `StatsSnapshot`, serialized by `counters_to_obj`, documented in
+//! `docs/WIRE.md` — and never bumped anywhere. That is exactly the
+//! failure mode of wiring a new reject class (e.g. `tenant_rejects`)
+//! through the frames but forgetting the `+= 1` in the service loop:
+//! dashboards read a permanently flat line and nobody notices. This
+//! rule extracts the serializer key set from `counters_to_obj` and
+//! requires an identifier-boundary `key +=` increment in non-test code
+//! somewhere under `service/` or `cluster/` for each key.
+//!
+//! Derived keys (`plan_p50_s`, `plan_p95_s` — percentiles folded from
+//! latency samples at snapshot time, not monotonic counters) are
+//! exempt via [`DERIVED`].
+
+use super::scan::Source;
+use super::wire_drift::{fn_body, set_arg_keys};
+use super::{Finding, RULE_COUNTER};
+use std::collections::BTreeSet;
+
+/// Serializer keys that are derived measurements rather than monotonic
+/// `+=` counters: the latency percentiles are computed from the sample
+/// ring at snapshot time, so no increment site exists by design.
+pub const DERIVED: &[&str] = &["plan_p50_s", "plan_p95_s"];
+
+/// Check that every counter key serialized by `counters_to_obj` in
+/// `wire_rs` (the text of `plan/wire.rs`) has at least one
+/// identifier-boundary `key +=` increment in the non-test code of
+/// `sources` — `(repo-relative path, text)` pairs drawn from
+/// `rust/src/service/` and `rust/src/cluster/`.
+pub fn check_texts(wire_rs: &str, sources: &[(String, String)]) -> Vec<Finding> {
+    let wire = Source::parse(wire_rs);
+    let mut keys = set_arg_keys(&fn_body(&wire, "counters_to_obj"));
+    for derived in DERIVED {
+        keys.remove(*derived);
+    }
+
+    let mut incremented: BTreeSet<String> = BTreeSet::new();
+    for (_, text) in sources {
+        let src = Source::parse(text);
+        for ln in &src.lines {
+            if ln.in_test {
+                continue;
+            }
+            for key in &keys {
+                if !incremented.contains(key.as_str()) && has_increment(&ln.code, key) {
+                    incremented.insert(key.clone());
+                }
+            }
+        }
+    }
+
+    keys.difference(&incremented)
+        .map(|key| Finding {
+            rule: RULE_COUNTER,
+            path: "rust/src/plan/wire.rs".to_string(),
+            line: 1,
+            message: format!(
+                "counter '{key}' is serialized by counters_to_obj but never incremented \
+                 (`{key} +=`) on a non-test path under service/ or cluster/ — it will \
+                 report zero forever"
+            ),
+        })
+        .collect()
+}
+
+/// Whether `code` (string literals already blanked by the scanner)
+/// contains `key +=` with an identifier boundary on the left of `key`,
+/// so `served +=` matches `s.served += 1` but neither `observed +=`
+/// nor `served_total +=` count for key `served`.
+fn has_increment(code: &str, key: &str) -> bool {
+    let mut pos = 0usize;
+    while let Some(p) = code[pos..].find(key) {
+        let at = pos + p;
+        let boundary =
+            code[..at].chars().next_back().map_or(true, |c| !c.is_alphanumeric() && c != '_');
+        if boundary && code[at + key.len()..].trim_start().starts_with("+=") {
+            return true;
+        }
+        pos = at + key.len();
+    }
+    false
+}

@@ -1,0 +1,16 @@
+// Seeded violations for the `counter` rule: `served` only bumps inside
+// a #[cfg(test)] region, `errors` only as the suffix of a longer
+// identifier, and `tenant_rejects` only inside a string literal —
+// none of those are live increments, so all three must be flagged.
+
+fn handle(s: &mut StatsSnapshot) {
+    s.my_errors += 1;
+    log("tenant_rejects += 1 happens elsewhere, honest");
+}
+
+#[cfg(test)]
+mod tests {
+    fn bump(s: &mut StatsSnapshot) {
+        s.served += 1;
+    }
+}

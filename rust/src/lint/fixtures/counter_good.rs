@@ -1,0 +1,16 @@
+// Known-good service loop for the `counter` rule: every monotonic
+// counter the fixture serializer emits has an identifier-boundary
+// `+=` site in non-test code (an aggregation fold counts too).
+
+fn note_served(s: &mut StatsSnapshot) {
+    s.served += 1;
+}
+
+fn note_reject(s: &mut StatsSnapshot) {
+    s.errors += 1;
+    s.tenant_rejects += 1;
+}
+
+fn fold(total: &mut StatsSnapshot, shard: &StatsSnapshot) {
+    total.served += shard.served;
+}

@@ -1,0 +1,12 @@
+// Miniature wire serializer for the `counter` rule: three monotonic
+// counters that demand live `+=` sites, plus one derived percentile
+// (`plan_p50_s`) that the rule must exempt via counters::DERIVED.
+
+fn counters_to_obj(s: &StatsSnapshot) -> JsonObj {
+    let mut o = JsonObj::new();
+    o.set("served", s.served as f64);
+    o.set("errors", s.errors as f64);
+    o.set("tenant_rejects", s.tenant_rejects as f64);
+    o.set("plan_p50_s", s.plan_p50_s);
+    o
+}

@@ -1,7 +1,7 @@
 //! `xbarlint`: repo-native static analysis for the service's
 //! correctness invariants.
 //!
-//! Five rules, each a token-level scan over the source tree (no `syn`,
+//! Six rules, each a token-level scan over the source tree (no `syn`,
 //! no dependencies — the same zero-dependency discipline as the rest
 //! of the crate; see docs/STATIC_ANALYSIS.md for the rule catalog,
 //! the allow-comment grammar and how to add a rule):
@@ -14,6 +14,8 @@
 //!   [`crate::util::deadline::Deadline`];
 //! * [`wire_drift`] — counter/gauge name sets in `plan/wire.rs` and
 //!   `docs/WIRE.md` must match exactly;
+//! * [`counters`] — every counter `plan/wire.rs` serializes must be
+//!   incremented (`key +=`) on a non-test `service`/`cluster` path;
 //! * [`docs_ledger`] — the `#[allow(missing_docs)]` list in `lib.rs`
 //!   must equal the set of modules with undocumented pub items.
 //!
@@ -26,6 +28,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+pub mod counters;
 pub mod deadline;
 pub mod docs_ledger;
 pub mod locks;
@@ -41,11 +44,14 @@ pub const RULE_LOCK: &str = "lock";
 pub const RULE_DEADLINE: &str = "deadline";
 /// Rule id of [`wire_drift`].
 pub const RULE_WIRE: &str = "wire";
+/// Rule id of [`counters`].
+pub const RULE_COUNTER: &str = "counter";
 /// Rule id of [`docs_ledger`].
 pub const RULE_DOCS: &str = "docs";
 
 /// Every rule id, in report order.
-pub const RULES: &[&str] = &[RULE_PANIC, RULE_LOCK, RULE_DEADLINE, RULE_WIRE, RULE_DOCS];
+pub const RULES: &[&str] =
+    &[RULE_PANIC, RULE_LOCK, RULE_DEADLINE, RULE_WIRE, RULE_COUNTER, RULE_DOCS];
 
 /// One non-allowlisted violation.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -149,6 +155,15 @@ pub fn run(root: &Path) -> std::io::Result<Report> {
     let wire_rs = std::fs::read_to_string(src.join("plan").join("wire.rs"))?;
     let wire_md = std::fs::read_to_string(root.join("docs").join("WIRE.md"))?;
     report.findings.extend(wire_drift::check_texts(&wire_rs, &wire_md));
+
+    let mut counter_sources: Vec<(String, String)> = Vec::new();
+    for module in ["service", "cluster"] {
+        for path in walk_rs(&src.join(module))? {
+            let text = std::fs::read_to_string(&path)?;
+            counter_sources.push((rel(root, &path), text));
+        }
+    }
+    report.findings.extend(counters::check_texts(&wire_rs, &counter_sources));
 
     check_docs_ledger(root, &src, &mut report)?;
     Ok(report)

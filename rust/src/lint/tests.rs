@@ -2,7 +2,7 @@
 //! corpus (`fixtures/`), plus scanner and allow-grammar edge cases.
 
 use super::scan::Source;
-use super::{deadline, docs_ledger, locks, panics, wire_drift};
+use super::{counters, deadline, docs_ledger, locks, panics, wire_drift};
 use super::{Report, RULE_LOCK, RULE_PANIC};
 
 const PANIC_BAD: &str = include_str!("fixtures/panic_bad.rs");
@@ -16,6 +16,9 @@ const WIRE_GOOD_MD: &str = include_str!("fixtures/wire_good.md");
 const WIRE_BAD_MD: &str = include_str!("fixtures/wire_bad.md");
 const DOCS_BAD: &str = include_str!("fixtures/docs_bad.rs");
 const DOCS_GOOD: &str = include_str!("fixtures/docs_good.rs");
+const COUNTER_WIRE: &str = include_str!("fixtures/counter_wire.rs");
+const COUNTER_GOOD: &str = include_str!("fixtures/counter_good.rs");
+const COUNTER_BAD: &str = include_str!("fixtures/counter_bad.rs");
 
 // ---- scanner ----
 
@@ -157,6 +160,40 @@ fn wire_rule_flags_seeded_drift_on_both_sides() {
     assert!(findings.iter().any(|f| f.message.contains("errors")));
     // snapshot schema drifted independently
     assert!(findings.iter().any(|f| f.message.contains("serve/queue_depth")));
+}
+
+// ---- rule: counter ----
+
+#[test]
+fn counter_rule_passes_incremented_counters() {
+    let sources = vec![("fixtures/counter_good.rs".to_string(), COUNTER_GOOD.to_string())];
+    let findings = counters::check_texts(COUNTER_WIRE, &sources);
+    assert!(findings.is_empty(), "{findings:#?}");
+}
+
+#[test]
+fn counter_rule_flags_test_only_string_only_and_suffix_sites() {
+    let sources = vec![("fixtures/counter_bad.rs".to_string(), COUNTER_BAD.to_string())];
+    let findings = counters::check_texts(COUNTER_WIRE, &sources);
+    assert_eq!(findings.len(), 3, "{findings:#?}");
+    for key in ["'served'", "'errors'", "'tenant_rejects'"] {
+        assert!(
+            findings.iter().any(|f| f.message.contains(key)),
+            "missing finding for {key}: {findings:#?}"
+        );
+    }
+    // the derived percentile is exempt even with no increment anywhere
+    assert!(!findings.iter().any(|f| f.message.contains("plan_p50_s")), "{findings:#?}");
+}
+
+#[test]
+fn counter_rule_spots_increments_across_any_source_in_the_set() {
+    let sources = vec![
+        ("fixtures/counter_bad.rs".to_string(), COUNTER_BAD.to_string()),
+        ("fixtures/counter_good.rs".to_string(), COUNTER_GOOD.to_string()),
+    ];
+    let findings = counters::check_texts(COUNTER_WIRE, &sources);
+    assert!(findings.is_empty(), "a live site in any scanned file satisfies the rule");
 }
 
 // ---- rule: docs ----

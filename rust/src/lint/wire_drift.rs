@@ -95,7 +95,7 @@ fn missing_doc(message: &str) -> Finding {
 }
 
 /// The scanned lines of `fn name`'s brace-matched body.
-fn fn_body<'a>(src: &'a Source, name: &str) -> Vec<&'a super::scan::Line> {
+pub(super) fn fn_body<'a>(src: &'a Source, name: &str) -> Vec<&'a super::scan::Line> {
     let needle = format!("fn {name}");
     let mut out = Vec::new();
     let mut depth = 0usize;
@@ -128,7 +128,7 @@ fn fn_body<'a>(src: &'a Source, name: &str) -> Vec<&'a super::scan::Line> {
 /// String literals passed as the first argument of `.set(` calls in
 /// `body` — the serializer-side key set. Handles the key literal
 /// landing on the line after a rustfmt-wrapped `.set(`.
-fn set_arg_keys(body: &[&super::scan::Line]) -> BTreeSet<String> {
+pub(super) fn set_arg_keys(body: &[&super::scan::Line]) -> BTreeSet<String> {
     let mut keys = BTreeSet::new();
     let mut pending = false;
     for ln in body {

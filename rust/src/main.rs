@@ -376,6 +376,8 @@ fn cmd_serve_plans(argv: &[String]) -> Result<()> {
         OptSpec { name: "per-conn-quota", help: "requests per connection before a typed over-quota reject (0 = unlimited)", value: Some("N"), default: Some("0") },
         OptSpec { name: "max-inflight", help: "service-wide admitted-request cap before typed over-inflight rejects (0 = unlimited)", value: Some("N"), default: Some("0") },
         OptSpec { name: "deadline-ms", help: "wall-clock budget per solve in milliseconds before a typed deadline reject (0 = unbounded)", value: Some("MS"), default: Some("0") },
+        OptSpec { name: "tenant-quota", help: "requests per tenant id across all its connections before typed over-quota rejects (0 = unlimited)", value: Some("N"), default: Some("0") },
+        OptSpec { name: "admin-token", help: "shared secret authorizing the in-band {\"v\":1,\"cmd\":\"recalibrate\"} verb (absent = verb always rejected)", value: Some("TOKEN"), default: None },
         OptSpec { name: "metrics-out", help: "periodically write the gauge snapshot (BENCH_*.json schema) to FILE", value: Some("FILE"), default: None },
         OptSpec { name: "metrics-interval", help: "seconds between metrics-file rewrites", value: Some("SECS"), default: Some("10") },
         OptSpec { name: "warehouse", help: "persistent plan store directory (second cache tier behind the LRU)", value: Some("DIR"), default: None },
@@ -411,6 +413,8 @@ fn cmd_serve_plans(argv: &[String]) -> Result<()> {
             (ms > 0).then(|| std::time::Duration::from_millis(ms as u64))
         },
         warehouse: a.get("warehouse").map(std::path::PathBuf::from),
+        tenant_quota: a.req_usize("tenant-quota").map_err(|e| anyhow!(e))? as u64,
+        admin_token: a.get("admin-token").map(|s| s.to_string()),
         watch_sigint: !a.flag("no-sigint"),
     };
     let shards = a.req_usize("cluster").map_err(|e| anyhow!(e))?;
@@ -475,6 +479,13 @@ fn cmd_serve_cluster(a: &Args, cfg: &ServiceConfig, shards: usize) -> Result<()>
         worker_args.push(format!("--{flag}"));
         worker_args.push(a.req(flag).map_err(|e| anyhow!(e))?.to_string());
     }
+    // the admin token also travels to the workers: a fanned-out recalibrate
+    // re-authenticates on each shard. Tenant metering does NOT — the router
+    // is the sole metering point, so workers never see --tenant-quota.
+    if let Some(token) = a.get("admin-token") {
+        worker_args.push("--admin-token".to_string());
+        worker_args.push(token.to_string());
+    }
     let ccfg = cluster::ClusterConfig {
         addr: cfg.addr.clone(),
         shards,
@@ -483,6 +494,8 @@ fn cmd_serve_cluster(a: &Args, cfg: &ServiceConfig, shards: usize) -> Result<()>
         warehouse: cfg.warehouse.clone(),
         per_conn_quota: cfg.per_conn_quota,
         max_inflight: cfg.max_inflight,
+        tenant_quota: cfg.tenant_quota,
+        admin_token: cfg.admin_token.clone(),
         deadline: cfg.deadline,
         metrics_out: cfg.metrics_out.clone(),
         metrics_interval: cfg.metrics_interval,

@@ -39,6 +39,15 @@
 //! Numbers ride on the `util::json` f64 value model, so integers are exact
 //! only up to 2^53 — ILP node budgets beyond that (quadrillions of nodes,
 //! far past any practical solve) would round on the wire.
+//!
+//! The [`scan`] submodule is the hot-path companion to this codec: a
+//! byte-level scanner that extracts the request discriminators (`v`,
+//! `cmd`, `net`, `id`) and the candidate cache key without building a
+//! JSON tree, declaring fallback to the full parse on anything outside
+//! its modeled subset. This module stays the source of truth; the
+//! differential suite in `tests/prop_wire_scan.rs` pins their agreement.
+
+pub mod scan;
 
 use super::{
     MapPlan, MapRequest, NetworkSpec, Objective, PlanError, Provenance, Replication, TileSpace,
@@ -579,6 +588,10 @@ pub enum RejectKind {
     /// connection stays open, but the same request will time out again
     /// unless the service is less loaded or reconfigured
     Deadline,
+    /// an admin command (`recalibrate`) arrived without the service's
+    /// `--admin-token` shared secret; the connection stays open — only
+    /// the privileged verb is refused
+    Unauthorized,
 }
 
 impl RejectKind {
@@ -589,6 +602,7 @@ impl RejectKind {
             RejectKind::OverInflight => "over-inflight",
             RejectKind::Internal => "internal",
             RejectKind::Deadline => "deadline",
+            RejectKind::Unauthorized => "unauthorized",
         }
     }
 }
@@ -596,7 +610,7 @@ impl RejectKind {
 /// A typed planning-service rejection: an [`error_frame`] (same `v`,
 /// `line`, `error` fields, so clients that only understand error frames
 /// degrade gracefully) extended with a machine-readable
-/// `"reject":"over-quota"|"over-inflight"|"internal"|"deadline"`
+/// `"reject":"over-quota"|"over-inflight"|"internal"|"deadline"|"unauthorized"`
 /// discriminator. Emitted only by the planning service — the file
 /// endpoint has no admission control, panic containment, or deadlines.
 pub fn reject_frame(line: usize, kind: RejectKind, e: &PlanError) -> Json {
@@ -651,6 +665,13 @@ pub struct StatsSnapshot {
     /// because the owning shard's circuit breaker was open (byte-identical
     /// to a shard answer — the degradation is visible only here)
     pub degraded: u64,
+    /// requests refused by tenant policy: plan requests over the
+    /// `--tenant-quota` per-tenant budget (`"reject":"over-quota"`, the
+    /// budget survives reconnects — unlike the per-connection quota) plus
+    /// `recalibrate` commands refused for a missing or wrong
+    /// `--admin-token` (`"reject":"unauthorized"`); each also counts as
+    /// an error
+    pub tenant_rejects: u64,
     /// nearest-rank p50 of plan *solve* latency, seconds (cache hits and
     /// error frames don't contribute samples)
     pub plan_p50_s: f64,
@@ -678,6 +699,7 @@ fn counters_to_obj(s: &StatsSnapshot) -> JsonObj {
         .set("shard_respawns", s.shard_respawns)
         .set("replayed", s.replayed)
         .set("degraded", s.degraded)
+        .set("tenant_rejects", s.tenant_rejects)
         .set("plan_p50_s", s.plan_p50_s)
         .set("plan_p95_s", s.plan_p95_s);
     o
@@ -700,9 +722,23 @@ fn counters_from_obj(s: &JsonObj) -> Result<StatsSnapshot, PlanError> {
         shard_respawns: get_u64(s, "shard_respawns")?,
         replayed: get_u64(s, "replayed")?,
         degraded: get_u64(s, "degraded")?,
+        tenant_rejects: get_u64(s, "tenant_rejects")?,
         plan_p50_s: get_f64(s, "plan_p50_s")?,
         plan_p95_s: get_f64(s, "plan_p95_s")?,
     })
+}
+
+/// Acknowledgement of a successful `{"v":1,"cmd":"recalibrate"}` admin
+/// command: `{"v":1,"recalibrated":{"cache_entries":N}}` where `N` is
+/// how many LRU plan entries the flush dropped (summed across shards
+/// when a cluster router answers). The tenant ledger is deliberately
+/// untouched — recalibration resets cached *answers*, not spent budgets.
+pub fn recalibrate_frame(flushed: u64) -> Json {
+    let mut inner = JsonObj::new();
+    inner.set("cache_entries", flushed);
+    let mut o = JsonObj::new();
+    o.set("v", WIRE_VERSION).set("recalibrated", inner);
+    Json::Obj(o)
 }
 
 /// Encode a stats snapshot as the v1 `{"v":1,"stats":{...}}` frame.
@@ -998,12 +1034,26 @@ mod tests {
             f.dumps(),
             r#"{"v":1,"line":5,"error":"deadline exceeded: solve passed the 50ms budget","reject":"deadline"}"#
         );
-        // the four tokens stay distinct
+        // the tenant-policy frames: same exact-byte discipline
+        let e = PlanError("tenant 'acme' exceeded its 3-request quota".into());
+        let f = reject_frame(4, RejectKind::OverQuota, &e);
+        assert_eq!(
+            f.dumps(),
+            r#"{"v":1,"line":4,"error":"tenant 'acme' exceeded its 3-request quota","reject":"over-quota"}"#
+        );
+        let e = PlanError("recalibrate requires a valid admin token".into());
+        let f = reject_frame(6, RejectKind::Unauthorized, &e);
+        assert_eq!(
+            f.dumps(),
+            r#"{"v":1,"line":6,"error":"recalibrate requires a valid admin token","reject":"unauthorized"}"#
+        );
+        // the five tokens stay distinct
         let tokens: Vec<&str> = [
             RejectKind::OverQuota,
             RejectKind::OverInflight,
             RejectKind::Internal,
             RejectKind::Deadline,
+            RejectKind::Unauthorized,
         ]
         .iter()
         .map(|k| k.token())
@@ -1012,6 +1062,12 @@ mod tests {
         dedup.sort_unstable();
         dedup.dedup();
         assert_eq!(dedup.len(), tokens.len());
+    }
+
+    #[test]
+    fn recalibrate_frame_is_pinned() {
+        assert_eq!(recalibrate_frame(12).dumps(), r#"{"v":1,"recalibrated":{"cache_entries":12}}"#);
+        assert_eq!(recalibrate_frame(0).dumps(), r#"{"v":1,"recalibrated":{"cache_entries":0}}"#);
     }
 
     #[test]
@@ -1031,6 +1087,7 @@ mod tests {
                 shard_respawns: 1,
                 replayed: 3,
                 degraded: 2,
+                tenant_rejects: 4,
                 plan_p50_s: 0.0125,
                 plan_p95_s: 0.25,
             },
@@ -1109,6 +1166,7 @@ mod tests {
             "serve/warehouse_hits",
             "serve/warehouse_writes",
             "serve/coalesced",
+            "serve/tenant_rejects",
         ] {
             assert!(j.get(absent).is_none(), "{absent} must not be a medians row");
         }
@@ -1132,6 +1190,7 @@ mod tests {
             shard_respawns: 1,
             replayed: 4,
             degraded: 2,
+            tenant_rejects: 3,
             plan_p50_s: 0.0125,
             plan_p95_s: 0.25,
         };

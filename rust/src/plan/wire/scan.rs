@@ -1,0 +1,482 @@
+//! Byte-level lazy scanner for the v1 request line discriminators.
+//!
+//! The serve hot path used to build a full JSON tree per input line just
+//! to learn three things: is this a command frame, which tenant sent it,
+//! and which cache key does it probe. [`scan`] answers all three with a
+//! single forward walk over the raw bytes — no tree, no per-member
+//! allocation beyond the returned id/key strings — and *declares
+//! fallback* ([`Scan::Fallback`]) on anything it does not model exactly:
+//! escape sequences, duplicate top-level keys, a non-string `id`, a `v`
+//! token other than the literal `1`, structural errors, or pathological
+//! nesting. The full parser ([`crate::util::json::parse`] +
+//! [`super::request_from_json`]) remains the single source of truth; the
+//! scanner is only ever a conservative prefilter, pinned by the
+//! differential suite in `tests/prop_wire_scan.rs`.
+//!
+//! Soundness argument ("a hit proves canonical"): the service's plan
+//! cache is keyed exclusively by the canonical id-stripped serialization
+//! produced from a *fully parsed* request. [`ScanRequest::key`] is the
+//! line's own bytes with the top-level `"id"` member spliced out. If
+//! that candidate key equals a cached canonical key, the line *is* the
+//! canonical serialization of the cached request plus an inserted `id`
+//! member — so serving the cached plan with the id restamped is
+//! byte-identical to planning the line from scratch. Any non-canonical
+//! line simply misses and takes the full-parse path; the scanner never
+//! has to normalize whitespace, key order, or number spellings.
+//!
+//! The [`Scan::Command`] verdict deliberately reproduces the legacy
+//! substring sniff (`contains("\"cmd\"") && !contains("\"net\"")`)
+//! rather than improving on it: a line whose bytes contain `"net"` in a
+//! nested position is declared [`Scan::Fallback`] even when the
+//! top-level shape is a clean command, so the scanned service answers
+//! every line byte-identically to the unscanned one.
+
+/// Maximum nesting depth the scanner walks before declaring fallback;
+/// matches no real request (inline nets nest 4 deep) and bounds stack
+/// use against adversarial `[[[[…` lines.
+const MAX_DEPTH: u32 = 128;
+
+/// The scanner's verdict on one raw input line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Scan {
+    /// A command frame: structurally valid JSON object with a top-level
+    /// `cmd` member and no `"net"` bytes anywhere (the legacy sniff's
+    /// exact predicate). The command dispatcher parses the line itself.
+    Command,
+    /// A plan request with extracted tenant id and candidate cache key.
+    Request(ScanRequest),
+    /// Anything else — take the full-parse path. Never wrong, only slow.
+    Fallback,
+}
+
+/// The discriminators extracted from a fast-pathed request line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScanRequest {
+    /// the top-level `id` string, verbatim ("" when absent) — equal to
+    /// the parsed request's id because lines whose id carries escape
+    /// sequences are declared fallback
+    pub id: String,
+    /// the line's object bytes with the `id` member spliced out: equal
+    /// to the canonical cache key iff the line is the canonical
+    /// serialization, so an LRU hit on it proves byte-identity
+    pub key: String,
+}
+
+/// Scan one raw request line without building a JSON tree. Returns
+/// [`Scan::Fallback`] on any shape outside the modeled subset; every
+/// accepted line is structurally valid JSON that the full parser also
+/// accepts, with identical `id`/discriminator views.
+pub fn scan(line: &str) -> Scan {
+    scan_bytes(line.as_bytes()).unwrap_or(Scan::Fallback)
+}
+
+/// `None` = fallback. Split from [`scan`] so `?` can thread rejects.
+fn scan_bytes(b: &[u8]) -> Option<Scan> {
+    let mut c = Cursor { b, i: 0 };
+    c.ws();
+    if c.peek() != Some(b'{') {
+        return None;
+    }
+    let obj_start = c.i;
+    c.i += 1;
+    let mut keys: Vec<(usize, usize)> = Vec::new();
+    let mut v_token: Option<(usize, usize)> = None;
+    let mut has_cmd = false;
+    let mut has_net = false;
+    // (member start, member end, id content range)
+    let mut id_member: Option<(usize, usize, (usize, usize))> = None;
+    c.ws();
+    if c.peek() == Some(b'}') {
+        c.i += 1;
+    } else {
+        loop {
+            c.ws();
+            let mstart = c.i;
+            let (ks, ke) = c.string()?;
+            // duplicate top-level keys would make "first member seen"
+            // diverge from the parser's last-wins view — fall back.
+            // Raw-byte comparison is sound because escapes already fell
+            // back inside `string`.
+            if keys.iter().any(|&(ps, pe)| b.get(ps..pe) == b.get(ks..ke)) {
+                return None;
+            }
+            keys.push((ks, ke));
+            c.ws();
+            if c.peek() != Some(b':') {
+                return None;
+            }
+            c.i += 1;
+            c.ws();
+            let vstart = c.i;
+            if b.get(ks..ke) == Some(b"id") {
+                if c.peek() != Some(b'"') {
+                    return None; // non-string id: not modeled
+                }
+                let content = c.string()?;
+                id_member = Some((mstart, c.i, content));
+            } else {
+                c.value(0)?;
+                match b.get(ks..ke) {
+                    Some(b"v") => v_token = Some((vstart, c.i)),
+                    Some(b"cmd") => has_cmd = true,
+                    Some(b"net") => has_net = true,
+                    _ => {}
+                }
+            }
+            c.ws();
+            match c.peek() {
+                Some(b',') => c.i += 1,
+                Some(b'}') => {
+                    c.i += 1;
+                    break;
+                }
+                _ => return None,
+            }
+        }
+    }
+    let obj_end = c.i;
+    c.ws();
+    if c.i != b.len() {
+        return None; // trailing data after the object
+    }
+    if has_cmd && !has_net {
+        // legacy-sniff parity: `"net"` bytes in a nested key or string
+        // value would have routed this line to the request path
+        if contains(b, b"\"net\"") {
+            return None;
+        }
+        return Some(Scan::Command);
+    }
+    if has_net {
+        let (vs, ve) = v_token?;
+        if b.get(vs..ve) != Some(b"1") {
+            return None; // only the canonical version spelling fast-paths
+        }
+        let (id, key) = match id_member {
+            None => (String::new(), utf8(b, obj_start, obj_end)?.to_string()),
+            Some((ms, me, (cs, ce))) => {
+                let id = utf8(b, cs, ce)?.to_string();
+                let (cut_s, cut_e) = splice_range(b, obj_start, obj_end, ms, me);
+                let mut key = String::with_capacity(obj_end - obj_start - (cut_e - cut_s));
+                key.push_str(utf8(b, obj_start, cut_s)?);
+                key.push_str(utf8(b, cut_e, obj_end)?);
+                (id, key)
+            }
+        };
+        return Some(Scan::Request(ScanRequest { id, key }));
+    }
+    None
+}
+
+/// The byte range to cut when removing the `id` member `[ms, me)` from
+/// the top-level object `[obj_start, obj_end)`: the member plus its
+/// following comma (and intervening whitespace) when one exists, else
+/// the member plus its preceding comma, else the member alone — exactly
+/// inverse to inserting a member into a canonical serialization.
+fn splice_range(b: &[u8], obj_start: usize, obj_end: usize, ms: usize, me: usize) -> (usize, usize) {
+    let mut j = me;
+    while j + 1 < obj_end && b.get(j).is_some_and(|c| is_ws(*c)) {
+        j += 1;
+    }
+    if b.get(j) == Some(&b',') {
+        return (ms, j + 1);
+    }
+    let mut k = ms;
+    while k > obj_start + 1 && b.get(k - 1).is_some_and(|c| is_ws(*c)) {
+        k -= 1;
+    }
+    if k > obj_start && b.get(k - 1) == Some(&b',') {
+        return (k - 1, me);
+    }
+    (ms, me)
+}
+
+fn is_ws(c: u8) -> bool {
+    matches!(c, b' ' | b'\t' | b'\n' | b'\r')
+}
+
+/// Naive substring search (the line is one bounded request).
+fn contains(haystack: &[u8], needle: &[u8]) -> bool {
+    haystack.windows(needle.len()).any(|w| w == needle)
+}
+
+/// Checked UTF-8 view of `b[s..e)`; boundaries are always ASCII quotes
+/// or braces, so this only fails on ranges that cannot occur.
+fn utf8(b: &[u8], s: usize, e: usize) -> Option<&str> {
+    std::str::from_utf8(b.get(s..e)?).ok()
+}
+
+/// Forward-only byte walker; every method returns `None` to declare
+/// fallback rather than erroring.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Cursor<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn ws(&mut self) {
+        while self.peek().is_some_and(is_ws) {
+            self.i += 1;
+        }
+    }
+
+    /// Walk a string literal, returning its content byte range. Any
+    /// escape sequence (the scanner does not model them) and any
+    /// unterminated string declare fallback. Non-ASCII UTF-8 bytes are
+    /// all ≥ 0x80 and can never alias `"` or `\`, so a byte walk is
+    /// exact.
+    fn string(&mut self) -> Option<(usize, usize)> {
+        if self.peek() != Some(b'"') {
+            return None;
+        }
+        self.i += 1;
+        let start = self.i;
+        loop {
+            match self.peek()? {
+                b'"' => {
+                    let end = self.i;
+                    self.i += 1;
+                    return Some((start, end));
+                }
+                b'\\' => return None,
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    /// Walk a number matching `-?digits(.digits)?([eE][+-]?digits)?` —
+    /// strictly tighter than the full parser's tokenizer, so every
+    /// accepted spelling is one `f64::from_str` also accepts.
+    fn number(&mut self) -> Option<()> {
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        self.digits()?;
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            self.digits()?;
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            self.digits()?;
+        }
+        Some(())
+    }
+
+    fn digits(&mut self) -> Option<()> {
+        if !self.peek().is_some_and(|c| c.is_ascii_digit()) {
+            return None;
+        }
+        while self.peek().is_some_and(|c| c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        Some(())
+    }
+
+    fn lit(&mut self, word: &[u8]) -> Option<()> {
+        if self.b.get(self.i..self.i + word.len()) == Some(word) {
+            self.i += word.len();
+            Some(())
+        } else {
+            None
+        }
+    }
+
+    /// Walk any JSON value; `depth` guards recursion.
+    fn value(&mut self, depth: u32) -> Option<()> {
+        if depth > MAX_DEPTH {
+            return None;
+        }
+        match self.peek()? {
+            b'{' => self.object(depth),
+            b'[' => self.array(depth),
+            b'"' => self.string().map(|_| ()),
+            b't' => self.lit(b"true"),
+            b'f' => self.lit(b"false"),
+            b'n' => self.lit(b"null"),
+            b'-' | b'0'..=b'9' => self.number(),
+            _ => None,
+        }
+    }
+
+    fn object(&mut self, depth: u32) -> Option<()> {
+        self.i += 1; // past '{'
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Some(());
+        }
+        loop {
+            self.ws();
+            self.string()?;
+            self.ws();
+            if self.peek() != Some(b':') {
+                return None;
+            }
+            self.i += 1;
+            self.ws();
+            self.value(depth + 1)?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Some(());
+                }
+                _ => return None,
+            }
+        }
+    }
+
+    fn array(&mut self, depth: u32) -> Option<()> {
+        self.i += 1; // past '['
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Some(());
+        }
+        loop {
+            self.ws();
+            self.value(depth + 1)?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Some(());
+                }
+                _ => return None,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(line: &str) -> ScanRequest {
+        match scan(line) {
+            Scan::Request(r) => r,
+            other => panic!("expected Request for {line:?}, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn canonical_request_without_id_keys_to_itself() {
+        let line = r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"fixed":[256,256]}}"#;
+        let r = req(line);
+        assert_eq!(r.id, "");
+        assert_eq!(r.key, line);
+    }
+
+    #[test]
+    fn id_member_is_spliced_with_its_following_comma() {
+        let line = r#"{"v":1,"id":"t-9","net":{"zoo":"lenet"},"tiles":{"fixed":[256,256]}}"#;
+        let r = req(line);
+        assert_eq!(r.id, "t-9");
+        assert_eq!(r.key, r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"fixed":[256,256]}}"#);
+    }
+
+    #[test]
+    fn trailing_id_member_takes_its_preceding_comma() {
+        let r = req(r#"{"v":1,"net":{"zoo":"lenet"},"id":"z"}"#);
+        assert_eq!(r.id, "z");
+        assert_eq!(r.key, r#"{"v":1,"net":{"zoo":"lenet"}}"#);
+    }
+
+    #[test]
+    fn whitespace_around_tokens_is_accepted_but_keys_stay_verbatim() {
+        let r = req("{ \"v\" : 1 , \"net\" : { } }");
+        assert_eq!(r.id, "");
+        // the key is the line's own (non-canonical) bytes: it will miss
+        // the cache and take the full-parse path, never mis-hit
+        assert_eq!(r.key, "{ \"v\" : 1 , \"net\" : { } }");
+    }
+
+    #[test]
+    fn command_verdict_matches_the_legacy_sniff() {
+        assert_eq!(scan(r#"{"v":1,"cmd":"stats"}"#), Scan::Command);
+        // nested "net" bytes: the legacy sniff routed these to the
+        // request path, so the scanner must not call them commands
+        assert_eq!(scan(r#"{"v":1,"cmd":"stats","pad":"net"}"#), Scan::Fallback);
+        // cmd alongside a real net member is request-shaped
+        assert!(matches!(
+            scan(r#"{"v":1,"cmd":"stats","net":{"zoo":"lenet"}}"#),
+            Scan::Request(_)
+        ));
+    }
+
+    #[test]
+    fn escapes_duplicates_and_non_scalars_fall_back() {
+        for line in [
+            // escape anywhere in any string
+            r#"{"v":1,"id":"a\nb","net":{"zoo":"lenet"}}"#,
+            r#"{"v":1,"net":{"zoo":"len\u0065t"}}"#,
+            // duplicate top-level key
+            r#"{"v":1,"v":1,"net":{"zoo":"lenet"}}"#,
+            r#"{"v":1,"id":"a","id":"b","net":{"zoo":"lenet"}}"#,
+            // non-string id
+            r#"{"v":1,"id":7,"net":{"zoo":"lenet"}}"#,
+            // non-canonical version token
+            r#"{"v":1.0,"net":{"zoo":"lenet"}}"#,
+            r#"{"v":2,"net":{"zoo":"lenet"}}"#,
+            r#"{"net":{"zoo":"lenet"}}"#,
+            // structural rejects
+            r#"{"v":1,"net":{"zoo":"lenet"}"#,
+            r#"{"v":1,"net":{"zoo":"lenet"}} extra"#,
+            r#"{"v":1,"net":{"zoo":"lenet"},}"#,
+            r#"[1,2,3]"#,
+            "",
+            "not json",
+        ] {
+            assert_eq!(scan(line), Scan::Fallback, "line {line:?}");
+        }
+    }
+
+    #[test]
+    fn accepted_lines_also_parse_under_the_full_parser() {
+        for line in [
+            r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"fixed":[256,256]}}"#,
+            r#"{"v":1,"id":"x","net":{"zoo":"bert"},"threads":2}"#,
+            "{ \"v\"\t:\t1 , \"net\" : [true,false,null,-1.5e3] }",
+            r#"{"v":1,"cmd":"metrics"}"#,
+        ] {
+            assert_ne!(scan(line), Scan::Fallback, "line {line:?}");
+            assert!(crate::util::json::parse(line).is_ok(), "line {line:?}");
+        }
+    }
+
+    #[test]
+    fn deep_nesting_falls_back_instead_of_recursing_away() {
+        let mut line = String::from(r#"{"v":1,"net":"#);
+        for _ in 0..200 {
+            line.push('[');
+        }
+        for _ in 0..200 {
+            line.push(']');
+        }
+        line.push('}');
+        assert_eq!(scan(&line), Scan::Fallback);
+    }
+
+    #[test]
+    fn spliced_key_matches_the_codec_canonical_key() {
+        // the candidate key of a canonical line with id equals the
+        // canonical serialization without id — the cache-hit soundness
+        // contract, checked at scale by tests/prop_wire_scan.rs
+        let anon = crate::plan::MapRequest::zoo("lenet").tile(256, 256);
+        let with_id = anon.clone().id("tenant-1");
+        let line = with_id.to_json().dumps();
+        let r = req(&line);
+        assert_eq!(r.id, "tenant-1");
+        assert_eq!(r.key, anon.to_json().dumps());
+    }
+}

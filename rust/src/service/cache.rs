@@ -12,6 +12,16 @@
 //! tenants asking the same design question under different ids share one
 //! entry, and the hit path re-stamps the incoming id before serializing.
 //!
+//! Every key in this cache is such a canonical serialization — nothing
+//! else ever inserts. The byte-level wire fast path
+//! ([`crate::plan::wire::scan`]) leans on that exclusivity: it probes
+//! with a candidate key spliced straight out of the raw line, and a hit
+//! *proves* the line was canonical, so the cached plan answers it
+//! byte-identically to a full parse. Insert/promote take the key as
+//! `&str` and copy it only when an entry actually lands, so the hit
+//! path (and the reader handing over an already-computed key) never
+//! clones a key just to look one up.
+//!
 //! Eviction policy (per [`PlanCache::with_policy`]):
 //!
 //! * **LRU** within a fixed entry capacity — repeated design questions
@@ -174,7 +184,7 @@ impl PlanCache {
     /// entry and byte bounds hold. Replacing an existing key re-charges
     /// its bytes; a plan too large for `max_bytes` on its own simply
     /// doesn't stay resident (bounded memory wins over hit rate).
-    pub fn insert(&self, key: String, plan: Arc<MapPlan>) {
+    pub fn insert(&self, key: &str, plan: Arc<MapPlan>) {
         if self.capacity == 0 {
             return; // don't pay the serialization below just to drop it
         }
@@ -185,7 +195,7 @@ impl PlanCache {
     /// [`PlanCache::insert`] with the plan's serialized length already in
     /// hand — the service serializes the anonymized plan anyway, so the
     /// accounting charge costs no second serialization.
-    pub fn insert_serialized(&self, key: String, plan: Arc<MapPlan>, plan_len: usize) {
+    pub fn insert_serialized(&self, key: &str, plan: Arc<MapPlan>, plan_len: usize) {
         self.insert_at(key, plan, plan_len, Instant::now())
     }
 
@@ -196,17 +206,17 @@ impl PlanCache {
     /// the entry's lifetime runs from the promotion, not from whenever
     /// the plan was originally solved — so it goes through the exact
     /// insert path rather than touching the maps directly.
-    pub fn promote_serialized(&self, key: String, plan: Arc<MapPlan>, plan_len: usize) {
+    pub fn promote_serialized(&self, key: &str, plan: Arc<MapPlan>, plan_len: usize) {
         self.promote_at(key, plan, plan_len, Instant::now())
     }
 
     /// Clock-injection point for [`PlanCache::promote_serialized`] — the
     /// TTL-schedule unit test drives this with explicit instants.
-    fn promote_at(&self, key: String, plan: Arc<MapPlan>, plan_len: usize, now: Instant) {
+    fn promote_at(&self, key: &str, plan: Arc<MapPlan>, plan_len: usize, now: Instant) {
         self.insert_at(key, plan, plan_len, now)
     }
 
-    fn insert_at(&self, key: String, plan: Arc<MapPlan>, plan_len: usize, now: Instant) {
+    fn insert_at(&self, key: &str, plan: Arc<MapPlan>, plan_len: usize, now: Instant) {
         if self.capacity == 0 {
             return;
         }
@@ -233,8 +243,11 @@ impl PlanCache {
         inner.tick += 1;
         let tick = inner.tick;
         let entry = Entry { plan, bytes, inserted: now, last_used: tick };
-        inner.by_tick.insert(tick, key.clone());
-        if let Some(old) = inner.map.insert(key, entry) {
+        // the only points where the borrowed key becomes owned — an
+        // entry that actually lands pays its two copies (map + index);
+        // callers that merely probe or replace never clone
+        inner.by_tick.insert(tick, key.to_string());
+        if let Some(old) = inner.map.insert(key.to_string(), entry) {
             inner.by_tick.remove(&old.last_used);
             inner.bytes -= old.bytes;
         }
@@ -289,6 +302,21 @@ impl PlanCache {
     pub fn expired_total(&self) -> u64 {
         self.lock().expired
     }
+
+    /// Drop every entry, returning how many were flushed — the
+    /// `recalibrate` admin verb (pricing inputs changed, so every cached
+    /// answer is suspect). The byte gauge falls to zero with the map;
+    /// the TTL-expiry counter is untouched (a flush is not an expiry)
+    /// and the logical clock keeps running, so recency ordering stays
+    /// correct across the flush.
+    pub fn clear(&self) -> usize {
+        let mut inner = self.lock();
+        let flushed = inner.map.len();
+        inner.map.clear();
+        inner.by_tick.clear();
+        inner.bytes = 0;
+        flushed
+    }
 }
 
 #[cfg(test)]
@@ -328,12 +356,12 @@ mod tests {
     fn eviction_is_lru_not_fifo() {
         let cache = PlanCache::new(2);
         let (a, b, c) = (req(64), req(128), req(256));
-        cache.insert(PlanCache::key(&a), plan_for(&a));
-        cache.insert(PlanCache::key(&b), plan_for(&b));
+        cache.insert(&PlanCache::key(&a), plan_for(&a));
+        cache.insert(&PlanCache::key(&b), plan_for(&b));
         // touch the older entry: under FIFO it would still be the victim,
         // under LRU the untouched one is
         assert!(cache.get(&PlanCache::key(&a)).is_some());
-        cache.insert(PlanCache::key(&c), plan_for(&c));
+        cache.insert(&PlanCache::key(&c), plan_for(&c));
         assert_eq!(cache.len(), 2);
         assert!(cache.get(&PlanCache::key(&a)).is_some(), "recently used entry evicted");
         assert!(cache.get(&PlanCache::key(&b)).is_none(), "LRU entry survived");
@@ -344,9 +372,9 @@ mod tests {
     fn replacing_a_key_does_not_consume_capacity() {
         let cache = PlanCache::new(2);
         let (a, b) = (req(64), req(128));
-        cache.insert(PlanCache::key(&a), plan_for(&a));
-        cache.insert(PlanCache::key(&a), plan_for(&a));
-        cache.insert(PlanCache::key(&b), plan_for(&b));
+        cache.insert(&PlanCache::key(&a), plan_for(&a));
+        cache.insert(&PlanCache::key(&a), plan_for(&a));
+        cache.insert(&PlanCache::key(&b), plan_for(&b));
         assert_eq!(cache.len(), 2);
         assert!(cache.get(&PlanCache::key(&a)).is_some());
     }
@@ -355,7 +383,7 @@ mod tests {
     fn zero_capacity_disables_caching() {
         let cache = PlanCache::new(0);
         let a = req(64);
-        cache.insert(PlanCache::key(&a), plan_for(&a));
+        cache.insert(&PlanCache::key(&a), plan_for(&a));
         assert!(cache.get(&PlanCache::key(&a)).is_none());
         assert!(cache.is_empty());
         assert!(!cache.enabled());
@@ -370,7 +398,7 @@ mod tests {
         let key = PlanCache::key(&a);
         let (plan, len) = sized_plan(&a);
         let t0 = Instant::now();
-        cache.insert_at(key.clone(), plan.clone(), len, t0);
+        cache.insert_at(&key, plan.clone(), len, t0);
         // young entry hits; the hit does NOT extend the lifetime (TTL is
         // from insert, so a hot entry still refreshes after the TTL)
         assert!(cache.get_at(&key, t0 + ttl / 2).is_some());
@@ -378,7 +406,7 @@ mod tests {
         assert_eq!(cache.len(), 0);
         assert_eq!(cache.expired_total(), 1);
         // re-inserting after expiry restarts the clock
-        cache.insert_at(key.clone(), plan, len, t0 + ttl);
+        cache.insert_at(&key, plan, len, t0 + ttl);
         assert!(cache.get_at(&key, t0 + ttl + ttl / 2).is_some());
     }
 
@@ -393,8 +421,8 @@ mod tests {
         let (plan_a, len_a) = sized_plan(&a);
         let (plan_b, len_b) = sized_plan(&b);
         let t0 = Instant::now();
-        cache.insert_at(PlanCache::key(&a), plan_a, len_a, t0);
-        cache.insert_at(PlanCache::key(&b), plan_b, len_b, t0 + ttl);
+        cache.insert_at(&PlanCache::key(&a), plan_a, len_a, t0);
+        cache.insert_at(&PlanCache::key(&b), plan_b, len_b, t0 + ttl);
         assert_eq!(cache.len(), 1, "expired entry must be purged by the insert");
         assert_eq!(cache.expired_total(), 1);
         assert_eq!(cache.bytes(), PlanCache::key(&b).len() + len_b);
@@ -408,7 +436,7 @@ mod tests {
         let key = PlanCache::key(&a);
         let (plan, len) = sized_plan(&a);
         let t0 = Instant::now();
-        cache.insert_at(key.clone(), plan, len, t0);
+        cache.insert_at(&key, plan, len, t0);
         assert!(cache.get_at(&key, t0 + Duration::from_secs(1 << 20)).is_some());
         assert_eq!(cache.expired_total(), 0);
     }
@@ -418,16 +446,16 @@ mod tests {
         let cache = PlanCache::new(4);
         let (a, b) = (req(64), req(128));
         assert_eq!(cache.bytes(), 0);
-        cache.insert(PlanCache::key(&a), plan_for(&a));
+        cache.insert(&PlanCache::key(&a), plan_for(&a));
         let after_one = cache.bytes();
         assert!(after_one > PlanCache::key(&a).len(), "charge must include the plan body");
-        cache.insert(PlanCache::key(&b), plan_for(&b));
+        cache.insert(&PlanCache::key(&b), plan_for(&b));
         assert!(cache.bytes() > after_one);
         // replacing re-charges instead of double-counting
-        cache.insert(PlanCache::key(&a), plan_for(&a));
+        cache.insert(&PlanCache::key(&a), plan_for(&a));
         assert_eq!(cache.len(), 2);
         let two = cache.bytes();
-        cache.insert(PlanCache::key(&a), plan_for(&a));
+        cache.insert(&PlanCache::key(&a), plan_for(&a));
         assert_eq!(cache.bytes(), two);
     }
 
@@ -494,7 +522,7 @@ mod tests {
                 let key = format!("k{}", rng.below(12));
                 if rng.chance(0.5) {
                     let bytes = 50 + rng.below(50) as usize;
-                    cache.insert_at(key.clone(), Arc::clone(&plan), bytes, t0);
+                    cache.insert_at(&key, Arc::clone(&plan), bytes, t0);
                     model.insert(&key, bytes);
                 } else {
                     let got = cache.get_at(&key, t0).is_some();
@@ -528,14 +556,14 @@ mod tests {
 
         // solved insert: record its byte charge, then clear the cache by
         // letting it expire
-        cache.insert_at(key.clone(), Arc::clone(&plan), len, t0);
+        cache.insert_at(&key, Arc::clone(&plan), len, t0);
         let solved_bytes = cache.bytes();
         assert!(cache.get_at(&key, t0 + ttl).is_none());
         assert_eq!(cache.len(), 0);
 
         // warehouse promotion at t1: identical charge, fresh TTL epoch
         let t1 = t0 + ttl + ttl;
-        cache.promote_at(key.clone(), plan, len, t1);
+        cache.promote_at(&key, plan, len, t1);
         assert_eq!(cache.bytes(), solved_bytes, "promotion must charge key+plan bytes");
         assert!(cache.get_at(&key, t1 + ttl / 2).is_some(), "young promoted entry must hit");
         assert!(
@@ -552,10 +580,56 @@ mod tests {
         // budget fits roughly one entry of this shape
         let cache = PlanCache::with_policy(16, None, one_entry + one_entry / 2);
         let b = req(128);
-        cache.insert(PlanCache::key(&a), plan_for(&a));
-        cache.insert(PlanCache::key(&b), plan_for(&b));
+        cache.insert(&PlanCache::key(&a), plan_for(&a));
+        cache.insert(&PlanCache::key(&b), plan_for(&b));
         assert_eq!(cache.len(), 1, "byte budget must evict despite free entry slots");
         assert!(cache.get(&PlanCache::key(&b)).is_some(), "newest entry must survive");
         assert!(cache.bytes() <= one_entry + one_entry / 2);
+    }
+
+    #[test]
+    fn insert_accepts_borrowed_keys_without_a_caller_side_clone() {
+        // pins the &str-key API: the wire fast path hands the cache a key
+        // sliced out of a larger buffer (the scanner's candidate key, or
+        // the reader's already-computed canonical key) and must never be
+        // forced to clone it just to probe or insert. Reverting any
+        // signature to `String` breaks this test at compile time.
+        let cache = PlanCache::new(4);
+        let a = req(64);
+        let owned = PlanCache::key(&a);
+        let buffer = format!("{owned}\n");
+        let borrowed: &str = buffer.trim_end();
+        let (plan, len) = sized_plan(&a);
+        cache.insert_serialized(borrowed, Arc::clone(&plan), len);
+        assert!(cache.get(borrowed).is_some());
+        cache.promote_serialized(borrowed, plan, len);
+        assert_eq!(cache.len(), 1, "same borrowed key must replace, not duplicate");
+        assert_eq!(cache.bytes(), owned.len() + len);
+    }
+
+    #[test]
+    fn clear_flushes_everything_but_preserves_history_counters() {
+        let ttl = Duration::from_secs(60);
+        let cache = PlanCache::with_policy(8, Some(ttl), 0);
+        let (a, b) = (req(64), req(128));
+        let key_a = PlanCache::key(&a);
+        let (plan_a, len_a) = sized_plan(&a);
+        let (plan_b, len_b) = sized_plan(&b);
+        let t0 = Instant::now();
+        cache.insert_at(&key_a, Arc::clone(&plan_a), len_a, t0);
+        // expire one entry first so the expiry counter has history
+        assert!(cache.get_at(&key_a, t0 + ttl).is_none());
+        assert_eq!(cache.expired_total(), 1);
+        cache.insert_at(&key_a, plan_a, len_a, t0 + ttl);
+        cache.insert_at(&PlanCache::key(&b), plan_b, len_b, t0 + ttl);
+        assert_eq!(cache.clear(), 2, "clear must report how many entries it flushed");
+        assert!(cache.is_empty());
+        assert_eq!(cache.bytes(), 0, "the byte gauge must fall with the map");
+        assert_eq!(cache.expired_total(), 1, "a flush is not an expiry");
+        assert_eq!(cache.clear(), 0, "a second flush finds nothing");
+        // the cache stays usable after a flush
+        let (plan_a2, len_a2) = sized_plan(&a);
+        cache.insert_at(&key_a, plan_a2, len_a2, t0 + ttl);
+        assert!(cache.get_at(&key_a, t0 + ttl).is_some());
     }
 }

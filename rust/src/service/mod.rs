@@ -60,6 +60,27 @@
 //!   instead of deepening the backlog. In-band commands are exempt from
 //!   the cap (a saturated service must stay observable), and in-quota
 //!   connections are byte-unaffected either way;
+//! * **per-tenant accounting** (`--tenant-quota`): request budgets keyed
+//!   by the request `id` — the tenant token on this wire — in a ledger
+//!   ([`TenantLedger`]) that survives reconnects, closing the re-dial
+//!   loophole in the per-connection quota. An over-budget tenant's
+//!   request is answered with the typed `over-quota` frame — the
+//!   connection stays open, other tenants are byte-unaffected — and
+//!   counted by the `tenant_rejects` counter;
+//! * a **byte-level wire fast path** ([`wire::scan`]): the reader
+//!   classifies every line with one lazy byte scan — no JSON tree — and
+//!   a cache hit under the scanner's candidate key is answered without
+//!   ever parsing the line. The scanner declares `Fallback` on any
+//!   ambiguity (escapes, duplicate keys, non-scalar discriminators),
+//!   which takes the historical full-parse path, so responses stay
+//!   byte-identical to [`crate::plan::serve_jsonl`] — an equivalence the
+//!   differential fuzz suite (`tests/prop_wire_scan.rs`) pins;
+//! * the **in-band `{"v":1,"cmd":"recalibrate"}` admin verb**: flushes
+//!   the plan LRU (for when pricing inputs change and cached answers go
+//!   stale) behind a shared-secret token (`--admin-token`); a missing or
+//!   wrong token answers the typed `"reject":"unauthorized"` frame, and
+//!   a service started without a token treats every attempt as
+//!   unauthorized;
 //! * **observability**: an in-band `{"v":1,"cmd":"metrics"}` request
 //!   answered with the [`wire::metrics_frame`] (the stats counters plus
 //!   inflight/rejection/queue/cache gauges, one shared serializer so
@@ -70,9 +91,11 @@
 mod cache;
 pub(crate) mod conn;
 mod singleflight;
+mod tenant;
 
 pub use cache::PlanCache;
 pub use singleflight::{Role, SingleFlight};
+pub use tenant::TenantLedger;
 
 use crate::plan::{self, wire, PlanError};
 use crate::store::{LoadReport, Warehouse, WarehouseConfig};
@@ -138,6 +161,16 @@ pub struct ServiceConfig {
     /// requests one connection may submit before the service answers with
     /// the typed `over-quota` reject frame and closes it (0 = unlimited)
     pub per_conn_quota: usize,
+    /// requests one tenant — the request `id` field, which doubles as
+    /// the tenant token on this wire — may submit across all its
+    /// connections for the life of the process (0 = unmetered). Past it
+    /// the tenant's requests are answered with the typed `over-quota`
+    /// frame (the connection stays open) and counted by
+    /// `tenant_rejects`; anonymous requests (empty id) are never metered
+    pub tenant_quota: u64,
+    /// shared secret for the in-band `recalibrate` admin verb (None =
+    /// the verb always answers the typed `unauthorized` reject)
+    pub admin_token: Option<String>,
     /// service-wide cap on admitted requests — queued plus being planned;
     /// past it new requests are shed with the typed `over-inflight`
     /// reject frame instead of queueing (0 = unlimited)
@@ -172,6 +205,8 @@ impl Default for ServiceConfig {
             cache_ttl: None,
             cache_max_bytes: 0,
             per_conn_quota: 0,
+            tenant_quota: 0,
+            admin_token: None,
             max_inflight: 0,
             metrics_out: None,
             metrics_interval: Duration::from_secs(10),
@@ -197,6 +232,12 @@ struct Job {
     /// and undecodable lines (the worker re-parses those and answers with
     /// the same error frames serve_jsonl would).
     parsed: Option<ParsedReq>,
+    /// the reader's byte-scan of `text` ([`wire::scan`]) when the line
+    /// was fast-pathed without a JSON tree: the flight this job leads is
+    /// keyed by `scanned.key`, and the worker probes the LRU under that
+    /// key before parsing anything — a miss falls back to the full
+    /// parse. Mutually exclusive with `parsed`.
+    scanned: Option<wire::scan::ScanRequest>,
 }
 
 /// A request the connection reader already decoded — every decodable
@@ -241,6 +282,7 @@ struct StatsInner {
     warehouse_hits: u64,
     warehouse_writes: u64,
     coalesced: u64,
+    tenant_rejects: u64,
     latencies: VecDeque<f64>,
 }
 
@@ -259,6 +301,7 @@ impl StatsInner {
             warehouse_hits: 0,
             warehouse_writes: 0,
             coalesced: 0,
+            tenant_rejects: 0,
             latencies: VecDeque::new(),
         }
     }
@@ -279,6 +322,12 @@ struct Shared {
     max_inflight: usize,
     /// per-connection request quota copied out of the config (0 = none)
     per_conn_quota: usize,
+    /// per-tenant request budgets keyed by the request `id`; survives
+    /// reconnects (that is its whole point — see [`TenantLedger`])
+    tenants: TenantLedger,
+    /// shared secret the `recalibrate` admin verb must present (None =
+    /// every attempt answers the typed `unauthorized` reject)
+    admin_token: Option<String>,
     /// wall-clock budget armed per solve (None = unbounded)
     deadline: Option<Duration>,
     /// the persistent second cache tier (None = memory-only service)
@@ -333,6 +382,7 @@ impl Shared {
             shard_respawns: 0,
             replayed: 0,
             degraded: 0,
+            tenant_rejects: s.tenant_rejects,
             plan_p50_s: percentile_nearest_rank(&lat, 0.50),
             plan_p95_s: percentile_nearest_rank(&lat, 0.95),
         }
@@ -371,7 +421,20 @@ impl Shared {
             wire::RejectKind::OverInflight => s.rejected_over_inflight += 1,
             wire::RejectKind::Internal => s.rejected_internal += 1,
             wire::RejectKind::Deadline => s.timeouts += 1,
+            wire::RejectKind::Unauthorized => s.tenant_rejects += 1,
         }
+    }
+
+    /// Count one tenant-budget refusal. On the wire it is the same typed
+    /// `over-quota` frame the per-connection quota uses (one vocabulary
+    /// for "you asked for more than your share"), but it is counted by
+    /// `tenant_rejects` — not `rejected_over_quota`, which meters
+    /// connections — so operators can tell re-dialing tenants from
+    /// chatty sockets.
+    fn note_tenant_reject(&self) {
+        let mut s = self.lock_stats();
+        s.errors += 1;
+        s.tenant_rejects += 1;
     }
 }
 
@@ -452,6 +515,8 @@ impl Service {
                 inflight: AtomicUsize::new(0),
                 max_inflight: cfg.max_inflight,
                 per_conn_quota: cfg.per_conn_quota,
+                tenants: TenantLedger::new(cfg.tenant_quota),
+                admin_token: cfg.admin_token.clone(),
                 deadline: cfg.deadline,
                 wh_queue: warehouse.as_ref().map(|_| Queue::bounded(WAREHOUSE_QUEUE)),
                 warehouse,
@@ -510,10 +575,18 @@ impl Service {
                         // a panicking leader still owes its parked
                         // followers: each gets the same typed reject with
                         // its own line number (counted like any internal
-                        // reject — `panics` counts the one real panic)
+                        // reject — `panics` counts the one real panic).
+                        // Scanned jobs lead flights keyed by the
+                        // scanner's candidate key, parsed jobs by the
+                        // canonical key — settle whichever was joined.
+                        let flight_key = job
+                            .parsed
+                            .as_ref()
+                            .map(|p| p.key.as_str())
+                            .or_else(|| job.scanned.as_ref().map(|s| s.key.as_str()));
                         settle_flight_error(
                             &sh,
-                            job.parsed.as_ref().map(|p| p.key.as_str()),
+                            flight_key,
                             Some(wire::RejectKind::Internal),
                             &e,
                         );
@@ -808,18 +881,27 @@ fn read_conn(shared: &Shared, stream: TcpStream, conn: Arc<Conn>) {
             drain_discard(&|| shared.is_shutdown(), lines.reader_mut());
             return;
         }
-        // service-wide admission: reserve an in-flight slot before
-        // queueing. At the cap the request is shed with the typed
-        // over-inflight frame — transient, so the connection stays open
-        // and the client may retry — instead of deepening the backlog.
-        // In-band commands (`"cmd"` without `"net"`, recognized here by a
-        // cheap substring sniff — the real parse happens in the worker)
-        // are exempt: stats/metrics must stay answerable exactly when the
-        // service is saturated, which is when an operator asks. A false
+        // One lazy byte scan ([`wire::scan`]) classifies the line —
+        // in-band command, fast-pathable request, or ambiguous — without
+        // building a JSON tree. Commands are exempt from the in-flight
+        // cap below: stats/metrics must stay answerable exactly when the
+        // service is saturated, which is when an operator asks. The
+        // scanner's `Command` verdict holds exactly when the historical
+        // substring sniff (`"cmd"` present, `"net"` absent) would — it
+        // declares `Fallback` whenever the two could diverge — and on
+        // `Fallback` the sniff itself still decides, so admission stays
+        // byte-identical to the pre-scanner service. A sniff false
         // negative (e.g. `"net"` inside a string value) just falls back
         // to normal admission; a false positive admits one line that the
         // worker answers with a cheap error frame.
-        let looks_like_cmd = text.contains("\"cmd\"") && !text.contains("\"net\"");
+        let scanned = wire::scan::scan(text);
+        let looks_like_cmd = match &scanned {
+            wire::scan::Scan::Command => true,
+            wire::scan::Scan::Request(_) => false,
+            wire::scan::Scan::Fallback => {
+                text.contains("\"cmd\"") && !text.contains("\"net\"")
+            }
+        };
         let admitted = shared.inflight.fetch_add(1, Ordering::SeqCst);
         if shared.max_inflight > 0 && admitted >= shared.max_inflight && !looks_like_cmd {
             shared.inflight.fetch_sub(1, Ordering::SeqCst);
@@ -835,41 +917,82 @@ fn read_conn(shared: &Shared, stream: TcpStream, conn: Arc<Conn>) {
             seq += 1;
             continue;
         }
-        // Decode the request here in the reader — the worker reuses the
-        // decoded form — so identical canonical requests can coalesce
-        // before they cost a queue slot. The first request for a key
-        // leads (it proceeds to the worker pool); every later one
-        // arriving while that flight is open parks as a passive delivery
-        // record: it keeps the admission slot just reserved (it is real
-        // in-flight work) but never enqueues, so a thundering herd costs
-        // one solve even on a one-worker service, and the leader's
-        // completion answers everyone. Lines that fail to decode never
-        // join a flight — the worker re-parses them and answers with the
-        // same error frames serve_jsonl would. Coalescing happens after
-        // admission, so quota/inflight behavior is byte-unchanged.
+        // Meter and coalesce per verdict. A scanned request skips the
+        // JSON tree entirely: its tenant charge uses the scanned id and
+        // its flight is keyed by the scanner's candidate key (an LRU hit
+        // under that key proves it equals the canonical key; a miss
+        // falls back in the worker, and the flight still settles under
+        // what was joined here). An ambiguous line takes the historical
+        // path — one full parse, reused by the worker — so identical
+        // canonical requests can coalesce before they cost a queue slot.
+        // The first request for a key leads (it proceeds to the worker
+        // pool); every later one arriving while that flight is open
+        // parks as a passive delivery record: it keeps the admission
+        // slot just reserved (it is real in-flight work) but never
+        // enqueues, so a thundering herd costs one solve even on a
+        // one-worker service, and the leader's completion answers
+        // everyone. Lines that fail to decode never join a flight (the
+        // worker re-parses them and answers with the same error frames
+        // serve_jsonl would) and are never tenant-metered — they carry
+        // no trustworthy identity. Coalescing happens after admission
+        // and metering, so quota/inflight behavior is byte-unchanged
+        // and followers spend tenant budget like the requests they are.
         let mut parsed = None;
-        if !looks_like_cmd {
-            if let Ok(j) = crate::util::json::parse(text) {
-                if !(j.get("cmd").is_some() && j.get("net").is_none()) {
-                    if let Ok(req) = plan::MapRequest::from_json(&j) {
-                        let key = PlanCache::key(&req);
-                        let role = shared.flights.join(&key, || Waiter {
-                            conn: Arc::clone(&conn),
-                            seq,
-                            line_no,
-                            id: req.id.clone(),
-                        });
-                        if role == Role::Coalesced {
-                            seq += 1;
-                            continue;
+        let mut scan_req = None;
+        match scanned {
+            _ if looks_like_cmd => {}
+            wire::scan::Scan::Request(s) => {
+                if !tenant_admit(shared, &conn, &s.id, &mut seq, line_no) {
+                    continue;
+                }
+                let role = shared.flights.join(&s.key, || Waiter {
+                    conn: Arc::clone(&conn),
+                    seq,
+                    line_no,
+                    id: s.id.clone(),
+                });
+                if role == Role::Coalesced {
+                    seq += 1;
+                    continue;
+                }
+                scan_req = Some(s);
+            }
+            _ => {
+                if let Ok(j) = crate::util::json::parse(text) {
+                    if !(j.get("cmd").is_some() && j.get("net").is_none()) {
+                        if let Ok(req) = plan::MapRequest::from_json(&j) {
+                            if !tenant_admit(shared, &conn, &req.id, &mut seq, line_no) {
+                                continue;
+                            }
+                            let key = PlanCache::key(&req);
+                            let role = shared.flights.join(&key, || Waiter {
+                                conn: Arc::clone(&conn),
+                                seq,
+                                line_no,
+                                id: req.id.clone(),
+                            });
+                            if role == Role::Coalesced {
+                                seq += 1;
+                                continue;
+                            }
+                            parsed = Some(ParsedReq { req, key });
                         }
-                        parsed = Some(ParsedReq { req, key });
                     }
                 }
             }
         }
-        let flight_key = parsed.as_ref().map(|p| p.key.clone());
-        let job = Job { conn: Arc::clone(&conn), seq, line_no, text: text.to_string(), parsed };
+        let flight_key = parsed
+            .as_ref()
+            .map(|p| p.key.clone())
+            .or_else(|| scan_req.as_ref().map(|s| s.key.clone()));
+        let job = Job {
+            conn: Arc::clone(&conn),
+            seq,
+            line_no,
+            text: text.to_string(),
+            parsed,
+            scanned: scan_req,
+        };
         seq += 1;
         // blocks while the queue is full — this is the backpressure path
         // (the socket stops being read, so the client's TCP window fills)
@@ -894,6 +1017,34 @@ fn read_conn(shared: &Shared, stream: TcpStream, conn: Arc<Conn>) {
         }
     }
     conn.finish_input(seq);
+}
+
+/// Charge one admitted request to the tenant ledger. On refusal the
+/// in-flight slot just reserved is given back, the typed `over-quota`
+/// frame (with the tenant wording, so a client can tell it from the
+/// per-connection quota) is delivered in order, and the connection stays
+/// open — the refusal is per-request, and other tenants on the same
+/// socket's service are byte-unaffected. Returns whether the request may
+/// proceed.
+fn tenant_admit(
+    shared: &Shared,
+    conn: &Arc<Conn>,
+    id: &str,
+    seq: &mut usize,
+    line_no: usize,
+) -> bool {
+    if shared.tenants.try_charge(id) {
+        return true;
+    }
+    shared.inflight.fetch_sub(1, Ordering::SeqCst);
+    shared.note_tenant_reject();
+    let e = PlanError(format!(
+        "tenant '{id}' exceeded its {}-request quota",
+        shared.tenants.quota()
+    ));
+    conn.deliver(*seq, wire::reject_frame(line_no, wire::RejectKind::OverQuota, &e).dumps());
+    *seq += 1;
+    false
 }
 
 /// How much more a client may stream after a terminal reject before the
@@ -969,19 +1120,60 @@ pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
 fn respond(shared: &Shared, job: &Job) -> String {
     if let Some(p) = &job.parsed {
         // the reader already decoded this request (to coalesce identical
-        // in-flight requests); this job leads its flight
-        return respond_planned(shared, job, &p.req);
+        // in-flight requests); this job leads its flight, keyed — like
+        // the cache — by the canonical serialization
+        return respond_planned(shared, job, &p.req, Some(&p.key), Some(&p.key));
     }
+    if let Some(s) = &job.scanned {
+        return respond_scanned(shared, job, s);
+    }
+    respond_fallback(shared, job, None)
+}
+
+/// The scanner fast path: answer an LRU hit under the scanner's
+/// candidate key without ever parsing the line. Soundness: the cache is
+/// keyed exclusively by canonical id-stripped serializations
+/// ([`PlanCache::key`]), and the candidate key is the raw line with its
+/// top-level `"id"` member spliced out byte-verbatim — so a hit proves
+/// the line *is* a canonical serialization plus an id, and the cached
+/// plan restamped with the scanned id is byte-identical to what the full
+/// parse path would answer. A miss proves nothing (an unseen request, or
+/// a known one serialized differently) and takes the full path; the
+/// flight the reader opened under the scanner key settles either way.
+fn respond_scanned(shared: &Shared, job: &Job, s: &wire::scan::ScanRequest) -> String {
+    // the live-fire panic probe must panic even when its network's plan
+    // is cached — skip the fast path so the full one reaches the guard
+    // in [`respond_planned`]
+    if s.id != PANIC_PROBE_ID {
+        if let Some(cached) = shared.cache.get(&s.key) {
+            let mut stats = shared.lock_stats();
+            stats.cache_hits += 1;
+            stats.served += 1;
+            drop(stats);
+            let mut plan = (*cached).clone();
+            plan.id = s.id.clone();
+            settle_flight_plan(shared, Some(&s.key), &cached, None);
+            return plan.to_json().dumps();
+        }
+    }
+    respond_fallback(shared, job, Some(&s.key))
+}
+
+/// The full-parse path: build the JSON tree, route in-band commands,
+/// decode the request. Jobs the scanner fast-pathed land here only on a
+/// cache miss — `flight_key` carries the scanner key their flight is
+/// parked under (a scanned line always has `"net"`, so the command
+/// branch cannot strand it); everything else was never in a flight and
+/// passes None.
+fn respond_fallback(shared: &Shared, job: &Job, flight_key: Option<&str>) -> String {
     let j = match crate::util::json::parse(&job.text) {
         Ok(j) => j,
         // same message plan::parse_request_line produces, so error frames
         // stay byte-identical to serve_jsonl's
         Err(e) => {
-            return error_response(
-                shared,
-                job.line_no,
-                &PlanError(format!("parse request: {e}")),
-            )
+            let e = PlanError(format!("parse request: {e}"));
+            settle_flight_error(shared, flight_key, None, &e);
+            return error_response(shared, job.line_no, &e);
         }
     };
     // In-band commands are a service extension over the serve_jsonl wire.
@@ -996,17 +1188,29 @@ fn respond(shared: &Shared, job: &Job) -> String {
     }
     let req = match plan::MapRequest::from_json(&j) {
         Ok(req) => req,
-        Err(e) => return error_response(shared, job.line_no, &e),
+        Err(e) => {
+            settle_flight_error(shared, flight_key, None, &e);
+            return error_response(shared, job.line_no, &e);
+        }
     };
-    respond_planned(shared, job, &req)
+    respond_planned(shared, job, &req, flight_key, None)
 }
 
 /// Produce the response for a decoded plan request: LRU, then warehouse,
-/// then solve. When the job leads a single-flight (the reader parked
-/// followers on its canonical key), the same outcome — plan, error or
-/// typed reject — is delivered to every follower before this returns.
-fn respond_planned(shared: &Shared, job: &Job, req: &plan::MapRequest) -> String {
-    let flight_key = job.parsed.as_ref().map(|p| p.key.as_str());
+/// then solve. `flight_key` is the key the reader joined this job's
+/// single-flight under — the scanner's candidate key for scanned jobs,
+/// the canonical key for parsed ones, None when no flight was opened —
+/// and the same outcome (plan, error or typed reject) is delivered to
+/// every parked follower before this returns. `known_key` is the
+/// canonical cache key when the reader already computed it, borrowed so
+/// the hot path clones no key.
+fn respond_planned(
+    shared: &Shared,
+    job: &Job,
+    req: &plan::MapRequest,
+    flight_key: Option<&str>,
+    known_key: Option<&str>,
+) -> String {
     // live-fire hook for the containment path — before the cache lookup,
     // which anonymizes ids and could otherwise answer the probe from a
     // previous solve of the same network. The panic handler in
@@ -1016,15 +1220,16 @@ fn respond_planned(shared: &Shared, job: &Job, req: &plan::MapRequest) -> String
         // worker's catch_unwind in [`Service::run`]
         panic!("panic probe: request id {PANIC_PROBE_ID}");
     }
-    // the canonical key has three consumers (LRU, warehouse, flight);
-    // the reader computed it once for every decodable request, so the
-    // fallback clone+serialize below never runs in practice
-    let key: Option<String> = match &job.parsed {
-        Some(p) => Some(p.key.clone()),
+    // the canonical key has three consumers (LRU, warehouse, writer);
+    // borrow the reader's copy when it computed one, else serialize the
+    // canonical form once here — either way, no per-request key clone
+    let computed: Option<String> = match known_key {
+        Some(_) => None,
         None => (shared.cache.enabled() || shared.warehouse.is_some())
             .then(|| PlanCache::key(req)),
     };
-    if let Some(cached) = key.as_deref().and_then(|k| shared.cache.get(k)) {
+    let key: Option<&str> = known_key.or(computed.as_deref());
+    if let Some(cached) = key.and_then(|k| shared.cache.get(k)) {
         let mut stats = shared.lock_stats();
         stats.cache_hits += 1;
         stats.served += 1;
@@ -1039,7 +1244,7 @@ fn respond_planned(shared: &Shared, job: &Job, req: &plan::MapRequest) -> String
     // latency sample (nothing was solved) — and promoted into the LRU,
     // charging bytes and starting a fresh TTL epoch, so the next
     // identical request is a memory hit.
-    if let (Some(wh), Some(k)) = (shared.warehouse.as_ref(), key.as_deref()) {
+    if let (Some(wh), Some(k)) = (shared.warehouse.as_ref(), key) {
         if let Some(stored) = wh.get(k) {
             // records re-verify their crc on read, so a decode failure
             // here means schema drift (a record written by an older
@@ -1053,11 +1258,7 @@ fn respond_planned(shared: &Shared, job: &Job, req: &plan::MapRequest) -> String
                 stats.warehouse_hits += 1;
                 stats.served += 1;
                 drop(stats);
-                shared.cache.promote_serialized(
-                    k.to_string(),
-                    Arc::new(anon.clone()),
-                    stored.len(),
-                );
+                shared.cache.promote_serialized(k, Arc::new(anon.clone()), stored.len());
                 let response = if req.id.is_empty() {
                     // the stored line IS the anonymized serialization —
                     // serve it verbatim
@@ -1089,7 +1290,7 @@ fn respond_planned(shared: &Shared, job: &Job, req: &plan::MapRequest) -> String
             }
             stats.latencies.push_back(solve_s);
             drop(stats);
-            if let Some(key) = key {
+            if let Some(k) = key {
                 // one serialization of the anonymized plan covers the
                 // cache's byte accounting, the warehouse append, the
                 // follower deliveries and — for the common id-less
@@ -1099,14 +1300,14 @@ fn respond_planned(shared: &Shared, job: &Job, req: &plan::MapRequest) -> String
                 let anon_line = anon.to_json().dumps();
                 let anon_len = anon_line.len();
                 let anon = Arc::new(anon);
-                shared.cache.insert_serialized(key.clone(), Arc::clone(&anon), anon_len);
+                shared.cache.insert_serialized(k, Arc::clone(&anon), anon_len);
                 // durability rides the bounded writer channel *behind*
                 // the response; when the writer can't keep up the append
                 // is shed, never the reply. The append is unconditional
                 // on solve — re-appending a key whose stored record went
                 // stale or undecodable supersedes it (self-healing).
                 if let Some(q) = &shared.wh_queue {
-                    let _ = q.try_push(WhWrite { key, line: anon_line.clone() });
+                    let _ = q.try_push(WhWrite { key: k.to_string(), line: anon_line.clone() });
                 }
                 settle_flight_plan(shared, flight_key, &anon, Some(&anon_line));
                 if plan.id.is_empty() {
@@ -1197,22 +1398,50 @@ fn settle_flight_error(
 }
 
 fn respond_cmd(shared: &Shared, j: &Json, line_no: usize) -> String {
-    let frame = (|| {
-        let o = j.as_obj().ok_or_else(|| PlanError("command must be a JSON object".into()))?;
-        // the same version rule (and error wording) every other frame uses
-        wire::check_version(o, "command")?;
-        match o.get("cmd").and_then(Json::as_str) {
-            Some("stats") => Ok(wire::stats_frame(&shared.snapshot())),
-            Some("metrics") => Ok(wire::metrics_frame(&shared.metrics())),
-            other => Err(PlanError(format!(
-                "unknown command '{}' (try \"stats\" or \"metrics\")",
-                other.unwrap_or("?")
-            ))),
+    let o = match j.as_obj() {
+        Some(o) => o,
+        None => {
+            return error_response(
+                shared,
+                line_no,
+                &PlanError("command must be a JSON object".into()),
+            )
         }
-    })();
-    match frame {
-        Ok(f) => f.dumps(),
-        Err(e) => error_response(shared, line_no, &e),
+    };
+    // the same version rule (and error wording) every other frame uses
+    if let Err(e) = wire::check_version(o, "command") {
+        return error_response(shared, line_no, &e);
+    }
+    match o.get("cmd").and_then(Json::as_str) {
+        Some("stats") => wire::stats_frame(&shared.snapshot()).dumps(),
+        Some("metrics") => wire::metrics_frame(&shared.metrics()).dumps(),
+        Some("recalibrate") => {
+            // the admin verb: flush every cached plan (pricing inputs
+            // changed; the cached answers are stale) behind a shared
+            // secret. The command must carry the exact token the service
+            // was started with; a service without one treats every
+            // attempt as unauthorized — flushing is opt-in. The tenant
+            // ledger is deliberately untouched: recalibration invalidates
+            // cached *answers*, budgets are policy.
+            let authorized = match &shared.admin_token {
+                Some(t) => o.get("token").and_then(Json::as_str) == Some(t.as_str()),
+                None => false,
+            };
+            if !authorized {
+                shared.note_reject(wire::RejectKind::Unauthorized);
+                let e = PlanError("recalibrate requires a valid admin token".into());
+                return wire::reject_frame(line_no, wire::RejectKind::Unauthorized, &e).dumps();
+            }
+            wire::recalibrate_frame(shared.cache.clear() as u64).dumps()
+        }
+        other => error_response(
+            shared,
+            line_no,
+            &PlanError(format!(
+                "unknown command '{}' (try \"stats\", \"metrics\" or \"recalibrate\")",
+                other.unwrap_or("?")
+            )),
+        ),
     }
 }
 

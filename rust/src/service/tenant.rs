@@ -1,0 +1,121 @@
+//! Per-tenant request budgets that survive reconnects.
+//!
+//! The per-connection quota (`--per-conn-quota`) meters a *socket*: a
+//! tenant that reconnects starts a fresh budget, so metering was
+//! escapable by design. This ledger meters the *tenant* — the request
+//! `id` field, which doubles as the tenant token on this wire — across
+//! every connection for the life of the service process. Spent budget is
+//! never refunded: reconnecting, erroring, or coalescing onto another
+//! tenant's identical request all still count against the quota, because
+//! each consumed an admission the tenant asked for.
+//!
+//! Anonymous requests (empty `id`) are unmetered: there is no identity
+//! to bill, and billing them as one shared tenant would let one noisy
+//! anonymous client starve every other. Operators who want hard
+//! admission for anonymous traffic already have `--max-inflight` and the
+//! per-connection quota.
+//!
+//! The ledger is deliberately not reset by the `recalibrate` admin verb:
+//! recalibration flushes cached *answers*; budgets are policy.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Tenant-keyed spent-request counts against a fixed per-tenant quota.
+/// `quota == 0` disables metering entirely (the default).
+#[derive(Debug, Default)]
+pub struct TenantLedger {
+    quota: u64,
+    spent: Mutex<HashMap<String, u64>>,
+}
+
+impl TenantLedger {
+    /// A ledger enforcing `quota` requests per tenant id (0 = unmetered).
+    pub fn new(quota: u64) -> TenantLedger {
+        TenantLedger { quota, spent: Mutex::new(HashMap::new()) }
+    }
+
+    /// Whether this ledger meters anything at all.
+    pub fn enabled(&self) -> bool {
+        self.quota != 0
+    }
+
+    /// The configured per-tenant quota (0 = unmetered).
+    pub fn quota(&self) -> u64 {
+        self.quota
+    }
+
+    /// Charge one request to tenant `id`. Returns `false` when the
+    /// tenant has already spent its whole quota (the request must be
+    /// refused); anonymous requests (`id == ""`) and disabled ledgers
+    /// always charge successfully without recording anything.
+    pub fn try_charge(&self, id: &str) -> bool {
+        if self.quota == 0 || id.is_empty() {
+            return true;
+        }
+        let mut spent = self.lock();
+        let n = spent.entry(id.to_string()).or_insert(0);
+        if *n >= self.quota {
+            return false;
+        }
+        *n += 1;
+        true
+    }
+
+    /// How much tenant `id` has spent so far (0 for unknown tenants).
+    pub fn spent(&self, id: &str) -> u64 {
+        self.lock().get(id).copied().unwrap_or(0)
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<String, u64>> {
+        // counts are valid at every step; recover from poisoning like
+        // the stats lock rather than wedging admission
+        self.spent.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quota_survives_across_callers_and_exhausts_exactly() {
+        let ledger = TenantLedger::new(3);
+        assert!(ledger.enabled());
+        for _ in 0..3 {
+            assert!(ledger.try_charge("acme"));
+        }
+        // the fourth request is refused no matter who carries it — the
+        // ledger has no notion of a connection to reset
+        assert!(!ledger.try_charge("acme"));
+        assert_eq!(ledger.spent("acme"), 3);
+        // other tenants are unaffected
+        assert!(ledger.try_charge("globex"));
+        assert_eq!(ledger.spent("globex"), 1);
+    }
+
+    #[test]
+    fn anonymous_and_disabled_are_unmetered() {
+        let ledger = TenantLedger::new(2);
+        for _ in 0..10 {
+            assert!(ledger.try_charge(""));
+        }
+        assert_eq!(ledger.spent(""), 0, "anonymous spend is never recorded");
+        let off = TenantLedger::new(0);
+        assert!(!off.enabled());
+        for _ in 0..10 {
+            assert!(off.try_charge("acme"));
+        }
+        assert_eq!(off.spent("acme"), 0);
+    }
+
+    #[test]
+    fn refused_charges_do_not_grow_spend() {
+        let ledger = TenantLedger::new(1);
+        assert!(ledger.try_charge("t"));
+        for _ in 0..5 {
+            assert!(!ledger.try_charge("t"));
+        }
+        assert_eq!(ledger.spent("t"), 1);
+    }
+}

@@ -18,7 +18,13 @@
 //! * the plan warehouse survives a seeded kill mid-append: a reboot over
 //!   a segment cut strictly inside its final record truncates the torn
 //!   tail, serves every intact record from disk byte-identically to the
-//!   oracle, and re-solves (re-persisting) only the torn key.
+//!   oracle, and re-solves (re-persisting) only the torn key;
+//! * mid-line cuts through **scanner-fast-pathed** canonical lines (the
+//!   byte-level `wire::scan` path that skips the JSON tree on warm-cache
+//!   repeats) leave uncut connections byte-identical to the oracle, and
+//!   the cut connection is owed exactly its delivered prefix — a torn
+//!   half-line falls back to the full parser's error frame, never to a
+//!   mis-extracted fast-path answer.
 //!
 //! The seed matrix is fixed (deterministic PRNG ⇒ bit-identical
 //! fragmentation per seed); CI runs it at `XBARMAP_SWEEP_THREADS=1` and
@@ -187,6 +193,68 @@ fn scenario(seed: u64) {
 fn chaos_seed_matrix_never_hangs_and_never_loses_healthy_responses() {
     for &seed in SEEDS {
         with_watchdog(format!("chaos seed {seed}"), move || scenario(seed));
+    }
+}
+
+/// Canonical request lines straight off the codec (`to_json().dumps()`),
+/// so the scanner's candidate keys byte-equal the cache keys and warm
+/// repeats take the no-tree fast path. Two distinct plans, repeated —
+/// the id varies per connection but the cache key strips it.
+fn canonical_stream(c: u64) -> String {
+    let a = plan::MapRequest::zoo("lenet").tile(64, 64).id(&format!("t{c}-a"));
+    let b = plan::MapRequest::zoo("lenet").tile(128, 128).id(&format!("t{c}-b"));
+    let mut s = String::new();
+    for req in [&a, &b, &a, &b, &a] {
+        s.push_str(&req.to_json().dumps());
+        s.push('\n');
+    }
+    s
+}
+
+/// One seed's worth of scanner chaos: with the cache warmed so repeats
+/// ride the byte-level fast path, a tenant is cut mid-line (possibly
+/// mid-way through a fast-pathable canonical line) while a healthy
+/// tenant's scan-hit stream runs alongside. Both are pinned to the
+/// oracle of exactly the bytes they delivered.
+fn scan_fast_path_scenario(seed: u64) {
+    let (handle, addr, join) = start();
+    // warm both cache entries so later connections' scans can hit
+    let warm = canonical_stream(500 + seed);
+    assert_eq!(drive_healthy(addr, &warm), oracle(&warm), "seed {seed}: warm-up diverged");
+
+    let cut_input = canonical_stream(600 + seed);
+    let cut_at = (seed as usize).wrapping_mul(53) % cut_input.len();
+    let cut_plan = FaultPlan { max_write: 7, cut_after: Some(cut_at), ..FaultPlan::default() };
+    let healthy = thread::spawn(move || {
+        let input = canonical_stream(700 + seed);
+        let got = drive_healthy(addr, &input);
+        assert_eq!(got, oracle(&input), "seed {seed}: healthy scan-hit connection diverged");
+    });
+    let cut = thread::spawn(move || {
+        let (written, got) = drive_faulty(addr, &cut_input, seed, cut_plan);
+        assert_eq!(written, cut_at, "cut must land exactly at the configured byte");
+        assert_eq!(
+            got,
+            oracle(&cut_input[..written]),
+            "seed {seed}: cut through a fast-pathed line broke prefix identity"
+        );
+    });
+    healthy.join().unwrap();
+    cut.join().unwrap();
+    handle.shutdown();
+    let stats = join.join().unwrap();
+    // every post-warm flight leader finds its plan cached: whatever the
+    // coalescing split, at least one leader per distinct key hit
+    assert!(stats.cache_hits >= 2, "seed {seed}: the fast path never fired ({} hits)", stats.cache_hits);
+    assert_eq!(stats.connections, 3);
+    assert_eq!(stats.panics, 0);
+    assert_eq!(stats.timeouts, 0);
+}
+
+#[test]
+fn cuts_through_scanner_fast_pathed_lines_never_disturb_other_connections() {
+    for &seed in SEEDS {
+        with_watchdog(format!("scan chaos seed {seed}"), move || scan_fast_path_scenario(seed));
     }
 }
 

@@ -8,6 +8,7 @@
 //! * has `"stats"` → stats frame; has `"metrics"` → metrics frame;
 //! * has `"cmd"` (no `"net"`) → in-band command (version + known verb);
 //! * has `"error"` → error frame shape (+ `"reject"` token when typed);
+//! * has `"recalibrated"` → recalibrate acknowledgement frame;
 //! * has `"best"` → plan frame (`MapPlan::from_json`).
 
 use xbarmap::plan::{MapPlan, MapRequest, wire};
@@ -45,6 +46,7 @@ fn every_wire_md_jsonl_example_parses_against_the_reference_codec() {
     let examples = jsonl_examples(&md);
     let (mut requests, mut plans, mut errors, mut rejects, mut stats, mut metrics, mut cmds) =
         (0, 0, 0, 0, 0, 0, 0);
+    let mut recals = 0;
     for line in &examples {
         let j = json::parse(line)
             .unwrap_or_else(|e| panic!("WIRE.md example is not JSON: {e}\n  {line}"));
@@ -66,9 +68,15 @@ fn every_wire_md_jsonl_example_parses_against_the_reference_codec() {
             assert_eq!(o.get("v").and_then(Json::as_f64), Some(1.0), "command version: {line}");
             let verb = o.get("cmd").and_then(Json::as_str).expect("cmd must be a string");
             assert!(
-                matches!(verb, "stats" | "metrics"),
+                matches!(verb, "stats" | "metrics" | "recalibrate"),
                 "command example uses an unspecified verb '{verb}': {line}"
             );
+            if verb == "recalibrate" {
+                assert!(
+                    o.get("token").and_then(Json::as_str).is_some(),
+                    "recalibrate examples carry the admin token: {line}"
+                );
+            }
             cmds += 1;
         } else if has("error") {
             assert_eq!(j.get("v").and_then(|v| v.as_usize()), Some(1), "error version: {line}");
@@ -80,13 +88,26 @@ fn every_wire_md_jsonl_example_parses_against_the_reference_codec() {
             if let Some(token) = j.get("reject") {
                 let token = token.as_str().expect("reject token must be a string");
                 assert!(
-                    matches!(token, "over-quota" | "over-inflight" | "internal" | "deadline"),
+                    matches!(
+                        token,
+                        "over-quota" | "over-inflight" | "internal" | "deadline" | "unauthorized"
+                    ),
                     "unspecified reject token '{token}': {line}"
                 );
                 rejects += 1;
             } else {
                 errors += 1;
             }
+        } else if has("recalibrated") {
+            assert_eq!(j.get("v").and_then(|v| v.as_usize()), Some(1), "ack version: {line}");
+            assert!(
+                j.get("recalibrated")
+                    .and_then(|r| r.get("cache_entries"))
+                    .and_then(|n| n.as_usize())
+                    .is_some(),
+                "recalibrate ack reports flushed cache_entries: {line}"
+            );
+            recals += 1;
         } else if has("best") {
             MapPlan::from_json(&j)
                 .unwrap_or_else(|e| panic!("plan example rejected: {e}\n  {line}"));
@@ -100,10 +121,11 @@ fn every_wire_md_jsonl_example_parses_against_the_reference_codec() {
     assert!(requests >= 5, "expected >= 5 request examples, found {requests}");
     assert!(plans >= 1, "expected a plan example, found {plans}");
     assert!(errors >= 2, "expected >= 2 plain error examples, found {errors}");
-    assert!(rejects >= 4, "expected all four typed reject examples, found {rejects}");
+    assert!(rejects >= 6, "expected every typed reject example, found {rejects}");
     assert_eq!(stats, 1, "expected exactly one stats frame example");
     assert_eq!(metrics, 1, "expected exactly one metrics frame example");
-    assert!(cmds >= 2, "expected the stats and metrics command examples, found {cmds}");
+    assert!(cmds >= 3, "expected stats, metrics and recalibrate command examples, found {cmds}");
+    assert!(recals >= 1, "expected a recalibrate acknowledgement example, found {recals}");
 }
 
 #[test]

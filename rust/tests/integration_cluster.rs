@@ -201,7 +201,7 @@ fn commands_report_the_aggregated_cluster_snapshot() {
         // client's own line number
         let expect = wire::error_frame(
             3,
-            &PlanError("unknown command 'bogus' (try \"stats\" or \"metrics\")".into()),
+            &PlanError("unknown command 'bogus' (try \"stats\", \"metrics\" or \"recalibrate\")".into()),
         )
         .dumps();
         assert_eq!(got[2], expect);

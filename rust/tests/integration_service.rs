@@ -9,8 +9,12 @@
 //! survives), a deadline-exceeding solve gets the typed `deadline`
 //! reject while light requests keep completing oracle-identically, a
 //! cold boot over a precomputed plan warehouse serves byte-identically
-//! from disk, a torn warehouse tail never aborts boot, and concurrent
-//! identical misses single-flight coalesce onto one solve.
+//! from disk, a torn warehouse tail never aborts boot, concurrent
+//! identical misses single-flight coalesce onto one solve, a tenant's
+//! `--tenant-quota` budget survives reconnects (id-keyed, unlike the
+//! per-connection quota) without disturbing other tenants, and the
+//! `recalibrate` admin verb flushes the plan cache only when it carries
+//! the `--admin-token` secret.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -612,6 +616,117 @@ fn a_torn_warehouse_never_aborts_boot_and_solves_repopulate_it() {
     assert_eq!(stats2.warehouse_hits, 1);
     assert_eq!(stats2.warehouse_writes, 0);
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tenant_budget_survives_reconnects_and_spares_other_tenants() {
+    let (handle, addr, join) = start_with(ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_capacity: 8,
+        cache_capacity: 0,
+        tenant_quota: 3,
+        ..ServiceConfig::default()
+    });
+    let alice = r#"{"v":1,"id":"alice","net":{"zoo":"lenet"},"tiles":{"fixed":[64,64]}}"#;
+    let bob = r#"{"v":1,"id":"bob","net":{"zoo":"lenet"},"tiles":{"fixed":[128,128]}}"#;
+    // first connection: alice spends two of her three-request budget
+    let first = format!("{alice}\n{alice}\n");
+    assert_eq!(drive(addr, &first), oracle(&first));
+    // reconnect: the spent budget survives (the headline difference from
+    // the per-connection quota, which resets with the socket) — one more
+    // plan, then the typed reject; the reject is non-terminal, and bob on
+    // the very same connection is answered oracle-identically after it
+    let second = format!("{alice}\n{alice}\n{bob}\n");
+    let got = drive(addr, &second);
+    assert_eq!(got.len(), 3, "tenant reject must not close the connection: {got:?}");
+    assert_eq!(got[0], oracle(&format!("{alice}\n"))[0]);
+    assert_eq!(
+        got[1],
+        r#"{"v":1,"line":2,"error":"tenant 'alice' exceeded its 3-request quota","reject":"over-quota"}"#
+    );
+    assert_eq!(got[2], oracle(&format!("{bob}\n"))[0], "bob disturbed by alice's reject");
+    // anonymous requests carry no trustworthy identity and stay unmetered
+    // even past the quota count
+    let anon = r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"fixed":[64,64]}}"#;
+    let anon_stream = format!("{anon}\n{anon}\n{anon}\n{anon}\n");
+    assert_eq!(drive(addr, &anon_stream), oracle(&anon_stream));
+    handle.shutdown();
+    let stats = join.join().unwrap();
+    assert_eq!(stats.tenant_rejects, 1);
+    assert_eq!(stats.errors, 1);
+    assert_eq!(stats.served, 8, "2 + (1 + bob) + 4 anonymous");
+    let metrics = handle.metrics();
+    assert_eq!(metrics.rejected_over_quota, 0, "tenant rejects have their own counter");
+}
+
+#[test]
+fn recalibrate_flushes_the_cache_only_with_the_admin_token() {
+    let (handle, addr, join) = start_with(ServiceConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_capacity: 8,
+        cache_capacity: 64,
+        admin_token: Some("s3cret".into()),
+        ..ServiceConfig::default()
+    });
+    let p = r#"{"v":1,"net":{"zoo":"lenet"},"tiles":{"fixed":[256,256]}}"#;
+    let bad = r#"{"v":1,"cmd":"recalibrate","token":"wrong"}"#;
+    let missing = r#"{"v":1,"cmd":"recalibrate"}"#;
+    let good = r#"{"v":1,"cmd":"recalibrate","token":"s3cret"}"#;
+    let m = r#"{"v":1,"cmd":"metrics"}"#;
+    let input = format!("{p}\n{p}\n{bad}\n{missing}\n{m}\n{good}\n{m}\n{p}\n{m}\n");
+    let got = drive(addr, &input);
+    assert_eq!(got.len(), 9);
+    assert!(json::parse(&got[0]).unwrap().get("best").is_some());
+    assert_eq!(got[1], got[0], "second identical request must hit the cache");
+    // wrong and missing tokens get the same pinned unauthorized frame —
+    // no oracle distinguishing which secret was wrong
+    assert_eq!(
+        got[2],
+        r#"{"v":1,"line":3,"error":"recalibrate requires a valid admin token","reject":"unauthorized"}"#
+    );
+    assert_eq!(
+        got[3],
+        r#"{"v":1,"line":4,"error":"recalibrate requires a valid admin token","reject":"unauthorized"}"#
+    );
+    let m1 = wire::metrics_from_json(&json::parse(&got[4]).unwrap()).unwrap();
+    assert_eq!(m1.cache_entries, 1, "refused recalibrates must not flush");
+    assert_eq!(m1.stats.cache_hits, 1);
+    assert_eq!(m1.stats.tenant_rejects, 2);
+    assert_eq!(m1.stats.errors, 2);
+    // the authorized flush acks how many entries it dropped…
+    assert_eq!(got[5], r#"{"v":1,"recalibrated":{"cache_entries":1}}"#);
+    // …and the follow-up metrics frame observes the empty cache
+    let m2 = wire::metrics_from_json(&json::parse(&got[6]).unwrap()).unwrap();
+    assert_eq!(m2.cache_entries, 0, "authorized recalibrate must flush the LRU");
+    // the flushed request re-solves to the same bytes and repopulates
+    assert_eq!(got[7], got[0], "post-flush re-solve diverged");
+    let m3 = wire::metrics_from_json(&json::parse(&got[8]).unwrap()).unwrap();
+    assert_eq!(m3.cache_entries, 1);
+    assert_eq!(m3.stats.cache_hits, 1, "the post-flush solve was a miss");
+    handle.shutdown();
+    let stats = join.join().unwrap();
+    assert_eq!(stats.tenant_rejects, 2);
+    assert_eq!(stats.errors, 2);
+    assert_eq!(stats.served, 3);
+}
+
+#[test]
+fn recalibrate_without_a_configured_admin_token_is_always_unauthorized() {
+    // no --admin-token: the verb is dead, whatever the client guesses
+    let (handle, addr, join) = start(1, 8, 64);
+    let input = format!("{}\n", r#"{"v":1,"cmd":"recalibrate","token":"anything"}"#);
+    let got = drive(addr, &input);
+    assert_eq!(
+        got,
+        vec![r#"{"v":1,"line":1,"error":"recalibrate requires a valid admin token","reject":"unauthorized"}"#
+            .to_string()]
+    );
+    handle.shutdown();
+    let stats = join.join().unwrap();
+    assert_eq!(stats.tenant_rejects, 1);
+    assert_eq!(stats.errors, 1);
 }
 
 #[test]

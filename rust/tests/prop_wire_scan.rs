@@ -1,0 +1,409 @@
+//! Differential wire-conformance fuzz suite for the byte-level scanner.
+//!
+//! `plan::wire::scan` is a conservative prefilter over raw request lines:
+//! it may declare [`Scan::Fallback`] on anything, but whenever it commits
+//! to a verdict that verdict must agree byte-for-byte with the full
+//! codec (`util::json::parse` + `plan::parse_request_line`) that the
+//! serve path falls back to. These tests pin that contract on >10k
+//! seeded lines per run: canonical serializations from the request
+//! builder, whitespace- and member-order-perturbed variants, raw
+//! hand-assembled objects, command frames, and byte-level mutations of
+//! all of the above. The generators are deterministic ([`Rng`] from a
+//! fixed seed) so any disagreement reproduces from the test name alone.
+//!
+//! The invariants, per line:
+//! * `Command` ⇒ the legacy substring sniff also says command, and the
+//!   full parser accepts the line;
+//! * `Request(s)` ⇒ the sniff says *not* command, the full parser
+//!   accepts the line, `s.id` equals the parsed top-level id, the
+//!   candidate key `s.key` is itself valid JSON without an `id` member,
+//!   and — when the line decodes as a `MapRequest` — the key decodes to
+//!   the *same* request (identical canonical cache key, empty id);
+//! * `Fallback` ⇒ nothing: falling back is always allowed, only slow.
+
+use xbarmap::opt::Engine;
+use xbarmap::pack::Discipline;
+use xbarmap::plan::wire::scan::{scan, Scan};
+use xbarmap::plan::{self, MapRequest, Replication};
+use xbarmap::service::PlanCache;
+use xbarmap::util::json::{self, Json};
+use xbarmap::util::prng::Rng;
+
+/// The legacy admission sniff the scanner's `Command` verdict must
+/// reproduce exactly (see `plan::wire::scan` module docs).
+fn sniff(line: &str) -> bool {
+    line.contains("\"cmd\"") && !line.contains("\"net\"")
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Verdict {
+    Command,
+    Request,
+    Fallback,
+}
+
+/// Check every cross-codec invariant on one line and report which arm
+/// the scanner took. Panics with the offending line on any disagreement.
+fn audit(line: &str) -> Verdict {
+    match scan(line) {
+        Scan::Command => {
+            assert!(sniff(line), "Command verdict on a sniff-negative line: {line:?}");
+            assert!(
+                json::parse(line).is_ok(),
+                "Command verdict on a line the full parser rejects: {line:?}"
+            );
+            Verdict::Command
+        }
+        Scan::Request(s) => {
+            assert!(!sniff(line), "Request verdict on a sniff-positive line: {line:?}");
+            let tree = json::parse(line).unwrap_or_else(|e| {
+                panic!("Request verdict on a line the full parser rejects ({e}): {line:?}")
+            });
+            let tree_id = tree.get("id").and_then(Json::as_str).unwrap_or("");
+            assert_eq!(s.id, tree_id, "extracted id disagrees with the full parser: {line:?}");
+            let ktree = json::parse(&s.key).unwrap_or_else(|e| {
+                panic!("candidate key is not valid JSON ({e}): {:?} from {line:?}", s.key)
+            });
+            assert!(
+                ktree.get("id").is_none(),
+                "candidate key kept an id member: {:?} from {line:?}",
+                s.key
+            );
+            match plan::parse_request_line(line) {
+                Ok(req) => {
+                    assert_eq!(s.id, req.id, "extracted id disagrees with the codec: {line:?}");
+                    let kreq = plan::parse_request_line(&s.key).unwrap_or_else(|e| {
+                        panic!("line decodes but its key does not ({e}): {:?} from {line:?}", s.key)
+                    });
+                    assert_eq!(kreq.id, "", "key decoded with a non-empty id: {line:?}");
+                    assert_eq!(
+                        PlanCache::key(&kreq),
+                        PlanCache::key(&req),
+                        "candidate key identifies a different request: {:?} from {line:?}",
+                        s.key
+                    );
+                }
+                Err(_) => {
+                    // a key that decodes while its line does not could
+                    // alias a cached plan the line has no right to
+                    assert!(
+                        plan::parse_request_line(&s.key).is_err(),
+                        "key decodes but its line does not: {:?} from {line:?}",
+                        s.key
+                    );
+                }
+            }
+            Verdict::Request
+        }
+        Scan::Fallback => Verdict::Fallback,
+    }
+}
+
+const ZOO: &[&str] = &["lenet", "alexnet", "resnet9", "resnet18", "bert", "digits-mlp"];
+
+fn gen_id(rng: &mut Rng) -> String {
+    const CS: &[u8] = b"abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789-_.";
+    (0..rng.range(1, 12)).map(|_| CS[rng.range(0, CS.len() - 1)] as char).collect()
+}
+
+/// A random well-formed request off the builder — its `to_json().dumps()`
+/// is by definition the canonical wire serialization.
+fn gen_builder_request(rng: &mut Rng, with_id: bool) -> MapRequest {
+    let mut req = MapRequest::zoo(ZOO[rng.range(0, ZOO.len() - 1)]);
+    if rng.chance(0.5) {
+        req = req.tile(1 << rng.range(5, 9), 1 << rng.range(5, 9));
+    } else {
+        let lo = rng.range(6, 8) as u32;
+        let hi = lo + rng.range(1, 4) as u32;
+        req = req.grid((lo, hi), (1..=rng.range(1, 8)).collect());
+    }
+    if rng.chance(0.4) {
+        let d: Discipline =
+            if rng.chance(0.5) { "pipeline" } else { "dense" }.parse().expect("discipline");
+        req = req.discipline(d);
+    }
+    if rng.chance(0.3) {
+        let name = ["simple", "ffd", "lps"][rng.range(0, 2)];
+        req = req.engine(Engine::parse_with_budget(name, 10_000).expect("engine"));
+    }
+    if rng.chance(0.3) {
+        req = req.threads(rng.range(0, 4));
+    }
+    if rng.chance(0.2) {
+        req = req.replication(Replication::Balanced(rng.range(1, 4)));
+    }
+    if with_id {
+        let id = gen_id(rng);
+        req = req.id(&id);
+    }
+    req
+}
+
+/// Inject whitespace at structural boundaries (never inside strings):
+/// still valid JSON for the same request, no longer the canonical bytes.
+fn perturb_ws(line: &str, rng: &mut Rng) -> String {
+    let mut out = String::with_capacity(line.len() + 16);
+    let mut in_str = false;
+    let mut esc = false;
+    for ch in line.chars() {
+        out.push(ch);
+        if in_str {
+            if esc {
+                esc = false;
+            } else if ch == '\\' {
+                esc = true;
+            } else if ch == '"' {
+                in_str = false;
+            }
+        } else if ch == '"' {
+            in_str = true;
+        } else if matches!(ch, '{' | '}' | '[' | ']' | ':' | ',') && rng.chance(0.25) {
+            for _ in 0..rng.range(1, 2) {
+                out.push(if rng.chance(0.8) { ' ' } else { '\t' });
+            }
+        }
+    }
+    if rng.chance(0.3) {
+        out.insert(0, ' ');
+    }
+    if rng.chance(0.3) {
+        out.push(' ');
+    }
+    out
+}
+
+/// Hand-assembled objects: shuffled member order, `id` at any position,
+/// sometimes duplicate keys or semantically invalid `net` values — valid
+/// JSON more often than not, canonical almost never.
+fn gen_raw_request(rng: &mut Rng) -> String {
+    let mut members: Vec<String> = vec!["\"v\":1".to_string()];
+    let net = match rng.range(0, 3) {
+        0 | 1 => format!("{{\"zoo\":\"{}\"}}", ZOO[rng.range(0, ZOO.len() - 1)]),
+        2 => "{\"zoo\":\"nosuchnet\"}".to_string(),
+        _ => "[1,2,3]".to_string(),
+    };
+    members.push(format!("\"net\":{net}"));
+    if rng.chance(0.6) {
+        members.push(format!(
+            "\"tiles\":{{\"fixed\":[{},{}]}}",
+            1usize << rng.range(5, 9),
+            1usize << rng.range(5, 9)
+        ));
+    }
+    if rng.chance(0.5) {
+        members.push(format!("\"id\":\"{}\"", gen_id(rng)));
+    }
+    if rng.chance(0.3) {
+        members.push(format!("\"threads\":{}", rng.range(0, 8)));
+    }
+    if rng.chance(0.2) {
+        members.push("\"extra\":{\"a\":[true,false,null,-1.5e3]}".to_string());
+    }
+    if rng.chance(0.1) {
+        // deliberate duplicate top-level key: parser is last-wins, the
+        // scanner must fall back rather than guess
+        members.push("\"v\":1".to_string());
+    }
+    rng.shuffle(&mut members);
+    format!("{{{}}}", members.join(","))
+}
+
+fn gen_command(rng: &mut Rng) -> String {
+    let verb = ["stats", "metrics", "recalibrate", "bogus"][rng.range(0, 3)];
+    let mut members = vec!["\"v\":1".to_string(), format!("\"cmd\":\"{verb}\"")];
+    if rng.chance(0.3) {
+        members.push(format!("\"token\":\"{}\"", gen_id(rng)));
+    }
+    if rng.chance(0.15) {
+        // "net" bytes inside a string value: sniff-negative, so the
+        // scanner must not call this a command
+        members.push("\"pad\":\"net\"".to_string());
+    }
+    rng.shuffle(&mut members);
+    format!("{{{}}}", members.join(","))
+}
+
+/// One byte-level mutation: truncate, insert, overwrite, or duplicate a
+/// chunk. `None` when the result is not a deliverable wire line (invalid
+/// UTF-8 or embedded line breaks — the JSONL reader can never hand the
+/// scanner those).
+fn mutate(line: &str, rng: &mut Rng) -> Option<String> {
+    const ALPHABET: &[u8] = b"\"\\{}[]:,.-+eE0123456789 \tvnetcmdidzxo";
+    let mut b = line.as_bytes().to_vec();
+    if b.is_empty() {
+        return None;
+    }
+    match rng.range(0, 3) {
+        0 => {
+            let keep = rng.range(0, b.len() - 1);
+            b.truncate(keep);
+        }
+        1 => {
+            let at = rng.range(0, b.len());
+            b.insert(at, ALPHABET[rng.range(0, ALPHABET.len() - 1)]);
+        }
+        2 => {
+            let at = rng.range(0, b.len() - 1);
+            b[at] = ALPHABET[rng.range(0, ALPHABET.len() - 1)];
+        }
+        _ => {
+            let s = rng.range(0, b.len() - 1);
+            let e = rng.range(s, b.len() - 1);
+            let chunk: Vec<u8> = b[s..=e].to_vec();
+            let at = rng.range(0, b.len());
+            for (k, &c) in chunk.iter().enumerate() {
+                b.insert(at + k, c);
+            }
+        }
+    }
+    let s = String::from_utf8(b).ok()?;
+    if s.contains('\n') || s.contains('\r') {
+        return None;
+    }
+    Some(s)
+}
+
+/// Canonical serializations must always take the fast path, with the id
+/// and candidate key byte-equal to what the full codec derives. This is
+/// the corpus the production cache actually hits on.
+#[test]
+fn canonical_lines_always_fast_path_with_exact_id_and_key() {
+    let mut rng = Rng::new(0xD1FF_5CA7);
+    for i in 0..3000 {
+        let req = gen_builder_request(&mut rng, i % 2 == 0);
+        let line = req.to_json().dumps();
+        match scan(&line) {
+            Scan::Request(s) => {
+                assert_eq!(s.id, req.id, "canonical id mismatch: {line}");
+                assert_eq!(s.key, PlanCache::key(&req), "canonical key mismatch: {line}");
+            }
+            other => panic!("canonical line fell off the fast path ({other:?}): {line}"),
+        }
+        assert_eq!(audit(&line), Verdict::Request);
+    }
+}
+
+/// Whitespace- and order-perturbed lines stay inside the contract: the
+/// scanner may fall back, but a committed verdict never mis-extracts.
+#[test]
+fn perturbed_and_raw_lines_never_mis_extract() {
+    let mut rng = Rng::new(0x0bad_f00d);
+    let (mut fast, mut fell_back) = (0usize, 0usize);
+    for i in 0..3000 {
+        let req = gen_builder_request(&mut rng, i % 3 != 0);
+        let line = perturb_ws(&req.to_json().dumps(), &mut rng);
+        match audit(&line) {
+            Verdict::Request => fast += 1,
+            _ => fell_back += 1,
+        }
+    }
+    // whitespace never touches strings, so these all still fast-path
+    assert_eq!(fell_back, 0, "ws-only perturbations should stay on the fast path");
+    for _ in 0..3000 {
+        let line = gen_raw_request(&mut rng);
+        match audit(&line) {
+            Verdict::Request => fast += 1,
+            _ => fell_back += 1,
+        }
+    }
+    assert!(fast > 0 && fell_back > 0, "generator stopped exercising both arms");
+}
+
+/// Command frames agree with the legacy sniff in both directions.
+#[test]
+fn command_frames_agree_with_the_legacy_sniff() {
+    let mut rng = Rng::new(0xc0_ffee);
+    let mut commands = 0usize;
+    for _ in 0..1500 {
+        let line = gen_command(&mut rng);
+        let verdict = audit(&line);
+        // audit checked Command ⇒ sniff; pin the converse here: a clean
+        // sniff-positive frame the scanner understood must not be a
+        // Request (that would strand it on the solver path)
+        assert_ne!(verdict, Verdict::Request, "sniff-shaped frame became a request: {line}");
+        if verdict == Verdict::Command {
+            commands += 1;
+        }
+    }
+    assert!(commands > 1000, "command generator mostly fell back ({commands}/1500)");
+}
+
+/// Byte-level mutations of every corpus: truncations, insertions,
+/// overwrites, duplicated chunks. The scanner may never mis-extract no
+/// matter how mangled the line.
+#[test]
+fn mutated_lines_never_mis_extract() {
+    let mut rng = Rng::new(0x5EED_CAFE);
+    let mut audited = 0usize;
+    while audited < 4500 {
+        let base = match rng.range(0, 2) {
+            0 => gen_builder_request(&mut rng, true).to_json().dumps(),
+            1 => gen_raw_request(&mut rng),
+            _ => gen_command(&mut rng),
+        };
+        let mut line = base;
+        for _ in 0..rng.range(1, 3) {
+            match mutate(&line, &mut rng) {
+                Some(m) => line = m,
+                None => break,
+            }
+        }
+        audit(&line);
+        audited += 1;
+    }
+}
+
+/// Handcrafted adversarial lines covering every documented fallback
+/// class, plus lines that must keep their fast-path verdicts.
+#[test]
+fn handcrafted_adversarial_lines_hold_the_contract() {
+    let cases: &[&str] = &[
+        // escapes anywhere force fallback
+        r#"{"v":1,"id":"a\nb","net":{"zoo":"lenet"}}"#,
+        r#"{"v":1,"net":{"zoo":"lenet"}}"#,
+        r#"{"v":1,"id":"q\"uote","net":{"zoo":"lenet"}}"#,
+        // duplicate keys, non-string ids, version spellings
+        r#"{"v":1,"v":1,"net":{"zoo":"lenet"}}"#,
+        r#"{"v":1,"id":"a","id":"b","net":{"zoo":"lenet"}}"#,
+        r#"{"v":1,"id":7,"net":{"zoo":"lenet"}}"#,
+        r#"{"v":1.0,"net":{"zoo":"lenet"}}"#,
+        r#"{"v":2,"net":{"zoo":"lenet"}}"#,
+        r#"{"net":{"zoo":"lenet"}}"#,
+        // number spellings the loose tokenizer eats
+        r#"{"v":1,"net":{"zoo":"lenet"},"threads":007}"#,
+        r#"{"v":1,"net":{"zoo":"lenet"},"huge":1e999}"#,
+        r#"{"v":1,"net":{"zoo":"lenet"},"neg":-0.0}"#,
+        // structure: truncation, trailers, wrong roots
+        r#"{"v":1,"net":{"zoo":"lenet"}"#,
+        r#"{"v":1,"net":{"zoo":"lenet"}} extra"#,
+        r#"{"v":1,"net":{"zoo":"lenet"},}"#,
+        r#"[{"v":1,"net":{"zoo":"lenet"}}]"#,
+        "{}",
+        "",
+        "   ",
+        "not json at all",
+        // sniff interplay: "net" bytes in values, cmd+net together
+        r#"{"v":1,"cmd":"stats"}"#,
+        r#"{"v":1,"cmd":"stats","pad":"net"}"#,
+        r#"{"v":1,"cmd":"stats","net":{"zoo":"lenet"}}"#,
+        r#"{"v":1,"cmd":"recalibrate","token":"s3cret"}"#,
+        // raw UTF-8 and raw control bytes inside strings (no escapes)
+        "{\"v\":1,\"id\":\"tenant-\u{fc}\",\"net\":{\"zoo\":\"lenet\"}}",
+        "{\"v\":1,\"id\":\"tab\there\",\"net\":{\"zoo\":\"lenet\"}}",
+        // id-splice positions: leading, middle, trailing, only member
+        r#"{"id":"x","v":1,"net":{"zoo":"lenet"}}"#,
+        r#"{"v":1,"id":"x","net":{"zoo":"lenet"}}"#,
+        r#"{"v":1,"net":{"zoo":"lenet"},"id":"x"}"#,
+        r#"{"id":"x"}"#,
+        r#"{ "v" : 1 , "id" : "x" , "net" : { "zoo" : "lenet" } }"#,
+    ];
+    for line in cases {
+        audit(line);
+    }
+    // deep nesting: fallback, not a stack overflow
+    let mut deep = String::from(r#"{"v":1,"net":"#);
+    deep.extend(std::iter::repeat('[').take(600));
+    deep.extend(std::iter::repeat(']').take(600));
+    deep.push('}');
+    assert_eq!(audit(&deep), Verdict::Fallback);
+}
